@@ -1,0 +1,93 @@
+//! **Design-choice ablation** (DESIGN.md §4 extension) — isolates each
+//! stage of the DeltaMask codec at ViT-B/32 scale (d = 327,680) across
+//! mask-drift levels, answering "what does each §3.2 ingredient buy?":
+//!
+//! * shared-seed (common-random-numbers) m_k sampling vs independent —
+//!   the source of delta sparsity,
+//! * grayscale-PNG packing vs raw filter bytes,
+//! * 4-wise vs 3-wise binary fuse arity,
+//! * top-κ truncation (κ=0.8) vs full Δ.
+//!
+//!     cargo bench --bench ablation_codec
+
+use deltamask::bench::Table;
+use deltamask::compress::{DeltaMaskCodec, EncodeCtx, FilterKind, UpdateCodec};
+use deltamask::model::sample_mask_seeded;
+use deltamask::util::rng::Xoshiro256pp;
+
+fn make_masks(
+    d: usize,
+    drift: f32,
+    shared_seed: bool,
+    rng: &mut Xoshiro256pp,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+    let theta_g: Vec<f32> = (0..d)
+        .map(|_| if rng.next_f32() < 0.5 { 0.95 } else { 0.05 })
+        .collect();
+    let mut theta_k = theta_g.clone();
+    for t in theta_k.iter_mut() {
+        if rng.next_f32() < drift {
+            *t = 1.0 - *t;
+        }
+    }
+    let mut mask_g = Vec::new();
+    sample_mask_seeded(&theta_g, 1234, &mut mask_g);
+    let mut mask_k = Vec::new();
+    let seed_k = if shared_seed { 1234 } else { 777 };
+    sample_mask_seeded(&theta_k, seed_k, &mut mask_k);
+    (theta_g, theta_k, mask_g, mask_k)
+}
+
+fn main() -> anyhow::Result<()> {
+    let d = 327_680usize;
+    let mut rng = Xoshiro256pp::new(5);
+
+    let mut table = Table::new(
+        "DeltaMask codec ablation (d = 327,680)",
+        &["drift", "variant", "bpp", "vs baseline"],
+    );
+    for drift in [0.01f32, 0.03, 0.10] {
+        let variants: Vec<(&str, DeltaMaskCodec, bool, f64)> = vec![
+            ("baseline (CRN+PNG+4w+κ.8)", DeltaMaskCodec::default(), true, 0.8),
+            ("no shared seed", DeltaMaskCodec::default(), false, 0.8),
+            ("no PNG stage", DeltaMaskCodec { use_png: false, ..Default::default() }, true, 0.8),
+            ("3-wise fuse", DeltaMaskCodec::with_filter(FilterKind::BFuse8Arity3), true, 0.8),
+            ("κ = 1.0 (no top-κ)", DeltaMaskCodec::default(), true, 1.0),
+        ];
+        let mut baseline_bpp = 0.0f64;
+        for (label, codec, shared, kappa) in variants {
+            let (tg, tk, mg, mk) = make_masks(d, drift, shared, &mut rng);
+            let ctx = EncodeCtx {
+                d,
+                theta_k: &tk,
+                theta_g: &tg,
+                mask_k: &mk,
+                mask_g: &mg,
+                s_k: &[],
+                s_g: &[],
+                kappa,
+                seed: 42,
+            };
+            let enc = codec.encode(&ctx)?;
+            let bpp = enc.bpp(d);
+            if label.starts_with("baseline") {
+                baseline_bpp = bpp;
+            }
+            eprintln!("  drift={drift} {label}: bpp={bpp:.4}");
+            table.row(vec![
+                format!("{drift}"),
+                label.to_string(),
+                format!("{:.4}", bpp),
+                format!("{:+.1}%", (bpp / baseline_bpp - 1.0) * 100.0),
+            ]);
+        }
+    }
+    table.print();
+    table.save("ablation_codec");
+    println!(
+        "\nexpected shape: dropping the shared seed explodes Δ (the CRN trick IS the\n\
+         sparsity); no-PNG costs a few %; 3-wise costs ~5-15% space vs 4-wise at\n\
+         this |Δ| scale; κ=1 adds ~25% bits."
+    );
+    Ok(())
+}

@@ -1,0 +1,63 @@
+//! **Figure 1** — the headline scatter: accuracy vs bits-per-parameter for
+//! DeltaMask and every communication-efficient baseline, averaged over the
+//! dataset roster (ViT-B/32 sim).
+//!
+//!     cargo bench --bench fig1_summary [-- --full]
+
+use deltamask::bench::{bench_datasets, BenchScale, Table};
+use deltamask::fl::run_experiment;
+use deltamask::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let scale = BenchScale::from_args(&args);
+    let datasets = bench_datasets(&args);
+    let methods = [
+        "fine_tuning",
+        "fedmask",
+        "qsgd",
+        "drive",
+        "eden",
+        "fedcode",
+        "deepreduce",
+        "fedpm",
+        "deltamask",
+    ];
+
+    let mut table = Table::new(
+        "Figure 1 (avg over datasets): accuracy vs bpp",
+        &["method", "avg acc", "avg bpp", "acc drop vs FT"],
+    );
+    let mut ft_acc = 0.0;
+    let mut rows = Vec::new();
+    for method in methods {
+        let mut accs = Vec::new();
+        let mut bpps = Vec::new();
+        for dataset in &datasets {
+            let cfg = scale.config(dataset, method);
+            let res = run_experiment(&cfg)?;
+            accs.push(res.final_accuracy());
+            bpps.push(res.avg_bpp());
+        }
+        let acc = deltamask::util::stats::mean(&accs);
+        let bpp = deltamask::util::stats::mean(&bpps);
+        eprintln!("  {method}: acc={acc:.4} bpp={bpp:.4}");
+        if method == "fine_tuning" {
+            ft_acc = acc;
+        }
+        rows.push((method, acc, bpp));
+    }
+    for (method, acc, bpp) in rows {
+        table.row(vec![
+            method.to_string(),
+            format!("{:.4}", acc),
+            format!("{:.4}", bpp),
+            format!("{:+.4}", acc - ft_acc),
+        ]);
+    }
+    table.print();
+    table.save("fig1_summary");
+    println!("\nshape check: deltamask should sit at the lowest bpp among methods");
+    println!("within a few points of fedpm/fine-tuning accuracy (paper Fig. 1).");
+    Ok(())
+}

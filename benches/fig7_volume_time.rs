@@ -1,0 +1,69 @@
+//! **Figure 7 (= Fig. 5 + Fig. 6)** — data volume to reach within 1% of
+//! peak accuracy (normalized against fine-tuning) and encode/decode CPU
+//! time per update, CIFAR-100-sim with N=10.
+//!
+//!     cargo bench --bench fig7_volume_time [-- --full]
+//!
+//! Shape claims: FedCode minimal volume but slow encode + lowest accuracy;
+//! DeepReduce slowest enc/dec (Bloom); DeltaMask ≈ FedPM accuracy with far
+//! less data and fast encode.
+
+use deltamask::bench::{BenchScale, Table};
+use deltamask::fl::run_experiment;
+use deltamask::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let scale = BenchScale::from_args(&args);
+    let methods = [
+        "fine_tuning",
+        "fedmask",
+        "eden",
+        "drive",
+        "fedcode",
+        "deepreduce",
+        "fedpm",
+        "deltamask",
+    ];
+
+    let mut results = Vec::new();
+    for method in methods {
+        let mut cfg = scale.config("cifar100", method);
+        cfg.eval_every = 2; // fine-grained volume-to-accuracy curve
+        let res = run_experiment(&cfg)?;
+        eprintln!(
+            "  {method}: peak={:.4} vol1%={:?} enc={:.3}ms dec={:.3}ms",
+            res.peak_accuracy(),
+            res.volume_to_within(0.01),
+            res.mean_enc_ms(),
+            res.mean_dec_ms()
+        );
+        results.push((method, res));
+    }
+    let ft_volume = results
+        .iter()
+        .find(|(m, _)| *m == "fine_tuning")
+        .and_then(|(_, r)| r.volume_to_within(0.01))
+        .unwrap_or(1.0);
+
+    let mut table = Table::new(
+        "Figure 7: relative data volume (vs FT) + encode/decode time",
+        &["method", "peak acc", "rel volume", "enc ms", "dec ms"],
+    );
+    for (method, res) in &results {
+        let vol = res
+            .volume_to_within(0.01)
+            .map(|v| format!("{:.4}", v / ft_volume))
+            .unwrap_or_else(|| "n/a".into());
+        table.row(vec![
+            method.to_string(),
+            format!("{:.4}", res.peak_accuracy()),
+            vol,
+            format!("{:.3}", res.mean_enc_ms()),
+            format!("{:.3}", res.mean_dec_ms()),
+        ]);
+    }
+    table.print();
+    table.save("fig7_volume_time");
+    Ok(())
+}

@@ -1,0 +1,44 @@
+//! **Figure 9** — probabilistic-filter ablation inside the full FL loop:
+//! binary fuse vs XOR filters at 8/16/32 bits-per-entry (accuracy + bpp),
+//! CIFAR-100-sim, N=10, ρ=1.
+//!
+//!     cargo bench --bench fig9_filters [-- --full]
+//!
+//! Shape claims: BFuse beats XOR on bitrate at equal bpe with no accuracy
+//! loss; bpe is the bitrate↔fidelity knob (lower bpe ⇒ lower bpp, more
+//! false-positive mask noise).
+
+use deltamask::bench::{BenchScale, Table};
+use deltamask::fl::run_experiment;
+use deltamask::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let scale = BenchScale::from_args(&args);
+
+    let variants = [
+        ("BFuse8", "deltamask"),
+        ("BFuse16", "deltamask-bfuse16"),
+        ("BFuse32", "deltamask-bfuse32"),
+        ("Xor8", "deltamask-xor8"),
+        ("Xor16", "deltamask-xor16"),
+        ("Xor32", "deltamask-xor32"),
+    ];
+    let mut table = Table::new(
+        "Figure 9: filter choice & bits-per-entry",
+        &["filter", "acc", "avg bpp"],
+    );
+    for (label, method) in variants {
+        let cfg = scale.config("cifar100", method);
+        let res = run_experiment(&cfg)?;
+        eprintln!("  {label}: acc={:.4} bpp={:.4}", res.final_accuracy(), res.avg_bpp());
+        table.row(vec![
+            label.to_string(),
+            format!("{:.4}", res.final_accuracy()),
+            format!("{:.4}", res.avg_bpp()),
+        ]);
+    }
+    table.print();
+    table.save("fig9_filters");
+    Ok(())
+}

@@ -1,0 +1,61 @@
+//! **Table 1** — DeltaMask across architectures / pre-training strategies on
+//! CIFAR-100-sim (IID, N=10): Fine-tuning vs DeltaMask accuracy + avg bpp.
+//!
+//!     cargo bench --bench table1_archs [-- --full]
+//!
+//! Shape claims: DeltaMask lands near fine-tuning on every architecture at
+//! ≈0.2 bpp; larger widths (ViT-L/14 sim) close the gap the most.
+
+use deltamask::bench::{BenchScale, Table};
+use deltamask::fl::{arch_width, run_experiment};
+use deltamask::model::ArchConfig;
+use deltamask::util::cli::Args;
+
+const ARCHS: &[(&str, &str)] = &[
+    ("vitb32", "CLIP ViT-B/32"),
+    ("vitl14", "CLIP ViT-L/14"),
+    ("dinov2b", "DINOv2-Base"),
+    ("dinov2s", "DINOv2-Small"),
+    ("convmixer", "ConvMixer-768/32"),
+];
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let scale = BenchScale::from_args(&args);
+    // Architecture identity = block width F; reduced scale divides widths by
+    // 4 (keeping their ordering) so the native sweep stays fast.
+    let divisor = if scale.full { 1 } else { args.usize("divisor", 4) };
+
+    let mut table = Table::new(
+        "Table 1 (architectures, CIFAR-100-sim, IID)",
+        &["arch", "d", "fine-tuning acc", "deltamask acc", "deltamask avg bpp"],
+    );
+    for (arch, label) in ARCHS {
+        let (f_full, b) = arch_width(arch).unwrap();
+        let f = (f_full / divisor).max(16);
+        let mk = |method: &str| {
+            let mut cfg = scale.config("cifar100", method);
+            cfg.arch = arch.to_string();
+            cfg.arch_override = Some(ArchConfig::new(f, 100, if scale.full { b } else { scale.batch }, 5));
+            cfg
+        };
+        let ft = run_experiment(&mk("fine_tuning"))?;
+        let dm = run_experiment(&mk("deltamask"))?;
+        eprintln!(
+            "  {label}: ft={:.4} dm={:.4} bpp={:.4}",
+            ft.final_accuracy(),
+            dm.final_accuracy(),
+            dm.avg_bpp()
+        );
+        table.row(vec![
+            label.to_string(),
+            format!("{}", 5 * f * f),
+            format!("{:.4}", ft.final_accuracy()),
+            format!("{:.4}", dm.final_accuracy()),
+            format!("{:.4}", dm.avg_bpp()),
+        ]);
+    }
+    table.print();
+    table.save("table1_archs");
+    Ok(())
+}

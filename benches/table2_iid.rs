@@ -1,0 +1,63 @@
+//! **Table 2 / Figure 3** — IID Dir(10) evaluation of DeltaMask vs all
+//! baselines across datasets at ρ ∈ {0.2, 1.0}.
+//!
+//!     cargo bench --bench table2_iid            # reduced scale
+//!     cargo bench --bench table2_iid -- --full  # paper scale (slow)
+//!
+//! Reduced scale shrinks F/N/R (DESIGN.md §4); the claims checked are the
+//! paper's *shape*: DeltaMask ≈ FedPM accuracy at several-fold lower bpp,
+//! FedPM the best compressed baseline, FT the accuracy ceiling at 32 bpp.
+
+use deltamask::bench::{bench_datasets, paper_methods, BenchScale, Table};
+use deltamask::fl::run_experiment;
+use deltamask::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let scale = BenchScale::from_args(&args);
+    let datasets = bench_datasets(&args);
+
+    for rho in [0.2f64, 1.0] {
+        let mut table = Table::new(
+            &format!("Table 2 (IID Dir(10), rho={rho})"),
+            &["method", "dataset", "acc", "avg bpp"],
+        );
+        let mut summary = Table::new(
+            &format!("Table 2 summary (rho={rho})"),
+            &["method", "avg acc", "avg bpp"],
+        );
+        for method in paper_methods() {
+            let mut accs = Vec::new();
+            let mut bpps = Vec::new();
+            for dataset in &datasets {
+                let mut cfg = scale.config(dataset, method);
+                cfg.rho = rho;
+                if rho < 1.0 {
+                    cfg.rounds = (cfg.rounds * 2).max(cfg.rounds + 10);
+                }
+                let res = run_experiment(&cfg)?;
+                let acc = res.final_accuracy();
+                let bpp = res.avg_bpp();
+                table.row(vec![
+                    method.to_string(),
+                    dataset.to_string(),
+                    format!("{:.4}", acc),
+                    format!("{:.4}", bpp),
+                ]);
+                accs.push(acc);
+                bpps.push(bpp);
+                eprintln!("  [rho={rho}] {method}/{dataset}: acc={acc:.4} bpp={bpp:.4}");
+            }
+            summary.row(vec![
+                method.to_string(),
+                format!("{:.4}", deltamask::util::stats::mean(&accs)),
+                format!("{:.4}", deltamask::util::stats::mean(&bpps)),
+            ]);
+        }
+        table.print();
+        summary.print();
+        table.save(&format!("table2_iid_rho{}", (rho * 10.0) as u32));
+        summary.save(&format!("table2_iid_summary_rho{}", (rho * 10.0) as u32));
+    }
+    Ok(())
+}

@@ -1,0 +1,60 @@
+//! **Table 3 / Figure 4** — non-IID Dir(0.1) evaluation at ρ ∈ {0.2, 1.0}
+//! (the paper's "challenging and realistic" split, C_p ≈ 0.2).
+//!
+//!     cargo bench --bench table3_noniid [-- --full]
+//!
+//! Shape claims: the Bayesian aggregation keeps the stochastic-mask methods
+//! (FedPM, DeltaMask, DeepReduce) ahead of FedMask under partial
+//! participation; DeltaMask stays within a couple points of FedPM at a
+//! fraction of the bitrate.
+
+use deltamask::bench::{bench_datasets, paper_methods, BenchScale, Table};
+use deltamask::fl::run_experiment;
+use deltamask::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let scale = BenchScale::from_args(&args);
+    let datasets = bench_datasets(&args);
+
+    for rho in [0.2f64, 1.0] {
+        let mut table = Table::new(
+            &format!("Table 3 (non-IID Dir(0.1), rho={rho})"),
+            &["method", "dataset", "acc", "avg bpp"],
+        );
+        let mut summary = Table::new(
+            &format!("Table 3 summary (rho={rho})"),
+            &["method", "avg acc", "avg bpp"],
+        );
+        for method in paper_methods() {
+            let mut accs = Vec::new();
+            let mut bpps = Vec::new();
+            for dataset in &datasets {
+                let mut cfg = scale.config_noniid(dataset, method);
+                cfg.rho = rho;
+                let res = run_experiment(&cfg)?;
+                let acc = res.final_accuracy();
+                let bpp = res.avg_bpp();
+                table.row(vec![
+                    method.to_string(),
+                    dataset.to_string(),
+                    format!("{:.4}", acc),
+                    format!("{:.4}", bpp),
+                ]);
+                accs.push(acc);
+                bpps.push(bpp);
+                eprintln!("  [rho={rho}] {method}/{dataset}: acc={acc:.4} bpp={bpp:.4}");
+            }
+            summary.row(vec![
+                method.to_string(),
+                format!("{:.4}", deltamask::util::stats::mean(&accs)),
+                format!("{:.4}", deltamask::util::stats::mean(&bpps)),
+            ]);
+        }
+        table.print();
+        summary.print();
+        table.save(&format!("table3_noniid_rho{}", (rho * 10.0) as u32));
+        summary.save(&format!("table3_noniid_summary_rho{}", (rho * 10.0) as u32));
+    }
+    Ok(())
+}

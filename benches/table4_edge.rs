@@ -1,0 +1,65 @@
+//! **Table 4 / App. C.4** — per-entry CPU time of filter construction and
+//! membership queries, Xor{8,16,32} vs BFuse{8,16,32}.
+//!
+//!     cargo bench --bench table4_edge                 # 1M entries
+//!     cargo bench --bench table4_edge -- --full       # paper's 10M
+//!
+//! The paper measured Jetson Nano / RPi 4 / Coral with a power HAT; on this
+//! testbed we report measured CPU ns/entry (energy ∝ time on fixed
+//! hardware). The device-independent claims checked: BFuse faster than XOR
+//! at every width; time grows only mildly with bits-per-entry.
+
+use deltamask::bench::{summarize, time_fn, Table};
+use deltamask::filters::{BinaryFuse, MembershipFilter, XorFilter};
+use deltamask::util::cli::Args;
+use deltamask::util::rng::Xoshiro256pp;
+
+fn main() {
+    let args = Args::from_env();
+    let n = if args.flag("full") {
+        10_000_000
+    } else {
+        args.usize("entries", 1_000_000)
+    };
+    let mut rng = Xoshiro256pp::new(3);
+    let keys: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
+    let probes: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
+    let reps = if n >= 10_000_000 { 1 } else { 3 };
+
+    println!("Table 4 over {n} entries ({reps} reps)");
+    let mut table = Table::new(
+        "Table 4: filter construct/query cost",
+        &["filter", "bpe", "construct ns/entry", "query ns/entry"],
+    );
+
+    macro_rules! profile {
+        ($label:expr, $ty:ty) => {{
+            let c = summarize(&time_fn(0, reps, || <$ty>::build(&keys).unwrap()));
+            let f = <$ty>::build(&keys).unwrap();
+            let q = summarize(&time_fn(1, reps, || {
+                probes.iter().filter(|&&k| f.contains(k)).count()
+            }));
+            eprintln!(
+                "  {}: construct {:.1} ns/e, query {:.1} ns/e",
+                $label,
+                c.mean / n as f64 * 1e9,
+                q.mean / n as f64 * 1e9
+            );
+            table.row(vec![
+                $label.to_string(),
+                format!("{:.2}", f.bits_per_entry()),
+                format!("{:.1}", c.mean / n as f64 * 1e9),
+                format!("{:.1}", q.mean / n as f64 * 1e9),
+            ]);
+        }};
+    }
+
+    profile!("Xor8", XorFilter<u8>);
+    profile!("Xor16", XorFilter<u16>);
+    profile!("Xor32", XorFilter<u32>);
+    profile!("BFuse8", BinaryFuse<u8, 4>);
+    profile!("BFuse16", BinaryFuse<u16, 4>);
+    profile!("BFuse32", BinaryFuse<u32, 4>);
+    table.print();
+    table.save("table4_edge");
+}

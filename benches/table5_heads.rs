@@ -1,0 +1,59 @@
+//! **Table 5 / App. C.5** — classifier-head initialization ablation:
+//! He (random frozen) vs FiT-LDA (data statistics) vs LP (one federated
+//! linear-probing round).
+//!
+//!     cargo bench --bench table5_heads [-- --full]
+//!
+//! Shape claims: LP > FiT > He in accuracy at essentially the same bpp
+//! (the head-init uplink is amortized into round 0).
+
+use deltamask::bench::{bench_datasets, BenchScale, Table};
+use deltamask::fl::{run_experiment, HeadInit};
+use deltamask::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let scale = BenchScale::from_args(&args);
+    let datasets = bench_datasets(&args);
+
+    let mut table = Table::new(
+        "Table 5: classifier-head initialization (DeltaMask)",
+        &["variant", "dataset", "acc", "avg bpp"],
+    );
+    let mut summary = Table::new(
+        "Table 5 summary",
+        &["variant", "avg acc", "avg bpp"],
+    );
+    for (label, init) in [
+        ("DeltaMask_He", HeadInit::He),
+        ("DeltaMask_FiT", HeadInit::Fit),
+        ("DeltaMask_LP", HeadInit::Lp),
+    ] {
+        let mut accs = Vec::new();
+        let mut bpps = Vec::new();
+        for dataset in &datasets {
+            let mut cfg = scale.config(dataset, "deltamask");
+            cfg.head_init = init;
+            let res = run_experiment(&cfg)?;
+            table.row(vec![
+                label.to_string(),
+                dataset.to_string(),
+                format!("{:.4}", res.final_accuracy()),
+                format!("{:.4}", res.avg_bpp()),
+            ]);
+            accs.push(res.final_accuracy());
+            bpps.push(res.avg_bpp());
+            eprintln!("  {label}/{dataset}: acc={:.4}", res.final_accuracy());
+        }
+        summary.row(vec![
+            label.to_string(),
+            format!("{:.4}", deltamask::util::stats::mean(&accs)),
+            format!("{:.4}", deltamask::util::stats::mean(&bpps)),
+        ]);
+    }
+    table.print();
+    summary.print();
+    table.save("table5_heads");
+    summary.save("table5_heads_summary");
+    Ok(())
+}

@@ -1,0 +1,107 @@
+//! Codec anatomy: walk one DeltaMask update through every §3.2 stage and
+//! print what each contributes — Δ size, top-κ selection, filter bits,
+//! PNG packing, and server-side reconstruction fidelity.
+//!
+//!     cargo run --release --example codec_inspect -- [--d 327680] [--drift 0.02]
+
+use deltamask::codec::png;
+use deltamask::compress::{DecodeCtx, DeltaMaskCodec, EncodeCtx, Update, UpdateCodec};
+use deltamask::filters::MembershipFilter;
+use deltamask::model::sample_mask_seeded;
+use deltamask::util::cli::Args;
+use deltamask::util::rng::Xoshiro256pp;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let d = args.usize("d", 327_680); // ViT-B/32 sim: 5·256² mask params
+    let drift = args.f64("drift", 0.02) as f32;
+    let kappa = args.f64("kappa", 0.8);
+    let mut rng = Xoshiro256pp::new(11);
+
+    // Global probabilities and a client that drifted on `drift` of coords.
+    let theta_g: Vec<f32> = (0..d)
+        .map(|_| if rng.next_f32() < 0.5 { 0.95 } else { 0.05 })
+        .collect();
+    let mut theta_k = theta_g.clone();
+    for t in theta_k.iter_mut() {
+        if rng.next_f32() < drift {
+            *t = 1.0 - *t; // confident flip — a "learned" update
+        }
+    }
+    let round_seed = 99u64;
+    let mut mask_g = Vec::new();
+    sample_mask_seeded(&theta_g, round_seed, &mut mask_g);
+    let mut mask_k = Vec::new();
+    sample_mask_seeded(&theta_k, round_seed, &mut mask_k); // shared seed (§3.2)
+
+    let n_delta = (0..d).filter(|&i| mask_g[i] != mask_k[i]).count();
+    println!("d = {d}, drifted coords = {:.2}%", drift * 100.0);
+    println!("stage 1 — Δ (shared-seed mask diff): {n_delta} indexes ({:.3}% of d)",
+        n_delta as f64 / d as f64 * 100.0);
+
+    let codec = DeltaMaskCodec::default();
+    let ctx = EncodeCtx {
+        d,
+        theta_k: &theta_k,
+        theta_g: &theta_g,
+        mask_k: &mask_k,
+        mask_g: &mask_g,
+        s_k: &[],
+        s_g: &[],
+        kappa,
+        seed: round_seed,
+    };
+    let mut selected = codec.select_updates(&ctx);
+    selected.sort_unstable();
+    println!(
+        "stage 2 — top-κ (κ={kappa}): kept {} of {n_delta} (KL-ranked)",
+        selected.len()
+    );
+
+    let filter = deltamask::filters::BinaryFuse::<u8, 4>::build(&selected).unwrap();
+    println!(
+        "stage 3 — BFuse8: {} fingerprints, {:.2} bits/entry, payload {} B",
+        filter.len_fingerprints(),
+        filter.bits_per_entry(),
+        filter.payload_bytes()
+    );
+
+    let img = png::GrayImage::from_payload(&filter.payload());
+    let png_bytes = png::encode(&img);
+    println!(
+        "stage 4 — grayscale PNG A_k: {}×{} px, {} B ({:+.1}% vs raw payload)",
+        img.width,
+        img.height,
+        png_bytes.len(),
+        (png_bytes.len() as f64 / filter.payload_bytes() as f64 - 1.0) * 100.0
+    );
+
+    let enc = codec.encode(&ctx)?;
+    println!(
+        "full record: {} B ⇒ {:.4} bits-per-parameter",
+        enc.bytes.len(),
+        enc.bpp(d)
+    );
+
+    let dctx = DecodeCtx {
+        d,
+        mask_g: &mask_g,
+        s_g: &[],
+        seed: round_seed,
+    };
+    let Update::Mask(recon) = codec.decode(&enc.bytes, &dctx)? else {
+        unreachable!()
+    };
+    let missed = (0..d)
+        .filter(|&i| selected.binary_search(&(i as u64)).is_ok() && recon[i] == mask_g[i] && mask_k[i] != mask_g[i])
+        .count();
+    let false_flips = (0..d)
+        .filter(|&i| mask_k[i] == mask_g[i] && recon[i] != mask_g[i])
+        .count();
+    println!(
+        "stage 5 — server reconstruction: missed true updates = {missed}, \
+         false flips = {false_flips} (expected ≈ d·2⁻⁸ = {:.0})",
+        d as f64 / 256.0
+    );
+    Ok(())
+}

@@ -1,0 +1,65 @@
+//! Quickstart: fine-tune a simulated foundation model federatedly with
+//! DeltaMask in under a minute on CPU, end-to-end through the production
+//! path — AOT-compiled Pallas/JAX graphs executed from rust via PJRT.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+//!
+//! What happens:
+//!   1. loads `artifacts/manifest.json` + the miniature `test` combo HLO,
+//!   2. builds a federated CIFAR-10-like dataset (6 clients, IID),
+//!   3. one linear-probing round initializes the head (§3.3),
+//!   4. 12 DeltaMask rounds: stochastic mask training → KL-ranked top-κ
+//!      deltas → binary fuse filter → grayscale PNG → Bayesian aggregation,
+//!   5. prints accuracy and measured bits-per-parameter per round.
+
+use deltamask::fl::{run_experiment, BackendKind, ExperimentConfig, HeadInit};
+
+fn main() -> anyhow::Result<()> {
+    let cfg = ExperimentConfig {
+        dataset: "cifar10".into(),
+        arch: "test".into(),
+        method: "deltamask".into(),
+        n_clients: 6,
+        rounds: 12,
+        rho: 1.0,
+        local_epochs: 1,
+        samples_per_client: 48,
+        test_samples: 400,
+        dirichlet_alpha: 10.0,
+        kappa0: 0.8,
+        kappa_floor: 0.25,
+        seed: 7,
+        eval_every: 3,
+        backend: BackendKind::Xla, // the AOT Pallas/JAX path
+        head_init: HeadInit::Lp,
+        lp_rounds: 1,
+        theta0: 0.85,
+        arch_override: None,
+    };
+
+    println!(
+        "DeltaMask quickstart: {} clients, {} rounds, d = {} mask params, backend = XLA/PJRT",
+        cfg.n_clients,
+        cfg.rounds,
+        cfg.arch_config().d()
+    );
+    let res = run_experiment(&cfg)?;
+    for r in &res.rounds {
+        print!(
+            "round {:2}  loss {:.3}  bpp {:5.2}  enc {:5.2} ms  dec {:5.2} ms",
+            r.round, r.train_loss, r.mean_bpp, r.enc_ms_mean, r.dec_ms_mean
+        );
+        match r.accuracy {
+            Some(acc) => println!("  acc {:.3}", acc),
+            None => println!(),
+        }
+    }
+    println!(
+        "\nfinal accuracy {:.3} at avg {:.3} bits-per-parameter ({:.2} MiB total uplink/client)",
+        res.final_accuracy(),
+        res.avg_bpp(),
+        res.total_uplink_mib()
+    );
+    println!("paper context: DeltaMask targets ≈0.1–0.25 bpp vs 1 bpp for FedPM-class methods.");
+    Ok(())
+}

@@ -1,0 +1,144 @@
+"""AOT compilation: lower every (architecture, class-count) graph family to
+HLO **text** and write ``artifacts/manifest.json`` for the rust runtime.
+
+HLO text — not ``.serialize()`` — is the interchange format: jax ≥ 0.5 emits
+HloModuleProtos with 64-bit instruction ids that the image's xla_extension
+0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Run once via ``make artifacts``; never on the request path.
+
+    cd python && python -m compile.aot --out ../artifacts [--only test]
+"""
+
+import argparse
+import json
+import os
+import time
+
+import jax
+
+from .model import ModelConfig, graph_specs, f32
+
+# Simulated architectures (DESIGN.md §5): F = block width of the 5 maskable
+# blocks; d = 5·F² mask parameters. The "test" config is a miniature used by
+# rust integration tests and the quickstart example.
+ARCHS = {
+    "vitb32": dict(F=256, B=64),      # CLIP ViT-B/32 sim
+    "vitl14": dict(F=384, B=64),      # CLIP ViT-L/14 sim
+    "dinov2b": dict(F=320, B=64),     # DINOv2-Base sim
+    "dinov2s": dict(F=160, B=64),     # DINOv2-Small sim
+    "convmixer": dict(F=288, B=64),   # ConvMixer-768/32 sim
+    "test": dict(F=32, B=8),          # miniature for tests/examples
+}
+
+# Paper's 8 datasets → class counts (§4).
+DATASETS = {
+    "cifar10": 10,
+    "cifar100": 100,
+    "svhn": 10,
+    "emnist": 49,
+    "fmnist": 10,
+    "eurosat": 10,
+    "food101": 101,
+    "cars196": 196,
+}
+
+# (arch, C) combos actually lowered:
+#  - vitb32 × every distinct class count (covers all 8 datasets: Tables 2/3,
+#    Figs 1/3/4/7/8/9, Table 5),
+#  - the other four archs × C=100 (Table 1),
+#  - the miniature test combo.
+def default_combos():
+    combos = []
+    for c in sorted(set(DATASETS.values())):
+        combos.append(("vitb32", c))
+    for arch in ("vitl14", "dinov2b", "dinov2s", "convmixer"):
+        combos.append((arch, 100))
+    combos.append(("test", 10))
+    return combos
+
+
+def to_hlo_text(lowered) -> str:
+    from jax._src.lib import xla_client as xc
+
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_combo(arch: str, C: int, out_dir: str, verbose=True):
+    a = ARCHS[arch]
+    cfg = ModelConfig(name=arch, F=a["F"], C=C, B=a["B"])
+    specs = graph_specs(cfg)
+    entry = {
+        "arch": arch,
+        "F": cfg.F,
+        "C": cfg.C,
+        "B": cfg.B,
+        "L": cfg.L,
+        "d": cfg.d,
+        "graphs": {},
+    }
+    for graph, spec in specs.items():
+        t0 = time.time()
+        args = [f32(shape) for _, shape in spec["inputs"]]
+        lowered = jax.jit(spec["fn"]).lower(*args)
+        text = to_hlo_text(lowered)
+        fname = f"{arch}_c{C}_{graph}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        entry["graphs"][graph] = {
+            "file": fname,
+            "inputs": [
+                {"name": n, "shape": list(shape), "dtype": "f32"}
+                for n, shape in spec["inputs"]
+            ],
+            "outputs": [
+                {"name": n, "shape": list(shape), "dtype": "f32"}
+                for n, shape in spec["outputs"]
+            ],
+        }
+        if verbose:
+            print(
+                f"  {fname}: {len(text)/1024:.0f} KiB in {time.time()-t0:.1f}s",
+                flush=True,
+            )
+    return entry
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--out", default="../artifacts")
+    p.add_argument(
+        "--only",
+        default=None,
+        help="comma-separated arch names to lower (e.g. 'test' or 'vitb32')",
+    )
+    args = p.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    combos = default_combos()
+    if args.only:
+        keep = set(args.only.split(","))
+        combos = [(a, c) for a, c in combos if a in keep]
+
+    manifest = {
+        "version": 1,
+        "datasets": DATASETS,
+        "archs": {k: v["F"] for k, v in ARCHS.items()},
+        "combos": [],
+    }
+    t0 = time.time()
+    for arch, c in combos:
+        print(f"lowering {arch} C={c} ...", flush=True)
+        manifest["combos"].append(lower_combo(arch, c, args.out))
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"done: {len(combos)} combos in {time.time()-t0:.0f}s -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

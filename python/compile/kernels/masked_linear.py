@@ -1,0 +1,191 @@
+"""Layer-1 Pallas kernels: the masked-matmul hot-spot of DeltaMask.
+
+The paper's compute core is the masked forward pass ``ŵ = m ⊙ w_init``
+(§3.2) applied in every maskable block: ``y = x @ (m ⊙ W)ᵀ``. On a real TPU
+these kernels tile W/m into VMEM blocks via ``BlockSpec``, fuse the mask
+multiply into the block load (one VMEM pass — the mask never round-trips to
+HBM) and feed the MXU with the masked block; the grid iterates K-innermost
+so partial sums stay resident in the output block. See DESIGN.md §6 for the
+GPU→TPU adaptation notes.
+
+All kernels run with ``interpret=True``: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, so the kernels lower to plain HLO (the structure —
+tiling, fusion, memory schedule — is what carries to TPU, not the CPU
+wallclock).
+
+Three kernels cover fwd + bwd of ``masked_linear``:
+
+* ``masked_matmul``        y  = x @ (m ⊙ W)ᵀ          (forward)
+* ``masked_matmul_rhs``    dx = dy @ (m ⊙ W)           (input gradient)
+* ``masked_outer``         dm = (dyᵀ @ x) ⊙ W          (mask gradient)
+
+``masked_linear`` wires them into a ``jax.custom_vjp`` so the L2 model
+differentiates straight through the Pallas calls. The frozen weights get a
+zero cotangent (they are never updated — XLA dead-code-eliminates it).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile cap. 128 keeps MXU-shaped tiles on TPU and
+# (bm·bk + 2·bn·bk + bm·bn)·4B well under a 16 MiB VMEM budget with room for
+# the automatic double-buffering pipeline.
+TILE_CAP = 128
+
+
+def best_tile(dim: int, cap: int = TILE_CAP) -> int:
+    """Largest divisor of ``dim`` not exceeding ``cap`` (grid dims must
+    divide exactly; Pallas pads otherwise, which interpret mode dislikes)."""
+    for t in range(min(dim, cap), 0, -1):
+        if dim % t == 0:
+            return t
+    return 1
+
+
+def _fwd_kernel(x_ref, w_ref, m_ref, o_ref):
+    """o[i,j] += x[i,k] @ (w[j,k] * m[j,k])ᵀ — mask fused into the tile load."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += x_ref[...] @ (w_ref[...] * m_ref[...]).T
+
+
+def masked_matmul(x, w, m, *, bm=None, bn=None, bk=None, interpret=True):
+    """y = x @ (m ⊙ w)ᵀ with x:(B,Fin), w,m:(Fout,Fin) → y:(B,Fout)."""
+    B, Fin = x.shape
+    Fout, Fin2 = w.shape
+    assert Fin == Fin2 and w.shape == m.shape
+    bm = best_tile(B, bm or TILE_CAP)
+    bn = best_tile(Fout, bn or TILE_CAP)
+    bk = best_tile(Fin, bk or TILE_CAP)
+    grid = (B // bm, Fout // bn, Fin // bk)
+    return pl.pallas_call(
+        _fwd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bn, bk), lambda i, j, k: (j, k)),
+            pl.BlockSpec((bn, bk), lambda i, j, k: (j, k)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((B, Fout), x.dtype),
+        interpret=interpret,
+    )(x, w, m)
+
+
+def _rhs_kernel(dy_ref, w_ref, m_ref, o_ref):
+    """o[i,j] += dy[i,k] @ (w[k,j] * m[k,j]) — no transpose."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += dy_ref[...] @ (w_ref[...] * m_ref[...])
+
+
+def masked_matmul_rhs(dy, w, m, *, bm=None, bn=None, bk=None, interpret=True):
+    """dx = dy @ (m ⊙ w) with dy:(B,Fout), w,m:(Fout,Fin) → dx:(B,Fin)."""
+    B, Fout = dy.shape
+    Fout2, Fin = w.shape
+    assert Fout == Fout2 and w.shape == m.shape
+    bm = best_tile(B, bm or TILE_CAP)
+    bn = best_tile(Fin, bn or TILE_CAP)
+    bk = best_tile(Fout, bk or TILE_CAP)
+    grid = (B // bm, Fin // bn, Fout // bk)
+    return pl.pallas_call(
+        _rhs_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((B, Fin), dy.dtype),
+        interpret=interpret,
+    )(dy, w, m)
+
+
+def _outer_kernel(dy_ref, x_ref, w_ref, o_ref):
+    """o[i,j] += (dy[k,i]ᵀ @ x[k,j]) * w[i,j].
+
+    The ⊙w epilogue distributes over the K accumulation, so fusing it per
+    partial product is exact."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += (dy_ref[...].T @ x_ref[...]) * w_ref[...]
+
+
+def masked_outer(dy, x, w, *, bm=None, bn=None, bk=None, interpret=True):
+    """dm = (dyᵀ @ x) ⊙ w with dy:(B,Fout), x:(B,Fin) → dm:(Fout,Fin)."""
+    B, Fout = dy.shape
+    B2, Fin = x.shape
+    assert B == B2 and w.shape == (Fout, Fin)
+    bm = best_tile(Fout, bm or TILE_CAP)
+    bn = best_tile(Fin, bn or TILE_CAP)
+    bk = best_tile(B, bk or TILE_CAP)
+    grid = (Fout // bm, Fin // bn, B // bk)
+    return pl.pallas_call(
+        _outer_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bk, bm), lambda i, j, k: (k, i)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Fout, Fin), dy.dtype),
+        interpret=interpret,
+    )(dy, x, w)
+
+
+@jax.custom_vjp
+def masked_linear(x, w, m):
+    """Differentiable masked linear layer: y = x @ (m ⊙ w)ᵀ.
+
+    Gradients flow to ``x`` and ``m`` (the mask probabilities, via the
+    straight-through estimator wired in L2); ``w`` is the frozen
+    foundation-model weight and receives a zero cotangent.
+    """
+    return masked_matmul(x, w, m)
+
+
+def _ml_fwd(x, w, m):
+    return masked_linear(x, w, m), (x, w, m)
+
+
+def _ml_bwd(res, dy):
+    x, w, m = res
+    dx = masked_matmul_rhs(dy, w, m)
+    dm = masked_outer(dy, x, w)
+    return dx, jnp.zeros_like(w), dm
+
+
+masked_linear.defvjp(_ml_fwd, _ml_bwd)
+
+
+def vmem_bytes(bm: int, bn: int, bk: int, dtype_bytes: int = 4) -> int:
+    """Estimated VMEM working set of one fwd grid step (x, w, m, o tiles).
+
+    Used by DESIGN.md §8 and the pytest structural checks: must stay far
+    below the ~16 MiB/core budget to leave room for double buffering.
+    """
+    return dtype_bytes * (bm * bk + 2 * (bn * bk) + bm * bn)
+
+
+def mxu_utilization_estimate(bm: int, bn: int, bk: int, mxu: int = 128) -> float:
+    """Fraction of MXU lanes a (bm × bk)·(bk × bn) tile keeps busy —
+    1.0 when every tile dim is a multiple of the 128-wide systolic array."""
+
+    def frac(d):
+        return d / (((d + mxu - 1) // mxu) * mxu)
+
+    return min(frac(bm), 1.0) * min(frac(bn), 1.0) * min(frac(bk), 1.0)

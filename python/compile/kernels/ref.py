@@ -1,0 +1,36 @@
+"""Pure-jnp oracles for the Pallas kernels — the build-time correctness
+contract. Every Pallas kernel in :mod:`masked_linear` must match these
+references to float tolerance across the full (shape, tile) sweep in
+``python/tests/test_kernel.py``; the rust native backend mirrors the same
+math for the L3-side cross-check.
+"""
+
+import jax.numpy as jnp
+
+
+def masked_matmul_ref(x, w, m):
+    """y = x @ (m ⊙ w)ᵀ."""
+    return x @ (w * m).T
+
+
+def masked_matmul_rhs_ref(dy, w, m):
+    """dx = dy @ (m ⊙ w)."""
+    return dy @ (w * m)
+
+
+def masked_outer_ref(dy, x, w):
+    """dm = (dyᵀ @ x) ⊙ w."""
+    return (dy.T @ x) * w
+
+
+def masked_linear_vjp_ref(x, w, m, dy):
+    """Full reference VJP of y = x @ (m ⊙ w)ᵀ → (dx, dm)."""
+    return masked_matmul_rhs_ref(dy, w, m), masked_outer_ref(dy, x, w)
+
+
+def forward_ref(x, w_blocks, masks, head_w, head_b):
+    """Reference masked-residual-MLP forward (mirrors model.make_forward)."""
+    h = x
+    for w, m in zip(w_blocks, masks):
+        h = h + jnp.maximum(masked_matmul_ref(h, w, m), 0.0)
+    return h @ head_w.T + head_b

@@ -1,0 +1,240 @@
+"""Layer-2: the masked foundation-model compute graphs, in JAX.
+
+The simulated FM (DESIGN.md §2 substitution table) is a frozen feature
+extractor followed by ``L`` maskable residual dense blocks — the stand-in
+for "the last five transformer blocks" the paper masks (§4) — plus a linear
+classifier head:
+
+    h₀ = x (frozen-backbone features)
+    hᵢ = hᵢ₋₁ + relu((mᵢ ⊙ Wᵢ) hᵢ₋₁)       i = 1..L   (Pallas kernels)
+    logits = W_head h_L + b_head
+
+Four graphs are AOT-lowered per (F, C) combo and executed from rust:
+
+* ``train_step`` — one stochastic-mask Adam step on the scores ``s``
+  (lr=0.1, paper App. C.1) with the straight-through estimator through the
+  Bernoulli sample ``m = 1[u < σ(s)]``. The uniforms ``u`` are an *input*
+  so the rust coordinator owns all randomness (shared-seed determinism,
+  §3.2).
+* ``eval_step``  — logits for an explicit binary/soft mask.
+* ``lp_step``    — linear probing: Adam on the head only, mask ≡ 1
+  (the paper's §3.3 single-round head initialization).
+* ``ft_step``    — the fine-tuning baseline: Adam on blocks + head.
+
+Python runs only at build time; ``aot.py`` lowers these to HLO text.
+"""
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.masked_linear import masked_linear
+
+# Paper App. C.1: Adam with lr 0.1 on mask scores.
+MASK_LR = 0.1
+# Head / weight training rates for the LP and FT graphs.
+LP_LR = 0.01
+FT_LR = 3e-3
+ADAM_B1, ADAM_B2, ADAM_EPS = 0.9, 0.999, 1e-8
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Static shape configuration for one lowered artifact family."""
+
+    name: str  # architecture simulation name, e.g. "vitb32"
+    F: int  # block width (frozen feature dim)
+    C: int  # number of classes
+    B: int = 64  # batch size (paper App. C.1)
+    L: int = 5  # maskable blocks (paper §4: "last five blocks")
+
+    @property
+    def d(self) -> int:
+        """Mask dimensionality — the paper's d."""
+        return self.L * self.F * self.F
+
+
+def adam_update(p, g, mt, vt, t, lr):
+    """One Adam step; ``t`` is the 1-based step count (f32 scalar)."""
+    mt = ADAM_B1 * mt + (1.0 - ADAM_B1) * g
+    vt = ADAM_B2 * vt + (1.0 - ADAM_B2) * g * g
+    mhat = mt / (1.0 - ADAM_B1**t)
+    vhat = vt / (1.0 - ADAM_B2**t)
+    p = p - lr * mhat / (jnp.sqrt(vhat) + ADAM_EPS)
+    return p, mt, vt
+
+
+def make_forward(cfg: ModelConfig, trainable_weights: bool = False):
+    """fwd(x, w_blocks, masks, head_w, head_b) -> logits, scanning the L
+    masked blocks (scan keeps the lowered HLO compact).
+
+    ``trainable_weights=False`` (default) routes through the L1 Pallas
+    ``masked_linear`` whose custom VJP freezes the weights (zero cotangent)
+    — the DeltaMask/FedPM regime. ``trainable_weights=True`` uses the plain
+    jnp expression so weight gradients flow — only the conventional
+    fine-tuning baseline (``ft_step``) needs this, since by definition it
+    *is* weight training.
+    """
+
+    def block(h, w, m):
+        if trainable_weights:
+            return h + jax.nn.relu(h @ (w * m).T)
+        return h + jax.nn.relu(masked_linear(h, w, m))
+
+    def forward(x, w_blocks, masks, head_w, head_b):
+        def body(h, wm):
+            w, m = wm
+            return block(h, w, m), None
+
+        h, _ = jax.lax.scan(body, x, (w_blocks, masks))
+        return h @ head_w.T + head_b
+
+    return forward
+
+
+def cross_entropy(logits, y_onehot):
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.sum(y_onehot * logp, axis=-1))
+
+
+def make_train_step(cfg: ModelConfig):
+    """Stochastic mask training (Alg. 1, ClientUpdate inner loop body)."""
+    forward = make_forward(cfg)
+
+    def train_step(s, mt, vt, t, w_blocks, head_w, head_b, x, y_onehot, u):
+        def loss_fn(s):
+            theta = jax.nn.sigmoid(s)
+            hard = (u < theta).astype(jnp.float32)
+            # Straight-through: forward uses the Bernoulli sample, backward
+            # flows through theta as if m were theta (∂m/∂θ ≈ 1).
+            m = theta + jax.lax.stop_gradient(hard - theta)
+            masks = m.reshape(cfg.L, cfg.F, cfg.F)
+            logits = forward(x, w_blocks, masks, head_w, head_b)
+            return cross_entropy(logits, y_onehot)
+
+        loss, g = jax.value_and_grad(loss_fn)(s)
+        s, mt, vt = adam_update(s, g, mt, vt, t, MASK_LR)
+        return s, mt, vt, loss
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig):
+    """Logits under an explicit mask (server-side evaluation; also used by
+    every masking baseline)."""
+    forward = make_forward(cfg)
+
+    def eval_step(mask, w_blocks, head_w, head_b, x):
+        masks = mask.reshape(cfg.L, cfg.F, cfg.F)
+        return forward(x, w_blocks, masks, head_w, head_b)
+
+    return eval_step
+
+
+def make_lp_step(cfg: ModelConfig):
+    """Linear probing: one Adam step on (head_w, head_b), backbone frozen
+    with mask ≡ 1 (§3.3 weight-initialization round)."""
+    forward = make_forward(cfg)
+
+    def lp_step(head_w, head_b, m_hw, v_hw, m_hb, v_hb, t, w_blocks, x, y_onehot):
+        ones = jnp.ones((cfg.L, cfg.F, cfg.F), jnp.float32)
+
+        def loss_fn(hw, hb):
+            logits = forward(x, w_blocks, ones, hw, hb)
+            return cross_entropy(logits, y_onehot)
+
+        loss, (g_hw, g_hb) = jax.value_and_grad(loss_fn, argnums=(0, 1))(
+            head_w, head_b
+        )
+        head_w, m_hw, v_hw = adam_update(head_w, g_hw, m_hw, v_hw, t, LP_LR)
+        head_b, m_hb, v_hb = adam_update(head_b, g_hb, m_hb, v_hb, t, LP_LR)
+        return head_w, head_b, m_hw, v_hw, m_hb, v_hb, loss
+
+    return lp_step
+
+
+def make_ft_step(cfg: ModelConfig):
+    """Fine-tuning baseline: Adam on the maskable blocks + head (the paper
+    fine-tunes exactly "the layers modified in DeltaMask", App. C.2)."""
+    forward = make_forward(cfg, trainable_weights=True)
+
+    def ft_step(
+        w_blocks, head_w, head_b,
+        m_wb, v_wb, m_hw, v_hw, m_hb, v_hb,
+        t, x, y_onehot,
+    ):
+        ones = jnp.ones((cfg.L, cfg.F, cfg.F), jnp.float32)
+
+        def loss_fn(wb, hw, hb):
+            logits = forward(x, wb, ones, hw, hb)
+            return cross_entropy(logits, y_onehot)
+
+        loss, (g_wb, g_hw, g_hb) = jax.value_and_grad(loss_fn, argnums=(0, 1, 2))(
+            w_blocks, head_w, head_b
+        )
+        w_blocks, m_wb, v_wb = adam_update(w_blocks, g_wb, m_wb, v_wb, t, FT_LR)
+        head_w, m_hw, v_hw = adam_update(head_w, g_hw, m_hw, v_hw, t, FT_LR)
+        head_b, m_hb, v_hb = adam_update(head_b, g_hb, m_hb, v_hb, t, FT_LR)
+        return w_blocks, head_w, head_b, m_wb, v_wb, m_hw, v_hw, m_hb, v_hb, loss
+
+    return ft_step
+
+
+def f32(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def graph_specs(cfg: ModelConfig):
+    """Input specs for every lowered graph — the contract the rust runtime
+    reads back from ``manifest.json``. Names match the function params."""
+    d, L, F, C, B = cfg.d, cfg.L, cfg.F, cfg.C, cfg.B
+    return {
+        "train": {
+            "fn": make_train_step(cfg),
+            "inputs": [
+                ("s", (d,)), ("mt", (d,)), ("vt", (d,)), ("t", ()),
+                ("w_blocks", (L, F, F)), ("head_w", (C, F)), ("head_b", (C,)),
+                ("x", (B, F)), ("y_onehot", (B, C)), ("u", (d,)),
+            ],
+            "outputs": [("s", (d,)), ("mt", (d,)), ("vt", (d,)), ("loss", ())],
+        },
+        "eval": {
+            "fn": make_eval_step(cfg),
+            "inputs": [
+                ("mask", (d,)), ("w_blocks", (L, F, F)),
+                ("head_w", (C, F)), ("head_b", (C,)), ("x", (B, F)),
+            ],
+            "outputs": [("logits", (B, C))],
+        },
+        "lp": {
+            "fn": make_lp_step(cfg),
+            "inputs": [
+                ("head_w", (C, F)), ("head_b", (C,)),
+                ("m_hw", (C, F)), ("v_hw", (C, F)),
+                ("m_hb", (C,)), ("v_hb", (C,)), ("t", ()),
+                ("w_blocks", (L, F, F)), ("x", (B, F)), ("y_onehot", (B, C)),
+            ],
+            "outputs": [
+                ("head_w", (C, F)), ("head_b", (C,)),
+                ("m_hw", (C, F)), ("v_hw", (C, F)),
+                ("m_hb", (C,)), ("v_hb", (C,)), ("loss", ()),
+            ],
+        },
+        "ft": {
+            "fn": make_ft_step(cfg),
+            "inputs": [
+                ("w_blocks", (L, F, F)), ("head_w", (C, F)), ("head_b", (C,)),
+                ("m_wb", (L, F, F)), ("v_wb", (L, F, F)),
+                ("m_hw", (C, F)), ("v_hw", (C, F)),
+                ("m_hb", (C,)), ("v_hb", (C,)), ("t", ()),
+                ("x", (B, F)), ("y_onehot", (B, C)),
+            ],
+            "outputs": [
+                ("w_blocks", (L, F, F)), ("head_w", (C, F)), ("head_b", (C,)),
+                ("m_wb", (L, F, F)), ("v_wb", (L, F, F)),
+                ("m_hw", (C, F)), ("v_hw", (C, F)),
+                ("m_hb", (C,)), ("v_hb", (C,)), ("loss", ()),
+            ],
+        },
+    }

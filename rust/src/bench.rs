@@ -1,0 +1,236 @@
+//! Micro-benchmark harness for the `benches/` targets (the offline vendor
+//! set has no criterion). Provides warmup+repeat timing with summary stats,
+//! paper-style table printing, and JSON result emission into `results/`.
+
+use crate::util::json::Json;
+use crate::util::stats;
+use std::time::Instant;
+
+/// Time `f` with `warmup` + `iters` runs; returns per-iteration seconds.
+pub fn time_fn<T>(warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> Vec<f64> {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut out = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        std::hint::black_box(f());
+        out.push(t.elapsed().as_secs_f64());
+    }
+    out
+}
+
+/// Summary of a timed run.
+#[derive(Clone, Debug)]
+pub struct Timing {
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub p50: f64,
+}
+
+pub fn summarize(samples: &[f64]) -> Timing {
+    Timing {
+        mean: stats::mean(samples),
+        std: stats::std(samples),
+        min: samples.iter().cloned().fold(f64::INFINITY, f64::min),
+        p50: stats::median(samples),
+    }
+}
+
+/// A paper-style results table (rows printed padded; also JSON-emitted).
+pub struct Table {
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, columns: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.columns.len());
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.columns.iter().map(|c| c.len()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+        println!("\n== {} ==", self.title);
+        let header: Vec<String> = self
+            .columns
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:w$}", c, w = widths[i]))
+            .collect();
+        println!("| {} |", header.join(" | "));
+        println!(
+            "|{}|",
+            widths
+                .iter()
+                .map(|w| "-".repeat(w + 2))
+                .collect::<Vec<_>>()
+                .join("|")
+        );
+        for row in &self.rows {
+            let cells: Vec<String> = row
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:w$}", c, w = widths[i]))
+                .collect();
+            println!("| {} |", cells.join(" | "));
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("title", Json::from_str_(&self.title));
+        j.set(
+            "columns",
+            Json::Arr(self.columns.iter().map(|c| Json::from_str_(c)).collect()),
+        );
+        j.set(
+            "rows",
+            Json::Arr(
+                self.rows
+                    .iter()
+                    .map(|r| Json::Arr(r.iter().map(|c| Json::from_str_(c)).collect()))
+                    .collect(),
+            ),
+        );
+        j
+    }
+
+    /// Write `results/<name>.json` (best-effort; benches run from repo root).
+    pub fn save(&self, name: &str) {
+        let _ = std::fs::create_dir_all("results");
+        let path = format!("results/{name}.json");
+        if std::fs::write(&path, self.to_json().to_string_pretty()).is_ok() {
+            println!("[saved {path}]");
+        }
+    }
+}
+
+/// Shared bench-side experiment scaling: `--full` restores the paper's
+/// round/client counts; the default keeps the whole suite CPU-tractable.
+pub struct BenchScale {
+    pub full: bool,
+    pub rounds_iid: usize,
+    pub rounds_noniid: usize,
+    pub n_clients: usize,
+    pub eval_every: usize,
+    pub f_width: usize,
+    pub batch: usize,
+    pub samples_per_client: usize,
+    pub test_samples: usize,
+}
+
+impl BenchScale {
+    pub fn from_args(args: &crate::util::cli::Args) -> Self {
+        let full = args.flag("full");
+        if full {
+            Self {
+                full,
+                rounds_iid: 100,
+                rounds_noniid: 300,
+                n_clients: 30,
+                eval_every: 10,
+                f_width: 0, // 0 = use the real architecture width
+                batch: 64,
+                samples_per_client: 128,
+                test_samples: 1024,
+            }
+        } else {
+            Self {
+                full,
+                rounds_iid: args.usize("rounds", 30),
+                rounds_noniid: args.usize("rounds-noniid", 40),
+                n_clients: args.usize("clients", 10),
+                eval_every: args.usize("eval-every", 5),
+                f_width: args.usize("width", 32),
+                batch: args.usize("batch", 8),
+                samples_per_client: args.usize("samples", 48),
+                test_samples: args.usize("test-samples", 400),
+            }
+        }
+    }
+
+    /// Apply to a config (miniaturizes unless --full).
+    pub fn apply(&self, mut cfg: crate::fl::ExperimentConfig) -> crate::fl::ExperimentConfig {
+        cfg.n_clients = self.n_clients;
+        cfg.eval_every = self.eval_every;
+        cfg.samples_per_client = self.samples_per_client;
+        cfg.test_samples = self.test_samples;
+        if self.f_width > 0 {
+            cfg = cfg.miniaturize(self.f_width, self.batch);
+        }
+        cfg
+    }
+
+    /// Paper-defaults config for one (dataset, method) cell, IID split.
+    /// Shards scale with the class count so many-class datasets stay
+    /// learnable at the miniature width.
+    pub fn config(&self, dataset: &str, method: &str) -> crate::fl::ExperimentConfig {
+        let cfg = crate::fl::ExperimentConfig {
+            dataset: dataset.into(),
+            method: method.into(),
+            rounds: self.rounds_iid,
+            ..Default::default()
+        };
+        let mut cfg = self.apply(cfg);
+        let classes = crate::fl::data::profile(dataset).map(|p| p.classes).unwrap_or(10);
+        cfg.samples_per_client = cfg.samples_per_client.max(2 * classes);
+        cfg.test_samples = cfg.test_samples.max(4 * classes);
+        cfg
+    }
+
+    /// Non-IID variant: Dir(0.1) (paper §4).
+    pub fn config_noniid(&self, dataset: &str, method: &str) -> crate::fl::ExperimentConfig {
+        let mut cfg = self.config(dataset, method);
+        cfg.dirichlet_alpha = 0.1;
+        cfg.rounds = self.rounds_noniid;
+        cfg
+    }
+}
+
+/// The Tables 2/3 method roster, in the paper's row order.
+pub fn paper_methods() -> &'static [&'static str] {
+    &["linear_probing", "fine_tuning", "fedmask", "eden", "deepreduce", "fedpm", "deltamask"]
+}
+
+/// Dataset roster: the quick default covers 4 contrasting datasets, --all or
+/// --full runs the paper's 8.
+pub fn bench_datasets(args: &crate::util::cli::Args) -> Vec<&'static str> {
+    if args.flag("full") || args.flag("all") {
+        vec!["cifar10", "cifar100", "svhn", "emnist", "fmnist", "eurosat", "food101", "cars196"]
+    } else {
+        vec!["cifar10", "cifar100", "svhn", "eurosat"]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_and_table() {
+        let samples = time_fn(1, 5, || (0..1000u64).sum::<u64>());
+        assert_eq!(samples.len(), 5);
+        let t = summarize(&samples);
+        assert!(t.min <= t.mean + 1e-12);
+        let mut tab = Table::new("t", &["a", "b"]);
+        tab.row(vec!["1".into(), "2".into()]);
+        let j = tab.to_json().to_string_compact();
+        assert!(j.contains("\"rows\""));
+    }
+}

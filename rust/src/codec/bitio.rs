@@ -1,0 +1,200 @@
+//! LSB-first bit readers/writers as used by DEFLATE (RFC 1951 §3.1.1):
+//! data elements are packed starting from the least-significant bit of each
+//! byte; Huffman codes are packed most-significant-code-bit first, which the
+//! caller handles by reversing code bits.
+
+#[derive(Debug, Default)]
+pub struct BitWriter {
+    out: Vec<u8>,
+    bitbuf: u64,
+    bitcount: u32,
+}
+
+impl BitWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Write the low `n` bits of `value`, LSB-first.
+    #[inline]
+    pub fn write_bits(&mut self, value: u32, n: u32) {
+        debug_assert!(n <= 32);
+        debug_assert!(n == 32 || value < (1u32 << n));
+        self.bitbuf |= (value as u64) << self.bitcount;
+        self.bitcount += n;
+        while self.bitcount >= 8 {
+            self.out.push(self.bitbuf as u8);
+            self.bitbuf >>= 8;
+            self.bitcount -= 8;
+        }
+    }
+
+    /// Pad to a byte boundary with zero bits.
+    pub fn align_byte(&mut self) {
+        if self.bitcount > 0 {
+            self.out.push(self.bitbuf as u8);
+            self.bitbuf = 0;
+            self.bitcount = 0;
+        }
+    }
+
+    pub fn write_bytes(&mut self, bytes: &[u8]) {
+        debug_assert_eq!(self.bitcount, 0, "write_bytes requires byte alignment");
+        self.out.extend_from_slice(bytes);
+    }
+
+    pub fn finish(mut self) -> Vec<u8> {
+        self.align_byte();
+        self.out
+    }
+
+    pub fn bit_len(&self) -> usize {
+        self.out.len() * 8 + self.bitcount as usize
+    }
+}
+
+#[derive(Debug)]
+pub struct BitReader<'a> {
+    data: &'a [u8],
+    pos: usize,
+    bitbuf: u64,
+    bitcount: u32,
+}
+
+impl<'a> BitReader<'a> {
+    pub fn new(data: &'a [u8]) -> Self {
+        Self {
+            data,
+            pos: 0,
+            bitbuf: 0,
+            bitcount: 0,
+        }
+    }
+
+    #[inline]
+    fn refill(&mut self) {
+        while self.bitcount <= 56 && self.pos < self.data.len() {
+            self.bitbuf |= (self.data[self.pos] as u64) << self.bitcount;
+            self.pos += 1;
+            self.bitcount += 8;
+        }
+    }
+
+    /// Read `n` bits LSB-first. Reading past the end returns zero bits
+    /// (callers detect truncation at a higher level).
+    #[inline]
+    pub fn read_bits(&mut self, n: u32) -> u32 {
+        debug_assert!(n <= 32);
+        if n == 0 {
+            return 0;
+        }
+        self.refill();
+        let v = (self.bitbuf & ((1u64 << n) - 1)) as u32;
+        self.bitbuf >>= n;
+        self.bitcount = self.bitcount.saturating_sub(n);
+        v
+    }
+
+    /// Peek up to 16 bits without consuming.
+    #[inline]
+    pub fn peek_bits(&mut self, n: u32) -> u32 {
+        self.refill();
+        (self.bitbuf & ((1u64 << n) - 1)) as u32
+    }
+
+    #[inline]
+    pub fn consume(&mut self, n: u32) {
+        self.bitbuf >>= n;
+        self.bitcount = self.bitcount.saturating_sub(n);
+    }
+
+    pub fn align_byte(&mut self) {
+        let drop = self.bitcount % 8;
+        self.consume(drop);
+    }
+
+    /// Copy `n` bytes after byte alignment.
+    pub fn read_bytes(&mut self, n: usize) -> Option<Vec<u8>> {
+        debug_assert_eq!(self.bitcount % 8, 0);
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            self.refill();
+            if self.bitcount < 8 {
+                return None;
+            }
+            out.push(self.bitbuf as u8);
+            self.consume(8);
+        }
+        Some(out)
+    }
+
+    /// True if all input has been consumed (ignoring sub-byte padding).
+    pub fn exhausted(&mut self) -> bool {
+        self.pos >= self.data.len() && self.bitcount < 8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_mixed_widths() {
+        let mut w = BitWriter::new();
+        let pattern: Vec<(u32, u32)> = vec![
+            (0b1, 1),
+            (0b101, 3),
+            (0xff, 8),
+            (0x1234, 13),
+            (0, 2),
+            (0xabcd, 16),
+            (1, 1),
+        ];
+        for &(v, n) in &pattern {
+            w.write_bits(v & ((1 << n) - 1), n);
+        }
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        for &(v, n) in &pattern {
+            assert_eq!(r.read_bits(n), v & ((1 << n) - 1), "width {n}");
+        }
+    }
+
+    #[test]
+    fn byte_alignment_and_raw_bytes() {
+        let mut w = BitWriter::new();
+        w.write_bits(0b101, 3);
+        w.align_byte();
+        w.write_bytes(&[0xde, 0xad]);
+        let bytes = w.finish();
+        assert_eq!(bytes, vec![0b101, 0xde, 0xad]);
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.read_bits(3), 0b101);
+        r.align_byte();
+        assert_eq!(r.read_bytes(2).unwrap(), vec![0xde, 0xad]);
+        assert!(r.exhausted());
+    }
+
+    #[test]
+    fn peek_consume_equivalence() {
+        let mut w = BitWriter::new();
+        for i in 0..64u32 {
+            w.write_bits(i % 16, 4);
+        }
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        for i in 0..64u32 {
+            let p = r.peek_bits(4);
+            r.consume(4);
+            assert_eq!(p, i % 16);
+        }
+    }
+
+    #[test]
+    fn reading_past_end_returns_zeros() {
+        let mut r = BitReader::new(&[0xff]);
+        assert_eq!(r.read_bits(8), 0xff);
+        assert_eq!(r.read_bits(8), 0);
+        assert!(r.exhausted());
+    }
+}

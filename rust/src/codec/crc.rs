@@ -1,0 +1,118 @@
+//! CRC-32 (IEEE 802.3, as used by PNG) and Adler-32 (zlib), from scratch.
+//! Cross-validated against the `crc32fast` crate in tests only.
+
+/// CRC-32 lookup table (reflected polynomial 0xEDB88320), built at first use.
+struct Crc32Table([u32; 256]);
+
+impl Crc32Table {
+    const fn build() -> Self {
+        let mut table = [0u32; 256];
+        let mut i = 0;
+        while i < 256 {
+            let mut c = i as u32;
+            let mut k = 0;
+            while k < 8 {
+                c = if c & 1 != 0 { 0xedb8_8320 ^ (c >> 1) } else { c >> 1 };
+                k += 1;
+            }
+            table[i] = c;
+            i += 1;
+        }
+        Self(table)
+    }
+}
+
+static CRC_TABLE: Crc32Table = Crc32Table::build();
+
+/// Streaming CRC-32.
+#[derive(Clone, Debug)]
+pub struct Crc32 {
+    state: u32,
+}
+
+impl Default for Crc32 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Crc32 {
+    pub fn new() -> Self {
+        Self { state: 0xffff_ffff }
+    }
+
+    #[inline]
+    pub fn update(&mut self, data: &[u8]) {
+        let mut c = self.state;
+        for &b in data {
+            c = CRC_TABLE.0[((c ^ b as u32) & 0xff) as usize] ^ (c >> 8);
+        }
+        self.state = c;
+    }
+
+    pub fn finalize(&self) -> u32 {
+        self.state ^ 0xffff_ffff
+    }
+}
+
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut c = Crc32::new();
+    c.update(data);
+    c.finalize()
+}
+
+/// Adler-32 (RFC 1950 §8.2).
+pub fn adler32(data: &[u8]) -> u32 {
+    const MOD: u32 = 65_521;
+    let mut a: u32 = 1;
+    let mut b: u32 = 0;
+    // Process in chunks small enough to defer the modulo.
+    for chunk in data.chunks(5552) {
+        for &byte in chunk {
+            a += byte as u32;
+            b += a;
+        }
+        a %= MOD;
+        b %= MOD;
+    }
+    (b << 16) | a
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_known_vectors() {
+        assert_eq!(crc32(b""), 0);
+        assert_eq!(crc32(b"123456789"), 0xcbf4_3926);
+        assert_eq!(crc32(b"The quick brown fox jumps over the lazy dog"), 0x414f_a339);
+    }
+
+    #[test]
+    fn crc32_matches_crc32fast() {
+        let mut rng = crate::util::rng::Xoshiro256pp::new(1);
+        for len in [0usize, 1, 7, 255, 4096, 70_001] {
+            let data: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
+            let mut h = crc32fast::Hasher::new();
+            h.update(&data);
+            assert_eq!(crc32(&data), h.finalize(), "len={len}");
+        }
+    }
+
+    #[test]
+    fn crc32_streaming_equals_oneshot() {
+        let data: Vec<u8> = (0..10_000u32).map(|i| (i * 7) as u8).collect();
+        let mut c = Crc32::new();
+        for chunk in data.chunks(97) {
+            c.update(chunk);
+        }
+        assert_eq!(c.finalize(), crc32(&data));
+    }
+
+    #[test]
+    fn adler32_known_vectors() {
+        assert_eq!(adler32(b""), 1);
+        assert_eq!(adler32(b"Wikipedia"), 0x11e6_0398);
+    }
+}

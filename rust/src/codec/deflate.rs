@@ -1,0 +1,992 @@
+//! DEFLATE (RFC 1951) and zlib (RFC 1950), from scratch.
+//!
+//! This is the `Ψ(·)` lossless-compression stage of DeltaMask (§3.2): the
+//! binary-fuse fingerprint array is packed into a grayscale image whose
+//! pixel stream is DEFLATE-compressed, "taking advantage of possible
+//! non-uniform distributions of entries across the fingerprint locations".
+//!
+//! Compressor: greedy LZ77 with one-step lazy matching over a 32 KiB window
+//! (hash chains on 3-byte prefixes), then per-block choice between stored /
+//! fixed-Huffman / dynamic-Huffman, picking the cheapest. Decompressor
+//! handles all three block types with table-driven canonical Huffman
+//! decoding. Round-trips and cross-checks against `flate2` live in the
+//! tests.
+
+use super::bitio::{BitReader, BitWriter};
+use super::crc::adler32;
+
+const WINDOW: usize = 32 * 1024;
+const MIN_MATCH: usize = 3;
+const MAX_MATCH: usize = 258;
+const HASH_BITS: u32 = 15;
+const HASH_SIZE: usize = 1 << HASH_BITS;
+const MAX_CHAIN: usize = 128;
+const BLOCK_MAX: usize = 128 * 1024; // tokens per block before flushing
+
+// Length code table (RFC 1951 §3.2.5): code, extra bits, base length.
+const LEN_BASE: [u16; 29] = [
+    3, 4, 5, 6, 7, 8, 9, 10, 11, 13, 15, 17, 19, 23, 27, 31, 35, 43, 51, 59, 67, 83, 99, 115,
+    131, 163, 195, 227, 258,
+];
+const LEN_EXTRA: [u8; 29] = [
+    0, 0, 0, 0, 0, 0, 0, 0, 1, 1, 1, 1, 2, 2, 2, 2, 3, 3, 3, 3, 4, 4, 4, 4, 5, 5, 5, 5, 0,
+];
+const DIST_BASE: [u16; 30] = [
+    1, 2, 3, 4, 5, 7, 9, 13, 17, 25, 33, 49, 65, 97, 129, 193, 257, 385, 513, 769, 1025, 1537,
+    2049, 3073, 4097, 6145, 8193, 12289, 16385, 24577,
+];
+const DIST_EXTRA: [u8; 30] = [
+    0, 0, 0, 0, 1, 1, 2, 2, 3, 3, 4, 4, 5, 5, 6, 6, 7, 7, 8, 8, 9, 9, 10, 10, 11, 11, 12, 12,
+    13, 13,
+];
+/// Order in which code-length code lengths are stored (RFC 1951 §3.2.7).
+const CLC_ORDER: [usize; 19] = [
+    16, 17, 18, 0, 8, 7, 9, 6, 10, 5, 11, 4, 12, 3, 13, 2, 14, 1, 15,
+];
+
+#[inline]
+fn length_code(len: usize) -> usize {
+    debug_assert!((MIN_MATCH..=MAX_MATCH).contains(&len));
+    // Binary search over LEN_BASE (29 entries — a linear scan is fine too,
+    // but this is on the encode hot path).
+    let mut lo = 0usize;
+    let mut hi = 28usize;
+    while lo < hi {
+        let mid = (lo + hi + 1) / 2;
+        if LEN_BASE[mid] as usize <= len {
+            lo = mid;
+        } else {
+            hi = mid - 1;
+        }
+    }
+    // Length 255+3=258 belongs to code 285 (index 28), but lengths just
+    // below the next base stay in the lower bucket automatically.
+    if lo < 28 && (LEN_BASE[lo + 1] as usize) <= len {
+        lo + 1
+    } else {
+        lo
+    }
+}
+
+#[inline]
+fn dist_code(dist: usize) -> usize {
+    debug_assert!((1..=WINDOW).contains(&dist));
+    let mut lo = 0usize;
+    let mut hi = 29usize;
+    while lo < hi {
+        let mid = (lo + hi + 1) / 2;
+        if DIST_BASE[mid] as usize <= dist {
+            lo = mid;
+        } else {
+            hi = mid - 1;
+        }
+    }
+    lo
+}
+
+/// Reverse the low `n` bits of `code` (Huffman codes are emitted MSB-first
+/// into the LSB-first stream).
+#[inline]
+fn reverse_bits(code: u32, n: u32) -> u32 {
+    let mut c = code;
+    let mut out = 0u32;
+    for _ in 0..n {
+        out = (out << 1) | (c & 1);
+        c >>= 1;
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Canonical Huffman construction (encode side)
+// ---------------------------------------------------------------------------
+
+/// Compute length-limited Huffman code lengths for `freq` (max length 15)
+/// using the package-merge-free heuristic: build a true Huffman tree, and if
+/// any length exceeds the limit, flatten by incrementing shallower codes
+/// (the classic zlib `bl_count` adjustment).
+fn huffman_code_lengths(freq: &[u64], max_len: u32) -> Vec<u8> {
+    let n = freq.len();
+    let mut lens = vec![0u8; n];
+    let active: Vec<usize> = (0..n).filter(|&i| freq[i] > 0).collect();
+    match active.len() {
+        0 => return lens,
+        1 => {
+            lens[active[0]] = 1;
+            return lens;
+        }
+        _ => {}
+    }
+
+    // Heap-based Huffman tree over (weight, node). Parent pointers give depths.
+    #[derive(Eq, PartialEq)]
+    struct Item(u64, usize); // (weight, node id)
+    impl Ord for Item {
+        fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+            other.0.cmp(&self.0).then(other.1.cmp(&self.1)) // min-heap
+        }
+    }
+    impl PartialOrd for Item {
+        fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+            Some(self.cmp(other))
+        }
+    }
+
+    let mut parent = vec![usize::MAX; active.len() * 2];
+    let mut heap = std::collections::BinaryHeap::new();
+    for (node, &sym) in active.iter().enumerate() {
+        heap.push(Item(freq[sym], node));
+    }
+    let mut next = active.len();
+    while heap.len() > 1 {
+        let a = heap.pop().unwrap();
+        let b = heap.pop().unwrap();
+        parent[a.1] = next;
+        parent[b.1] = next;
+        heap.push(Item(a.0 + b.0, next));
+        next += 1;
+    }
+
+    // Depth of each leaf.
+    let mut depth = vec![0u32; next];
+    for node in (0..next - 1).rev() {
+        depth[node] = depth[parent[node]] + 1;
+    }
+    for (node, &sym) in active.iter().enumerate() {
+        lens[sym] = depth[node].max(1) as u8;
+    }
+
+    // Enforce the length limit with a Kraft repair: clamp, then while the
+    // Kraft sum exceeds 1, deepen the deepest non-max symbol (each bump of
+    // a symbol at depth l < max reduces the sum by 2^-(l+1)). Canonical
+    // assignment tolerates the slight under-subscription this can leave.
+    let max = max_len as u8;
+    for l in lens.iter_mut() {
+        if *l > max {
+            *l = max;
+        }
+    }
+    let unit = 1u64 << max_len; // Kraft budget scaled by 2^max
+    loop {
+        let kraft: u64 = lens
+            .iter()
+            .filter(|&&l| l > 0)
+            .map(|&l| unit >> l)
+            .sum();
+        if kraft <= unit {
+            break;
+        }
+        // Deepest symbol strictly below the limit (prefer high-frequency
+        // preservation by scanning for the *least* frequent candidate).
+        let mut pick: Option<usize> = None;
+        for &sym in &active {
+            if lens[sym] < max {
+                pick = match pick {
+                    Some(p)
+                        if (lens[p], std::cmp::Reverse(freq[p]))
+                            >= (lens[sym], std::cmp::Reverse(freq[sym])) =>
+                    {
+                        Some(p)
+                    }
+                    _ => Some(sym),
+                };
+            }
+        }
+        let Some(p) = pick else {
+            unreachable!("length limit infeasible: more symbols than 2^max")
+        };
+        lens[p] += 1;
+    }
+    lens
+}
+
+/// Canonical code assignment from lengths (RFC 1951 §3.2.2). Returns
+/// per-symbol (code, len) with code bits already reversed for LSB-first
+/// emission.
+fn canonical_codes(lens: &[u8]) -> Vec<(u32, u8)> {
+    let max_len = lens.iter().cloned().max().unwrap_or(0) as usize;
+    let mut bl_count = vec![0u32; max_len + 1];
+    for &l in lens {
+        if l > 0 {
+            bl_count[l as usize] += 1;
+        }
+    }
+    let mut next_code = vec![0u32; max_len + 2];
+    let mut code = 0u32;
+    for bits in 1..=max_len {
+        code = (code + bl_count[bits - 1]) << 1;
+        next_code[bits] = code;
+    }
+    lens.iter()
+        .map(|&l| {
+            if l == 0 {
+                (0, 0)
+            } else {
+                let c = next_code[l as usize];
+                next_code[l as usize] += 1;
+                (reverse_bits(c, l as u32), l)
+            }
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Huffman decoding tables (decode side)
+// ---------------------------------------------------------------------------
+
+/// Flat single-level decode table: index by the next `max_len` bits
+/// (LSB-first), yields (symbol, length). 15-bit max ⇒ ≤ 32768 entries.
+struct DecodeTable {
+    lookup: Vec<u16>, // (len << 12) | symbol  — symbols < 4096, len <= 15
+    max_len: u32,
+}
+
+impl DecodeTable {
+    fn build(lens: &[u8]) -> Result<Self, String> {
+        let max_len = lens.iter().cloned().max().unwrap_or(0) as u32;
+        if max_len == 0 {
+            return Ok(Self {
+                lookup: vec![0],
+                max_len: 0,
+            });
+        }
+        if max_len > 15 {
+            return Err("code length > 15".into());
+        }
+        let codes = canonical_codes(lens);
+        let mut lookup = vec![u16::MAX; 1usize << max_len];
+        for (sym, &(code, len)) in codes.iter().enumerate() {
+            if len == 0 {
+                continue;
+            }
+            // `code` is already bit-reversed; fill every table slot whose low
+            // `len` bits equal it.
+            let step = 1usize << len;
+            let mut idx = code as usize;
+            while idx < lookup.len() {
+                if lookup[idx] != u16::MAX {
+                    return Err("over-subscribed Huffman code".into());
+                }
+                lookup[idx] = ((len as u16) << 12) | sym as u16;
+                idx += step;
+            }
+        }
+        Ok(Self { lookup, max_len })
+    }
+
+    #[inline]
+    fn decode(&self, reader: &mut BitReader) -> Result<u16, String> {
+        if self.max_len == 0 {
+            return Err("decode from empty table".into());
+        }
+        let peek = reader.peek_bits(self.max_len);
+        let entry = self.lookup[peek as usize];
+        if entry == u16::MAX {
+            return Err("invalid Huffman code".into());
+        }
+        let len = (entry >> 12) as u32;
+        reader.consume(len);
+        Ok(entry & 0x0fff)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// LZ77 tokenization
+// ---------------------------------------------------------------------------
+
+enum Token {
+    Literal(u8),
+    Match { len: u16, dist: u16 },
+}
+
+struct Lz77 {
+    head: Vec<i32>,
+    prev: Vec<i32>,
+}
+
+impl Lz77 {
+    fn new(n: usize) -> Self {
+        Self {
+            head: vec![-1; HASH_SIZE],
+            prev: vec![-1; n],
+        }
+    }
+
+    #[inline]
+    fn hash(data: &[u8], i: usize) -> usize {
+        let h = (data[i] as u32) | ((data[i + 1] as u32) << 8) | ((data[i + 2] as u32) << 16);
+        ((h.wrapping_mul(0x9e37_79b1)) >> (32 - HASH_BITS)) as usize
+    }
+
+    #[inline]
+    fn insert(&mut self, data: &[u8], i: usize) {
+        if i + MIN_MATCH <= data.len() {
+            let h = Self::hash(data, i);
+            self.prev[i] = self.head[h];
+            self.head[h] = i as i32;
+        }
+    }
+
+    /// Longest match at `pos` within the window; returns (len, dist).
+    fn best_match(&self, data: &[u8], pos: usize) -> (usize, usize) {
+        if pos + MIN_MATCH > data.len() {
+            return (0, 0);
+        }
+        let max_len = (data.len() - pos).min(MAX_MATCH);
+        let mut best_len = MIN_MATCH - 1;
+        let mut best_dist = 0usize;
+        let mut cand = self.head[Self::hash(data, pos)];
+        let min_pos = pos.saturating_sub(WINDOW) as i32;
+        let mut chain = 0usize;
+        while cand >= min_pos && cand >= 0 && chain < MAX_CHAIN {
+            let c = cand as usize;
+            if c < pos {
+                // Quick reject on the byte that would extend the best match.
+                if pos + best_len < data.len()
+                    && data[c + best_len] == data[pos + best_len]
+                {
+                    let mut l = 0usize;
+                    while l < max_len && data[c + l] == data[pos + l] {
+                        l += 1;
+                    }
+                    if l > best_len {
+                        best_len = l;
+                        best_dist = pos - c;
+                        if l >= max_len {
+                            break;
+                        }
+                    }
+                }
+            }
+            cand = self.prev[cand as usize];
+            chain += 1;
+        }
+        if best_len >= MIN_MATCH {
+            (best_len, best_dist)
+        } else {
+            (0, 0)
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Block emission
+// ---------------------------------------------------------------------------
+
+fn fixed_litlen_lens() -> Vec<u8> {
+    let mut lens = vec![0u8; 288];
+    for (i, l) in lens.iter_mut().enumerate() {
+        *l = match i {
+            0..=143 => 8,
+            144..=255 => 9,
+            256..=279 => 7,
+            _ => 8,
+        };
+    }
+    lens
+}
+
+fn fixed_dist_lens() -> Vec<u8> {
+    vec![5u8; 30]
+}
+
+struct BlockStats {
+    lit_freq: [u64; 286],
+    dist_freq: [u64; 30],
+}
+
+impl BlockStats {
+    fn new() -> Self {
+        Self {
+            lit_freq: [0; 286],
+            dist_freq: [0; 30],
+        }
+    }
+
+    fn tally(&mut self, tok: &Token) {
+        match tok {
+            Token::Literal(b) => self.lit_freq[*b as usize] += 1,
+            Token::Match { len, dist } => {
+                self.lit_freq[257 + length_code(*len as usize)] += 1;
+                self.dist_freq[dist_code(*dist as usize)] += 1;
+            }
+        }
+    }
+}
+
+fn emit_tokens(
+    w: &mut BitWriter,
+    tokens: &[Token],
+    lit_codes: &[(u32, u8)],
+    dist_codes: &[(u32, u8)],
+) {
+    for tok in tokens {
+        match tok {
+            Token::Literal(b) => {
+                let (c, l) = lit_codes[*b as usize];
+                w.write_bits(c, l as u32);
+            }
+            Token::Match { len, dist } => {
+                let lc = length_code(*len as usize);
+                let (c, l) = lit_codes[257 + lc];
+                w.write_bits(c, l as u32);
+                let extra = LEN_EXTRA[lc] as u32;
+                if extra > 0 {
+                    w.write_bits((*len as u32) - LEN_BASE[lc] as u32, extra);
+                }
+                let dc = dist_code(*dist as usize);
+                let (c, l) = dist_codes[dc];
+                w.write_bits(c, l as u32);
+                let extra = DIST_EXTRA[dc] as u32;
+                if extra > 0 {
+                    w.write_bits((*dist as u32) - DIST_BASE[dc] as u32, extra);
+                }
+            }
+        }
+    }
+    // End-of-block.
+    let (c, l) = lit_codes[256];
+    w.write_bits(c, l as u32);
+}
+
+/// Cost in bits of coding `stats` under the given code lengths.
+fn token_cost(stats: &BlockStats, lit_lens: &[u8], dist_lens: &[u8]) -> u64 {
+    let mut bits = 0u64;
+    for (sym, &f) in stats.lit_freq.iter().enumerate() {
+        if f == 0 {
+            continue;
+        }
+        bits += f * lit_lens[sym] as u64;
+        if sym > 256 {
+            bits += f * LEN_EXTRA[sym - 257] as u64;
+        }
+    }
+    for (sym, &f) in stats.dist_freq.iter().enumerate() {
+        if f > 0 {
+            bits += f * (dist_lens[sym] as u64 + DIST_EXTRA[sym] as u64);
+        }
+    }
+    bits + lit_lens[256] as u64 // EOB
+}
+
+/// RLE-encode the lit+dist code-length sequence with symbols 16/17/18
+/// (RFC 1951 §3.2.7). Returns (symbols, extra bits) pairs.
+fn encode_code_lengths(all_lens: &[u8]) -> Vec<(u8, u8, u8)> {
+    // (symbol, extra_value, extra_bits)
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < all_lens.len() {
+        let cur = all_lens[i];
+        let mut run = 1usize;
+        while i + run < all_lens.len() && all_lens[i + run] == cur {
+            run += 1;
+        }
+        if cur == 0 {
+            let mut r = run;
+            while r >= 11 {
+                let take = r.min(138);
+                out.push((18, (take - 11) as u8, 7));
+                r -= take;
+            }
+            if r >= 3 {
+                out.push((17, (r - 3) as u8, 3));
+                r = 0;
+            }
+            for _ in 0..r {
+                out.push((0, 0, 0));
+            }
+        } else {
+            out.push((cur, 0, 0));
+            let mut r = run - 1;
+            while r >= 3 {
+                let take = r.min(6);
+                out.push((16, (take - 3) as u8, 2));
+                r -= take;
+            }
+            for _ in 0..r {
+                out.push((cur, 0, 0));
+            }
+        }
+        i += run;
+    }
+    out
+}
+
+fn write_dynamic_header(w: &mut BitWriter, lit_lens: &[u8], dist_lens: &[u8]) {
+    // HLIT/HDIST trimming.
+    let hlit = {
+        let mut n = 286;
+        while n > 257 && lit_lens[n - 1] == 0 {
+            n -= 1;
+        }
+        n
+    };
+    let hdist = {
+        let mut n = 30;
+        while n > 1 && dist_lens[n - 1] == 0 {
+            n -= 1;
+        }
+        n
+    };
+    let mut all = Vec::with_capacity(hlit + hdist);
+    all.extend_from_slice(&lit_lens[..hlit]);
+    all.extend_from_slice(&dist_lens[..hdist]);
+    let rle = encode_code_lengths(&all);
+
+    let mut clc_freq = [0u64; 19];
+    for &(sym, _, _) in &rle {
+        clc_freq[sym as usize] += 1;
+    }
+    let clc_lens = huffman_code_lengths(&clc_freq, 7);
+    let clc_codes = canonical_codes(&clc_lens);
+
+    let hclen = {
+        let mut n = 19;
+        while n > 4 && clc_lens[CLC_ORDER[n - 1]] == 0 {
+            n -= 1;
+        }
+        n
+    };
+
+    w.write_bits((hlit - 257) as u32, 5);
+    w.write_bits((hdist - 1) as u32, 5);
+    w.write_bits((hclen - 4) as u32, 4);
+    for &ord in CLC_ORDER.iter().take(hclen) {
+        w.write_bits(clc_lens[ord] as u32, 3);
+    }
+    for &(sym, extra, ebits) in &rle {
+        let (c, l) = clc_codes[sym as usize];
+        w.write_bits(c, l as u32);
+        if ebits > 0 {
+            w.write_bits(extra as u32, ebits as u32);
+        }
+    }
+}
+
+/// Cost in bits of the dynamic header for these code lengths.
+fn dynamic_header_cost(lit_lens: &[u8], dist_lens: &[u8]) -> u64 {
+    let hlit = {
+        let mut n = 286;
+        while n > 257 && lit_lens[n - 1] == 0 {
+            n -= 1;
+        }
+        n
+    };
+    let hdist = {
+        let mut n = 30;
+        while n > 1 && dist_lens[n - 1] == 0 {
+            n -= 1;
+        }
+        n
+    };
+    let mut all = Vec::with_capacity(hlit + hdist);
+    all.extend_from_slice(&lit_lens[..hlit]);
+    all.extend_from_slice(&dist_lens[..hdist]);
+    let rle = encode_code_lengths(&all);
+    let mut clc_freq = [0u64; 19];
+    for &(sym, _, _) in &rle {
+        clc_freq[sym as usize] += 1;
+    }
+    let clc_lens = huffman_code_lengths(&clc_freq, 7);
+    let hclen = {
+        let mut n = 19;
+        while n > 4 && clc_lens[CLC_ORDER[n - 1]] == 0 {
+            n -= 1;
+        }
+        n
+    };
+    let mut bits = 5 + 5 + 4 + 3 * hclen as u64;
+    for &(sym, _, ebits) in &rle {
+        bits += clc_lens[sym as usize] as u64 + ebits as u64;
+    }
+    bits
+}
+
+// ---------------------------------------------------------------------------
+// Public API
+// ---------------------------------------------------------------------------
+
+/// Raw DEFLATE compression.
+pub fn deflate(data: &[u8]) -> Vec<u8> {
+    let mut w = BitWriter::new();
+    if data.is_empty() {
+        // Single empty fixed-Huffman block: BFINAL=1, BTYPE=01, EOB.
+        w.write_bits(1, 1);
+        w.write_bits(1, 2);
+        let codes = canonical_codes(&fixed_litlen_lens());
+        let (c, l) = codes[256];
+        w.write_bits(c, l as u32);
+        return w.finish();
+    }
+
+    let mut lz = Lz77::new(data.len());
+    let mut pos = 0usize;
+    let mut tokens: Vec<Token> = Vec::with_capacity(BLOCK_MAX);
+    let mut stats = BlockStats::new();
+    let mut block_start = 0usize;
+
+    while pos < data.len() {
+        let (len, dist) = lz.best_match(data, pos);
+        let tok = if len >= MIN_MATCH {
+            // One-step lazy matching: prefer a longer match at pos+1.
+            let (len2, _) = if pos + 1 < data.len() {
+                lz.best_match(data, pos + 1)
+            } else {
+                (0, 0)
+            };
+            if len2 > len + 1 {
+                lz.insert(data, pos);
+                pos += 1;
+                Token::Literal(data[pos - 1])
+            } else {
+                for i in 0..len {
+                    lz.insert(data, pos + i);
+                }
+                pos += len;
+                Token::Match {
+                    len: len as u16,
+                    dist: dist as u16,
+                }
+            }
+        } else {
+            lz.insert(data, pos);
+            pos += 1;
+            Token::Literal(data[pos - 1])
+        };
+        stats.tally(&tok);
+        tokens.push(tok);
+
+        if tokens.len() >= BLOCK_MAX || pos >= data.len() {
+            let is_final = pos >= data.len();
+            flush_block(
+                &mut w,
+                &tokens,
+                &stats,
+                &data[block_start..pos],
+                is_final,
+            );
+            tokens.clear();
+            stats = BlockStats::new();
+            block_start = pos;
+        }
+    }
+    w.finish()
+}
+
+fn flush_block(
+    w: &mut BitWriter,
+    tokens: &[Token],
+    stats: &BlockStats,
+    raw: &[u8],
+    is_final: bool,
+) {
+    // Candidate 1: dynamic Huffman.
+    let mut lit_freq = stats.lit_freq;
+    lit_freq[256] += 1; // EOB
+    let lit_lens = huffman_code_lengths(&lit_freq, 15);
+    let mut dist_freq_v = stats.dist_freq.to_vec();
+    if dist_freq_v.iter().all(|&f| f == 0) {
+        dist_freq_v[0] = 1; // at least one dist code must exist
+    }
+    let dist_lens = huffman_code_lengths(&dist_freq_v, 15);
+    let dyn_cost = dynamic_header_cost(&lit_lens, &dist_lens)
+        + token_cost(stats, &lit_lens, &dist_lens);
+
+    // Candidate 2: fixed Huffman.
+    let fixed_lit = fixed_litlen_lens();
+    let fixed_dist = fixed_dist_lens();
+    let fixed_cost = token_cost(stats, &fixed_lit, &fixed_dist);
+
+    // Candidate 3: stored (only meaningful vs. both).
+    let stored_cost = 8 * (raw.len() as u64 + 5) + 8; // + alignment slack
+
+    let bfinal = if is_final { 1 } else { 0 };
+    if stored_cost < dyn_cost.min(fixed_cost) {
+        w.write_bits(bfinal, 1);
+        w.write_bits(0, 2);
+        w.align_byte();
+        let len = raw.len() as u32;
+        w.write_bits(len & 0xffff, 16);
+        w.write_bits(!len & 0xffff, 16);
+        w.write_bytes(raw);
+    } else if fixed_cost <= dyn_cost {
+        w.write_bits(bfinal, 1);
+        w.write_bits(1, 2);
+        let lit_codes = canonical_codes(&fixed_lit);
+        let dist_codes = canonical_codes(&fixed_dist);
+        emit_tokens(w, tokens, &lit_codes, &dist_codes);
+    } else {
+        w.write_bits(bfinal, 1);
+        w.write_bits(2, 2);
+        write_dynamic_header(w, &lit_lens, &dist_lens);
+        let lit_codes = canonical_codes(&lit_lens);
+        let dist_codes = canonical_codes(&dist_lens);
+        emit_tokens(w, tokens, &lit_codes, &dist_codes);
+    }
+}
+
+/// Raw DEFLATE decompression.
+pub fn inflate(data: &[u8]) -> Result<Vec<u8>, String> {
+    let mut r = BitReader::new(data);
+    let mut out: Vec<u8> = Vec::with_capacity(data.len() * 4);
+    loop {
+        let bfinal = r.read_bits(1);
+        let btype = r.read_bits(2);
+        match btype {
+            0 => {
+                r.align_byte();
+                let len = r.read_bits(16) as usize;
+                let nlen = r.read_bits(16) as usize;
+                if len != (!nlen & 0xffff) {
+                    return Err("stored block LEN/NLEN mismatch".into());
+                }
+                let bytes = r.read_bytes(len).ok_or("truncated stored block")?;
+                out.extend_from_slice(&bytes);
+            }
+            1 => {
+                let lit = DecodeTable::build(&fixed_litlen_lens())?;
+                let dist = DecodeTable::build(&fixed_dist_lens())?;
+                inflate_block(&mut r, &lit, &dist, &mut out)?;
+            }
+            2 => {
+                let hlit = r.read_bits(5) as usize + 257;
+                let hdist = r.read_bits(5) as usize + 1;
+                let hclen = r.read_bits(4) as usize + 4;
+                let mut clc_lens = [0u8; 19];
+                for &ord in CLC_ORDER.iter().take(hclen) {
+                    clc_lens[ord] = r.read_bits(3) as u8;
+                }
+                let clc = DecodeTable::build(&clc_lens)?;
+                let mut all = Vec::with_capacity(hlit + hdist);
+                while all.len() < hlit + hdist {
+                    let sym = clc.decode(&mut r)?;
+                    match sym {
+                        0..=15 => all.push(sym as u8),
+                        16 => {
+                            let prev = *all.last().ok_or("repeat with no previous length")?;
+                            let n = 3 + r.read_bits(2) as usize;
+                            for _ in 0..n {
+                                all.push(prev);
+                            }
+                        }
+                        17 => {
+                            let n = 3 + r.read_bits(3) as usize;
+                            for _ in 0..n {
+                                all.push(0);
+                            }
+                        }
+                        18 => {
+                            let n = 11 + r.read_bits(7) as usize;
+                            for _ in 0..n {
+                                all.push(0);
+                            }
+                        }
+                        _ => return Err("bad code-length symbol".into()),
+                    }
+                }
+                if all.len() != hlit + hdist {
+                    return Err("code-length overrun".into());
+                }
+                let lit = DecodeTable::build(&all[..hlit])?;
+                let dist = DecodeTable::build(&all[hlit..])?;
+                inflate_block(&mut r, &lit, &dist, &mut out)?;
+            }
+            _ => return Err("reserved block type".into()),
+        }
+        if bfinal == 1 {
+            return Ok(out);
+        }
+    }
+}
+
+fn inflate_block(
+    r: &mut BitReader,
+    lit: &DecodeTable,
+    dist: &DecodeTable,
+    out: &mut Vec<u8>,
+) -> Result<(), String> {
+    loop {
+        let sym = lit.decode(r)?;
+        match sym {
+            0..=255 => out.push(sym as u8),
+            256 => return Ok(()),
+            257..=285 => {
+                let lc = (sym - 257) as usize;
+                let len = LEN_BASE[lc] as usize + r.read_bits(LEN_EXTRA[lc] as u32) as usize;
+                let dsym = dist.decode(r)? as usize;
+                if dsym >= 30 {
+                    return Err("bad distance symbol".into());
+                }
+                let d = DIST_BASE[dsym] as usize + r.read_bits(DIST_EXTRA[dsym] as u32) as usize;
+                if d > out.len() {
+                    return Err("distance beyond output".into());
+                }
+                let start = out.len() - d;
+                for i in 0..len {
+                    let b = out[start + i];
+                    out.push(b);
+                }
+            }
+            _ => return Err("bad literal/length symbol".into()),
+        }
+    }
+}
+
+/// zlib (RFC 1950) container around DEFLATE.
+pub fn zlib_compress(data: &[u8]) -> Vec<u8> {
+    let mut out = vec![0x78, 0x9c]; // CMF/FLG: 32K window, default level
+    out.extend_from_slice(&deflate(data));
+    out.extend_from_slice(&adler32(data).to_be_bytes());
+    out
+}
+
+pub fn zlib_decompress(data: &[u8]) -> Result<Vec<u8>, String> {
+    if data.len() < 6 {
+        return Err("zlib stream too short".into());
+    }
+    let cmf = data[0];
+    let flg = data[1];
+    if cmf & 0x0f != 8 {
+        return Err("unsupported zlib method".into());
+    }
+    if ((cmf as u16) << 8 | flg as u16) % 31 != 0 {
+        return Err("zlib header check failed".into());
+    }
+    if flg & 0x20 != 0 {
+        return Err("preset dictionary unsupported".into());
+    }
+    let body = &data[2..data.len() - 4];
+    let out = inflate(body)?;
+    let expect = u32::from_be_bytes(data[data.len() - 4..].try_into().unwrap());
+    if adler32(&out) != expect {
+        return Err("adler32 mismatch".into());
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256pp;
+    use std::io::{Read, Write};
+
+    fn sample_payloads() -> Vec<Vec<u8>> {
+        let mut rng = Xoshiro256pp::new(42);
+        let mut out: Vec<Vec<u8>> = vec![
+            vec![],
+            b"a".to_vec(),
+            b"aaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaa".to_vec(),
+            b"DeltaMask binary fuse fingerprints ".repeat(50),
+            (0..=255u8).collect(),
+        ];
+        // Uniform random (incompressible — exercises stored blocks).
+        out.push((0..10_000).map(|_| rng.next_u64() as u8).collect());
+        // Skewed random (exercises dynamic Huffman): geometric-ish bytes.
+        out.push(
+            (0..50_000)
+                .map(|_| {
+                    let u = rng.next_f32();
+                    (-(1.0 - u).ln() * 8.0) as u8
+                })
+                .collect(),
+        );
+        // Long runs + periodic structure (exercises LZ77 matches).
+        let mut v = Vec::new();
+        for i in 0..2_000u32 {
+            v.extend_from_slice(&[(i % 7) as u8; 37]);
+        }
+        out.push(v);
+        // A realistic BFuse8 payload: mostly non-uniform small bytes.
+        let keys: Vec<u64> = (0..5_000u64).map(|_| rng.next_u64() % 327_680).collect();
+        if let Some(f) = crate::filters::BinaryFuse::<u8, 4>::build(&keys) {
+            out.push(f.payload());
+        }
+        out
+    }
+
+    #[test]
+    fn roundtrip_own_inflate() {
+        for (i, data) in sample_payloads().iter().enumerate() {
+            let comp = deflate(data);
+            let back = inflate(&comp).unwrap_or_else(|e| panic!("case {i}: {e}"));
+            assert_eq!(&back, data, "case {i}");
+        }
+    }
+
+    #[test]
+    fn zlib_roundtrip() {
+        for data in sample_payloads() {
+            let z = zlib_compress(&data);
+            assert_eq!(zlib_decompress(&z).unwrap(), data);
+        }
+    }
+
+    #[test]
+    fn our_deflate_readable_by_flate2() {
+        for (i, data) in sample_payloads().iter().enumerate() {
+            let z = zlib_compress(data);
+            let mut dec = flate2::read::ZlibDecoder::new(&z[..]);
+            let mut back = Vec::new();
+            dec.read_to_end(&mut back)
+                .unwrap_or_else(|e| panic!("case {i}: flate2 rejected our stream: {e}"));
+            assert_eq!(&back, data, "case {i}");
+        }
+    }
+
+    #[test]
+    fn our_inflate_reads_flate2_output() {
+        for (i, data) in sample_payloads().iter().enumerate() {
+            let mut enc =
+                flate2::write::ZlibEncoder::new(Vec::new(), flate2::Compression::best());
+            enc.write_all(data).unwrap();
+            let z = enc.finish().unwrap();
+            let back = zlib_decompress(&z).unwrap_or_else(|e| panic!("case {i}: {e}"));
+            assert_eq!(&back, data, "case {i}");
+        }
+    }
+
+    #[test]
+    fn compresses_skewed_data() {
+        // Entropy sanity: a heavily skewed stream must compress well below 1 byte/byte.
+        let data: Vec<u8> = (0..100_000)
+            .map(|i| if i % 10 == 0 { 1u8 } else { 0u8 })
+            .collect();
+        let comp = deflate(&data);
+        assert!(
+            comp.len() < data.len() / 10,
+            "ratio {}",
+            comp.len() as f64 / data.len() as f64
+        );
+    }
+
+    #[test]
+    fn stored_fallback_for_random_data() {
+        let mut rng = Xoshiro256pp::new(9);
+        let data: Vec<u8> = (0..65_536).map(|_| rng.next_u64() as u8).collect();
+        let comp = deflate(&data);
+        // Must not blow up: ≤ input + small block overhead.
+        assert!(comp.len() <= data.len() + 64, "len={}", comp.len());
+    }
+
+    #[test]
+    fn inflate_rejects_garbage() {
+        assert!(inflate(&[0x07, 0xff, 0xff, 0x12]).is_err());
+        assert!(zlib_decompress(&[0x78, 0x9c, 0, 0, 0, 0, 0]).is_err());
+        // Valid header, corrupted adler.
+        let mut z = zlib_compress(b"hello world hello world");
+        let n = z.len();
+        z[n - 1] ^= 0xff;
+        assert!(zlib_decompress(&z).is_err());
+    }
+
+    #[test]
+    fn multi_block_boundary() {
+        // Force multiple blocks by exceeding BLOCK_MAX tokens.
+        let mut rng = Xoshiro256pp::new(17);
+        let data: Vec<u8> = (0..300_000)
+            .map(|_| (rng.next_f32() * 4.0) as u8)
+            .collect();
+        let comp = deflate(&data);
+        assert_eq!(inflate(&comp).unwrap(), data);
+    }
+}

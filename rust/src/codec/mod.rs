@@ -1,0 +1,18 @@
+//! Lossless coding substrates, all from scratch:
+//!
+//! * [`bitio`] — LSB-first bit streams (DEFLATE's bit order).
+//! * [`crc`] — CRC-32 (PNG chunks) and Adler-32 (zlib trailer).
+//! * [`deflate`] — RFC 1951 compressor (LZ77 + fixed/dynamic Huffman) and
+//!   a full inflater, plus the RFC 1950 zlib container. This is the `Ψ(·)`
+//!   lossless step of the paper (§3.2: "lossless image compression
+//!   techniques such as DEFLATE").
+//! * [`png`] — minimal grayscale-8 PNG encoder/decoder: the `A_{k,t}`
+//!   "single grayscale image" that carries the fingerprint array.
+//! * [`arith`] — adaptive binary arithmetic coder (Rissanen–Langdon), the
+//!   sub-1bpp entropy coder FedPM uses for sparse binary masks.
+
+pub mod arith;
+pub mod bitio;
+pub mod crc;
+pub mod deflate;
+pub mod png;

@@ -1,0 +1,312 @@
+//! Minimal PNG (ISO/IEC 15948) encoder/decoder for **8-bit grayscale**
+//! images — the `A_{k,t}` carrier of DeltaMask (§3.2): the binary fuse
+//! fingerprint array is reshaped into a near-square grayscale image and
+//! compressed losslessly (PNG = scanline filtering + DEFLATE/zlib).
+//!
+//! The five standard scanline filters (None/Sub/Up/Average/Paeth) are
+//! implemented with the minimum-sum-of-absolute-differences heuristic, which
+//! is what lets PNG exploit "non-uniform distributions of entries across the
+//! fingerprint locations" beyond raw DEFLATE.
+
+use super::crc::crc32;
+use super::deflate::{zlib_compress, zlib_decompress};
+
+const PNG_SIG: [u8; 8] = [0x89, b'P', b'N', b'G', b'\r', b'\n', 0x1a, b'\n'];
+
+/// An 8-bit grayscale image.
+#[derive(Clone, Debug, PartialEq)]
+pub struct GrayImage {
+    pub width: u32,
+    pub height: u32,
+    pub pixels: Vec<u8>, // row-major, width*height
+}
+
+impl GrayImage {
+    pub fn new(width: u32, height: u32, pixels: Vec<u8>) -> Self {
+        assert_eq!(pixels.len(), (width * height) as usize);
+        Self {
+            width,
+            height,
+            pixels,
+        }
+    }
+
+    /// Pack an arbitrary byte payload into a near-square image, padding the
+    /// tail with zeros. The true byte length travels in the DeltaMask record
+    /// header, not the image.
+    pub fn from_payload(payload: &[u8]) -> Self {
+        let n = payload.len().max(1);
+        let width = (n as f64).sqrt().ceil() as u32;
+        let height = (n as u32).div_ceil(width).max(1);
+        let mut pixels = vec![0u8; (width * height) as usize];
+        pixels[..payload.len()].copy_from_slice(payload);
+        Self {
+            width,
+            height,
+            pixels,
+        }
+    }
+
+    pub fn payload(&self, len: usize) -> &[u8] {
+        &self.pixels[..len]
+    }
+}
+
+fn paeth(a: i32, b: i32, c: i32) -> u8 {
+    let p = a + b - c;
+    let pa = (p - a).abs();
+    let pb = (p - b).abs();
+    let pc = (p - c).abs();
+    if pa <= pb && pa <= pc {
+        a as u8
+    } else if pb <= pc {
+        b as u8
+    } else {
+        c as u8
+    }
+}
+
+/// Apply filter `ft` to `row` given `prev` row; returns filtered bytes.
+fn filter_row(ft: u8, row: &[u8], prev: &[u8]) -> Vec<u8> {
+    let w = row.len();
+    let mut out = Vec::with_capacity(w);
+    for i in 0..w {
+        let x = row[i] as i32;
+        let a = if i > 0 { row[i - 1] as i32 } else { 0 };
+        let b = prev[i] as i32;
+        let c = if i > 0 { prev[i - 1] as i32 } else { 0 };
+        let f = match ft {
+            0 => x,
+            1 => x - a,
+            2 => x - b,
+            3 => x - (a + b) / 2,
+            4 => x - paeth(a, b, c) as i32,
+            _ => unreachable!(),
+        };
+        out.push(f as u8);
+    }
+    out
+}
+
+fn unfilter_row(ft: u8, row: &mut [u8], prev: &[u8]) -> Result<(), String> {
+    let w = row.len();
+    for i in 0..w {
+        let a = if i > 0 { row[i - 1] as i32 } else { 0 };
+        let b = prev[i] as i32;
+        let c = if i > 0 { prev[i - 1] as i32 } else { 0 };
+        let f = row[i] as i32;
+        row[i] = match ft {
+            0 => f as u8,
+            1 => (f + a) as u8,
+            2 => (f + b) as u8,
+            3 => (f + (a + b) / 2) as u8,
+            4 => (f + paeth(a, b, c) as i32) as u8,
+            _ => return Err(format!("bad filter type {ft}")),
+        };
+    }
+    Ok(())
+}
+
+fn chunk(out: &mut Vec<u8>, tag: &[u8; 4], data: &[u8]) {
+    out.extend_from_slice(&(data.len() as u32).to_be_bytes());
+    out.extend_from_slice(tag);
+    out.extend_from_slice(data);
+    let mut crc_input = Vec::with_capacity(4 + data.len());
+    crc_input.extend_from_slice(tag);
+    crc_input.extend_from_slice(data);
+    out.extend_from_slice(&crc32(&crc_input).to_be_bytes());
+}
+
+/// Encode to a PNG byte stream (color type 0, bit depth 8, no interlace).
+pub fn encode(img: &GrayImage) -> Vec<u8> {
+    let w = img.width as usize;
+    let mut raw = Vec::with_capacity((w + 1) * img.height as usize);
+    let zero_row = vec![0u8; w];
+    for y in 0..img.height as usize {
+        let row = &img.pixels[y * w..(y + 1) * w];
+        let prev = if y == 0 {
+            &zero_row[..]
+        } else {
+            &img.pixels[(y - 1) * w..y * w]
+        };
+        // MSAD heuristic: pick the filter minimizing sum of |signed residual|.
+        let mut best_ft = 0u8;
+        let mut best_cost = u64::MAX;
+        let mut best_row: Vec<u8> = Vec::new();
+        for ft in 0..=4u8 {
+            let cand = filter_row(ft, row, prev);
+            let cost: u64 = cand.iter().map(|&b| (b as i8).unsigned_abs() as u64).sum();
+            if cost < best_cost {
+                best_cost = cost;
+                best_ft = ft;
+                best_row = cand;
+            }
+        }
+        raw.push(best_ft);
+        raw.extend_from_slice(&best_row);
+    }
+
+    let mut out = PNG_SIG.to_vec();
+    let mut ihdr = Vec::with_capacity(13);
+    ihdr.extend_from_slice(&img.width.to_be_bytes());
+    ihdr.extend_from_slice(&img.height.to_be_bytes());
+    ihdr.extend_from_slice(&[8, 0, 0, 0, 0]); // depth 8, gray, deflate, adaptive, no interlace
+    chunk(&mut out, b"IHDR", &ihdr);
+    chunk(&mut out, b"IDAT", &zlib_compress(&raw));
+    chunk(&mut out, b"IEND", &[]);
+    out
+}
+
+/// Decode a grayscale-8 PNG produced by [`encode`] (also accepts any
+/// single-IDAT or multi-IDAT gray8 non-interlaced PNG).
+pub fn decode(data: &[u8]) -> Result<GrayImage, String> {
+    if data.len() < 8 || data[..8] != PNG_SIG {
+        return Err("not a PNG".into());
+    }
+    let mut pos = 8usize;
+    let mut width = 0u32;
+    let mut height = 0u32;
+    let mut idat: Vec<u8> = Vec::new();
+    let mut seen_ihdr = false;
+    while pos + 8 <= data.len() {
+        let len = u32::from_be_bytes(data[pos..pos + 4].try_into().unwrap()) as usize;
+        let tag = &data[pos + 4..pos + 8];
+        if pos + 8 + len + 4 > data.len() {
+            return Err("truncated chunk".into());
+        }
+        let body = &data[pos + 8..pos + 8 + len];
+        let crc_expect =
+            u32::from_be_bytes(data[pos + 8 + len..pos + 12 + len].try_into().unwrap());
+        let mut crc_input = Vec::with_capacity(4 + len);
+        crc_input.extend_from_slice(tag);
+        crc_input.extend_from_slice(body);
+        if crc32(&crc_input) != crc_expect {
+            return Err("chunk CRC mismatch".into());
+        }
+        match tag {
+            b"IHDR" => {
+                if len != 13 {
+                    return Err("bad IHDR".into());
+                }
+                width = u32::from_be_bytes(body[0..4].try_into().unwrap());
+                height = u32::from_be_bytes(body[4..8].try_into().unwrap());
+                if body[8] != 8 || body[9] != 0 {
+                    return Err("only gray8 supported".into());
+                }
+                if body[12] != 0 {
+                    return Err("interlace unsupported".into());
+                }
+                seen_ihdr = true;
+            }
+            b"IDAT" => idat.extend_from_slice(body),
+            b"IEND" => break,
+            _ => {} // ancillary chunks ignored
+        }
+        pos += 12 + len;
+    }
+    if !seen_ihdr {
+        return Err("missing IHDR".into());
+    }
+    let raw = zlib_decompress(&idat)?;
+    let w = width as usize;
+    if raw.len() != (w + 1) * height as usize {
+        return Err("scanline data size mismatch".into());
+    }
+    let mut pixels = vec![0u8; w * height as usize];
+    let zero_row = vec![0u8; w];
+    for y in 0..height as usize {
+        let ft = raw[y * (w + 1)];
+        let src = &raw[y * (w + 1) + 1..(y + 1) * (w + 1)];
+        // Copy then unfilter in place, referencing the already-unfiltered
+        // previous row.
+        let (done, cur) = pixels.split_at_mut(y * w);
+        let prev = if y == 0 {
+            &zero_row[..]
+        } else {
+            &done[(y - 1) * w..]
+        };
+        let row = &mut cur[..w];
+        row.copy_from_slice(src);
+        unfilter_row(ft, row, prev)?;
+    }
+    Ok(GrayImage {
+        width,
+        height,
+        pixels,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256pp;
+
+    fn images() -> Vec<GrayImage> {
+        let mut rng = Xoshiro256pp::new(3);
+        let mut out = vec![
+            GrayImage::new(1, 1, vec![0]),
+            GrayImage::new(1, 1, vec![255]),
+            GrayImage::new(7, 3, (0..21).collect()),
+            GrayImage::new(64, 64, vec![128; 4096]),
+        ];
+        // Gradient (Sub/Up filters should win).
+        let grad: Vec<u8> = (0..128 * 32).map(|i| (i % 256) as u8).collect();
+        out.push(GrayImage::new(128, 32, grad));
+        // Random noise.
+        let noise: Vec<u8> = (0..100 * 100).map(|_| rng.next_u64() as u8).collect();
+        out.push(GrayImage::new(100, 100, noise));
+        out
+    }
+
+    #[test]
+    fn roundtrip() {
+        for img in images() {
+            let png = encode(&img);
+            let back = decode(&png).unwrap();
+            assert_eq!(back, img);
+        }
+    }
+
+    #[test]
+    fn payload_packing_roundtrip() {
+        let mut rng = Xoshiro256pp::new(5);
+        for n in [0usize, 1, 100, 1000, 40_007] {
+            let payload: Vec<u8> = (0..n).map(|_| rng.next_u64() as u8).collect();
+            let img = GrayImage::from_payload(&payload);
+            assert!(img.width as u64 * img.height as u64 >= n as u64);
+            let png = encode(&img);
+            let back = decode(&png).unwrap();
+            assert_eq!(back.payload(n), &payload[..]);
+        }
+    }
+
+    #[test]
+    fn structured_image_compresses() {
+        let img = GrayImage::new(256, 256, vec![7; 65536]);
+        let png = encode(&img);
+        assert!(png.len() < 2048, "constant image should be tiny, got {}", png.len());
+    }
+
+    #[test]
+    fn signature_and_garbage_rejected() {
+        assert!(decode(b"not a png at all").is_err());
+        let mut png = encode(&GrayImage::new(4, 4, vec![1; 16]));
+        png[20] ^= 0xff; // corrupt IHDR body -> CRC fails
+        assert!(decode(&png).is_err());
+    }
+
+    #[test]
+    fn filter_unfilter_inverse_property() {
+        let mut rng = Xoshiro256pp::new(8);
+        for _ in 0..50 {
+            let w = 1 + (rng.next_u64() % 40) as usize;
+            let row: Vec<u8> = (0..w).map(|_| rng.next_u64() as u8).collect();
+            let prev: Vec<u8> = (0..w).map(|_| rng.next_u64() as u8).collect();
+            for ft in 0..=4u8 {
+                let mut filtered = filter_row(ft, &row, &prev);
+                unfilter_row(ft, &mut filtered, &prev).unwrap();
+                assert_eq!(filtered, row, "filter {ft}");
+            }
+        }
+    }
+}

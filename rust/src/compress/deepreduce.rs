@@ -1,0 +1,142 @@
+//! **DeepReduce** (Kostopoulou et al. 2021) — Bloom-filter index
+//! compression, P0 policy.
+//!
+//! Per App. C.1 the paper drops DeepReduce's value-compression stage (masks
+//! are binary) and keeps only the Bloom-coded index set; masks are learned
+//! with the same stochastic training as FedPM/DeltaMask. We transmit the
+//! mask-difference index set (the same Δ as DeltaMask but *without* top-κ
+//! ranking) through a Bloom filter at a bits-per-entry budget matching
+//! BFuse8 — the §5.1 comparison point: "Bloom filters are prone to a higher
+//! false positive rate for the same number of hash functions and bits per
+//! entry".
+
+use super::{wire, DecodeCtx, EncodeCtx, Encoded, Family, Update, UpdateCodec};
+use crate::codec::deflate;
+use crate::filters::{BloomFilter, MembershipFilter};
+use anyhow::{ensure, Result};
+
+pub struct DeepReduceCodec {
+    pub bits_per_entry: f64,
+}
+
+impl Default for DeepReduceCodec {
+    fn default() -> Self {
+        // Match BFuse8's ≈8.6 bpe so the comparison isolates the filter.
+        Self {
+            bits_per_entry: 8.62,
+        }
+    }
+}
+
+impl UpdateCodec for DeepReduceCodec {
+    fn name(&self) -> &'static str {
+        "deepreduce"
+    }
+
+    fn family(&self) -> Family {
+        Family::Mask
+    }
+
+    fn encode(&self, ctx: &EncodeCtx) -> Result<Encoded> {
+        let delta: Vec<u64> = (0..ctx.d)
+            .filter(|&i| ctx.mask_g[i] != ctx.mask_k[i])
+            .map(|i| i as u64)
+            .collect();
+        let bloom = BloomFilter::with_bits_per_entry(&delta, self.bits_per_entry);
+        let payload = bloom.payload();
+        // DeepReduce ships raw filter bytes (DEFLATE for parity with its
+        // transport framing).
+        let z = deflate::zlib_compress(&payload);
+        let mut bytes = Vec::with_capacity(z.len() + 24);
+        wire::put_u64(&mut bytes, bloom.num_bits());
+        wire::put_u32(&mut bytes, bloom.num_hashes());
+        wire::put_u32(&mut bytes, delta.len() as u32);
+        wire::put_u32(&mut bytes, z.len() as u32);
+        bytes.extend_from_slice(&z);
+        Ok(Encoded { bytes })
+    }
+
+    fn decode(&self, bytes: &[u8], ctx: &DecodeCtx) -> Result<Update> {
+        let mut r = wire::Reader::new(bytes);
+        let num_bits = r.u64()?;
+        let num_hashes = r.u32()?;
+        let num_keys = r.u32()? as usize;
+        let zlen = r.u32()? as usize;
+        let z = r.bytes(zlen)?;
+        let payload = deflate::zlib_decompress(z).map_err(|e| anyhow::anyhow!(e))?;
+        ensure!(payload.len() % 8 == 0, "bloom payload misaligned");
+        let bloom = BloomFilter::from_parts(&payload, num_bits, num_hashes, num_keys);
+        let mut mask = ctx.mask_g.to_vec();
+        if num_keys > 0 {
+            for (i, m) in mask.iter_mut().enumerate() {
+                if bloom.contains(i as u64) {
+                    *m = 1.0 - *m;
+                }
+            }
+        }
+        Ok(Update::Mask(mask))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::deltamask::DeltaMaskCodec;
+    use crate::model::sample_mask_seeded;
+    use crate::util::rng::Xoshiro256pp;
+
+    fn setup(d: usize, seed: u64) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let mut rng = Xoshiro256pp::new(seed);
+        let theta: Vec<f32> = (0..d).map(|_| rng.next_f32()).collect();
+        let mut mg = Vec::new();
+        sample_mask_seeded(&theta, 1, &mut mg);
+        let mut mk = mg.clone();
+        for _ in 0..d / 20 {
+            let i = rng.below(d as u64) as usize;
+            mk[i] = 1.0 - mk[i];
+        }
+        (theta, mk, mg)
+    }
+
+    #[test]
+    fn roundtrip_no_false_negatives_but_noisier_than_bfuse() {
+        let d = 100_000;
+        let (theta, mk, mg) = setup(d, 3);
+        let ctx = EncodeCtx {
+            d,
+            theta_k: &theta,
+            theta_g: &theta,
+            mask_k: &mk,
+            mask_g: &mg,
+            s_k: &[],
+            s_g: &[],
+            kappa: 1.0,
+            seed: 0,
+        };
+        let dctx = DecodeCtx {
+            d,
+            mask_g: &mg,
+            s_g: &[],
+            seed: 0,
+        };
+        let dr = DeepReduceCodec::default();
+        let enc = dr.encode(&ctx).unwrap();
+        let Update::Mask(m) = dr.decode(&enc.bytes, &dctx).unwrap() else {
+            panic!()
+        };
+        let missed = (0..d).filter(|&i| mk[i] != mg[i] && m[i] != mk[i]).count();
+        assert_eq!(missed, 0, "bloom has zero false negatives");
+        let extra_bloom = (0..d).filter(|&i| mk[i] == mg[i] && m[i] != mk[i]).count();
+
+        let dm = DeltaMaskCodec::default();
+        let enc2 = dm.encode(&ctx).unwrap();
+        let Update::Mask(m2) = dm.decode(&enc2.bytes, &dctx).unwrap() else {
+            panic!()
+        };
+        let extra_bfuse = (0..d).filter(|&i| mk[i] == mg[i] && m2[i] != mk[i]).count();
+        assert!(
+            extra_bloom > extra_bfuse,
+            "paper §5.1: bloom fp ({extra_bloom}) must exceed bfuse fp ({extra_bfuse})"
+        );
+    }
+}

@@ -1,0 +1,522 @@
+//! **DeltaMask** — the paper's update codec (§3.2, Alg. 1 lines 9–11 and
+//! 14–16).
+//!
+//! Encode (client k, round t):
+//! 1. Δ = { i : m_i^{g,t-1} ≠ m_i^{k,t} } — mask-difference index set against
+//!    the shared-seed global binary mask.
+//! 2. top-κ selection (Eq. 4): keep the K = ⌈κ·|Δ|⌉ indexes with the largest
+//!    KL(θ^{k,t}_i ‖ θ^{g,t-1}_i) — importance sampling of the most certain
+//!    updates (O(d) quickselect, no full sort).
+//! 3. Fingerprint Δ′ into a probabilistic filter (default: 4-wise binary
+//!    fuse, 8-bit entries — "BFuse8").
+//! 4. Pack the fingerprint array into a grayscale image and compress
+//!    losslessly (PNG = filtering + DEFLATE) → `A_{k,t}`.
+//!
+//! Decode (server): unpack the PNG, rebuild the filter, run the membership
+//! query over *all* d indexes (Eq. 5), and bit-flip m^{g,t-1} at the hits —
+//! false positives (rate ≈ 2^-bpe) surface as mask noise, which Appendix B
+//! bounds.
+
+use super::{wire, DecodeCtx, EncodeCtx, Encoded, Family, Update, UpdateCodec};
+use crate::codec::png::{self, GrayImage};
+use crate::filters::{BinaryFuse, MembershipFilter, XorFilter};
+use crate::model::kl_bernoulli;
+use crate::util::rng::Xoshiro256pp;
+use crate::util::top_k_indices;
+use anyhow::{bail, ensure, Result};
+
+/// Probabilistic filter selection (§5.4 ablation, Fig. 9).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FilterKind {
+    BFuse8,
+    BFuse16,
+    BFuse32,
+    /// 3-wise binary fuse (slightly larger, same API).
+    BFuse8Arity3,
+    Xor8,
+    Xor16,
+    Xor32,
+}
+
+impl FilterKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            FilterKind::BFuse8 => "bfuse8",
+            FilterKind::BFuse16 => "bfuse16",
+            FilterKind::BFuse32 => "bfuse32",
+            FilterKind::BFuse8Arity3 => "bfuse8-3w",
+            FilterKind::Xor8 => "xor8",
+            FilterKind::Xor16 => "xor16",
+            FilterKind::Xor32 => "xor32",
+        }
+    }
+
+    fn tag(&self) -> u8 {
+        match self {
+            FilterKind::BFuse8 => 0,
+            FilterKind::BFuse16 => 1,
+            FilterKind::BFuse32 => 2,
+            FilterKind::BFuse8Arity3 => 3,
+            FilterKind::Xor8 => 4,
+            FilterKind::Xor16 => 5,
+            FilterKind::Xor32 => 6,
+        }
+    }
+
+    fn from_tag(tag: u8) -> Result<Self> {
+        Ok(match tag {
+            0 => FilterKind::BFuse8,
+            1 => FilterKind::BFuse16,
+            2 => FilterKind::BFuse32,
+            3 => FilterKind::BFuse8Arity3,
+            4 => FilterKind::Xor8,
+            5 => FilterKind::Xor16,
+            6 => FilterKind::Xor32,
+            _ => bail!("unknown filter tag {tag}"),
+        })
+    }
+}
+
+/// Update-ranking mechanism (Fig. 8 ablation).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Ranking {
+    /// Relative entropy between server and client probabilities (Eq. 4).
+    Kl,
+    /// Naive uniform subsampling baseline.
+    Random,
+}
+
+#[derive(Clone, Debug)]
+pub struct DeltaMaskCodec {
+    pub filter: FilterKind,
+    pub ranking: Ranking,
+    /// Pack through the grayscale-PNG stage (§3.2). Disabled only by the
+    /// ablation that isolates the filter's contribution.
+    pub use_png: bool,
+}
+
+impl Default for DeltaMaskCodec {
+    fn default() -> Self {
+        Self {
+            filter: FilterKind::BFuse8,
+            ranking: Ranking::Kl,
+            use_png: true,
+        }
+    }
+}
+
+impl DeltaMaskCodec {
+    pub fn with_filter(filter: FilterKind) -> Self {
+        Self {
+            filter,
+            ..Self::default()
+        }
+    }
+
+    pub fn with_ranking(ranking: Ranking) -> Self {
+        Self {
+            ranking,
+            ..Self::default()
+        }
+    }
+
+    /// Steps 1–2: the ranked, truncated difference set Δ′ (Eq. 4).
+    pub fn select_updates(&self, ctx: &EncodeCtx) -> Vec<u64> {
+        let mut delta: Vec<u32> = Vec::new();
+        for i in 0..ctx.d {
+            if ctx.mask_g[i] != ctx.mask_k[i] {
+                delta.push(i as u32);
+            }
+        }
+        let k = ((ctx.kappa * delta.len() as f64).ceil() as usize).min(delta.len());
+        if k == delta.len() {
+            return delta.into_iter().map(u64::from).collect();
+        }
+        match self.ranking {
+            Ranking::Kl => {
+                let scores: Vec<f32> = delta
+                    .iter()
+                    .map(|&i| kl_bernoulli(ctx.theta_k[i as usize], ctx.theta_g[i as usize]))
+                    .collect();
+                top_k_indices(&scores, k)
+                    .into_iter()
+                    .map(|pos| delta[pos as usize] as u64)
+                    .collect()
+            }
+            Ranking::Random => {
+                let mut rng = Xoshiro256pp::new(ctx.seed ^ 0xdead_beef);
+                rng.shuffle(&mut delta);
+                delta.truncate(k);
+                delta.into_iter().map(u64::from).collect()
+            }
+        }
+    }
+}
+
+enum BuiltFilter {
+    B8(BinaryFuse<u8, 4>),
+    B16(BinaryFuse<u16, 4>),
+    B32(BinaryFuse<u32, 4>),
+    B8A3(BinaryFuse<u8, 3>),
+    X8(XorFilter<u8>),
+    X16(XorFilter<u16>),
+    X32(XorFilter<u32>),
+}
+
+impl BuiltFilter {
+    fn build(kind: FilterKind, keys: &[u64]) -> Result<Self> {
+        let err = || anyhow::anyhow!("filter construction failed");
+        Ok(match kind {
+            FilterKind::BFuse8 => BuiltFilter::B8(BinaryFuse::build(keys).ok_or_else(err)?),
+            FilterKind::BFuse16 => BuiltFilter::B16(BinaryFuse::build(keys).ok_or_else(err)?),
+            FilterKind::BFuse32 => BuiltFilter::B32(BinaryFuse::build(keys).ok_or_else(err)?),
+            FilterKind::BFuse8Arity3 => {
+                BuiltFilter::B8A3(BinaryFuse::build(keys).ok_or_else(err)?)
+            }
+            FilterKind::Xor8 => BuiltFilter::X8(XorFilter::build(keys).ok_or_else(err)?),
+            FilterKind::Xor16 => BuiltFilter::X16(XorFilter::build(keys).ok_or_else(err)?),
+            FilterKind::Xor32 => BuiltFilter::X32(XorFilter::build(keys).ok_or_else(err)?),
+        })
+    }
+
+    /// (seed, layout_a, layout_b, payload, num_keys) — layout params differ
+    /// between bfuse (segment_length, segment_count_length) and xor
+    /// (block_length, unused).
+    fn parts(&self) -> (u64, u32, u64, Vec<u8>, usize) {
+        match self {
+            BuiltFilter::B8(f) => (f.seed(), f.segment_length_pub(), f.segment_count_length_pub(), f.payload(), f.num_keys()),
+            BuiltFilter::B16(f) => (f.seed(), f.segment_length_pub(), f.segment_count_length_pub(), f.payload(), f.num_keys()),
+            BuiltFilter::B32(f) => (f.seed(), f.segment_length_pub(), f.segment_count_length_pub(), f.payload(), f.num_keys()),
+            BuiltFilter::B8A3(f) => (f.seed(), f.segment_length_pub(), f.segment_count_length_pub(), f.payload(), f.num_keys()),
+            BuiltFilter::X8(f) => (f.seed(), f.block_length(), 0, f.payload(), f.num_keys()),
+            BuiltFilter::X16(f) => (f.seed(), f.block_length(), 0, f.payload(), f.num_keys()),
+            BuiltFilter::X32(f) => (f.seed(), f.block_length(), 0, f.payload(), f.num_keys()),
+        }
+    }
+
+    fn restore(
+        kind: FilterKind,
+        seed: u64,
+        layout_a: u32,
+        layout_b: u64,
+        payload: &[u8],
+        num_keys: usize,
+    ) -> Self {
+        match kind {
+            FilterKind::BFuse8 => {
+                BuiltFilter::B8(BinaryFuse::from_parts(seed, layout_a, layout_b, payload, num_keys))
+            }
+            FilterKind::BFuse16 => {
+                BuiltFilter::B16(BinaryFuse::from_parts(seed, layout_a, layout_b, payload, num_keys))
+            }
+            FilterKind::BFuse32 => {
+                BuiltFilter::B32(BinaryFuse::from_parts(seed, layout_a, layout_b, payload, num_keys))
+            }
+            FilterKind::BFuse8Arity3 => {
+                BuiltFilter::B8A3(BinaryFuse::from_parts(seed, layout_a, layout_b, payload, num_keys))
+            }
+            FilterKind::Xor8 => BuiltFilter::X8(XorFilter::from_parts(seed, layout_a, payload, num_keys)),
+            FilterKind::Xor16 => BuiltFilter::X16(XorFilter::from_parts(seed, layout_a, payload, num_keys)),
+            FilterKind::Xor32 => BuiltFilter::X32(XorFilter::from_parts(seed, layout_a, payload, num_keys)),
+        }
+    }
+
+    fn contains(&self, key: u64) -> bool {
+        match self {
+            BuiltFilter::B8(f) => f.contains(key),
+            BuiltFilter::B16(f) => f.contains(key),
+            BuiltFilter::B32(f) => f.contains(key),
+            BuiltFilter::B8A3(f) => f.contains(key),
+            BuiltFilter::X8(f) => f.contains(key),
+            BuiltFilter::X16(f) => f.contains(key),
+            BuiltFilter::X32(f) => f.contains(key),
+        }
+    }
+}
+
+impl UpdateCodec for DeltaMaskCodec {
+    fn name(&self) -> &'static str {
+        "deltamask"
+    }
+
+    fn family(&self) -> Family {
+        Family::Mask
+    }
+
+    fn encode(&self, ctx: &EncodeCtx) -> Result<Encoded> {
+        let delta = self.select_updates(ctx);
+        let filter = BuiltFilter::build(self.filter, &delta)?;
+        let (seed, layout_a, layout_b, payload, num_keys) = filter.parts();
+
+        // Wire format: tag(1) png_flag(1) seed(8) layout_a(4) layout_b(8)
+        //              num_keys(4) payload_len(4) payload(PNG or raw)
+        let mut bytes = Vec::with_capacity(payload.len() + 32);
+        bytes.push(self.filter.tag());
+        bytes.push(self.use_png as u8);
+        wire::put_u64(&mut bytes, seed);
+        wire::put_u32(&mut bytes, layout_a);
+        wire::put_u64(&mut bytes, layout_b);
+        wire::put_u32(&mut bytes, num_keys as u32);
+        wire::put_u32(&mut bytes, payload.len() as u32);
+        if self.use_png {
+            let img = GrayImage::from_payload(&payload);
+            bytes.extend_from_slice(&png::encode(&img));
+        } else {
+            bytes.extend_from_slice(&payload);
+        }
+        Ok(Encoded { bytes })
+    }
+
+    fn decode(&self, bytes: &[u8], ctx: &DecodeCtx) -> Result<Update> {
+        ensure!(bytes.len() >= 30, "deltamask record too short");
+        let kind = FilterKind::from_tag(bytes[0])?;
+        let is_png = bytes[1] != 0;
+        let mut r = wire::Reader::new(&bytes[2..]);
+        let seed = r.u64()?;
+        let layout_a = r.u32()?;
+        let layout_b = r.u64()?;
+        let num_keys = r.u32()? as usize;
+        let payload_len = r.u32()? as usize;
+        let rest = &bytes[2 + r.pos..];
+        let payload = if is_png {
+            let img = png::decode(rest).map_err(|e| anyhow::anyhow!("png: {e}"))?;
+            ensure!(
+                (img.width as usize * img.height as usize) >= payload_len,
+                "png smaller than payload"
+            );
+            img.pixels[..payload_len].to_vec()
+        } else {
+            ensure!(rest.len() == payload_len, "payload length mismatch");
+            rest.to_vec()
+        };
+        let filter = BuiltFilter::restore(kind, seed, layout_a, layout_b, &payload, num_keys);
+
+        // Eq. 5: membership query across all d positions, then bit-flip.
+        let mut mask = ctx.mask_g.to_vec();
+        if num_keys > 0 {
+            for (i, m) in mask.iter_mut().enumerate() {
+                if filter.contains(i as u64) {
+                    *m = 1.0 - *m;
+                }
+            }
+        }
+        Ok(Update::Mask(mask))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::sample_mask_seeded;
+
+    fn make_ctx<'a>(
+        d: usize,
+        theta_k: &'a [f32],
+        theta_g: &'a [f32],
+        mask_k: &'a [f32],
+        mask_g: &'a [f32],
+        kappa: f64,
+    ) -> EncodeCtx<'a> {
+        EncodeCtx {
+            d,
+            theta_k,
+            theta_g,
+            mask_k,
+            mask_g,
+            s_k: &[],
+            s_g: &[],
+            kappa,
+            seed: 99,
+        }
+    }
+
+    fn setup(d: usize, drift: f32, seed: u64) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+        let mut rng = Xoshiro256pp::new(seed);
+        let theta_g: Vec<f32> = (0..d).map(|_| rng.next_f32()).collect();
+        let theta_k: Vec<f32> = theta_g
+            .iter()
+            .map(|&p| (p + drift * (rng.next_f32() - 0.5)).clamp(0.01, 0.99))
+            .collect();
+        let mut mask_g = Vec::new();
+        sample_mask_seeded(&theta_g, 7, &mut mask_g);
+        let mut mask_k = Vec::new();
+        sample_mask_seeded(&theta_k, 8, &mut mask_k);
+        (theta_k, theta_g, mask_k, mask_g)
+    }
+
+    #[test]
+    fn roundtrip_reconstructs_selected_updates_exactly() {
+        let d = 50_000;
+        let (tk, tg, mk, mg) = setup(d, 0.1, 1);
+        // κ=1 + 32-bit fingerprints ⇒ essentially exact reconstruction.
+        let codec = DeltaMaskCodec::with_filter(FilterKind::BFuse32);
+        let ctx = make_ctx(d, &tk, &tg, &mk, &mg, 1.0);
+        let enc = codec.encode(&ctx).unwrap();
+        let dec_ctx = DecodeCtx {
+            d,
+            mask_g: &mg,
+            s_g: &[],
+            seed: 99,
+        };
+        match codec.decode(&enc.bytes, &dec_ctx).unwrap() {
+            Update::Mask(m) => {
+                let wrong = m
+                    .iter()
+                    .zip(&mk)
+                    .filter(|(a, b)| a != b)
+                    .count();
+                // 2^-32 fp rate over 50k queries: expect exactly 0.
+                assert_eq!(wrong, 0, "reconstruction errors: {wrong}");
+            }
+            _ => panic!("wrong family"),
+        }
+    }
+
+    #[test]
+    fn bfuse8_reconstruction_error_is_bounded_by_fp_rate() {
+        let d = 100_000;
+        let (tk, tg, mk, mg) = setup(d, 0.05, 2);
+        let codec = DeltaMaskCodec::default();
+        let ctx = make_ctx(d, &tk, &tg, &mk, &mg, 1.0);
+        let enc = codec.encode(&ctx).unwrap();
+        let dec_ctx = DecodeCtx {
+            d,
+            mask_g: &mg,
+            s_g: &[],
+            seed: 99,
+        };
+        let Update::Mask(m) = codec.decode(&enc.bytes, &dec_ctx).unwrap() else {
+            panic!()
+        };
+        // All true updates applied (no false negatives) ...
+        let missed = (0..d)
+            .filter(|&i| mk[i] != mg[i] && m[i] != mk[i])
+            .count();
+        assert_eq!(missed, 0);
+        // ... and false flips bounded by ~d·2^-8 with slack.
+        let extra = (0..d)
+            .filter(|&i| mk[i] == mg[i] && m[i] != mk[i])
+            .count();
+        assert!(extra < (d as f64 * 0.008) as usize, "extra flips: {extra}");
+    }
+
+    #[test]
+    fn kappa_truncates_and_prefers_high_kl() {
+        let d = 10_000;
+        let (tk, tg, mk, mg) = setup(d, 0.5, 3);
+        let codec = DeltaMaskCodec::default();
+        let full = codec.select_updates(&make_ctx(d, &tk, &tg, &mk, &mg, 1.0));
+        let half = codec.select_updates(&make_ctx(d, &tk, &tg, &mk, &mg, 0.5));
+        assert!(half.len() <= full.len() / 2 + 1);
+        // Every selected index is a true difference.
+        for &i in &half {
+            assert_ne!(mk[i as usize], mg[i as usize]);
+        }
+        // Selected KL floor ≥ max unselected KL (selection property).
+        let sel: std::collections::HashSet<u64> = half.iter().cloned().collect();
+        let min_sel = half
+            .iter()
+            .map(|&i| kl_bernoulli(tk[i as usize], tg[i as usize]))
+            .fold(f32::INFINITY, f32::min);
+        let max_unsel = full
+            .iter()
+            .filter(|i| !sel.contains(i))
+            .map(|&i| kl_bernoulli(tk[i as usize], tg[i as usize]))
+            .fold(f32::NEG_INFINITY, f32::max);
+        assert!(min_sel >= max_unsel - 1e-5, "{min_sel} < {max_unsel}");
+    }
+
+    #[test]
+    fn bpp_well_below_one_for_sparse_updates() {
+        // Late-training regime: ~2% mask drift ⇒ bpp must land deep below
+        // 1 bpp (the paper's headline).
+        let d = 327_680;
+        let mut rng = Xoshiro256pp::new(4);
+        let theta_g: Vec<f32> = (0..d).map(|_| rng.next_f32()).collect();
+        let mut mask_g = Vec::new();
+        sample_mask_seeded(&theta_g, 5, &mut mask_g);
+        let mut mask_k = mask_g.clone();
+        let mut flipped = 0;
+        while flipped < d / 50 {
+            let i = rng.below(d as u64) as usize;
+            mask_k[i] = 1.0 - mask_k[i];
+            flipped += 1;
+        }
+        let codec = DeltaMaskCodec::default();
+        let ctx = make_ctx(d, &theta_g, &theta_g, &mask_k, &mask_g, 0.8);
+        let enc = codec.encode(&ctx).unwrap();
+        let bpp = enc.bpp(d);
+        assert!(bpp < 0.25, "bpp={bpp}");
+        assert!(bpp > 0.01, "bpp={bpp} suspiciously low");
+    }
+
+    #[test]
+    fn empty_delta_roundtrip() {
+        let d = 1000;
+        let theta = vec![0.5f32; d];
+        let mut mask = Vec::new();
+        sample_mask_seeded(&theta, 1, &mut mask);
+        let codec = DeltaMaskCodec::default();
+        let ctx = make_ctx(d, &theta, &theta, &mask, &mask, 0.8);
+        let enc = codec.encode(&ctx).unwrap();
+        let dec_ctx = DecodeCtx {
+            d,
+            mask_g: &mask,
+            s_g: &[],
+            seed: 99,
+        };
+        let Update::Mask(m) = codec.decode(&enc.bytes, &dec_ctx).unwrap() else {
+            panic!()
+        };
+        assert_eq!(m, mask);
+    }
+
+    #[test]
+    fn all_filter_kinds_roundtrip() {
+        let d = 20_000;
+        let (tk, tg, mk, mg) = setup(d, 0.1, 6);
+        for kind in [
+            FilterKind::BFuse8,
+            FilterKind::BFuse16,
+            FilterKind::BFuse32,
+            FilterKind::BFuse8Arity3,
+            FilterKind::Xor8,
+            FilterKind::Xor16,
+            FilterKind::Xor32,
+        ] {
+            let codec = DeltaMaskCodec::with_filter(kind);
+            let ctx = make_ctx(d, &tk, &tg, &mk, &mg, 1.0);
+            let enc = codec.encode(&ctx).unwrap();
+            let dec_ctx = DecodeCtx {
+                d,
+                mask_g: &mg,
+                s_g: &[],
+                seed: 99,
+            };
+            let Update::Mask(m) = codec.decode(&enc.bytes, &dec_ctx).unwrap() else {
+                panic!()
+            };
+            let missed = (0..d)
+                .filter(|&i| mk[i] != mg[i] && m[i] != mk[i])
+                .count();
+            assert_eq!(missed, 0, "{kind:?} missed true updates");
+        }
+    }
+
+    #[test]
+    fn png_stage_reduces_or_matches_raw_bytes() {
+        let d = 100_000;
+        let (tk, tg, mk, mg) = setup(d, 0.05, 8);
+        let with_png = DeltaMaskCodec::default();
+        let without = DeltaMaskCodec {
+            use_png: false,
+            ..Default::default()
+        };
+        let ctx = make_ctx(d, &tk, &tg, &mk, &mg, 0.8);
+        let a = with_png.encode(&ctx).unwrap().bytes.len();
+        let b = without.encode(&ctx).unwrap().bytes.len();
+        // Fingerprints are near-uniform, so PNG gains are small — but the
+        // overhead must stay tiny (≤ ~2% + fixed header).
+        assert!(a <= b + b / 50 + 128, "png={a} raw={b}");
+    }
+}

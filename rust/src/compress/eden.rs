@@ -1,0 +1,203 @@
+//! **EDEN** (Vargaftik et al. 2022) — communication-efficient distributed
+//! mean estimation: randomized Hadamard rotation, coordinate subsampling to
+//! the bit budget, 1-bit sign quantization with an unbiased per-vector
+//! scale, inverse rotation on the server.
+//!
+//! Applied to the mask-score delta Δs (App. C.1 baseline configuration).
+//! The default 0.7 coordinate fraction reproduces the paper's ≈0.70 bpp
+//! EDEN operating point.
+
+use super::{fwht, rand_signs, wire, DecodeCtx, EncodeCtx, Encoded, Family, Update, UpdateCodec};
+use crate::util::rng::Xoshiro256pp;
+use anyhow::{ensure, Result};
+
+pub struct EdenCodec {
+    /// Fraction of rotated coordinates transmitted (1 bit each); the
+    /// untransmitted rest decode to zero. Server knows the subset from the
+    /// shared seed, so no indexes travel.
+    pub fraction: f64,
+}
+
+impl Default for EdenCodec {
+    fn default() -> Self {
+        Self { fraction: 0.7 }
+    }
+}
+
+fn padded_len(d: usize) -> usize {
+    d.next_power_of_two()
+}
+
+/// Seeded coordinate subset of size k out of n (shared client/server).
+fn subset(n: usize, k: usize, seed: u64) -> Vec<u32> {
+    let mut rng = Xoshiro256pp::new(seed ^ 0xedeb_0001);
+    let mut idx: Vec<u32> = (0..n as u32).collect();
+    for i in 0..k {
+        let j = i + rng.below((n - i) as u64) as usize;
+        idx.swap(i, j);
+    }
+    idx.truncate(k);
+    idx
+}
+
+impl UpdateCodec for EdenCodec {
+    fn name(&self) -> &'static str {
+        "eden"
+    }
+
+    fn family(&self) -> Family {
+        Family::Delta
+    }
+
+    fn encode(&self, ctx: &EncodeCtx) -> Result<Encoded> {
+        let d = ctx.d;
+        let n = padded_len(d);
+        // Rotate: H · D · Δs
+        let signs = rand_signs(n, ctx.seed);
+        let mut v = vec![0.0f32; n];
+        for i in 0..d {
+            v[i] = (ctx.s_k[i] - ctx.s_g[i]) * signs[i];
+        }
+        fwht(&mut v);
+
+        let k = ((self.fraction * d as f64).round() as usize).clamp(1, n);
+        let sel = subset(n, k, ctx.seed);
+        // Unbiased 1-bit: scale = E|v| over the selected coords, correcting
+        // for the dropped mass by n/k.
+        let mut scale = 0.0f64;
+        for &i in &sel {
+            scale += v[i as usize].abs() as f64;
+        }
+        scale /= k as f64;
+        let scale = (scale * n as f64 / k as f64) as f32;
+
+        let mut bytes = Vec::with_capacity(k / 8 + 16);
+        wire::put_u32(&mut bytes, d as u32);
+        wire::put_u32(&mut bytes, k as u32);
+        wire::put_f32(&mut bytes, scale);
+        let mut acc = 0u8;
+        for (j, &i) in sel.iter().enumerate() {
+            if v[i as usize] >= 0.0 {
+                acc |= 1 << (j % 8);
+            }
+            if j % 8 == 7 {
+                bytes.push(acc);
+                acc = 0;
+            }
+        }
+        if k % 8 != 0 {
+            bytes.push(acc);
+        }
+        Ok(Encoded { bytes })
+    }
+
+    fn decode(&self, bytes: &[u8], ctx: &DecodeCtx) -> Result<Update> {
+        let mut r = wire::Reader::new(bytes);
+        let d = r.u32()? as usize;
+        ensure!(d == ctx.d, "dimension mismatch");
+        let k = r.u32()? as usize;
+        let scale = r.f32()?;
+        let packed = r.bytes(k.div_ceil(8))?;
+        let n = padded_len(d);
+        let sel = subset(n, k, ctx.seed);
+        // The encode-side scale already folds the n/k subsampling
+        // correction; plant sign·scale and let the inverse rotation spread it.
+        let mut v = vec![0.0f32; n];
+        for (j, &i) in sel.iter().enumerate() {
+            let sign = if packed[j / 8] >> (j % 8) & 1 == 1 {
+                1.0
+            } else {
+                -1.0
+            };
+            v[i as usize] = sign * scale;
+        }
+        fwht(&mut v); // orthonormal involution ⇒ inverse
+        let signs = rand_signs(n, ctx.seed);
+        let delta: Vec<f32> = (0..d).map(|i| v[i] * signs[i]).collect();
+        Ok(Update::ScoreDelta(delta))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256pp;
+
+    fn ctxs<'a>(
+        d: usize,
+        s_k: &'a [f32],
+        s_g: &'a [f32],
+    ) -> (EncodeCtx<'a>, DecodeCtx<'a>) {
+        (
+            EncodeCtx {
+                d,
+                theta_k: &[],
+                theta_g: &[],
+                mask_k: &[],
+                mask_g: &[],
+                s_k,
+                s_g,
+                kappa: 1.0,
+                seed: 42,
+            },
+            DecodeCtx {
+                d,
+                mask_g: &[],
+                s_g,
+                seed: 42,
+            },
+        )
+    }
+
+    #[test]
+    fn bpp_matches_fraction() {
+        let d = 50_000;
+        let mut rng = Xoshiro256pp::new(1);
+        let s_k: Vec<f32> = (0..d).map(|_| rng.next_f32() - 0.5).collect();
+        let s_g = vec![0.0f32; d];
+        let (ctx, _) = ctxs(d, &s_k, &s_g);
+        let enc = EdenCodec::default().encode(&ctx).unwrap();
+        let bpp = enc.bpp(d);
+        assert!((bpp - 0.7).abs() < 0.05, "bpp={bpp}");
+    }
+
+    #[test]
+    fn reconstruction_preserves_direction() {
+        // 1-bit + rotation is lossy but must correlate strongly with the
+        // true delta (that's the whole DME game).
+        let d = 16_384;
+        let mut rng = Xoshiro256pp::new(2);
+        let s_g = vec![0.0f32; d];
+        let s_k: Vec<f32> = (0..d).map(|_| rng.next_gaussian() as f32).collect();
+        let (ctx, dctx) = ctxs(d, &s_k, &s_g);
+        let codec = EdenCodec { fraction: 1.0 };
+        let enc = codec.encode(&ctx).unwrap();
+        let Update::ScoreDelta(rec) = codec.decode(&enc.bytes, &dctx).unwrap() else {
+            panic!()
+        };
+        let dot: f64 = rec.iter().zip(&s_k).map(|(a, b)| (a * b) as f64).sum();
+        let na: f64 = rec.iter().map(|a| (a * a) as f64).sum::<f64>().sqrt();
+        let nb: f64 = s_k.iter().map(|a| (a * a) as f64).sum::<f64>().sqrt();
+        let cos = dot / (na * nb);
+        // sign-only quantization of a rotated gaussian: cos ≈ sqrt(2/π) ≈ 0.80
+        assert!(cos > 0.7, "cosine={cos}");
+    }
+
+    #[test]
+    fn norm_roughly_unbiased() {
+        let d = 8_192;
+        let mut rng = Xoshiro256pp::new(3);
+        let s_g = vec![0.0f32; d];
+        let s_k: Vec<f32> = (0..d).map(|_| rng.next_gaussian() as f32).collect();
+        let (ctx, dctx) = ctxs(d, &s_k, &s_g);
+        let codec = EdenCodec { fraction: 1.0 };
+        let enc = codec.encode(&ctx).unwrap();
+        let Update::ScoreDelta(rec) = codec.decode(&enc.bytes, &dctx).unwrap() else {
+            panic!()
+        };
+        let n_rec: f64 = rec.iter().map(|a| (a * a) as f64).sum::<f64>().sqrt();
+        let n_true: f64 = s_k.iter().map(|a| (a * a) as f64).sum::<f64>().sqrt();
+        let ratio = n_rec / n_true;
+        assert!(ratio > 0.5 && ratio < 1.5, "norm ratio {ratio}");
+    }
+}

@@ -1,0 +1,140 @@
+//! **FedMask** (Li et al. 2021a) — deterministic threshold masks at 1 bpp.
+//!
+//! Per App. C.1 the paper runs FedMask without its personalization pruning
+//! phase: the client mask is the hard threshold m = 1[θ ≥ τ] and the raw
+//! bit vector is transmitted (packed, no entropy coding) — the canonical
+//! 1.0 bpp row of Tables 2/3.
+
+use super::{wire, DecodeCtx, EncodeCtx, Encoded, Family, Update, UpdateCodec};
+use anyhow::{ensure, Result};
+
+pub struct FedMaskCodec {
+    pub tau: f32,
+}
+
+impl Default for FedMaskCodec {
+    fn default() -> Self {
+        Self { tau: 0.5 }
+    }
+}
+
+impl UpdateCodec for FedMaskCodec {
+    fn name(&self) -> &'static str {
+        "fedmask"
+    }
+
+    fn family(&self) -> Family {
+        Family::Mask
+    }
+
+    /// FedMask keeps personalized local scores across rounds (its masks are
+    /// deterministic thresholds of locally-trained scores).
+    fn resync_scores(&self) -> bool {
+        false
+    }
+
+    fn encode(&self, ctx: &EncodeCtx) -> Result<Encoded> {
+        let mut bytes = Vec::with_capacity(ctx.d / 8 + 8);
+        wire::put_u32(&mut bytes, ctx.d as u32);
+        let mut acc = 0u8;
+        for (i, &p) in ctx.theta_k.iter().enumerate() {
+            if p >= self.tau {
+                acc |= 1 << (i % 8);
+            }
+            if i % 8 == 7 {
+                bytes.push(acc);
+                acc = 0;
+            }
+        }
+        if ctx.d % 8 != 0 {
+            bytes.push(acc);
+        }
+        Ok(Encoded { bytes })
+    }
+
+    fn decode(&self, bytes: &[u8], ctx: &DecodeCtx) -> Result<Update> {
+        let mut r = wire::Reader::new(bytes);
+        let d = r.u32()? as usize;
+        ensure!(d == ctx.d, "dimension mismatch");
+        let packed = r.bytes(d.div_ceil(8))?;
+        let mask = (0..d)
+            .map(|i| {
+                if packed[i / 8] >> (i % 8) & 1 == 1 {
+                    1.0
+                } else {
+                    0.0
+                }
+            })
+            .collect();
+        Ok(Update::Mask(mask))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256pp;
+
+    #[test]
+    fn exactly_one_bpp_and_threshold_semantics() {
+        let d = 8_000;
+        let mut rng = Xoshiro256pp::new(1);
+        let theta: Vec<f32> = (0..d).map(|_| rng.next_f32()).collect();
+        let ctx = EncodeCtx {
+            d,
+            theta_k: &theta,
+            theta_g: &theta,
+            mask_k: &[],
+            mask_g: &[],
+            s_k: &[],
+            s_g: &[],
+            kappa: 1.0,
+            seed: 0,
+        };
+        let codec = FedMaskCodec::default();
+        let enc = codec.encode(&ctx).unwrap();
+        // d/8 bytes + 4-byte header.
+        assert_eq!(enc.bytes.len(), d / 8 + 4);
+        let dctx = DecodeCtx {
+            d,
+            mask_g: &[],
+            s_g: &[],
+            seed: 0,
+        };
+        let Update::Mask(m) = codec.decode(&enc.bytes, &dctx).unwrap() else {
+            panic!()
+        };
+        for (i, &p) in theta.iter().enumerate() {
+            assert_eq!(m[i] > 0.5, p >= 0.5, "index {i}");
+        }
+    }
+
+    #[test]
+    fn odd_length_mask() {
+        let d = 13;
+        let theta = vec![0.9f32; d];
+        let ctx = EncodeCtx {
+            d,
+            theta_k: &theta,
+            theta_g: &theta,
+            mask_k: &[],
+            mask_g: &[],
+            s_k: &[],
+            s_g: &[],
+            kappa: 1.0,
+            seed: 0,
+        };
+        let codec = FedMaskCodec::default();
+        let enc = codec.encode(&ctx).unwrap();
+        let dctx = DecodeCtx {
+            d,
+            mask_g: &[],
+            s_g: &[],
+            seed: 0,
+        };
+        let Update::Mask(m) = codec.decode(&enc.bytes, &dctx).unwrap() else {
+            panic!()
+        };
+        assert_eq!(m, vec![1.0; d]);
+    }
+}

@@ -1,0 +1,256 @@
+//! Update-compression codecs: DeltaMask (the paper's contribution) and every
+//! baseline in the evaluation (§4: FedPM, FedMask, DeepReduce, EDEN, DRIVE,
+//! QSGD, FedCode).
+//!
+//! Two update families exist:
+//! * **Mask family** — clients transmit (a compressed form of) their sampled
+//!   binary mask `m^{k,t}`; the server Bayesian-aggregates (Alg. 2).
+//!   DeltaMask, FedPM, FedMask, DeepReduce.
+//! * **Delta family** — clients transmit a compressed score update
+//!   `Δs = s^{k,t} − s^{g,t-1}`; the server FedAvg-aggregates scores.
+//!   EDEN, DRIVE, QSGD, FedCode (classic gradient compression applied to
+//!   the mask-score vector, per App. C.1's baseline configuration).
+//!
+//! Every codec serializes *all* side information (seeds, scales, layout
+//! params) into its byte payload so the measured `wire_bits = 8·|bytes|`
+//! is an honest uplink count — the bpp figures in the benches come straight
+//! from these bytes.
+
+pub mod deepreduce;
+pub mod deltamask;
+pub mod drive;
+pub mod eden;
+pub mod fedcode;
+pub mod fedmask;
+pub mod fedpm;
+pub mod qsgd;
+
+pub use deltamask::{DeltaMaskCodec, FilterKind, Ranking};
+
+use crate::util::rng::Xoshiro256pp;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Family {
+    /// Binary mask updates → Bayesian aggregation.
+    Mask,
+    /// Score-delta updates → FedAvg on scores.
+    Delta,
+}
+
+/// Client-side view handed to `encode`.
+pub struct EncodeCtx<'a> {
+    pub d: usize,
+    /// Client posterior mask probabilities θ^{k,t}.
+    pub theta_k: &'a [f32],
+    /// Broadcast global probabilities θ^{g,t-1}.
+    pub theta_g: &'a [f32],
+    /// Client's sampled binary mask m^{k,t} (0.0/1.0).
+    pub mask_k: &'a [f32],
+    /// Shared-seed global binary mask m^{g,t-1} (identical on server).
+    pub mask_g: &'a [f32],
+    /// Client scores s^{k,t} (delta family).
+    pub s_k: &'a [f32],
+    /// Broadcast scores s^{g,t-1} (delta family).
+    pub s_g: &'a [f32],
+    /// Current top-κ fraction (cosine schedule).
+    pub kappa: f64,
+    /// Deterministic per-(round, client) seed for codec-internal randomness
+    /// (rotations, quantization dithers). Known to the server.
+    pub seed: u64,
+}
+
+/// Server-side view handed to `decode`.
+pub struct DecodeCtx<'a> {
+    pub d: usize,
+    pub mask_g: &'a [f32],
+    pub s_g: &'a [f32],
+    pub seed: u64,
+}
+
+/// A reconstructed client update.
+#[derive(Clone, Debug)]
+pub enum Update {
+    /// Reconstructed binary mask m̂^{k,t} (0.0/1.0, may contain filter
+    /// false-positive flips — that noise is part of the experiment).
+    Mask(Vec<f32>),
+    /// Reconstructed score delta Δŝ.
+    ScoreDelta(Vec<f32>),
+}
+
+/// Encoded uplink message.
+#[derive(Clone, Debug)]
+pub struct Encoded {
+    pub bytes: Vec<u8>,
+}
+
+impl Encoded {
+    pub fn wire_bits(&self) -> u64 {
+        self.bytes.len() as u64 * 8
+    }
+
+    pub fn bpp(&self, d: usize) -> f64 {
+        self.wire_bits() as f64 / d as f64
+    }
+}
+
+pub trait UpdateCodec: Send + Sync {
+    fn name(&self) -> &'static str;
+    fn family(&self) -> Family;
+    /// Whether clients re-seed their local scores from the broadcast θ_g
+    /// each round (stochastic-mask methods) or keep personalized local
+    /// scores (FedMask's thresholded-mask regime).
+    fn resync_scores(&self) -> bool {
+        true
+    }
+    fn encode(&self, ctx: &EncodeCtx) -> anyhow::Result<Encoded>;
+    fn decode(&self, bytes: &[u8], ctx: &DecodeCtx) -> anyhow::Result<Update>;
+}
+
+/// Construct a codec by its CLI/bench name.
+pub fn by_name(name: &str) -> Option<Box<dyn UpdateCodec>> {
+    Some(match name {
+        "deltamask" => Box::new(DeltaMaskCodec::default()),
+        "deltamask-bfuse16" => Box::new(DeltaMaskCodec::with_filter(FilterKind::BFuse16)),
+        "deltamask-bfuse32" => Box::new(DeltaMaskCodec::with_filter(FilterKind::BFuse32)),
+        "deltamask-xor8" => Box::new(DeltaMaskCodec::with_filter(FilterKind::Xor8)),
+        "deltamask-xor16" => Box::new(DeltaMaskCodec::with_filter(FilterKind::Xor16)),
+        "deltamask-xor32" => Box::new(DeltaMaskCodec::with_filter(FilterKind::Xor32)),
+        "deltamask-random" => Box::new(DeltaMaskCodec::with_ranking(Ranking::Random)),
+        "fedpm" => Box::new(fedpm::FedPmCodec),
+        "fedmask" => Box::new(fedmask::FedMaskCodec::default()),
+        "deepreduce" => Box::new(deepreduce::DeepReduceCodec::default()),
+        "eden" => Box::new(eden::EdenCodec::default()),
+        "drive" => Box::new(drive::DriveCodec),
+        "qsgd" => Box::new(qsgd::QsgdCodec::default()),
+        "fedcode" => Box::new(fedcode::FedCodeCodec::default()),
+        _ => return None,
+    })
+}
+
+/// All codec names used across the benches.
+pub fn all_names() -> &'static [&'static str] {
+    &[
+        "deltamask", "fedpm", "fedmask", "deepreduce", "eden", "drive", "qsgd", "fedcode",
+    ]
+}
+
+// ---------------------------------------------------------------------------
+// Shared helpers
+// ---------------------------------------------------------------------------
+
+/// Little-endian record writer/readers for codec headers.
+pub(crate) mod wire {
+    pub fn put_u32(out: &mut Vec<u8>, v: u32) {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u64(out: &mut Vec<u8>, v: u64) {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_f32(out: &mut Vec<u8>, v: f32) {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub struct Reader<'a> {
+        pub data: &'a [u8],
+        pub pos: usize,
+    }
+
+    impl<'a> Reader<'a> {
+        pub fn new(data: &'a [u8]) -> Self {
+            Self { data, pos: 0 }
+        }
+
+        pub fn u32(&mut self) -> anyhow::Result<u32> {
+            anyhow::ensure!(self.pos + 4 <= self.data.len(), "truncated u32");
+            let v = u32::from_le_bytes(self.data[self.pos..self.pos + 4].try_into()?);
+            self.pos += 4;
+            Ok(v)
+        }
+
+        pub fn u64(&mut self) -> anyhow::Result<u64> {
+            anyhow::ensure!(self.pos + 8 <= self.data.len(), "truncated u64");
+            let v = u64::from_le_bytes(self.data[self.pos..self.pos + 8].try_into()?);
+            self.pos += 8;
+            Ok(v)
+        }
+
+        pub fn f32(&mut self) -> anyhow::Result<f32> {
+            Ok(f32::from_bits(self.u32()?))
+        }
+
+        pub fn bytes(&mut self, n: usize) -> anyhow::Result<&'a [u8]> {
+            anyhow::ensure!(self.pos + n <= self.data.len(), "truncated bytes");
+            let s = &self.data[self.pos..self.pos + n];
+            self.pos += n;
+            Ok(s)
+        }
+    }
+}
+
+/// In-place fast Walsh–Hadamard transform (length must be a power of two),
+/// orthonormalized. Used by the EDEN/DRIVE randomized rotation.
+pub(crate) fn fwht(v: &mut [f32]) {
+    let n = v.len();
+    debug_assert!(n.is_power_of_two());
+    let mut h = 1;
+    while h < n {
+        let mut i = 0;
+        while i < n {
+            for j in i..i + h {
+                let x = v[j];
+                let y = v[j + h];
+                v[j] = x + y;
+                v[j + h] = x - y;
+            }
+            i += 2 * h;
+        }
+        h *= 2;
+    }
+    let scale = 1.0 / (n as f32).sqrt();
+    for x in v.iter_mut() {
+        *x *= scale;
+    }
+}
+
+const SIGN_SEED_SALT: u64 = 0x51_6e_c0_de_5e_ed_00_01;
+
+/// Seeded random sign diagonal for the randomized Hadamard rotation.
+pub(crate) fn rand_signs(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Xoshiro256pp::new(seed ^ SIGN_SEED_SALT);
+    (0..n)
+        .map(|_| if rng.next_u64() & 1 == 0 { 1.0 } else { -1.0 })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fwht_is_orthonormal_involution() {
+        let mut rng = Xoshiro256pp::new(1);
+        let n = 256;
+        let orig: Vec<f32> = (0..n).map(|_| rng.next_f32() - 0.5).collect();
+        let mut v = orig.clone();
+        fwht(&mut v);
+        // Norm preserved.
+        let n0: f32 = orig.iter().map(|x| x * x).sum();
+        let n1: f32 = v.iter().map(|x| x * x).sum();
+        assert!((n0 - n1).abs() < 1e-3, "{n0} vs {n1}");
+        // H(H(x)) = x for orthonormal H.
+        fwht(&mut v);
+        for (a, b) in v.iter().zip(&orig) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn by_name_covers_all() {
+        for name in all_names() {
+            assert!(by_name(name).is_some(), "{name}");
+        }
+        assert!(by_name("nonsense").is_none());
+    }
+}

@@ -1,0 +1,199 @@
+//! **QSGD** (Alistarh et al. 2017) — stochastic uniform quantization with
+//! `levels` quantization levels per coordinate plus a per-vector norm, with
+//! the (level, sign) stream entropy-coded (we use the adaptive arithmetic
+//! coder; QSGD's Elias coding achieves comparable rates for the sparse
+//! low-level regime).
+
+use super::{wire, DecodeCtx, EncodeCtx, Encoded, Family, Update, UpdateCodec};
+use crate::codec::arith;
+use crate::util::rng::Xoshiro256pp;
+use anyhow::{ensure, Result};
+
+pub struct QsgdCodec {
+    /// Number of positive quantization levels s (QSGD's tuning knob);
+    /// s=1 ⇒ ternary {-1, 0, +1}·‖v‖.
+    pub levels: u32,
+}
+
+impl Default for QsgdCodec {
+    fn default() -> Self {
+        Self { levels: 1 }
+    }
+}
+
+impl UpdateCodec for QsgdCodec {
+    fn name(&self) -> &'static str {
+        "qsgd"
+    }
+
+    fn family(&self) -> Family {
+        Family::Delta
+    }
+
+    fn encode(&self, ctx: &EncodeCtx) -> Result<Encoded> {
+        let d = ctx.d;
+        let s = self.levels as f32;
+        let mut rng = Xoshiro256pp::new(ctx.seed ^ 0x45_47_53_44);
+        let norm = (0..d)
+            .map(|i| {
+                let x = ctx.s_k[i] - ctx.s_g[i];
+                (x * x) as f64
+            })
+            .sum::<f64>()
+            .sqrt() as f32;
+
+        // Stochastic quantization: level_i = floor(|x|/norm * s + u).
+        // Stream layout: per coordinate, unary-ish bit encoding via the
+        // adaptive coder: [nonzero?][sign][level-1 in unary capped at s].
+        let mut bits: Vec<bool> = Vec::with_capacity(d * 2);
+        for i in 0..d {
+            let x = ctx.s_k[i] - ctx.s_g[i];
+            if norm == 0.0 {
+                bits.push(false);
+                continue;
+            }
+            let r = x.abs() / norm * s;
+            let mut level = r.floor();
+            if rng.next_f32() < r - level {
+                level += 1.0;
+            }
+            let level = level as u32;
+            if level == 0 {
+                bits.push(false);
+            } else {
+                bits.push(true);
+                bits.push(x >= 0.0);
+                // level in unary: (level-1) ones then a zero (cap at s).
+                for _ in 0..(level - 1).min(self.levels - 1) {
+                    bits.push(true);
+                }
+                if level < self.levels {
+                    bits.push(false);
+                }
+            }
+        }
+        let coded = arith::encode_bits(&bits);
+        let mut bytes = Vec::with_capacity(coded.len() + 16);
+        wire::put_u32(&mut bytes, d as u32);
+        wire::put_f32(&mut bytes, norm);
+        wire::put_u32(&mut bytes, bits.len() as u32);
+        wire::put_u32(&mut bytes, coded.len() as u32);
+        bytes.extend_from_slice(&coded);
+        Ok(Encoded { bytes })
+    }
+
+    fn decode(&self, bytes: &[u8], ctx: &DecodeCtx) -> Result<Update> {
+        let mut r = wire::Reader::new(bytes);
+        let d = r.u32()? as usize;
+        ensure!(d == ctx.d, "dimension mismatch");
+        let norm = r.f32()?;
+        let nbits = r.u32()? as usize;
+        let clen = r.u32()? as usize;
+        let coded = r.bytes(clen)?;
+        let bits = arith::decode_bits(coded, nbits);
+        let s = self.levels as f32;
+        let mut out = vec![0.0f32; d];
+        let mut pos = 0usize;
+        for item in out.iter_mut() {
+            ensure!(pos < bits.len(), "bit stream underrun");
+            let nonzero = bits[pos];
+            pos += 1;
+            if !nonzero {
+                continue;
+            }
+            let sign = if bits[pos] { 1.0 } else { -1.0 };
+            pos += 1;
+            let mut level = 1u32;
+            while level < self.levels && pos < bits.len() && bits[pos] {
+                level += 1;
+                pos += 1;
+            }
+            if level < self.levels {
+                pos += 1; // terminating zero
+            }
+            *item = sign * norm * level as f32 / s;
+        }
+        Ok(Update::ScoreDelta(out))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256pp;
+
+    #[test]
+    fn roundtrip_unbiased_and_sub_one_bpp() {
+        let d = 50_000;
+        let mut rng = Xoshiro256pp::new(9);
+        let s_g = vec![0.0f32; d];
+        let s_k: Vec<f32> = (0..d).map(|_| rng.next_gaussian() as f32 * 0.01).collect();
+        let ctx = EncodeCtx {
+            d,
+            theta_k: &[],
+            theta_g: &[],
+            mask_k: &[],
+            mask_g: &[],
+            s_k: &s_k,
+            s_g: &s_g,
+            kappa: 1.0,
+            seed: 11,
+        };
+        let codec = QsgdCodec::default();
+        let enc = codec.encode(&ctx).unwrap();
+        // s=1 ternary: most coords quantize to zero (E[level] = |x|·s/‖x‖
+        // ≈ 1/√d per coord) ⇒ rate well under 1 bpp.
+        assert!(enc.bpp(d) < 1.0, "bpp={}", enc.bpp(d));
+        let dctx = DecodeCtx {
+            d,
+            mask_g: &[],
+            s_g: &s_g,
+            seed: 11,
+        };
+        let Update::ScoreDelta(rec) = codec.decode(&enc.bytes, &dctx).unwrap() else {
+            panic!()
+        };
+        // Unbiasedness: E[rec] = x ⇒ mean of (rec - x) ≈ 0 in aggregate.
+        let bias: f64 = rec
+            .iter()
+            .zip(&s_k)
+            .map(|(a, b)| (a - b) as f64)
+            .sum::<f64>()
+            / d as f64;
+        let scale: f64 =
+            s_k.iter().map(|x| x.abs() as f64).sum::<f64>() / d as f64;
+        assert!(bias.abs() < scale, "bias={bias} scale={scale}");
+        // Direction preserved.
+        let dot: f64 = rec.iter().zip(&s_k).map(|(a, b)| (a * b) as f64).sum();
+        assert!(dot > 0.0);
+    }
+
+    #[test]
+    fn zero_vector_roundtrip() {
+        let d = 100;
+        let z = vec![0.0f32; d];
+        let ctx = EncodeCtx {
+            d,
+            theta_k: &[],
+            theta_g: &[],
+            mask_k: &[],
+            mask_g: &[],
+            s_k: &z,
+            s_g: &z,
+            kappa: 1.0,
+            seed: 1,
+        };
+        let codec = QsgdCodec::default();
+        let enc = codec.encode(&ctx).unwrap();
+        let dctx = DecodeCtx {
+            d,
+            mask_g: &[],
+            s_g: &z,
+            seed: 1,
+        };
+        let Update::ScoreDelta(rec) = codec.decode(&enc.bytes, &dctx).unwrap() else {
+            panic!()
+        };
+        assert_eq!(rec, z);
+    }
+}

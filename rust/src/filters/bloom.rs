@@ -1,0 +1,191 @@
+//! Classic Bloom filter — the index-compression substrate of the
+//! **DeepReduce** baseline (Kostopoulou et al. 2021, P0 policy). Included so
+//! the paper's Figures 3/4/7 comparison ("Bloom filters are prone to a
+//! higher false positive rate for the same bits per entry", §5.1) can be
+//! regenerated against our own from-scratch implementation.
+
+use super::MembershipFilter;
+use crate::hash::mix_split;
+
+#[derive(Clone, Debug)]
+pub struct BloomFilter {
+    bits: Vec<u64>,
+    num_bits: u64,
+    num_hashes: u32,
+    num_keys: usize,
+}
+
+impl BloomFilter {
+    /// Build with an explicit bits-per-entry budget (to match a BFuse filter
+    /// byte-for-byte in ablations). Optimal k = bpe·ln2.
+    pub fn with_bits_per_entry(keys: &[u64], bpe: f64) -> Self {
+        let n = keys.len().max(1);
+        let num_bits = ((n as f64 * bpe).ceil() as u64).max(64);
+        let k = ((bpe * std::f64::consts::LN_2).round() as u32).clamp(1, 16);
+        let mut f = Self {
+            bits: vec![0u64; num_bits.div_ceil(64) as usize],
+            num_bits,
+            num_hashes: k,
+            num_keys: keys.len(),
+        };
+        for &key in keys {
+            f.insert(key);
+        }
+        f
+    }
+
+    /// Build for a target false-positive rate: m = -n·ln(p)/ln²2.
+    pub fn with_fp_rate(keys: &[u64], p: f64) -> Self {
+        let bpe = -p.ln() / (std::f64::consts::LN_2 * std::f64::consts::LN_2);
+        Self::with_bits_per_entry(keys, bpe)
+    }
+
+    fn insert(&mut self, key: u64) {
+        let h1 = mix_split(key, 0x51_7c_c1_b7_27_22_0a_95);
+        let h2 = mix_split(key, 0x96_97_9a_6e_0f_3e_1d_31) | 1;
+        for i in 0..self.num_hashes as u64 {
+            let bit = h1.wrapping_add(i.wrapping_mul(h2)) % self.num_bits;
+            self.bits[(bit / 64) as usize] |= 1u64 << (bit % 64);
+        }
+    }
+
+    pub fn num_keys(&self) -> usize {
+        self.num_keys
+    }
+
+    pub fn num_hashes(&self) -> u32 {
+        self.num_hashes
+    }
+
+    pub fn payload(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.bits.len() * 8);
+        for w in &self.bits {
+            out.extend_from_slice(&w.to_le_bytes());
+        }
+        out
+    }
+
+    pub fn from_parts(payload: &[u8], num_bits: u64, num_hashes: u32, num_keys: usize) -> Self {
+        assert_eq!(payload.len() % 8, 0);
+        let bits = payload
+            .chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        Self {
+            bits,
+            num_bits,
+            num_hashes,
+            num_keys,
+        }
+    }
+
+    pub fn num_bits(&self) -> u64 {
+        self.num_bits
+    }
+}
+
+impl MembershipFilter for BloomFilter {
+    #[inline]
+    fn contains(&self, key: u64) -> bool {
+        if self.num_keys == 0 {
+            return false;
+        }
+        let h1 = mix_split(key, 0x51_7c_c1_b7_27_22_0a_95);
+        let h2 = mix_split(key, 0x96_97_9a_6e_0f_3e_1d_31) | 1;
+        for i in 0..self.num_hashes as u64 {
+            let bit = h1.wrapping_add(i.wrapping_mul(h2)) % self.num_bits;
+            if self.bits[(bit / 64) as usize] & (1u64 << (bit % 64)) == 0 {
+                return false;
+            }
+        }
+        true
+    }
+
+    fn payload_bytes(&self) -> usize {
+        self.bits.len() * 8
+    }
+
+    fn bits_per_entry(&self) -> f64 {
+        if self.num_keys == 0 {
+            return 0.0;
+        }
+        self.num_bits as f64 / self.num_keys as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::filters::testutil::random_keys;
+    use crate::filters::{BinaryFuse, MembershipFilter};
+
+    #[test]
+    fn no_false_negatives() {
+        for n in [0usize, 1, 10, 5_000] {
+            let keys = random_keys(n, n as u64 + 1);
+            let f = BloomFilter::with_bits_per_entry(&keys, 8.6);
+            for &k in &keys {
+                assert!(f.contains(k));
+            }
+        }
+    }
+
+    #[test]
+    fn bloom_worse_fp_than_bfuse_at_equal_budget() {
+        // The §5.1 comparison: same bits per entry, Bloom has higher FP rate.
+        let keys = random_keys(20_000, 2);
+        let keyset: std::collections::HashSet<u64> = keys.iter().cloned().collect();
+        let bf = BinaryFuse::<u8, 4>::build(&keys).unwrap();
+        let bloom = BloomFilter::with_bits_per_entry(&keys, bf.bits_per_entry());
+        let mut rng = crate::util::rng::Xoshiro256pp::new(3);
+        let trials = 300_000;
+        let (mut fp_bloom, mut fp_bfuse) = (0usize, 0usize);
+        for _ in 0..trials {
+            let k = rng.next_u64();
+            if keyset.contains(&k) {
+                continue;
+            }
+            if bloom.contains(k) {
+                fp_bloom += 1;
+            }
+            if bf.contains(k) {
+                fp_bfuse += 1;
+            }
+        }
+        assert!(
+            fp_bloom > fp_bfuse,
+            "bloom fp={fp_bloom} bfuse fp={fp_bfuse} (paper §5.1 ordering)"
+        );
+    }
+
+    #[test]
+    fn fp_rate_target() {
+        let keys = random_keys(10_000, 4);
+        let keyset: std::collections::HashSet<u64> = keys.iter().cloned().collect();
+        let f = BloomFilter::with_fp_rate(&keys, 0.01);
+        let mut rng = crate::util::rng::Xoshiro256pp::new(5);
+        let mut fp = 0usize;
+        let trials = 100_000;
+        for _ in 0..trials {
+            let k = rng.next_u64();
+            if !keyset.contains(&k) && f.contains(k) {
+                fp += 1;
+            }
+        }
+        let rate = fp as f64 / trials as f64;
+        assert!(rate < 0.02, "rate={rate}");
+    }
+
+    #[test]
+    fn roundtrip() {
+        let keys = random_keys(1_000, 6);
+        let f = BloomFilter::with_bits_per_entry(&keys, 10.0);
+        let g = BloomFilter::from_parts(&f.payload(), f.num_bits(), f.num_hashes(), f.num_keys());
+        for &k in &keys {
+            assert!(g.contains(k));
+        }
+        for k in 0..10_000u64 {
+            assert_eq!(f.contains(k), g.contains(k));
+        }
+    }
+}

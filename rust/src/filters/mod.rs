@@ -1,0 +1,102 @@
+//! Probabilistic membership filters.
+//!
+//! The DeltaMask codec fingerprints the top-κ mask-update index set Δ′ into a
+//! **binary fuse filter** (Graf & Lemire 2022) whose fingerprint array is then
+//! packed into a grayscale PNG (§3.2, Eq. 1–2). The ablations additionally
+//! need **XOR filters** (Graf & Lemire 2020, Fig. 9 / Table 4) and a **Bloom
+//! filter** (the DeepReduce baseline). All three are implemented from
+//! scratch here.
+
+pub mod bfuse;
+pub mod bloom;
+pub mod xor;
+
+pub use bfuse::BinaryFuse;
+pub use bloom::BloomFilter;
+pub use xor::XorFilter;
+
+/// Fingerprint storage width. The paper's "bits-per-entry" knob (§5.4):
+/// wider fingerprints lower the false-positive rate (≈ 2^-bits) at a linear
+/// space cost.
+pub trait Fingerprint: Copy + Eq + Default {
+    const BITS: u32;
+    fn from_hash(h: u64) -> Self;
+    fn to_u32(self) -> u32;
+    fn xor(self, other: Self) -> Self;
+    fn to_bytes_push(self, out: &mut Vec<u8>);
+    fn read_bytes(bytes: &[u8], idx: usize) -> Self;
+}
+
+macro_rules! impl_fingerprint {
+    ($t:ty, $bits:expr) => {
+        impl Fingerprint for $t {
+            const BITS: u32 = $bits;
+            #[inline]
+            fn from_hash(h: u64) -> Self {
+                // Fold the full 64-bit hash so every input bit matters.
+                (h ^ (h >> 32)) as $t
+            }
+            #[inline]
+            fn to_u32(self) -> u32 {
+                self as u32
+            }
+            #[inline]
+            fn xor(self, other: Self) -> Self {
+                self ^ other
+            }
+            #[inline]
+            fn to_bytes_push(self, out: &mut Vec<u8>) {
+                out.extend_from_slice(&self.to_le_bytes());
+            }
+            #[inline]
+            fn read_bytes(bytes: &[u8], idx: usize) -> Self {
+                const W: usize = ($bits / 8) as usize;
+                let mut buf = [0u8; W];
+                buf.copy_from_slice(&bytes[idx * W..idx * W + W]);
+                <$t>::from_le_bytes(buf)
+            }
+        }
+    };
+}
+
+impl_fingerprint!(u8, 8);
+impl_fingerprint!(u16, 16);
+impl_fingerprint!(u32, 32);
+
+/// Common interface used by the codecs and the ablation benches.
+pub trait MembershipFilter {
+    /// Query a key (for DeltaMask: a mask-parameter index).
+    fn contains(&self, key: u64) -> bool;
+    /// Serialized size of the fingerprint payload in bytes (what goes into
+    /// the grayscale image).
+    fn payload_bytes(&self) -> usize;
+    /// Achieved bits per entry for the construction set.
+    fn bits_per_entry(&self) -> f64;
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use crate::util::rng::Xoshiro256pp;
+
+    /// Distinct random u64 keys.
+    pub fn random_keys(n: usize, seed: u64) -> Vec<u64> {
+        let mut rng = Xoshiro256pp::new(seed);
+        let mut set = std::collections::HashSet::with_capacity(n);
+        while set.len() < n {
+            set.insert(rng.next_u64());
+        }
+        set.into_iter().collect()
+    }
+
+    /// Distinct keys drawn from a small universe [0, d) — the actual
+    /// DeltaMask regime (mask indexes).
+    pub fn random_indexes(n: usize, d: u64, seed: u64) -> Vec<u64> {
+        assert!(n as u64 <= d);
+        let mut rng = Xoshiro256pp::new(seed);
+        let mut set = std::collections::HashSet::with_capacity(n);
+        while set.len() < n {
+            set.insert(rng.below(d));
+        }
+        set.into_iter().collect()
+    }
+}

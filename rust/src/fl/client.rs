@@ -1,0 +1,290 @@
+//! Client-side session: local stochastic-mask training (Alg. 1
+//! ClientUpdate) over the client's shard, with persistent Adam moments
+//! across rounds and deterministic per-(client, round) randomness.
+
+use super::data::ClientData;
+use crate::model::backend::{Backend, FtState, LpState, ModelParams};
+use crate::model::{theta_from_scores, MaskState};
+use crate::util::rng::Xoshiro256pp;
+use anyhow::Result;
+
+pub struct ClientSession {
+    pub id: usize,
+    pub mask_state: MaskState,
+    /// Local fine-tuning state (only allocated for the FT baseline).
+    pub ft_state: Option<FtState>,
+    /// Local linear-probe state (only for the LP baseline).
+    pub lp_state: Option<LpState>,
+    seed: u64,
+}
+
+/// A padded batch iterator: yields (x, y_onehot, n_valid) with fixed B rows,
+/// wrapping the tail so every batch is full (the AOT graphs have static B).
+pub struct Batches<'a> {
+    data: &'a ClientData,
+    order: Vec<usize>,
+    pos: usize,
+    f: usize,
+    c: usize,
+    b: usize,
+}
+
+impl<'a> Iterator for Batches<'a> {
+    type Item = (Vec<f32>, Vec<f32>, usize);
+
+    fn next(&mut self) -> Option<Self::Item> {
+        if self.pos >= self.order.len() {
+            return None;
+        }
+        let take = (self.order.len() - self.pos).min(self.b);
+        let mut x = vec![0.0f32; self.b * self.f];
+        let mut y1h = vec![0.0f32; self.b * self.c];
+        for row in 0..self.b {
+            // Wrap padding rows back onto real samples so batch statistics
+            // stay sane; they still count as gradient weight, which matches
+            // "repeat-to-fill" padding in FL frameworks.
+            let src = self.order[self.pos + (row % take)];
+            x[row * self.f..(row + 1) * self.f]
+                .copy_from_slice(&self.data.x[src * self.f..(src + 1) * self.f]);
+            y1h[row * self.c + self.data.y[src] as usize] = 1.0;
+        }
+        self.pos += take;
+        Some((x, y1h, take))
+    }
+}
+
+impl ClientSession {
+    pub fn new(id: usize, d: usize, experiment_seed: u64) -> Self {
+        Self {
+            id,
+            mask_state: MaskState::new(d),
+            ft_state: None,
+            lp_state: None,
+            seed: experiment_seed
+                ^ (id as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15),
+        }
+    }
+
+    fn round_rng(&self, round: usize) -> Xoshiro256pp {
+        Xoshiro256pp::new(
+            self.seed ^ (round as u64).wrapping_mul(0xd134_2543_de82_ef95),
+        )
+    }
+
+    pub fn batches<'a>(
+        &self,
+        data: &'a ClientData,
+        f: usize,
+        c: usize,
+        b: usize,
+        round: usize,
+    ) -> Batches<'a> {
+        let mut rng = self.round_rng(round);
+        let mut order: Vec<usize> = (0..data.len()).collect();
+        rng.shuffle(&mut order);
+        Batches {
+            data,
+            order,
+            pos: 0,
+            f,
+            c,
+            b,
+        }
+    }
+
+    /// Alg. 1 ClientUpdate: receive θ^{g,t-1}, train E epochs, return
+    /// (θ^{k,t}, mean train loss). Scores are re-seeded from the broadcast
+    /// probabilities; Adam moments persist locally.
+    pub fn local_train(
+        &mut self,
+        backend: &dyn Backend,
+        params: &ModelParams,
+        data: &ClientData,
+        theta_g: &[f32],
+        epochs: usize,
+        round: usize,
+    ) -> Result<(Vec<f32>, f32)> {
+        self.local_train_opts(backend, params, data, theta_g, epochs, round, true)
+    }
+
+    /// `resync` = false keeps the client's own scores (FedMask regime).
+    #[allow(clippy::too_many_arguments)]
+    pub fn local_train_opts(
+        &mut self,
+        backend: &dyn Backend,
+        params: &ModelParams,
+        data: &ClientData,
+        theta_g: &[f32],
+        epochs: usize,
+        round: usize,
+        resync: bool,
+    ) -> Result<(Vec<f32>, f32)> {
+        let cfg = params.cfg;
+        let d = cfg.d();
+        if resync {
+            self.mask_state.set_theta(theta_g);
+        }
+        let mut rng = self.round_rng(round).fork(1);
+        let mut u = vec![0.0f32; d];
+        let mut loss_sum = 0.0f64;
+        let mut steps = 0usize;
+        for _epoch in 0..epochs {
+            for (x, y1h, _valid) in self.batches(data, cfg.f, cfg.c, cfg.b, round) {
+                rng.fill_f32_uniform(&mut u);
+                let loss =
+                    backend.train_step(params, &mut self.mask_state, &x, &y1h, &u)?;
+                loss_sum += loss as f64;
+                steps += 1;
+            }
+        }
+        let mut theta_k = Vec::new();
+        theta_from_scores(&self.mask_state.s, &mut theta_k);
+        Ok((theta_k, (loss_sum / steps.max(1) as f64) as f32))
+    }
+
+    /// Sample the client's transmitted mask m^{k,t} (Alg. 1 line 8) with
+    /// the round-deterministic client seed.
+    pub fn sample_update_mask(&self, theta_k: &[f32], round: usize) -> Vec<f32> {
+        let mut rng = self.round_rng(round).fork(2);
+        let mut u = vec![0.0f32; theta_k.len()];
+        rng.fill_f32_uniform(&mut u);
+        theta_k
+            .iter()
+            .zip(&u)
+            .map(|(&p, &uu)| if uu < p { 1.0f32 } else { 0.0 })
+            .collect()
+    }
+
+    /// Local fine-tuning pass (FT baseline): start from the provided global
+    /// weights, return the weight delta (wb, hw, hb concatenated order).
+    pub fn local_finetune(
+        &mut self,
+        backend: &dyn Backend,
+        params: &ModelParams,
+        data: &ClientData,
+        global: &FtState,
+        epochs: usize,
+        round: usize,
+    ) -> Result<(FtState, f32)> {
+        let cfg = params.cfg;
+        let mut state = match self.ft_state.take() {
+            Some(mut st) => {
+                // Adopt global weights, keep local Adam moments.
+                st.w_blocks.copy_from_slice(&global.w_blocks);
+                st.head_w.copy_from_slice(&global.head_w);
+                st.head_b.copy_from_slice(&global.head_b);
+                st
+            }
+            None => global.clone(),
+        };
+        let mut loss_sum = 0.0f64;
+        let mut steps = 0usize;
+        for _ in 0..epochs {
+            for (x, y1h, _valid) in self.batches(data, cfg.f, cfg.c, cfg.b, round) {
+                loss_sum += backend.ft_step(params, &mut state, &x, &y1h)? as f64;
+                steps += 1;
+            }
+        }
+        let loss = (loss_sum / steps.max(1) as f64) as f32;
+        self.ft_state = Some(state.clone());
+        Ok((state, loss))
+    }
+
+    /// Local linear-probe pass (LP baseline and the §3.3 head-init round).
+    pub fn local_probe(
+        &mut self,
+        backend: &dyn Backend,
+        params: &ModelParams,
+        data: &ClientData,
+        global_head: &LpState,
+        epochs: usize,
+        round: usize,
+    ) -> Result<(LpState, f32)> {
+        let cfg = params.cfg;
+        let mut state = match self.lp_state.take() {
+            Some(mut st) => {
+                st.head_w.copy_from_slice(&global_head.head_w);
+                st.head_b.copy_from_slice(&global_head.head_b);
+                st
+            }
+            None => global_head.clone(),
+        };
+        let mut loss_sum = 0.0f64;
+        let mut steps = 0usize;
+        for _ in 0..epochs {
+            for (x, y1h, _valid) in self.batches(data, cfg.f, cfg.c, cfg.b, round) {
+                loss_sum += backend.lp_step(params, &mut state, &x, &y1h)? as f64;
+                steps += 1;
+            }
+        }
+        let loss = (loss_sum / steps.max(1) as f64) as f32;
+        self.lp_state = Some(state.clone());
+        Ok((state, loss))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fl::data::{generate, profile};
+    use crate::model::{init_params, ArchConfig};
+    use crate::native::NativeBackend;
+
+    #[test]
+    fn batches_cover_all_samples_padded() {
+        let p = profile("cifar10").unwrap();
+        let arch = ArchConfig::new(32, 10, 8, 5);
+        let data = generate(&p, arch, 1, 21, 0, 10.0, 1);
+        let sess = ClientSession::new(0, arch.d(), 7);
+        let batches: Vec<_> = sess.batches(&data.clients[0], 32, 10, 8, 0).collect();
+        assert_eq!(batches.len(), 3); // ceil(21/8)
+        assert!(batches.iter().all(|(x, y, _)| x.len() == 8 * 32 && y.len() == 8 * 10));
+        let valid: usize = batches.iter().map(|(_, _, v)| v).sum();
+        assert_eq!(valid, 21);
+        // Every one-hot row sums to exactly 1 (padding rows are real samples).
+        for (_, y1h, _) in &batches {
+            for row in 0..8 {
+                let s: f32 = y1h[row * 10..(row + 1) * 10].iter().sum();
+                assert_eq!(s, 1.0);
+            }
+        }
+    }
+
+    #[test]
+    fn local_train_deterministic_per_round() {
+        let p = profile("cifar10").unwrap();
+        let arch = ArchConfig::new(32, 10, 8, 5);
+        let data = generate(&p, arch, 1, 32, 0, 10.0, 2);
+        let params = init_params(arch, 3);
+        let backend = NativeBackend;
+        let theta_g = vec![0.5f32; arch.d()];
+        let mut a = ClientSession::new(0, arch.d(), 9);
+        let mut b = ClientSession::new(0, arch.d(), 9);
+        let (ta, la) = a
+            .local_train(&backend, &params, &data.clients[0], &theta_g, 1, 5)
+            .unwrap();
+        let (tb, lb) = b
+            .local_train(&backend, &params, &data.clients[0], &theta_g, 1, 5)
+            .unwrap();
+        assert_eq!(ta, tb);
+        assert_eq!(la, lb);
+        // Different round ⇒ different batch order/uniforms ⇒ different θ.
+        let (tc, _) = b
+            .local_train(&backend, &params, &data.clients[0], &theta_g, 1, 6)
+            .unwrap();
+        assert_ne!(ta, tc);
+    }
+
+    #[test]
+    fn update_mask_seeded_and_distinct_across_clients() {
+        let d = 1000;
+        let theta = vec![0.5f32; d];
+        let a = ClientSession::new(0, d, 1);
+        let b = ClientSession::new(1, d, 1);
+        let ma1 = a.sample_update_mask(&theta, 3);
+        let ma2 = a.sample_update_mask(&theta, 3);
+        let mb = b.sample_update_mask(&theta, 3);
+        assert_eq!(ma1, ma2);
+        assert_ne!(ma1, mb);
+    }
+}

@@ -1,0 +1,281 @@
+//! Synthetic federated datasets — the DESIGN.md §2 substitution for the
+//! paper's 8 image datasets.
+//!
+//! Each dataset profile emulates the *frozen-backbone feature distribution*
+//! of one benchmark: class prototypes on a hypersphere, split into
+//! `subclusters` modes per class (more modes ⇒ less linearly separable ⇒
+//! larger gap between Linear Probing and adaptive methods, e.g. SVHN), plus
+//! isotropic noise. Difficulty knobs are calibrated so the Linear-Probing
+//! accuracy ordering matches the paper's Table 2 LP row.
+//!
+//! Client splits follow the paper §4: Dirichlet(a) over classes with a=10
+//! (IID, C_p ≈ 1.0) or a=0.1 (non-IID, C_p ≈ 0.2).
+
+use crate::model::ArchConfig;
+use crate::util::rng::Xoshiro256pp;
+
+/// Profile of one simulated dataset.
+#[derive(Clone, Debug)]
+pub struct DatasetProfile {
+    pub name: &'static str,
+    pub classes: usize,
+    /// Sub-modes per class: drives the LP↔adaptive gap.
+    pub subclusters: usize,
+    /// Within-cluster noise std (relative to unit prototypes).
+    pub noise: f32,
+    /// Prototype spread: scale of cluster centers.
+    pub radius: f32,
+}
+
+/// The paper's 8 datasets (§4) with difficulty calibrated to its LP row.
+pub fn profiles() -> Vec<DatasetProfile> {
+    // Calibrated against centralized-LP probes (see EXPERIMENTS.md §Data)
+    // to land near the paper's Table 2 Linear-Probing row: cifar10 94,
+    // cifar100 74, svhn 59 (multi-modal ⇒ LP weak / adaptation strong),
+    // emnist 89, fmnist 89, eurosat 95, food101 77, cars196 62.
+    vec![
+        // name        classes  sub  noise  radius
+        DatasetProfile { name: "cifar10",  classes: 10,  subclusters: 1, noise: 0.19, radius: 1.0 },
+        DatasetProfile { name: "cifar100", classes: 100, subclusters: 1, noise: 0.17, radius: 1.0 },
+        DatasetProfile { name: "svhn",     classes: 10,  subclusters: 4, noise: 0.18, radius: 1.0 },
+        DatasetProfile { name: "emnist",   classes: 49,  subclusters: 1, noise: 0.16, radius: 1.0 },
+        DatasetProfile { name: "fmnist",   classes: 10,  subclusters: 1, noise: 0.22, radius: 1.0 },
+        DatasetProfile { name: "eurosat",  classes: 10,  subclusters: 1, noise: 0.18, radius: 1.0 },
+        DatasetProfile { name: "food101",  classes: 101, subclusters: 2, noise: 0.14, radius: 1.0 },
+        DatasetProfile { name: "cars196",  classes: 196, subclusters: 1, noise: 0.20, radius: 1.0 },
+    ]
+}
+
+pub fn profile(name: &str) -> Option<DatasetProfile> {
+    profiles().into_iter().find(|p| p.name == name)
+}
+
+/// One client's local shard.
+#[derive(Clone, Debug)]
+pub struct ClientData {
+    pub x: Vec<f32>, // n·F
+    pub y: Vec<u32>,
+}
+
+impl ClientData {
+    pub fn len(&self) -> usize {
+        self.y.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.y.is_empty()
+    }
+}
+
+/// A federated dataset: per-client shards + a global balanced test set.
+#[derive(Clone, Debug)]
+pub struct FederatedData {
+    pub f: usize,
+    pub classes: usize,
+    pub clients: Vec<ClientData>,
+    pub test: ClientData,
+}
+
+struct FeatureGen {
+    protos: Vec<f32>, // classes·subclusters·F
+    f: usize,
+    classes: usize,
+    subclusters: usize,
+    noise: f32,
+}
+
+impl FeatureGen {
+    fn new(p: &DatasetProfile, f: usize, seed: u64) -> Self {
+        let mut rng = Xoshiro256pp::new(seed ^ 0xda7a_5e3d);
+        let mut protos = vec![0.0f32; p.classes * p.subclusters * f];
+        rng.fill_gaussian_f32(&mut protos, 0.0, 1.0);
+        // Normalize each prototype to `radius` (hypersphere).
+        for chunk in protos.chunks_mut(f) {
+            let norm: f32 = chunk.iter().map(|v| v * v).sum::<f32>().sqrt().max(1e-6);
+            for v in chunk.iter_mut() {
+                *v *= p.radius / norm;
+            }
+        }
+        Self {
+            protos,
+            f,
+            classes: p.classes,
+            subclusters: p.subclusters,
+            noise: p.noise,
+        }
+    }
+
+    fn sample(&self, class: usize, rng: &mut Xoshiro256pp, out: &mut [f32]) {
+        debug_assert!(class < self.classes);
+        let sub = rng.below(self.subclusters as u64) as usize;
+        let base = (class * self.subclusters + sub) * self.f;
+        for (j, o) in out.iter_mut().enumerate() {
+            *o = self.protos[base + j] + self.noise * rng.next_gaussian() as f32;
+        }
+    }
+}
+
+/// Generate the full federated dataset.
+///
+/// Label distribution per client ~ Dirichlet(alpha·1_C) (paper §4); the test
+/// set is balanced across classes.
+pub fn generate(
+    p: &DatasetProfile,
+    arch: ArchConfig,
+    n_clients: usize,
+    samples_per_client: usize,
+    test_samples: usize,
+    dirichlet_alpha: f64,
+    seed: u64,
+) -> FederatedData {
+    assert_eq!(arch.c, p.classes, "arch class count must match dataset");
+    let gen = FeatureGen::new(p, arch.f, seed);
+    let mut rng = Xoshiro256pp::new(seed);
+
+    let mut clients = Vec::with_capacity(n_clients);
+    for k in 0..n_clients {
+        let mut crng = rng.fork(k as u64 + 1);
+        let pk = crng.next_dirichlet(dirichlet_alpha, p.classes);
+        // CDF sampling of labels.
+        let mut cdf = vec![0.0f64; p.classes];
+        let mut acc = 0.0;
+        for (c, v) in pk.iter().enumerate() {
+            acc += v;
+            cdf[c] = acc;
+        }
+        let mut x = vec![0.0f32; samples_per_client * arch.f];
+        let mut y = Vec::with_capacity(samples_per_client);
+        for i in 0..samples_per_client {
+            let u = crng.next_f64() * acc;
+            let class = cdf.partition_point(|&c| c < u).min(p.classes - 1);
+            y.push(class as u32);
+            gen.sample(class, &mut crng, &mut x[i * arch.f..(i + 1) * arch.f]);
+        }
+        clients.push(ClientData { x, y });
+    }
+
+    // Balanced test set.
+    let mut trng = rng.fork(0xdead);
+    let mut tx = vec![0.0f32; test_samples * arch.f];
+    let mut ty = Vec::with_capacity(test_samples);
+    for i in 0..test_samples {
+        let class = i % p.classes;
+        ty.push(class as u32);
+        gen.sample(class, &mut trng, &mut tx[i * arch.f..(i + 1) * arch.f]);
+    }
+    FederatedData {
+        f: arch.f,
+        classes: p.classes,
+        clients,
+        test: ClientData { x: tx, y: ty },
+    }
+}
+
+/// Empirical class-distribution concentration C_p: mean over clients of the
+/// fraction of classes present (paper: Dir(10) ⇒ ≈1.0, Dir(0.1) ⇒ ≈0.2).
+pub fn class_presence(data: &FederatedData) -> f64 {
+    let mut total = 0.0;
+    for c in &data.clients {
+        let mut seen = vec![false; data.classes];
+        for &y in &c.y {
+            seen[y as usize] = true;
+        }
+        total += seen.iter().filter(|&&s| s).count() as f64 / data.classes as f64;
+    }
+    total / data.clients.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn arch(c: usize) -> ArchConfig {
+        ArchConfig::new(32, c, 8, 5)
+    }
+
+    #[test]
+    fn all_profiles_cover_paper_datasets() {
+        let names: Vec<&str> = profiles().iter().map(|p| p.name).collect();
+        assert_eq!(
+            names,
+            vec!["cifar10", "cifar100", "svhn", "emnist", "fmnist", "eurosat", "food101", "cars196"]
+        );
+        let classes: Vec<usize> = profiles().iter().map(|p| p.classes).collect();
+        assert_eq!(classes, vec![10, 100, 10, 49, 10, 10, 101, 196]);
+    }
+
+    #[test]
+    fn iid_vs_noniid_class_presence() {
+        let p = profile("cifar10").unwrap();
+        let iid = generate(&p, arch(10), 20, 200, 100, 10.0, 1);
+        let noniid = generate(&p, arch(10), 20, 200, 100, 0.1, 1);
+        let cp_iid = class_presence(&iid);
+        let cp_non = class_presence(&noniid);
+        assert!(cp_iid > 0.9, "C_p IID = {cp_iid}");
+        assert!(cp_non < 0.5, "C_p non-IID = {cp_non}");
+    }
+
+    #[test]
+    fn deterministic_generation() {
+        let p = profile("eurosat").unwrap();
+        let a = generate(&p, arch(10), 3, 50, 40, 10.0, 7);
+        let b = generate(&p, arch(10), 3, 50, 40, 10.0, 7);
+        assert_eq!(a.clients[0].x, b.clients[0].x);
+        assert_eq!(a.test.y, b.test.y);
+    }
+
+    #[test]
+    fn test_set_balanced() {
+        let p = profile("cifar10").unwrap();
+        let data = generate(&p, arch(10), 2, 10, 200, 10.0, 3);
+        let mut counts = vec![0; 10];
+        for &y in &data.test.y {
+            counts[y as usize] += 1;
+        }
+        assert!(counts.iter().all(|&c| c == 20), "{counts:?}");
+    }
+
+    #[test]
+    fn features_are_class_informative() {
+        // Nearest-prototype classification on clean features ≫ chance.
+        let p = profile("cifar10").unwrap();
+        let a = arch(10);
+        let data = generate(&p, a, 1, 400, 0, 10.0, 5);
+        let c = &data.clients[0];
+        // Class means as prototypes.
+        let mut means = vec![0.0f32; 10 * a.f];
+        let mut counts = vec![0usize; 10];
+        for (i, &y) in c.y.iter().enumerate() {
+            counts[y as usize] += 1;
+            for j in 0..a.f {
+                means[y as usize * a.f + j] += c.x[i * a.f + j];
+            }
+        }
+        for y in 0..10 {
+            for j in 0..a.f {
+                means[y * a.f + j] /= counts[y].max(1) as f32;
+            }
+        }
+        let mut correct = 0;
+        for (i, &y) in c.y.iter().enumerate() {
+            let mut best = 0;
+            let mut best_d = f32::INFINITY;
+            for k in 0..10 {
+                let mut dd = 0.0;
+                for j in 0..a.f {
+                    let diff = c.x[i * a.f + j] - means[k * a.f + j];
+                    dd += diff * diff;
+                }
+                if dd < best_d {
+                    best_d = dd;
+                    best = k;
+                }
+            }
+            if best == y as usize {
+                correct += 1;
+            }
+        }
+        let acc = correct as f64 / c.y.len() as f64;
+        assert!(acc > 0.6, "nearest-mean acc = {acc}");
+    }
+}

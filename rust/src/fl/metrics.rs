@@ -1,0 +1,190 @@
+//! Per-round and per-experiment metrics; JSON emission for the benches.
+
+use crate::util::json::Json;
+
+#[derive(Clone, Debug)]
+pub struct RoundMetrics {
+    pub round: usize,
+    pub kappa: f64,
+    /// Mean uplink bits per participating client.
+    pub mean_bits: f64,
+    /// Mean bits-per-parameter for this round.
+    pub mean_bpp: f64,
+    pub enc_ms_mean: f64,
+    pub dec_ms_mean: f64,
+    pub train_loss: f64,
+    pub accuracy: Option<f64>,
+}
+
+#[derive(Clone, Debug)]
+pub struct ExperimentResult {
+    pub method: String,
+    pub dataset: String,
+    pub arch: String,
+    pub n_clients: usize,
+    pub rho: f64,
+    pub dirichlet_alpha: f64,
+    pub d: usize,
+    pub rounds: Vec<RoundMetrics>,
+    /// One-time §3.3 head-initialization uplink (bits/client), reported
+    /// separately from the per-round update bpp exactly like the paper
+    /// (its FedMask row is exactly 1.0 bpp).
+    pub head_init_bits: f64,
+    pub wall_secs: f64,
+}
+
+impl ExperimentResult {
+    pub fn final_accuracy(&self) -> f64 {
+        self.rounds
+            .iter()
+            .rev()
+            .find_map(|r| r.accuracy)
+            .unwrap_or(0.0)
+    }
+
+    pub fn peak_accuracy(&self) -> f64 {
+        self.rounds
+            .iter()
+            .filter_map(|r| r.accuracy)
+            .fold(0.0, f64::max)
+    }
+
+    /// Average uplink bpp over all rounds (the paper's "Avg. bpp" column).
+    pub fn avg_bpp(&self) -> f64 {
+        if self.rounds.is_empty() {
+            return 0.0;
+        }
+        self.rounds.iter().map(|r| r.mean_bpp).sum::<f64>() / self.rounds.len() as f64
+    }
+
+    /// Total uplink volume per client over the run, in MiB (head init
+    /// included).
+    pub fn total_uplink_mib(&self) -> f64 {
+        (self.head_init_bits + self.rounds.iter().map(|r| r.mean_bits).sum::<f64>())
+            / 8.0
+            / (1024.0 * 1024.0)
+    }
+
+    /// Cumulative uplink MiB at the first eval where accuracy comes within
+    /// `margin` (e.g. 0.01) of the run's peak — Fig. 7's data-volume metric.
+    pub fn volume_to_within(&self, margin: f64) -> Option<f64> {
+        let peak = self.peak_accuracy();
+        if peak <= 0.0 {
+            return None;
+        }
+        let mut cum_bits = self.head_init_bits;
+        for r in &self.rounds {
+            cum_bits += r.mean_bits;
+            if let Some(acc) = r.accuracy {
+                if acc >= peak - margin {
+                    return Some(cum_bits / 8.0 / (1024.0 * 1024.0));
+                }
+            }
+        }
+        None
+    }
+
+    pub fn mean_enc_ms(&self) -> f64 {
+        crate::util::stats::mean(&self.rounds.iter().map(|r| r.enc_ms_mean).collect::<Vec<_>>())
+    }
+
+    pub fn mean_dec_ms(&self) -> f64 {
+        crate::util::stats::mean(&self.rounds.iter().map(|r| r.dec_ms_mean).collect::<Vec<_>>())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("method", Json::from_str_(&self.method))
+            .set("dataset", Json::from_str_(&self.dataset))
+            .set("arch", Json::from_str_(&self.arch))
+            .set("n_clients", Json::Num(self.n_clients as f64))
+            .set("rho", Json::Num(self.rho))
+            .set("dirichlet_alpha", Json::Num(self.dirichlet_alpha))
+            .set("d", Json::Num(self.d as f64))
+            .set("final_accuracy", Json::Num(self.final_accuracy()))
+            .set("peak_accuracy", Json::Num(self.peak_accuracy()))
+            .set("avg_bpp", Json::Num(self.avg_bpp()))
+            .set("total_uplink_mib", Json::Num(self.total_uplink_mib()))
+            .set("mean_enc_ms", Json::Num(self.mean_enc_ms()))
+            .set("mean_dec_ms", Json::Num(self.mean_dec_ms()))
+            .set("head_init_bits", Json::Num(self.head_init_bits))
+            .set("wall_secs", Json::Num(self.wall_secs));
+        let rounds: Vec<Json> = self
+            .rounds
+            .iter()
+            .map(|r| {
+                let mut o = Json::obj();
+                o.set("round", Json::Num(r.round as f64))
+                    .set("kappa", Json::Num(r.kappa))
+                    .set("bpp", Json::Num(r.mean_bpp))
+                    .set("loss", Json::Num(r.train_loss))
+                    .set(
+                        "acc",
+                        r.accuracy.map(Json::Num).unwrap_or(Json::Null),
+                    );
+                o
+            })
+            .collect();
+        j.set("rounds", Json::Arr(rounds));
+        j
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(rounds: Vec<RoundMetrics>) -> ExperimentResult {
+        ExperimentResult {
+            method: "deltamask".into(),
+            dataset: "cifar10".into(),
+            arch: "vitb32".into(),
+            n_clients: 10,
+            rho: 1.0,
+            dirichlet_alpha: 10.0,
+            d: 1000,
+            rounds,
+            head_init_bits: 0.0,
+            wall_secs: 1.0,
+        }
+    }
+
+    fn round(n: usize, bpp: f64, acc: Option<f64>) -> RoundMetrics {
+        RoundMetrics {
+            round: n,
+            kappa: 0.8,
+            mean_bits: bpp * 1000.0,
+            mean_bpp: bpp,
+            enc_ms_mean: 1.0,
+            dec_ms_mean: 2.0,
+            train_loss: 0.5,
+            accuracy: acc,
+        }
+    }
+
+    #[test]
+    fn summary_stats() {
+        let r = mk(vec![
+            round(0, 0.2, Some(0.5)),
+            round(1, 0.1, None),
+            round(2, 0.1, Some(0.8)),
+            round(3, 0.1, Some(0.79)),
+        ]);
+        assert!((r.avg_bpp() - 0.125).abs() < 1e-9);
+        assert_eq!(r.peak_accuracy(), 0.8);
+        assert_eq!(r.final_accuracy(), 0.79);
+        // within 1% of peak (0.8): first hit at round 2.
+        let v = r.volume_to_within(0.01).unwrap();
+        let expect = (0.2 + 0.1 + 0.1) * 1000.0 / 8.0 / (1024.0 * 1024.0);
+        assert!((v - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn json_emission_parses_back() {
+        let r = mk(vec![round(0, 0.2, Some(0.5))]);
+        let j = r.to_json().to_string_pretty();
+        let back = crate::util::json::Json::parse(&j).unwrap();
+        assert_eq!(back.get("method").unwrap().as_str().unwrap(), "deltamask");
+        assert!(back.get("rounds").unwrap().as_arr().unwrap().len() == 1);
+    }
+}

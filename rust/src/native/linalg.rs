@@ -1,0 +1,127 @@
+//! Minimal dense f32 matmul kernels for the native backend. Cache-friendly
+//! loop orders (ikj for NN/BT-via-kj) — no external BLAS in the offline
+//! vendor set, and the simulated-FM sizes (≤ 64×384×384) stay well inside
+//! L2 cache.
+
+/// C = A @ B with A:(m,k), B:(k,n), C:(m,n). (ikj order: streams B rows.)
+pub fn matmul_nn(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    c.fill(0.0);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        for (kk, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[kk * n..(kk + 1) * n];
+            for j in 0..n {
+                crow[j] += av * brow[j];
+            }
+        }
+    }
+}
+
+/// C = A @ Bᵀ with A:(m,k), B:(n,k), C:(m,n). (Dot products of rows —
+/// both operands stream contiguously.)
+pub fn matmul_bt(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    debug_assert_eq!(c.len(), m * n);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        for j in 0..n {
+            let brow = &b[j * k..(j + 1) * k];
+            let mut acc = 0.0f32;
+            for kk in 0..k {
+                acc += arow[kk] * brow[kk];
+            }
+            c[i * n + j] = acc;
+        }
+    }
+}
+
+/// C = Aᵀ @ B with A:(k,m), B:(k,n), C:(m,n). (Accumulates rank-1 updates;
+/// ikj-style inner streaming.)
+pub fn matmul_at(a: &[f32], b: &[f32], c: &mut [f32], k: usize, m: usize, n: usize) {
+    debug_assert_eq!(a.len(), k * m);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    c.fill(0.0);
+    for kk in 0..k {
+        let arow = &a[kk * m..(kk + 1) * m];
+        let brow = &b[kk * n..(kk + 1) * n];
+        for i in 0..m {
+            let av = arow[i];
+            if av == 0.0 {
+                continue;
+            }
+            let crow = &mut c[i * n..(i + 1) * n];
+            for j in 0..n {
+                crow[j] += av * brow[j];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256pp;
+
+    fn naive_nn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut c = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0;
+                for kk in 0..k {
+                    acc += a[i * k + kk] * b[kk * n + j];
+                }
+                c[i * n + j] = acc;
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn all_variants_match_naive() {
+        let mut rng = Xoshiro256pp::new(1);
+        for &(m, k, n) in &[(1usize, 1usize, 1usize), (3, 5, 7), (8, 32, 16), (17, 9, 23)] {
+            let a: Vec<f32> = (0..m * k).map(|_| rng.next_f32() - 0.5).collect();
+            let b: Vec<f32> = (0..k * n).map(|_| rng.next_f32() - 0.5).collect();
+            let want = naive_nn(&a, &b, m, k, n);
+
+            let mut c = vec![0.0f32; m * n];
+            matmul_nn(&a, &b, &mut c, m, k, n);
+            assert_close(&c, &want);
+
+            // A @ Bᵀ: feed B transposed.
+            let mut bt = vec![0.0f32; n * k];
+            for kk in 0..k {
+                for j in 0..n {
+                    bt[j * k + kk] = b[kk * n + j];
+                }
+            }
+            matmul_bt(&a, &bt, &mut c, m, k, n);
+            assert_close(&c, &want);
+
+            // Aᵀ @ B: feed A transposed.
+            let mut at = vec![0.0f32; k * m];
+            for i in 0..m {
+                for kk in 0..k {
+                    at[kk * m + i] = a[i * k + kk];
+                }
+            }
+            matmul_at(&at, &b, &mut c, k, m, n);
+            assert_close(&c, &want);
+        }
+    }
+
+    fn assert_close(got: &[f32], want: &[f32]) {
+        for (g, w) in got.iter().zip(want) {
+            assert!((g - w).abs() < 1e-4, "{g} vs {w}");
+        }
+    }
+}

@@ -1,0 +1,182 @@
+//! The PJRT execution engine: compile-once, execute-many.
+//!
+//! Perf-relevant design (DESIGN.md §8, L3 targets):
+//! * **Device-resident constants** — frozen backbone weights / head tensors
+//!   are uploaded once per client-session as `PjRtBuffer`s and passed by
+//!   reference to `execute_b`, so the per-step host→device traffic is only
+//!   the mutable state (scores, Adam moments, batch, uniforms).
+//! * **Executable cache** — each `(hlo file)` is compiled exactly once per
+//!   process; clients share the compiled artifact through `Arc`.
+
+use super::manifest::{GraphSpec, Manifest};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+
+/// Process-wide executor over one PJRT CPU client.
+pub struct Executor {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: Mutex<HashMap<PathBuf, Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+// The PJRT client/executable wrappers are thread-compatible C++ objects the
+// xla crate does not mark Send/Sync; we serialize compilation through the
+// cache mutex and PJRT CPU execution itself is thread-safe.
+unsafe impl Send for Executor {}
+unsafe impl Sync for Executor {}
+
+impl Executor {
+    pub fn new(manifest: Manifest) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Self {
+            client,
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Load from the default artifacts location.
+    pub fn from_artifacts() -> Result<Self> {
+        let dir = super::artifacts_dir()
+            .ok_or_else(|| anyhow!("artifacts/manifest.json not found — run `make artifacts`"))?;
+        Self::new(Manifest::load(&dir)?)
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile (or fetch from cache) the executable for a graph.
+    pub fn graph(&self, arch: &str, c: usize, name: &str) -> Result<GraphHandle> {
+        let combo = self
+            .manifest
+            .find(arch, c)
+            .ok_or_else(|| anyhow!("no combo {arch}/C={c} in manifest"))?;
+        let spec = combo.graph(name)?.clone();
+        let exe = self.compile_cached(&spec)?;
+        Ok(GraphHandle {
+            exe,
+            spec,
+            combo_d: combo.d,
+        })
+    }
+
+    fn compile_cached(&self, spec: &GraphSpec) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        let mut cache = self.cache.lock().unwrap();
+        if let Some(exe) = cache.get(&spec.file) {
+            return Ok(exe.clone());
+        }
+        let path = spec
+            .file
+            .to_str()
+            .ok_or_else(|| anyhow!("non-utf8 artifact path"))?;
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow!("parsing {path}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {path}: {e:?}"))?;
+        let exe = Arc::new(exe);
+        cache.insert(spec.file.clone(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Upload a host tensor once; reuse the returned buffer across calls.
+    pub fn upload(&self, data: &[f32], shape: &[usize]) -> Result<xla::PjRtBuffer> {
+        let n: usize = shape.iter().product::<usize>().max(1);
+        if data.len() != n {
+            bail!("upload: data len {} != shape product {n}", data.len());
+        }
+        let dims: Vec<usize> = shape.to_vec();
+        self.client
+            .buffer_from_host_buffer(data, &dims, None)
+            .map_err(|e| anyhow!("buffer_from_host_buffer: {e:?}"))
+    }
+}
+
+/// A compiled graph plus its manifest spec. Cheap to clone-by-handle via the
+/// inner `Arc`.
+pub struct GraphHandle {
+    exe: Arc<xla::PjRtLoadedExecutable>,
+    pub spec: GraphSpec,
+    pub combo_d: usize,
+}
+
+impl GraphHandle {
+    /// Execute with device-resident buffers; outputs come back as host
+    /// `Vec<f32>` per manifest output spec.
+    pub fn execute(&self, inputs: &[&xla::PjRtBuffer]) -> Result<Vec<Vec<f32>>> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "graph {:?}: got {} inputs, expected {}",
+                self.spec.file.file_name().unwrap_or_default(),
+                inputs.len(),
+                self.spec.inputs.len()
+            );
+        }
+        let borrowed: Vec<&xla::PjRtBuffer> = inputs.to_vec();
+        let result = self
+            .exe
+            .execute_b(&borrowed)
+            .map_err(|e| anyhow!("execute: {e:?}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: always a tuple literal.
+        let parts = tuple
+            .to_tuple()
+            .map_err(|e| anyhow!("to_tuple: {e:?}"))?;
+        if parts.len() != self.spec.outputs.len() {
+            bail!(
+                "graph returned {} outputs, manifest says {}",
+                parts.len(),
+                self.spec.outputs.len()
+            );
+        }
+        let mut out = Vec::with_capacity(parts.len());
+        for (part, spec) in parts.iter().zip(&self.spec.outputs) {
+            let v = part
+                .to_vec::<f32>()
+                .map_err(|e| anyhow!("output {}: {e:?}", spec.name))?;
+            if v.len() != spec.elements() {
+                bail!(
+                    "output {}: {} elements, expected {}",
+                    spec.name,
+                    v.len(),
+                    spec.elements()
+                );
+            }
+            out.push(v);
+        }
+        Ok(out)
+    }
+
+    /// Convenience: execute from host slices (uploads everything each call —
+    /// fine for one-shots; hot paths should pre-upload via
+    /// [`Executor::upload`] and call [`execute`]).
+    pub fn execute_host(
+        &self,
+        exec: &Executor,
+        inputs: &[&[f32]],
+    ) -> Result<Vec<Vec<f32>>> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "execute_host: got {} inputs, expected {}",
+                inputs.len(),
+                self.spec.inputs.len()
+            );
+        }
+        let mut bufs = Vec::with_capacity(inputs.len());
+        for (data, spec) in inputs.iter().zip(&self.spec.inputs) {
+            bufs.push(
+                exec.upload(data, &spec.shape)
+                    .with_context(|| format!("uploading input {}", spec.name))?,
+            );
+        }
+        let refs: Vec<&xla::PjRtBuffer> = bufs.iter().collect();
+        self.execute(&refs)
+    }
+}

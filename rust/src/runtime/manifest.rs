@@ -1,0 +1,196 @@
+//! `artifacts/manifest.json` — the shape contract between `aot.py` and the
+//! rust runtime. Parsed with our own JSON parser (no serde offline).
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct GraphSpec {
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+#[derive(Clone, Debug)]
+pub struct ComboSpec {
+    pub arch: String,
+    pub f: usize,
+    pub c: usize,
+    pub b: usize,
+    pub l: usize,
+    pub d: usize,
+    pub graphs: BTreeMap<String, GraphSpec>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub combos: Vec<ComboSpec>,
+    /// dataset name -> class count (the paper's 8 datasets)
+    pub datasets: BTreeMap<String, usize>,
+}
+
+fn tensor_specs(v: &Json) -> Result<Vec<TensorSpec>> {
+    v.as_arr()
+        .ok_or_else(|| anyhow!("expected array of tensor specs"))?
+        .iter()
+        .map(|t| {
+            Ok(TensorSpec {
+                name: t
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("tensor missing name"))?
+                    .to_string(),
+                shape: t
+                    .get("shape")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("tensor missing shape"))?
+                    .iter()
+                    .map(|x| x.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                    .collect::<Result<_>>()?,
+                dtype: t
+                    .get("dtype")
+                    .and_then(Json::as_str)
+                    .unwrap_or("f32")
+                    .to_string(),
+            })
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {}/manifest.json", dir.display()))?;
+        let root = Json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+        let mut combos = Vec::new();
+        for combo in root
+            .get("combos")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing combos"))?
+        {
+            let get_usize = |k: &str| -> Result<usize> {
+                combo
+                    .get(k)
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow!("combo missing {k}"))
+            };
+            let mut graphs = BTreeMap::new();
+            if let Some(Json::Obj(gmap)) = combo.get("graphs") {
+                for (gname, g) in gmap {
+                    let file = g
+                        .get("file")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| anyhow!("graph missing file"))?;
+                    graphs.insert(
+                        gname.clone(),
+                        GraphSpec {
+                            file: dir.join(file),
+                            inputs: tensor_specs(
+                                g.get("inputs").ok_or_else(|| anyhow!("no inputs"))?,
+                            )?,
+                            outputs: tensor_specs(
+                                g.get("outputs").ok_or_else(|| anyhow!("no outputs"))?,
+                            )?,
+                        },
+                    );
+                }
+            }
+            combos.push(ComboSpec {
+                arch: combo
+                    .get("arch")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("combo missing arch"))?
+                    .to_string(),
+                f: get_usize("F")?,
+                c: get_usize("C")?,
+                b: get_usize("B")?,
+                l: get_usize("L")?,
+                d: get_usize("d")?,
+                graphs,
+            });
+        }
+        let mut datasets = BTreeMap::new();
+        if let Some(Json::Obj(m)) = root.get("datasets") {
+            for (k, v) in m {
+                datasets.insert(
+                    k.clone(),
+                    v.as_usize().ok_or_else(|| anyhow!("bad dataset class count"))?,
+                );
+            }
+        }
+        if combos.is_empty() {
+            bail!("manifest has no combos");
+        }
+        Ok(Self {
+            dir: dir.to_path_buf(),
+            combos,
+            datasets,
+        })
+    }
+
+    pub fn find(&self, arch: &str, c: usize) -> Option<&ComboSpec> {
+        self.combos.iter().find(|k| k.arch == arch && k.c == c)
+    }
+}
+
+impl ComboSpec {
+    pub fn graph(&self, name: &str) -> Result<&GraphSpec> {
+        self.graphs
+            .get(name)
+            .ok_or_else(|| anyhow!("combo {}/{} has no graph '{name}'", self.arch, self.c))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_synthetic_manifest() {
+        let dir = std::env::temp_dir().join(format!("dm_manifest_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let text = r#"{
+ "version": 1,
+ "datasets": {"cifar10": 10},
+ "archs": {"test": 32},
+ "combos": [
+  {"arch": "test", "F": 32, "C": 10, "B": 8, "L": 5, "d": 5120,
+   "graphs": {"eval": {"file": "test_c10_eval.hlo.txt",
+     "inputs": [{"name": "mask", "shape": [5120], "dtype": "f32"}],
+     "outputs": [{"name": "logits", "shape": [8, 10], "dtype": "f32"}]}}}
+ ]}"#;
+        std::fs::write(dir.join("manifest.json"), text).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.combos.len(), 1);
+        let c = m.find("test", 10).unwrap();
+        assert_eq!(c.d, 5120);
+        let g = c.graph("eval").unwrap();
+        assert_eq!(g.inputs[0].elements(), 5120);
+        assert_eq!(g.outputs[0].shape, vec![8, 10]);
+        assert!(c.graph("train").is_err());
+        assert_eq!(m.datasets["cifar10"], 10);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_manifest_errors() {
+        let dir = std::env::temp_dir().join("dm_no_manifest_xyz");
+        assert!(Manifest::load(&dir).is_err());
+    }
+}

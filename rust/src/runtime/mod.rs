@@ -1,0 +1,38 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt` +
+//! `manifest.json`) and executes them from the L3 hot path.
+//!
+//! Python never runs here — the HLO text was produced once by
+//! `python/compile/aot.py`; this module parses it with
+//! `HloModuleProto::from_text_file`, compiles it on the PJRT CPU client and
+//! executes with concrete buffers. One compiled executable per (combo,
+//! graph), cached for the whole process lifetime.
+
+pub mod executor;
+pub mod manifest;
+pub mod xla_backend;
+
+pub use executor::{Executor, GraphHandle};
+pub use manifest::{ComboSpec, GraphSpec, Manifest, TensorSpec};
+pub use xla_backend::XlaBackend;
+
+/// Locate the artifacts directory: `$DELTAMASK_ARTIFACTS`, else walk up
+/// from the current directory looking for `artifacts/manifest.json` (so
+/// `cargo test` / `cargo bench` work from any cwd).
+pub fn artifacts_dir() -> Option<std::path::PathBuf> {
+    if let Ok(p) = std::env::var("DELTAMASK_ARTIFACTS") {
+        let p = std::path::PathBuf::from(p);
+        if p.join("manifest.json").exists() {
+            return Some(p);
+        }
+    }
+    let mut cur = std::env::current_dir().ok()?;
+    loop {
+        let cand = cur.join("artifacts");
+        if cand.join("manifest.json").exists() {
+            return Some(cand);
+        }
+        if !cur.pop() {
+            return None;
+        }
+    }
+}

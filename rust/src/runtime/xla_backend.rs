@@ -1,0 +1,242 @@
+//! `Backend` implementation over the AOT-compiled XLA graphs — the
+//! production execution path (L2 JAX model + L1 Pallas kernels, via PJRT).
+//!
+//! Frozen tensors (backbone blocks, post-LP head) are uploaded once and kept
+//! device-resident; only the mutable state round-trips per step.
+
+use super::executor::{Executor, GraphHandle};
+use crate::model::backend::{Backend, FtState, LpState, ModelParams};
+use crate::model::MaskState;
+use anyhow::{ensure, Context, Result};
+use std::sync::{Arc, Mutex};
+
+pub struct XlaBackend {
+    exec: Arc<Executor>,
+    train: GraphHandle,
+    eval: GraphHandle,
+    lp: GraphHandle,
+    ft: GraphHandle,
+    cache: Mutex<DeviceCache>,
+}
+
+struct DeviceCache {
+    w_blocks: Option<xla::PjRtBuffer>,
+    head_w: Option<xla::PjRtBuffer>,
+    head_b: Option<xla::PjRtBuffer>,
+    head_version: u64,
+}
+
+// Safety: same rationale as Executor — buffers are only touched under the
+// mutex or by PJRT's thread-safe execute path.
+unsafe impl Send for XlaBackend {}
+unsafe impl Sync for XlaBackend {}
+
+impl XlaBackend {
+    pub fn new(exec: Arc<Executor>, arch: &str, c: usize) -> Result<Self> {
+        Ok(Self {
+            train: exec.graph(arch, c, "train")?,
+            eval: exec.graph(arch, c, "eval")?,
+            lp: exec.graph(arch, c, "lp")?,
+            ft: exec.graph(arch, c, "ft")?,
+            exec,
+            cache: Mutex::new(DeviceCache {
+                w_blocks: None,
+                head_w: None,
+                head_b: None,
+                head_version: u64::MAX,
+            }),
+        })
+    }
+
+    /// Ensure device copies of the frozen tensors are current; runs under
+    /// the cache lock. Returns clones of the underlying buffer handles is
+    /// not possible, so callers re-enter the lock per use.
+    fn refresh(&self, params: &ModelParams) -> Result<()> {
+        let mut cache = self.cache.lock().unwrap();
+        let cfg = params.cfg;
+        if cache.w_blocks.is_none() {
+            cache.w_blocks = Some(
+                self.exec
+                    .upload(&params.w_blocks, &[cfg.l, cfg.f, cfg.f])
+                    .context("upload w_blocks")?,
+            );
+        }
+        if cache.head_version != params.head_version {
+            cache.head_w = Some(self.exec.upload(&params.head_w, &[cfg.c, cfg.f])?);
+            cache.head_b = Some(self.exec.upload(&params.head_b, &[cfg.c])?);
+            cache.head_version = params.head_version;
+        }
+        Ok(())
+    }
+}
+
+impl Backend for XlaBackend {
+    fn train_step(
+        &self,
+        params: &ModelParams,
+        state: &mut MaskState,
+        x: &[f32],
+        y_onehot: &[f32],
+        u: &[f32],
+    ) -> Result<f32> {
+        let cfg = params.cfg;
+        let d = cfg.d();
+        ensure!(state.s.len() == d && u.len() == d);
+        ensure!(x.len() == cfg.b * cfg.f && y_onehot.len() == cfg.b * cfg.c);
+        self.refresh(params)?;
+        state.step += 1;
+        let t = [state.step as f32];
+
+        let s_b = self.exec.upload(&state.s, &[d])?;
+        let mt_b = self.exec.upload(&state.mt, &[d])?;
+        let vt_b = self.exec.upload(&state.vt, &[d])?;
+        let t_b = self.exec.upload(&t, &[])?;
+        let x_b = self.exec.upload(x, &[cfg.b, cfg.f])?;
+        let y_b = self.exec.upload(y_onehot, &[cfg.b, cfg.c])?;
+        let u_b = self.exec.upload(u, &[d])?;
+
+        let cache = self.cache.lock().unwrap();
+        let outs = self.train.execute(&[
+            &s_b,
+            &mt_b,
+            &vt_b,
+            &t_b,
+            cache.w_blocks.as_ref().unwrap(),
+            cache.head_w.as_ref().unwrap(),
+            cache.head_b.as_ref().unwrap(),
+            &x_b,
+            &y_b,
+            &u_b,
+        ])?;
+        drop(cache);
+        let mut it = outs.into_iter();
+        state.s = it.next().unwrap();
+        state.mt = it.next().unwrap();
+        state.vt = it.next().unwrap();
+        let loss = it.next().unwrap()[0];
+        Ok(loss)
+    }
+
+    fn eval_logits(&self, params: &ModelParams, mask: &[f32], x: &[f32]) -> Result<Vec<f32>> {
+        let cfg = params.cfg;
+        ensure!(mask.len() == cfg.d() && x.len() == cfg.b * cfg.f);
+        self.refresh(params)?;
+        let m_b = self.exec.upload(mask, &[cfg.d()])?;
+        let x_b = self.exec.upload(x, &[cfg.b, cfg.f])?;
+        let cache = self.cache.lock().unwrap();
+        let outs = self.eval.execute(&[
+            &m_b,
+            cache.w_blocks.as_ref().unwrap(),
+            cache.head_w.as_ref().unwrap(),
+            cache.head_b.as_ref().unwrap(),
+            &x_b,
+        ])?;
+        Ok(outs.into_iter().next().unwrap())
+    }
+
+    fn lp_step(
+        &self,
+        params: &ModelParams,
+        state: &mut LpState,
+        x: &[f32],
+        y_onehot: &[f32],
+    ) -> Result<f32> {
+        let cfg = params.cfg;
+        self.refresh(params)?;
+        state.step += 1;
+        let t = [state.step as f32];
+        let hw = self.exec.upload(&state.head_w, &[cfg.c, cfg.f])?;
+        let hb = self.exec.upload(&state.head_b, &[cfg.c])?;
+        let m_hw = self.exec.upload(&state.m_hw, &[cfg.c, cfg.f])?;
+        let v_hw = self.exec.upload(&state.v_hw, &[cfg.c, cfg.f])?;
+        let m_hb = self.exec.upload(&state.m_hb, &[cfg.c])?;
+        let v_hb = self.exec.upload(&state.v_hb, &[cfg.c])?;
+        let t_b = self.exec.upload(&t, &[])?;
+        let x_b = self.exec.upload(x, &[cfg.b, cfg.f])?;
+        let y_b = self.exec.upload(y_onehot, &[cfg.b, cfg.c])?;
+        let cache = self.cache.lock().unwrap();
+        let outs = self.lp.execute(&[
+            &hw,
+            &hb,
+            &m_hw,
+            &v_hw,
+            &m_hb,
+            &v_hb,
+            &t_b,
+            cache.w_blocks.as_ref().unwrap(),
+            &x_b,
+            &y_b,
+        ])?;
+        drop(cache);
+        let mut it = outs.into_iter();
+        state.head_w = it.next().unwrap();
+        state.head_b = it.next().unwrap();
+        state.m_hw = it.next().unwrap();
+        state.v_hw = it.next().unwrap();
+        state.m_hb = it.next().unwrap();
+        state.v_hb = it.next().unwrap();
+        Ok(it.next().unwrap()[0])
+    }
+
+    fn ft_step(
+        &self,
+        params: &ModelParams,
+        state: &mut FtState,
+        x: &[f32],
+        y_onehot: &[f32],
+    ) -> Result<f32> {
+        let cfg = params.cfg;
+        state.step += 1;
+        let t = [state.step as f32];
+        let shapes_wb = [cfg.l, cfg.f, cfg.f];
+        let wb = self.exec.upload(&state.w_blocks, &shapes_wb)?;
+        let hw = self.exec.upload(&state.head_w, &[cfg.c, cfg.f])?;
+        let hb = self.exec.upload(&state.head_b, &[cfg.c])?;
+        let m_wb = self.exec.upload(&state.m_wb, &shapes_wb)?;
+        let v_wb = self.exec.upload(&state.v_wb, &shapes_wb)?;
+        let m_hw = self.exec.upload(&state.m_hw, &[cfg.c, cfg.f])?;
+        let v_hw = self.exec.upload(&state.v_hw, &[cfg.c, cfg.f])?;
+        let m_hb = self.exec.upload(&state.m_hb, &[cfg.c])?;
+        let v_hb = self.exec.upload(&state.v_hb, &[cfg.c])?;
+        let t_b = self.exec.upload(&t, &[])?;
+        let x_b = self.exec.upload(x, &[cfg.b, cfg.f])?;
+        let y_b = self.exec.upload(y_onehot, &[cfg.b, cfg.c])?;
+        let outs = self.ft.execute(&[
+            &wb, &hw, &hb, &m_wb, &v_wb, &m_hw, &v_hw, &m_hb, &v_hb, &t_b, &x_b, &y_b,
+        ])?;
+        let mut it = outs.into_iter();
+        state.w_blocks = it.next().unwrap();
+        state.head_w = it.next().unwrap();
+        state.head_b = it.next().unwrap();
+        state.m_wb = it.next().unwrap();
+        state.v_wb = it.next().unwrap();
+        state.m_hw = it.next().unwrap();
+        state.v_hw = it.next().unwrap();
+        state.m_hb = it.next().unwrap();
+        state.v_hb = it.next().unwrap();
+        Ok(it.next().unwrap()[0])
+    }
+
+    fn ft_eval_logits(
+        &self,
+        params: &ModelParams,
+        state: &FtState,
+        x: &[f32],
+    ) -> Result<Vec<f32>> {
+        let cfg = params.cfg;
+        // Evaluate the FT weights through the eval graph with mask ≡ 1 by
+        // temporarily treating FT weights as the frozen set (no cache).
+        let ones = vec![1.0f32; cfg.d()];
+        let m_b = self.exec.upload(&ones, &[cfg.d()])?;
+        let wb = self.exec.upload(&state.w_blocks, &[cfg.l, cfg.f, cfg.f])?;
+        let hw = self.exec.upload(&state.head_w, &[cfg.c, cfg.f])?;
+        let hb = self.exec.upload(&state.head_b, &[cfg.c])?;
+        let x_b = self.exec.upload(x, &[cfg.b, cfg.f])?;
+        let outs = self.eval.execute(&[&m_b, &wb, &hw, &hb, &x_b])?;
+        Ok(outs.into_iter().next().unwrap())
+    }
+
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+}

@@ -1,0 +1,116 @@
+//! Tiny CLI argument parser (`--key value`, `--flag`, positional args).
+//! The offline vendor set has no `clap`; this covers everything the
+//! coordinator binary, examples and benches need.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (no program name).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Self {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else {
+                    // `--key value` unless next token is another option or
+                    // there is no next token -> boolean flag.
+                    match it.peek() {
+                        Some(next) if !next.starts_with("--") => {
+                            let v = it.next().unwrap();
+                            out.options.insert(name.to_string(), v);
+                        }
+                        _ => out.flags.push(name.to_string()),
+                    }
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+            || self.options.get(name).map(|v| v == "true").unwrap_or(false)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn usize(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} must be an integer, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn u64(&self, name: &str, default: u64) -> u64 {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} must be an integer, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} must be a number, got '{v}'")))
+            .unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn basic_forms() {
+        let a = parse("train --rounds 30 --full --kappa=0.8 cifar100 --out x.json");
+        assert_eq!(a.positional, vec!["train", "cifar100"]);
+        assert_eq!(a.usize("rounds", 0), 30);
+        assert!(a.flag("full"));
+        assert!(!a.flag("quiet"));
+        assert_eq!(a.f64("kappa", 0.0), 0.8);
+        assert_eq!(a.get("out"), Some("x.json"));
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse("--verbose");
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("");
+        assert_eq!(a.usize("n", 7), 7);
+        assert_eq!(a.f64("x", 1.5), 1.5);
+        assert_eq!(a.get_or("name", "dflt"), "dflt");
+    }
+
+    #[test]
+    fn negative_number_value() {
+        // `--lr -0.1` — the value does not start with `--` so it binds.
+        let a = parse("--lr -0.1");
+        assert_eq!(a.f64("lr", 0.0), -0.1);
+    }
+}

@@ -1,0 +1,84 @@
+//! Small self-contained utilities: deterministic RNG, bit I/O, CLI parsing,
+//! JSON/CSV emission, summary statistics and wall-clock timers.
+//!
+//! Everything here is written from scratch because the offline vendor set
+//! ships no general-purpose crates (no `rand`, no `serde`, no `clap`).
+
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod timer;
+
+/// Argsort-free partial selection: returns the indexes of the `k` largest
+/// values of `score` (unordered within the selection) in O(n) expected time.
+///
+/// Used for the paper's `top_κ` KL-ranked update selection (Eq. 4), where a
+/// full `sort` would be the asymptotic bottleneck of the encode path at
+/// d ≈ 10⁵–10⁷ mask parameters.
+pub fn top_k_indices(score: &[f32], k: usize) -> Vec<u32> {
+    let n = score.len();
+    if k == 0 {
+        return Vec::new();
+    }
+    if k >= n {
+        return (0..n as u32).collect();
+    }
+    let mut idx: Vec<u32> = (0..n as u32).collect();
+    // Introselect (std's pattern-defeating quickselect): O(n) expected AND
+    // robust to heavily-tied scores — KL scores tie massively when θ values
+    // come from a few levels, which degraded a naive two-way quickselect to
+    // O(n²) here (see EXPERIMENTS.md §Perf).
+    idx.select_nth_unstable_by(k - 1, |&a, &b| {
+        score[b as usize]
+            .partial_cmp(&score[a as usize])
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+    idx.truncate(k);
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn top_k_matches_full_sort() {
+        let mut rng = rng::Xoshiro256pp::new(7);
+        for n in [1usize, 2, 3, 17, 100, 1031] {
+            let scores: Vec<f32> = (0..n).map(|_| rng.next_f32()).collect();
+            for k in [0usize, 1, n / 3, n - 1, n, n + 5] {
+                let got = top_k_indices(&scores, k);
+                let mut expect: Vec<u32> = (0..n as u32).collect();
+                expect.sort_by(|&a, &b| {
+                    scores[b as usize].partial_cmp(&scores[a as usize]).unwrap()
+                });
+                expect.truncate(k.min(n));
+                let mut g = got.clone();
+                g.sort_unstable();
+                let mut e = expect.clone();
+                e.sort_unstable();
+                assert_eq!(g.len(), k.min(n));
+                // Selection must contain exactly the k largest (ties: same values).
+                let min_sel = got
+                    .iter()
+                    .map(|&i| scores[i as usize])
+                    .fold(f32::INFINITY, f32::min);
+                let max_rest: f32 = (0..n as u32)
+                    .filter(|i| !g.binary_search(i).is_ok())
+                    .map(|i| scores[i as usize])
+                    .fold(f32::NEG_INFINITY, f32::max);
+                if k > 0 && k < n {
+                    assert!(min_sel >= max_rest, "n={n} k={k}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn top_k_with_duplicate_scores() {
+        let scores = vec![1.0f32; 64];
+        let got = top_k_indices(&scores, 10);
+        assert_eq!(got.len(), 10);
+    }
+}

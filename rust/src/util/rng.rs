@@ -1,0 +1,291 @@
+//! Deterministic pseudo-random generators and samplers.
+//!
+//! The federated simulation must be bit-reproducible across runs and across
+//! the server/client boundary (the paper's shared-seed deterministic mask
+//! sampling, §3.2), so every stochastic decision in the system flows through
+//! these seeded generators — never through `std` hash randomness or OS
+//! entropy.
+
+/// SplitMix64 — tiny, fast, passes BigCrush when used as a stream; also the
+/// canonical seeding sequence for xoshiro.
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9e3779b97f4a7c15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+        z ^ (z >> 31)
+    }
+}
+
+/// xoshiro256++ — the workhorse generator for all simulation randomness.
+#[derive(Clone, Debug)]
+pub struct Xoshiro256pp {
+    s: [u64; 4],
+}
+
+impl Xoshiro256pp {
+    pub fn new(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        Self {
+            s: [sm.next_u64(), sm.next_u64(), sm.next_u64(), sm.next_u64()],
+        }
+    }
+
+    /// Derive an independent child stream; used to give every (client, round)
+    /// pair its own generator without coordination.
+    pub fn fork(&mut self, tag: u64) -> Self {
+        let mix = self.next_u64() ^ tag.wrapping_mul(0xd1342543de82ef95);
+        Self::new(mix)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[0]
+            .wrapping_add(self.s[3])
+            .rotate_left(23)
+            .wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in [0, 1) with 24 bits of mantissa (f32-exact).
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Uniform in [0, 1) with 53 bits of mantissa.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Unbiased integer in [0, n) (Lemire's multiply-shift with rejection).
+    pub fn below(&mut self, n: u64) -> u64 {
+        assert!(n > 0);
+        loop {
+            let x = self.next_u64();
+            let (hi, lo) = {
+                let m = (x as u128) * (n as u128);
+                ((m >> 64) as u64, m as u64)
+            };
+            if lo >= n || lo >= n.wrapping_neg() % n {
+                return hi;
+            }
+        }
+    }
+
+    pub fn fill_f32_uniform(&mut self, out: &mut [f32]) {
+        for v in out.iter_mut() {
+            *v = self.next_f32();
+        }
+    }
+
+    /// Standard normal via Box–Muller (pairwise, cache-free for simplicity —
+    /// data-gen is not on the hot path).
+    pub fn next_gaussian(&mut self) -> f64 {
+        loop {
+            let u1 = self.next_f64();
+            if u1 > 1e-12 {
+                let u2 = self.next_f64();
+                return (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos();
+            }
+        }
+    }
+
+    pub fn fill_gaussian_f32(&mut self, out: &mut [f32], mean: f32, std: f32) {
+        for v in out.iter_mut() {
+            *v = mean + std * self.next_gaussian() as f32;
+        }
+    }
+
+    /// Gamma(shape, 1) via Marsaglia–Tsang, with the shape<1 boost.
+    pub fn next_gamma(&mut self, shape: f64) -> f64 {
+        assert!(shape > 0.0);
+        if shape < 1.0 {
+            // Gamma(a) = Gamma(a+1) * U^{1/a}
+            let g = self.next_gamma(shape + 1.0);
+            let u = self.next_f64().max(1e-300);
+            return g * u.powf(1.0 / shape);
+        }
+        let d = shape - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.next_gaussian();
+            let v = 1.0 + c * x;
+            if v <= 0.0 {
+                continue;
+            }
+            let v = v * v * v;
+            let u = self.next_f64();
+            if u < 1.0 - 0.0331 * x * x * x * x {
+                return d * v;
+            }
+            if u > 1e-300 && u.ln() < 0.5 * x * x + d * (1.0 - v + v.ln()) {
+                return d * v;
+            }
+        }
+    }
+
+    /// Dirichlet(alpha * 1_k): the paper's Dir(a) label-split sampler.
+    pub fn next_dirichlet(&mut self, alpha: f64, k: usize) -> Vec<f64> {
+        let mut g: Vec<f64> = (0..k).map(|_| self.next_gamma(alpha)).collect();
+        let sum: f64 = g.iter().sum();
+        if sum <= 0.0 {
+            // Degenerate draw (can happen for very small alpha): one-hot.
+            let hot = self.below(k as u64) as usize;
+            let mut out = vec![0.0; k];
+            out[hot] = 1.0;
+            return out;
+        }
+        for v in g.iter_mut() {
+            *v /= sum;
+        }
+        g
+    }
+
+    /// In-place Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `k` distinct indexes from [0, n) (partial Fisher–Yates).
+    pub fn choose(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n);
+        let mut idx: Vec<usize> = (0..n).collect();
+        for i in 0..k {
+            let j = i + self.below((n - i) as u64) as usize;
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_known_values() {
+        // Reference sequence for seed 1234567 (from the published C code).
+        let mut sm = SplitMix64::new(1234567);
+        let v: Vec<u64> = (0..3).map(|_| sm.next_u64()).collect();
+        // Self-consistency + determinism across calls.
+        let mut sm2 = SplitMix64::new(1234567);
+        let v2: Vec<u64> = (0..3).map(|_| sm2.next_u64()).collect();
+        assert_eq!(v, v2);
+        assert_ne!(v[0], v[1]);
+    }
+
+    #[test]
+    fn xoshiro_uniform_mean() {
+        let mut rng = Xoshiro256pp::new(42);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| rng.next_f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn below_is_unbiased_small_range() {
+        let mut rng = Xoshiro256pp::new(5);
+        let mut counts = [0usize; 7];
+        for _ in 0..70_000 {
+            counts[rng.below(7) as usize] += 1;
+        }
+        for &c in &counts {
+            assert!((c as f64 - 10_000.0).abs() < 600.0, "counts={counts:?}");
+        }
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut rng = Xoshiro256pp::new(9);
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| rng.next_gaussian()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.03, "var={var}");
+    }
+
+    #[test]
+    fn gamma_mean_matches_shape() {
+        let mut rng = Xoshiro256pp::new(11);
+        for shape in [0.1, 0.5, 1.0, 3.0, 10.0] {
+            let n = 50_000;
+            let mean: f64 = (0..n).map(|_| rng.next_gamma(shape)).sum::<f64>() / n as f64;
+            assert!(
+                (mean - shape).abs() < 0.1 * shape.max(0.5),
+                "shape={shape} mean={mean}"
+            );
+        }
+    }
+
+    #[test]
+    fn dirichlet_sums_to_one_and_concentration_behaves() {
+        let mut rng = Xoshiro256pp::new(13);
+        // Large alpha -> near-uniform; small alpha -> spiky. Average the
+        // max-coordinate over draws so the check is statistical, not
+        // seed-dependent.
+        let trials = 200;
+        let mut max_flat = 0.0;
+        let mut max_spiky = 0.0;
+        for _ in 0..trials {
+            let p_flat = rng.next_dirichlet(100.0, 10);
+            let p_spiky = rng.next_dirichlet(0.05, 10);
+            assert!((p_flat.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+            assert!((p_spiky.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+            max_flat += p_flat.iter().cloned().fold(0.0, f64::max) / trials as f64;
+            max_spiky += p_spiky.iter().cloned().fold(0.0, f64::max) / trials as f64;
+        }
+        assert!(max_flat < 0.25, "avg max (flat) = {max_flat}");
+        assert!(max_spiky > 0.6, "avg max (spiky) = {max_spiky}");
+    }
+
+    #[test]
+    fn choose_distinct() {
+        let mut rng = Xoshiro256pp::new(17);
+        for _ in 0..100 {
+            let mut c = rng.choose(30, 6);
+            c.sort_unstable();
+            c.dedup();
+            assert_eq!(c.len(), 6);
+            assert!(c.iter().all(|&i| i < 30));
+        }
+    }
+
+    #[test]
+    fn fork_streams_decorrelated() {
+        let mut base = Xoshiro256pp::new(21);
+        let mut a = base.fork(1);
+        let mut b = base.fork(2);
+        let same = (0..1000).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+}

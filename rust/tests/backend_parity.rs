@@ -1,0 +1,146 @@
+//! Cross-backend integration tests: the AOT-compiled XLA graphs (L2 JAX +
+//! L1 Pallas, loaded through PJRT) must agree with the pure-rust native
+//! backend on every graph family. This closes the correctness loop:
+//!   python ref.py ⇔ pallas kernels ⇔ HLO text ⇔ PJRT execution ⇔ native rust.
+//!
+//! Requires `make artifacts` (the miniature `test` combo).
+
+use deltamask::model::backend::{Backend, FtState, LpState};
+use deltamask::model::{init_params, ArchConfig, MaskState};
+use deltamask::native::NativeBackend;
+use deltamask::runtime::{Executor, XlaBackend};
+use deltamask::util::rng::Xoshiro256pp;
+use std::sync::Arc;
+
+const CFG: ArchConfig = ArchConfig {
+    f: 32,
+    c: 10,
+    b: 8,
+    l: 5,
+};
+
+fn xla_backend() -> XlaBackend {
+    let exec = Arc::new(
+        Executor::from_artifacts().expect("run `make artifacts` before `cargo test`"),
+    );
+    XlaBackend::new(exec, "test", 10).expect("test combo missing from manifest")
+}
+
+fn batch(seed: u64) -> (Vec<f32>, Vec<f32>) {
+    let mut rng = Xoshiro256pp::new(seed);
+    let mut protos = vec![0.0f32; CFG.c * CFG.f];
+    rng.fill_gaussian_f32(&mut protos, 0.0, 1.0);
+    let mut x = vec![0.0f32; CFG.b * CFG.f];
+    let mut y1h = vec![0.0f32; CFG.b * CFG.c];
+    for i in 0..CFG.b {
+        let y = rng.below(CFG.c as u64) as usize;
+        y1h[i * CFG.c + y] = 1.0;
+        for j in 0..CFG.f {
+            x[i * CFG.f + j] = protos[y * CFG.f + j] + 0.1 * rng.next_gaussian() as f32;
+        }
+    }
+    (x, y1h)
+}
+
+fn assert_close(a: &[f32], b: &[f32], tol: f32, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    let mut worst = 0.0f32;
+    for (x, y) in a.iter().zip(b) {
+        worst = worst.max((x - y).abs() / (1.0 + x.abs().max(y.abs())));
+    }
+    assert!(worst < tol, "{what}: worst rel err {worst}");
+}
+
+#[test]
+fn eval_parity() {
+    let xla = xla_backend();
+    let native = NativeBackend;
+    let params = init_params(CFG, 1);
+    let (x, _) = batch(2);
+    let mut rng = Xoshiro256pp::new(3);
+    let mask: Vec<f32> = (0..CFG.d())
+        .map(|_| if rng.next_f32() < 0.5 { 1.0 } else { 0.0 })
+        .collect();
+    let a = xla.eval_logits(&params, &mask, &x).unwrap();
+    let b = native.eval_logits(&params, &mask, &x).unwrap();
+    assert_close(&a, &b, 1e-4, "eval logits");
+}
+
+#[test]
+fn train_step_parity_over_multiple_steps() {
+    let xla = xla_backend();
+    let native = NativeBackend;
+    let params = init_params(CFG, 4);
+    let mut st_x = MaskState::new(CFG.d());
+    let mut st_n = MaskState::new(CFG.d());
+    let mut rng = Xoshiro256pp::new(5);
+    let mut u = vec![0.0f32; CFG.d()];
+    for step in 0..5 {
+        let (x, y1h) = batch(100 + step);
+        rng.fill_f32_uniform(&mut u);
+        let la = xla.train_step(&params, &mut st_x, &x, &y1h, &u).unwrap();
+        let lb = native.train_step(&params, &mut st_n, &x, &y1h, &u).unwrap();
+        assert!(
+            (la - lb).abs() < 1e-3 * (1.0 + la.abs()),
+            "step {step}: loss {la} vs {lb}"
+        );
+    }
+    assert_close(&st_x.s, &st_n.s, 5e-3, "scores after 5 steps");
+    assert_close(&st_x.mt, &st_n.mt, 5e-3, "adam m");
+}
+
+#[test]
+fn lp_step_parity() {
+    let xla = xla_backend();
+    let native = NativeBackend;
+    let params = init_params(CFG, 6);
+    let mut lp_x = LpState::from_params(&params);
+    let mut lp_n = LpState::from_params(&params);
+    for step in 0..5 {
+        let (x, y1h) = batch(200 + step);
+        let la = xla.lp_step(&params, &mut lp_x, &x, &y1h).unwrap();
+        let lb = native.lp_step(&params, &mut lp_n, &x, &y1h).unwrap();
+        assert!((la - lb).abs() < 1e-3 * (1.0 + la.abs()), "step {step}");
+    }
+    assert_close(&lp_x.head_w, &lp_n.head_w, 1e-3, "lp head");
+}
+
+#[test]
+fn ft_step_parity() {
+    let xla = xla_backend();
+    let native = NativeBackend;
+    let params = init_params(CFG, 7);
+    let mut ft_x = FtState::from_params(&params);
+    let mut ft_n = FtState::from_params(&params);
+    for step in 0..3 {
+        let (x, y1h) = batch(300 + step);
+        let la = xla.ft_step(&params, &mut ft_x, &x, &y1h).unwrap();
+        let lb = native.ft_step(&params, &mut ft_n, &x, &y1h).unwrap();
+        assert!((la - lb).abs() < 1e-3 * (1.0 + la.abs()), "step {step}");
+    }
+    assert_close(&ft_x.w_blocks, &ft_n.w_blocks, 1e-3, "ft weights");
+    let (x, _) = batch(999);
+    let ea = xla.ft_eval_logits(&params, &ft_x, &x).unwrap();
+    let eb = native.ft_eval_logits(&params, &ft_n, &x).unwrap();
+    assert_close(&ea, &eb, 1e-3, "ft eval");
+}
+
+#[test]
+fn manifest_lists_all_paper_combos() {
+    let exec = Executor::from_artifacts().unwrap();
+    let m = exec.manifest();
+    for (arch, c) in [
+        ("vitb32", 10),
+        ("vitb32", 49),
+        ("vitb32", 100),
+        ("vitb32", 101),
+        ("vitb32", 196),
+        ("vitl14", 100),
+        ("dinov2b", 100),
+        ("dinov2s", 100),
+        ("convmixer", 100),
+    ] {
+        assert!(m.find(arch, c).is_some(), "missing combo {arch}/{c}");
+    }
+    assert_eq!(m.datasets.len(), 8, "paper evaluates 8 datasets");
+}

@@ -1,0 +1,206 @@
+//! Property-style integration tests over the coding substrates: randomized
+//! roundtrips across codec layers (DEFLATE ↔ flate2, PNG, arithmetic coder,
+//! filters, update codecs) with seed sweeps — the "fuzz-lite" suite.
+
+use deltamask::codec::{arith, deflate, png};
+use deltamask::compress::{self, DecodeCtx, EncodeCtx, Update};
+use deltamask::filters::{BinaryFuse, MembershipFilter};
+use deltamask::model::sample_mask_seeded;
+use deltamask::util::rng::Xoshiro256pp;
+use std::io::Read;
+
+/// Generator for adversarial byte distributions (this is what shook out the
+/// Huffman length-limit repair bug).
+fn gen_payload(rng: &mut Xoshiro256pp, mode: u64, n: usize) -> Vec<u8> {
+    (0..n)
+        .map(|i| match mode % 6 {
+            0 => rng.next_u64() as u8,                         // uniform
+            1 => (rng.next_u64() % 3) as u8,                   // tiny alphabet
+            2 => {
+                // geometric-ish skew
+                let u = rng.next_f32();
+                (-(1.0 - u).ln() * 6.0) as u8
+            }
+            3 => (i % 251) as u8,                              // periodic
+            4 => {
+                if rng.next_f32() < 0.95 { 0 } else { rng.next_u64() as u8 }
+            }
+            _ => ((i / 64) % 256) as u8,                       // long runs
+        })
+        .collect()
+}
+
+#[test]
+fn deflate_roundtrip_seed_sweep() {
+    let mut rng = Xoshiro256pp::new(0xd3f1a7e);
+    for trial in 0..120 {
+        let n = (rng.next_u64() % 60_000) as usize;
+        let data = gen_payload(&mut rng, trial, n);
+        let z = deflate::zlib_compress(&data);
+        let back = deflate::zlib_decompress(&z)
+            .unwrap_or_else(|e| panic!("trial {trial} n={n}: {e}"));
+        assert_eq!(back, data, "trial {trial}");
+        // flate2 must also accept our stream (RFC conformance).
+        let mut dec = flate2::read::ZlibDecoder::new(&z[..]);
+        let mut back2 = Vec::new();
+        dec.read_to_end(&mut back2)
+            .unwrap_or_else(|e| panic!("trial {trial}: flate2 rejected: {e}"));
+        assert_eq!(back2, data);
+    }
+}
+
+#[test]
+fn png_roundtrip_seed_sweep() {
+    let mut rng = Xoshiro256pp::new(0x9b6);
+    for trial in 0..60 {
+        let n = 1 + (rng.next_u64() % 50_000) as usize;
+        let payload = gen_payload(&mut rng, trial, n);
+        let img = png::GrayImage::from_payload(&payload);
+        let back = png::decode(&png::encode(&img)).unwrap();
+        assert_eq!(back.payload(n), &payload[..], "trial {trial}");
+    }
+}
+
+#[test]
+fn arith_roundtrip_seed_sweep() {
+    let mut rng = Xoshiro256pp::new(0xa417);
+    for trial in 0..40 {
+        let n = (rng.next_u64() % 30_000) as usize;
+        let p = rng.next_f32();
+        let bits: Vec<bool> = (0..n).map(|_| rng.next_f32() < p).collect();
+        let enc = arith::encode_bits(&bits);
+        assert_eq!(arith::decode_bits(&enc, n), bits, "trial {trial} p={p}");
+    }
+}
+
+#[test]
+fn every_codec_roundtrips_through_full_pipeline() {
+    let d = 20_000usize;
+    let mut rng = Xoshiro256pp::new(0xc0dec);
+    let theta_g: Vec<f32> = (0..d).map(|_| rng.next_f32()).collect();
+    let theta_k: Vec<f32> = theta_g
+        .iter()
+        .map(|&p| (p + 0.1 * (rng.next_f32() - 0.5)).clamp(0.01, 0.99))
+        .collect();
+    let s_g: Vec<f32> = theta_g.iter().map(|&p| (p / (1.0 - p)).ln()).collect();
+    let s_k: Vec<f32> = theta_k.iter().map(|&p| (p / (1.0 - p)).ln()).collect();
+    let round_seed = 1234u64;
+    let mut mask_g = Vec::new();
+    sample_mask_seeded(&theta_g, round_seed, &mut mask_g);
+    let mut mask_k = Vec::new();
+    sample_mask_seeded(&theta_k, round_seed, &mut mask_k);
+
+    for name in compress::all_names() {
+        let codec = compress::by_name(name).unwrap();
+        let ctx = EncodeCtx {
+            d,
+            theta_k: &theta_k,
+            theta_g: &theta_g,
+            mask_k: &mask_k,
+            mask_g: &mask_g,
+            s_k: &s_k,
+            s_g: &s_g,
+            kappa: 0.8,
+            seed: 42,
+        };
+        let enc = codec.encode(&ctx).unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert!(enc.bpp(d) > 0.0, "{name}");
+        let dctx = DecodeCtx {
+            d,
+            mask_g: &mask_g,
+            s_g: &s_g,
+            seed: 42,
+        };
+        let upd = codec
+            .decode(&enc.bytes, &dctx)
+            .unwrap_or_else(|e| panic!("{name}: {e}"));
+        match upd {
+            Update::Mask(m) => {
+                assert_eq!(m.len(), d, "{name}");
+                assert!(m.iter().all(|&v| v == 0.0 || v == 1.0), "{name}");
+            }
+            Update::ScoreDelta(ds) => {
+                assert_eq!(ds.len(), d, "{name}");
+                assert!(ds.iter().all(|v| v.is_finite()), "{name}");
+                // Decoded delta must correlate positively with the truth.
+                let truth: Vec<f32> = (0..d).map(|i| s_k[i] - s_g[i]).collect();
+                let dot: f64 = ds.iter().zip(&truth).map(|(a, b)| (a * b) as f64).sum();
+                assert!(dot > 0.0, "{name}: decoded delta anti-correlated");
+            }
+        }
+    }
+}
+
+#[test]
+fn corrupted_records_error_not_panic() {
+    let d = 5_000usize;
+    let mut rng = Xoshiro256pp::new(3);
+    let theta: Vec<f32> = (0..d).map(|_| rng.next_f32()).collect();
+    let s: Vec<f32> = theta.iter().map(|&p| (p / (1.0 - p)).ln()).collect();
+    let mut mask = Vec::new();
+    sample_mask_seeded(&theta, 7, &mut mask);
+    let mut mask_k = mask.clone();
+    for i in 0..100 {
+        mask_k[i * 7 % d] = 1.0 - mask_k[i * 7 % d];
+    }
+    for name in compress::all_names() {
+        let codec = compress::by_name(name).unwrap();
+        let ctx = EncodeCtx {
+            d,
+            theta_k: &theta,
+            theta_g: &theta,
+            mask_k: &mask_k,
+            mask_g: &mask,
+            s_k: &s,
+            s_g: &s,
+            kappa: 0.8,
+            seed: 9,
+        };
+        let enc = codec.encode(&ctx).unwrap();
+        let dctx = DecodeCtx {
+            d,
+            mask_g: &mask,
+            s_g: &s,
+            seed: 9,
+        };
+        // Truncations must produce Err, never panic.
+        for cut in [0usize, 1, 5, enc.bytes.len() / 2] {
+            let truncated = &enc.bytes[..cut.min(enc.bytes.len().saturating_sub(1))];
+            let _ = codec.decode(truncated, &dctx);
+        }
+        // Bit-flipped body: either errors or yields a well-formed update.
+        let mut corrupt = enc.bytes.clone();
+        if corrupt.len() > 40 {
+            let n = corrupt.len();
+            corrupt[n - 10] ^= 0xff;
+            match codec.decode(&corrupt, &dctx) {
+                Err(_) => {}
+                Ok(Update::Mask(m)) => assert_eq!(m.len(), d),
+                Ok(Update::ScoreDelta(v)) => assert_eq!(v.len(), d),
+            }
+        }
+    }
+}
+
+#[test]
+fn bfuse_payload_survives_png_stage_bit_exact() {
+    // The exact DeltaMask §3.2 path at ViT-B/32 scale.
+    let d = 327_680u64;
+    let mut rng = Xoshiro256pp::new(0xf00d);
+    let keys: Vec<u64> = (0..6_000).map(|_| rng.below(d)).collect();
+    let f = BinaryFuse::<u8, 4>::build(&keys).unwrap();
+    let payload = f.payload();
+    let img = png::GrayImage::from_payload(&payload);
+    let back = png::decode(&png::encode(&img)).unwrap();
+    assert_eq!(back.payload(payload.len()), &payload[..]);
+    let g = BinaryFuse::<u8, 4>::from_parts(
+        f.seed(),
+        f.segment_length_pub(),
+        f.segment_count_length_pub(),
+        back.payload(payload.len()),
+        f.num_keys(),
+    );
+    for &k in &keys {
+        assert!(g.contains(k));
+    }
+}
