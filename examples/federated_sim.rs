@@ -6,6 +6,7 @@
 //!         [--rounds 30] [--clients 8] [--noniid] [--backend xla]
 
 use deltamask::bench::Table;
+use deltamask::coordinator::PipelineMode;
 use deltamask::fl::{run_experiment, BackendKind, ExperimentConfig, HeadInit};
 use deltamask::util::cli::Args;
 
@@ -37,6 +38,7 @@ fn main() -> anyhow::Result<()> {
         lp_rounds: 1,
         theta0: 0.85,
         arch_override: None,
+        pipeline: PipelineMode::from_args(&args),
     };
 
     let split = if noniid { "non-IID Dir(0.1)" } else { "IID Dir(10)" };

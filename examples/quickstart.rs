@@ -12,6 +12,7 @@
 //!      deltas → binary fuse filter → grayscale PNG → Bayesian aggregation,
 //!   5. prints accuracy and measured bits-per-parameter per round.
 
+use deltamask::coordinator::PipelineMode;
 use deltamask::fl::{run_experiment, BackendKind, ExperimentConfig, HeadInit};
 
 fn main() -> anyhow::Result<()> {
@@ -35,6 +36,7 @@ fn main() -> anyhow::Result<()> {
         lp_rounds: 1,
         theta0: 0.85,
         arch_override: None,
+        pipeline: PipelineMode::Streaming, // decode→absorb per arrival
     };
 
     println!(

@@ -868,6 +868,7 @@ pub fn zlib_decompress(data: &[u8]) -> Result<Vec<u8>, String> {
 mod tests {
     use super::*;
     use crate::util::rng::Xoshiro256pp;
+    #[cfg(feature = "flate2")]
     use std::io::{Read, Write};
 
     fn sample_payloads() -> Vec<Vec<u8>> {
@@ -921,6 +922,9 @@ mod tests {
         }
     }
 
+    // Cross-validation against an independent DEFLATE implementation;
+    // needs the optional `flate2` feature (offline default builds skip it).
+    #[cfg(feature = "flate2")]
     #[test]
     fn our_deflate_readable_by_flate2() {
         for (i, data) in sample_payloads().iter().enumerate() {
@@ -933,6 +937,7 @@ mod tests {
         }
     }
 
+    #[cfg(feature = "flate2")]
     #[test]
     fn our_inflate_reads_flate2_output() {
         for (i, data) in sample_payloads().iter().enumerate() {

@@ -60,6 +60,12 @@ pub struct EncodeCtx<'a> {
 }
 
 /// Server-side view handed to `decode`.
+///
+/// The borrows are **round-start snapshots** (normally the coordinator's
+/// `RoundPlan`), never live server state: streaming aggregation mutates the
+/// server's posterior while later updates are still being decoded, and
+/// decoders must see the same m^{g,t-1} / s^{g,t-1} the clients encoded
+/// against. `RoundPlan::decode_ctx` builds these correctly.
 pub struct DecodeCtx<'a> {
     pub d: usize,
     pub mask_g: &'a [f32],
@@ -75,6 +81,27 @@ pub enum Update {
     Mask(Vec<f32>),
     /// Reconstructed score delta Δŝ.
     ScoreDelta(Vec<f32>),
+}
+
+impl Update {
+    /// Which aggregation rule this update feeds (Bayesian vs FedAvg).
+    pub fn family(&self) -> Family {
+        match self {
+            Update::Mask(_) => Family::Mask,
+            Update::ScoreDelta(_) => Family::Delta,
+        }
+    }
+
+    /// Reconstructed vector length (the mask dimensionality d).
+    pub fn len(&self) -> usize {
+        match self {
+            Update::Mask(v) | Update::ScoreDelta(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
 }
 
 /// Encoded uplink message.

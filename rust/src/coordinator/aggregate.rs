@@ -1,0 +1,241 @@
+//! The server-side round drain: pull encoded updates off a [`Transport`]
+//! and feed an [`Aggregator`] — per-arrival (streaming) or behind the
+//! full-round barrier (batch). This is the decode→aggregate pipeline the
+//! runner used to hard-wire inline; it is generic over both the transport
+//! and the aggregation rule.
+
+use super::round::RoundPlan;
+use super::transport::{Payload, Transport};
+use super::PipelineMode;
+use crate::compress::{Encoded, Update, UpdateCodec};
+use crate::util::timer::Stopwatch;
+use anyhow::{bail, Result};
+
+/// Streaming aggregation sink: a round is `begin_round(K)` → K×`absorb` →
+/// `finish_round`. Implemented by `fl::server::MaskServer`; any other sink
+/// (a sharded server, a test spy) plugs in the same way.
+///
+/// Contract (see `MaskServer` for the reference semantics): `absorb` must
+/// accept participant slots in any arrival order and produce state
+/// equivalent to slot-ordered application; `finish_round` publishes the new
+/// global state.
+pub trait Aggregator {
+    fn begin_round(&mut self, expected: usize);
+    fn absorb(&mut self, slot: usize, update: Update);
+    fn finish_round(&mut self);
+}
+
+/// Deterministic per-slot accounting from one drained round. Kept per-slot
+/// (not running sums) so callers can reduce in slot order — f64 addition is
+/// order-sensitive and arrival order is not deterministic.
+#[derive(Clone, Debug)]
+pub struct DrainReport {
+    /// Mean local training loss, by participant slot.
+    pub loss_by_slot: Vec<f64>,
+    /// Client-side encode seconds, by participant slot.
+    pub enc_by_slot: Vec<f64>,
+    /// Total server-side decode seconds (wall time, arrival order).
+    pub dec_secs: f64,
+}
+
+impl DrainReport {
+    fn new(expected: usize) -> Self {
+        Self {
+            loss_by_slot: vec![0.0; expected],
+            enc_by_slot: vec![0.0; expected],
+            dec_secs: 0.0,
+        }
+    }
+
+    pub fn total_loss(&self) -> f64 {
+        self.loss_by_slot.iter().sum()
+    }
+
+    pub fn total_enc_secs(&self) -> f64 {
+        self.enc_by_slot.iter().sum()
+    }
+}
+
+/// Drain one round's `plan.expected()` updates from `transport`, decode
+/// them against the plan's broadcast snapshot, and drive `agg` per `mode`.
+///
+/// Streaming: decode→absorb per arrival (the aggregator holds O(d) state).
+/// Batch: buffer every payload, then decode + absorb in slot order behind
+/// the barrier — the seed's reference behaviour. Both produce bitwise
+/// identical aggregator state (see `fl::server` module docs).
+///
+/// Errors if the uplink closes early, a client reports an in-band failure,
+/// a slot arrives twice, or decoding fails.
+pub fn drain_round(
+    transport: &mut dyn Transport,
+    plan: &RoundPlan,
+    codec: &dyn UpdateCodec,
+    agg: &mut dyn Aggregator,
+    mode: PipelineMode,
+) -> Result<DrainReport> {
+    let expected = plan.expected();
+    let mut report = DrainReport::new(expected);
+    let mut seen = vec![false; expected];
+    let mut buffered: Vec<Option<Encoded>> = match mode {
+        PipelineMode::Streaming => Vec::new(),
+        PipelineMode::Batch => vec![None; expected],
+    };
+
+    if mode == PipelineMode::Streaming {
+        agg.begin_round(expected);
+    }
+    for got in 0..expected {
+        let msg = match transport.recv() {
+            Some(msg) => msg,
+            None => bail!("uplink closed after {got}/{expected} updates"),
+        };
+        let enc = match msg.payload {
+            Payload::Update(enc) => enc,
+            Payload::Failed(err) => bail!("client {} failed: {err}", msg.client_id),
+        };
+        // Transport data must never panic the server, so bad slots are a
+        // recoverable error here; `MaskServer::absorb` re-checks the same
+        // invariant with a panic to protect Aggregator drivers other than
+        // this loop (the two layers are intentionally redundant).
+        if msg.slot >= expected || seen[msg.slot] {
+            bail!("bad or duplicate participant slot {}", msg.slot);
+        }
+        seen[msg.slot] = true;
+        report.loss_by_slot[msg.slot] = msg.loss as f64;
+        report.enc_by_slot[msg.slot] = msg.enc_secs;
+        match mode {
+            PipelineMode::Streaming => {
+                let t = Stopwatch::new();
+                let update = codec.decode(&enc.bytes, &plan.decode_ctx(msg.slot))?;
+                report.dec_secs += t.elapsed_secs();
+                agg.absorb(msg.slot, update);
+            }
+            PipelineMode::Batch => buffered[msg.slot] = Some(enc),
+        }
+    }
+    match mode {
+        PipelineMode::Streaming => agg.finish_round(),
+        PipelineMode::Batch => {
+            // Barrier passed: one begin/absorb×K/finish sweep in slot order.
+            agg.begin_round(expected);
+            for (slot, enc) in buffered.iter().enumerate() {
+                let enc = enc.as_ref().expect("all slots arrived");
+                let t = Stopwatch::new();
+                let update = codec.decode(&enc.bytes, &plan.decode_ctx(slot))?;
+                report.dec_secs += t.elapsed_secs();
+                agg.absorb(slot, update);
+            }
+            agg.finish_round();
+        }
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress;
+    use crate::coordinator::round::RoundEngine;
+    use crate::coordinator::transport::{ChannelTransport, WireMessage};
+
+    #[derive(Default)]
+    struct Spy {
+        begun: Option<usize>,
+        absorbed: Vec<usize>,
+        finished: bool,
+    }
+
+    impl Aggregator for Spy {
+        fn begin_round(&mut self, expected: usize) {
+            self.begun = Some(expected);
+        }
+
+        fn absorb(&mut self, slot: usize, _update: Update) {
+            self.absorbed.push(slot);
+        }
+
+        fn finish_round(&mut self) {
+            self.finished = true;
+        }
+    }
+
+    fn plan_of(n: usize) -> RoundPlan {
+        let theta = vec![0.5f32; 16];
+        let s = vec![0.0f32; 16];
+        RoundEngine::new(1, n, 1.0, 0.8, 0.25, 3).plan(0, &theta, &s)
+    }
+
+    fn msg(slot: usize, payload: Payload) -> WireMessage {
+        WireMessage {
+            round: 0,
+            client_id: slot,
+            slot,
+            payload,
+            enc_secs: 0.0,
+            loss: 0.25,
+        }
+    }
+
+    #[test]
+    fn failed_client_surfaces_as_error() {
+        let plan = plan_of(2);
+        let codec = compress::by_name("fedpm").unwrap();
+        let (mut transport, sender) = ChannelTransport::new();
+        sender
+            .send(msg(0, Payload::Failed("client oom".into())))
+            .unwrap();
+        drop(sender);
+        let mut spy = Spy::default();
+        let err = drain_round(
+            &mut transport,
+            &plan,
+            codec.as_ref(),
+            &mut spy,
+            PipelineMode::Batch,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("client oom"), "{err}");
+        assert!(!spy.finished);
+    }
+
+    #[test]
+    fn duplicate_slot_rejected_before_decode() {
+        let plan = plan_of(2);
+        let codec = compress::by_name("fedpm").unwrap();
+        let (mut transport, sender) = ChannelTransport::new();
+        // Batch mode defers decoding, so garbage payloads are fine here.
+        let junk = Payload::Update(Encoded { bytes: vec![0; 4] });
+        sender.send(msg(1, junk.clone())).unwrap();
+        sender.send(msg(1, junk)).unwrap();
+        drop(sender);
+        let mut spy = Spy::default();
+        let err = drain_round(
+            &mut transport,
+            &plan,
+            codec.as_ref(),
+            &mut spy,
+            PipelineMode::Batch,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("duplicate"), "{err}");
+    }
+
+    #[test]
+    fn early_close_reports_progress() {
+        let plan = plan_of(3);
+        let codec = compress::by_name("fedpm").unwrap();
+        let (mut transport, sender) = ChannelTransport::new();
+        drop(sender); // no client ever reports
+        let mut spy = Spy::default();
+        let err = drain_round(
+            &mut transport,
+            &plan,
+            codec.as_ref(),
+            &mut spy,
+            PipelineMode::Streaming,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("0/3"), "{err}");
+        assert_eq!(spy.begun, Some(3), "streaming begins before the drain");
+    }
+}

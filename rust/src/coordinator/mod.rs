@@ -1,1 +1,100 @@
-// paper's L3 coordination contribution
+//! The transport-agnostic federated round engine — the paper's L3
+//! coordination contribution (Alg. 1/2) as a reusable subsystem.
+//!
+//! The seed grew this logic inside a monolithic `fl::Runner`; it now lives
+//! here in four parts so the round loop composes instead of hard-wiring:
+//!
+//! * [`round`] — [`RoundPlan`] / [`RoundEngine`]: participant sampling, the
+//!   cosine κ schedule, per-round seeds and the shared-seed global binary
+//!   mask m^{g,t-1}. A plan is an immutable snapshot of everything a round
+//!   broadcasts (θ_g, s_g, mask_g), which is what decode contexts borrow —
+//!   never live server state, so streaming aggregation can mutate the
+//!   server while late updates are still being decoded.
+//! * [`transport`] — the [`Transport`] / [`TransportSender`] traits and the
+//!   in-process [`ChannelTransport`] used by simulations. Messages carry
+//!   [`Encoded`](crate::compress::Encoded) payloads plus per-message byte
+//!   and queue-latency accounting, replacing the old ad-hoc
+//!   `ClientRoundOutput` plumbing.
+//! * [`aggregate`] — the server-side drain loop ([`drain_round`]) over an
+//!   [`Aggregator`] sink: per-arrival decode→absorb in streaming mode, the
+//!   old full-round barrier in batch mode, with deterministic per-slot
+//!   accounting either way.
+//! * [`pool`] — a self-scheduling (work-stealing) [`ClientPool`]: workers
+//!   pull the next client job from a shared queue instead of being handed a
+//!   fixed round-robin chunk, so stragglers no longer idle whole threads,
+//!   and sessions live in `Option` slots rather than being swapped out for
+//!   zero-dimension placeholders.
+//! * [`PipelineMode`] — batch (decode + aggregate after a full-round
+//!   barrier, the seed behaviour) vs streaming (decode→absorb per arrival,
+//!   O(d) server memory instead of O(K·d)); both are exposed so benches can
+//!   A/B them. Streaming is the default.
+//!
+//! The server-side counterpart is
+//! [`MaskServer::{begin_round, absorb, finish_round}`](crate::fl::server::MaskServer),
+//! whose mask-family pseudo-count arithmetic is exactly order-invariant
+//! (integer-valued f32 adds) and whose delta-family FedAvg is applied in
+//! participant order through a reorder window, so a streaming round is
+//! bitwise identical to the batch barrier regardless of arrival order.
+
+pub mod aggregate;
+pub mod pool;
+pub mod round;
+pub mod transport;
+
+pub use aggregate::{drain_round, Aggregator, DrainReport};
+pub use pool::ClientPool;
+pub use round::{RoundEngine, RoundPlan};
+pub use transport::{
+    ChannelTransport, Payload, Transport, TransportSender, TransportStats, WireMessage,
+};
+
+/// Server-side decode→aggregate scheduling policy for one experiment.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum PipelineMode {
+    /// Seed behaviour: wait for the whole round, then decode and aggregate
+    /// every update behind the barrier (O(K·d) server memory).
+    Batch,
+    /// Decode and absorb each update as it arrives; the server holds only
+    /// the Beta posterior / score vector (O(d)).
+    #[default]
+    Streaming,
+}
+
+impl PipelineMode {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            PipelineMode::Batch => "batch",
+            PipelineMode::Streaming => "streaming",
+        }
+    }
+
+    /// Parse a CLI value (`--pipeline {batch,streaming}`).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "batch" => Some(PipelineMode::Batch),
+            "streaming" => Some(PipelineMode::Streaming),
+            _ => None,
+        }
+    }
+
+    /// The shared `--pipeline {batch,streaming}` CLI option (panics with
+    /// the allowed values on anything else; defaults to streaming).
+    pub fn from_args(args: &crate::util::cli::Args) -> Self {
+        let v = args.choice("pipeline", &["batch", "streaming"], "streaming");
+        Self::parse(v).expect("choice() already validated the value")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pipeline_mode_round_trips() {
+        for m in [PipelineMode::Batch, PipelineMode::Streaming] {
+            assert_eq!(PipelineMode::parse(m.as_str()), Some(m));
+        }
+        assert_eq!(PipelineMode::parse("turbo"), None);
+        assert_eq!(PipelineMode::default(), PipelineMode::Streaming);
+    }
+}

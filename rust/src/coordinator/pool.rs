@@ -1,0 +1,216 @@
+//! Self-scheduling client execution pool.
+//!
+//! The seed pre-chunked participants round-robin across scoped threads, so
+//! one straggler idled its whole chunk's thread-mates; and it moved
+//! sessions out of the runner by swapping in zero-dimension placeholder
+//! sessions — a latent footgun if a worker died mid-round. Here workers
+//! claim the next job from a shared atomic cursor (work stealing in its
+//! simplest form: the queue is the steal target), and sessions travel
+//! through `Option` slots that are either intact or visibly empty — never a
+//! fake session.
+//!
+//! The pool is generic over the session type so it stays independent of
+//! `fl`; the runner instantiates it with `ClientSession`.
+
+use anyhow::{anyhow, Result};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// A fixed-size worker pool executing one job per (client id, session) item.
+#[derive(Clone, Copy, Debug)]
+pub struct ClientPool {
+    pub threads: usize,
+}
+
+struct Slot<S, T> {
+    id: usize,
+    sess: Option<S>,
+    out: Option<Result<T>>,
+}
+
+impl ClientPool {
+    pub fn new(threads: usize) -> Self {
+        Self {
+            threads: threads.max(1),
+        }
+    }
+
+    /// One thread per hardware core, capped at the item count.
+    pub fn sized_for(items: usize) -> Self {
+        let cores = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4);
+        Self::new(cores.min(items.max(1)))
+    }
+
+    /// Run `job` over every `(client_id, session)` item on the pool while
+    /// `server_loop` runs concurrently on the calling thread.
+    ///
+    /// `job` is cloned once per worker (so per-worker resources such as
+    /// transport senders clone instead of needing `Sync`); the original is
+    /// dropped before `server_loop` starts, which lets a channel-backed
+    /// server loop detect end-of-input when every worker has finished.
+    ///
+    /// Returns each item's `(client_id, session, job result)` in submission
+    /// order plus the server loop's result. A session is `None` only if its
+    /// worker panicked — in which case the panic propagates out of this
+    /// call once the server loop has returned.
+    pub fn run_with_server<S, T, R, Job, Server>(
+        &self,
+        items: Vec<(usize, S)>,
+        job: Job,
+        server_loop: Server,
+    ) -> (Vec<(usize, Option<S>, Result<T>)>, R)
+    where
+        S: Send,
+        T: Send,
+        Job: FnMut(usize, usize, &mut S) -> Result<T> + Send + Clone,
+        Server: FnOnce() -> R,
+    {
+        let n = items.len();
+        let slots: Vec<Mutex<Slot<S, T>>> = items
+            .into_iter()
+            .map(|(id, sess)| {
+                Mutex::new(Slot {
+                    id,
+                    sess: Some(sess),
+                    out: None,
+                })
+            })
+            .collect();
+        let next = AtomicUsize::new(0);
+
+        let server_result = std::thread::scope(|scope| {
+            for _ in 0..self.threads.min(n) {
+                let mut job = job.clone();
+                let slots = &slots;
+                let next = &next;
+                scope.spawn(move || loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let (id, mut sess) = {
+                        let mut slot = slots[i].lock().unwrap();
+                        let sess = slot.sess.take().expect("job slot claimed twice");
+                        (slot.id, sess)
+                    };
+                    // Train/encode outside the slot lock; other workers are
+                    // busy with their own slots.
+                    let out = job(i, id, &mut sess);
+                    let mut slot = slots[i].lock().unwrap();
+                    slot.sess = Some(sess);
+                    slot.out = Some(out);
+                });
+            }
+            // Drop the original job so worker-held resources (e.g. the root
+            // transport sender inside it) die with the workers.
+            drop(job);
+            server_loop()
+        });
+
+        let finished = slots
+            .into_iter()
+            .map(|m| {
+                let slot = m.into_inner().unwrap();
+                let out = slot
+                    .out
+                    .unwrap_or_else(|| Err(anyhow!("client {} job never ran", slot.id)));
+                (slot.id, slot.sess, out)
+            })
+            .collect();
+        (finished, server_result)
+    }
+
+    /// Convenience wrapper when there is no concurrent server loop.
+    pub fn run<S, T, Job>(
+        &self,
+        items: Vec<(usize, S)>,
+        job: Job,
+    ) -> Vec<(usize, Option<S>, Result<T>)>
+    where
+        S: Send,
+        T: Send,
+        Job: FnMut(usize, usize, &mut S) -> Result<T> + Send + Clone,
+    {
+        self.run_with_server(items, job, || ()).0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn runs_every_item_once_and_restores_state() {
+        let items: Vec<(usize, u64)> = (0..37).map(|i| (i, i as u64 * 10)).collect();
+        let calls = AtomicUsize::new(0);
+        let pool = ClientPool::new(4);
+        let out = pool.run(items, |slot, id, sess: &mut u64| {
+            calls.fetch_add(1, Ordering::Relaxed);
+            *sess += 1;
+            assert_eq!(slot, id, "submission order preserved");
+            Ok(*sess)
+        });
+        assert_eq!(calls.load(Ordering::Relaxed), 37);
+        assert_eq!(out.len(), 37);
+        for (id, sess, res) in out {
+            assert_eq!(sess, Some(id as u64 * 10 + 1));
+            assert_eq!(res.unwrap(), id as u64 * 10 + 1);
+        }
+    }
+
+    #[test]
+    fn job_errors_are_per_item_not_fatal() {
+        let items: Vec<(usize, ())> = (0..8).map(|i| (i, ())).collect();
+        let pool = ClientPool::new(3);
+        let out = pool.run(items, |_slot, id, _s: &mut ()| {
+            if id % 2 == 0 {
+                Err(anyhow!("client {id} boom"))
+            } else {
+                Ok(id)
+            }
+        });
+        for (id, sess, res) in out {
+            assert!(sess.is_some(), "sessions survive job errors");
+            assert_eq!(res.is_err(), id % 2 == 0);
+        }
+    }
+
+    #[test]
+    fn server_loop_runs_concurrently_on_caller_thread() {
+        use std::sync::mpsc;
+        let (tx, rx) = mpsc::channel::<usize>();
+        let items: Vec<(usize, ())> = (0..16).map(|i| (i, ())).collect();
+        let pool = ClientPool::sized_for(16);
+        let tx2 = tx.clone();
+        let (results, seen) = pool.run_with_server(
+            items,
+            move |_slot, id, _s: &mut ()| {
+                tx2.send(id).map_err(|_| anyhow!("closed"))?;
+                Ok(())
+            },
+            move || {
+                drop(tx); // only worker clones keep the channel open
+                let mut got: Vec<usize> = rx.iter().collect();
+                got.sort_unstable();
+                got
+            },
+        );
+        assert_eq!(seen, (0..16).collect::<Vec<_>>());
+        assert!(results.iter().all(|(_, s, _)| s.is_some()));
+    }
+
+    #[test]
+    #[should_panic]
+    fn worker_panic_propagates() {
+        let items: Vec<(usize, ())> = (0..4).map(|i| (i, ())).collect();
+        ClientPool::new(2).run(items, |_slot, id, _s: &mut ()| {
+            if id == 2 {
+                panic!("worker died");
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,197 @@
+//! Round planning: participant sampling, the κ schedule, per-round seeds
+//! and the shared-seed global mask — everything a round broadcasts, frozen
+//! into an immutable [`RoundPlan`] snapshot.
+
+use crate::compress::{DecodeCtx, EncodeCtx};
+use crate::model::{kappa_schedule, sample_mask_seeded};
+use crate::util::rng::Xoshiro256pp;
+
+/// Immutable broadcast state for one federated round.
+///
+/// Every decode context borrows from the plan, not from the live server:
+/// streaming aggregation mutates `MaskServer::{alpha,beta,s_g}` while later
+/// updates are still in flight, so decoders must see the round-start
+/// snapshot (θ^{g,t-1}, s^{g,t-1}, m^{g,t-1}) the clients encoded against.
+#[derive(Clone, Debug)]
+pub struct RoundPlan {
+    pub round: usize,
+    /// Public per-round seed: derives m^{g,t-1} on every party (§3.2) and,
+    /// xor-ed with the client id, each client's codec seed.
+    pub seed: u64,
+    /// Top-κ fraction from the cosine schedule.
+    pub kappa: f64,
+    /// Sampled client ids, in slot order (slot i ↔ participants[i]).
+    pub participants: Vec<usize>,
+    /// Shared-seed global binary mask m^{g,t-1}.
+    pub mask_g: Vec<f32>,
+    /// Broadcast global probabilities θ^{g,t-1}.
+    pub theta_g: Vec<f32>,
+    /// Broadcast score mirror s^{g,t-1} (delta-family reference point).
+    pub s_g: Vec<f32>,
+}
+
+impl RoundPlan {
+    /// Mask dimensionality.
+    pub fn d(&self) -> usize {
+        self.theta_g.len()
+    }
+
+    /// Number of updates the server expects this round.
+    pub fn expected(&self) -> usize {
+        self.participants.len()
+    }
+
+    /// Deterministic codec seed for the client in `slot` — known to both
+    /// parties without transmission.
+    pub fn client_seed(&self, slot: usize) -> u64 {
+        self.seed ^ self.participants[slot] as u64
+    }
+
+    /// Server-side decode context for `slot`, borrowing the round snapshot.
+    pub fn decode_ctx(&self, slot: usize) -> DecodeCtx<'_> {
+        DecodeCtx {
+            d: self.d(),
+            mask_g: &self.mask_g,
+            s_g: &self.s_g,
+            seed: self.client_seed(slot),
+        }
+    }
+
+    /// Client-side encode context for `slot`, combining the broadcast
+    /// snapshot with the client's freshly-trained local state.
+    pub fn encode_ctx<'a>(
+        &'a self,
+        slot: usize,
+        theta_k: &'a [f32],
+        mask_k: &'a [f32],
+        s_k: &'a [f32],
+    ) -> EncodeCtx<'a> {
+        EncodeCtx {
+            d: self.d(),
+            theta_k,
+            theta_g: &self.theta_g,
+            mask_k,
+            mask_g: &self.mask_g,
+            s_k,
+            s_g: &self.s_g,
+            kappa: self.kappa,
+            seed: self.client_seed(slot),
+        }
+    }
+}
+
+/// Owns the cross-round scheduling state: the participant-sampling RNG and
+/// the experiment geometry (N, ρ, κ schedule, horizon).
+#[derive(Debug)]
+pub struct RoundEngine {
+    n_clients: usize,
+    rho: f64,
+    kappa0: f64,
+    kappa_floor: f64,
+    total_rounds: usize,
+    base_seed: u64,
+    rng: Xoshiro256pp,
+}
+
+impl RoundEngine {
+    pub fn new(
+        base_seed: u64,
+        n_clients: usize,
+        rho: f64,
+        kappa0: f64,
+        kappa_floor: f64,
+        total_rounds: usize,
+    ) -> Self {
+        Self {
+            n_clients,
+            rho,
+            kappa0,
+            kappa_floor,
+            total_rounds,
+            base_seed,
+            rng: Xoshiro256pp::new(base_seed ^ 0x5e_1e_c7),
+        }
+    }
+
+    /// The public per-round seed (same derivation on every party).
+    pub fn round_seed(&self, round: usize) -> u64 {
+        self.base_seed ^ (round as u64).wrapping_mul(0xa076_1d64_78bd_642f)
+    }
+
+    /// Sample ⌈ρ·N⌉ participants for the next round. Advances the engine
+    /// RNG — call exactly once per round.
+    pub fn sample_participants(&mut self) -> Vec<usize> {
+        let k = ((self.rho * self.n_clients as f64).round() as usize).clamp(1, self.n_clients);
+        self.rng.choose(self.n_clients, k)
+    }
+
+    /// Build the full broadcast plan for `round` from the current global
+    /// state (θ_g, s_g are snapshotted into the plan).
+    pub fn plan(&mut self, round: usize, theta_g: &[f32], s_g: &[f32]) -> RoundPlan {
+        let seed = self.round_seed(round);
+        let kappa = kappa_schedule(self.kappa0, round, self.total_rounds, self.kappa_floor);
+        let mut mask_g = Vec::new();
+        sample_mask_seeded(theta_g, seed, &mut mask_g);
+        RoundPlan {
+            round,
+            seed,
+            kappa,
+            participants: self.sample_participants(),
+            mask_g,
+            theta_g: theta_g.to_vec(),
+            s_g: s_g.to_vec(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plans_are_deterministic_per_seed() {
+        let theta = vec![0.5f32; 64];
+        let s = vec![0.0f32; 64];
+        let mut a = RoundEngine::new(42, 10, 0.5, 0.8, 0.25, 10);
+        let mut b = RoundEngine::new(42, 10, 0.5, 0.8, 0.25, 10);
+        for round in 0..4 {
+            let pa = a.plan(round, &theta, &s);
+            let pb = b.plan(round, &theta, &s);
+            assert_eq!(pa.participants, pb.participants, "round {round}");
+            assert_eq!(pa.mask_g, pb.mask_g);
+            assert_eq!(pa.seed, pb.seed);
+            assert_eq!(pa.expected(), 5);
+        }
+        let mut c = RoundEngine::new(43, 10, 0.5, 0.8, 0.25, 10);
+        let pc = c.plan(0, &theta, &s);
+        let pa0 = RoundEngine::new(42, 10, 0.5, 0.8, 0.25, 10).plan(0, &theta, &s);
+        assert_ne!(pa0.seed, pc.seed);
+    }
+
+    #[test]
+    fn participant_count_clamps() {
+        let theta = vec![0.5f32; 8];
+        let s = vec![0.0f32; 8];
+        // ρ→0 still samples one client; ρ=1 samples all, each exactly once.
+        let mut tiny = RoundEngine::new(1, 6, 1e-9, 0.8, 0.25, 3);
+        assert_eq!(tiny.plan(0, &theta, &s).expected(), 1);
+        let mut full = RoundEngine::new(1, 6, 1.0, 0.8, 0.25, 3);
+        let mut ids = full.plan(0, &theta, &s).participants;
+        ids.sort_unstable();
+        assert_eq!(ids, vec![0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn contexts_borrow_the_snapshot() {
+        let theta = vec![0.25f32; 32];
+        let s = vec![-1.0986f32; 32];
+        let mut eng = RoundEngine::new(7, 4, 1.0, 0.8, 1.0, 2);
+        let plan = eng.plan(1, &theta, &s);
+        let slot = 2;
+        let dctx = plan.decode_ctx(slot);
+        assert_eq!(dctx.d, 32);
+        assert_eq!(dctx.seed, plan.seed ^ plan.participants[slot] as u64);
+        // κ floor_frac = 1.0 ⇒ constant schedule.
+        assert!((plan.kappa - 0.8).abs() < 1e-12);
+    }
+}

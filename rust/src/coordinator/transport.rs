@@ -1,0 +1,242 @@
+//! Uplink transport abstraction: clients hand `Encoded` payloads to a
+//! [`TransportSender`]; the server drains a [`Transport`] in arrival order.
+//!
+//! Every message carries its own byte and timing accounting so the round
+//! loop measures honest wire costs without threading bookkeeping through
+//! client code. The in-process [`ChannelTransport`] backs simulations; a
+//! networked implementation only has to provide the same two traits.
+
+use crate::compress::Encoded;
+use anyhow::{anyhow, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Instant;
+
+/// What a client produced for the round: an encoded update, or a terminal
+/// failure (reported in-band so the server never waits on a dead client).
+#[derive(Clone, Debug)]
+pub enum Payload {
+    Update(Encoded),
+    Failed(String),
+}
+
+/// One uplink message.
+#[derive(Clone, Debug)]
+pub struct WireMessage {
+    pub round: usize,
+    pub client_id: usize,
+    /// Participant index within the round (position in
+    /// `RoundPlan::participants`) — the server's aggregation slot.
+    pub slot: usize,
+    pub payload: Payload,
+    /// Client-side encode wall time.
+    pub enc_secs: f64,
+    /// Mean local training loss this round.
+    pub loss: f32,
+}
+
+impl WireMessage {
+    pub fn payload_bytes(&self) -> usize {
+        match &self.payload {
+            Payload::Update(enc) => enc.bytes.len(),
+            Payload::Failed(_) => 0,
+        }
+    }
+}
+
+/// Aggregate transport accounting.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct TransportStats {
+    /// Messages handed to the sender side.
+    pub sent_messages: u64,
+    /// Sum of payload bytes handed to the sender side.
+    pub sent_payload_bytes: u64,
+    /// Messages the server end has drained.
+    pub received_messages: u64,
+    /// Total send→receive queue latency over drained messages.
+    pub transit_secs: f64,
+}
+
+/// Client-side handle. Cheap to clone; every worker thread owns one.
+pub trait TransportSender: Send {
+    fn send(&self, msg: WireMessage) -> Result<()>;
+    fn clone_sender(&self) -> Box<dyn TransportSender>;
+}
+
+impl Clone for Box<dyn TransportSender> {
+    fn clone(&self) -> Self {
+        self.clone_sender()
+    }
+}
+
+/// Server-side end of an uplink.
+pub trait Transport {
+    /// Next message in arrival order; `None` once every sender handle has
+    /// been dropped and the queue is drained.
+    fn recv(&mut self) -> Option<WireMessage>;
+    fn stats(&self) -> TransportStats;
+}
+
+struct Stamped {
+    msg: WireMessage,
+    sent_at: Instant,
+}
+
+#[derive(Default)]
+struct Counters {
+    messages: AtomicU64,
+    payload_bytes: AtomicU64,
+}
+
+/// In-process MPSC transport for simulations.
+pub struct ChannelTransport {
+    rx: mpsc::Receiver<Stamped>,
+    counters: Arc<Counters>,
+    received: u64,
+    transit_secs: f64,
+}
+
+struct ChannelSender {
+    tx: mpsc::Sender<Stamped>,
+    counters: Arc<Counters>,
+}
+
+impl ChannelTransport {
+    /// Create the server end plus the root sender handle. Dropping the root
+    /// handle and all its clones closes the channel, which is how `recv`
+    /// learns that no more updates can arrive.
+    pub fn new() -> (Self, Box<dyn TransportSender>) {
+        let (tx, rx) = mpsc::channel();
+        let counters = Arc::new(Counters::default());
+        let server = Self {
+            rx,
+            counters: counters.clone(),
+            received: 0,
+            transit_secs: 0.0,
+        };
+        (server, Box::new(ChannelSender { tx, counters }))
+    }
+}
+
+impl TransportSender for ChannelSender {
+    fn send(&self, msg: WireMessage) -> Result<()> {
+        self.counters
+            .payload_bytes
+            .fetch_add(msg.payload_bytes() as u64, Ordering::Relaxed);
+        self.counters.messages.fetch_add(1, Ordering::Relaxed);
+        self.tx
+            .send(Stamped {
+                msg,
+                sent_at: Instant::now(),
+            })
+            .map_err(|_| anyhow!("uplink closed: server end dropped"))
+    }
+
+    fn clone_sender(&self) -> Box<dyn TransportSender> {
+        Box::new(ChannelSender {
+            tx: self.tx.clone(),
+            counters: self.counters.clone(),
+        })
+    }
+}
+
+impl Transport for ChannelTransport {
+    fn recv(&mut self) -> Option<WireMessage> {
+        match self.rx.recv() {
+            Ok(stamped) => {
+                self.received += 1;
+                self.transit_secs += stamped.sent_at.elapsed().as_secs_f64();
+                Some(stamped.msg)
+            }
+            Err(_) => None,
+        }
+    }
+
+    fn stats(&self) -> TransportStats {
+        TransportStats {
+            sent_messages: self.counters.messages.load(Ordering::Relaxed),
+            sent_payload_bytes: self.counters.payload_bytes.load(Ordering::Relaxed),
+            received_messages: self.received,
+            transit_secs: self.transit_secs,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn msg(slot: usize, n_bytes: usize) -> WireMessage {
+        WireMessage {
+            round: 0,
+            client_id: slot,
+            slot,
+            payload: Payload::Update(Encoded {
+                bytes: vec![0xAB; n_bytes],
+            }),
+            enc_secs: 0.001,
+            loss: 0.5,
+        }
+    }
+
+    #[test]
+    fn delivers_in_order_and_accounts_bytes() {
+        let (mut server, sender) = ChannelTransport::new();
+        let s2 = sender.clone();
+        sender.send(msg(0, 10)).unwrap();
+        s2.send(msg(1, 30)).unwrap();
+        drop(sender);
+        drop(s2);
+        let a = server.recv().unwrap();
+        let b = server.recv().unwrap();
+        assert_eq!((a.slot, b.slot), (0, 1));
+        assert!(server.recv().is_none(), "closed after all senders drop");
+        let st = server.stats();
+        assert_eq!(st.sent_messages, 2);
+        assert_eq!(st.sent_payload_bytes, 40);
+        assert_eq!(st.received_messages, 2);
+        assert!(st.transit_secs >= 0.0);
+    }
+
+    #[test]
+    fn failure_payloads_count_zero_bytes() {
+        let (mut server, sender) = ChannelTransport::new();
+        sender
+            .send(WireMessage {
+                round: 3,
+                client_id: 9,
+                slot: 0,
+                payload: Payload::Failed("oom".into()),
+                enc_secs: 0.0,
+                loss: 0.0,
+            })
+            .unwrap();
+        drop(sender);
+        let m = server.recv().unwrap();
+        assert_eq!(m.payload_bytes(), 0);
+        assert!(matches!(m.payload, Payload::Failed(ref e) if e == "oom"));
+    }
+
+    #[test]
+    fn send_after_server_drop_errors() {
+        let (server, sender) = ChannelTransport::new();
+        drop(server);
+        assert!(sender.send(msg(0, 1)).is_err());
+    }
+
+    #[test]
+    fn senders_work_across_threads() {
+        let (mut server, sender) = ChannelTransport::new();
+        std::thread::scope(|scope| {
+            for t in 0..4 {
+                let s = sender.clone();
+                scope.spawn(move || s.send(msg(t, t + 1)).unwrap());
+            }
+        });
+        drop(sender);
+        let mut slots: Vec<usize> = std::iter::from_fn(|| server.recv().map(|m| m.slot)).collect();
+        slots.sort_unstable();
+        assert_eq!(slots, vec![0, 1, 2, 3]);
+        assert_eq!(server.stats().sent_payload_bytes, 1 + 2 + 3 + 4);
+    }
+}

@@ -1,6 +1,11 @@
 //! Client-side session: local stochastic-mask training (Alg. 1
 //! ClientUpdate) over the client's shard, with persistent Adam moments
 //! across rounds and deterministic per-(client, round) randomness.
+//!
+//! Sessions are owned by the runner's `Option` slots and travel by value
+//! through the coordinator's work-stealing `ClientPool` for the duration of
+//! a round — there are no placeholder sessions, and all round inputs arrive
+//! via the immutable `RoundPlan` broadcast snapshot.
 
 use super::data::ClientData;
 use crate::model::backend::{Backend, FtState, LpState, ModelParams};

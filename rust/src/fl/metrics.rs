@@ -14,6 +14,9 @@ pub struct RoundMetrics {
     pub dec_ms_mean: f64,
     pub train_loss: f64,
     pub accuracy: Option<f64>,
+    /// Which server pipeline produced this round: `"streaming"`
+    /// (per-arrival decode→absorb) or `"batch"` (full-round barrier).
+    pub pipeline: &'static str,
 }
 
 #[derive(Clone, Debug)]
@@ -116,6 +119,7 @@ impl ExperimentResult {
                 let mut o = Json::obj();
                 o.set("round", Json::Num(r.round as f64))
                     .set("kappa", Json::Num(r.kappa))
+                    .set("pipeline", Json::from_str_(r.pipeline))
                     .set("bpp", Json::Num(r.mean_bpp))
                     .set("loss", Json::Num(r.train_loss))
                     .set(
@@ -159,6 +163,7 @@ mod tests {
             dec_ms_mean: 2.0,
             train_loss: 0.5,
             accuracy: acc,
+            pipeline: "streaming",
         }
     }
 

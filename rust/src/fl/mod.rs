@@ -1,11 +1,20 @@
-//! The L3 federated coordinator — the paper's system contribution.
+//! Federated experiment layer: configuration, state ownership and the
+//! paper's Alg. 1 round loop, built **on top of the
+//! [`coordinator`](crate::coordinator) subsystem**.
 //!
-//! Round loop (Alg. 1): the server broadcasts the global probability mask
-//! θ^{g,t-1}; every party derives the identical binary mask m^{g,t-1} from a
-//! shared seed; sampled clients train locally (stochastic mask training via
-//! the AOT-compiled L2/L1 graphs or the native mirror), encode their update
-//! with the configured codec (DeltaMask or a baseline), and the server
-//! reconstructs + Bayesian-aggregates.
+//! Division of labour after the refactor:
+//! * `coordinator::RoundEngine` plans each round (participant sampling,
+//!   κ schedule, per-round seeds, the shared-seed mask m^{g,t-1});
+//! * `coordinator::ClientPool` trains + encodes participants with
+//!   work-stealing scheduling;
+//! * `coordinator::Transport` carries the encoded updates with byte and
+//!   latency accounting;
+//! * [`server::MaskServer`] absorbs updates as they arrive
+//!   (`begin_round` / `absorb` / `finish_round`), Bayesian for the mask
+//!   family, FedAvg-on-scores for the delta family;
+//! * [`runner::Runner`] (this layer) owns model/data/session state, wires
+//!   the pieces together per [`ExperimentConfig`], and runs the
+//!   weight-space baselines.
 
 pub mod client;
 pub mod data;
@@ -68,6 +77,11 @@ pub struct ExperimentConfig {
     /// Override the architecture geometry (the benches shrink F to keep the
     /// CPU sweeps tractable; bpp math is scale-relative).
     pub arch_override: Option<ArchConfig>,
+    /// Server-side decode→aggregate scheduling: streaming (per-arrival,
+    /// O(d) server memory — the default) or batch (the old full-round
+    /// barrier, kept for A/B comparisons). Both produce bitwise-identical
+    /// trajectories; see `coordinator::PipelineMode`.
+    pub pipeline: crate::coordinator::PipelineMode,
 }
 
 impl Default for ExperimentConfig {
@@ -92,6 +106,7 @@ impl Default for ExperimentConfig {
             lp_rounds: 1,
             theta0: 0.85,
             arch_override: None,
+            pipeline: crate::coordinator::PipelineMode::default(),
         }
     }
 }

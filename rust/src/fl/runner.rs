@@ -1,24 +1,33 @@
-//! The federated round loop (Alg. 1): client sampling, shared-seed mask
-//! broadcast, parallel local training, update encode/decode with timing,
-//! Bayesian/FedAvg aggregation and periodic global evaluation.
+//! The federated experiment driver: owns model/data/session state and runs
+//! Alg. 1 **on top of the `coordinator` subsystem** — `RoundEngine` plans
+//! each round (sampling, κ, shared-seed mask), a `ClientPool` trains and
+//! encodes participants with work stealing, updates travel through a
+//! `Transport`, and the server absorbs them as they arrive
+//! (`MaskServer::{begin_round, absorb, finish_round}`) or behind the old
+//! barrier, depending on `PipelineMode`. The runner itself no longer
+//! decodes or aggregates inline.
 
 use super::client::ClientSession;
-use super::data::{self, FederatedData};
+use super::data::{self, ClientData, FederatedData};
 use super::metrics::{ExperimentResult, RoundMetrics};
 use super::server::MaskServer;
 use super::ExperimentConfig;
-use crate::compress::{DecodeCtx, EncodeCtx, UpdateCodec};
+use crate::compress::UpdateCodec;
+use crate::coordinator::{
+    drain_round, ChannelTransport, ClientPool, Payload, RoundEngine, RoundPlan, WireMessage,
+};
 use crate::model::backend::{Backend, FtState, LpState, ModelParams};
-use crate::model::{accuracy, init_params, kappa_schedule, sample_mask_seeded};
-use crate::util::rng::Xoshiro256pp;
+use crate::model::{accuracy, init_params, sample_mask_seeded};
 use crate::util::timer::Stopwatch;
 use anyhow::{anyhow, Result};
 
-/// Everything produced by one client in one round.
-struct ClientRoundOutput {
-    bytes: Vec<u8>,
+/// Per-round accounting produced by the server-side drain loop.
+#[derive(Clone, Debug, Default)]
+struct RoundTally {
+    bits: f64,
     enc_secs: f64,
-    loss: f32,
+    dec_secs: f64,
+    loss: f64,
 }
 
 pub struct Runner<'a> {
@@ -26,9 +35,11 @@ pub struct Runner<'a> {
     pub backend: &'a dyn Backend,
     pub params: ModelParams,
     pub data: FederatedData,
-    pub sessions: Vec<ClientSession>,
+    /// Client sessions; a slot is `None` only while that client is in
+    /// flight on the pool (no placeholder sessions, ever).
+    pub sessions: Vec<Option<ClientSession>>,
     pub server: MaskServer,
-    rng: Xoshiro256pp,
+    engine: RoundEngine,
 }
 
 impl<'a> Runner<'a> {
@@ -47,7 +58,7 @@ impl<'a> Runner<'a> {
         );
         let params = init_params(arch, cfg.seed ^ 0x11_22);
         let sessions = (0..cfg.n_clients)
-            .map(|id| ClientSession::new(id, arch.d(), cfg.seed))
+            .map(|id| Some(ClientSession::new(id, arch.d(), cfg.seed)))
             .collect();
         Ok(Self {
             cfg,
@@ -56,7 +67,14 @@ impl<'a> Runner<'a> {
             data,
             sessions,
             server: MaskServer::with_theta0(arch.d(), cfg.rho, cfg.theta0),
-            rng: Xoshiro256pp::new(cfg.seed ^ 0x5e_1e_c7),
+            engine: RoundEngine::new(
+                cfg.seed,
+                cfg.n_clients,
+                cfg.rho,
+                cfg.kappa0,
+                cfg.kappa_floor,
+                cfg.rounds,
+            ),
         })
     }
 
@@ -76,7 +94,10 @@ impl<'a> Runner<'a> {
                         // Enough local epochs that the paper's single LP
                         // round actually converges the head (good frozen
                         // features converge a linear probe quickly).
-                        let (new_state, _) = self.sessions[k].local_probe(
+                        let sess = self.sessions[k]
+                            .as_mut()
+                            .ok_or_else(|| anyhow!("client {k} session in flight"))?;
+                        let (new_state, _) = sess.local_probe(
                             self.backend,
                             &self.params,
                             &self.data.clients[k],
@@ -177,200 +198,145 @@ impl<'a> Runner<'a> {
         }
     }
 
-    /// Run the full federated experiment with the given codec.
+    /// Run the full federated experiment with the given codec. Each round
+    /// is planned by the [`RoundEngine`]; decoding and aggregation flow
+    /// through the transport into the streaming server (or the batch
+    /// barrier when `cfg.pipeline` asks for the A/B reference path).
     pub fn run_codec(&mut self, codec: &dyn UpdateCodec) -> Result<ExperimentResult> {
-        let arch = self.params.cfg;
-        let d = arch.d();
+        let d = self.params.cfg.d();
         let sw = Stopwatch::new();
         let head_bits = self.init_head()?;
         let mut rounds = Vec::with_capacity(self.cfg.rounds);
 
         for round in 0..self.cfg.rounds {
-            self.server.begin_round();
-            let kappa = kappa_schedule(self.cfg.kappa0, round, self.cfg.rounds, self.cfg.kappa_floor);
-            let round_seed = self.cfg.seed ^ (round as u64).wrapping_mul(0xa076_1d64_78bd_642f);
-
-            // Shared-seed global binary mask (identical on all parties).
-            let mut mask_g = Vec::new();
-            sample_mask_seeded(&self.server.theta_g, round_seed, &mut mask_g);
-
-            // Participant sampling.
-            let k = ((self.cfg.rho * self.cfg.n_clients as f64).round() as usize)
-                .clamp(1, self.cfg.n_clients);
-            let participants = self.rng.choose(self.cfg.n_clients, k);
-
-            // Local training + encode (parallel over participants).
-            let theta_g = self.server.theta_g.clone();
-            let s_g = self.server.s_g.clone();
-            let outputs = self.run_clients_parallel(
-                &participants,
-                codec,
-                &theta_g,
-                &s_g,
-                &mask_g,
-                kappa,
-                round,
-                round_seed,
-            )?;
-
-            // Server-side decode + aggregate (timed).
-            let mut updates = Vec::with_capacity(outputs.len());
-            let mut dec_secs = 0.0;
-            let mut enc_secs = 0.0;
-            let mut bits = 0.0;
-            let mut loss = 0.0;
-            for (i, out) in outputs.iter().enumerate() {
-                let dctx = DecodeCtx {
-                    d,
-                    mask_g: &mask_g,
-                    s_g: &self.server.s_g,
-                    seed: round_seed ^ participants[i] as u64,
-                };
-                let t = Stopwatch::new();
-                updates.push(codec.decode(&out.bytes, &dctx)?);
-                dec_secs += t.elapsed_secs();
-                enc_secs += out.enc_secs;
-                bits += out.bytes.len() as f64 * 8.0;
-                loss += out.loss as f64;
-            }
-            let kf = outputs.len() as f64;
-            self.server.aggregate(&updates);
+            let plan = self
+                .engine
+                .plan(round, &self.server.theta_g, &self.server.s_g);
+            let tally = self.run_round(&plan, codec)?;
 
             // Periodic evaluation of the global model.
-            let acc = if (round + 1) % self.cfg.eval_every == 0
-                || round + 1 == self.cfg.rounds
+            let acc = if (round + 1) % self.cfg.eval_every == 0 || round + 1 == self.cfg.rounds
             {
-                Some(self.eval_global(round_seed)?)
+                Some(self.eval_global(plan.seed)?)
             } else {
                 None
             };
+            let kf = plan.expected() as f64;
             rounds.push(RoundMetrics {
                 round,
-                kappa,
-                mean_bits: bits / kf,
-                mean_bpp: (bits / kf) / d as f64,
-                enc_ms_mean: enc_secs / kf * 1e3,
-                dec_ms_mean: dec_secs / kf * 1e3,
-                train_loss: loss / kf,
+                kappa: plan.kappa,
+                mean_bits: tally.bits / kf,
+                mean_bpp: (tally.bits / kf) / d as f64,
+                enc_ms_mean: tally.enc_secs / kf * 1e3,
+                dec_ms_mean: tally.dec_secs / kf * 1e3,
+                train_loss: tally.loss / kf,
                 accuracy: acc,
+                pipeline: self.cfg.pipeline.as_str(),
             });
         }
         Ok(self.result_with_head(rounds, head_bits, sw.elapsed_secs()))
     }
 
-    #[allow(clippy::too_many_arguments)]
-    fn run_clients_parallel(
-        &mut self,
-        participants: &[usize],
-        codec: &dyn UpdateCodec,
-        theta_g: &[f32],
-        s_g: &[f32],
-        mask_g: &[f32],
-        kappa: f64,
-        round: usize,
-        round_seed: u64,
-    ) -> Result<Vec<ClientRoundOutput>> {
+    /// One federated round: fan participants out on the work-stealing pool,
+    /// drain their encoded updates off the transport on this thread, and
+    /// aggregate per the configured pipeline mode.
+    fn run_round(&mut self, plan: &RoundPlan, codec: &dyn UpdateCodec) -> Result<RoundTally> {
         let cfg = self.cfg;
         let backend = self.backend;
         let params = &self.params;
         let data = &self.data;
-        let d = params.cfg.d();
+        let round = plan.round;
+        let expected = plan.expected();
+        let resync = codec.resync_scores();
 
-        // Move the participating sessions out so threads own them.
-        let mut picked: Vec<(usize, ClientSession)> = Vec::with_capacity(participants.len());
-        for &id in participants {
-            let placeholder = ClientSession::new(id, 0, 0);
-            let sess = std::mem::replace(&mut self.sessions[id], placeholder);
-            picked.push((id, sess));
+        // Hand the participating sessions to the pool; their slots stay
+        // visibly empty until the round returns them.
+        let mut items: Vec<(usize, ClientSession)> = Vec::with_capacity(expected);
+        for &id in &plan.participants {
+            let sess = self.sessions[id]
+                .take()
+                .ok_or_else(|| anyhow!("client {id} session already in flight"))?;
+            items.push((id, sess));
         }
 
-        let n_threads = std::thread::available_parallelism()
-            .map(|n| n.get())
-            .unwrap_or(4)
-            .min(picked.len())
-            .max(1);
-
-        let results: Vec<(usize, ClientSession, Result<ClientRoundOutput>)> =
-            std::thread::scope(|scope| {
-                let mut handles = Vec::new();
-                let chunks: Vec<Vec<(usize, ClientSession)>> = {
-                    let mut cs: Vec<Vec<(usize, ClientSession)>> =
-                        (0..n_threads).map(|_| Vec::new()).collect();
-                    for (i, item) in picked.into_iter().enumerate() {
-                        cs[i % n_threads].push(item);
-                    }
-                    cs
-                };
-                for chunk in chunks {
-                    handles.push(scope.spawn(move || {
-                        let mut out = Vec::new();
-                        for (id, mut sess) in chunk {
-                            let res = (|| {
-                                let (theta_k, loss) = sess.local_train_opts(
-                                    backend,
-                                    params,
-                                    &data.clients[id],
-                                    theta_g,
-                                    cfg.local_epochs,
-                                    round,
-                                    codec.resync_scores(),
-                                )?;
-                                // Common-random-numbers sampling: m^{k,t}
-                                // uses the SAME public per-round uniforms as
-                                // m^{g,t-1}, so Δ only contains coordinates
-                                // whose probability moved across u_i — the
-                                // "inherent sparsity in consecutive mask
-                                // updates" (§3.2) that DeltaMask exploits.
-                                let mut mask_k = Vec::new();
-                                crate::model::sample_mask_seeded(
-                                    &theta_k, round_seed, &mut mask_k,
-                                );
-                                let ctx = EncodeCtx {
-                                    d,
-                                    theta_k: &theta_k,
-                                    theta_g,
-                                    mask_k: &mask_k,
-                                    mask_g,
-                                    s_k: &sess.mask_state.s,
-                                    s_g,
-                                    kappa,
-                                    seed: round_seed ^ id as u64,
-                                };
-                                let t = Stopwatch::new();
-                                let enc = codec.encode(&ctx)?;
-                                Ok(ClientRoundOutput {
-                                    bytes: enc.bytes,
-                                    enc_secs: t.elapsed_secs(),
-                                    loss,
-                                })
-                            })();
-                            out.push((id, sess, res));
-                        }
-                        out
-                    }));
+        let (mut channel, sender) = ChannelTransport::new();
+        let job = move |slot: usize, id: usize, sess: &mut ClientSession| -> Result<()> {
+            match client_round(
+                backend,
+                params,
+                &data.clients[id],
+                plan,
+                cfg.local_epochs,
+                resync,
+                codec,
+                slot,
+                sess,
+            ) {
+                Ok(msg) => {
+                    // A send failure only means the server already aborted
+                    // the round (receiver dropped); its error is the root
+                    // cause, so don't manufacture a client error here.
+                    let _ = sender.send(msg);
+                    Ok(())
                 }
-                handles
-                    .into_iter()
-                    .flat_map(|h| h.join().expect("client thread panicked"))
-                    .collect()
-            });
+                Err(e) => {
+                    // Report in-band so the server never waits on us, then
+                    // surface the error through the pool result.
+                    let _ = sender.send(WireMessage {
+                        round,
+                        client_id: id,
+                        slot,
+                        enc_secs: 0.0,
+                        loss: 0.0,
+                        payload: Payload::Failed(e.to_string()),
+                    });
+                    Err(e)
+                }
+            }
+        };
 
-        // Restore sessions in participant order and collect outputs.
-        let mut by_id: std::collections::BTreeMap<usize, ClientRoundOutput> =
-            std::collections::BTreeMap::new();
-        for (id, sess, res) in results {
-            self.sessions[id] = sess;
-            by_id.insert(id, res?);
+        let pipeline = cfg.pipeline;
+        let server = &mut self.server;
+        let server_loop = move || -> Result<RoundTally> {
+            // All decoding + aggregation happens inside the coordinator's
+            // drain loop; the runner only reduces the report.
+            let report = drain_round(&mut channel, plan, codec, server, pipeline)?;
+            Ok(RoundTally {
+                // Exact byte accounting from the transport (integer-valued,
+                // so order-independent).
+                bits: channel.stats().sent_payload_bytes as f64 * 8.0,
+                enc_secs: report.total_enc_secs(),
+                dec_secs: report.dec_secs,
+                loss: report.total_loss(),
+            })
+        };
+
+        let pool = ClientPool::sized_for(expected);
+        let (finished, tally) = pool.run_with_server(items, job, server_loop);
+
+        // Return sessions to their slots. Error priority: a genuine client
+        // failure (the root cause behind a server-side "client X failed"
+        // bail) wins; otherwise the drain loop's own error surfaces.
+        let mut client_err: Option<anyhow::Error> = None;
+        for (id, sess, out) in finished {
+            if let Some(sess) = sess {
+                self.sessions[id] = Some(sess);
+            }
+            if let Err(e) = out {
+                if client_err.is_none() {
+                    client_err = Some(e);
+                }
+            }
         }
-        Ok(participants
-            .iter()
-            .map(|id| by_id.remove(id).expect("missing client output"))
-            .collect())
+        if let Some(e) = client_err {
+            return Err(e);
+        }
+        tally
     }
 
     /// Evaluate the global model with the posterior-mean (expected) mask
     /// θ^{g} — the deterministic Bayesian point estimate (sampled-mask
-    /// evaluation is available via [`eval_sampled`]).
+    /// evaluation is available via [`Runner::eval_sampled`]).
     pub fn eval_global(&self, _round_seed: u64) -> Result<f64> {
         self.eval_mask(&self.server.theta_g.clone())
     }
@@ -444,18 +410,15 @@ impl<'a> Runner<'a> {
         let mut rounds = Vec::new();
         let head_len = arch.c * arch.f + arch.c;
         for round in 0..self.cfg.rounds {
-            let k = ((self.cfg.rho * self.cfg.n_clients as f64).round() as usize)
-                .clamp(1, self.cfg.n_clients);
-            let participants = self.rng.choose(self.cfg.n_clients, k);
+            let participants = self.engine.sample_participants();
             let mut sum_wb = vec![0.0f32; global.w_blocks.len()];
             let mut sum_hw = vec![0.0f32; global.head_w.len()];
             let mut sum_hb = vec![0.0f32; global.head_b.len()];
             let mut loss = 0.0f64;
             for &id in &participants {
-                let mut sess = std::mem::replace(
-                    &mut self.sessions[id],
-                    ClientSession::new(id, 0, 0),
-                );
+                let sess = self.sessions[id]
+                    .as_mut()
+                    .ok_or_else(|| anyhow!("client {id} session in flight"))?;
                 let (state, l) = sess.local_finetune(
                     self.backend,
                     &self.params,
@@ -474,7 +437,6 @@ impl<'a> Runner<'a> {
                     sum_hb[i] += state.head_b[i] - global.head_b[i];
                 }
                 loss += l as f64;
-                self.sessions[id] = sess;
             }
             let kf = participants.len() as f32;
             for i in 0..sum_wb.len() {
@@ -486,8 +448,7 @@ impl<'a> Runner<'a> {
             for i in 0..sum_hb.len() {
                 global.head_b[i] += sum_hb[i] / kf;
             }
-            let acc = if (round + 1) % self.cfg.eval_every == 0
-                || round + 1 == self.cfg.rounds
+            let acc = if (round + 1) % self.cfg.eval_every == 0 || round + 1 == self.cfg.rounds
             {
                 Some(self.eval_ft(&global)?)
             } else {
@@ -503,6 +464,7 @@ impl<'a> Runner<'a> {
                 dec_ms_mean: 0.0,
                 train_loss: loss / participants.len() as f64,
                 accuracy: acc,
+                pipeline: self.cfg.pipeline.as_str(),
             });
         }
         Ok(self.result(rounds, sw.elapsed_secs()))
@@ -542,17 +504,14 @@ impl<'a> Runner<'a> {
         let head_len = arch.c * arch.f + arch.c;
         let mut rounds = Vec::new();
         for round in 0..self.cfg.rounds {
-            let k = ((self.cfg.rho * self.cfg.n_clients as f64).round() as usize)
-                .clamp(1, self.cfg.n_clients);
-            let participants = self.rng.choose(self.cfg.n_clients, k);
+            let participants = self.engine.sample_participants();
             let mut sum_hw = vec![0.0f32; global.head_w.len()];
             let mut sum_hb = vec![0.0f32; global.head_b.len()];
             let mut loss = 0.0f64;
             for &id in &participants {
-                let mut sess = std::mem::replace(
-                    &mut self.sessions[id],
-                    ClientSession::new(id, 0, 0),
-                );
+                let sess = self.sessions[id]
+                    .as_mut()
+                    .ok_or_else(|| anyhow!("client {id} session in flight"))?;
                 let (state, l) = sess.local_probe(
                     self.backend,
                     &self.params,
@@ -568,7 +527,6 @@ impl<'a> Runner<'a> {
                     sum_hb[i] += state.head_b[i] - global.head_b[i];
                 }
                 loss += l as f64;
-                self.sessions[id] = sess;
             }
             let kf = participants.len() as f32;
             for i in 0..sum_hw.len() {
@@ -577,8 +535,7 @@ impl<'a> Runner<'a> {
             for i in 0..sum_hb.len() {
                 global.head_b[i] += sum_hb[i] / kf;
             }
-            let acc = if (round + 1) % self.cfg.eval_every == 0
-                || round + 1 == self.cfg.rounds
+            let acc = if (round + 1) % self.cfg.eval_every == 0 || round + 1 == self.cfg.rounds
             {
                 let mut p = self.params.clone();
                 p.head_w = global.head_w.clone();
@@ -599,10 +556,54 @@ impl<'a> Runner<'a> {
                 dec_ms_mean: 0.0,
                 train_loss: loss / participants.len() as f64,
                 accuracy: acc,
+                pipeline: self.cfg.pipeline.as_str(),
             });
         }
         Ok(self.result(rounds, sw.elapsed_secs()))
     }
+}
+
+/// One client's work for one round, executed on a pool worker: local
+/// stochastic-mask training against the broadcast plan, then update
+/// encoding. Returns the wire message the transport will carry.
+#[allow(clippy::too_many_arguments)]
+fn client_round(
+    backend: &dyn Backend,
+    params: &ModelParams,
+    shard: &ClientData,
+    plan: &RoundPlan,
+    local_epochs: usize,
+    resync: bool,
+    codec: &dyn UpdateCodec,
+    slot: usize,
+    sess: &mut ClientSession,
+) -> Result<WireMessage> {
+    let (theta_k, loss) = sess.local_train_opts(
+        backend,
+        params,
+        shard,
+        &plan.theta_g,
+        local_epochs,
+        plan.round,
+        resync,
+    )?;
+    // Common-random-numbers sampling: m^{k,t} uses the SAME public
+    // per-round uniforms as m^{g,t-1}, so Δ only contains coordinates whose
+    // probability moved across u_i — the "inherent sparsity in consecutive
+    // mask updates" (§3.2) that DeltaMask exploits.
+    let mut mask_k = Vec::new();
+    sample_mask_seeded(&theta_k, plan.seed, &mut mask_k);
+    let ectx = plan.encode_ctx(slot, &theta_k, &mask_k, &sess.mask_state.s);
+    let t = Stopwatch::new();
+    let enc = codec.encode(&ectx)?;
+    Ok(WireMessage {
+        round: plan.round,
+        client_id: plan.participants[slot],
+        slot,
+        enc_secs: t.elapsed_secs(),
+        loss,
+        payload: Payload::Update(enc),
+    })
 }
 
 /// Evaluate arbitrary params (used by the LP baseline with a swapped head).

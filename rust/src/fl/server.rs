@@ -1,8 +1,28 @@
 //! Server-side state: Bayesian aggregation of binary-mask updates (Alg. 2 /
 //! Eq. 3) and FedAvg aggregation of score-delta updates.
+//!
+//! Aggregation is **streaming**: a round is `begin_round(K)` → K×
+//! [`MaskServer::absorb`] → [`MaskServer::finish_round`], so the server
+//! holds O(d) state (the Beta pseudo-counts / the score vector) instead of
+//! buffering the round's full `Vec<Update>` (O(K·d)). The coordinator feeds
+//! `absorb` per-arrival as updates come off the transport.
+//!
+//! Determinism across arrival orders:
+//! * **Mask family** — pseudo-count updates add 0.0/1.0 to small
+//!   integer-valued f32 accumulators. Those additions are exact (no
+//!   rounding below 2²⁴), hence commutative and associative, so absorbing
+//!   in any arrival order is *bitwise* identical to the seed's batch sum.
+//! * **Delta family** — FedAvg on f32 scores is order-sensitive, so
+//!   `absorb` applies deltas strictly in participant-slot order through a
+//!   reorder window (out-of-order arrivals wait, decoded, in a small
+//!   buffer). The arithmetic sequence is then identical to the batch path.
+//!
+//! The legacy [`MaskServer::aggregate`] survives as a thin wrapper over the
+//! streaming triplet and is what the `PipelineMode::Batch` A/B path uses.
 
-use crate::compress::Update;
+use crate::compress::{Family, Update};
 use crate::model::theta_from_scores;
+use std::collections::BTreeMap;
 
 /// The global probability mask and its Beta posterior.
 #[derive(Clone, Debug)]
@@ -16,6 +36,22 @@ pub struct MaskServer {
     lambda0: f32,
     pub rho: f64,
     pub round: usize,
+    stream: Option<RoundStream>,
+}
+
+/// In-flight accounting for one streaming round.
+#[derive(Clone, Debug)]
+struct RoundStream {
+    expected: usize,
+    absorbed: usize,
+    family: Option<Family>,
+    /// Which participant slots have been absorbed (duplicates are a
+    /// coordinator bug and would silently corrupt both families).
+    seen: Vec<bool>,
+    /// Delta family only: next participant slot to apply…
+    next_slot: usize,
+    /// …and decoded deltas that arrived ahead of their slot.
+    reorder: BTreeMap<usize, Vec<f32>>,
 }
 
 impl MaskServer {
@@ -35,41 +71,91 @@ impl MaskServer {
             lambda0: 1.0,
             rho,
             round: 0,
+            stream: None,
         }
     }
 
-    /// Alg. 2 lines 3–5: reset the Beta prior every ⌈1/ρ⌉ rounds.
-    pub fn begin_round(&mut self) {
+    /// Open a round expecting `expected` client updates, applying the
+    /// Alg. 2 lines 3–5 prior reset every ⌈1/ρ⌉ rounds.
+    pub fn begin_round(&mut self, expected: usize) {
         let period = (1.0 / self.rho).ceil().max(1.0) as usize;
         if self.round % period == 0 {
             self.alpha.iter_mut().for_each(|a| *a = self.lambda0);
             self.beta.iter_mut().for_each(|b| *b = self.lambda0);
         }
+        self.stream = Some(RoundStream::new(expected));
     }
 
-    /// Aggregate a round of updates (all same family), then refresh θ_g /
-    /// s_g. Mask family → Bayesian (Eq. 3); delta family → FedAvg on scores.
-    pub fn aggregate(&mut self, updates: &[Update]) {
-        assert!(!updates.is_empty());
+    /// Absorb one decoded update for participant `slot` (its index in the
+    /// round's participant list). Mask-family updates fold into the Beta
+    /// pseudo-counts immediately in any order; delta-family updates are
+    /// applied in slot order (see module docs).
+    ///
+    /// Panics on a family mix within one round, on a duplicate or
+    /// out-of-range slot, on absorbing more updates than `begin_round`
+    /// announced, or if no round is open — all of these are coordinator
+    /// bugs, not recoverable data errors.
+    pub fn absorb(&mut self, slot: usize, update: Update) {
         let d = self.theta_g.len();
-        match &updates[0] {
-            Update::Mask(_) => {
-                // α += Σ_k m_k ; β += K·1 − Σ_k m_k (Beta-Bernoulli
-                // pseudo-counts over the K client observations).
-                let k = updates.len() as f32;
-                let mut sum = vec![0.0f32; d];
-                for u in updates {
-                    let Update::Mask(m) = u else {
-                        panic!("mixed update families in one round")
-                    };
-                    assert_eq!(m.len(), d);
-                    for i in 0..d {
-                        sum[i] += m[i];
-                    }
-                }
+        assert_eq!(update.len(), d, "update dimensionality mismatch");
+        let stream = self
+            .stream
+            .as_mut()
+            .expect("MaskServer::absorb called before begin_round");
+        match stream.family {
+            None => stream.family = Some(update.family()),
+            Some(f) => assert!(
+                f == update.family(),
+                "mixed update families in one round"
+            ),
+        }
+        assert!(
+            stream.absorbed < stream.expected,
+            "absorbed more updates than begin_round({}) announced",
+            stream.expected
+        );
+        assert!(slot < stream.expected, "slot {slot} out of range");
+        assert!(!stream.seen[slot], "duplicate update for slot {slot}");
+        stream.seen[slot] = true;
+        stream.absorbed += 1;
+        match update {
+            Update::Mask(m) => {
+                // α += m ; β += 1 − m (Beta-Bernoulli pseudo-counts). Exact
+                // integer f32 arithmetic ⇒ arrival-order independent.
                 for i in 0..d {
-                    self.alpha[i] += sum[i];
-                    self.beta[i] += k - sum[i];
+                    self.alpha[i] += m[i];
+                    self.beta[i] += 1.0 - m[i];
+                }
+            }
+            Update::ScoreDelta(delta) => {
+                let k = stream.expected as f32;
+                stream.reorder.insert(slot, delta);
+                while let Some(next) = stream.reorder.remove(&stream.next_slot) {
+                    for i in 0..d {
+                        self.s_g[i] += next[i] / k;
+                    }
+                    stream.next_slot += 1;
+                }
+            }
+        }
+    }
+
+    /// Close the round: refresh θ_g / s_g from the absorbed updates and
+    /// advance the round counter. Panics if updates announced by
+    /// `begin_round` never arrived.
+    pub fn finish_round(&mut self) {
+        let stream = self
+            .stream
+            .take()
+            .expect("MaskServer::finish_round called before begin_round");
+        assert_eq!(
+            stream.absorbed, stream.expected,
+            "finish_round with {}/{} updates absorbed",
+            stream.absorbed, stream.expected
+        );
+        match stream.family {
+            Some(Family::Mask) => {
+                for i in 0..self.theta_g.len() {
                     // Eq. 3 posterior-mode estimate; λ0=1 ⇒ running average
                     // of the observed mask bits since the last reset.
                     let denom = self.alpha[i] + self.beta[i] - 2.0;
@@ -81,27 +167,60 @@ impl MaskServer {
                 }
                 self.refresh_scores();
             }
-            Update::ScoreDelta(_) => {
-                let k = updates.len() as f32;
-                for u in updates {
-                    let Update::ScoreDelta(delta) = u else {
-                        panic!("mixed update families in one round")
-                    };
-                    assert_eq!(delta.len(), d);
-                    for i in 0..d {
-                        self.s_g[i] += delta[i] / k;
-                    }
-                }
+            Some(Family::Delta) => {
+                debug_assert!(stream.reorder.is_empty());
                 theta_from_scores(&self.s_g, &mut self.theta_g);
             }
+            // A zero-participant round leaves the global state untouched.
+            None => {}
         }
         self.round += 1;
+    }
+
+    /// Batch compatibility wrapper (and the `PipelineMode::Batch` path):
+    /// one full round over a pre-collected update slice, in slot order.
+    pub fn aggregate(&mut self, updates: &[Update]) {
+        assert!(!updates.is_empty());
+        self.begin_round(updates.len());
+        for (slot, u) in updates.iter().enumerate() {
+            self.absorb(slot, u.clone());
+        }
+        self.finish_round();
     }
 
     fn refresh_scores(&mut self) {
         for (s, &p) in self.s_g.iter_mut().zip(&self.theta_g) {
             let p = p.clamp(1e-6, 1.0 - 1e-6);
             *s = (p / (1.0 - p)).ln();
+        }
+    }
+}
+
+/// The coordinator drives `MaskServer` through the generic sink trait; the
+/// inherent methods above are the reference implementation.
+impl crate::coordinator::Aggregator for MaskServer {
+    fn begin_round(&mut self, expected: usize) {
+        MaskServer::begin_round(self, expected);
+    }
+
+    fn absorb(&mut self, slot: usize, update: Update) {
+        MaskServer::absorb(self, slot, update);
+    }
+
+    fn finish_round(&mut self) {
+        MaskServer::finish_round(self);
+    }
+}
+
+impl RoundStream {
+    fn new(expected: usize) -> Self {
+        Self {
+            expected,
+            absorbed: 0,
+            family: None,
+            seen: vec![false; expected],
+            next_slot: 0,
+            reorder: BTreeMap::new(),
         }
     }
 }
@@ -115,7 +234,6 @@ mod tests {
     fn bayes_agg_is_running_average_with_lambda1() {
         let d = 4;
         let mut srv = MaskServer::new(d, 1.0);
-        srv.begin_round();
         srv.aggregate(&[
             Update::Mask(vec![1.0, 0.0, 1.0, 1.0]),
             Update::Mask(vec![1.0, 0.0, 0.0, 1.0]),
@@ -129,7 +247,6 @@ mod tests {
         let d = 2;
         let mut srv = MaskServer::new(d, 0.5); // reset every 2 rounds
         for round in 0..4 {
-            srv.begin_round();
             srv.aggregate(&[Update::Mask(vec![1.0, 0.0])]);
             let expect_after_reset = round % 2 == 0;
             if expect_after_reset {
@@ -137,6 +254,53 @@ mod tests {
                 assert_eq!(srv.theta_g[0], 0.99, "round {round}");
             }
         }
+    }
+
+    #[test]
+    fn streaming_mask_absorb_is_arrival_order_invariant() {
+        let d = 512;
+        let mut rng = Xoshiro256pp::new(11);
+        let updates: Vec<Update> = (0..7)
+            .map(|_| {
+                Update::Mask(
+                    (0..d)
+                        .map(|_| if rng.next_f32() < 0.5 { 1.0 } else { 0.0 })
+                        .collect(),
+                )
+            })
+            .collect();
+        let mut batch = MaskServer::new(d, 1.0);
+        batch.aggregate(&updates);
+        // Absorb in reverse arrival order — bitwise identical θ_g / s_g.
+        let mut stream = MaskServer::new(d, 1.0);
+        stream.begin_round(updates.len());
+        for (slot, u) in updates.iter().enumerate().rev() {
+            stream.absorb(slot, u.clone());
+        }
+        stream.finish_round();
+        assert_eq!(batch.theta_g, stream.theta_g);
+        assert_eq!(batch.s_g, stream.s_g);
+        assert_eq!(batch.round, stream.round);
+    }
+
+    #[test]
+    fn streaming_delta_reorder_window_preserves_slot_order() {
+        let d = 256;
+        let mut rng = Xoshiro256pp::new(12);
+        let updates: Vec<Update> = (0..5)
+            .map(|_| Update::ScoreDelta((0..d).map(|_| rng.next_f32() - 0.5).collect()))
+            .collect();
+        let mut batch = MaskServer::new(d, 1.0);
+        batch.aggregate(&updates);
+        // Adversarial arrival order: last slot first.
+        let mut stream = MaskServer::new(d, 1.0);
+        stream.begin_round(updates.len());
+        for slot in [4usize, 2, 0, 3, 1] {
+            stream.absorb(slot, updates[slot].clone());
+        }
+        stream.finish_round();
+        assert_eq!(batch.s_g, stream.s_g);
+        assert_eq!(batch.theta_g, stream.theta_g);
     }
 
     #[test]
@@ -197,5 +361,32 @@ mod tests {
             Update::Mask(vec![1.0, 0.0]),
             Update::ScoreDelta(vec![0.1, 0.2]),
         ]);
+    }
+
+    #[test]
+    #[should_panic(expected = "more updates than begin_round")]
+    fn over_absorbing_rejected() {
+        let mut srv = MaskServer::new(2, 1.0);
+        srv.begin_round(1);
+        srv.absorb(0, Update::Mask(vec![1.0, 0.0]));
+        srv.absorb(1, Update::Mask(vec![1.0, 0.0]));
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate update for slot")]
+    fn duplicate_slot_rejected() {
+        let mut srv = MaskServer::new(2, 1.0);
+        srv.begin_round(2);
+        srv.absorb(1, Update::ScoreDelta(vec![0.1, 0.2]));
+        srv.absorb(1, Update::ScoreDelta(vec![0.3, 0.4]));
+    }
+
+    #[test]
+    #[should_panic(expected = "updates absorbed")]
+    fn short_round_rejected_at_finish() {
+        let mut srv = MaskServer::new(2, 1.0);
+        srv.begin_round(2);
+        srv.absorb(0, Update::Mask(vec![1.0, 0.0]));
+        srv.finish_round();
     }
 }

@@ -4,17 +4,26 @@
 //! Probabilistic Masking"* (Tsouvalas, Asano, Saeed — 2023) as a
 //! three-layer rust + JAX + Pallas stack:
 //!
-//! * **L3 (this crate)** — the federated coordinator: round scheduling,
-//!   client sampling, stochastic-mask bookkeeping, the DeltaMask update
-//!   codec (binary fuse filters → grayscale PNG), Bayesian aggregation,
-//!   and every baseline codec the paper compares against.
+//! * **L3 (this crate)** — the federated system, split into two layers:
+//!   the [`coordinator`] subsystem (transport-agnostic round engine:
+//!   `RoundPlan`/`RoundEngine` for sampling, κ scheduling and shared-seed
+//!   mask derivation; a `Transport` carrying encoded updates with wire
+//!   accounting; a work-stealing `ClientPool`; and the batch-vs-streaming
+//!   `PipelineMode`), and the [`fl`] experiment layer on top of it
+//!   (state ownership, the streaming Bayesian [`fl::server::MaskServer`],
+//!   baselines, metrics). Updates are decoded and absorbed per-arrival —
+//!   the server never materializes a round's O(K·d) update set — plus the
+//!   DeltaMask codec (binary fuse filters → grayscale PNG) and every
+//!   baseline codec the paper compares against, under [`compress`].
 //! * **L2 (`python/compile/model.py`)** — the masked-model compute graph
 //!   (fwd/bwd + Adam on mask scores), AOT-lowered once to HLO text.
 //! * **L1 (`python/compile/kernels/`)** — Pallas kernels for the masked
 //!   matmul hot-spot, lowered into the same HLO.
 //!
 //! Python never runs on the request path: the [`runtime`] module loads the
-//! pre-compiled artifacts through the PJRT C API and executes them natively.
+//! pre-compiled artifacts through the PJRT C API and executes them natively
+//! (behind the `xla` cargo feature; without it a stub reports the missing
+//! integration and the pure-rust [`native`] backend drives everything).
 //!
 //! See `DESIGN.md` for the full system inventory and the per-experiment
 //! index mapping every table/figure of the paper to a bench target.
@@ -22,6 +31,7 @@
 pub mod bench;
 pub mod codec;
 pub mod compress;
+pub mod coordinator;
 pub mod filters;
 pub mod fl;
 pub mod hash;

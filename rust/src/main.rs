@@ -9,10 +9,12 @@
 //! Examples:
 //!   deltamask train --method deltamask --dataset cifar100 --rounds 30
 //!   deltamask train --backend xla --arch test --dataset cifar10
+//!   deltamask train --pipeline batch --method fedpm   (A/B the old barrier)
 //!   deltamask sweep --datasets cifar10,svhn --methods deltamask,fedpm
 //!   deltamask filters --entries 100000
 
 use deltamask::bench::Table;
+use deltamask::coordinator::PipelineMode;
 use deltamask::fl::{run_experiment, BackendKind, ExperimentConfig, HeadInit};
 use deltamask::util::cli::Args;
 
@@ -45,6 +47,7 @@ fn parse_cfg(args: &Args) -> ExperimentConfig {
         lp_rounds: args.usize("lp-rounds", 1),
         theta0: args.f64("theta0", 0.85) as f32,
         arch_override: None,
+        pipeline: PipelineMode::from_args(args),
     };
     if let Some(w) = args.get("width") {
         let w: usize = w.parse().expect("--width must be an integer");
@@ -56,7 +59,7 @@ fn parse_cfg(args: &Args) -> ExperimentConfig {
 fn cmd_train(args: &Args) -> anyhow::Result<()> {
     let cfg = parse_cfg(args);
     eprintln!(
-        "training: method={} dataset={} arch={} d={} N={} R={} rho={} alpha={} backend={:?}",
+        "training: method={} dataset={} arch={} d={} N={} R={} rho={} alpha={} backend={:?} pipeline={}",
         cfg.method,
         cfg.dataset,
         cfg.arch,
@@ -65,7 +68,8 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         cfg.rounds,
         cfg.rho,
         cfg.dirichlet_alpha,
-        cfg.backend
+        cfg.backend,
+        cfg.pipeline.as_str()
     );
     let res = run_experiment(&cfg)?;
     for r in &res.rounds {

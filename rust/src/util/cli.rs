@@ -72,6 +72,17 @@ impl Args {
             .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} must be a number, got '{v}'")))
             .unwrap_or(default)
     }
+
+    /// Validated enumeration option: `--name <one of allowed>`, panicking
+    /// with the permitted values on anything else (used by e.g.
+    /// `--pipeline {batch,streaming}` and `--backend {native,xla}`).
+    pub fn choice<'a>(&'a self, name: &str, allowed: &[&'a str], default: &'a str) -> &'a str {
+        let v = self.get_or(name, default);
+        if !allowed.contains(&v) {
+            panic!("--{name} must be one of {allowed:?}, got '{v}'");
+        }
+        v
+    }
 }
 
 #[cfg(test)]
@@ -105,6 +116,21 @@ mod tests {
         assert_eq!(a.usize("n", 7), 7);
         assert_eq!(a.f64("x", 1.5), 1.5);
         assert_eq!(a.get_or("name", "dflt"), "dflt");
+    }
+
+    #[test]
+    fn choice_accepts_allowed_values() {
+        let a = parse("--pipeline batch");
+        assert_eq!(a.choice("pipeline", &["batch", "streaming"], "streaming"), "batch");
+        let b = parse("");
+        assert_eq!(b.choice("pipeline", &["batch", "streaming"], "streaming"), "streaming");
+    }
+
+    #[test]
+    #[should_panic(expected = "--pipeline must be one of")]
+    fn choice_rejects_unknown_values() {
+        let a = parse("--pipeline turbo");
+        a.choice("pipeline", &["batch", "streaming"], "streaming");
     }
 
     #[test]

@@ -3,7 +3,10 @@
 //! backend on every graph family. This closes the correctness loop:
 //!   python ref.py ⇔ pallas kernels ⇔ HLO text ⇔ PJRT execution ⇔ native rust.
 //!
-//! Requires `make artifacts` (the miniature `test` combo).
+//! Requires `make artifacts` (the miniature `test` combo) and a build with
+//! the `xla` cargo feature; without it this suite compiles to nothing.
+
+#![cfg(feature = "xla")]
 
 use deltamask::model::backend::{Backend, FtState, LpState};
 use deltamask::model::{init_params, ArchConfig, MaskState};

@@ -2,7 +2,12 @@
 //! accuracy at sub-1 bpp, baselines behave per the paper's ordering, and
 //! both execution backends drive the same coordinator.
 
+use deltamask::compress::{self, Update};
+use deltamask::coordinator::PipelineMode;
+use deltamask::fl::server::MaskServer;
 use deltamask::fl::{run_experiment, BackendKind, ExperimentConfig, HeadInit};
+use deltamask::model::sample_mask_seeded;
+use deltamask::util::rng::Xoshiro256pp;
 
 fn base_cfg() -> ExperimentConfig {
     ExperimentConfig {
@@ -25,6 +30,7 @@ fn base_cfg() -> ExperimentConfig {
         lp_rounds: 1,
         theta0: 0.85,
         arch_override: None,
+        pipeline: PipelineMode::Streaming,
     }
 }
 
@@ -100,6 +106,114 @@ fn noniid_split_still_learns() {
     );
 }
 
+/// Satellite property test: for every codec in the roster (both update
+/// families), decoding a round's realistic payloads and feeding them to the
+/// streaming `begin_round` / `absorb` / `finish_round` path — in an
+/// adversarial arrival order — must be *bitwise* identical to the seed's
+/// batch `aggregate` over the same updates.
+#[test]
+fn streaming_absorb_bitwise_matches_batch_aggregate_across_codecs() {
+    let d = 4096usize;
+    let n_clients = 5usize;
+    for (trial, name) in compress::all_names().iter().enumerate() {
+        let codec = compress::by_name(name).unwrap();
+        let mut rng = Xoshiro256pp::new(0xBEEF ^ trial as u64);
+
+        // A plausible round state: global probabilities, drifted per-client
+        // posteriors, shared-seed masks.
+        let theta_g: Vec<f32> = (0..d).map(|_| 0.05 + 0.9 * rng.next_f32()).collect();
+        let s_g: Vec<f32> = theta_g.iter().map(|&p| (p / (1.0 - p)).ln()).collect();
+        let round_seed = 77u64.wrapping_mul(trial as u64 + 1);
+        let mut mask_g = Vec::new();
+        sample_mask_seeded(&theta_g, round_seed, &mut mask_g);
+
+        let mut updates: Vec<Update> = Vec::new();
+        for k in 0..n_clients {
+            let theta_k: Vec<f32> = theta_g
+                .iter()
+                .map(|&p| (p + 0.3 * (rng.next_f32() - 0.5)).clamp(0.01, 0.99))
+                .collect();
+            let s_k: Vec<f32> = theta_k.iter().map(|&p| (p / (1.0 - p)).ln()).collect();
+            let mut mask_k = Vec::new();
+            sample_mask_seeded(&theta_k, round_seed, &mut mask_k);
+            let ectx = compress::EncodeCtx {
+                d,
+                theta_k: &theta_k,
+                theta_g: &theta_g,
+                mask_k: &mask_k,
+                mask_g: &mask_g,
+                s_k: &s_k,
+                s_g: &s_g,
+                kappa: 0.8,
+                seed: round_seed ^ k as u64,
+            };
+            let enc = codec.encode(&ectx).unwrap_or_else(|e| panic!("{name}: {e}"));
+            let dctx = compress::DecodeCtx {
+                d,
+                mask_g: &mask_g,
+                s_g: &s_g,
+                seed: round_seed ^ k as u64,
+            };
+            updates.push(codec.decode(&enc.bytes, &dctx).unwrap());
+        }
+
+        let mut batch = MaskServer::with_theta0(d, 1.0, 0.85);
+        batch.aggregate(&updates);
+
+        // Adversarial arrival order: reversed, with a mid-list swap.
+        let mut order: Vec<usize> = (0..n_clients).rev().collect();
+        order.swap(1, 3);
+        let mut stream = MaskServer::with_theta0(d, 1.0, 0.85);
+        stream.begin_round(updates.len());
+        for &slot in &order {
+            stream.absorb(slot, updates[slot].clone());
+        }
+        stream.finish_round();
+
+        assert_eq!(
+            batch.theta_g, stream.theta_g,
+            "{name} ({:?}): theta_g diverged",
+            updates[0].family()
+        );
+        assert_eq!(batch.s_g, stream.s_g, "{name}: s_g diverged");
+    }
+}
+
+/// Acceptance check for the coordinator refactor: a full experiment run
+/// under the streaming pipeline is trajectory-identical (losses, wire bits,
+/// κ and every evaluated accuracy) to the batch-barrier reference, for one
+/// mask-family and one delta-family codec.
+#[test]
+fn streaming_and_batch_pipelines_produce_identical_trajectories() {
+    for method in ["deltamask", "eden"] {
+        let mut cfg = base_cfg();
+        cfg.method = method.into();
+        cfg.rounds = 6;
+        cfg.eval_every = 2;
+        cfg.pipeline = PipelineMode::Batch;
+        let batch = run_experiment(&cfg).unwrap();
+        cfg.pipeline = PipelineMode::Streaming;
+        let streaming = run_experiment(&cfg).unwrap();
+
+        assert_eq!(batch.rounds.len(), streaming.rounds.len(), "{method}");
+        for (b, s) in batch.rounds.iter().zip(&streaming.rounds) {
+            assert_eq!(b.round, s.round, "{method}");
+            assert_eq!(b.kappa, s.kappa, "{method} round {}", b.round);
+            assert_eq!(b.mean_bits, s.mean_bits, "{method} round {}", b.round);
+            assert_eq!(b.train_loss, s.train_loss, "{method} round {}", b.round);
+            assert_eq!(b.accuracy, s.accuracy, "{method} round {}", b.round);
+            assert_eq!(b.pipeline, "batch");
+            assert_eq!(s.pipeline, "streaming");
+        }
+        assert_eq!(
+            batch.final_accuracy(),
+            streaming.final_accuracy(),
+            "{method}"
+        );
+    }
+}
+
+#[cfg(feature = "xla")]
 #[test]
 fn xla_backend_end_to_end() {
     // The production path: AOT Pallas/JAX graphs through PJRT.
@@ -113,6 +227,7 @@ fn xla_backend_end_to_end() {
     assert!(res.avg_bpp() < 1.5);
 }
 
+#[cfg(feature = "xla")]
 #[test]
 fn xla_and_native_agree_on_trained_accuracy() {
     let mut cfg = base_cfg();

@@ -1,0 +1,285 @@
+//! Minimal, offline, API-compatible subset of the `anyhow` crate.
+//!
+//! The repository builds with no network access, so instead of pulling the
+//! real crate from a registry this shim provides exactly the surface the
+//! codebase uses:
+//!
+//! * [`Error`] — an opaque boxed error with a source chain,
+//! * [`Result<T>`] with the `Error` default type parameter,
+//! * the [`anyhow!`], [`bail!`] and [`ensure!`] macros,
+//! * the [`Context`] extension trait (`.context(..)` / `.with_context(..)`).
+//!
+//! Like the real crate, `Error` deliberately does **not** implement
+//! `std::error::Error`; that is what makes the blanket
+//! `impl<E: std::error::Error> From<E> for Error` coherent, so `?` works on
+//! any standard error type.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// A type-erased error with an optional chain of sources.
+pub struct Error {
+    inner: Box<dyn StdError + Send + Sync + 'static>,
+}
+
+impl Error {
+    /// Wrap a concrete error value.
+    pub fn new<E>(error: E) -> Self
+    where
+        E: StdError + Send + Sync + 'static,
+    {
+        Self {
+            inner: Box::new(error),
+        }
+    }
+
+    /// Create an error from a printable message.
+    pub fn msg<M>(message: M) -> Self
+    where
+        M: fmt::Display,
+    {
+        Self {
+            inner: Box::new(MessageError(message.to_string())),
+        }
+    }
+
+    /// Attach a higher-level context message, keeping `self` as the source.
+    pub fn context<C>(self, context: C) -> Self
+    where
+        C: fmt::Display,
+    {
+        Self {
+            inner: Box::new(ContextError {
+                context: context.to_string(),
+                source: self.inner,
+            }),
+        }
+    }
+
+    /// Iterate the source chain, outermost first.
+    pub fn chain(&self) -> Chain<'_> {
+        Chain {
+            next: Some(self.inner.as_ref()),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(&self.inner, f)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.inner)?;
+        let mut source = self.inner.source();
+        if source.is_some() {
+            write!(f, "\n\nCaused by:")?;
+        }
+        while let Some(cause) = source {
+            write!(f, "\n    {cause}")?;
+            source = cause.source();
+        }
+        Ok(())
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: StdError + Send + Sync + 'static,
+{
+    fn from(error: E) -> Self {
+        Self::new(error)
+    }
+}
+
+/// Iterator over an error's source chain (outermost first).
+pub struct Chain<'a> {
+    next: Option<&'a (dyn StdError + 'static)>,
+}
+
+impl<'a> Iterator for Chain<'a> {
+    type Item = &'a (dyn StdError + 'static);
+
+    fn next(&mut self) -> Option<Self::Item> {
+        let cur = self.next?;
+        self.next = cur.source();
+        Some(cur)
+    }
+}
+
+struct MessageError(String);
+
+impl fmt::Display for MessageError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Debug for MessageError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl StdError for MessageError {}
+
+struct ContextError {
+    context: String,
+    source: Box<dyn StdError + Send + Sync + 'static>,
+}
+
+impl fmt::Display for ContextError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.context)
+    }
+}
+
+impl fmt::Debug for ContextError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}: {}", self.context, self.source)
+    }
+}
+
+impl StdError for ContextError {
+    fn source(&self) -> Option<&(dyn StdError + 'static)> {
+        Some(self.source.as_ref())
+    }
+}
+
+/// `Result<T, anyhow::Error>` with the error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to results
+/// and options, mirroring the real crate.
+pub trait Context<T, E> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static;
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E> Context<T, E> for Result<T, E>
+where
+    E: StdError + Send + Sync + 'static,
+{
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.map_err(|e| Error::new(e).context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| Error::new(e).context(f()))
+    }
+}
+
+impl<T> Context<T, core::convert::Infallible> for Option<T> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a message or format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)+) => {
+        return Err($crate::anyhow!($($arg)+))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::Error::msg(concat!(
+                "condition failed: ",
+                stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn needs_q(flag: bool) -> Result<u32> {
+        ensure!(flag, "flag was {flag}");
+        Ok(7)
+    }
+
+    #[test]
+    fn macros_and_conversion() {
+        let e = anyhow!("x = {}", 3);
+        assert_eq!(e.to_string(), "x = 3");
+        assert!(needs_q(true).is_ok());
+        assert_eq!(needs_q(false).unwrap_err().to_string(), "flag was false");
+
+        // `?` conversion from a std error type.
+        fn io_fail() -> Result<String> {
+            let s = std::fs::read_to_string("/definitely/not/a/real/path/xyz")?;
+            Ok(s)
+        }
+        assert!(io_fail().is_err());
+    }
+
+    #[test]
+    fn context_chains() {
+        let base: Result<(), std::io::Error> = Err(std::io::Error::new(
+            std::io::ErrorKind::Other,
+            "disk on fire",
+        ));
+        let err = base.context("loading manifest").unwrap_err();
+        assert_eq!(err.to_string(), "loading manifest");
+        let chain: Vec<String> = err.chain().map(|c| c.to_string()).collect();
+        assert_eq!(chain.len(), 2);
+        assert!(chain[1].contains("disk on fire"));
+        let dbg = format!("{err:?}");
+        assert!(dbg.contains("Caused by"));
+
+        let opt: Option<u8> = None;
+        assert!(opt.context("missing").is_err());
+    }
+}
