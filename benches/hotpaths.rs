@@ -1,0 +1,364 @@
+//! **Tracked hot-path suite** — the kernel-level benchmark baseline behind
+//! the batched decode / zero-alloc wire-path work: every batched kernel is
+//! timed against its retained scalar oracle *in the same run*, parity is
+//! asserted bitwise (a divergence exits non-zero, which the CI `bench-smoke`
+//! job relies on), and the results land in `BENCH_hotpaths.json` at the
+//! repo root so later PRs can regression-check.
+//!
+//!     cargo bench --bench hotpaths [-- --smoke] [--iters N] [--warmup N]
+//!
+//! `--smoke` shrinks the dimension sweep and iteration counts to CI scale.
+//! See `lib.rs` module docs for the JSON schema.
+
+use deltamask::bench::{summarize, time_fn, Table};
+use deltamask::codec::{deflate, png};
+use deltamask::compress::{
+    DecodeCtx, DeltaMaskCodec, EncodeCtx, EncodeScratch, ScratchPool, Update, UpdateCodec,
+};
+use deltamask::filters::{BinaryFuse, BloomFilter, MembershipFilter, XorFilter};
+use deltamask::native::linalg;
+use deltamask::util::cli::Args;
+use deltamask::util::json::Json;
+use deltamask::util::rng::Xoshiro256pp;
+
+/// One scalar-vs-batched kernel measurement.
+struct Pair {
+    name: String,
+    scalar_secs: f64,
+    batched_secs: f64,
+    parity: bool,
+}
+
+impl Pair {
+    fn speedup(&self) -> f64 {
+        if self.batched_secs > 0.0 {
+            self.scalar_secs / self.batched_secs
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Scalar Eq. 5 oracle: per-key `contains` sweep (the pre-batching decode
+/// inner loop).
+fn scalar_decode<M: MembershipFilter>(f: &M, mask: &mut [f32]) {
+    for (i, m) in mask.iter_mut().enumerate() {
+        if f.contains(i as u64) {
+            *m = 1.0 - *m;
+        }
+    }
+}
+
+fn filter_pair<M: MembershipFilter>(
+    name: String,
+    f: &M,
+    d: usize,
+    warmup: usize,
+    iters: usize,
+) -> Pair {
+    let base: Vec<f32> = (0..d).map(|i| (i % 2) as f32).collect();
+    let mut scalar_mask = base.clone();
+    let scalar_secs = summarize(&time_fn(warmup, iters, || {
+        scalar_mask.copy_from_slice(&base);
+        scalar_decode(f, &mut scalar_mask);
+    }))
+    .min;
+    let mut batched_mask = base.clone();
+    let batched_secs = summarize(&time_fn(warmup, iters, || {
+        batched_mask.copy_from_slice(&base);
+        f.decode_mask_into(&mut batched_mask);
+    }))
+    .min;
+    // Parity on the final iteration's outputs (both start from `base`).
+    scalar_mask.copy_from_slice(&base);
+    scalar_decode(f, &mut scalar_mask);
+    batched_mask.copy_from_slice(&base);
+    f.decode_mask_into(&mut batched_mask);
+    Pair {
+        name,
+        scalar_secs,
+        batched_secs,
+        parity: scalar_mask == batched_mask,
+    }
+}
+
+fn main() {
+    let args = Args::from_env();
+    let smoke = args.flag("smoke");
+    let iters = args.usize("iters", if smoke { 2 } else { 7 });
+    let warmup = args.usize("warmup", if smoke { 1 } else { 2 });
+    let dims: Vec<usize> = if smoke {
+        vec![100_000]
+    } else {
+        vec![100_000, 1_000_000, 10_000_000]
+    };
+
+    let mut rng = Xoshiro256pp::new(0x40077a7);
+    let mut pairs: Vec<Pair> = Vec::new();
+
+    // -- Filter membership kernels: batched vs the scalar per-key sweep ----
+    for &d in &dims {
+        let n = (d / 50).max(64);
+        let keys: Vec<u64> = (0..n).map(|_| rng.below(d as u64)).collect();
+        let bf8 = BinaryFuse::<u8, 4>::build(&keys).expect("bfuse8 build");
+        pairs.push(filter_pair(
+            format!("bfuse8_decode_d{d}"),
+            &bf8,
+            d,
+            warmup,
+            iters,
+        ));
+    }
+    {
+        let d = dims[0];
+        let n = (d / 50).max(64);
+        let keys: Vec<u64> = (0..n).map(|_| rng.below(d as u64)).collect();
+        let bf32 = BinaryFuse::<u32, 4>::build(&keys).expect("bfuse32 build");
+        pairs.push(filter_pair(format!("bfuse32_decode_d{d}"), &bf32, d, warmup, iters));
+        let x8 = XorFilter::<u8>::build(&keys).expect("xor8 build");
+        pairs.push(filter_pair(format!("xor8_decode_d{d}"), &x8, d, warmup, iters));
+        let bloom = BloomFilter::with_bits_per_entry(&keys, 8.62);
+        pairs.push(filter_pair(format!("bloom_decode_d{d}"), &bloom, d, warmup, iters));
+    }
+
+    // -- DeltaMask end-to-end wire path: fresh-alloc vs scratch/pool -------
+    {
+        let d = dims[0];
+        let theta_g: Vec<f32> = (0..d).map(|_| rng.next_f32()).collect();
+        let theta_k: Vec<f32> = theta_g
+            .iter()
+            .map(|&p| (p + 0.1 * (rng.next_f32() - 0.5)).clamp(0.01, 0.99))
+            .collect();
+        let mask_g: Vec<f32> = theta_g.iter().map(|&p| (p > 0.5) as u32 as f32).collect();
+        let mask_k: Vec<f32> = theta_k.iter().map(|&p| (p > 0.5) as u32 as f32).collect();
+        let codec = DeltaMaskCodec::default();
+        let ctx = EncodeCtx {
+            d,
+            theta_k: &theta_k,
+            theta_g: &theta_g,
+            mask_k: &mask_k,
+            mask_g: &mask_g,
+            s_k: &[],
+            s_g: &[],
+            kappa: 0.8,
+            seed: 7,
+        };
+        let enc_plain_secs = summarize(&time_fn(warmup, iters, || codec.encode(&ctx).unwrap())).min;
+        let mut scratch = EncodeScratch::default();
+        let enc_scratch_secs =
+            summarize(&time_fn(warmup, iters, || codec.encode_with(&ctx, &mut scratch).unwrap()))
+                .min;
+        let plain = codec.encode(&ctx).unwrap();
+        let reused = codec.encode_with(&ctx, &mut scratch).unwrap();
+        pairs.push(Pair {
+            name: format!("deltamask_encode_d{d}"),
+            scalar_secs: enc_plain_secs,
+            batched_secs: enc_scratch_secs,
+            parity: plain.bytes == reused.bytes,
+        });
+
+        let dctx = DecodeCtx {
+            d,
+            mask_g: &mask_g,
+            s_g: &[],
+            seed: 7,
+        };
+        let dec_plain_secs =
+            summarize(&time_fn(warmup, iters, || codec.decode(&plain.bytes, &dctx).unwrap())).min;
+        let pool = ScratchPool::new();
+        let dec_pool_secs = summarize(&time_fn(warmup, iters, || {
+            let u = codec.decode_pooled(&plain.bytes, &dctx, &pool).unwrap();
+            if let Update::Mask(m) = u {
+                pool.put(m); // close the reclaim cycle like drain_round does
+            }
+        }))
+        .min;
+        let Update::Mask(want) = codec.decode(&plain.bytes, &dctx).unwrap() else {
+            panic!()
+        };
+        let Update::Mask(got) = codec.decode_pooled(&plain.bytes, &dctx, &pool).unwrap() else {
+            panic!()
+        };
+        pairs.push(Pair {
+            name: format!("deltamask_decode_d{d}"),
+            scalar_secs: dec_plain_secs,
+            batched_secs: dec_pool_secs,
+            parity: want == got,
+        });
+    }
+
+    // -- Matmul kernels: blocked vs the seed's scalar loops ----------------
+    {
+        let (m, k, n) = if smoke { (16, 96, 96) } else { (64, 384, 384) };
+        let a: Vec<f32> = (0..m * k).map(|_| rng.next_f32() - 0.5).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.next_f32() - 0.5).collect();
+        let bt: Vec<f32> = (0..n * k).map(|_| rng.next_f32() - 0.5).collect();
+        let mut c = vec![0.0f32; m * n];
+
+        // Scalar oracles: the seed's exact loop shapes.
+        let scalar_nn = |a: &[f32], b: &[f32], c: &mut [f32]| {
+            c.fill(0.0);
+            for i in 0..m {
+                let arow = &a[i * k..(i + 1) * k];
+                let crow = &mut c[i * n..(i + 1) * n];
+                for (kk, &av) in arow.iter().enumerate() {
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let brow = &b[kk * n..(kk + 1) * n];
+                    for j in 0..n {
+                        crow[j] += av * brow[j];
+                    }
+                }
+            }
+        };
+        let scalar_bt = |a: &[f32], b: &[f32], c: &mut [f32]| {
+            for i in 0..m {
+                let arow = &a[i * k..(i + 1) * k];
+                for j in 0..n {
+                    let brow = &b[j * k..(j + 1) * k];
+                    let mut acc = 0.0f32;
+                    for kk in 0..k {
+                        acc += arow[kk] * brow[kk];
+                    }
+                    c[i * n + j] = acc;
+                }
+            }
+        };
+
+        let s = summarize(&time_fn(warmup, iters, || scalar_nn(&a, &b, &mut c))).min;
+        let mut c2 = vec![0.0f32; m * n];
+        let f = summarize(&time_fn(warmup, iters, || {
+            linalg::matmul_nn(&a, &b, &mut c2, m, k, n)
+        }))
+        .min;
+        scalar_nn(&a, &b, &mut c);
+        linalg::matmul_nn(&a, &b, &mut c2, m, k, n);
+        pairs.push(Pair {
+            name: format!("matmul_nn_{m}x{k}x{n}"),
+            scalar_secs: s,
+            batched_secs: f,
+            parity: c == c2,
+        });
+
+        let s = summarize(&time_fn(warmup, iters, || scalar_bt(&a, &bt, &mut c))).min;
+        let f = summarize(&time_fn(warmup, iters, || {
+            linalg::matmul_bt(&a, &bt, &mut c2, m, k, n)
+        }))
+        .min;
+        scalar_bt(&a, &bt, &mut c);
+        linalg::matmul_bt(&a, &bt, &mut c2, m, k, n);
+        pairs.push(Pair {
+            name: format!("matmul_bt_{m}x{k}x{n}"),
+            scalar_secs: s,
+            batched_secs: f,
+            parity: c == c2,
+        });
+    }
+
+    // -- Tracked throughput (no scalar counterpart in-tree): PNG + DEFLATE -
+    let mut tracked: Vec<(String, f64)> = Vec::new();
+    {
+        let payload_len = if smoke { 65_536 } else { 262_144 };
+        let payload: Vec<u8> = (0..payload_len)
+            .map(|_| {
+                let u = rng.next_f32();
+                (-(1.0 - u).ln() * 8.0) as u8
+            })
+            .collect();
+        let img = png::GrayImage::from_payload(&payload);
+        let encoded = png::encode(&img);
+        let t = summarize(&time_fn(warmup, iters, || png::encode(&img))).min;
+        tracked.push((format!("png_encode_{payload_len}B"), t));
+        let t = summarize(&time_fn(warmup, iters, || png::decode(&encoded).unwrap())).min;
+        tracked.push((format!("png_decode_{payload_len}B"), t));
+        let z = deflate::zlib_compress(&payload);
+        let t = summarize(&time_fn(warmup, iters, || deflate::zlib_compress(&payload))).min;
+        tracked.push((format!("deflate_{payload_len}B"), t));
+        let t =
+            summarize(&time_fn(warmup, iters, || deflate::zlib_decompress(&z).unwrap())).min;
+        tracked.push((format!("inflate_{payload_len}B"), t));
+        assert_eq!(
+            deflate::zlib_decompress(&z).unwrap(),
+            payload,
+            "deflate roundtrip parity"
+        );
+        assert_eq!(
+            png::decode(&encoded).unwrap().payload(payload.len()),
+            &payload[..],
+            "png roundtrip parity"
+        );
+    }
+
+    // -- Report + parity gate ---------------------------------------------
+    let mut table = Table::new(
+        "Hot-path kernels: batched vs scalar (min over iters)",
+        &["kernel", "scalar s", "batched s", "speedup", "parity"],
+    );
+    for p in &pairs {
+        table.row(vec![
+            p.name.clone(),
+            format!("{:.6}", p.scalar_secs),
+            format!("{:.6}", p.batched_secs),
+            format!("{:.2}x", p.speedup()),
+            if p.parity { "ok".into() } else { "DIVERGED".into() },
+        ]);
+    }
+    table.print();
+    for (name, secs) in &tracked {
+        println!("  tracked {name}: {secs:.6}s");
+    }
+
+    let mut root = Json::obj();
+    root.set("schema", Json::from_str_("deltamask-hotpaths-v1"))
+        .set(
+            "provenance",
+            Json::from_str_("cargo bench --bench hotpaths (see lib.rs docs to regenerate)"),
+        )
+        .set("smoke", Json::Bool(smoke))
+        .set("iters", Json::Num(iters as f64))
+        .set("warmup", Json::Num(warmup as f64));
+    root.set(
+        "kernels",
+        Json::Arr(
+            pairs
+                .iter()
+                .map(|p| {
+                    let mut o = Json::obj();
+                    o.set("name", Json::from_str_(&p.name))
+                        .set("scalar_secs", Json::Num(p.scalar_secs))
+                        .set("batched_secs", Json::Num(p.batched_secs))
+                        .set("speedup", Json::Num(p.speedup()))
+                        .set("parity", Json::Bool(p.parity));
+                    o
+                })
+                .collect(),
+        ),
+    );
+    root.set(
+        "tracked",
+        Json::Arr(
+            tracked
+                .iter()
+                .map(|(name, secs)| {
+                    let mut o = Json::obj();
+                    o.set("name", Json::from_str_(name)).set("secs", Json::Num(*secs));
+                    o
+                })
+                .collect(),
+        ),
+    );
+    std::fs::write("BENCH_hotpaths.json", root.to_string_pretty())
+        .expect("write BENCH_hotpaths.json");
+    println!("[saved BENCH_hotpaths.json]");
+
+    let diverged: Vec<&str> = pairs
+        .iter()
+        .filter(|p| !p.parity)
+        .map(|p| p.name.as_str())
+        .collect();
+    assert!(
+        diverged.is_empty(),
+        "kernel parity oracles diverged: {diverged:?}"
+    );
+}

@@ -2,6 +2,19 @@
 //! data elements are packed starting from the least-significant bit of each
 //! byte; Huffman codes are packed most-significant-code-bit first, which the
 //! caller handles by reversing code bits.
+//!
+//! Both directions move whole words instead of bytes on the hot path: the
+//! writer flushes 32 bits at a time out of a 64-bit accumulator and the
+//! reader refills its 64-bit buffer with a single unaligned `u64` load
+//! (the branchless refill keeps ≥ 56 valid bits while input remains). The
+//! byte stream produced/consumed is bit-for-bit identical to the scalar
+//! byte-loop formulation, which the tests keep as an oracle.
+
+/// Maximum width `peek_bits` is guaranteed to return correctly. The refill
+/// keeps at least 56 valid buffered bits while input remains, but the `u32`
+/// return narrows the reliable contract to 32 bits; wider peeks used to
+/// silently truncate, now they trip a `debug_assert`.
+pub const MAX_PEEK_BITS: u32 = 32;
 
 #[derive(Debug, Default)]
 pub struct BitWriter {
@@ -15,31 +28,42 @@ impl BitWriter {
         Self::default()
     }
 
-    /// Write the low `n` bits of `value`, LSB-first.
+    /// Write the low `n` bits of `value`, LSB-first. Flushes the
+    /// accumulator a word (4 bytes) at a time; the invariant is
+    /// `bitcount < 32` between calls, so `value` always fits.
     #[inline]
     pub fn write_bits(&mut self, value: u32, n: u32) {
         debug_assert!(n <= 32);
         debug_assert!(n == 32 || value < (1u32 << n));
         self.bitbuf |= (value as u64) << self.bitcount;
         self.bitcount += n;
-        while self.bitcount >= 8 {
-            self.out.push(self.bitbuf as u8);
-            self.bitbuf >>= 8;
-            self.bitcount -= 8;
+        if self.bitcount >= 32 {
+            self.out.extend_from_slice(&(self.bitbuf as u32).to_le_bytes());
+            self.bitbuf >>= 32;
+            self.bitcount -= 32;
         }
     }
 
     /// Pad to a byte boundary with zero bits.
     pub fn align_byte(&mut self) {
-        if self.bitcount > 0 {
+        while self.bitcount > 0 {
             self.out.push(self.bitbuf as u8);
-            self.bitbuf = 0;
-            self.bitcount = 0;
+            self.bitbuf >>= 8;
+            self.bitcount = self.bitcount.saturating_sub(8);
         }
+        self.bitbuf = 0;
     }
 
     pub fn write_bytes(&mut self, bytes: &[u8]) {
-        debug_assert_eq!(self.bitcount, 0, "write_bytes requires byte alignment");
+        // The 32-bit accumulator can legitimately hold whole byte-aligned
+        // bytes (the old byte-loop writer never did) — drain them first so
+        // "byte-aligned" keeps meaning what callers expect.
+        debug_assert_eq!(self.bitcount % 8, 0, "write_bytes requires byte alignment");
+        while self.bitcount >= 8 {
+            self.out.push(self.bitbuf as u8);
+            self.bitbuf >>= 8;
+            self.bitcount -= 8;
+        }
         self.out.extend_from_slice(bytes);
     }
 
@@ -71,12 +95,25 @@ impl<'a> BitReader<'a> {
         }
     }
 
+    /// Branchless word refill (one unaligned `u64` load per call on the hot
+    /// path): after it returns, at least 56 bits are buffered while input
+    /// remains. Bits beyond `bitcount` already hold the correct upcoming
+    /// stream bytes, so re-OR-ing them on the next refill is idempotent.
     #[inline]
     fn refill(&mut self) {
-        while self.bitcount <= 56 && self.pos < self.data.len() {
-            self.bitbuf |= (self.data[self.pos] as u64) << self.bitcount;
-            self.pos += 1;
-            self.bitcount += 8;
+        if self.bitcount < 57 && self.pos + 8 <= self.data.len() {
+            let w = u64::from_le_bytes(self.data[self.pos..self.pos + 8].try_into().unwrap());
+            self.bitbuf |= w << self.bitcount;
+            let consumed = (63 - self.bitcount) >> 3;
+            self.pos += consumed as usize;
+            self.bitcount += consumed * 8;
+        } else {
+            // Tail: byte-at-a-time once fewer than 8 input bytes remain.
+            while self.bitcount <= 56 && self.pos < self.data.len() {
+                self.bitbuf |= (self.data[self.pos] as u64) << self.bitcount;
+                self.pos += 1;
+                self.bitcount += 8;
+            }
         }
     }
 
@@ -95,9 +132,13 @@ impl<'a> BitReader<'a> {
         v
     }
 
-    /// Peek up to 16 bits without consuming.
+    /// Peek up to [`MAX_PEEK_BITS`] bits without consuming.
     #[inline]
     pub fn peek_bits(&mut self, n: u32) -> u32 {
+        debug_assert!(
+            n <= MAX_PEEK_BITS,
+            "peek width {n} exceeds MAX_PEEK_BITS ({MAX_PEEK_BITS})"
+        );
         self.refill();
         (self.bitbuf & ((1u64 << n) - 1)) as u32
     }
@@ -113,17 +154,29 @@ impl<'a> BitReader<'a> {
         self.consume(drop);
     }
 
-    /// Copy `n` bytes after byte alignment.
+    /// Copy `n` bytes after byte alignment: drains whole bytes buffered in
+    /// the accumulator, then bulk-copies the rest straight from the input.
     pub fn read_bytes(&mut self, n: usize) -> Option<Vec<u8>> {
         debug_assert_eq!(self.bitcount % 8, 0);
         let mut out = Vec::with_capacity(n);
-        for _ in 0..n {
-            self.refill();
-            if self.bitcount < 8 {
+        while out.len() < n && self.bitcount >= 8 {
+            out.push(self.bitbuf as u8);
+            self.bitbuf >>= 8;
+            self.bitcount -= 8;
+        }
+        let rest = n - out.len();
+        if rest > 0 {
+            if self.pos + rest > self.data.len() {
                 return None;
             }
-            out.push(self.bitbuf as u8);
-            self.consume(8);
+            // The word refill leaves replica bytes above `bitcount` (they
+            // normally get re-OR-ed idempotently). Bulk-copying advances
+            // `pos` past their source bytes, so zero them or the next
+            // refill would OR fresh input over stale data. `bitcount < 8`
+            // here (the drain loop ran dry), so the shift is in range.
+            self.bitbuf &= (1u64 << self.bitcount) - 1;
+            out.extend_from_slice(&self.data[self.pos..self.pos + rest]);
+            self.pos += rest;
         }
         Some(out)
     }
@@ -137,6 +190,42 @@ impl<'a> BitReader<'a> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::rng::Xoshiro256pp;
+
+    /// Scalar byte-loop reader — the seed's refill, kept as the parity
+    /// oracle for the word-at-a-time fast path.
+    struct OracleReader<'a> {
+        data: &'a [u8],
+        pos: usize,
+        bitbuf: u64,
+        bitcount: u32,
+    }
+
+    impl<'a> OracleReader<'a> {
+        fn new(data: &'a [u8]) -> Self {
+            Self {
+                data,
+                pos: 0,
+                bitbuf: 0,
+                bitcount: 0,
+            }
+        }
+
+        fn read_bits(&mut self, n: u32) -> u32 {
+            if n == 0 {
+                return 0;
+            }
+            while self.bitcount <= 56 && self.pos < self.data.len() {
+                self.bitbuf |= (self.data[self.pos] as u64) << self.bitcount;
+                self.pos += 1;
+                self.bitcount += 8;
+            }
+            let v = (self.bitbuf & ((1u64 << n) - 1)) as u32;
+            self.bitbuf >>= n;
+            self.bitcount = self.bitcount.saturating_sub(n);
+            v
+        }
+    }
 
     #[test]
     fn roundtrip_mixed_widths() {
@@ -161,6 +250,66 @@ mod tests {
     }
 
     #[test]
+    fn word_reader_matches_scalar_oracle() {
+        let mut rng = Xoshiro256pp::new(0xb170);
+        for trial in 0..50 {
+            let len = (rng.next_u64() % 200) as usize + trial;
+            let data: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
+            let mut fast = BitReader::new(&data);
+            let mut oracle = OracleReader::new(&data);
+            // Random widths, reading well past the end (both must agree on
+            // the zero-padded tail too).
+            let mut remaining = len * 8 + 64;
+            while remaining > 0 {
+                let n = 1 + (rng.next_u64() % 32) as u32;
+                assert_eq!(fast.read_bits(n), oracle.read_bits(n), "trial {trial}");
+                remaining = remaining.saturating_sub(n as usize);
+            }
+        }
+    }
+
+    #[test]
+    fn word_writer_matches_scalar_packing() {
+        // The scalar LSB-first packing oracle, inline: bytes appear in the
+        // exact order bits were written, 8 at a time.
+        let mut rng = Xoshiro256pp::new(0x3717e);
+        for _ in 0..30 {
+            let writes: Vec<(u32, u32)> = (0..(rng.next_u64() % 300))
+                .map(|_| {
+                    let n = 1 + (rng.next_u64() % 32) as u32;
+                    let v = if n == 32 {
+                        rng.next_u64() as u32
+                    } else {
+                        (rng.next_u64() as u32) & ((1u32 << n) - 1)
+                    };
+                    (v, n)
+                })
+                .collect();
+            let mut w = BitWriter::new();
+            let mut bit_len = 0usize;
+            for &(v, n) in &writes {
+                w.write_bits(v, n);
+                bit_len += n as usize;
+                assert_eq!(w.bit_len(), bit_len);
+            }
+            let bytes = w.finish();
+            assert_eq!(bytes.len(), bit_len.div_ceil(8));
+            // Oracle: pack the same bits one by one.
+            let mut oracle = vec![0u8; bit_len.div_ceil(8)];
+            let mut at = 0usize;
+            for &(v, n) in &writes {
+                for b in 0..n {
+                    if (v >> b) & 1 == 1 {
+                        oracle[at / 8] |= 1 << (at % 8);
+                    }
+                    at += 1;
+                }
+            }
+            assert_eq!(bytes, oracle);
+        }
+    }
+
+    #[test]
     fn byte_alignment_and_raw_bytes() {
         let mut w = BitWriter::new();
         w.write_bits(0b101, 3);
@@ -176,6 +325,21 @@ mod tests {
     }
 
     #[test]
+    fn read_bytes_drains_buffered_words_first() {
+        // Provoke the case where refill has buffered several whole bytes
+        // before a byte-aligned bulk copy is requested.
+        let data: Vec<u8> = (0..64u8).collect();
+        let mut r = BitReader::new(&data);
+        assert_eq!(r.read_bits(8), 0);
+        r.align_byte();
+        assert_eq!(r.read_bytes(40).unwrap(), (1..41u8).collect::<Vec<_>>());
+        assert_eq!(r.read_bits(8), 41);
+        assert_eq!(r.read_bytes(22).unwrap(), (42..64u8).collect::<Vec<_>>());
+        assert!(r.exhausted());
+        assert!(r.read_bytes(1).is_none());
+    }
+
+    #[test]
     fn peek_consume_equivalence() {
         let mut w = BitWriter::new();
         for i in 0..64u32 {
@@ -188,6 +352,34 @@ mod tests {
             r.consume(4);
             assert_eq!(p, i % 16);
         }
+    }
+
+    #[test]
+    fn peek_reliable_up_to_max_width() {
+        // Pins MAX_PEEK_BITS: a full-width peek must agree with read_bits
+        // at every bit offset, including across word-refill boundaries.
+        let mut rng = Xoshiro256pp::new(0x9ee);
+        let data: Vec<u8> = (0..64).map(|_| rng.next_u64() as u8).collect();
+        for skew in 0..8u32 {
+            let mut peeker = BitReader::new(&data);
+            let mut reader = BitReader::new(&data);
+            if skew > 0 {
+                assert_eq!(peeker.read_bits(skew), reader.read_bits(skew));
+            }
+            for _ in 0..((data.len() * 8) as u32 - skew) / MAX_PEEK_BITS {
+                let p = peeker.peek_bits(MAX_PEEK_BITS);
+                peeker.consume(MAX_PEEK_BITS);
+                assert_eq!(p, reader.read_bits(MAX_PEEK_BITS));
+            }
+        }
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "exceeds MAX_PEEK_BITS")]
+    fn over_wide_peek_is_rejected() {
+        let mut r = BitReader::new(&[0xff; 16]);
+        r.peek_bits(MAX_PEEK_BITS + 1);
     }
 
     #[test]

@@ -420,11 +420,36 @@ fn emit_tokens(
     lit_codes: &[(u32, u8)],
     dist_codes: &[(u32, u8)],
 ) {
-    for tok in tokens {
-        match tok {
-            Token::Literal(b) => {
-                let (c, l) = lit_codes[*b as usize];
-                w.write_bits(c, l as u32);
+    let mut i = 0usize;
+    while i < tokens.len() {
+        match &tokens[i] {
+            Token::Literal(_) => {
+                // Batched literal fast path: scan the literal run, then fuse
+                // pairs of codes (each ≤ 15 bits) into single ≤ 30-bit
+                // buffer insertions — half the accumulator traffic on
+                // literal-heavy (fingerprint-like) payloads. LSB-first
+                // concatenation is associative, so the bitstream is
+                // identical to one-code-at-a-time emission.
+                let mut end = i + 1;
+                while end < tokens.len() && matches!(tokens[end], Token::Literal(_)) {
+                    end += 1;
+                }
+                while i + 1 < end {
+                    let (Token::Literal(a), Token::Literal(b)) = (&tokens[i], &tokens[i + 1])
+                    else {
+                        unreachable!()
+                    };
+                    let (c0, l0) = lit_codes[*a as usize];
+                    let (c1, l1) = lit_codes[*b as usize];
+                    w.write_bits(c0 | (c1 << l0), (l0 + l1) as u32);
+                    i += 2;
+                }
+                if i < end {
+                    let Token::Literal(b) = &tokens[i] else { unreachable!() };
+                    let (c, l) = lit_codes[*b as usize];
+                    w.write_bits(c, l as u32);
+                    i = end;
+                }
             }
             Token::Match { len, dist } => {
                 let lc = length_code(*len as usize);
@@ -441,6 +466,7 @@ fn emit_tokens(
                 if extra > 0 {
                     w.write_bits((*dist as u32) - DIST_BASE[dc] as u32, extra);
                 }
+                i += 1;
             }
         }
     }
@@ -948,6 +974,60 @@ mod tests {
             let back = zlib_decompress(&z).unwrap_or_else(|e| panic!("case {i}: {e}"));
             assert_eq!(&back, data, "case {i}");
         }
+    }
+
+    #[test]
+    fn fused_literal_pairs_match_scalar_emission() {
+        // The batched literal fast path must produce the exact bitstream of
+        // one-code-at-a-time emission (the seed behaviour, inlined here as
+        // the oracle).
+        let lit_lens = fixed_litlen_lens();
+        let dist_lens = fixed_dist_lens();
+        let lit_codes = canonical_codes(&lit_lens);
+        let dist_codes = canonical_codes(&dist_lens);
+        let mut rng = Xoshiro256pp::new(77);
+        let tokens: Vec<Token> = (0..999)
+            .map(|i| {
+                if i % 7 == 3 {
+                    Token::Match {
+                        len: 3 + (i % 20) as u16,
+                        dist: 1 + (i % 30) as u16,
+                    }
+                } else {
+                    Token::Literal(rng.next_u64() as u8)
+                }
+            })
+            .collect();
+        let mut fast = BitWriter::new();
+        emit_tokens(&mut fast, &tokens, &lit_codes, &dist_codes);
+        let mut slow = BitWriter::new();
+        for tok in &tokens {
+            match tok {
+                Token::Literal(b) => {
+                    let (c, l) = lit_codes[*b as usize];
+                    slow.write_bits(c, l as u32);
+                }
+                Token::Match { len, dist } => {
+                    let lc = length_code(*len as usize);
+                    let (c, l) = lit_codes[257 + lc];
+                    slow.write_bits(c, l as u32);
+                    let extra = LEN_EXTRA[lc] as u32;
+                    if extra > 0 {
+                        slow.write_bits((*len as u32) - LEN_BASE[lc] as u32, extra);
+                    }
+                    let dc = dist_code(*dist as usize);
+                    let (c, l) = dist_codes[dc];
+                    slow.write_bits(c, l as u32);
+                    let extra = DIST_EXTRA[dc] as u32;
+                    if extra > 0 {
+                        slow.write_bits((*dist as u32) - DIST_BASE[dc] as u32, extra);
+                    }
+                }
+            }
+        }
+        let (c, l) = lit_codes[256];
+        slow.write_bits(c, l as u32);
+        assert_eq!(fast.finish(), slow.finish());
     }
 
     #[test]

@@ -10,7 +10,7 @@
 //! false positive rate for the same number of hash functions and bits per
 //! entry".
 
-use super::{wire, DecodeCtx, EncodeCtx, Encoded, Family, Update, UpdateCodec};
+use super::{wire, DecodeCtx, EncodeCtx, Encoded, Family, ScratchPool, Update, UpdateCodec};
 use crate::codec::deflate;
 use crate::filters::{BloomFilter, MembershipFilter};
 use anyhow::{ensure, Result};
@@ -57,6 +57,26 @@ impl UpdateCodec for DeepReduceCodec {
     }
 
     fn decode(&self, bytes: &[u8], ctx: &DecodeCtx) -> Result<Update> {
+        let mut mask = ctx.mask_g.to_vec();
+        self.decode_mask_inplace(bytes, &mut mask)?;
+        Ok(Update::Mask(mask))
+    }
+
+    /// Steady-state decode: output buffer drawn from the round's pool.
+    fn decode_pooled(&self, bytes: &[u8], ctx: &DecodeCtx, pool: &ScratchPool) -> Result<Update> {
+        let mut mask = pool.take_copy(ctx.mask_g);
+        if let Err(e) = self.decode_mask_inplace(bytes, &mut mask) {
+            pool.put(mask);
+            return Err(e);
+        }
+        Ok(Update::Mask(mask))
+    }
+}
+
+impl DeepReduceCodec {
+    /// Parse + validate the record and run the batched Bloom membership
+    /// kernel directly over `mask` (pre-filled with m^{g,t-1}).
+    fn decode_mask_inplace(&self, bytes: &[u8], mask: &mut [f32]) -> Result<()> {
         let mut r = wire::Reader::new(bytes);
         let num_bits = r.u64()?;
         let num_hashes = r.u32()?;
@@ -65,16 +85,19 @@ impl UpdateCodec for DeepReduceCodec {
         let z = r.bytes(zlen)?;
         let payload = deflate::zlib_decompress(z).map_err(|e| anyhow::anyhow!(e))?;
         ensure!(payload.len() % 8 == 0, "bloom payload misaligned");
+        // Guard the probe kernel against corrupted layout params: every bit
+        // index must land inside the transmitted bit array, and a wild hash
+        // count is a decode-time DoS, not a valid filter.
+        ensure!(
+            num_bits >= 1 && num_bits <= payload.len() as u64 * 8,
+            "bloom num_bits outside payload"
+        );
+        ensure!((1..=64).contains(&num_hashes), "bad bloom hash count");
         let bloom = BloomFilter::from_parts(&payload, num_bits, num_hashes, num_keys);
-        let mut mask = ctx.mask_g.to_vec();
         if num_keys > 0 {
-            for (i, m) in mask.iter_mut().enumerate() {
-                if bloom.contains(i as u64) {
-                    *m = 1.0 - *m;
-                }
-            }
+            bloom.decode_mask_into(mask);
         }
-        Ok(Update::Mask(mask))
+        Ok(())
     }
 }
 

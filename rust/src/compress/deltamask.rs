@@ -17,7 +17,9 @@
 //! false positives (rate ≈ 2^-bpe) surface as mask noise, which Appendix B
 //! bounds.
 
-use super::{wire, DecodeCtx, EncodeCtx, Encoded, Family, Update, UpdateCodec};
+use super::{
+    wire, DecodeCtx, EncodeCtx, EncodeScratch, Encoded, Family, ScratchPool, Update, UpdateCodec,
+};
 use crate::codec::png::{self, GrayImage};
 use crate::filters::{BinaryFuse, MembershipFilter, XorFilter};
 use crate::model::kl_bernoulli;
@@ -121,33 +123,55 @@ impl DeltaMaskCodec {
     }
 
     /// Steps 1–2: the ranked, truncated difference set Δ′ (Eq. 4).
+    /// Allocating wrapper over [`Self::select_updates_into`] for callers
+    /// without persistent scratch (tests, one-shot tools).
     pub fn select_updates(&self, ctx: &EncodeCtx) -> Vec<u64> {
-        let mut delta: Vec<u32> = Vec::new();
+        let mut scratch = EncodeScratch::default();
+        self.select_updates_into(ctx, &mut scratch);
+        std::mem::take(&mut scratch.keys)
+    }
+
+    /// Fused single-pass Δ′ selection: the Δ scan and the KL scoring run in
+    /// one streaming sweep (the seed made two passes over `d`), writing into
+    /// reusable scratch so steady-state encodes allocate nothing. The key
+    /// set lands in `scratch.keys`, byte-for-byte identical to the two-pass
+    /// path (same scan order, same `top_k_indices` input).
+    pub fn select_updates_into(&self, ctx: &EncodeCtx, scratch: &mut EncodeScratch) {
+        scratch.delta.clear();
+        scratch.scores.clear();
+        scratch.keys.clear();
+        // Score inline only when truncation can actually happen: κ ≥ 1 ⇒
+        // k == |Δ| ⇒ the scores would never be read.
+        let score_kl = self.ranking == Ranking::Kl && ctx.kappa < 1.0;
         for i in 0..ctx.d {
             if ctx.mask_g[i] != ctx.mask_k[i] {
-                delta.push(i as u32);
+                scratch.delta.push(i as u32);
+                if score_kl {
+                    scratch.scores.push(kl_bernoulli(ctx.theta_k[i], ctx.theta_g[i]));
+                }
             }
         }
-        let k = ((ctx.kappa * delta.len() as f64).ceil() as usize).min(delta.len());
-        if k == delta.len() {
-            return delta.into_iter().map(u64::from).collect();
+        let k = ((ctx.kappa * scratch.delta.len() as f64).ceil() as usize)
+            .min(scratch.delta.len());
+        if k == scratch.delta.len() {
+            scratch.keys.extend(scratch.delta.iter().map(|&i| i as u64));
+            return;
         }
         match self.ranking {
             Ranking::Kl => {
-                let scores: Vec<f32> = delta
-                    .iter()
-                    .map(|&i| kl_bernoulli(ctx.theta_k[i as usize], ctx.theta_g[i as usize]))
-                    .collect();
-                top_k_indices(&scores, k)
-                    .into_iter()
-                    .map(|pos| delta[pos as usize] as u64)
-                    .collect()
+                let delta = &scratch.delta;
+                scratch.keys.extend(
+                    top_k_indices(&scratch.scores, k)
+                        .into_iter()
+                        .map(|pos| delta[pos as usize] as u64),
+                );
             }
             Ranking::Random => {
                 let mut rng = Xoshiro256pp::new(ctx.seed ^ 0xdead_beef);
-                rng.shuffle(&mut delta);
-                delta.truncate(k);
-                delta.into_iter().map(u64::from).collect()
+                rng.shuffle(&mut scratch.delta);
+                scratch
+                    .keys
+                    .extend(scratch.delta[..k].iter().map(|&i| i as u64));
             }
         }
     }
@@ -221,6 +245,10 @@ impl BuiltFilter {
         }
     }
 
+    /// Scalar per-key membership — retained as the parity oracle for the
+    /// batched kernel (this enum dispatch per key *was* the decode hot
+    /// path; production decoding goes through `decode_mask_into`).
+    #[cfg(test)]
     fn contains(&self, key: u64) -> bool {
         match self {
             BuiltFilter::B8(f) => f.contains(key),
@@ -232,6 +260,87 @@ impl BuiltFilter {
             BuiltFilter::X32(f) => f.contains(key),
         }
     }
+
+    /// Batched Eq. 5 kernel: one dispatch per round into the monomorphic
+    /// per-filter block kernels, instead of one enum match per key.
+    fn decode_mask_into(&self, mask: &mut [f32]) {
+        match self {
+            BuiltFilter::B8(f) => f.decode_mask_into(mask),
+            BuiltFilter::B16(f) => f.decode_mask_into(mask),
+            BuiltFilter::B32(f) => f.decode_mask_into(mask),
+            BuiltFilter::B8A3(f) => f.decode_mask_into(mask),
+            BuiltFilter::X8(f) => f.decode_mask_into(mask),
+            BuiltFilter::X16(f) => f.decode_mask_into(mask),
+            BuiltFilter::X32(f) => f.decode_mask_into(mask),
+        }
+    }
+}
+
+/// Fingerprint width in bytes for each filter kind.
+fn fingerprint_width(kind: FilterKind) -> usize {
+    match kind {
+        FilterKind::BFuse8 | FilterKind::BFuse8Arity3 | FilterKind::Xor8 => 1,
+        FilterKind::BFuse16 | FilterKind::Xor16 => 2,
+        FilterKind::BFuse32 | FilterKind::Xor32 => 4,
+    }
+}
+
+/// Validate transmitted filter layout parameters against the payload before
+/// rebuilding the filter, so a malformed or corrupted record yields `Err`
+/// instead of an out-of-bounds panic inside the membership kernels.
+///
+/// The checks mirror the construction invariants exactly:
+/// * binary fuse — `segment_length` is a nonzero power of two,
+///   `segment_count_length` is a whole number of segments, and the cell
+///   count equals `segment_count_length + (ARITY−1)·segment_length`;
+/// * xor — the cell count equals `3·block_length` with a nonzero block.
+///
+/// Together with those equalities, every position the probe kernels can
+/// form (fast-range base + per-segment offset, xor-perturbed within a
+/// power-of-two segment) stays strictly inside the fingerprint array.
+fn validate_filter_parts(
+    kind: FilterKind,
+    layout_a: u32,
+    layout_b: u64,
+    payload_len: usize,
+) -> Result<()> {
+    let width = fingerprint_width(kind);
+    ensure!(
+        payload_len % width == 0,
+        "payload not a whole number of {width}-byte fingerprints"
+    );
+    let cells = (payload_len / width) as u64;
+    match kind {
+        FilterKind::BFuse8 | FilterKind::BFuse16 | FilterKind::BFuse32
+        | FilterKind::BFuse8Arity3 => {
+            let arity = if kind == FilterKind::BFuse8Arity3 { 3u64 } else { 4 };
+            let seg = layout_a as u64;
+            ensure!(seg >= 1 && seg.is_power_of_two(), "bad segment length {seg}");
+            // At least one whole segment: with layout_b == 0 the fast-range
+            // base is pinned to 0 but the last hash window still reaches
+            // (ARITY−1)·seg == cells, one past the array.
+            ensure!(
+                layout_b >= seg && layout_b % seg == 0,
+                "segment count length not a positive whole number of segments"
+            );
+            let expect = layout_b
+                .checked_add((arity - 1) * seg)
+                .ok_or_else(|| anyhow::anyhow!("filter layout overflow"))?;
+            ensure!(
+                cells == expect,
+                "fingerprint count {cells} inconsistent with layout {expect}"
+            );
+        }
+        FilterKind::Xor8 | FilterKind::Xor16 | FilterKind::Xor32 => {
+            let bl = layout_a as u64;
+            ensure!(bl >= 1, "bad xor block length");
+            ensure!(
+                cells == 3 * bl,
+                "fingerprint count {cells} inconsistent with 3×block {bl}"
+            );
+        }
+    }
+    Ok(())
 }
 
 impl UpdateCodec for DeltaMaskCodec {
@@ -244,8 +353,14 @@ impl UpdateCodec for DeltaMaskCodec {
     }
 
     fn encode(&self, ctx: &EncodeCtx) -> Result<Encoded> {
-        let delta = self.select_updates(ctx);
-        let filter = BuiltFilter::build(self.filter, &delta)?;
+        self.encode_with(ctx, &mut EncodeScratch::default())
+    }
+
+    /// Encode reusing the caller's scratch for the Δ′ selection (identical
+    /// bytes to `encode` — the scratch only changes where buffers live).
+    fn encode_with(&self, ctx: &EncodeCtx, scratch: &mut EncodeScratch) -> Result<Encoded> {
+        self.select_updates_into(ctx, scratch);
+        let filter = BuiltFilter::build(self.filter, &scratch.keys)?;
         let (seed, layout_a, layout_b, payload, num_keys) = filter.parts();
 
         // Wire format: tag(1) png_flag(1) seed(8) layout_a(4) layout_b(8)
@@ -268,6 +383,30 @@ impl UpdateCodec for DeltaMaskCodec {
     }
 
     fn decode(&self, bytes: &[u8], ctx: &DecodeCtx) -> Result<Update> {
+        let mut mask = ctx.mask_g.to_vec();
+        self.decode_mask_inplace(bytes, ctx, &mut mask)?;
+        Ok(Update::Mask(mask))
+    }
+
+    /// Steady-state decode path: the output buffer comes from (and its
+    /// predecessors return to) the round's [`ScratchPool`].
+    fn decode_pooled(&self, bytes: &[u8], ctx: &DecodeCtx, pool: &ScratchPool) -> Result<Update> {
+        let mut mask = pool.take_copy(ctx.mask_g);
+        if let Err(e) = self.decode_mask_inplace(bytes, ctx, &mut mask) {
+            pool.put(mask);
+            return Err(e);
+        }
+        Ok(Update::Mask(mask))
+    }
+}
+
+impl DeltaMaskCodec {
+    /// The shared decode core: parse + validate the record, rebuild the
+    /// filter, and run the batched Eq. 5 kernel directly over `mask`
+    /// (already initialized to m^{g,t-1}). The payload is borrowed from the
+    /// wire bytes or the decoded image — no intermediate copies.
+    fn decode_mask_inplace(&self, bytes: &[u8], ctx: &DecodeCtx, mask: &mut [f32]) -> Result<()> {
+        debug_assert_eq!(mask.len(), ctx.d);
         ensure!(bytes.len() >= 30, "deltamask record too short");
         let kind = FilterKind::from_tag(bytes[0])?;
         let is_png = bytes[1] != 0;
@@ -278,29 +417,27 @@ impl UpdateCodec for DeltaMaskCodec {
         let num_keys = r.u32()? as usize;
         let payload_len = r.u32()? as usize;
         let rest = &bytes[2 + r.pos..];
-        let payload = if is_png {
-            let img = png::decode(rest).map_err(|e| anyhow::anyhow!("png: {e}"))?;
+        let decoded_img;
+        let payload: &[u8] = if is_png {
+            decoded_img = png::decode(rest).map_err(|e| anyhow::anyhow!("png: {e}"))?;
             ensure!(
-                (img.width as usize * img.height as usize) >= payload_len,
+                (decoded_img.width as usize * decoded_img.height as usize) >= payload_len,
                 "png smaller than payload"
             );
-            img.pixels[..payload_len].to_vec()
+            &decoded_img.pixels[..payload_len]
         } else {
             ensure!(rest.len() == payload_len, "payload length mismatch");
-            rest.to_vec()
+            rest
         };
-        let filter = BuiltFilter::restore(kind, seed, layout_a, layout_b, &payload, num_keys);
+        validate_filter_parts(kind, layout_a, layout_b, payload.len())?;
+        let filter = BuiltFilter::restore(kind, seed, layout_a, layout_b, payload, num_keys);
 
-        // Eq. 5: membership query across all d positions, then bit-flip.
-        let mut mask = ctx.mask_g.to_vec();
+        // Eq. 5: batched membership query across all d positions, flipping
+        // hits in place.
         if num_keys > 0 {
-            for (i, m) in mask.iter_mut().enumerate() {
-                if filter.contains(i as u64) {
-                    *m = 1.0 - *m;
-                }
-            }
+            filter.decode_mask_into(mask);
         }
-        Ok(Update::Mask(mask))
+        Ok(())
     }
 }
 
@@ -501,6 +638,171 @@ mod tests {
                 .count();
             assert_eq!(missed, 0, "{kind:?} missed true updates");
         }
+    }
+
+    /// Two-pass Δ′ selection exactly as the seed implemented it — the
+    /// oracle for the fused single-pass `select_updates_into`.
+    fn select_updates_two_pass_oracle(codec: &DeltaMaskCodec, ctx: &EncodeCtx) -> Vec<u64> {
+        let mut delta: Vec<u32> = Vec::new();
+        for i in 0..ctx.d {
+            if ctx.mask_g[i] != ctx.mask_k[i] {
+                delta.push(i as u32);
+            }
+        }
+        let k = ((ctx.kappa * delta.len() as f64).ceil() as usize).min(delta.len());
+        if k == delta.len() {
+            return delta.into_iter().map(u64::from).collect();
+        }
+        match codec.ranking {
+            Ranking::Kl => {
+                let scores: Vec<f32> = delta
+                    .iter()
+                    .map(|&i| kl_bernoulli(ctx.theta_k[i as usize], ctx.theta_g[i as usize]))
+                    .collect();
+                crate::util::top_k_indices(&scores, k)
+                    .into_iter()
+                    .map(|pos| delta[pos as usize] as u64)
+                    .collect()
+            }
+            Ranking::Random => {
+                let mut rng = Xoshiro256pp::new(ctx.seed ^ 0xdead_beef);
+                rng.shuffle(&mut delta);
+                delta.truncate(k);
+                delta.into_iter().map(u64::from).collect()
+            }
+        }
+    }
+
+    #[test]
+    fn fused_selection_matches_two_pass_oracle() {
+        let d = 30_000;
+        let (tk, tg, mk, mg) = setup(d, 0.2, 12);
+        for ranking in [Ranking::Kl, Ranking::Random] {
+            for kappa in [1.0, 0.8, 0.33, 0.0] {
+                let codec = DeltaMaskCodec::with_ranking(ranking);
+                let ctx = make_ctx(d, &tk, &tg, &mk, &mg, kappa);
+                let fused = codec.select_updates(&ctx);
+                let oracle = select_updates_two_pass_oracle(&codec, &ctx);
+                assert_eq!(fused, oracle, "{ranking:?} kappa={kappa}");
+            }
+        }
+    }
+
+    #[test]
+    fn batched_decode_matches_scalar_oracle_all_kinds() {
+        // The tentpole parity contract: the blocked kernels change *how*
+        // membership is queried, never what is decoded. Compare the full
+        // decode against a scalar per-key sweep over the restored filter.
+        let d = 50_000;
+        let (tk, tg, mk, mg) = setup(d, 0.1, 14);
+        for kind in [
+            FilterKind::BFuse8,
+            FilterKind::BFuse16,
+            FilterKind::BFuse32,
+            FilterKind::BFuse8Arity3,
+            FilterKind::Xor8,
+            FilterKind::Xor16,
+            FilterKind::Xor32,
+        ] {
+            let codec = DeltaMaskCodec::with_filter(kind);
+            let ctx = make_ctx(d, &tk, &tg, &mk, &mg, 0.7);
+            let enc = codec.encode(&ctx).unwrap();
+            let dec_ctx = DecodeCtx {
+                d,
+                mask_g: &mg,
+                s_g: &[],
+                seed: 99,
+            };
+            let Update::Mask(got) = codec.decode(&enc.bytes, &dec_ctx).unwrap() else {
+                panic!()
+            };
+            // Scalar oracle: rebuild the filter and sweep with the retained
+            // per-key enum dispatch path.
+            let delta = codec.select_updates(&ctx);
+            let filter = BuiltFilter::build(kind, &delta).unwrap();
+            let mut expect = mg.clone();
+            for (i, m) in expect.iter_mut().enumerate() {
+                if filter.contains(i as u64) {
+                    *m = 1.0 - *m;
+                }
+            }
+            assert_eq!(got, expect, "{kind:?} batched decode diverged");
+        }
+    }
+
+    #[test]
+    fn scratch_and_pooled_paths_are_identical_and_reuse_buffers() {
+        let d = 20_000;
+        let (tk, tg, mk, mg) = setup(d, 0.1, 15);
+        let codec = DeltaMaskCodec::default();
+        let ctx = make_ctx(d, &tk, &tg, &mk, &mg, 0.8);
+        // encode_with must be byte-identical to encode.
+        let plain = codec.encode(&ctx).unwrap();
+        let mut scratch = EncodeScratch::default();
+        let scratched = codec.encode_with(&ctx, &mut scratch).unwrap();
+        assert_eq!(plain.bytes, scratched.bytes);
+        // Scratch persists and a second encode reuses it, still identical.
+        let again = codec.encode_with(&ctx, &mut scratch).unwrap();
+        assert_eq!(plain.bytes, again.bytes);
+
+        let dec_ctx = DecodeCtx {
+            d,
+            mask_g: &mg,
+            s_g: &[],
+            seed: 99,
+        };
+        let Update::Mask(want) = codec.decode(&plain.bytes, &dec_ctx).unwrap() else {
+            panic!()
+        };
+        let pool = ScratchPool::new();
+        let Update::Mask(got) = codec.decode_pooled(&plain.bytes, &dec_ctx, &pool).unwrap()
+        else {
+            panic!()
+        };
+        assert_eq!(got, want);
+        // Returning the buffer makes the next pooled decode allocation-free.
+        pool.put(got);
+        assert_eq!(pool.spares(), 1);
+        let Update::Mask(got2) = codec.decode_pooled(&plain.bytes, &dec_ctx, &pool).unwrap()
+        else {
+            panic!()
+        };
+        assert_eq!(got2, want);
+        assert_eq!(pool.spares(), 0, "pooled decode must draw from the pool");
+    }
+
+    #[test]
+    fn malformed_layout_errors_instead_of_panicking() {
+        // Hand-craft a raw (non-PNG) record with inconsistent layout params:
+        // validation must reject it before the membership kernel runs.
+        let d = 1_000;
+        let (tk, tg, mk, mg) = setup(d, 0.2, 16);
+        let codec = DeltaMaskCodec {
+            use_png: false,
+            ..Default::default()
+        };
+        let ctx = make_ctx(d, &tk, &tg, &mk, &mg, 1.0);
+        let enc = codec.encode(&ctx).unwrap();
+        let dec_ctx = DecodeCtx {
+            d,
+            mask_g: &mg,
+            s_g: &[],
+            seed: 99,
+        };
+        // Wire layout: tag(1) png(1) seed(8) layout_a@10(4) layout_b@14(8).
+        // Zero / non-power-of-two segment lengths and a wild segment count
+        // must all be rejected before the membership kernel runs.
+        for layout_a in [0u32, 3, 7] {
+            let mut bad = enc.bytes.clone();
+            bad[10..14].copy_from_slice(&layout_a.to_le_bytes());
+            assert!(
+                codec.decode(&bad, &dec_ctx).is_err(),
+                "layout_a={layout_a} must error"
+            );
+        }
+        let mut bad = enc.bytes.clone();
+        bad[14..22].copy_from_slice(&u64::MAX.to_le_bytes());
+        assert!(codec.decode(&bad, &dec_ctx).is_err(), "huge layout_b must error");
     }
 
     #[test]

@@ -96,9 +96,12 @@ impl UpdateCodec for EdenCodec {
         let d = r.u32()? as usize;
         ensure!(d == ctx.d, "dimension mismatch");
         let k = r.u32()? as usize;
+        let n = padded_len(d);
+        // The encoder clamps k to [1, n]; a k beyond n in a corrupted record
+        // would underflow the shared-subset sampler, so reject it here.
+        ensure!(k >= 1 && k <= n, "coordinate count {k} outside [1, {n}]");
         let scale = r.f32()?;
         let packed = r.bytes(k.div_ceil(8))?;
-        let n = padded_len(d);
         let sel = subset(n, k, ctx.seed);
         // The encode-side scale already folds the n/k subsampling
         // correction; plant sign·scale and let the inverse rotation spread it.

@@ -120,6 +120,61 @@ impl Encoded {
     }
 }
 
+/// Reusable client-side encode scratch: the Δ scan, its KL scores and the
+/// truncated key set live in buffers that persist across rounds (inside
+/// `ClientSession`), so steady-state encodes never re-allocate them.
+#[derive(Debug, Default)]
+pub struct EncodeScratch {
+    /// Mask-difference index set Δ.
+    pub delta: Vec<u32>,
+    /// KL scores aligned with `delta` (KL ranking only).
+    pub scores: Vec<f32>,
+    /// Ranked, truncated key set Δ′ handed to the filter builder.
+    pub keys: Vec<u64>,
+}
+
+/// Free-list of reusable `d`-length f32 update buffers for the server-side
+/// decode path. `drain_round` pops a spent buffer for each decode and the
+/// aggregator pushes buffers back once their contents are folded into the
+/// global state, so steady-state rounds decode with zero allocation.
+///
+/// The pool is `Sync` (internally locked) so one instance can outlive a
+/// round and be shared with pool workers if an encode path ever wants it.
+#[derive(Debug, Default)]
+pub struct ScratchPool {
+    bufs: std::sync::Mutex<Vec<Vec<f32>>>,
+}
+
+impl ScratchPool {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Pop a spare buffer filled with a copy of `init` (the m^{g,t-1}
+    /// baseline for mask decodes), allocating only when the pool is dry.
+    pub fn take_copy(&self, init: &[f32]) -> Vec<f32> {
+        let mut buf = self.bufs.lock().unwrap().pop().unwrap_or_default();
+        buf.clear();
+        buf.extend_from_slice(init);
+        buf
+    }
+
+    /// Return a spent buffer for reuse.
+    pub fn put(&self, buf: Vec<f32>) {
+        // Keep the free list small: a round needs at most a handful of
+        // in-flight buffers (decode is serialized on the server thread).
+        let mut bufs = self.bufs.lock().unwrap();
+        if bufs.len() < 64 {
+            bufs.push(buf);
+        }
+    }
+
+    /// Number of idle buffers (test/bench observability).
+    pub fn spares(&self) -> usize {
+        self.bufs.lock().unwrap().len()
+    }
+}
+
 pub trait UpdateCodec: Send + Sync {
     fn name(&self) -> &'static str;
     fn family(&self) -> Family;
@@ -131,6 +186,29 @@ pub trait UpdateCodec: Send + Sync {
     }
     fn encode(&self, ctx: &EncodeCtx) -> anyhow::Result<Encoded>;
     fn decode(&self, bytes: &[u8], ctx: &DecodeCtx) -> anyhow::Result<Update>;
+
+    /// Encode reusing the caller's scratch buffers. The default ignores the
+    /// scratch and allocates per call; hot-path codecs (DeltaMask) override.
+    /// Must produce bytes identical to `encode`.
+    fn encode_with(&self, ctx: &EncodeCtx, scratch: &mut EncodeScratch) -> anyhow::Result<Encoded> {
+        let _ = scratch;
+        self.encode(ctx)
+    }
+
+    /// Decode drawing the output buffer from `pool` instead of allocating.
+    /// The default falls back to `decode`; mask-family codecs with dense
+    /// reconstruction override. Must produce an update identical to
+    /// `decode` — the batched kernels change *how* membership is queried,
+    /// never what is decoded.
+    fn decode_pooled(
+        &self,
+        bytes: &[u8],
+        ctx: &DecodeCtx,
+        pool: &ScratchPool,
+    ) -> anyhow::Result<Update> {
+        let _ = pool;
+        self.decode(bytes, ctx)
+    }
 }
 
 /// Construct a codec by its CLI/bench name.

@@ -7,7 +7,7 @@
 use super::round::RoundPlan;
 use super::transport::{Payload, Transport};
 use super::PipelineMode;
-use crate::compress::{Encoded, Update, UpdateCodec};
+use crate::compress::{Encoded, ScratchPool, Update, UpdateCodec};
 use crate::util::timer::Stopwatch;
 use anyhow::{bail, Result};
 
@@ -23,6 +23,15 @@ pub trait Aggregator {
     fn begin_round(&mut self, expected: usize);
     fn absorb(&mut self, slot: usize, update: Update);
     fn finish_round(&mut self);
+
+    /// Hand back an update buffer whose contents have been folded into the
+    /// aggregator state (mask-family absorbs spend their buffer
+    /// immediately; delta-family reorder windows release them in slot
+    /// order). The drain loop feeds these into its [`ScratchPool`], closing
+    /// the zero-allocation decode cycle. Default: nothing to reclaim.
+    fn reclaim_buffer(&mut self) -> Option<Vec<f32>> {
+        None
+    }
 }
 
 /// Deterministic per-slot accounting from one drained round. Kept per-slot
@@ -64,6 +73,11 @@ impl DrainReport {
 /// the barrier — the seed's reference behaviour. Both produce bitwise
 /// identical aggregator state (see `fl::server` module docs).
 ///
+/// Decoding draws its output buffers from `pool` and the aggregator's
+/// spent buffers flow back into it after every absorb, so a pool that
+/// outlives the round (the runner owns one per experiment) makes
+/// steady-state decode allocation-free.
+///
 /// Errors if the uplink closes early, a client reports an in-band failure,
 /// a slot arrives twice, or decoding fails.
 pub fn drain_round(
@@ -72,6 +86,7 @@ pub fn drain_round(
     codec: &dyn UpdateCodec,
     agg: &mut dyn Aggregator,
     mode: PipelineMode,
+    pool: &ScratchPool,
 ) -> Result<DrainReport> {
     let expected = plan.expected();
     let mut report = DrainReport::new(expected);
@@ -106,9 +121,12 @@ pub fn drain_round(
         match mode {
             PipelineMode::Streaming => {
                 let t = Stopwatch::new();
-                let update = codec.decode(&enc.bytes, &plan.decode_ctx(msg.slot))?;
+                let update = codec.decode_pooled(&enc.bytes, &plan.decode_ctx(msg.slot), pool)?;
                 report.dec_secs += t.elapsed_secs();
                 agg.absorb(msg.slot, update);
+                while let Some(buf) = agg.reclaim_buffer() {
+                    pool.put(buf);
+                }
             }
             PipelineMode::Batch => buffered[msg.slot] = Some(enc),
         }
@@ -121,9 +139,12 @@ pub fn drain_round(
             for (slot, enc) in buffered.iter().enumerate() {
                 let enc = enc.as_ref().expect("all slots arrived");
                 let t = Stopwatch::new();
-                let update = codec.decode(&enc.bytes, &plan.decode_ctx(slot))?;
+                let update = codec.decode_pooled(&enc.bytes, &plan.decode_ctx(slot), pool)?;
                 report.dec_secs += t.elapsed_secs();
                 agg.absorb(slot, update);
+                while let Some(buf) = agg.reclaim_buffer() {
+                    pool.put(buf);
+                }
             }
             agg.finish_round();
         }
@@ -192,6 +213,7 @@ mod tests {
             codec.as_ref(),
             &mut spy,
             PipelineMode::Batch,
+            &ScratchPool::new(),
         )
         .unwrap_err();
         assert!(err.to_string().contains("client oom"), "{err}");
@@ -215,6 +237,7 @@ mod tests {
             codec.as_ref(),
             &mut spy,
             PipelineMode::Batch,
+            &ScratchPool::new(),
         )
         .unwrap_err();
         assert!(err.to_string().contains("duplicate"), "{err}");
@@ -233,6 +256,7 @@ mod tests {
             codec.as_ref(),
             &mut spy,
             PipelineMode::Streaming,
+            &ScratchPool::new(),
         )
         .unwrap_err();
         assert!(err.to_string().contains("0/3"), "{err}");

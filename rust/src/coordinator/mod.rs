@@ -42,6 +42,10 @@ pub mod round;
 pub mod transport;
 
 pub use aggregate::{drain_round, Aggregator, DrainReport};
+// Re-exported so coordinator users thread the decode buffer pool without
+// reaching into `compress` (the pool type lives beside the codecs because
+// `decode_pooled` is a codec method).
+pub use crate::compress::ScratchPool;
 pub use pool::ClientPool;
 pub use round::{RoundEngine, RoundPlan};
 pub use transport::{

@@ -4,8 +4,15 @@
 //! higher false positive rate for the same bits per entry", §5.1) can be
 //! regenerated against our own from-scratch implementation.
 
-use super::MembershipFilter;
-use crate::hash::mix_split;
+//! Bit mapping: probes use Lemire multiply-shift range reduction
+//! (`mulhi(h, num_bits)`) instead of `h % num_bits` — two fewer 64-bit
+//! divisions per probe on the Eq. 5 hot path. The reduction is part of the
+//! wire contract (`from_parts` rebuilds the same mapping), so encoder and
+//! decoder stay consistent; it is simply a different, division-free hash →
+//! bit map with the same uniformity.
+
+use super::{MembershipFilter, BATCH_BLOCK};
+use crate::hash::{mix_split, mulhi};
 
 #[derive(Clone, Debug)]
 pub struct BloomFilter {
@@ -41,12 +48,34 @@ impl BloomFilter {
     }
 
     fn insert(&mut self, key: u64) {
-        let h1 = mix_split(key, 0x51_7c_c1_b7_27_22_0a_95);
-        let h2 = mix_split(key, 0x96_97_9a_6e_0f_3e_1d_31) | 1;
+        let (h1, h2) = Self::double_hash(key);
         for i in 0..self.num_hashes as u64 {
-            let bit = h1.wrapping_add(i.wrapping_mul(h2)) % self.num_bits;
+            let bit = mulhi(h1.wrapping_add(i.wrapping_mul(h2)), self.num_bits);
             self.bits[(bit / 64) as usize] |= 1u64 << (bit % 64);
         }
+    }
+
+    /// The double-hashing pair (h1, h2|1) shared by insert and every query
+    /// path.
+    #[inline(always)]
+    fn double_hash(key: u64) -> (u64, u64) {
+        (
+            mix_split(key, 0x51_7c_c1_b7_27_22_0a_95),
+            mix_split(key, 0x96_97_9a_6e_0f_3e_1d_31) | 1,
+        )
+    }
+
+    /// Membership probe from a precomputed hash pair — shared by `contains`
+    /// and the batched kernels so both agree bitwise by construction.
+    #[inline(always)]
+    fn probe(&self, h1: u64, h2: u64) -> bool {
+        for i in 0..self.num_hashes as u64 {
+            let bit = mulhi(h1.wrapping_add(i.wrapping_mul(h2)), self.num_bits);
+            if self.bits[(bit / 64) as usize] & (1u64 << (bit % 64)) == 0 {
+                return false;
+            }
+        }
+        true
     }
 
     pub fn num_keys(&self) -> usize {
@@ -90,15 +119,59 @@ impl MembershipFilter for BloomFilter {
         if self.num_keys == 0 {
             return false;
         }
-        let h1 = mix_split(key, 0x51_7c_c1_b7_27_22_0a_95);
-        let h2 = mix_split(key, 0x96_97_9a_6e_0f_3e_1d_31) | 1;
-        for i in 0..self.num_hashes as u64 {
-            let bit = h1.wrapping_add(i.wrapping_mul(h2)) % self.num_bits;
-            if self.bits[(bit / 64) as usize] & (1u64 << (bit % 64)) == 0 {
-                return false;
-            }
+        let (h1, h2) = Self::double_hash(key);
+        self.probe(h1, h2)
+    }
+
+    /// Blocked kernel: both double-hash streams are computed for a whole
+    /// block in flat loops before the bit-test phase runs.
+    fn contains_batch(&self, keys: &[u64], out: &mut [bool]) {
+        assert_eq!(keys.len(), out.len());
+        if self.num_keys == 0 {
+            out.fill(false);
+            return;
         }
-        true
+        let mut h1s = [0u64; BATCH_BLOCK];
+        let mut h2s = [0u64; BATCH_BLOCK];
+        let mut base = 0usize;
+        while base < keys.len() {
+            let len = BATCH_BLOCK.min(keys.len() - base);
+            for (j, &k) in keys[base..base + len].iter().enumerate() {
+                let (h1, h2) = Self::double_hash(k);
+                h1s[j] = h1;
+                h2s[j] = h2;
+            }
+            for (j, o) in out[base..base + len].iter_mut().enumerate() {
+                *o = self.probe(h1s[j], h2s[j]);
+            }
+            base += len;
+        }
+    }
+
+    /// Batched Eq. 5 kernel over the dense index range (see
+    /// [`MembershipFilter::decode_mask_into`]).
+    fn decode_mask_into(&self, mask: &mut [f32]) {
+        if self.num_keys == 0 {
+            return;
+        }
+        let mut h1s = [0u64; BATCH_BLOCK];
+        let mut h2s = [0u64; BATCH_BLOCK];
+        let d = mask.len();
+        let mut base = 0usize;
+        while base < d {
+            let len = BATCH_BLOCK.min(d - base);
+            for (j, h) in h1s[..len].iter_mut().enumerate() {
+                let (h1, h2) = Self::double_hash((base + j) as u64);
+                *h = h1;
+                h2s[j] = h2;
+            }
+            for (j, m) in mask[base..base + len].iter_mut().enumerate() {
+                if self.probe(h1s[j], h2s[j]) {
+                    *m = 1.0 - *m;
+                }
+            }
+            base += len;
+        }
     }
 
     fn payload_bytes(&self) -> usize {
@@ -178,6 +251,8 @@ mod tests {
 
     #[test]
     fn roundtrip() {
+        // from_parts must rebuild the exact Lemire-mapped bit array: same
+        // answers (members and non-members) on both sides of the wire.
         let keys = random_keys(1_000, 6);
         let f = BloomFilter::with_bits_per_entry(&keys, 10.0);
         let g = BloomFilter::from_parts(&f.payload(), f.num_bits(), f.num_hashes(), f.num_keys());
@@ -186,6 +261,44 @@ mod tests {
         }
         for k in 0..10_000u64 {
             assert_eq!(f.contains(k), g.contains(k));
+        }
+    }
+
+    #[test]
+    fn lemire_mapping_fills_whole_range() {
+        // The multiply-shift reduction must use the full [0, num_bits) range
+        // (a regression guard for the % → mulhi change): with enough keys,
+        // both the first and last bit words see insertions.
+        let keys = random_keys(20_000, 9);
+        let f = BloomFilter::with_bits_per_entry(&keys, 9.0);
+        let payload = f.payload();
+        assert!(payload[..8].iter().any(|&b| b != 0), "low words never hit");
+        let n = payload.len();
+        assert!(payload[n - 8..].iter().any(|&b| b != 0), "high words never hit");
+    }
+
+    #[test]
+    fn batched_kernels_match_scalar_oracle() {
+        for n in [0usize, 1, 700, 20_000] {
+            let keys = random_keys(n, 40 + n as u64);
+            let f = BloomFilter::with_bits_per_entry(&keys, 8.62);
+            let d = 30_001u64;
+            let mut mask: Vec<f32> = (0..d).map(|i| (i % 5 == 0) as u32 as f32).collect();
+            let mut expect = mask.clone();
+            for (i, m) in expect.iter_mut().enumerate() {
+                if f.contains(i as u64) {
+                    *m = 1.0 - *m;
+                }
+            }
+            f.decode_mask_into(&mut mask);
+            assert_eq!(mask, expect);
+            let mut rng = crate::util::rng::Xoshiro256pp::new(n as u64 + 13);
+            let probes: Vec<u64> = (0..3_000).map(|_| rng.next_u64()).collect();
+            let mut got = vec![false; probes.len()];
+            f.contains_batch(&probes, &mut got);
+            for (j, &k) in probes.iter().enumerate() {
+                assert_eq!(got[j], f.contains(k));
+            }
         }
     }
 }

@@ -63,6 +63,11 @@ impl_fingerprint!(u8, 8);
 impl_fingerprint!(u16, 16);
 impl_fingerprint!(u32, 32);
 
+/// Block width of the batched query kernels: per-key hashes are computed
+/// for a whole block in a flat, data-independent loop (which the compiler
+/// can vectorize) before the gather-heavy probe phase runs.
+pub(crate) const BATCH_BLOCK: usize = 128;
+
 /// Common interface used by the codecs and the ablation benches.
 pub trait MembershipFilter {
     /// Query a key (for DeltaMask: a mask-parameter index).
@@ -72,6 +77,31 @@ pub trait MembershipFilter {
     fn payload_bytes(&self) -> usize;
     /// Achieved bits per entry for the construction set.
     fn bits_per_entry(&self) -> f64;
+
+    /// Batched membership over a slice of keys, writing one answer per key
+    /// into `out`. The default is the scalar per-key loop; the concrete
+    /// filters override it with blocked monomorphic kernels that hash
+    /// fixed-size blocks before probing. Overrides must agree bitwise with
+    /// `contains` (the parity tests drive both paths).
+    fn contains_batch(&self, keys: &[u64], out: &mut [bool]) {
+        assert_eq!(keys.len(), out.len());
+        for (o, &k) in out.iter_mut().zip(keys) {
+            *o = self.contains(k);
+        }
+    }
+
+    /// Batched Eq. 5 reconstruction kernel over the dense index range
+    /// `[0, mask.len())`: flip `mask[i]` (0.0 ↔ 1.0) at every index the
+    /// filter reports as a member. This is the server-side DeltaMask hot
+    /// path; the default is the scalar membership sweep and doubles as the
+    /// parity oracle for the blocked overrides.
+    fn decode_mask_into(&self, mask: &mut [f32]) {
+        for (i, m) in mask.iter_mut().enumerate() {
+            if self.contains(i as u64) {
+                *m = 1.0 - *m;
+            }
+        }
+    }
 }
 
 #[cfg(test)]

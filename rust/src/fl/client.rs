@@ -8,6 +8,7 @@
 //! via the immutable `RoundPlan` broadcast snapshot.
 
 use super::data::ClientData;
+use crate::compress::EncodeScratch;
 use crate::model::backend::{Backend, FtState, LpState, ModelParams};
 use crate::model::{theta_from_scores, MaskState};
 use crate::util::rng::Xoshiro256pp;
@@ -20,6 +21,10 @@ pub struct ClientSession {
     pub ft_state: Option<FtState>,
     /// Local linear-probe state (only for the LP baseline).
     pub lp_state: Option<LpState>,
+    /// Reusable encode-path buffers (Δ scan / KL scores / key set): the
+    /// session rides the pool across rounds, so steady-state encodes via
+    /// `UpdateCodec::encode_with` allocate nothing for selection.
+    pub enc_scratch: EncodeScratch,
     seed: u64,
 }
 
@@ -65,6 +70,7 @@ impl ClientSession {
             mask_state: MaskState::new(d),
             ft_state: None,
             lp_state: None,
+            enc_scratch: EncodeScratch::default(),
             seed: experiment_seed
                 ^ (id as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15),
         }

@@ -12,6 +12,11 @@ pub struct RoundMetrics {
     pub mean_bpp: f64,
     pub enc_ms_mean: f64,
     pub dec_ms_mean: f64,
+    /// Total server-side decode wall time for the round in ms — the Eq. 5
+    /// reconstruction kernel cost the server actually paid, as opposed to
+    /// `dec_ms_mean`'s per-client mean. Lets `--pipeline batch|streaming`
+    /// A/Bs compare *compute* alongside the byte/latency accounting.
+    pub dec_kernel_ms: f64,
     pub train_loss: f64,
     pub accuracy: Option<f64>,
     /// Which server pipeline produced this round: `"streaming"`
@@ -120,6 +125,7 @@ impl ExperimentResult {
                 o.set("round", Json::Num(r.round as f64))
                     .set("kappa", Json::Num(r.kappa))
                     .set("pipeline", Json::from_str_(r.pipeline))
+                    .set("dec_kernel_ms", Json::Num(r.dec_kernel_ms))
                     .set("bpp", Json::Num(r.mean_bpp))
                     .set("loss", Json::Num(r.train_loss))
                     .set(
@@ -161,6 +167,7 @@ mod tests {
             mean_bpp: bpp,
             enc_ms_mean: 1.0,
             dec_ms_mean: 2.0,
+            dec_kernel_ms: 4.0,
             train_loss: 0.5,
             accuracy: acc,
             pipeline: "streaming",

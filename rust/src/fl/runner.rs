@@ -14,7 +14,8 @@ use super::server::MaskServer;
 use super::ExperimentConfig;
 use crate::compress::UpdateCodec;
 use crate::coordinator::{
-    drain_round, ChannelTransport, ClientPool, Payload, RoundEngine, RoundPlan, WireMessage,
+    drain_round, ChannelTransport, ClientPool, Payload, RoundEngine, RoundPlan, ScratchPool,
+    WireMessage,
 };
 use crate::model::backend::{Backend, FtState, LpState, ModelParams};
 use crate::model::{accuracy, init_params, sample_mask_seeded};
@@ -40,6 +41,10 @@ pub struct Runner<'a> {
     pub sessions: Vec<Option<ClientSession>>,
     pub server: MaskServer,
     engine: RoundEngine,
+    /// Decode-buffer pool shared across rounds: round t+1's decodes reuse
+    /// the buffers round t's aggregation spent, so the steady-state
+    /// decode→absorb cycle allocates nothing.
+    scratch: ScratchPool,
 }
 
 impl<'a> Runner<'a> {
@@ -75,6 +80,7 @@ impl<'a> Runner<'a> {
                 cfg.kappa_floor,
                 cfg.rounds,
             ),
+            scratch: ScratchPool::new(),
         })
     }
 
@@ -229,6 +235,7 @@ impl<'a> Runner<'a> {
                 mean_bpp: (tally.bits / kf) / d as f64,
                 enc_ms_mean: tally.enc_secs / kf * 1e3,
                 dec_ms_mean: tally.dec_secs / kf * 1e3,
+                dec_kernel_ms: tally.dec_secs * 1e3,
                 train_loss: tally.loss / kf,
                 accuracy: acc,
                 pipeline: self.cfg.pipeline.as_str(),
@@ -297,10 +304,11 @@ impl<'a> Runner<'a> {
 
         let pipeline = cfg.pipeline;
         let server = &mut self.server;
+        let dec_pool = &self.scratch;
         let server_loop = move || -> Result<RoundTally> {
             // All decoding + aggregation happens inside the coordinator's
             // drain loop; the runner only reduces the report.
-            let report = drain_round(&mut channel, plan, codec, server, pipeline)?;
+            let report = drain_round(&mut channel, plan, codec, server, pipeline, dec_pool)?;
             Ok(RoundTally {
                 // Exact byte accounting from the transport (integer-valued,
                 // so order-independent).
@@ -462,6 +470,7 @@ impl<'a> Runner<'a> {
                 mean_bpp: bits / d as f64,
                 enc_ms_mean: 0.0,
                 dec_ms_mean: 0.0,
+                dec_kernel_ms: 0.0,
                 train_loss: loss / participants.len() as f64,
                 accuracy: acc,
                 pipeline: self.cfg.pipeline.as_str(),
@@ -554,6 +563,7 @@ impl<'a> Runner<'a> {
                 mean_bpp: bits / d as f64,
                 enc_ms_mean: 0.0,
                 dec_ms_mean: 0.0,
+                dec_kernel_ms: 0.0,
                 train_loss: loss / participants.len() as f64,
                 accuracy: acc,
                 pipeline: self.cfg.pipeline.as_str(),
@@ -595,7 +605,9 @@ fn client_round(
     sample_mask_seeded(&theta_k, plan.seed, &mut mask_k);
     let ectx = plan.encode_ctx(slot, &theta_k, &mask_k, &sess.mask_state.s);
     let t = Stopwatch::new();
-    let enc = codec.encode(&ectx)?;
+    // Selection buffers persist in the session, so steady-state encodes
+    // allocate nothing for the Δ′ scan (bytes identical to plain encode).
+    let enc = codec.encode_with(&ectx, &mut sess.enc_scratch)?;
     Ok(WireMessage {
         round: plan.round,
         client_id: plan.participants[slot],

@@ -37,6 +37,10 @@ pub struct MaskServer {
     pub rho: f64,
     pub round: usize,
     stream: Option<RoundStream>,
+    /// Update buffers whose contents have been folded into the posterior /
+    /// score state, awaiting reclamation by the drain loop's scratch pool
+    /// (see [`crate::coordinator::Aggregator::reclaim_buffer`]).
+    spent: Vec<Vec<f32>>,
 }
 
 /// In-flight accounting for one streaming round.
@@ -72,6 +76,7 @@ impl MaskServer {
             rho,
             round: 0,
             stream: None,
+            spent: Vec::new(),
         }
     }
 
@@ -83,6 +88,9 @@ impl MaskServer {
             self.alpha.iter_mut().for_each(|a| *a = self.lambda0);
             self.beta.iter_mut().for_each(|b| *b = self.lambda0);
         }
+        // Drop buffers nobody reclaimed (e.g. the legacy `aggregate`
+        // wrapper) so the stash never grows across rounds.
+        self.spent.clear();
         self.stream = Some(RoundStream::new(expected));
     }
 
@@ -126,6 +134,7 @@ impl MaskServer {
                     self.alpha[i] += m[i];
                     self.beta[i] += 1.0 - m[i];
                 }
+                self.spent.push(m);
             }
             Update::ScoreDelta(delta) => {
                 let k = stream.expected as f32;
@@ -135,9 +144,16 @@ impl MaskServer {
                         self.s_g[i] += next[i] / k;
                     }
                     stream.next_slot += 1;
+                    self.spent.push(next);
                 }
             }
         }
+    }
+
+    /// Pop one spent update buffer for reuse by the decode path (drained by
+    /// `coordinator::drain_round` after every absorb).
+    pub fn take_spent(&mut self) -> Option<Vec<f32>> {
+        self.spent.pop()
     }
 
     /// Close the round: refresh θ_g / s_g from the absorbed updates and
@@ -209,6 +225,10 @@ impl crate::coordinator::Aggregator for MaskServer {
 
     fn finish_round(&mut self) {
         MaskServer::finish_round(self);
+    }
+
+    fn reclaim_buffer(&mut self) -> Option<Vec<f32>> {
+        self.take_spent()
     }
 }
 
@@ -338,6 +358,30 @@ mod tests {
         let bound = d as f64 / (4.0 * k as f64);
         assert!(mse <= bound, "mse={mse} bound={bound}");
         assert!(mse > bound * 0.1, "bound should be within an order: {mse}");
+    }
+
+    #[test]
+    fn spent_buffers_flow_back_in_absorb_order() {
+        let mut srv = MaskServer::new(4, 1.0);
+        srv.begin_round(2);
+        srv.absorb(0, Update::Mask(vec![1.0, 0.0, 1.0, 0.0]));
+        assert_eq!(srv.take_spent(), Some(vec![1.0, 0.0, 1.0, 0.0]));
+        assert!(srv.take_spent().is_none());
+        srv.absorb(1, Update::Mask(vec![1.0; 4]));
+        srv.finish_round();
+        assert!(srv.take_spent().is_some());
+
+        // Delta family: the reorder window releases buffers in slot order,
+        // so an out-of-order arrival is held, not reclaimed.
+        let mut srv = MaskServer::new(2, 1.0);
+        srv.begin_round(2);
+        srv.absorb(1, Update::ScoreDelta(vec![0.5, 0.5]));
+        assert!(srv.take_spent().is_none(), "slot 1 must wait for slot 0");
+        srv.absorb(0, Update::ScoreDelta(vec![0.25, 0.25]));
+        assert!(srv.take_spent().is_some());
+        assert!(srv.take_spent().is_some());
+        assert!(srv.take_spent().is_none());
+        srv.finish_round();
     }
 
     #[test]

@@ -27,6 +27,45 @@
 //!
 //! See `DESIGN.md` for the full system inventory and the per-experiment
 //! index mapping every table/figure of the paper to a bench target.
+//!
+//! ## Hot-path performance tracking (`BENCH_hotpaths.json`)
+//!
+//! The encode→wire→decode hot path runs on **batched monomorphic kernels**
+//! (blocked filter membership via `MembershipFilter::{contains_batch,
+//! decode_mask_into}`, word-at-a-time bit I/O, fused-pair literal emission,
+//! unrolled matmuls) with **reusable scratch** (`compress::EncodeScratch`
+//! per client session, a `compress::ScratchPool` of decode buffers cycling
+//! through `coordinator::drain_round` ↔ `Aggregator::reclaim_buffer`), so
+//! steady-state rounds allocate nothing on the wire path. Every batched
+//! kernel is parity-locked to a retained scalar oracle — it changes *how*
+//! membership is queried, never what is encoded; all 8 codecs stay
+//! bitwise-identical on the wire.
+//!
+//! `benches/hotpaths.rs` times each kernel against its scalar oracle and
+//! writes `BENCH_hotpaths.json` at the repo root. Regenerate with:
+//!
+//! ```text
+//! cargo bench --bench hotpaths            # full sweep, d ∈ {1e5, 1e6, 1e7}
+//! cargo bench --bench hotpaths -- --smoke # CI scale (the bench-smoke job)
+//! ```
+//!
+//! Schema (`deltamask-hotpaths-v1`):
+//!
+//! ```text
+//! { "schema":  "deltamask-hotpaths-v1",
+//!   "provenance": <how this file was produced>,
+//!   "smoke":   <bool>, "iters": <n>, "warmup": <n>,
+//!   "kernels": [ { "name": <kernel id, e.g. "bfuse8_decode_d1000000">,
+//!                  "scalar_secs":  <min over iters, scalar oracle>,
+//!                  "batched_secs": <min over iters, batched kernel>,
+//!                  "speedup":      <scalar_secs / batched_secs>,
+//!                  "parity":       <bitwise agreement, asserted> } ],
+//!   "tracked": [ { "name": <png/deflate throughput id>, "secs": <min> } ] }
+//! ```
+//!
+//! PR-over-PR regression checks diff `kernels[*].batched_secs` (and the
+//! `tracked` throughputs) between runs on the same machine; `parity` must
+//! always be `true` — the bench exits non-zero otherwise.
 
 pub mod bench;
 pub mod codec;

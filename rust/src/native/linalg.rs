@@ -1,7 +1,37 @@
 //! Minimal dense f32 matmul kernels for the native backend. Cache-friendly
-//! loop orders (ikj for NN/BT-via-kj) — no external BLAS in the offline
-//! vendor set, and the simulated-FM sizes (≤ 64×384×384) stay well inside
-//! L2 cache.
+//! loop orders (ikj for NN/AT, row-dot for BT) — no external BLAS in the
+//! offline vendor set, and the simulated-FM sizes (≤ 64×384×384) stay well
+//! inside L2 cache.
+//!
+//! The inner loops are blocked/unrolled so the autovectorizer gets straight
+//! multi-lane arithmetic: NN/AT unroll the contiguous `j` axis 8-wide
+//! (element-wise, so the per-element accumulation order — and therefore the
+//! f32 result — is bit-identical to the scalar loops, which the tests keep
+//! as oracles), and BT processes 4 output columns per pass with 4
+//! independent dot accumulators (each dot still sums in `k` order, so it
+//! too matches the scalar kernel bitwise while quadrupling ILP and reusing
+//! the streamed A row).
+
+/// One ikj rank-update row: `crow += av · brow`, 8-wide.
+#[inline(always)]
+fn axpy8(crow: &mut [f32], brow: &[f32], av: f32) {
+    debug_assert_eq!(crow.len(), brow.len());
+    let mut ci = crow.chunks_exact_mut(8);
+    let mut bi = brow.chunks_exact(8);
+    for (cb, bb) in (&mut ci).zip(&mut bi) {
+        cb[0] += av * bb[0];
+        cb[1] += av * bb[1];
+        cb[2] += av * bb[2];
+        cb[3] += av * bb[3];
+        cb[4] += av * bb[4];
+        cb[5] += av * bb[5];
+        cb[6] += av * bb[6];
+        cb[7] += av * bb[7];
+    }
+    for (c, b) in ci.into_remainder().iter_mut().zip(bi.remainder()) {
+        *c += av * b;
+    }
+}
 
 /// C = A @ B with A:(m,k), B:(k,n), C:(m,n). (ikj order: streams B rows.)
 pub fn matmul_nn(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
@@ -16,29 +46,46 @@ pub fn matmul_nn(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usi
             if av == 0.0 {
                 continue;
             }
-            let brow = &b[kk * n..(kk + 1) * n];
-            for j in 0..n {
-                crow[j] += av * brow[j];
-            }
+            axpy8(crow, &b[kk * n..(kk + 1) * n], av);
         }
     }
 }
 
-/// C = A @ Bᵀ with A:(m,k), B:(n,k), C:(m,n). (Dot products of rows —
-/// both operands stream contiguously.)
+/// C = A @ Bᵀ with A:(m,k), B:(n,k), C:(m,n). Four output columns per pass:
+/// the A row streams once through four independent dot accumulators.
 pub fn matmul_bt(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), n * k);
     debug_assert_eq!(c.len(), m * n);
     for i in 0..m {
         let arow = &a[i * k..(i + 1) * k];
-        for j in 0..n {
+        let mut j = 0usize;
+        while j + 4 <= n {
+            let b0 = &b[j * k..(j + 1) * k];
+            let b1 = &b[(j + 1) * k..(j + 2) * k];
+            let b2 = &b[(j + 2) * k..(j + 3) * k];
+            let b3 = &b[(j + 3) * k..(j + 4) * k];
+            let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+            for (kk, &av) in arow.iter().enumerate() {
+                s0 += av * b0[kk];
+                s1 += av * b1[kk];
+                s2 += av * b2[kk];
+                s3 += av * b3[kk];
+            }
+            c[i * n + j] = s0;
+            c[i * n + j + 1] = s1;
+            c[i * n + j + 2] = s2;
+            c[i * n + j + 3] = s3;
+            j += 4;
+        }
+        while j < n {
             let brow = &b[j * k..(j + 1) * k];
             let mut acc = 0.0f32;
             for kk in 0..k {
                 acc += arow[kk] * brow[kk];
             }
             c[i * n + j] = acc;
+            j += 1;
         }
     }
 }
@@ -58,10 +105,7 @@ pub fn matmul_at(a: &[f32], b: &[f32], c: &mut [f32], k: usize, m: usize, n: usi
             if av == 0.0 {
                 continue;
             }
-            let crow = &mut c[i * n..(i + 1) * n];
-            for j in 0..n {
-                crow[j] += av * brow[j];
-            }
+            axpy8(&mut c[i * n..(i + 1) * n], brow, av);
         }
     }
 }
@@ -78,6 +122,44 @@ mod tests {
                 let mut acc = 0.0;
                 for kk in 0..k {
                     acc += a[i * k + kk] * b[kk * n + j];
+                }
+                c[i * n + j] = acc;
+            }
+        }
+        c
+    }
+
+    /// Scalar ikj kernel (the seed's matmul_nn) — the bitwise oracle for
+    /// the 8-wide unrolled version: same per-element accumulation order.
+    fn scalar_ikj_nn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut c = vec![0.0f32; m * n];
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            let crow = &mut c[i * n..(i + 1) * n];
+            for (kk, &av) in arow.iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = &b[kk * n..(kk + 1) * n];
+                for j in 0..n {
+                    crow[j] += av * brow[j];
+                }
+            }
+        }
+        c
+    }
+
+    /// Scalar row-dot kernel (the seed's matmul_bt) — bitwise oracle for
+    /// the 4-column blocked version: each dot sums in the same k order.
+    fn scalar_dot_bt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut c = vec![0.0f32; m * n];
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            for j in 0..n {
+                let brow = &b[j * k..(j + 1) * k];
+                let mut acc = 0.0f32;
+                for kk in 0..k {
+                    acc += arow[kk] * brow[kk];
                 }
                 c[i * n + j] = acc;
             }
@@ -116,6 +198,30 @@ mod tests {
             }
             matmul_at(&at, &b, &mut c, k, m, n);
             assert_close(&c, &want);
+        }
+    }
+
+    #[test]
+    fn blocked_kernels_bitwise_match_scalar_oracles() {
+        // The unrolled kernels preserve the exact f32 accumulation order of
+        // the scalar loops — so training trajectories are unchanged, not
+        // just approximately equal. Sizes cover remainder lanes (n % 8 ≠ 0,
+        // n % 4 ≠ 0) and zero-skip rows.
+        let mut rng = Xoshiro256pp::new(99);
+        for &(m, k, n) in &[(1usize, 1usize, 1usize), (5, 13, 11), (16, 64, 64), (7, 31, 29)] {
+            let mut a: Vec<f32> = (0..m * k).map(|_| rng.next_f32() - 0.5).collect();
+            // Exercise the av == 0.0 skip path.
+            for x in a.iter_mut().step_by(5) {
+                *x = 0.0;
+            }
+            let b: Vec<f32> = (0..k * n).map(|_| rng.next_f32() - 0.5).collect();
+            let mut c = vec![0.0f32; m * n];
+            matmul_nn(&a, &b, &mut c, m, k, n);
+            assert_eq!(c, scalar_ikj_nn(&a, &b, m, k, n), "nn {m}x{k}x{n}");
+
+            let bt: Vec<f32> = (0..n * k).map(|_| rng.next_f32() - 0.5).collect();
+            matmul_bt(&a, &bt, &mut c, m, k, n);
+            assert_eq!(c, scalar_dot_bt(&a, &bt, m, k, n), "bt {m}x{k}x{n}");
         }
     }
 

@@ -188,6 +188,98 @@ fn corrupted_records_error_not_panic() {
 }
 
 #[test]
+fn decode_is_total_for_every_codec() {
+    // Property: `decode` is a *total* function over byte strings — for all 8
+    // codecs it returns `Ok` (a well-formed d-length update) or `Err`, and
+    // never panics or over-reads, on (a) every truncation prefix of a valid
+    // record, (b) single-bit corruptions throughout the record, and (c)
+    // entirely random byte strings. A panic anywhere aborts this test, so
+    // completing it *is* the property.
+    let d = 2_000usize;
+    let mut rng = Xoshiro256pp::new(0x70741);
+    let theta_g: Vec<f32> = (0..d).map(|_| rng.next_f32()).collect();
+    let theta_k: Vec<f32> = theta_g
+        .iter()
+        .map(|&p| (p + 0.2 * (rng.next_f32() - 0.5)).clamp(0.01, 0.99))
+        .collect();
+    let s_g: Vec<f32> = theta_g.iter().map(|&p| (p / (1.0 - p)).ln()).collect();
+    let s_k: Vec<f32> = theta_k.iter().map(|&p| (p / (1.0 - p)).ln()).collect();
+    let mut mask_g = Vec::new();
+    sample_mask_seeded(&theta_g, 5, &mut mask_g);
+    let mut mask_k = Vec::new();
+    sample_mask_seeded(&theta_k, 5, &mut mask_k);
+
+    let check = |codec: &dyn deltamask::compress::UpdateCodec, bytes: &[u8], what: &str| {
+        let dctx = DecodeCtx {
+            d,
+            mask_g: &mask_g,
+            s_g: &s_g,
+            seed: 21,
+        };
+        match codec.decode(bytes, &dctx) {
+            Err(_) => {}
+            Ok(Update::Mask(m)) => {
+                assert_eq!(m.len(), d, "{}: {what}", codec.name());
+                assert!(
+                    m.iter().all(|&v| v == 0.0 || v == 1.0),
+                    "{}: {what}",
+                    codec.name()
+                );
+            }
+            Ok(Update::ScoreDelta(v)) => assert_eq!(v.len(), d, "{}: {what}", codec.name()),
+        }
+    };
+
+    for name in compress::all_names() {
+        let codec = compress::by_name(name).unwrap();
+        let ctx = EncodeCtx {
+            d,
+            theta_k: &theta_k,
+            theta_g: &theta_g,
+            mask_k: &mask_k,
+            mask_g: &mask_g,
+            s_k: &s_k,
+            s_g: &s_g,
+            kappa: 0.7,
+            seed: 21,
+        };
+        let enc = codec.encode(&ctx).unwrap();
+        let len = enc.bytes.len();
+
+        // (a) Every truncation prefix (strided once records get long).
+        let stride = (len / 64).max(1);
+        for cut in (0..len).step_by(stride) {
+            check(codec.as_ref(), &enc.bytes[..cut], "truncation");
+        }
+        // (b) Single-bit flips: every bit of the header region, then strided
+        // positions through the payload.
+        for pos in 0..len.min(34) {
+            for bit in 0..8 {
+                let mut bad = enc.bytes.clone();
+                bad[pos] ^= 1 << bit;
+                check(codec.as_ref(), &bad, "bit flip");
+            }
+        }
+        for pos in (34..len).step_by(stride) {
+            let mut bad = enc.bytes.clone();
+            bad[pos] ^= 0x80;
+            check(codec.as_ref(), &bad, "payload flip");
+        }
+        // (c) Random byte strings, including ones that spoof the real
+        // header prefix.
+        for trial in 0..30 {
+            let rlen = (rng.next_u64() % (len as u64 + 64)) as usize;
+            let mut junk: Vec<u8> = (0..rlen).map(|_| rng.next_u64() as u8).collect();
+            if trial % 2 == 0 {
+                let keep = junk.len().min(enc.bytes.len()).min(12);
+                junk[..keep].copy_from_slice(&enc.bytes[..keep]);
+            }
+            check(codec.as_ref(), &junk, "random bytes");
+        }
+    }
+}
+
+#[test]
 fn bfuse_payload_survives_png_stage_bit_exact() {
     // The exact DeltaMask §3.2 path at ViT-B/32 scale.
     let d = 327_680u64;
