@@ -8,7 +8,10 @@
 //!     cargo bench --bench hotpaths [-- --smoke] [--iters N] [--warmup N]
 //!
 //! `--smoke` shrinks the dimension sweep and iteration counts to CI scale.
-//! See `lib.rs` module docs for the JSON schema.
+//! Cases: filter membership kernels, the DeltaMask wire path (scratch
+//! encode + pooled decode), the sharded `drain_round` (serial vs 4 decode
+//! workers), matmuls, and tracked PNG/DEFLATE throughputs. The JSON schema
+//! and the full bench workflow are documented in `benches/README.md`.
 
 use deltamask::bench::{summarize, time_fn, Table};
 use deltamask::codec::{deflate, png};
@@ -187,6 +190,91 @@ fn main() {
         });
     }
 
+    // -- Parallel sharded server decode: drain_round w=1 vs w=4 ------------
+    // The ROADMAP's top perf target: the Eq. 5 decode sweep over a round's
+    // arrivals, serial on the draining thread vs sharded across 4 decode
+    // workers (DrainConfig). Parity is bitwise on the aggregated theta_g.
+    {
+        use deltamask::coordinator::{
+            drain_round, ChannelTransport, DrainConfig, Payload, PipelineMode, RoundEngine,
+            WireMessage,
+        };
+        use deltamask::fl::server::MaskServer;
+        use deltamask::model::sample_mask_seeded;
+
+        let d = if smoke { 50_000 } else { 200_000 };
+        let k = 8usize;
+        let workers = 4usize;
+        let theta_g: Vec<f32> = (0..d).map(|_| 0.05 + 0.9 * rng.next_f32()).collect();
+        let s_g: Vec<f32> = theta_g
+            .iter()
+            .map(|&p| {
+                let p = p.clamp(1e-6, 1.0 - 1e-6);
+                (p / (1.0 - p)).ln()
+            })
+            .collect();
+        let mut engine = RoundEngine::new(0xD3C0, k, 1.0, 0.8, 0.25, 1);
+        let plan = engine.plan(0, &theta_g, &s_g);
+        let codec = deltamask::compress::by_name("deltamask").unwrap();
+        let mut encs = Vec::new();
+        for slot in 0..plan.expected() {
+            let theta_k: Vec<f32> = theta_g
+                .iter()
+                .map(|&p| (p + 0.2 * (rng.next_f32() - 0.5)).clamp(0.01, 0.99))
+                .collect();
+            let mut mask_k = Vec::new();
+            sample_mask_seeded(&theta_k, plan.seed, &mut mask_k);
+            encs.push(
+                codec
+                    .encode(&plan.encode_ctx(slot, &theta_k, &mask_k, &[]))
+                    .expect("deltamask encode"),
+            );
+        }
+        let pool = ScratchPool::new();
+        let drain = |n_workers: usize| -> Vec<f32> {
+            let (mut channel, sender) = ChannelTransport::new();
+            for (slot, enc) in encs.iter().enumerate() {
+                sender
+                    .send(WireMessage {
+                        round: 0,
+                        client_id: plan.participants[slot],
+                        slot,
+                        payload: Payload::Update(enc.clone()),
+                        enc_secs: 0.0,
+                        loss: 0.0,
+                    })
+                    .unwrap();
+            }
+            drop(sender);
+            let mut server = MaskServer::with_theta0(d, 1.0, 0.85);
+            drain_round(
+                &mut channel,
+                &plan,
+                codec.as_ref(),
+                &mut server,
+                DrainConfig::new(PipelineMode::Streaming, n_workers),
+                &pool,
+            )
+            .expect("drain_round");
+            server.theta_g
+        };
+        let serial_secs = summarize(&time_fn(warmup, iters, || {
+            drain(1);
+        }))
+        .min;
+        let sharded_secs = summarize(&time_fn(warmup, iters, || {
+            drain(workers);
+        }))
+        .min;
+        let parity = drain(1) == drain(workers);
+        pairs.push(Pair {
+            name: format!("drain_round_deltamask_d{d}_k{k}_w{workers}"),
+            scalar_secs: serial_secs,
+            batched_secs: sharded_secs,
+            parity,
+        });
+    }
+
     // -- Matmul kernels: blocked vs the seed's scalar loops ----------------
     {
         let (m, k, n) = if smoke { (16, 96, 96) } else { (64, 384, 384) };
@@ -313,7 +401,7 @@ fn main() {
     root.set("schema", Json::from_str_("deltamask-hotpaths-v1"))
         .set(
             "provenance",
-            Json::from_str_("cargo bench --bench hotpaths (see lib.rs docs to regenerate)"),
+            Json::from_str_("cargo bench --bench hotpaths (see benches/README.md to regenerate)"),
         )
         .set("smoke", Json::Bool(smoke))
         .set("iters", Json::Num(iters as f64))

@@ -39,6 +39,7 @@ fn main() -> anyhow::Result<()> {
         theta0: 0.85,
         arch_override: None,
         pipeline: PipelineMode::from_args(&args),
+        decode_workers: args.usize("decode-workers", deltamask::fl::decode_workers_from_env()),
     };
 
     let split = if noniid { "non-IID Dir(0.1)" } else { "IID Dir(10)" };

@@ -37,6 +37,7 @@ fn main() -> anyhow::Result<()> {
         theta0: 0.85,
         arch_override: None,
         pipeline: PipelineMode::Streaming, // decode→absorb per arrival
+        decode_workers: 2,                 // shard the server decode sweep
     };
 
     println!(

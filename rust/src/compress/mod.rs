@@ -138,8 +138,24 @@ pub struct EncodeScratch {
 /// aggregator pushes buffers back once their contents are folded into the
 /// global state, so steady-state rounds decode with zero allocation.
 ///
-/// The pool is `Sync` (internally locked) so one instance can outlive a
-/// round and be shared with pool workers if an encode path ever wants it.
+/// The pool is `Sync` (internally locked), so one instance outlives a round
+/// and is shared by every decode worker when the drain is sharded
+/// (`DrainConfig::workers > 1`): each worker leases its output buffer with
+/// [`ScratchPool::take_copy`] and the absorb stage returns spent buffers
+/// with [`ScratchPool::put`]. The lock is held only for the push/pop, never
+/// across a decode.
+///
+/// ```
+/// use deltamask::compress::ScratchPool;
+/// let pool = ScratchPool::new();
+/// let buf = pool.take_copy(&[1.0, 2.0]); // pool is dry: allocates
+/// assert_eq!(buf, vec![1.0, 2.0]);
+/// pool.put(buf); // spent: back on the free list
+/// assert_eq!(pool.spares(), 1);
+/// let again = pool.take_copy(&[7.0]); // reuses the spare, no allocation
+/// assert_eq!(again, vec![7.0]);
+/// assert_eq!(pool.spares(), 0);
+/// ```
 #[derive(Debug, Default)]
 pub struct ScratchPool {
     bufs: std::sync::Mutex<Vec<Vec<f32>>>,
@@ -162,7 +178,8 @@ impl ScratchPool {
     /// Return a spent buffer for reuse.
     pub fn put(&self, buf: Vec<f32>) {
         // Keep the free list small: a round needs at most a handful of
-        // in-flight buffers (decode is serialized on the server thread).
+        // in-flight buffers (one per decode worker plus the bounded
+        // decode→absorb hand-off window).
         let mut bufs = self.bufs.lock().unwrap();
         if bufs.len() < 64 {
             bufs.push(buf);
@@ -190,6 +207,24 @@ pub trait UpdateCodec: Send + Sync {
     /// Encode reusing the caller's scratch buffers. The default ignores the
     /// scratch and allocates per call; hot-path codecs (DeltaMask) override.
     /// Must produce bytes identical to `encode`.
+    ///
+    /// ```
+    /// use deltamask::compress::{self, EncodeCtx, EncodeScratch};
+    /// let d = 64;
+    /// let theta_g = vec![0.4f32; d];
+    /// let theta_k = vec![0.6f32; d];
+    /// let mask_g = vec![0.0f32; d];
+    /// let mask_k: Vec<f32> = (0..d).map(|i| (i % 2) as f32).collect();
+    /// let ctx = EncodeCtx {
+    ///     d, theta_k: &theta_k, theta_g: &theta_g, mask_k: &mask_k,
+    ///     mask_g: &mask_g, s_k: &[], s_g: &[], kappa: 0.8, seed: 1,
+    /// };
+    /// let codec = compress::by_name("deltamask").unwrap();
+    /// let mut scratch = EncodeScratch::default();
+    /// let fresh = codec.encode(&ctx).unwrap();
+    /// let reused = codec.encode_with(&ctx, &mut scratch).unwrap();
+    /// assert_eq!(fresh.bytes, reused.bytes); // scratch never changes the wire
+    /// ```
     fn encode_with(&self, ctx: &EncodeCtx, scratch: &mut EncodeScratch) -> anyhow::Result<Encoded> {
         let _ = scratch;
         self.encode(ctx)
@@ -200,6 +235,33 @@ pub trait UpdateCodec: Send + Sync {
     /// reconstruction override. Must produce an update identical to
     /// `decode` — the batched kernels change *how* membership is queried,
     /// never what is decoded.
+    ///
+    /// ```
+    /// use deltamask::compress::{self, DecodeCtx, EncodeCtx, ScratchPool, Update};
+    /// let d = 64;
+    /// let theta_g = vec![0.4f32; d];
+    /// let theta_k = vec![0.6f32; d];
+    /// let mask_g = vec![0.0f32; d];
+    /// let mask_k: Vec<f32> = (0..d).map(|i| (i % 2) as f32).collect();
+    /// let codec = compress::by_name("deltamask").unwrap();
+    /// let enc = codec.encode(&EncodeCtx {
+    ///     d, theta_k: &theta_k, theta_g: &theta_g, mask_k: &mask_k,
+    ///     mask_g: &mask_g, s_k: &[], s_g: &[], kappa: 0.8, seed: 1,
+    /// }).unwrap();
+    ///
+    /// let dctx = DecodeCtx { d, mask_g: &mask_g, s_g: &[], seed: 1 };
+    /// let pool = ScratchPool::new();
+    /// let plain = codec.decode(&enc.bytes, &dctx).unwrap();
+    /// let pooled = codec.decode_pooled(&enc.bytes, &dctx, &pool).unwrap();
+    /// match (plain, pooled) {
+    ///     (Update::Mask(a), Update::Mask(b)) => {
+    ///         assert_eq!(a, b); // pooling never changes what is decoded
+    ///         pool.put(b);      // spent buffer back to the free list
+    ///     }
+    ///     _ => unreachable!(),
+    /// }
+    /// assert_eq!(pool.spares(), 1);
+    /// ```
     fn decode_pooled(
         &self,
         bytes: &[u8],

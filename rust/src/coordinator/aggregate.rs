@@ -1,15 +1,45 @@
 //! The server-side round drain: pull encoded updates off a [`Transport`]
 //! and feed an [`Aggregator`] — per-arrival (streaming) or behind the
-//! full-round barrier (batch). This is the decode→aggregate pipeline the
-//! runner used to hard-wire inline; it is generic over both the transport
-//! and the aggregation rule.
+//! full-round barrier (batch), decoded inline or fanned out to a pool of
+//! decode workers ([`DrainConfig`]). This is the decode→aggregate pipeline
+//! the runner used to hard-wire inline; it is generic over both the
+//! transport and the aggregation rule.
+//!
+//! ## Sharded decode
+//!
+//! With `DrainConfig::workers > 1` the drain splits into two stages:
+//!
+//! * **decode stage** — N scoped worker threads pull `(slot, Encoded)`
+//!   records off a shared queue and run [`UpdateCodec::decode_pooled`]
+//!   against the round plan's broadcast snapshot, leasing output buffers
+//!   from the shared [`ScratchPool`];
+//! * **absorb stage** — the draining thread folds finished decodes into the
+//!   aggregator as they complete and recycles the spent buffers back into
+//!   the pool.
+//!
+//! Decoding is per-record deterministic (the context is an immutable
+//! round-start snapshot) and conforming aggregators are arrival-order
+//! equivalent (see the [`Aggregator`] contract), so the sharded drain is
+//! **bitwise identical** to the serial path — property-tested across all 8
+//! codecs, both pipeline modes and many worker counts in
+//! `rust/tests/decode_workers.rs`. The results channel is bounded, so at
+//! most O(workers · d) decoded floats sit in the decode→absorb hand-off no
+//! matter how many arrivals pile up; pending arrivals queue in their
+//! compressed form. (The *aggregator* may buffer more behind that
+//! hand-off: `MaskServer`'s delta-family reorder window holds decoded
+//! out-of-order updates until their slot comes up — worst case O(K · d) —
+//! and sharded completion order makes reordering the norm, not the
+//! exception. Mask-family absorbs spend their buffer immediately, so the
+//! O(workers · d) bound is end-to-end for that family only.)
 
 use super::round::RoundPlan;
 use super::transport::{Payload, Transport};
 use super::PipelineMode;
 use crate::compress::{Encoded, ScratchPool, Update, UpdateCodec};
 use crate::util::timer::Stopwatch;
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
+use std::collections::VecDeque;
+use std::sync::{mpsc, Condvar, Mutex};
 
 /// Streaming aggregation sink: a round is `begin_round(K)` → K×`absorb` →
 /// `finish_round`. Implemented by `fl::server::MaskServer`; any other sink
@@ -18,7 +48,9 @@ use anyhow::{bail, Result};
 /// Contract (see `MaskServer` for the reference semantics): `absorb` must
 /// accept participant slots in any arrival order and produce state
 /// equivalent to slot-ordered application; `finish_round` publishes the new
-/// global state.
+/// global state. The sharded drain relies on this contract — decode workers
+/// complete out of order, so a sink that silently depended on slot-ordered
+/// `absorb` calls would diverge once `workers > 1`.
 pub trait Aggregator {
     fn begin_round(&mut self, expected: usize);
     fn absorb(&mut self, slot: usize, update: Update);
@@ -34,6 +66,51 @@ pub trait Aggregator {
     }
 }
 
+/// Server-side decode scheduling for one drained round: the pipeline mode
+/// plus the number of decode worker threads.
+///
+/// `workers == 1` decodes inline on the draining thread (the serial
+/// reference path); `workers > 1` shards decoding across that many scoped
+/// threads; `workers == 0` resolves to one worker per available core.
+/// All settings produce bitwise-identical aggregator state.
+///
+/// ```
+/// use deltamask::coordinator::{DrainConfig, PipelineMode};
+/// let serial = DrainConfig::serial(PipelineMode::Streaming);
+/// assert_eq!(serial.resolved_workers(), 1);
+/// let sharded = DrainConfig::new(PipelineMode::Batch, 4);
+/// assert_eq!(sharded.resolved_workers(), 4);
+/// assert!(DrainConfig::new(PipelineMode::Streaming, 0).resolved_workers() >= 1);
+/// ```
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DrainConfig {
+    /// Batch (full-round barrier) vs streaming (per-arrival absorb).
+    pub mode: PipelineMode,
+    /// Decode worker threads (1 = serial, 0 = one per available core).
+    pub workers: usize,
+}
+
+impl DrainConfig {
+    pub fn new(mode: PipelineMode, workers: usize) -> Self {
+        Self { mode, workers }
+    }
+
+    /// The single-threaded reference path (`workers = 1`).
+    pub fn serial(mode: PipelineMode) -> Self {
+        Self { mode, workers: 1 }
+    }
+
+    /// Effective worker count: `0` resolves to the available parallelism.
+    pub fn resolved_workers(&self) -> usize {
+        match self.workers {
+            0 => std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4),
+            n => n,
+        }
+    }
+}
+
 /// Deterministic per-slot accounting from one drained round. Kept per-slot
 /// (not running sums) so callers can reduce in slot order — f64 addition is
 /// order-sensitive and arrival order is not deterministic.
@@ -43,16 +120,24 @@ pub struct DrainReport {
     pub loss_by_slot: Vec<f64>,
     /// Client-side encode seconds, by participant slot.
     pub enc_by_slot: Vec<f64>,
-    /// Total server-side decode seconds (wall time, arrival order).
+    /// Total server-side decode compute seconds, summed over records. For
+    /// the serial path this equals the decode wall time; for the sharded
+    /// path it is the aggregate compute across workers (wall time is lower
+    /// — that gap is the speedup `benches/hotpaths.rs` tracks).
     pub dec_secs: f64,
+    /// Decode compute seconds attributed to each worker, indexed by worker
+    /// id (length = resolved worker count; the serial path reports one
+    /// entry). Sums to `dec_secs` up to f64 reduction order.
+    pub dec_by_worker: Vec<f64>,
 }
 
 impl DrainReport {
-    fn new(expected: usize) -> Self {
+    fn new(expected: usize, workers: usize) -> Self {
         Self {
             loss_by_slot: vec![0.0; expected],
             enc_by_slot: vec![0.0; expected],
             dec_secs: 0.0,
+            dec_by_worker: vec![0.0; workers],
         }
     }
 
@@ -66,12 +151,14 @@ impl DrainReport {
 }
 
 /// Drain one round's `plan.expected()` updates from `transport`, decode
-/// them against the plan's broadcast snapshot, and drive `agg` per `mode`.
+/// them against the plan's broadcast snapshot, and drive `agg` per `cfg`.
 ///
 /// Streaming: decode→absorb per arrival (the aggregator holds O(d) state).
-/// Batch: buffer every payload, then decode + absorb in slot order behind
-/// the barrier — the seed's reference behaviour. Both produce bitwise
-/// identical aggregator state (see `fl::server` module docs).
+/// Batch: buffer every payload, then decode + absorb behind the barrier —
+/// the seed's reference behaviour. With `cfg.workers > 1` decoding is
+/// sharded across a worker pool in either mode (see the module docs). All
+/// four combinations produce bitwise identical aggregator state (see
+/// `fl::server` module docs).
 ///
 /// Decoding draws its output buffers from `pool` and the aggregator's
 /// spent buffers flow back into it after every absorb, so a pool that
@@ -79,8 +166,109 @@ impl DrainReport {
 /// steady-state decode allocation-free.
 ///
 /// Errors if the uplink closes early, a client reports an in-band failure,
-/// a slot arrives twice, or decoding fails.
+/// a slot arrives twice, or decoding fails — in the sharded path a decode
+/// error surfaced by any worker aborts the round cleanly (pending work is
+/// dropped, every worker joins) before the error is returned.
+///
+/// ```
+/// use deltamask::compress::{self, ScratchPool};
+/// use deltamask::coordinator::{
+///     drain_round, ChannelTransport, DrainConfig, Payload, PipelineMode, RoundEngine,
+///     WireMessage,
+/// };
+/// use deltamask::fl::server::MaskServer;
+/// use deltamask::model::sample_mask_seeded;
+///
+/// // A 2-client round: plan it, encode each client's sampled mask...
+/// let d = 64;
+/// let theta = vec![0.5f32; d];
+/// let s = vec![0.0f32; d];
+/// let plan = RoundEngine::new(7, 2, 1.0, 0.8, 0.25, 1).plan(0, &theta, &s);
+/// let codec = compress::by_name("fedpm").unwrap();
+/// let (mut transport, sender) = ChannelTransport::new();
+/// for slot in 0..plan.expected() {
+///     let mut mask_k = Vec::new();
+///     sample_mask_seeded(&plan.theta_g, plan.client_seed(slot), &mut mask_k);
+///     let enc = codec
+///         .encode(&plan.encode_ctx(slot, &plan.theta_g, &mask_k, &[]))
+///         .unwrap();
+///     sender
+///         .send(WireMessage {
+///             round: 0,
+///             client_id: plan.participants[slot],
+///             slot,
+///             payload: Payload::Update(enc),
+///             enc_secs: 0.0,
+///             loss: 0.5,
+///         })
+///         .unwrap();
+/// }
+/// drop(sender); // all clients reported; the uplink closes
+///
+/// // ...then drain them into the Bayesian server on 2 decode workers.
+/// let mut server = MaskServer::with_theta0(d, 1.0, 0.5);
+/// let pool = ScratchPool::new();
+/// let report = drain_round(
+///     &mut transport,
+///     &plan,
+///     codec.as_ref(),
+///     &mut server,
+///     DrainConfig::new(PipelineMode::Streaming, 2),
+///     &pool,
+/// )
+/// .unwrap();
+/// assert_eq!(report.loss_by_slot, vec![0.5, 0.5]);
+/// assert_eq!(report.dec_by_worker.len(), 2);
+/// ```
 pub fn drain_round(
+    transport: &mut dyn Transport,
+    plan: &RoundPlan,
+    codec: &dyn UpdateCodec,
+    agg: &mut dyn Aggregator,
+    cfg: DrainConfig,
+    pool: &ScratchPool,
+) -> Result<DrainReport> {
+    let workers = cfg.resolved_workers();
+    if workers <= 1 {
+        drain_serial(transport, plan, codec, agg, cfg.mode, pool)
+    } else {
+        drain_sharded(transport, plan, codec, agg, cfg.mode, pool, workers)
+    }
+}
+
+/// Receive and validate the next wire message, recording its per-slot
+/// accounting. Shared by the serial and sharded paths so both reject the
+/// same malformed inputs with the same messages.
+fn recv_validated(
+    transport: &mut dyn Transport,
+    got: usize,
+    expected: usize,
+    seen: &mut [bool],
+    report: &mut DrainReport,
+) -> Result<(usize, Encoded)> {
+    let msg = match transport.recv() {
+        Some(msg) => msg,
+        None => bail!("uplink closed after {got}/{expected} updates"),
+    };
+    let enc = match msg.payload {
+        Payload::Update(enc) => enc,
+        Payload::Failed(err) => bail!("client {} failed: {err}", msg.client_id),
+    };
+    // Transport data must never panic the server, so bad slots are a
+    // recoverable error here; `MaskServer::absorb` re-checks the same
+    // invariant with a panic to protect Aggregator drivers other than
+    // this loop (the two layers are intentionally redundant).
+    if msg.slot >= expected || seen[msg.slot] {
+        bail!("bad or duplicate participant slot {}", msg.slot);
+    }
+    seen[msg.slot] = true;
+    report.loss_by_slot[msg.slot] = msg.loss as f64;
+    report.enc_by_slot[msg.slot] = msg.enc_secs;
+    Ok((msg.slot, enc))
+}
+
+/// The single-threaded reference drain (`DrainConfig::serial`).
+fn drain_serial(
     transport: &mut dyn Transport,
     plan: &RoundPlan,
     codec: &dyn UpdateCodec,
@@ -89,7 +277,7 @@ pub fn drain_round(
     pool: &ScratchPool,
 ) -> Result<DrainReport> {
     let expected = plan.expected();
-    let mut report = DrainReport::new(expected);
+    let mut report = DrainReport::new(expected, 1);
     let mut seen = vec![false; expected];
     let mut buffered: Vec<Option<Encoded>> = match mode {
         PipelineMode::Streaming => Vec::new(),
@@ -100,35 +288,18 @@ pub fn drain_round(
         agg.begin_round(expected);
     }
     for got in 0..expected {
-        let msg = match transport.recv() {
-            Some(msg) => msg,
-            None => bail!("uplink closed after {got}/{expected} updates"),
-        };
-        let enc = match msg.payload {
-            Payload::Update(enc) => enc,
-            Payload::Failed(err) => bail!("client {} failed: {err}", msg.client_id),
-        };
-        // Transport data must never panic the server, so bad slots are a
-        // recoverable error here; `MaskServer::absorb` re-checks the same
-        // invariant with a panic to protect Aggregator drivers other than
-        // this loop (the two layers are intentionally redundant).
-        if msg.slot >= expected || seen[msg.slot] {
-            bail!("bad or duplicate participant slot {}", msg.slot);
-        }
-        seen[msg.slot] = true;
-        report.loss_by_slot[msg.slot] = msg.loss as f64;
-        report.enc_by_slot[msg.slot] = msg.enc_secs;
+        let (slot, enc) = recv_validated(transport, got, expected, &mut seen, &mut report)?;
         match mode {
             PipelineMode::Streaming => {
                 let t = Stopwatch::new();
-                let update = codec.decode_pooled(&enc.bytes, &plan.decode_ctx(msg.slot), pool)?;
+                let update = codec.decode_pooled(&enc.bytes, &plan.decode_ctx(slot), pool)?;
                 report.dec_secs += t.elapsed_secs();
-                agg.absorb(msg.slot, update);
+                agg.absorb(slot, update);
                 while let Some(buf) = agg.reclaim_buffer() {
                     pool.put(buf);
                 }
             }
-            PipelineMode::Batch => buffered[msg.slot] = Some(enc),
+            PipelineMode::Batch => buffered[slot] = Some(enc),
         }
     }
     match mode {
@@ -149,6 +320,213 @@ pub fn drain_round(
             agg.finish_round();
         }
     }
+    report.dec_by_worker[0] = report.dec_secs;
+    Ok(report)
+}
+
+/// MPMC job queue feeding the decode workers: the draining thread pushes
+/// `(slot, Encoded)` records, workers pop them under a condvar. `close`
+/// stops intake but lets workers drain what remains; `abort` additionally
+/// drops pending jobs (error shutdown).
+struct DecodeQueue {
+    state: Mutex<QueueState>,
+    ready: Condvar,
+}
+
+struct QueueState {
+    jobs: VecDeque<(usize, Encoded)>,
+    closed: bool,
+}
+
+impl DecodeQueue {
+    fn new() -> Self {
+        Self {
+            state: Mutex::new(QueueState {
+                jobs: VecDeque::new(),
+                closed: false,
+            }),
+            ready: Condvar::new(),
+        }
+    }
+
+    fn push(&self, slot: usize, enc: Encoded) {
+        self.state.lock().unwrap().jobs.push_back((slot, enc));
+        self.ready.notify_one();
+    }
+
+    fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.ready.notify_all();
+    }
+
+    fn abort(&self) {
+        let mut q = self.state.lock().unwrap();
+        q.closed = true;
+        q.jobs.clear();
+        drop(q);
+        self.ready.notify_all();
+    }
+
+    /// Next job, blocking until one is available; `None` once the queue is
+    /// closed and drained.
+    fn next(&self) -> Option<(usize, Encoded)> {
+        let mut q = self.state.lock().unwrap();
+        loop {
+            if let Some(job) = q.jobs.pop_front() {
+                return Some(job);
+            }
+            if q.closed {
+                return None;
+            }
+            q = self.ready.wait(q).unwrap();
+        }
+    }
+}
+
+/// Aborts the queue when dropped, so decode workers never outlive an
+/// unwinding drain (e.g. an aggregator panic on the absorb stage).
+struct QueueAbortGuard<'a>(&'a DecodeQueue);
+
+impl Drop for QueueAbortGuard<'_> {
+    fn drop(&mut self) {
+        self.0.abort();
+    }
+}
+
+/// One worker's finished decode, tagged for per-worker accounting.
+struct DecodedRecord {
+    slot: usize,
+    worker: usize,
+    dec_secs: f64,
+    update: Result<Update>,
+}
+
+/// Fold one finished decode into the aggregator and recycle spent buffers.
+fn absorb_decoded(
+    rec: DecodedRecord,
+    report: &mut DrainReport,
+    agg: &mut dyn Aggregator,
+    pool: &ScratchPool,
+) -> Result<()> {
+    let update = rec
+        .update
+        .map_err(|e| anyhow!("decode failed for slot {}: {e}", rec.slot))?;
+    report.dec_secs += rec.dec_secs;
+    report.dec_by_worker[rec.worker] += rec.dec_secs;
+    agg.absorb(rec.slot, update);
+    while let Some(buf) = agg.reclaim_buffer() {
+        pool.put(buf);
+    }
+    Ok(())
+}
+
+/// The sharded drain: N decode workers + the absorb stage on the draining
+/// thread. See the module docs for the stage layout and the shutdown
+/// discipline.
+fn drain_sharded(
+    transport: &mut dyn Transport,
+    plan: &RoundPlan,
+    codec: &dyn UpdateCodec,
+    agg: &mut dyn Aggregator,
+    mode: PipelineMode,
+    pool: &ScratchPool,
+    workers: usize,
+) -> Result<DrainReport> {
+    let expected = plan.expected();
+    let mut report = DrainReport::new(expected, workers);
+    let mut seen = vec![false; expected];
+    let queue = DecodeQueue::new();
+
+    if mode == PipelineMode::Streaming {
+        agg.begin_round(expected);
+    }
+
+    let drained: Result<()> = std::thread::scope(|scope| {
+        // Bounded results channel: at most `2 × workers` decoded d-length
+        // updates sit between the workers and the absorb stage, so server
+        // memory stays O(workers · d) however arrivals burst (a worker with
+        // a finished decode blocks on `send` until the absorber catches
+        // up). Created inside the scope so an unwinding absorb stage drops
+        // the receiver before the scope joins the workers.
+        let (tx, rx) = mpsc::sync_channel::<DecodedRecord>(workers * 2);
+        let _abort_on_unwind = QueueAbortGuard(&queue);
+        for worker in 0..workers {
+            let tx = tx.clone();
+            let queue = &queue;
+            scope.spawn(move || {
+                while let Some((slot, enc)) = queue.next() {
+                    let t = Stopwatch::new();
+                    let update = codec.decode_pooled(&enc.bytes, &plan.decode_ctx(slot), pool);
+                    let rec = DecodedRecord {
+                        slot,
+                        worker,
+                        dec_secs: t.elapsed_secs(),
+                        update,
+                    };
+                    if tx.send(rec).is_err() {
+                        return; // absorb stage bailed; discard and exit
+                    }
+                }
+            });
+        }
+        // Only worker clones keep the channel open: once every worker has
+        // exited, `rx` disconnects and the recv loops below terminate.
+        drop(tx);
+
+        let mut run = || -> Result<()> {
+            let mut absorbed = 0usize;
+            match mode {
+                PipelineMode::Streaming => {
+                    for got in 0..expected {
+                        let (slot, enc) =
+                            recv_validated(transport, got, expected, &mut seen, &mut report)?;
+                        queue.push(slot, enc);
+                        // Opportunistically absorb finished decodes between
+                        // arrivals: keeps the in-flight set small and
+                        // overlaps aggregation with transport waits.
+                        while let Ok(rec) = rx.try_recv() {
+                            absorb_decoded(rec, &mut report, agg, pool)?;
+                            absorbed += 1;
+                        }
+                    }
+                }
+                PipelineMode::Batch => {
+                    // Barrier first (the reference semantics), then fan the
+                    // buffered records out to the workers in slot order.
+                    let mut buffered: Vec<Option<Encoded>> = vec![None; expected];
+                    for got in 0..expected {
+                        let (slot, enc) =
+                            recv_validated(transport, got, expected, &mut seen, &mut report)?;
+                        buffered[slot] = Some(enc);
+                    }
+                    agg.begin_round(expected);
+                    for (slot, enc) in buffered.into_iter().enumerate() {
+                        queue.push(slot, enc.expect("all slots arrived"));
+                    }
+                }
+            }
+            queue.close();
+            while absorbed < expected {
+                let rec = rx
+                    .recv()
+                    .map_err(|_| anyhow!("decode workers exited early"))?;
+                absorb_decoded(rec, &mut report, agg, pool)?;
+                absorbed += 1;
+            }
+            Ok(())
+        };
+        let out = run();
+        if out.is_err() {
+            // Clean abort: drop pending jobs, then drain the results
+            // channel so workers blocked on the bounded `send` can exit
+            // before the scope joins them. Their decodes are discarded.
+            queue.abort();
+            while rx.recv().is_ok() {}
+        }
+        out
+    });
+    drained?;
+    agg.finish_round();
     Ok(report)
 }
 
@@ -158,6 +536,8 @@ mod tests {
     use crate::compress;
     use crate::coordinator::round::RoundEngine;
     use crate::coordinator::transport::{ChannelTransport, WireMessage};
+    use crate::fl::server::MaskServer;
+    use crate::model::sample_mask_seeded;
 
     #[derive(Default)]
     struct Spy {
@@ -197,6 +577,17 @@ mod tests {
         }
     }
 
+    /// A valid FedPM record for `slot` of `plan` (decodable by any worker).
+    fn fedpm_record(plan: &RoundPlan, slot: usize) -> Payload {
+        let codec = compress::by_name("fedpm").unwrap();
+        let mut mask_k = Vec::new();
+        sample_mask_seeded(&plan.theta_g, plan.client_seed(slot), &mut mask_k);
+        let enc = codec
+            .encode(&plan.encode_ctx(slot, &plan.theta_g, &mask_k, &[]))
+            .unwrap();
+        Payload::Update(enc)
+    }
+
     #[test]
     fn failed_client_surfaces_as_error() {
         let plan = plan_of(2);
@@ -212,7 +603,7 @@ mod tests {
             &plan,
             codec.as_ref(),
             &mut spy,
-            PipelineMode::Batch,
+            DrainConfig::serial(PipelineMode::Batch),
             &ScratchPool::new(),
         )
         .unwrap_err();
@@ -236,7 +627,7 @@ mod tests {
             &plan,
             codec.as_ref(),
             &mut spy,
-            PipelineMode::Batch,
+            DrainConfig::serial(PipelineMode::Batch),
             &ScratchPool::new(),
         )
         .unwrap_err();
@@ -255,11 +646,61 @@ mod tests {
             &plan,
             codec.as_ref(),
             &mut spy,
-            PipelineMode::Streaming,
+            DrainConfig::serial(PipelineMode::Streaming),
             &ScratchPool::new(),
         )
         .unwrap_err();
         assert!(err.to_string().contains("0/3"), "{err}");
         assert_eq!(spy.begun, Some(3), "streaming begins before the drain");
+    }
+
+    #[test]
+    fn sharded_drain_absorbs_every_slot_exactly_once() {
+        let n = 5;
+        let plan = plan_of(n);
+        let codec = compress::by_name("fedpm").unwrap();
+        for mode in [PipelineMode::Streaming, PipelineMode::Batch] {
+            let (mut transport, sender) = ChannelTransport::new();
+            for slot in (0..n).rev() {
+                sender.send(msg(slot, fedpm_record(&plan, slot))).unwrap();
+            }
+            drop(sender);
+            let mut spy = Spy::default();
+            let report = drain_round(
+                &mut transport,
+                &plan,
+                codec.as_ref(),
+                &mut spy,
+                DrainConfig::new(mode, 3),
+                &ScratchPool::new(),
+            )
+            .unwrap();
+            assert_eq!(spy.begun, Some(n), "{mode:?}");
+            assert!(spy.finished, "{mode:?}");
+            let mut slots = spy.absorbed.clone();
+            slots.sort_unstable();
+            assert_eq!(slots, (0..n).collect::<Vec<_>>(), "{mode:?}");
+            assert_eq!(report.dec_by_worker.len(), 3, "{mode:?}");
+        }
+    }
+
+    #[test]
+    fn sharded_early_close_aborts_cleanly() {
+        let plan = plan_of(4);
+        let codec = compress::by_name("fedpm").unwrap();
+        let (mut transport, sender) = ChannelTransport::new();
+        sender.send(msg(1, fedpm_record(&plan, 1))).unwrap();
+        drop(sender); // the other three clients never report
+        let mut agg = MaskServer::with_theta0(16, 1.0, 0.5);
+        let err = drain_round(
+            &mut transport,
+            &plan,
+            codec.as_ref(),
+            &mut agg,
+            DrainConfig::new(PipelineMode::Streaming, 2),
+            &ScratchPool::new(),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("1/4"), "{err}");
     }
 }

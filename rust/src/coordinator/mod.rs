@@ -18,7 +18,11 @@
 //! * [`aggregate`] — the server-side drain loop ([`drain_round`]) over an
 //!   [`Aggregator`] sink: per-arrival decode→absorb in streaming mode, the
 //!   old full-round barrier in batch mode, with deterministic per-slot
-//!   accounting either way.
+//!   accounting either way. A [`DrainConfig`] additionally shards the
+//!   decode stage across N worker threads (each leasing buffers from the
+//!   shared [`ScratchPool`]) while the absorb stage merges completions on
+//!   the draining thread — bitwise identical to the serial path at any
+//!   worker count, wired to the CLI as `--decode-workers N`.
 //! * [`pool`] — a self-scheduling (work-stealing) [`ClientPool`]: workers
 //!   pull the next client job from a shared queue instead of being handed a
 //!   fixed round-robin chunk, so stragglers no longer idle whole threads,
@@ -34,14 +38,19 @@
 //! whose mask-family pseudo-count arithmetic is exactly order-invariant
 //! (integer-valued f32 adds) and whose delta-family FedAvg is applied in
 //! participant order through a reorder window, so a streaming round is
-//! bitwise identical to the batch barrier regardless of arrival order.
+//! bitwise identical to the batch barrier regardless of arrival order —
+//! and, for the same reason, regardless of how many decode workers race
+//! to produce those arrivals.
+//!
+//! The full layer map, the round lifecycle and the wire-format invariants
+//! each layer guarantees are documented in `docs/ARCHITECTURE.md`.
 
 pub mod aggregate;
 pub mod pool;
 pub mod round;
 pub mod transport;
 
-pub use aggregate::{drain_round, Aggregator, DrainReport};
+pub use aggregate::{drain_round, Aggregator, DrainConfig, DrainReport};
 // Re-exported so coordinator users thread the decode buffer pool without
 // reaching into `compress` (the pool type lives beside the codecs because
 // `decode_pooled` is a codec method).

@@ -82,6 +82,20 @@ impl RoundPlan {
 
 /// Owns the cross-round scheduling state: the participant-sampling RNG and
 /// the experiment geometry (N, ρ, κ schedule, horizon).
+///
+/// ```
+/// use deltamask::coordinator::RoundEngine;
+/// let theta = vec![0.5f32; 8];
+/// let s = vec![0.0f32; 8];
+/// // seed 42, 4 clients, ρ=1 (full participation), κ₀=0.8 → 0.25, 10 rounds.
+/// let mut engine = RoundEngine::new(42, 4, 1.0, 0.8, 0.25, 10);
+/// let plan = engine.plan(0, &theta, &s);
+/// assert_eq!(plan.expected(), 4); // ρ=1 ⇒ every client participates
+/// assert_eq!(plan.d(), 8);
+/// // Decode contexts borrow the plan's broadcast snapshot, never live state.
+/// let ctx = plan.decode_ctx(2);
+/// assert_eq!(ctx.seed, plan.client_seed(2));
+/// ```
 #[derive(Debug)]
 pub struct RoundEngine {
     n_clients: usize,

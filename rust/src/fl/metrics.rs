@@ -12,11 +12,20 @@ pub struct RoundMetrics {
     pub mean_bpp: f64,
     pub enc_ms_mean: f64,
     pub dec_ms_mean: f64,
-    /// Total server-side decode wall time for the round in ms — the Eq. 5
+    /// Total server-side decode compute for the round in ms — the Eq. 5
     /// reconstruction kernel cost the server actually paid, as opposed to
     /// `dec_ms_mean`'s per-client mean. Lets `--pipeline batch|streaming`
-    /// A/Bs compare *compute* alongside the byte/latency accounting.
+    /// A/Bs compare *compute* alongside the byte/latency accounting. With
+    /// `decode_workers > 1` this is summed across workers (wall time is
+    /// lower — that gap is the sharding speedup).
     pub dec_kernel_ms: f64,
+    /// Server decode worker threads that drained this round (1 = serial).
+    pub decode_workers: usize,
+    /// Decode compute ms attributed to each worker, indexed by worker id
+    /// (length = `decode_workers` for codec rounds; empty for the
+    /// weight-space baselines, which have no server decode stage). A
+    /// lopsided split flags shard imbalance.
+    pub dec_worker_ms: Vec<f64>,
     pub train_loss: f64,
     pub accuracy: Option<f64>,
     /// Which server pipeline produced this round: `"streaming"`
@@ -126,6 +135,11 @@ impl ExperimentResult {
                     .set("kappa", Json::Num(r.kappa))
                     .set("pipeline", Json::from_str_(r.pipeline))
                     .set("dec_kernel_ms", Json::Num(r.dec_kernel_ms))
+                    .set("decode_workers", Json::Num(r.decode_workers as f64))
+                    .set(
+                        "dec_worker_ms",
+                        Json::Arr(r.dec_worker_ms.iter().map(|&v| Json::Num(v)).collect()),
+                    )
                     .set("bpp", Json::Num(r.mean_bpp))
                     .set("loss", Json::Num(r.train_loss))
                     .set(
@@ -168,6 +182,8 @@ mod tests {
             enc_ms_mean: 1.0,
             dec_ms_mean: 2.0,
             dec_kernel_ms: 4.0,
+            decode_workers: 2,
+            dec_worker_ms: vec![2.5, 1.5],
             train_loss: 0.5,
             accuracy: acc,
             pipeline: "streaming",
@@ -197,6 +213,11 @@ mod tests {
         let j = r.to_json().to_string_pretty();
         let back = crate::util::json::Json::parse(&j).unwrap();
         assert_eq!(back.get("method").unwrap().as_str().unwrap(), "deltamask");
-        assert!(back.get("rounds").unwrap().as_arr().unwrap().len() == 1);
+        let rounds = back.get("rounds").unwrap().as_arr().unwrap();
+        assert_eq!(rounds.len(), 1);
+        assert_eq!(rounds[0].get("decode_workers").unwrap().as_usize().unwrap(), 2);
+        let per_worker = rounds[0].get("dec_worker_ms").unwrap().as_arr().unwrap();
+        assert_eq!(per_worker.len(), 2);
+        assert_eq!(per_worker[0].as_f64().unwrap(), 2.5);
     }
 }

@@ -82,6 +82,28 @@ pub struct ExperimentConfig {
     /// barrier, kept for A/B comparisons). Both produce bitwise-identical
     /// trajectories; see `coordinator::PipelineMode`.
     pub pipeline: crate::coordinator::PipelineMode,
+    /// Server decode worker threads (`--decode-workers N`): 1 decodes
+    /// inline on the draining thread (the serial reference path), N > 1
+    /// shards the Eq. 5 decode sweep across N scoped workers, 0 uses one
+    /// worker per available core. Bitwise identical at any setting; see
+    /// `coordinator::DrainConfig`.
+    pub decode_workers: usize,
+}
+
+/// Default decode-worker count: `$DELTAMASK_DECODE_WORKERS` when set (CI's
+/// tier-1 job re-runs the `fl_integration` suite with `=4` to exercise the
+/// sharded server path end-to-end), else 1 (serial).
+///
+/// Panics if the variable is set but not a non-negative integer — a
+/// malformed value silently falling back to the serial path would let the
+/// CI sharded re-run pass while exercising nothing.
+pub fn decode_workers_from_env() -> usize {
+    match std::env::var("DELTAMASK_DECODE_WORKERS") {
+        Ok(v) => v.parse().unwrap_or_else(|_| {
+            panic!("DELTAMASK_DECODE_WORKERS must be a non-negative integer, got '{v}'")
+        }),
+        Err(_) => 1,
+    }
 }
 
 impl Default for ExperimentConfig {
@@ -107,6 +129,7 @@ impl Default for ExperimentConfig {
             theta0: 0.85,
             arch_override: None,
             pipeline: crate::coordinator::PipelineMode::default(),
+            decode_workers: decode_workers_from_env(),
         }
     }
 }

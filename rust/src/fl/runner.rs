@@ -14,8 +14,8 @@ use super::server::MaskServer;
 use super::ExperimentConfig;
 use crate::compress::UpdateCodec;
 use crate::coordinator::{
-    drain_round, ChannelTransport, ClientPool, Payload, RoundEngine, RoundPlan, ScratchPool,
-    WireMessage,
+    drain_round, ChannelTransport, ClientPool, DrainConfig, Payload, RoundEngine, RoundPlan,
+    ScratchPool, WireMessage,
 };
 use crate::model::backend::{Backend, FtState, LpState, ModelParams};
 use crate::model::{accuracy, init_params, sample_mask_seeded};
@@ -28,6 +28,9 @@ struct RoundTally {
     bits: f64,
     enc_secs: f64,
     dec_secs: f64,
+    /// Decode compute seconds attributed to each decode worker
+    /// (`coordinator::DrainReport::dec_by_worker`).
+    dec_by_worker: Vec<f64>,
     loss: f64,
 }
 
@@ -228,6 +231,7 @@ impl<'a> Runner<'a> {
                 None
             };
             let kf = plan.expected() as f64;
+            let dec_worker_ms: Vec<f64> = tally.dec_by_worker.iter().map(|s| s * 1e3).collect();
             rounds.push(RoundMetrics {
                 round,
                 kappa: plan.kappa,
@@ -236,6 +240,8 @@ impl<'a> Runner<'a> {
                 enc_ms_mean: tally.enc_secs / kf * 1e3,
                 dec_ms_mean: tally.dec_secs / kf * 1e3,
                 dec_kernel_ms: tally.dec_secs * 1e3,
+                decode_workers: dec_worker_ms.len().max(1),
+                dec_worker_ms,
                 train_loss: tally.loss / kf,
                 accuracy: acc,
                 pipeline: self.cfg.pipeline.as_str(),
@@ -302,19 +308,20 @@ impl<'a> Runner<'a> {
             }
         };
 
-        let pipeline = cfg.pipeline;
+        let drain_cfg = DrainConfig::new(cfg.pipeline, cfg.decode_workers);
         let server = &mut self.server;
         let dec_pool = &self.scratch;
         let server_loop = move || -> Result<RoundTally> {
             // All decoding + aggregation happens inside the coordinator's
             // drain loop; the runner only reduces the report.
-            let report = drain_round(&mut channel, plan, codec, server, pipeline, dec_pool)?;
+            let report = drain_round(&mut channel, plan, codec, server, drain_cfg, dec_pool)?;
             Ok(RoundTally {
                 // Exact byte accounting from the transport (integer-valued,
                 // so order-independent).
                 bits: channel.stats().sent_payload_bytes as f64 * 8.0,
                 enc_secs: report.total_enc_secs(),
                 dec_secs: report.dec_secs,
+                dec_by_worker: report.dec_by_worker,
                 loss: report.total_loss(),
             })
         };
@@ -471,6 +478,8 @@ impl<'a> Runner<'a> {
                 enc_ms_mean: 0.0,
                 dec_ms_mean: 0.0,
                 dec_kernel_ms: 0.0,
+                decode_workers: 1,
+                dec_worker_ms: Vec::new(),
                 train_loss: loss / participants.len() as f64,
                 accuracy: acc,
                 pipeline: self.cfg.pipeline.as_str(),
@@ -564,6 +573,8 @@ impl<'a> Runner<'a> {
                 enc_ms_mean: 0.0,
                 dec_ms_mean: 0.0,
                 dec_kernel_ms: 0.0,
+                decode_workers: 1,
+                dec_worker_ms: Vec::new(),
                 train_loss: loss / participants.len() as f64,
                 accuracy: acc,
                 pipeline: self.cfg.pipeline.as_str(),

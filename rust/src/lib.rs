@@ -8,8 +8,9 @@
 //!   the [`coordinator`] subsystem (transport-agnostic round engine:
 //!   `RoundPlan`/`RoundEngine` for sampling, κ scheduling and shared-seed
 //!   mask derivation; a `Transport` carrying encoded updates with wire
-//!   accounting; a work-stealing `ClientPool`; and the batch-vs-streaming
-//!   `PipelineMode`), and the [`fl`] experiment layer on top of it
+//!   accounting; a work-stealing `ClientPool`; the batch-vs-streaming
+//!   `PipelineMode`; and a `DrainConfig`-sharded server decode pool wired
+//!   to `--decode-workers`), and the [`fl`] experiment layer on top of it
 //!   (state ownership, the streaming Bayesian [`fl::server::MaskServer`],
 //!   baselines, metrics). Updates are decoded and absorbed per-arrival —
 //!   the server never materializes a round's O(K·d) update set — plus the
@@ -25,10 +26,19 @@
 //! (behind the `xla` cargo feature; without it a stub reports the missing
 //! integration and the pure-rust [`native`] backend drives everything).
 //!
-//! See `DESIGN.md` for the full system inventory and the per-experiment
-//! index mapping every table/figure of the paper to a bench target.
+//! ## Documentation map
 //!
-//! ## Hot-path performance tracking (`BENCH_hotpaths.json`)
+//! * **`docs/ARCHITECTURE.md`** — the contributor-facing layer map
+//!   (filters → codec → compress → coordinator → fl), the round lifecycle
+//!   (plan → encode → wire → decode → absorb → finish), where the sharded
+//!   decode workers sit, and the wire-format invariants each layer
+//!   guarantees. Read it before touching the coordinator or a codec.
+//! * **`README.md`** — build/run/test quickstart and the CLI tour.
+//! * **`benches/README.md`** — the tracked hot-path suite, the
+//!   `BENCH_hotpaths.json` schema (`deltamask-hotpaths-v1`), how to
+//!   regenerate it, and how CI's `bench-smoke` job gates kernel parity.
+//!
+//! ## Hot-path posture (summary)
 //!
 //! The encode→wire→decode hot path runs on **batched monomorphic kernels**
 //! (blocked filter membership via `MembershipFilter::{contains_batch,
@@ -36,36 +46,13 @@
 //! unrolled matmuls) with **reusable scratch** (`compress::EncodeScratch`
 //! per client session, a `compress::ScratchPool` of decode buffers cycling
 //! through `coordinator::drain_round` ↔ `Aggregator::reclaim_buffer`), so
-//! steady-state rounds allocate nothing on the wire path. Every batched
-//! kernel is parity-locked to a retained scalar oracle — it changes *how*
-//! membership is queried, never what is encoded; all 8 codecs stay
-//! bitwise-identical on the wire.
-//!
-//! `benches/hotpaths.rs` times each kernel against its scalar oracle and
-//! writes `BENCH_hotpaths.json` at the repo root. Regenerate with:
-//!
-//! ```text
-//! cargo bench --bench hotpaths            # full sweep, d ∈ {1e5, 1e6, 1e7}
-//! cargo bench --bench hotpaths -- --smoke # CI scale (the bench-smoke job)
-//! ```
-//!
-//! Schema (`deltamask-hotpaths-v1`):
-//!
-//! ```text
-//! { "schema":  "deltamask-hotpaths-v1",
-//!   "provenance": <how this file was produced>,
-//!   "smoke":   <bool>, "iters": <n>, "warmup": <n>,
-//!   "kernels": [ { "name": <kernel id, e.g. "bfuse8_decode_d1000000">,
-//!                  "scalar_secs":  <min over iters, scalar oracle>,
-//!                  "batched_secs": <min over iters, batched kernel>,
-//!                  "speedup":      <scalar_secs / batched_secs>,
-//!                  "parity":       <bitwise agreement, asserted> } ],
-//!   "tracked": [ { "name": <png/deflate throughput id>, "secs": <min> } ] }
-//! ```
-//!
-//! PR-over-PR regression checks diff `kernels[*].batched_secs` (and the
-//! `tracked` throughputs) between runs on the same machine; `parity` must
-//! always be `true` — the bench exits non-zero otherwise.
+//! steady-state rounds allocate nothing on the wire path — and the server
+//! decode sweep itself shards across a worker pool
+//! ([`coordinator::DrainConfig`], CLI `--decode-workers N`). Every batched
+//! or sharded variant is parity-locked to a retained scalar/serial oracle:
+//! it changes *how* work is scheduled or queried, never what is encoded —
+//! all 8 codecs stay bitwise-identical on the wire and in the aggregate.
+//! `benches/hotpaths.rs` asserts this on every run.
 
 pub mod bench;
 pub mod codec;

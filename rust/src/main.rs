@@ -10,12 +10,18 @@
 //!   deltamask train --method deltamask --dataset cifar100 --rounds 30
 //!   deltamask train --backend xla --arch test --dataset cifar10
 //!   deltamask train --pipeline batch --method fedpm   (A/B the old barrier)
+//!   deltamask train --decode-workers 8    (shard server decode; 0 = cores)
 //!   deltamask sweep --datasets cifar10,svhn --methods deltamask,fedpm
 //!   deltamask filters --entries 100000
+//!
+//! The layer map and round lifecycle behind these commands are documented
+//! in docs/ARCHITECTURE.md.
 
 use deltamask::bench::Table;
 use deltamask::coordinator::PipelineMode;
-use deltamask::fl::{run_experiment, BackendKind, ExperimentConfig, HeadInit};
+use deltamask::fl::{
+    decode_workers_from_env, run_experiment, BackendKind, ExperimentConfig, HeadInit,
+};
 use deltamask::util::cli::Args;
 
 fn parse_cfg(args: &Args) -> ExperimentConfig {
@@ -48,6 +54,7 @@ fn parse_cfg(args: &Args) -> ExperimentConfig {
         theta0: args.f64("theta0", 0.85) as f32,
         arch_override: None,
         pipeline: PipelineMode::from_args(args),
+        decode_workers: args.usize("decode-workers", decode_workers_from_env()),
     };
     if let Some(w) = args.get("width") {
         let w: usize = w.parse().expect("--width must be an integer");
@@ -59,7 +66,7 @@ fn parse_cfg(args: &Args) -> ExperimentConfig {
 fn cmd_train(args: &Args) -> anyhow::Result<()> {
     let cfg = parse_cfg(args);
     eprintln!(
-        "training: method={} dataset={} arch={} d={} N={} R={} rho={} alpha={} backend={:?} pipeline={}",
+        "training: method={} dataset={} arch={} d={} N={} R={} rho={} alpha={} backend={:?} pipeline={} decode_workers={}",
         cfg.method,
         cfg.dataset,
         cfg.arch,
@@ -69,7 +76,8 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         cfg.rho,
         cfg.dirichlet_alpha,
         cfg.backend,
-        cfg.pipeline.as_str()
+        cfg.pipeline.as_str(),
+        cfg.decode_workers
     );
     let res = run_experiment(&cfg)?;
     for r in &res.rounds {

@@ -1,0 +1,197 @@
+//! Decode-worker determinism suite: the sharded server drain
+//! (`DrainConfig::workers > 1`) must be **bitwise identical** to the serial
+//! reference path for every codec, both pipeline modes and any worker
+//! count — and a malformed record surfaced by a worker must abort the
+//! round cleanly (no hang, no panic, every worker joined).
+
+use deltamask::compress::{self, Encoded, ScratchPool};
+use deltamask::coordinator::{
+    drain_round, ChannelTransport, DrainConfig, DrainReport, Payload, PipelineMode, RoundEngine,
+    RoundPlan, WireMessage,
+};
+use deltamask::fl::server::MaskServer;
+use deltamask::model::sample_mask_seeded;
+use deltamask::util::rng::Xoshiro256pp;
+
+fn logit(p: f32) -> f32 {
+    let p = p.clamp(1e-6, 1.0 - 1e-6);
+    (p / (1.0 - p)).ln()
+}
+
+/// A plausible round for `codec`: global state, a plan, and one realistic
+/// encoded update per slot (drifted posteriors, shared-seed masks, score
+/// mirrors — the same recipe as the fl_integration property tests).
+fn round_fixture(name: &str, d: usize, k: usize, trial: u64) -> (RoundPlan, Vec<Encoded>) {
+    let codec = compress::by_name(name).unwrap();
+    let mut rng = Xoshiro256pp::new(0xD0_0D ^ trial.wrapping_mul(0x9e37_79b9));
+    let theta_g: Vec<f32> = (0..d).map(|_| 0.05 + 0.9 * rng.next_f32()).collect();
+    let s_g: Vec<f32> = theta_g.iter().map(|&p| logit(p)).collect();
+    let mut engine = RoundEngine::new(trial, k, 1.0, 0.8, 0.25, 3);
+    let plan = engine.plan(0, &theta_g, &s_g);
+    let mut encs = Vec::new();
+    for slot in 0..plan.expected() {
+        let theta_k: Vec<f32> = theta_g
+            .iter()
+            .map(|&p| (p + 0.3 * (rng.next_f32() - 0.5)).clamp(0.01, 0.99))
+            .collect();
+        let s_k: Vec<f32> = theta_k.iter().map(|&p| logit(p)).collect();
+        let mut mask_k = Vec::new();
+        sample_mask_seeded(&theta_k, plan.seed, &mut mask_k);
+        let ectx = plan.encode_ctx(slot, &theta_k, &mask_k, &s_k);
+        encs.push(codec.encode(&ectx).unwrap_or_else(|e| panic!("{name}: {e}")));
+    }
+    (plan, encs)
+}
+
+/// Send `encs` through a fresh channel in `order`, then drain into a fresh
+/// server under `cfg`.
+fn drain_into(
+    name: &str,
+    plan: &RoundPlan,
+    encs: &[Encoded],
+    order: &[usize],
+    cfg: DrainConfig,
+) -> (MaskServer, DrainReport) {
+    let codec = compress::by_name(name).unwrap();
+    let (mut channel, sender) = ChannelTransport::new();
+    for &slot in order {
+        sender
+            .send(WireMessage {
+                round: plan.round,
+                client_id: plan.participants[slot],
+                slot,
+                payload: Payload::Update(encs[slot].clone()),
+                enc_secs: 0.125 * (slot as f64 + 1.0),
+                loss: 0.5 + slot as f32,
+            })
+            .unwrap();
+    }
+    drop(sender);
+    let mut server = MaskServer::with_theta0(plan.d(), 1.0, 0.85);
+    let pool = ScratchPool::new();
+    let report = drain_round(&mut channel, plan, codec.as_ref(), &mut server, cfg, &pool)
+        .unwrap_or_else(|e| panic!("{name} {cfg:?}: {e}"));
+    (server, report)
+}
+
+/// The tentpole property: sharded drain ≡ serial drain, bitwise, across
+/// all 8 codecs (both update families) × both pipeline modes × worker
+/// counts 1/2/3/8, with varying client counts and adversarial arrival
+/// orders.
+#[test]
+fn sharded_drain_is_bitwise_identical_to_serial_for_all_codecs() {
+    let d = 2048;
+    for (trial, name) in compress::all_names().iter().enumerate() {
+        let k = 2 + (trial % 5); // client counts 2..=6 across the roster
+        let (plan, encs) = round_fixture(name, d, k, trial as u64 + 1);
+        // Adversarial arrival order: reversed with a mid-list swap.
+        let mut order: Vec<usize> = (0..plan.expected()).rev().collect();
+        if order.len() > 2 {
+            let mid = order.len() / 2;
+            order.swap(0, mid);
+        }
+        for mode in [PipelineMode::Batch, PipelineMode::Streaming] {
+            let (reference, ref_report) =
+                drain_into(name, &plan, &encs, &order, DrainConfig::serial(mode));
+            for workers in [1usize, 2, 3, 8] {
+                let (sharded, report) =
+                    drain_into(name, &plan, &encs, &order, DrainConfig::new(mode, workers));
+                let tag = format!("{name} {mode:?} workers={workers}");
+                assert_eq!(reference.theta_g, sharded.theta_g, "{tag}: theta_g diverged");
+                assert_eq!(reference.s_g, sharded.s_g, "{tag}: s_g diverged");
+                assert_eq!(reference.round, sharded.round, "{tag}");
+                // Per-slot accounting is deterministic regardless of which
+                // worker decoded what…
+                assert_eq!(ref_report.loss_by_slot, report.loss_by_slot, "{tag}");
+                assert_eq!(ref_report.enc_by_slot, report.enc_by_slot, "{tag}");
+                // …and the per-worker decode split covers the whole round.
+                assert_eq!(report.dec_by_worker.len(), workers, "{tag}");
+                let split: f64 = report.dec_by_worker.iter().sum();
+                assert!(
+                    (split - report.dec_secs).abs() < 1e-9,
+                    "{tag}: worker split {split} != total {}",
+                    report.dec_secs
+                );
+            }
+        }
+    }
+}
+
+/// Error path: a malformed record decoded *on a worker thread* must abort
+/// the round with a clean error — pending jobs dropped, all workers
+/// joined, no deadlock on the bounded results channel — in both modes.
+#[test]
+fn malformed_record_from_a_worker_aborts_the_round_cleanly() {
+    let (plan, mut encs) = round_fixture("deltamask", 512, 4, 9);
+    encs[2] = Encoded {
+        bytes: vec![0u8; 8], // fails DeltaMask's record-length validation
+    };
+    let order: Vec<usize> = (0..plan.expected()).collect();
+    for mode in [PipelineMode::Batch, PipelineMode::Streaming] {
+        for workers in [2usize, 3] {
+            let codec = compress::by_name("deltamask").unwrap();
+            let (mut channel, sender) = ChannelTransport::new();
+            for &slot in &order {
+                sender
+                    .send(WireMessage {
+                        round: plan.round,
+                        client_id: plan.participants[slot],
+                        slot,
+                        payload: Payload::Update(encs[slot].clone()),
+                        enc_secs: 0.0,
+                        loss: 0.0,
+                    })
+                    .unwrap();
+            }
+            drop(sender);
+            let mut server = MaskServer::with_theta0(plan.d(), 1.0, 0.85);
+            let err = drain_round(
+                &mut channel,
+                &plan,
+                codec.as_ref(),
+                &mut server,
+                DrainConfig::new(mode, workers),
+                &ScratchPool::new(),
+            )
+            .unwrap_err();
+            let msg = err.to_string();
+            assert!(
+                msg.contains("decode failed for slot 2"),
+                "{mode:?} workers={workers}: unexpected error: {msg}"
+            );
+        }
+    }
+}
+
+/// `workers = 0` resolves to the machine's parallelism and worker counts
+/// far beyond the record count are harmless — both still bitwise-match the
+/// serial reference.
+#[test]
+fn auto_and_oversized_worker_counts_match_serial() {
+    let (plan, encs) = round_fixture("fedpm", 1024, 2, 31);
+    let order: Vec<usize> = (0..plan.expected()).collect();
+    let (reference, _) = drain_into(
+        "fedpm",
+        &plan,
+        &encs,
+        &order,
+        DrainConfig::serial(PipelineMode::Streaming),
+    );
+    for workers in [0usize, 16] {
+        let (sharded, report) = drain_into(
+            "fedpm",
+            &plan,
+            &encs,
+            &order,
+            DrainConfig::new(PipelineMode::Streaming, workers),
+        );
+        assert_eq!(reference.theta_g, sharded.theta_g, "workers={workers}");
+        assert_eq!(reference.s_g, sharded.s_g, "workers={workers}");
+        assert!(!report.dec_by_worker.is_empty(), "workers={workers}");
+        assert_eq!(
+            report.dec_by_worker.len(),
+            DrainConfig::new(PipelineMode::Streaming, workers).resolved_workers(),
+            "workers={workers}"
+        );
+    }
+}

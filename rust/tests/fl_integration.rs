@@ -31,6 +31,9 @@ fn base_cfg() -> ExperimentConfig {
         theta0: 0.85,
         arch_override: None,
         pipeline: PipelineMode::Streaming,
+        // CI re-runs this suite with DELTAMASK_DECODE_WORKERS=4 so every
+        // end-to-end test also exercises the sharded server decode path.
+        decode_workers: deltamask::fl::decode_workers_from_env(),
     }
 }
 
