@@ -10,7 +10,8 @@
 //! `--smoke` shrinks the dimension sweep and iteration counts to CI scale.
 //! Cases: filter membership kernels, the DeltaMask wire path (scratch
 //! encode + pooled decode), the sharded `drain_round` (serial vs 4 decode
-//! workers), matmuls, and tracked PNG/DEFLATE throughputs. The JSON schema
+//! workers, and vs 4 decode workers × 4 dimension shards — the `_s4`
+//! case), matmuls, and tracked PNG/DEFLATE throughputs. The JSON schema
 //! and the full bench workflow are documented in `benches/README.md`.
 
 use deltamask::bench::{summarize, time_fn, Table};
@@ -231,8 +232,10 @@ fn main() {
             );
         }
         let pool = ScratchPool::new();
-        let drain = |n_workers: usize| -> Vec<f32> {
-            let (mut channel, sender) = ChannelTransport::new();
+        // One fixture-fill for every drain variant: the serial oracle and
+        // the sharded candidates must bench the exact same round.
+        let fill_channel = || -> ChannelTransport {
+            let (channel, sender) = ChannelTransport::new();
             for (slot, enc) in encs.iter().enumerate() {
                 sender
                     .send(WireMessage {
@@ -246,6 +249,10 @@ fn main() {
                     .unwrap();
             }
             drop(sender);
+            channel
+        };
+        let drain = |n_workers: usize| -> Vec<f32> {
+            let mut channel = fill_channel();
             let mut server = MaskServer::with_theta0(d, 1.0, 0.85);
             drain_round(
                 &mut channel,
@@ -271,6 +278,40 @@ fn main() {
             name: format!("drain_round_deltamask_d{d}_k{k}_w{workers}"),
             scalar_secs: serial_secs,
             batched_secs: sharded_secs,
+            parity,
+        });
+
+        // Dimension-sharded aggregation on top of the decode workers: the
+        // same round drained into a 4-shard view of the server (each shard
+        // its own pseudo-count slice + pool + absorb lane), stitched back
+        // after the round. Oracle is the same serial drain; parity is
+        // bitwise on the stitched theta_g.
+        let shards = 4usize;
+        let drain_sharded_agg = |n_workers: usize, n_shards: usize| -> Vec<f32> {
+            let mut channel = fill_channel();
+            let mut server = MaskServer::with_theta0(d, 1.0, 0.85);
+            let mut view = server.shard_view(n_shards);
+            drain_round(
+                &mut channel,
+                &plan,
+                codec.as_ref(),
+                &mut view,
+                DrainConfig::sharded(PipelineMode::Streaming, n_workers, n_shards),
+                &pool,
+            )
+            .expect("sharded drain_round");
+            server.adopt_shards(view);
+            server.theta_g
+        };
+        let sharded_agg_secs = summarize(&time_fn(warmup, iters, || {
+            drain_sharded_agg(workers, shards);
+        }))
+        .min;
+        let parity = drain(1) == drain_sharded_agg(workers, shards);
+        pairs.push(Pair {
+            name: format!("drain_round_deltamask_d{d}_k{k}_w{workers}_s{shards}"),
+            scalar_secs: serial_secs,
+            batched_secs: sharded_agg_secs,
             parity,
         });
     }

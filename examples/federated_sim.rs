@@ -40,6 +40,7 @@ fn main() -> anyhow::Result<()> {
         arch_override: None,
         pipeline: PipelineMode::from_args(&args),
         decode_workers: args.usize("decode-workers", deltamask::fl::decode_workers_from_env()),
+        agg_shards: args.usize("agg-shards", deltamask::fl::agg_shards_from_env()),
     };
 
     let split = if noniid { "non-IID Dir(0.1)" } else { "IID Dir(10)" };

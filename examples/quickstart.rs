@@ -38,6 +38,7 @@ fn main() -> anyhow::Result<()> {
         arch_override: None,
         pipeline: PipelineMode::Streaming, // decode→absorb per arrival
         decode_workers: 2,                 // shard the server decode sweep
+        agg_shards: 2,                     // shard aggregation by dimension
     };
 
     println!(

@@ -24,7 +24,7 @@ use crate::codec::png::{self, GrayImage};
 use crate::filters::{BinaryFuse, MembershipFilter, XorFilter};
 use crate::model::kl_bernoulli;
 use crate::util::rng::Xoshiro256pp;
-use crate::util::top_k_indices;
+use crate::util::top_k_indices_into;
 use anyhow::{bail, ensure, Result};
 
 /// Probabilistic filter selection (§5.4 ablation, Fig. 9).
@@ -159,12 +159,14 @@ impl DeltaMaskCodec {
         }
         match self.ranking {
             Ranking::Kl => {
+                // The quickselect index array persists in the scratch, so
+                // cross-round encodes reuse it (same selection output as
+                // the allocating `top_k_indices`, element for element).
+                top_k_indices_into(&scratch.scores, k, &mut scratch.rank);
                 let delta = &scratch.delta;
-                scratch.keys.extend(
-                    top_k_indices(&scratch.scores, k)
-                        .into_iter()
-                        .map(|pos| delta[pos as usize] as u64),
-                );
+                scratch
+                    .keys
+                    .extend(scratch.rank.iter().map(|&pos| delta[pos as usize] as u64));
             }
             Ranking::Random => {
                 let mut rng = Xoshiro256pp::new(ctx.seed ^ 0xdead_beef);

@@ -102,6 +102,15 @@ impl Update {
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
+
+    /// Consume the update, returning the underlying reconstruction buffer
+    /// — for recycling into a [`ScratchPool`] once the contents have been
+    /// folded into (or copied out for) the aggregation state.
+    pub fn into_vec(self) -> Vec<f32> {
+        match self {
+            Update::Mask(v) | Update::ScoreDelta(v) => v,
+        }
+    }
 }
 
 /// Encoded uplink message.
@@ -120,15 +129,19 @@ impl Encoded {
     }
 }
 
-/// Reusable client-side encode scratch: the Δ scan, its KL scores and the
-/// truncated key set live in buffers that persist across rounds (inside
-/// `ClientSession`), so steady-state encodes never re-allocate them.
+/// Reusable client-side encode scratch: the Δ scan, its KL scores, the
+/// quickselect index array and the truncated key set live in buffers that
+/// persist across rounds (inside `ClientSession`), so steady-state
+/// encodes never re-allocate them.
 #[derive(Debug, Default)]
 pub struct EncodeScratch {
     /// Mask-difference index set Δ.
     pub delta: Vec<u32>,
     /// KL scores aligned with `delta` (KL ranking only).
     pub scores: Vec<f32>,
+    /// Quickselect index scratch for the top-κ ranking
+    /// (`util::top_k_indices_into`; KL ranking only).
+    pub rank: Vec<u32>,
     /// Ranked, truncated key set Δ′ handed to the filter builder.
     pub keys: Vec<u64>,
 }

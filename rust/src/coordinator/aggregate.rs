@@ -31,8 +31,25 @@
 //! and sharded completion order makes reordering the norm, not the
 //! exception. Mask-family absorbs spend their buffer immediately, so the
 //! O(workers · d) bound is end-to-end for that family only.)
+//!
+//! ## Sharded absorb
+//!
+//! `DrainConfig::shards > 1` additionally shards the **absorb** stage in
+//! the dimension axis: the aggregator must be a
+//! [`ShardedAggregator`](super::ShardedAggregator), whose S absorb lanes
+//! each own a contiguous `d`-range of the aggregation state. Each decoded
+//! record is split at the shard boundaries and handed to the lanes through
+//! the aggregator's [`ShardRouter`] — by the decode workers themselves
+//! when `workers > 1` (so one huge record no longer serializes on a single
+//! absorb thread), or by the draining thread when decoding is inline. The
+//! routed drain is bitwise identical to both the serial and the
+//! single-lane sharded-decode paths; `rust/tests/agg_shards.rs`
+//! property-tests that across every codec, both pipeline modes and shard
+//! counts {1, 2, 3, 8}. The operator-facing guide to how `--pipeline`,
+//! `--decode-workers` and `--agg-shards` compose is `docs/SCALING.md`.
 
 use super::round::RoundPlan;
+use super::shard::ShardRouter;
 use super::transport::{Payload, Transport};
 use super::PipelineMode;
 use crate::compress::{Encoded, ScratchPool, Update, UpdateCodec};
@@ -64,23 +81,49 @@ pub trait Aggregator {
     fn reclaim_buffer(&mut self) -> Option<Vec<f32>> {
         None
     }
+
+    /// For dimension-sharded sinks
+    /// ([`ShardedAggregator`](super::ShardedAggregator)): the clonable
+    /// router the drain uses to hand each decoded record straight to the
+    /// per-shard absorb lanes. Live only between `begin_round` and
+    /// `finish_round`. Single-lane sinks return `None` (the default) and
+    /// the drain absorbs on the draining thread instead.
+    fn shard_router(&self) -> Option<ShardRouter> {
+        None
+    }
+
+    /// Abort an in-flight round after a drain error: tear down any
+    /// per-shard absorb lanes and leave the sink safe to reuse or drop.
+    /// Mid-round aggregation state may be partial — as with an aborted
+    /// serial round, the next `begin_round` supersedes it. Default: no-op
+    /// (single-lane sinks hold no threads).
+    fn abort_round(&mut self) {}
 }
 
-/// Server-side decode scheduling for one drained round: the pipeline mode
-/// plus the number of decode worker threads.
+/// Server-side decode→absorb scheduling for one drained round: the
+/// pipeline mode, the number of decode worker threads and the number of
+/// dimension shards for the absorb stage.
 ///
 /// `workers == 1` decodes inline on the draining thread (the serial
 /// reference path); `workers > 1` shards decoding across that many scoped
 /// threads; `workers == 0` resolves to one worker per available core.
-/// All settings produce bitwise-identical aggregator state.
+/// `shards == 1` keeps the single absorb lane; `shards > 1` requires a
+/// dimension-sharded aggregator
+/// ([`ShardedAggregator`](super::ShardedAggregator)) and splits every
+/// decoded record across that many absorb lanes at shard boundaries;
+/// `shards == 0` resolves to one shard per available core. All settings
+/// produce bitwise-identical aggregator state.
 ///
 /// ```
 /// use deltamask::coordinator::{DrainConfig, PipelineMode};
 /// let serial = DrainConfig::serial(PipelineMode::Streaming);
-/// assert_eq!(serial.resolved_workers(), 1);
-/// let sharded = DrainConfig::new(PipelineMode::Batch, 4);
-/// assert_eq!(sharded.resolved_workers(), 4);
-/// assert!(DrainConfig::new(PipelineMode::Streaming, 0).resolved_workers() >= 1);
+/// assert_eq!((serial.resolved_workers(), serial.resolved_shards()), (1, 1));
+/// let decode_sharded = DrainConfig::new(PipelineMode::Batch, 4);
+/// assert_eq!(decode_sharded.resolved_workers(), 4);
+/// assert_eq!(decode_sharded.resolved_shards(), 1);
+/// let dim_sharded = DrainConfig::sharded(PipelineMode::Streaming, 4, 8);
+/// assert_eq!(dim_sharded.resolved_shards(), 8);
+/// assert!(DrainConfig::sharded(PipelineMode::Streaming, 0, 0).resolved_shards() >= 1);
 /// ```
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct DrainConfig {
@@ -88,21 +131,53 @@ pub struct DrainConfig {
     pub mode: PipelineMode,
     /// Decode worker threads (1 = serial, 0 = one per available core).
     pub workers: usize,
+    /// Dimension shards for the absorb stage (`--agg-shards N`): 1 = the
+    /// single-lane reference path, N > 1 = that many parallel absorb
+    /// lanes fed through a [`ShardRouter`], 0 = one shard per core.
+    pub shards: usize,
 }
 
 impl DrainConfig {
     pub fn new(mode: PipelineMode, workers: usize) -> Self {
-        Self { mode, workers }
+        Self {
+            mode,
+            workers,
+            shards: 1,
+        }
     }
 
-    /// The single-threaded reference path (`workers = 1`).
+    /// The single-threaded reference path (`workers = 1`, `shards = 1`).
     pub fn serial(mode: PipelineMode) -> Self {
-        Self { mode, workers: 1 }
+        Self {
+            mode,
+            workers: 1,
+            shards: 1,
+        }
+    }
+
+    /// Fully-specified drain: `workers` decode threads feeding `shards`
+    /// absorb lanes.
+    pub fn sharded(mode: PipelineMode, workers: usize, shards: usize) -> Self {
+        Self {
+            mode,
+            workers,
+            shards,
+        }
     }
 
     /// Effective worker count: `0` resolves to the available parallelism.
     pub fn resolved_workers(&self) -> usize {
         match self.workers {
+            0 => std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4),
+            n => n,
+        }
+    }
+
+    /// Effective shard count: `0` resolves to the available parallelism.
+    pub fn resolved_shards(&self) -> usize {
+        match self.shards {
             0 => std::thread::available_parallelism()
                 .map(|n| n.get())
                 .unwrap_or(4),
@@ -156,8 +231,11 @@ impl DrainReport {
 /// Streaming: decode→absorb per arrival (the aggregator holds O(d) state).
 /// Batch: buffer every payload, then decode + absorb behind the barrier —
 /// the seed's reference behaviour. With `cfg.workers > 1` decoding is
-/// sharded across a worker pool in either mode (see the module docs). All
-/// four combinations produce bitwise identical aggregator state (see
+/// sharded across a worker pool in either mode, and with `cfg.shards > 1`
+/// the absorb stage is additionally sharded across the aggregator's
+/// per-dimension lanes (`agg` must then be a
+/// [`ShardedAggregator`](super::ShardedAggregator); see the module docs).
+/// Every combination produces bitwise identical aggregator state (see
 /// `fl::server` module docs).
 ///
 /// Decoding draws its output buffers from `pool` and the aggregator's
@@ -229,10 +307,12 @@ pub fn drain_round(
     pool: &ScratchPool,
 ) -> Result<DrainReport> {
     let workers = cfg.resolved_workers();
-    if workers <= 1 {
+    if cfg.resolved_shards() > 1 {
+        drain_shard_routed(transport, plan, codec, agg, cfg.mode, pool, workers)
+    } else if workers <= 1 {
         drain_serial(transport, plan, codec, agg, cfg.mode, pool)
     } else {
-        drain_sharded(transport, plan, codec, agg, cfg.mode, pool, workers)
+        drain_decode_workers(transport, plan, codec, agg, cfg.mode, pool, workers)
     }
 }
 
@@ -420,10 +500,11 @@ fn absorb_decoded(
     Ok(())
 }
 
-/// The sharded drain: N decode workers + the absorb stage on the draining
-/// thread. See the module docs for the stage layout and the shutdown
-/// discipline.
-fn drain_sharded(
+/// The sharded-decode drain: N decode workers + the absorb stage on the
+/// draining thread. See the module docs for the stage layout and the
+/// shutdown discipline — which [`route_from_workers`] twins for the
+/// dimension-sharded drain; keep fixes to either shutdown path in sync.
+fn drain_decode_workers(
     transport: &mut dyn Transport,
     plan: &RoundPlan,
     codec: &dyn UpdateCodec,
@@ -528,6 +609,232 @@ fn drain_sharded(
     drained?;
     agg.finish_round();
     Ok(report)
+}
+
+/// The dimension-sharded drain (`DrainConfig::shards > 1`): every decoded
+/// record is split at shard boundaries and handed to the aggregator's
+/// per-shard absorb lanes through its [`ShardRouter`] — by the draining
+/// thread when `workers == 1`, or by the decode workers themselves when
+/// the decode stage is also sharded (the work-split the ROADMAP calls
+/// per-`d`-range splitting: one huge record's absorb sweep runs on S
+/// lanes instead of serializing on one thread). On any error the round
+/// aborts cleanly: decode workers join and [`Aggregator::abort_round`]
+/// tears the absorb lanes down before the error returns.
+fn drain_shard_routed(
+    transport: &mut dyn Transport,
+    plan: &RoundPlan,
+    codec: &dyn UpdateCodec,
+    agg: &mut dyn Aggregator,
+    mode: PipelineMode,
+    pool: &ScratchPool,
+    workers: usize,
+) -> Result<DrainReport> {
+    let expected = plan.expected();
+    let mut report = DrainReport::new(expected, workers);
+    let mut seen = vec![false; expected];
+
+    // Batch mode: the full-round barrier comes first, before any lane is
+    // spawned — a barrier failure therefore has nothing to tear down.
+    let mut buffered: Vec<Option<Encoded>> = Vec::new();
+    if mode == PipelineMode::Batch {
+        buffered = vec![None; expected];
+        for got in 0..expected {
+            let (slot, enc) = recv_validated(transport, got, expected, &mut seen, &mut report)?;
+            buffered[slot] = Some(enc);
+        }
+    }
+
+    agg.begin_round(expected);
+    let router = match agg.shard_router() {
+        Some(router) => router,
+        None => {
+            agg.abort_round();
+            bail!(
+                "DrainConfig::shards > 1 requires a dimension-sharded aggregator \
+                 (coordinator::ShardedAggregator)"
+            );
+        }
+    };
+
+    let drained: Result<()> = if workers <= 1 {
+        // One decode at a time on this thread; the S absorb lanes run
+        // concurrently behind the router.
+        let decode_and_route =
+            |slot: usize, enc: &Encoded, report: &mut DrainReport| -> Result<()> {
+                let t = Stopwatch::new();
+                let update = codec
+                    .decode_pooled(&enc.bytes, &plan.decode_ctx(slot), pool)
+                    .map_err(|e| anyhow!("decode failed for slot {slot}: {e}"))?;
+                report.dec_secs += t.elapsed_secs();
+                router.route(slot, &update);
+                pool.put(update.into_vec());
+                Ok(())
+            };
+        let mut run = || -> Result<()> {
+            match mode {
+                PipelineMode::Streaming => {
+                    for got in 0..expected {
+                        let (slot, enc) =
+                            recv_validated(transport, got, expected, &mut seen, &mut report)?;
+                        decode_and_route(slot, &enc, &mut report)?;
+                    }
+                }
+                PipelineMode::Batch => {
+                    for (slot, enc) in buffered.iter().enumerate() {
+                        let enc = enc.as_ref().expect("all slots arrived");
+                        decode_and_route(slot, enc, &mut report)?;
+                    }
+                }
+            }
+            Ok(())
+        };
+        let out = run();
+        report.dec_by_worker[0] = report.dec_secs;
+        out
+    } else {
+        route_from_workers(
+            transport,
+            plan,
+            codec,
+            &router,
+            mode,
+            pool,
+            workers,
+            expected,
+            &mut seen,
+            &mut report,
+            buffered,
+        )
+    };
+
+    drop(router);
+    match drained {
+        Ok(()) => {
+            agg.finish_round();
+            Ok(report)
+        }
+        Err(e) => {
+            agg.abort_round();
+            Err(e)
+        }
+    }
+}
+
+/// One worker's accounting for a decoded-and-routed record: the payload
+/// itself went straight to the absorb lanes, so only the outcome and the
+/// timing travel back to the draining thread.
+struct RoutedRecord {
+    slot: usize,
+    worker: usize,
+    dec_secs: f64,
+    outcome: Result<()>,
+}
+
+/// Fold one routed record's accounting into the report.
+fn settle_routed(rec: RoutedRecord, report: &mut DrainReport) -> Result<()> {
+    rec.outcome
+        .map_err(|e| anyhow!("decode failed for slot {}: {e}", rec.slot))?;
+    report.dec_secs += rec.dec_secs;
+    report.dec_by_worker[rec.worker] += rec.dec_secs;
+    Ok(())
+}
+
+/// Decode stage of the dimension-sharded drain: N scoped workers decode
+/// records and route each one's shard splits themselves. The worker-pool
+/// scaffold and shutdown discipline (queue close/abort ordering, tx drop,
+/// results drain before join) are a deliberate twin of
+/// [`drain_decode_workers`] — only the per-record action differs (route +
+/// recycle on the worker here vs absorb on the draining thread there);
+/// keep any fix to either shutdown path in sync with the other. The
+/// absorb lanes stay alive throughout (they belong to the aggregator), so
+/// a worker blocked routing into a full lane queue always drains and
+/// exits.
+#[allow(clippy::too_many_arguments)]
+fn route_from_workers(
+    transport: &mut dyn Transport,
+    plan: &RoundPlan,
+    codec: &dyn UpdateCodec,
+    router: &ShardRouter,
+    mode: PipelineMode,
+    pool: &ScratchPool,
+    workers: usize,
+    expected: usize,
+    seen: &mut [bool],
+    report: &mut DrainReport,
+    buffered: Vec<Option<Encoded>>,
+) -> Result<()> {
+    let queue = DecodeQueue::new();
+    std::thread::scope(|scope| {
+        let (tx, rx) = mpsc::sync_channel::<RoutedRecord>(workers * 2);
+        let _abort_on_unwind = QueueAbortGuard(&queue);
+        for worker in 0..workers {
+            let tx = tx.clone();
+            let queue = &queue;
+            let router = router.clone();
+            scope.spawn(move || {
+                while let Some((slot, enc)) = queue.next() {
+                    let t = Stopwatch::new();
+                    let decoded = codec.decode_pooled(&enc.bytes, &plan.decode_ctx(slot), pool);
+                    let dec_secs = t.elapsed_secs();
+                    let outcome = decoded.map(|update| {
+                        // Hand each shard its slice, then recycle the full
+                        // reconstruction buffer into the decode pool.
+                        router.route(slot, &update);
+                        pool.put(update.into_vec());
+                    });
+                    let rec = RoutedRecord {
+                        slot,
+                        worker,
+                        dec_secs,
+                        outcome,
+                    };
+                    if tx.send(rec).is_err() {
+                        return; // draining thread bailed; exit
+                    }
+                }
+            });
+        }
+        drop(tx);
+
+        let mut run = || -> Result<()> {
+            let mut settled = 0usize;
+            match mode {
+                PipelineMode::Streaming => {
+                    for got in 0..expected {
+                        let (slot, enc) =
+                            recv_validated(transport, got, expected, seen, report)?;
+                        queue.push(slot, enc);
+                        while let Ok(rec) = rx.try_recv() {
+                            settle_routed(rec, report)?;
+                            settled += 1;
+                        }
+                    }
+                }
+                PipelineMode::Batch => {
+                    // Barrier already passed in the caller: fan out in
+                    // slot order.
+                    for (slot, enc) in buffered.into_iter().enumerate() {
+                        queue.push(slot, enc.expect("all slots arrived"));
+                    }
+                }
+            }
+            queue.close();
+            while settled < expected {
+                let rec = rx
+                    .recv()
+                    .map_err(|_| anyhow!("decode workers exited early"))?;
+                settle_routed(rec, report)?;
+                settled += 1;
+            }
+            Ok(())
+        };
+        let out = run();
+        if out.is_err() {
+            queue.abort();
+            while rx.recv().is_ok() {}
+        }
+        out
+    })
 }
 
 #[cfg(test)]

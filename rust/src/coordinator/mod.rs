@@ -23,6 +23,16 @@
 //!   shared [`ScratchPool`]) while the absorb stage merges completions on
 //!   the draining thread — bitwise identical to the serial path at any
 //!   worker count, wired to the CLI as `--decode-workers N`.
+//! * [`shard`] — the dimension-sharded [`ShardedAggregator`]: the
+//!   parameter space `0..d` is partitioned into S contiguous shards, each
+//!   with its own aggregation-state slice, participation counters and
+//!   [`ScratchPool`], absorbed on S parallel lane threads fed through a
+//!   clonable [`ShardRouter`]. With `DrainConfig::shards > 1` the decode
+//!   workers hand each decoded record's shard splits to the lanes
+//!   directly, so even a single huge record's absorb sweep parallelizes.
+//!   Bitwise identical to the single-lane path at any shard count, wired
+//!   to the CLI as `--agg-shards N`. The operator's guide to how the
+//!   three knobs compose is `docs/SCALING.md`.
 //! * [`pool`] — a self-scheduling (work-stealing) [`ClientPool`]: workers
 //!   pull the next client job from a shared queue instead of being handed a
 //!   fixed round-robin chunk, so stragglers no longer idle whole threads,
@@ -48,9 +58,11 @@
 pub mod aggregate;
 pub mod pool;
 pub mod round;
+pub mod shard;
 pub mod transport;
 
 pub use aggregate::{drain_round, Aggregator, DrainConfig, DrainReport};
+pub use shard::{shard_bounds, ShardRouter, ShardedAggregator};
 // Re-exported so coordinator users thread the decode buffer pool without
 // reaching into `compress` (the pool type lives beside the codecs because
 // `decode_pooled` is a codec method).

@@ -1,0 +1,565 @@
+//! Dimension-sharded aggregation: partition the parameter space `0..d`
+//! into `S` contiguous shards, each owning its own slice of the
+//! aggregation state, its own participation counters (inside the slice
+//! sink) and its own [`ScratchPool`], behind the same
+//! `begin_round`/`absorb`/`finish_round` streaming interface the
+//! single-lane [`Aggregator`] exposes.
+//!
+//! This is the ROADMAP's million-client seam: the server-side cost of a
+//! round is an O(d) sweep per client update (the Eq. 5 pseudo-count
+//! accumulation), and a single absorb thread caps throughput at one
+//! socket's memory bandwidth. Splitting `d` at shard boundaries makes the
+//! absorb stage embarrassingly parallel in the dimension axis — the same
+//! structure FedPM-style mask aggregation has on paper, where every
+//! coordinate's pseudo-count is independent of every other's.
+//!
+//! ## Shape
+//!
+//! A [`ShardedAggregator`] owns `S` lanes. Between rounds each lane is a
+//! quiescent `(range, sink, pool)` triple; `begin_round` moves every sink
+//! onto its own **absorb lane thread** and hands out a clonable
+//! [`ShardRouter`]. Routing a decoded record copies each shard's
+//! sub-range into a buffer leased from that shard's pool and enqueues it
+//! on the lane's bounded channel; the lane thread absorbs sub-updates in
+//! arrival order and recycles spent buffers into its own pool.
+//! `finish_round` closes the lanes, joins the threads, runs each slice
+//! sink's `finish_round`, and parks the lanes again — at which point
+//! [`ShardedAggregator::into_shards`] hands the slices back for stitching
+//! (see `fl::server::MaskServer::adopt_shards`).
+//!
+//! ## Why sharding preserves bitwise identity
+//!
+//! Every conforming [`Aggregator`] update rule is **per-coordinate**
+//! (pseudo-count adds, slot-ordered FedAvg on scores), so restricting it
+//! to a contiguous range commutes with running it over all of `d`: lane
+//! `s` performs exactly the arithmetic the single-lane path performs on
+//! coordinates `range_s`, in an equivalent order (each lane sees every
+//! slot, and the [`Aggregator`] contract already requires arrival-order
+//! equivalence). Stitching the slices back is a pure copy. The property
+//! suite in `rust/tests/agg_shards.rs` checks bitwise identity across all
+//! 8 codecs × both pipeline modes × shard counts {1,2,3,8} under
+//! adversarial arrival orders.
+
+use super::aggregate::Aggregator;
+use crate::compress::{ScratchPool, Update};
+use crate::util::timer::Stopwatch;
+use std::ops::Range;
+use std::sync::mpsc::{self, SyncSender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+/// Sub-updates a lane's bounded queue holds before routing backpressures.
+/// Memory in the decode→absorb hand-off stays O(cap · d) across all lanes
+/// combined (each lane buffers `cap` sub-ranges of length ~d/S).
+const LANE_QUEUE_CAP: usize = 4;
+
+/// Partition `0..d` into `shards` contiguous, near-equal ranges (the
+/// first `d % shards` ranges are one element longer). The shard count is
+/// clamped to `[1, max(d, 1)]` so no lane ever owns an empty range.
+///
+/// ```
+/// use deltamask::coordinator::shard_bounds;
+/// assert_eq!(shard_bounds(7, 3), vec![0..3, 3..5, 5..7]);
+/// assert_eq!(shard_bounds(6, 1), vec![0..6]);
+/// assert_eq!(shard_bounds(2, 8).len(), 2); // clamped: never empty shards
+/// ```
+pub fn shard_bounds(d: usize, shards: usize) -> Vec<Range<usize>> {
+    let s = shards.clamp(1, d.max(1));
+    let base = d / s;
+    let extra = d % s;
+    let mut bounds = Vec::with_capacity(s);
+    let mut start = 0;
+    for i in 0..s {
+        let len = base + usize::from(i < extra);
+        bounds.push(start..start + len);
+        start += len;
+    }
+    debug_assert_eq!(start, d);
+    bounds
+}
+
+/// What a lane thread sends back when its round ends (normally via
+/// `Finish`, or unfinished when the round was aborted).
+struct LaneReturn<A> {
+    sink: A,
+    absorb_secs: f64,
+    finished: bool,
+}
+
+enum LaneMsg {
+    Absorb { slot: usize, update: Update },
+    Finish,
+}
+
+/// One quiescent shard: its d-range, its slice sink (present between
+/// rounds, on the lane thread while a round is in flight) and its
+/// dedicated sub-update buffer pool.
+struct ShardLane<A> {
+    range: Range<usize>,
+    sink: Option<A>,
+    pool: Arc<ScratchPool>,
+    /// Absorb compute seconds this lane spent in the last finished round.
+    absorb_secs: f64,
+}
+
+/// The shareable per-round routing table: shard ranges, pools and lane
+/// queue senders. Cloned into decode workers so they hand each decoded
+/// record straight to the absorb lanes without serializing on the
+/// draining thread.
+#[derive(Clone)]
+pub struct ShardRouter {
+    lanes: Arc<[RouterLane]>,
+}
+
+struct RouterLane {
+    range: Range<usize>,
+    pool: Arc<ScratchPool>,
+    tx: SyncSender<LaneMsg>,
+}
+
+impl ShardRouter {
+    /// Split `update` at the shard boundaries and enqueue each sub-range
+    /// on its shard's absorb lane (leasing the sub-buffer from that
+    /// shard's pool). Blocks when a lane's bounded queue is full — that
+    /// backpressure is what keeps decode from racing ahead of absorb.
+    ///
+    /// The caller keeps ownership of the full reconstruction buffer and
+    /// should recycle it (`Update::into_vec` → the drain's `ScratchPool`)
+    /// once this returns.
+    pub fn route(&self, slot: usize, update: &Update) {
+        for lane in self.lanes.iter() {
+            let sub = match update {
+                Update::Mask(v) => Update::Mask(lane.pool.take_copy(&v[lane.range.clone()])),
+                Update::ScoreDelta(v) => {
+                    Update::ScoreDelta(lane.pool.take_copy(&v[lane.range.clone()]))
+                }
+            };
+            // A send can only fail if the lane exited early, which means
+            // its sink panicked (a coordinator bug); the panic surfaces
+            // when the lanes are joined, so it is not swallowed here.
+            let _ = lane.tx.send(LaneMsg::Absorb { slot, update: sub });
+        }
+    }
+
+    /// Number of shard lanes this router fans out to.
+    pub fn shard_count(&self) -> usize {
+        self.lanes.len()
+    }
+}
+
+/// Lane threads plus the routing table for one in-flight round.
+struct RunningRound<A> {
+    router: ShardRouter,
+    handles: Vec<JoinHandle<LaneReturn<A>>>,
+}
+
+/// Dimension-sharded streaming aggregation sink: `S` contiguous shards of
+/// the parameter space, each with its own slice sink, participation
+/// counters and [`ScratchPool`], absorbed on `S` parallel lane threads.
+///
+/// Construct it from `(range, slice sink)` pairs tiling `0..d` — for the
+/// Bayesian mask server, `fl::server::MaskServer::shard_view` builds the
+/// slices and `adopt_shards` stitches them back after the round. Drive it
+/// either as a plain [`Aggregator`] (inline `absorb` splits each record
+/// and fans it out) or through [`drain_round`](super::drain_round) with
+/// [`DrainConfig::shards`](super::DrainConfig) > 1, where the decode
+/// workers route records to the lanes directly via [`ShardRouter`].
+///
+/// ```
+/// use deltamask::compress::Update;
+/// use deltamask::coordinator::Aggregator;
+/// use deltamask::fl::server::MaskServer;
+///
+/// // Two identical servers; one aggregates the round monolithically,
+/// // the other through a 3-shard view — bitwise-identical results.
+/// let mut mono = MaskServer::with_theta0(8, 1.0, 0.5);
+/// let mut split = mono.clone();
+/// let updates = vec![
+///     Update::Mask(vec![1.0, 0.0, 1.0, 1.0, 0.0, 1.0, 0.0, 0.0]),
+///     Update::Mask(vec![0.0, 0.0, 1.0, 0.0, 1.0, 1.0, 1.0, 0.0]),
+/// ];
+/// mono.aggregate(&updates);
+///
+/// let mut view = split.shard_view(3);
+/// view.begin_round(2);
+/// for (slot, u) in updates.iter().enumerate() {
+///     view.absorb(slot, u.clone());
+/// }
+/// view.finish_round();
+/// assert_eq!(view.absorb_secs_by_shard().len(), 3);
+/// split.adopt_shards(view);
+///
+/// assert_eq!(mono.theta_g, split.theta_g); // bitwise
+/// assert_eq!(mono.s_g, split.s_g);
+/// ```
+pub struct ShardedAggregator<A> {
+    lanes: Vec<ShardLane<A>>,
+    running: Option<RunningRound<A>>,
+    /// Full decoded buffers spent by the inline `absorb` path (their
+    /// shard sub-ranges already copied out), awaiting reclamation by the
+    /// drain loop via [`Aggregator::reclaim_buffer`].
+    spent: Vec<Vec<f32>>,
+}
+
+impl<A: Aggregator + Send + 'static> ShardedAggregator<A> {
+    /// Build a sharded sink from `(range, slice sink)` pairs. The ranges
+    /// must tile `0..d` contiguously in order (see [`shard_bounds`]).
+    pub fn new(shards: Vec<(Range<usize>, A)>) -> Self {
+        assert!(!shards.is_empty(), "at least one shard required");
+        let mut expect = 0;
+        for (range, _) in &shards {
+            assert_eq!(
+                range.start, expect,
+                "shard ranges must tile 0..d contiguously"
+            );
+            assert!(range.end >= range.start, "inverted shard range");
+            expect = range.end;
+        }
+        Self {
+            lanes: shards
+                .into_iter()
+                .map(|(range, sink)| ShardLane {
+                    range,
+                    sink: Some(sink),
+                    pool: Arc::new(ScratchPool::new()),
+                    absorb_secs: 0.0,
+                })
+                .collect(),
+            running: None,
+            spent: Vec::new(),
+        }
+    }
+
+    /// Spawn the lane threads for one round and build the router.
+    fn start_round(&mut self, expected: usize) {
+        let mut handles = Vec::with_capacity(self.lanes.len());
+        let mut router_lanes = Vec::with_capacity(self.lanes.len());
+        for lane in &mut self.lanes {
+            let (tx, rx) = mpsc::sync_channel::<LaneMsg>(LANE_QUEUE_CAP);
+            let mut sink = lane.sink.take().expect("lane sink present between rounds");
+            let pool = Arc::clone(&lane.pool);
+            handles.push(std::thread::spawn(move || {
+                sink.begin_round(expected);
+                let mut absorb_secs = 0.0;
+                let mut finished = false;
+                while let Ok(msg) = rx.recv() {
+                    match msg {
+                        LaneMsg::Absorb { slot, update } => {
+                            let t = Stopwatch::new();
+                            sink.absorb(slot, update);
+                            while let Some(buf) = sink.reclaim_buffer() {
+                                pool.put(buf);
+                            }
+                            absorb_secs += t.elapsed_secs();
+                        }
+                        LaneMsg::Finish => {
+                            sink.finish_round();
+                            finished = true;
+                            break;
+                        }
+                    }
+                }
+                // Every sender dropped without `Finish` means the round
+                // was aborted: hand the (mid-round) sink back so the next
+                // `begin_round` can supersede its state, exactly like an
+                // aborted serial round.
+                LaneReturn {
+                    sink,
+                    absorb_secs,
+                    finished,
+                }
+            }));
+            router_lanes.push(RouterLane {
+                range: lane.range.clone(),
+                pool: Arc::clone(&lane.pool),
+                tx,
+            });
+        }
+        self.running = Some(RunningRound {
+            router: ShardRouter {
+                lanes: router_lanes.into(),
+            },
+            handles,
+        });
+    }
+}
+
+impl<A> ShardedAggregator<A> {
+    /// Number of shards (== absorb lanes).
+    pub fn shard_count(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// Total dimensionality the shards tile.
+    pub fn d(&self) -> usize {
+        self.lanes.last().map(|l| l.range.end).unwrap_or(0)
+    }
+
+    /// The shard ranges, in order.
+    pub fn bounds(&self) -> Vec<Range<usize>> {
+        self.lanes.iter().map(|l| l.range.clone()).collect()
+    }
+
+    /// Absorb compute seconds each lane spent in the last finished round,
+    /// indexed by shard. A lopsided split flags dimension imbalance
+    /// (e.g. one shard owning all the dense payload coordinates).
+    pub fn absorb_secs_by_shard(&self) -> Vec<f64> {
+        self.lanes.iter().map(|l| l.absorb_secs).collect()
+    }
+
+    /// Tear down an in-flight round without finishing it: drop the lane
+    /// queues, join every lane thread and park the (mid-round) sinks back
+    /// in their lanes. Safe to call at any time; a no-op between rounds.
+    pub fn abort_round(&mut self) {
+        let Some(RunningRound { router, handles }) = self.running.take() else {
+            return;
+        };
+        drop(router); // all senders gone → lanes drain their queues and exit
+        self.join_lanes(handles);
+    }
+
+    /// Decompose into `(range, slice sink)` pairs for stitching back into
+    /// the global state. Aborts any round still in flight first.
+    pub fn into_shards(mut self) -> Vec<(Range<usize>, A)> {
+        self.abort_round();
+        std::mem::take(&mut self.lanes)
+            .into_iter()
+            .map(|lane| {
+                (
+                    lane.range,
+                    lane.sink.expect("lane sink present after abort/finish"),
+                )
+            })
+            .collect()
+    }
+
+    /// Join lane threads and park their sinks; propagates lane panics.
+    fn join_lanes(&mut self, handles: Vec<JoinHandle<LaneReturn<A>>>) -> bool {
+        let mut all_finished = true;
+        for (lane, handle) in self.lanes.iter_mut().zip(handles) {
+            match handle.join() {
+                Ok(ret) => {
+                    lane.sink = Some(ret.sink);
+                    lane.absorb_secs = ret.absorb_secs;
+                    all_finished &= ret.finished;
+                }
+                Err(panic) => std::panic::resume_unwind(panic),
+            }
+        }
+        all_finished
+    }
+}
+
+impl<A: Aggregator + Send + 'static> Aggregator for ShardedAggregator<A> {
+    fn begin_round(&mut self, expected: usize) {
+        // A round left in flight by an aborted drain is superseded, the
+        // same tolerance the single-lane sinks give repeated begins.
+        self.abort_round();
+        self.spent.clear();
+        self.start_round(expected);
+    }
+
+    /// Inline reference path: split the record at the shard boundaries on
+    /// the calling thread and fan the pieces out to the absorb lanes. The
+    /// routed drain (`DrainConfig::shards > 1`) bypasses this and calls
+    /// [`ShardRouter::route`] from the decode workers instead.
+    fn absorb(&mut self, slot: usize, update: Update) {
+        assert_eq!(update.len(), self.d(), "update dimensionality mismatch");
+        let running = self
+            .running
+            .as_ref()
+            .expect("ShardedAggregator::absorb called before begin_round");
+        running.router.route(slot, &update);
+        // Sub-ranges are copied out; the full buffer is spent and flows
+        // back to the drain's pool via `reclaim_buffer`.
+        self.spent.push(update.into_vec());
+    }
+
+    fn finish_round(&mut self) {
+        let RunningRound { router, handles } = self
+            .running
+            .take()
+            .expect("ShardedAggregator::finish_round called before begin_round");
+        // Lane queues are FIFO and every routed sub-update was enqueued
+        // before its completion was acknowledged, so `Finish` lands after
+        // the round's full absorb set on every lane.
+        for lane in router.lanes.iter() {
+            let _ = lane.tx.send(LaneMsg::Finish);
+        }
+        drop(router);
+        let finished = self.join_lanes(handles);
+        assert!(finished, "a shard lane exited before Finish");
+    }
+
+    fn reclaim_buffer(&mut self) -> Option<Vec<f32>> {
+        self.spent.pop()
+    }
+
+    fn shard_router(&self) -> Option<ShardRouter> {
+        self.running.as_ref().map(|r| r.router.clone())
+    }
+
+    fn abort_round(&mut self) {
+        ShardedAggregator::abort_round(self);
+    }
+}
+
+impl<A> Drop for ShardedAggregator<A> {
+    /// Dropping mid-round (e.g. the drain bailed on a decode error and
+    /// the caller discards the view) still joins every lane thread.
+    fn drop(&mut self) {
+        if let Some(RunningRound { router, handles }) = self.running.take() {
+            drop(router);
+            for handle in handles {
+                // Swallow lane panics during unwinding; double panics abort.
+                let _ = handle.join();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Per-lane spy sink recording what it absorbed.
+    #[derive(Default)]
+    struct LaneSpy {
+        d: usize,
+        begun: Option<usize>,
+        absorbed: Vec<(usize, Vec<f32>)>,
+        finished: bool,
+    }
+
+    impl Aggregator for LaneSpy {
+        fn begin_round(&mut self, expected: usize) {
+            self.begun = Some(expected);
+        }
+
+        fn absorb(&mut self, slot: usize, update: Update) {
+            assert_eq!(update.len(), self.d);
+            self.absorbed.push((slot, update.into_vec()));
+        }
+
+        fn finish_round(&mut self) {
+            self.finished = true;
+        }
+    }
+
+    fn spy_shards(d: usize, shards: usize) -> ShardedAggregator<LaneSpy> {
+        ShardedAggregator::new(
+            shard_bounds(d, shards)
+                .into_iter()
+                .map(|r| {
+                    let spy = LaneSpy {
+                        d: r.len(),
+                        ..Default::default()
+                    };
+                    (r, spy)
+                })
+                .collect(),
+        )
+    }
+
+    #[test]
+    fn bounds_tile_the_space() {
+        assert_eq!(shard_bounds(10, 4), vec![0..3, 3..6, 6..8, 8..10]);
+        assert_eq!(shard_bounds(3, 3), vec![0..1, 1..2, 2..3]);
+        assert_eq!(shard_bounds(5, 1), vec![0..5]);
+        // Clamping: more shards than dimensions never yields empty lanes.
+        assert_eq!(shard_bounds(2, 5), vec![0..1, 1..2]);
+        assert_eq!(shard_bounds(0, 3), vec![0..0]);
+        for (d, s) in [(1031, 8), (64, 7), (100, 100)] {
+            let bounds = shard_bounds(d, s);
+            assert_eq!(bounds.first().unwrap().start, 0);
+            assert_eq!(bounds.last().unwrap().end, d);
+            for w in bounds.windows(2) {
+                assert_eq!(w[0].end, w[1].start, "d={d} s={s}");
+                assert!(!w[0].is_empty());
+            }
+        }
+    }
+
+    #[test]
+    fn inline_absorb_splits_at_shard_boundaries() {
+        let d = 10;
+        let mut agg = spy_shards(d, 3); // ranges 0..4, 4..7, 7..10
+        agg.begin_round(2);
+        let u0: Vec<f32> = (0..d).map(|i| i as f32).collect();
+        agg.absorb(0, Update::Mask(u0.clone()));
+        agg.absorb(1, Update::ScoreDelta(u0.iter().map(|v| -v).collect()));
+        // Spent full buffers flow back through reclaim.
+        assert!(agg.reclaim_buffer().is_some());
+        assert!(agg.reclaim_buffer().is_some());
+        assert!(agg.reclaim_buffer().is_none());
+        agg.finish_round();
+        let timings = agg.absorb_secs_by_shard();
+        assert_eq!(timings.len(), 3);
+        let shards = agg.into_shards();
+        assert_eq!(shards.len(), 3);
+        for (range, spy) in shards {
+            assert_eq!(spy.begun, Some(2));
+            assert!(spy.finished);
+            assert_eq!(spy.absorbed.len(), 2);
+            let (slot0, sub0) = &spy.absorbed[0];
+            assert_eq!(*slot0, 0);
+            assert_eq!(sub0, &u0[range.clone()].to_vec(), "{range:?}");
+            let (slot1, sub1) = &spy.absorbed[1];
+            assert_eq!(*slot1, 1);
+            assert_eq!(sub1.len(), range.len());
+        }
+    }
+
+    #[test]
+    fn abort_round_parks_unfinished_lanes_for_reuse() {
+        let mut agg = spy_shards(6, 2);
+        agg.begin_round(3);
+        agg.absorb(0, Update::Mask(vec![1.0; 6]));
+        agg.abort_round(); // two updates never arrive
+        assert!(agg.shard_router().is_none(), "no round in flight");
+        // Lanes were recovered mid-round, unfinished — and can be reused.
+        agg.begin_round(1);
+        agg.absorb(0, Update::Mask(vec![0.0; 6]));
+        agg.finish_round();
+        for (_, spy) in agg.into_shards() {
+            assert!(spy.finished, "superseding round completed");
+            assert_eq!(spy.absorbed.len(), 2, "one absorb per round attempt");
+        }
+    }
+
+    #[test]
+    fn router_fans_out_from_foreign_threads() {
+        let d = 8;
+        let mut agg = spy_shards(d, 2);
+        agg.begin_round(4);
+        let router = agg.shard_router().expect("round in flight");
+        std::thread::scope(|scope| {
+            for w in 0..2 {
+                let router = router.clone();
+                scope.spawn(move || {
+                    for slot in [w, w + 2] {
+                        let v: Vec<f32> = (0..d).map(|i| (slot * 10 + i) as f32).collect();
+                        router.route(slot, &Update::Mask(v));
+                    }
+                });
+            }
+        });
+        drop(router);
+        agg.finish_round();
+        for (range, spy) in agg.into_shards() {
+            assert_eq!(spy.absorbed.len(), 4);
+            for (slot, sub) in &spy.absorbed {
+                let expect: Vec<f32> = range.clone().map(|i| (slot * 10 + i) as f32).collect();
+                assert_eq!(sub, &expect, "slot {slot} range {range:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn drop_mid_round_joins_lanes() {
+        let mut agg = spy_shards(4, 2);
+        agg.begin_round(2);
+        agg.absorb(0, Update::Mask(vec![1.0; 4]));
+        drop(agg); // must not hang or leak a blocked lane thread
+    }
+}

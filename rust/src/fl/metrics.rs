@@ -26,6 +26,15 @@ pub struct RoundMetrics {
     /// weight-space baselines, which have no server decode stage). A
     /// lopsided split flags shard imbalance.
     pub dec_worker_ms: Vec<f64>,
+    /// Dimension shards the aggregation drained through (1 = single
+    /// absorb lane, the reference path).
+    pub agg_shards: usize,
+    /// Absorb compute ms attributed to each dimension shard, indexed by
+    /// shard (length = `agg_shards` when sharding is on; empty for the
+    /// single-lane path and the weight-space baselines). Near-equal
+    /// entries mean the contiguous `d`-split is balanced; a hot shard
+    /// flags a dense coordinate range worth re-splitting.
+    pub shard_absorb_ms: Vec<f64>,
     pub train_loss: f64,
     pub accuracy: Option<f64>,
     /// Which server pipeline produced this round: `"streaming"`
@@ -140,6 +149,11 @@ impl ExperimentResult {
                         "dec_worker_ms",
                         Json::Arr(r.dec_worker_ms.iter().map(|&v| Json::Num(v)).collect()),
                     )
+                    .set("agg_shards", Json::Num(r.agg_shards as f64))
+                    .set(
+                        "shard_absorb_ms",
+                        Json::Arr(r.shard_absorb_ms.iter().map(|&v| Json::Num(v)).collect()),
+                    )
                     .set("bpp", Json::Num(r.mean_bpp))
                     .set("loss", Json::Num(r.train_loss))
                     .set(
@@ -184,6 +198,8 @@ mod tests {
             dec_kernel_ms: 4.0,
             decode_workers: 2,
             dec_worker_ms: vec![2.5, 1.5],
+            agg_shards: 4,
+            shard_absorb_ms: vec![1.0, 1.25, 0.75, 1.0],
             train_loss: 0.5,
             accuracy: acc,
             pipeline: "streaming",
@@ -219,5 +235,9 @@ mod tests {
         let per_worker = rounds[0].get("dec_worker_ms").unwrap().as_arr().unwrap();
         assert_eq!(per_worker.len(), 2);
         assert_eq!(per_worker[0].as_f64().unwrap(), 2.5);
+        assert_eq!(rounds[0].get("agg_shards").unwrap().as_usize().unwrap(), 4);
+        let per_shard = rounds[0].get("shard_absorb_ms").unwrap().as_arr().unwrap();
+        assert_eq!(per_shard.len(), 4);
+        assert_eq!(per_shard[1].as_f64().unwrap(), 1.25);
     }
 }

@@ -88,6 +88,14 @@ pub struct ExperimentConfig {
     /// worker per available core. Bitwise identical at any setting; see
     /// `coordinator::DrainConfig`.
     pub decode_workers: usize,
+    /// Server aggregation shards (`--agg-shards N`): 1 keeps the single
+    /// absorb lane (the reference path), N > 1 partitions the parameter
+    /// space into N contiguous dimension shards — each with its own
+    /// pseudo-count slice, participation counters and scratch pool —
+    /// absorbed on N parallel lanes (`coordinator::ShardedAggregator`),
+    /// 0 uses one shard per available core. Bitwise identical at any
+    /// setting; the knob surface is documented in `docs/SCALING.md`.
+    pub agg_shards: usize,
 }
 
 /// Default decode-worker count: `$DELTAMASK_DECODE_WORKERS` when set (CI's
@@ -98,10 +106,28 @@ pub struct ExperimentConfig {
 /// malformed value silently falling back to the serial path would let the
 /// CI sharded re-run pass while exercising nothing.
 pub fn decode_workers_from_env() -> usize {
-    match std::env::var("DELTAMASK_DECODE_WORKERS") {
-        Ok(v) => v.parse().unwrap_or_else(|_| {
-            panic!("DELTAMASK_DECODE_WORKERS must be a non-negative integer, got '{v}'")
-        }),
+    knob_from_env("DELTAMASK_DECODE_WORKERS")
+}
+
+/// Default aggregation-shard count: `$DELTAMASK_AGG_SHARDS` when set
+/// (CI's tier-1 job re-runs the `fl_integration` suite with `=4` so the
+/// dimension-sharded absorb path is exercised end-to-end), else 1 (one
+/// absorb lane).
+///
+/// Panics if the variable is set but not a non-negative integer — a
+/// malformed value silently falling back to the single-lane path would
+/// let the CI sharded re-run pass while exercising nothing.
+pub fn agg_shards_from_env() -> usize {
+    knob_from_env("DELTAMASK_AGG_SHARDS")
+}
+
+/// Shared parse-or-panic policy for the two CI-gating env knobs: a set
+/// but malformed value must fail loudly, an unset one means 1 (serial).
+fn knob_from_env(var: &str) -> usize {
+    match std::env::var(var) {
+        Ok(v) => v
+            .parse()
+            .unwrap_or_else(|_| panic!("{var} must be a non-negative integer, got '{v}'")),
         Err(_) => 1,
     }
 }
@@ -130,6 +156,7 @@ impl Default for ExperimentConfig {
             arch_override: None,
             pipeline: crate::coordinator::PipelineMode::default(),
             decode_workers: decode_workers_from_env(),
+            agg_shards: agg_shards_from_env(),
         }
     }
 }

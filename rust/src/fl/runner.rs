@@ -31,6 +31,11 @@ struct RoundTally {
     /// Decode compute seconds attributed to each decode worker
     /// (`coordinator::DrainReport::dec_by_worker`).
     dec_by_worker: Vec<f64>,
+    /// Aggregation shards the round drained through (1 = single lane).
+    agg_shards: usize,
+    /// Absorb compute seconds attributed to each dimension shard
+    /// (`ShardedAggregator::absorb_secs_by_shard`; empty when unsharded).
+    absorb_by_shard: Vec<f64>,
     loss: f64,
 }
 
@@ -232,6 +237,8 @@ impl<'a> Runner<'a> {
             };
             let kf = plan.expected() as f64;
             let dec_worker_ms: Vec<f64> = tally.dec_by_worker.iter().map(|s| s * 1e3).collect();
+            let shard_absorb_ms: Vec<f64> =
+                tally.absorb_by_shard.iter().map(|s| s * 1e3).collect();
             rounds.push(RoundMetrics {
                 round,
                 kappa: plan.kappa,
@@ -242,6 +249,8 @@ impl<'a> Runner<'a> {
                 dec_kernel_ms: tally.dec_secs * 1e3,
                 decode_workers: dec_worker_ms.len().max(1),
                 dec_worker_ms,
+                agg_shards: tally.agg_shards.max(1),
+                shard_absorb_ms,
                 train_loss: tally.loss / kf,
                 accuracy: acc,
                 pipeline: self.cfg.pipeline.as_str(),
@@ -308,13 +317,30 @@ impl<'a> Runner<'a> {
             }
         };
 
-        let drain_cfg = DrainConfig::new(cfg.pipeline, cfg.decode_workers);
+        let drain_cfg = DrainConfig::sharded(cfg.pipeline, cfg.decode_workers, cfg.agg_shards);
         let server = &mut self.server;
         let dec_pool = &self.scratch;
         let server_loop = move || -> Result<RoundTally> {
             // All decoding + aggregation happens inside the coordinator's
-            // drain loop; the runner only reduces the report.
-            let report = drain_round(&mut channel, plan, codec, server, drain_cfg, dec_pool)?;
+            // drain loop; the runner only reduces the report. With
+            // `agg_shards > 1` the round drains into a dimension-sharded
+            // view of the server, stitched back (bitwise-identically)
+            // once the drain completes; a failed drain drops the view,
+            // which joins its absorb lanes without touching the server.
+            let (report, agg_shards, absorb_by_shard) =
+                if drain_cfg.resolved_shards() <= 1 {
+                    let report =
+                        drain_round(&mut channel, plan, codec, server, drain_cfg, dec_pool)?;
+                    (report, 1, Vec::new())
+                } else {
+                    let mut view = server.shard_view(drain_cfg.resolved_shards());
+                    let report =
+                        drain_round(&mut channel, plan, codec, &mut view, drain_cfg, dec_pool)?;
+                    let shards = view.shard_count();
+                    let absorb = view.absorb_secs_by_shard();
+                    server.adopt_shards(view);
+                    (report, shards, absorb)
+                };
             Ok(RoundTally {
                 // Exact byte accounting from the transport (integer-valued,
                 // so order-independent).
@@ -322,6 +348,8 @@ impl<'a> Runner<'a> {
                 enc_secs: report.total_enc_secs(),
                 dec_secs: report.dec_secs,
                 dec_by_worker: report.dec_by_worker,
+                agg_shards,
+                absorb_by_shard,
                 loss: report.total_loss(),
             })
         };
@@ -480,6 +508,8 @@ impl<'a> Runner<'a> {
                 dec_kernel_ms: 0.0,
                 decode_workers: 1,
                 dec_worker_ms: Vec::new(),
+                agg_shards: 1,
+                shard_absorb_ms: Vec::new(),
                 train_loss: loss / participants.len() as f64,
                 accuracy: acc,
                 pipeline: self.cfg.pipeline.as_str(),
@@ -575,6 +605,8 @@ impl<'a> Runner<'a> {
                 dec_kernel_ms: 0.0,
                 decode_workers: 1,
                 dec_worker_ms: Vec::new(),
+                agg_shards: 1,
+                shard_absorb_ms: Vec::new(),
                 train_loss: loss / participants.len() as f64,
                 accuracy: acc,
                 pipeline: self.cfg.pipeline.as_str(),

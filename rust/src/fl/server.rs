@@ -21,8 +21,10 @@
 //! streaming triplet and is what the `PipelineMode::Batch` A/B path uses.
 
 use crate::compress::{Family, Update};
+use crate::coordinator::{shard_bounds, ShardedAggregator};
 use crate::model::theta_from_scores;
 use std::collections::BTreeMap;
+use std::ops::Range;
 
 /// The global probability mask and its Beta posterior.
 #[derive(Clone, Debug)]
@@ -209,6 +211,104 @@ impl MaskServer {
             let p = p.clamp(1e-6, 1.0 - 1e-6);
             *s = (p / (1.0 - p)).ln();
         }
+    }
+
+    // -----------------------------------------------------------------
+    // Dimension sharding (the million-client aggregation seam)
+    // -----------------------------------------------------------------
+
+    /// Carve the contiguous coordinate range `range` out into an
+    /// independent slice server: same round counter, prior-reset schedule
+    /// and aggregation rule, restricted to `range.len()` coordinates.
+    /// Every update rule here is per-coordinate (pseudo-count adds,
+    /// slot-ordered FedAvg on scores, the Eq. 3 posterior mode), so a
+    /// slice server run over a round's sub-updates performs *exactly* the
+    /// arithmetic the whole server performs on those coordinates.
+    fn shard_slice(&self, range: Range<usize>) -> MaskServer {
+        MaskServer {
+            theta_g: self.theta_g[range.clone()].to_vec(),
+            s_g: self.s_g[range.clone()].to_vec(),
+            alpha: self.alpha[range.clone()].to_vec(),
+            beta: self.beta[range.clone()].to_vec(),
+            lambda0: self.lambda0,
+            rho: self.rho,
+            round: self.round,
+            stream: None,
+            spent: Vec::new(),
+        }
+    }
+
+    /// Build a dimension-sharded aggregation view of this server: `S`
+    /// contiguous shards (see [`shard_bounds`]; clamped so no shard is
+    /// empty), each an independent slice server with its own pseudo-count
+    /// slice, participation counters and scratch pool, absorbed on `S`
+    /// parallel lanes. Drive the view through one round
+    /// (`coordinator::drain_round` with `DrainConfig::shards > 1`, or the
+    /// plain `Aggregator` interface), then stitch it back with
+    /// [`MaskServer::adopt_shards`] — the result is **bitwise identical**
+    /// to having aggregated the round unsharded.
+    ///
+    /// ```
+    /// use deltamask::compress::Update;
+    /// use deltamask::coordinator::Aggregator;
+    /// use deltamask::fl::server::MaskServer;
+    ///
+    /// let mut mono = MaskServer::with_theta0(6, 1.0, 0.5);
+    /// let mut split = mono.clone();
+    /// let updates = vec![
+    ///     Update::Mask(vec![1.0, 0.0, 1.0, 1.0, 0.0, 1.0]),
+    ///     Update::Mask(vec![0.0, 0.0, 1.0, 0.0, 1.0, 1.0]),
+    /// ];
+    /// mono.aggregate(&updates);
+    ///
+    /// let mut view = split.shard_view(3);
+    /// view.begin_round(2);
+    /// for (slot, u) in updates.iter().enumerate() {
+    ///     view.absorb(slot, u.clone());
+    /// }
+    /// view.finish_round();
+    /// split.adopt_shards(view);
+    ///
+    /// assert_eq!(mono.theta_g, split.theta_g); // bitwise
+    /// assert_eq!(mono.s_g, split.s_g);
+    /// assert_eq!(mono.round, split.round);
+    /// ```
+    pub fn shard_view(&self, shards: usize) -> ShardedAggregator<MaskServer> {
+        ShardedAggregator::new(
+            shard_bounds(self.theta_g.len(), shards)
+                .into_iter()
+                .map(|range| (range.clone(), self.shard_slice(range)))
+                .collect(),
+        )
+    }
+
+    /// Stitch a drained shard view back into this server: copy every
+    /// slice's posterior / score state into its coordinate range and
+    /// adopt the advanced round counter. The stitched global state is
+    /// bitwise identical to an unsharded round (see
+    /// [`MaskServer::shard_view`]).
+    ///
+    /// Panics if the view's geometry does not match this server or the
+    /// slices' round counters disagree (both are coordinator bugs).
+    pub fn adopt_shards(&mut self, view: ShardedAggregator<MaskServer>) {
+        assert_eq!(view.d(), self.theta_g.len(), "shard view dimensionality");
+        let mut round = None;
+        for (range, slice) in view.into_shards() {
+            assert_eq!(slice.theta_g.len(), range.len(), "slice/range mismatch");
+            self.theta_g[range.clone()].copy_from_slice(&slice.theta_g);
+            self.s_g[range.clone()].copy_from_slice(&slice.s_g);
+            self.alpha[range.clone()].copy_from_slice(&slice.alpha);
+            self.beta[range.clone()].copy_from_slice(&slice.beta);
+            match round {
+                None => round = Some(slice.round),
+                Some(r) => assert_eq!(r, slice.round, "shard rounds diverged"),
+            }
+        }
+        if let Some(r) = round {
+            self.round = r;
+        }
+        self.stream = None;
+        self.spent.clear();
     }
 }
 
@@ -432,5 +532,53 @@ mod tests {
         srv.begin_round(2);
         srv.absorb(0, Update::Mask(vec![1.0, 0.0]));
         srv.finish_round();
+    }
+
+    /// Random rounds for `rounds` iterations of `family`, aggregated
+    /// monolithically and through a shard view — must match bitwise after
+    /// every stitch, including across a prior reset (ρ=0.5 ⇒ period 2).
+    fn shard_trajectory_case(shards: usize, d: usize, mask_family: bool) {
+        use crate::coordinator::Aggregator as _;
+        let mut rng = Xoshiro256pp::new(31 + shards as u64);
+        let mut mono = MaskServer::with_theta0(d, 0.5, 0.85);
+        let mut split = mono.clone();
+        for round in 0..4 {
+            let k = 2 + round % 3;
+            let updates: Vec<Update> = (0..k)
+                .map(|_| {
+                    if mask_family {
+                        Update::Mask(
+                            (0..d)
+                                .map(|_| if rng.next_f32() < 0.5 { 1.0 } else { 0.0 })
+                                .collect(),
+                        )
+                    } else {
+                        Update::ScoreDelta((0..d).map(|_| rng.next_f32() - 0.5).collect())
+                    }
+                })
+                .collect();
+            mono.aggregate(&updates);
+            let mut view = split.shard_view(shards);
+            view.begin_round(k);
+            // Adversarial arrival order: reversed.
+            for slot in (0..k).rev() {
+                view.absorb(slot, updates[slot].clone());
+            }
+            view.finish_round();
+            split.adopt_shards(view);
+            assert_eq!(mono.theta_g, split.theta_g, "round {round}");
+            assert_eq!(mono.s_g, split.s_g, "round {round}");
+            assert_eq!(mono.round, split.round, "round {round}");
+        }
+    }
+
+    #[test]
+    fn shard_view_trajectories_match_monolithic_bitwise() {
+        for shards in [1usize, 2, 3, 8] {
+            shard_trajectory_case(shards, 257, true);
+            shard_trajectory_case(shards, 257, false);
+        }
+        // More shards than coordinates: clamped, still exact.
+        shard_trajectory_case(16, 5, true);
     }
 }

@@ -9,8 +9,10 @@
 //!   `RoundPlan`/`RoundEngine` for sampling, κ scheduling and shared-seed
 //!   mask derivation; a `Transport` carrying encoded updates with wire
 //!   accounting; a work-stealing `ClientPool`; the batch-vs-streaming
-//!   `PipelineMode`; and a `DrainConfig`-sharded server decode pool wired
-//!   to `--decode-workers`), and the [`fl`] experiment layer on top of it
+//!   `PipelineMode`; a `DrainConfig`-sharded server decode pool wired to
+//!   `--decode-workers`; and the dimension-sharded
+//!   `coordinator::ShardedAggregator` absorb lanes wired to
+//!   `--agg-shards`), and the [`fl`] experiment layer on top of it
 //!   (state ownership, the streaming Bayesian [`fl::server::MaskServer`],
 //!   baselines, metrics). Updates are decoded and absorbed per-arrival —
 //!   the server never materializes a round's O(K·d) update set — plus the
@@ -30,9 +32,14 @@
 //!
 //! * **`docs/ARCHITECTURE.md`** — the contributor-facing layer map
 //!   (filters → codec → compress → coordinator → fl), the round lifecycle
-//!   (plan → encode → wire → decode → absorb → finish), where the sharded
-//!   decode workers sit, and the wire-format invariants each layer
-//!   guarantees. Read it before touching the coordinator or a codec.
+//!   (plan → encode → wire → decode → shard-split absorb → finish/stitch),
+//!   where the sharded decode workers and the dimension-sharded absorb
+//!   lanes sit, and the wire-format invariants each layer guarantees.
+//!   Read it before touching the coordinator or a codec.
+//! * **`docs/SCALING.md`** — the operator's guide to the server scaling
+//!   knobs (`--pipeline`, `--decode-workers`, `--agg-shards`): what each
+//!   parallelizes, how they compose, which traffic regime needs which,
+//!   and how to tune them from `RoundMetrics`/`BENCH_hotpaths.json`.
 //! * **`README.md`** — build/run/test quickstart and the CLI tour.
 //! * **`benches/README.md`** — the tracked hot-path suite, the
 //!   `BENCH_hotpaths.json` schema (`deltamask-hotpaths-v1`), how to
@@ -47,8 +54,9 @@
 //! per client session, a `compress::ScratchPool` of decode buffers cycling
 //! through `coordinator::drain_round` ↔ `Aggregator::reclaim_buffer`), so
 //! steady-state rounds allocate nothing on the wire path — and the server
-//! decode sweep itself shards across a worker pool
-//! ([`coordinator::DrainConfig`], CLI `--decode-workers N`). Every batched
+//! decode sweep shards across a worker pool while the absorb sweep shards
+//! across the dimension axis ([`coordinator::DrainConfig`], CLI
+//! `--decode-workers N` / `--agg-shards S`). Every batched
 //! or sharded variant is parity-locked to a retained scalar/serial oracle:
 //! it changes *how* work is scheduled or queried, never what is encoded —
 //! all 8 codecs stay bitwise-identical on the wire and in the aggregate.

@@ -11,16 +11,19 @@
 //!   deltamask train --backend xla --arch test --dataset cifar10
 //!   deltamask train --pipeline batch --method fedpm   (A/B the old barrier)
 //!   deltamask train --decode-workers 8    (shard server decode; 0 = cores)
+//!   deltamask train --agg-shards 4   (shard aggregation by dimension; 0 = cores)
 //!   deltamask sweep --datasets cifar10,svhn --methods deltamask,fedpm
 //!   deltamask filters --entries 100000
 //!
 //! The layer map and round lifecycle behind these commands are documented
-//! in docs/ARCHITECTURE.md.
+//! in docs/ARCHITECTURE.md; how the server scaling knobs compose is
+//! docs/SCALING.md.
 
 use deltamask::bench::Table;
 use deltamask::coordinator::PipelineMode;
 use deltamask::fl::{
-    decode_workers_from_env, run_experiment, BackendKind, ExperimentConfig, HeadInit,
+    agg_shards_from_env, decode_workers_from_env, run_experiment, BackendKind, ExperimentConfig,
+    HeadInit,
 };
 use deltamask::util::cli::Args;
 
@@ -55,6 +58,7 @@ fn parse_cfg(args: &Args) -> ExperimentConfig {
         arch_override: None,
         pipeline: PipelineMode::from_args(args),
         decode_workers: args.usize("decode-workers", decode_workers_from_env()),
+        agg_shards: args.usize("agg-shards", agg_shards_from_env()),
     };
     if let Some(w) = args.get("width") {
         let w: usize = w.parse().expect("--width must be an integer");
@@ -66,7 +70,7 @@ fn parse_cfg(args: &Args) -> ExperimentConfig {
 fn cmd_train(args: &Args) -> anyhow::Result<()> {
     let cfg = parse_cfg(args);
     eprintln!(
-        "training: method={} dataset={} arch={} d={} N={} R={} rho={} alpha={} backend={:?} pipeline={} decode_workers={}",
+        "training: method={} dataset={} arch={} d={} N={} R={} rho={} alpha={} backend={:?} pipeline={} decode_workers={} agg_shards={}",
         cfg.method,
         cfg.dataset,
         cfg.arch,
@@ -77,7 +81,8 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         cfg.dirichlet_alpha,
         cfg.backend,
         cfg.pipeline.as_str(),
-        cfg.decode_workers
+        cfg.decode_workers,
+        cfg.agg_shards
     );
     let res = run_experiment(&cfg)?;
     for r in &res.rounds {

@@ -17,14 +17,28 @@ pub mod timer;
 /// full `sort` would be the asymptotic bottleneck of the encode path at
 /// d ≈ 10⁵–10⁷ mask parameters.
 pub fn top_k_indices(score: &[f32], k: usize) -> Vec<u32> {
+    let mut idx = Vec::new();
+    top_k_indices_into(score, k, &mut idx);
+    idx
+}
+
+/// [`top_k_indices`] writing into a caller-owned buffer, so hot encode
+/// paths reuse the quickselect index array across rounds (it lives in
+/// `compress::EncodeScratch::rank`, per `ClientSession`) instead of
+/// reallocating an `n`-length `Vec` per selection. Leaves exactly the
+/// selected indexes in `idx`, element-for-element identical to
+/// [`top_k_indices`] — same fill order, same introselect, same comparator
+/// — so every byte downstream of the selection is unchanged.
+pub fn top_k_indices_into(score: &[f32], k: usize, idx: &mut Vec<u32>) {
     let n = score.len();
+    idx.clear();
     if k == 0 {
-        return Vec::new();
+        return;
     }
+    idx.extend(0..n as u32);
     if k >= n {
-        return (0..n as u32).collect();
+        return;
     }
-    let mut idx: Vec<u32> = (0..n as u32).collect();
     // Introselect (std's pattern-defeating quickselect): O(n) expected AND
     // robust to heavily-tied scores — KL scores tie massively when θ values
     // come from a few levels, which degraded a naive two-way quickselect to
@@ -35,7 +49,6 @@ pub fn top_k_indices(score: &[f32], k: usize) -> Vec<u32> {
             .unwrap_or(std::cmp::Ordering::Equal)
     });
     idx.truncate(k);
-    idx
 }
 
 #[cfg(test)]
@@ -80,5 +93,28 @@ mod tests {
         let scores = vec![1.0f32; 64];
         let got = top_k_indices(&scores, 10);
         assert_eq!(got.len(), 10);
+    }
+
+    /// Parity oracle for the scratch-reusing variant: the buffer version
+    /// must be element-for-element identical to the allocating one, with
+    /// the same buffer reused across calls of varying `n` and `k` (the
+    /// cross-round usage pattern in `EncodeScratch`).
+    #[test]
+    fn top_k_into_matches_allocating_variant_across_reuses() {
+        let mut rng = rng::Xoshiro256pp::new(9);
+        let mut buf = Vec::new();
+        for n in [1usize, 2, 5, 257, 1024, 64] {
+            let scores: Vec<f32> = (0..n).map(|_| rng.next_f32()).collect();
+            for k in [0usize, 1, n / 2, n - 1, n, n + 3] {
+                let fresh = top_k_indices(&scores, k);
+                top_k_indices_into(&scores, k, &mut buf);
+                assert_eq!(fresh, buf, "n={n} k={k}");
+            }
+        }
+        // Heavily-tied scores take the same path through both variants.
+        let tied = vec![0.5f32; 97];
+        let fresh = top_k_indices(&tied, 13);
+        top_k_indices_into(&tied, 13, &mut buf);
+        assert_eq!(fresh, buf);
     }
 }

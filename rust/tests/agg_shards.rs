@@ -1,0 +1,355 @@
+//! Dimension-sharded aggregator determinism suite: draining a round into
+//! a [`ShardedAggregator`] view of the server (`DrainConfig::shards > 1`)
+//! and stitching the shard slices back must be **bitwise identical** to
+//! the single-lane reference path — for every codec (both update
+//! families), both pipeline modes, shard counts {1, 2, 3, 8} and both
+//! decode-stage shapes (inline and worker-routed), under adversarial
+//! arrival orders. A malformed record under sharded absorb must abort
+//! the round cleanly: decode workers joined, every shard lane joined,
+//! the view reusable.
+
+use deltamask::compress::{self, Encoded, ScratchPool};
+use deltamask::coordinator::{
+    drain_round, shard_bounds, ChannelTransport, DrainConfig, Payload, PipelineMode, RoundEngine,
+    RoundPlan, WireMessage,
+};
+use deltamask::fl::server::MaskServer;
+use deltamask::model::sample_mask_seeded;
+use deltamask::util::rng::Xoshiro256pp;
+
+fn logit(p: f32) -> f32 {
+    let p = p.clamp(1e-6, 1.0 - 1e-6);
+    (p / (1.0 - p)).ln()
+}
+
+/// A plausible round for `codec` against an arbitrary global state:
+/// drifted posteriors, shared-seed masks, score mirrors — the same
+/// recipe as `decode_workers.rs` / the fl_integration property tests.
+fn encode_round(
+    name: &str,
+    plan: &RoundPlan,
+    rng: &mut Xoshiro256pp,
+) -> Vec<Encoded> {
+    let codec = compress::by_name(name).unwrap();
+    let mut encs = Vec::new();
+    for slot in 0..plan.expected() {
+        let theta_k: Vec<f32> = plan
+            .theta_g
+            .iter()
+            .map(|&p| (p + 0.3 * (rng.next_f32() - 0.5)).clamp(0.01, 0.99))
+            .collect();
+        let s_k: Vec<f32> = theta_k.iter().map(|&p| logit(p)).collect();
+        let mut mask_k = Vec::new();
+        sample_mask_seeded(&theta_k, plan.seed, &mut mask_k);
+        let ectx = plan.encode_ctx(slot, &theta_k, &mask_k, &s_k);
+        encs.push(codec.encode(&ectx).unwrap_or_else(|e| panic!("{name}: {e}")));
+    }
+    encs
+}
+
+fn round_fixture(name: &str, d: usize, k: usize, trial: u64) -> (RoundPlan, Vec<Encoded>) {
+    let mut rng = Xoshiro256pp::new(0x5A4D ^ trial.wrapping_mul(0x9e37_79b9));
+    let theta_g: Vec<f32> = (0..d).map(|_| 0.05 + 0.9 * rng.next_f32()).collect();
+    let s_g: Vec<f32> = theta_g.iter().map(|&p| logit(p)).collect();
+    let mut engine = RoundEngine::new(trial, k, 1.0, 0.8, 0.25, 3);
+    let plan = engine.plan(0, &theta_g, &s_g);
+    let encs = encode_round(name, &plan, &mut rng);
+    (plan, encs)
+}
+
+fn send_all(plan: &RoundPlan, encs: &[Encoded], order: &[usize]) -> ChannelTransport {
+    let (channel, sender) = ChannelTransport::new();
+    for &slot in order {
+        sender
+            .send(WireMessage {
+                round: plan.round,
+                client_id: plan.participants[slot],
+                slot,
+                payload: Payload::Update(encs[slot].clone()),
+                enc_secs: 0.125 * (slot as f64 + 1.0),
+                loss: 0.5 + slot as f32,
+            })
+            .unwrap();
+    }
+    drop(sender);
+    channel
+}
+
+/// Drain one round into a fresh server. `shards == 1` is the retained
+/// single-lane reference; `shards > 1` drains through a sharded view
+/// stitched back with `adopt_shards`. Returns the server plus the
+/// per-shard absorb timings (empty for the reference path).
+fn drain_with(
+    name: &str,
+    plan: &RoundPlan,
+    encs: &[Encoded],
+    order: &[usize],
+    mode: PipelineMode,
+    workers: usize,
+    shards: usize,
+) -> (MaskServer, Vec<f64>) {
+    let codec = compress::by_name(name).unwrap();
+    let mut channel = send_all(plan, encs, order);
+    let mut server = MaskServer::with_theta0(plan.d(), 1.0, 0.85);
+    let pool = ScratchPool::new();
+    let tag = || format!("{name} {mode:?} workers={workers} shards={shards}");
+    if shards <= 1 {
+        drain_round(
+            &mut channel,
+            plan,
+            codec.as_ref(),
+            &mut server,
+            DrainConfig::new(mode, workers),
+            &pool,
+        )
+        .unwrap_or_else(|e| panic!("{}: {e}", tag()));
+        (server, Vec::new())
+    } else {
+        let mut view = server.shard_view(shards);
+        drain_round(
+            &mut channel,
+            plan,
+            codec.as_ref(),
+            &mut view,
+            DrainConfig::sharded(mode, workers, shards),
+            &pool,
+        )
+        .unwrap_or_else(|e| panic!("{}: {e}", tag()));
+        let timings = view.absorb_secs_by_shard();
+        server.adopt_shards(view);
+        (server, timings)
+    }
+}
+
+/// The tentpole property: sharded drain (any shard count, either decode
+/// shape) ≡ the single-lane serial drain, bitwise, across all 8 codecs ×
+/// both pipeline modes × shard counts {1, 2, 3, 8}, with varying client
+/// counts and adversarial arrival orders.
+#[test]
+fn sharded_aggregation_is_bitwise_identical_to_single_lane_for_all_codecs() {
+    let d = 2048;
+    for (trial, name) in compress::all_names().iter().enumerate() {
+        let k = 2 + (trial % 5); // client counts 2..=6 across the roster
+        let (plan, encs) = round_fixture(name, d, k, trial as u64 + 1);
+        // Adversarial arrival order: reversed with a mid-list swap.
+        let mut order: Vec<usize> = (0..plan.expected()).rev().collect();
+        if order.len() > 2 {
+            let mid = order.len() / 2;
+            order.swap(0, mid);
+        }
+        for mode in [PipelineMode::Batch, PipelineMode::Streaming] {
+            let (reference, _) = drain_with(name, &plan, &encs, &order, mode, 1, 1);
+            for shards in [1usize, 2, 3, 8] {
+                // workers=1 exercises the inline decode→route path,
+                // workers=3 the worker-routed path.
+                for workers in [1usize, 3] {
+                    let (sharded, timings) =
+                        drain_with(name, &plan, &encs, &order, mode, workers, shards);
+                    let tag = format!("{name} {mode:?} workers={workers} shards={shards}");
+                    assert_eq!(
+                        reference.theta_g, sharded.theta_g,
+                        "{tag}: theta_g diverged"
+                    );
+                    assert_eq!(reference.s_g, sharded.s_g, "{tag}: s_g diverged");
+                    assert_eq!(reference.round, sharded.round, "{tag}");
+                    if shards > 1 {
+                        assert_eq!(timings.len(), shard_bounds(d, shards).len(), "{tag}");
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Sharding stays exact when `d` does not divide evenly (prime `d`) and
+/// when the shard count resolves from 0 (= cores) or exceeds `d`.
+#[test]
+fn uneven_auto_and_oversized_shard_counts_match_single_lane() {
+    let d = 1031; // prime: every shard boundary lands unevenly
+    let (plan, encs) = round_fixture("deltamask", d, 3, 77);
+    let order: Vec<usize> = (0..plan.expected()).collect();
+    let (reference, _) =
+        drain_with("deltamask", &plan, &encs, &order, PipelineMode::Streaming, 1, 1);
+    for shards in [2usize, 7, 8] {
+        let (sharded, _) = drain_with(
+            "deltamask",
+            &plan,
+            &encs,
+            &order,
+            PipelineMode::Streaming,
+            2,
+            shards,
+        );
+        assert_eq!(reference.theta_g, sharded.theta_g, "shards={shards}");
+    }
+    // shards = 0 resolves to the core count inside drain_round; the view
+    // must be built with the same resolution the drain will use.
+    let resolved = DrainConfig::sharded(PipelineMode::Streaming, 1, 0).resolved_shards();
+    let (sharded, _) = drain_with(
+        "deltamask",
+        &plan,
+        &encs,
+        &order,
+        PipelineMode::Streaming,
+        1,
+        resolved,
+    );
+    assert_eq!(reference.theta_g, sharded.theta_g, "shards=0 (cores)");
+    // Far more shards than dimensions: clamped to d, still exact.
+    let (tiny_plan, tiny_encs) = round_fixture("fedpm", 5, 2, 78);
+    let tiny_order = vec![1usize, 0];
+    let (tiny_ref, _) = drain_with(
+        "fedpm",
+        &tiny_plan,
+        &tiny_encs,
+        &tiny_order,
+        PipelineMode::Streaming,
+        1,
+        1,
+    );
+    let (tiny_sharded, timings) = drain_with(
+        "fedpm",
+        &tiny_plan,
+        &tiny_encs,
+        &tiny_order,
+        PipelineMode::Streaming,
+        1,
+        16,
+    );
+    assert_eq!(tiny_ref.theta_g, tiny_sharded.theta_g);
+    assert_eq!(timings.len(), 5, "16 shards over d=5 clamp to 5 lanes");
+}
+
+/// Multi-round trajectories: re-viewing and re-stitching the server every
+/// round (exactly what the Runner does) stays bitwise-identical to the
+/// monolithic server across rounds — including across the ⌈1/ρ⌉ prior
+/// reset, which each shard must apply on the same schedule.
+#[test]
+fn multi_round_sharded_trajectory_matches_monolithic() {
+    let d = 523;
+    for name in ["deltamask", "eden"] {
+        // ρ=0.5 ⇒ the Alg. 2 prior reset fires on rounds 0 and 2.
+        let mut mono = MaskServer::with_theta0(d, 0.5, 0.85);
+        let mut split = mono.clone();
+        let mut engine_m = RoundEngine::new(11, 4, 1.0, 0.8, 0.25, 4);
+        let mut engine_s = RoundEngine::new(11, 4, 1.0, 0.8, 0.25, 4);
+        for round in 0..4 {
+            let plan_m = engine_m.plan(round, &mono.theta_g, &mono.s_g);
+            let plan_s = engine_s.plan(round, &split.theta_g, &split.s_g);
+            assert_eq!(plan_m.seed, plan_s.seed, "{name} round {round}");
+            let mut rng = Xoshiro256pp::new(0xF0 ^ round as u64);
+            let encs = encode_round(name, &plan_m, &mut rng);
+            let order: Vec<usize> = (0..plan_m.expected()).rev().collect();
+
+            let codec = compress::by_name(name).unwrap();
+            let pool = ScratchPool::new();
+            let mut channel = send_all(&plan_m, &encs, &order);
+            drain_round(
+                &mut channel,
+                &plan_m,
+                codec.as_ref(),
+                &mut mono,
+                DrainConfig::serial(PipelineMode::Streaming),
+                &pool,
+            )
+            .unwrap();
+
+            let mut channel = send_all(&plan_s, &encs, &order);
+            let mut view = split.shard_view(3);
+            drain_round(
+                &mut channel,
+                &plan_s,
+                codec.as_ref(),
+                &mut view,
+                DrainConfig::sharded(PipelineMode::Streaming, 2, 3),
+                &pool,
+            )
+            .unwrap();
+            split.adopt_shards(view);
+
+            assert_eq!(mono.theta_g, split.theta_g, "{name} round {round}");
+            assert_eq!(mono.s_g, split.s_g, "{name} round {round}");
+            assert_eq!(mono.round, split.round, "{name} round {round}");
+        }
+    }
+}
+
+/// Error path: a malformed record under sharded absorb must abort the
+/// round with a clean error — decode workers joined, every shard lane
+/// joined (the drain calls `abort_round` on the view), and the view still
+/// decomposable afterwards. A fresh view then drains the corrected round
+/// bitwise-identically to the reference, proving nothing was poisoned.
+#[test]
+fn malformed_record_under_sharded_absorb_aborts_cleanly() {
+    let (plan, mut encs) = round_fixture("deltamask", 512, 4, 9);
+    let good = encs[2].clone();
+    encs[2] = Encoded {
+        bytes: vec![0u8; 8], // fails DeltaMask's record-length validation
+    };
+    let order: Vec<usize> = (0..plan.expected()).collect();
+    let codec = compress::by_name("deltamask").unwrap();
+    for mode in [PipelineMode::Batch, PipelineMode::Streaming] {
+        for workers in [1usize, 3] {
+            let mut channel = send_all(&plan, &encs, &order);
+            let server = MaskServer::with_theta0(plan.d(), 1.0, 0.85);
+            let mut view = server.shard_view(4);
+            let err = drain_round(
+                &mut channel,
+                &plan,
+                codec.as_ref(),
+                &mut view,
+                DrainConfig::sharded(mode, workers, 4),
+                &ScratchPool::new(),
+            )
+            .unwrap_err();
+            let msg = err.to_string();
+            assert!(
+                msg.contains("decode failed for slot 2"),
+                "{mode:?} workers={workers}: unexpected error: {msg}"
+            );
+            // All four lanes joined and handed their slices back.
+            assert_eq!(view.shard_count(), 4);
+            assert_eq!(view.into_shards().len(), 4);
+        }
+    }
+    // Corrected round through a fresh view: bitwise-identical recovery.
+    encs[2] = good;
+    let (reference, _) =
+        drain_with("deltamask", &plan, &encs, &order, PipelineMode::Streaming, 1, 1);
+    let (recovered, _) = drain_with(
+        "deltamask",
+        &plan,
+        &encs,
+        &order,
+        PipelineMode::Streaming,
+        3,
+        4,
+    );
+    assert_eq!(reference.theta_g, recovered.theta_g);
+    assert_eq!(reference.s_g, recovered.s_g);
+}
+
+/// `DrainConfig::shards > 1` against a plain (single-lane) aggregator is
+/// a coordinator misconfiguration: the drain must reject it with a clear
+/// error instead of silently falling back.
+#[test]
+fn sharded_drain_requires_a_sharded_aggregator() {
+    let (plan, encs) = round_fixture("fedpm", 256, 2, 21);
+    let order: Vec<usize> = (0..plan.expected()).collect();
+    let codec = compress::by_name("fedpm").unwrap();
+    let mut channel = send_all(&plan, &encs, &order);
+    let mut server = MaskServer::with_theta0(plan.d(), 1.0, 0.85);
+    let err = drain_round(
+        &mut channel,
+        &plan,
+        codec.as_ref(),
+        &mut server,
+        DrainConfig::sharded(PipelineMode::Streaming, 1, 4),
+        &ScratchPool::new(),
+    )
+    .unwrap_err();
+    assert!(
+        err.to_string().contains("dimension-sharded aggregator"),
+        "{err}"
+    );
+}

@@ -31,9 +31,12 @@ fn base_cfg() -> ExperimentConfig {
         theta0: 0.85,
         arch_override: None,
         pipeline: PipelineMode::Streaming,
-        // CI re-runs this suite with DELTAMASK_DECODE_WORKERS=4 so every
-        // end-to-end test also exercises the sharded server decode path.
+        // CI re-runs this suite with DELTAMASK_DECODE_WORKERS=4 and (in a
+        // separate run) DELTAMASK_AGG_SHARDS=4, so every end-to-end test
+        // also exercises the sharded server decode path and the
+        // dimension-sharded aggregation path.
         decode_workers: deltamask::fl::decode_workers_from_env(),
+        agg_shards: deltamask::fl::agg_shards_from_env(),
     }
 }
 
