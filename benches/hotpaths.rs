@@ -10,9 +10,11 @@
 //! `--smoke` shrinks the dimension sweep and iteration counts to CI scale.
 //! Cases: filter membership kernels, the DeltaMask wire path (scratch
 //! encode + pooled decode), the sharded `drain_round` (serial vs 4 decode
-//! workers, and vs 4 decode workers × 4 dimension shards — the `_s4`
-//! case), matmuls, and tracked PNG/DEFLATE throughputs. The JSON schema
-//! and the full bench workflow are documented in `benches/README.md`.
+//! workers, vs 4 decode workers × 4 dimension shards — the `_s4` case —
+//! and vs the round-resident `DrainPipeline` reusing one crew/view across
+//! iterations — the `_s4_resident` case), matmuls, and tracked
+//! PNG/DEFLATE throughputs. The JSON schema and the full bench workflow
+//! are documented in `benches/README.md`.
 
 use deltamask::bench::{summarize, time_fn, Table};
 use deltamask::codec::{deflate, png};
@@ -314,6 +316,41 @@ fn main() {
             batched_secs: sharded_agg_secs,
             parity,
         });
+
+        // Round-resident pipeline on the same round: ONE DrainPipeline +
+        // ONE resident shard view reused by every timed iteration, so the
+        // measurement includes zero thread spawns and (after warm-up) zero
+        // pool allocations — the `_s4` − `_s4_resident` gap is what
+        // `--persistent-pipeline` buys per round. ρ=1 resets the prior
+        // every round, so repeated drains of the same fixture are
+        // idempotent on the aggregation state.
+        {
+            use deltamask::coordinator::DrainPipeline;
+            use std::sync::Arc;
+
+            let codec_arc: Arc<dyn UpdateCodec> =
+                Arc::from(deltamask::compress::by_name("deltamask").unwrap());
+            let plan_arc = Arc::new(plan.clone());
+            let pipeline =
+                DrainPipeline::new(DrainConfig::sharded(PipelineMode::Streaming, workers, shards));
+            let mut resident_server = MaskServer::with_theta0(d, 1.0, 0.85);
+            let mut resident_view = resident_server.shard_view(shards);
+            let resident_secs = summarize(&time_fn(warmup, iters, || {
+                let mut channel = fill_channel();
+                pipeline
+                    .drain_round(&mut channel, &plan_arc, &codec_arc, &mut resident_view)
+                    .expect("resident drain_round");
+            }))
+            .min;
+            resident_server.adopt_shards(resident_view);
+            let parity = drain(1) == resident_server.theta_g;
+            pairs.push(Pair {
+                name: format!("drain_round_deltamask_d{d}_k{k}_w{workers}_s{shards}_resident"),
+                scalar_secs: serial_secs,
+                batched_secs: resident_secs,
+                parity,
+            });
+        }
     }
 
     // -- Matmul kernels: blocked vs the seed's scalar loops ----------------

@@ -41,6 +41,8 @@ fn main() -> anyhow::Result<()> {
         pipeline: PipelineMode::from_args(&args),
         decode_workers: args.usize("decode-workers", deltamask::fl::decode_workers_from_env()),
         agg_shards: args.usize("agg-shards", deltamask::fl::agg_shards_from_env()),
+        persistent_pipeline: args.flag("persistent-pipeline")
+            || deltamask::fl::persistent_pipeline_from_env(),
     };
 
     let split = if noniid { "non-IID Dir(0.1)" } else { "IID Dir(10)" };

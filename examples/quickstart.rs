@@ -39,6 +39,7 @@ fn main() -> anyhow::Result<()> {
         pipeline: PipelineMode::Streaming, // decode→absorb per arrival
         decode_workers: 2,                 // shard the server decode sweep
         agg_shards: 2,                     // shard aggregation by dimension
+        persistent_pipeline: true,         // spawn workers/lanes once, park between rounds
     };
 
     println!(

@@ -71,12 +71,32 @@ impl UpdateCodec for DeepReduceCodec {
         }
         Ok(Update::Mask(mask))
     }
+
+    /// Parse/validate (incl. the DEFLATE stage) once, then sweep the Bloom
+    /// membership kernel per `d`-range — same rejections as `decode`.
+    fn range_decoder(
+        &self,
+        bytes: &[u8],
+        ctx: &DecodeCtx,
+    ) -> Result<Option<Box<dyn super::MaskRangeDecoder>>> {
+        let _ = ctx;
+        Ok(Some(Box::new(self.parse_bloom(bytes)?)))
+    }
+}
+
+/// A restored Bloom filter range-decodes exactly like the full sweep
+/// restricted to the range (membership is a per-index property).
+impl super::MaskRangeDecoder for BloomFilter {
+    fn decode_range(&self, range: std::ops::Range<usize>, mask: &mut [f32]) {
+        debug_assert_eq!(mask.len(), range.len());
+        self.decode_mask_into_range(mask, range.start);
+    }
 }
 
 impl DeepReduceCodec {
-    /// Parse + validate the record and run the batched Bloom membership
-    /// kernel directly over `mask` (pre-filled with m^{g,t-1}).
-    fn decode_mask_inplace(&self, bytes: &[u8], mask: &mut [f32]) -> Result<()> {
+    /// The shared parse core: validate the record and rebuild the Bloom
+    /// filter (owned bit array — nothing borrows the wire bytes).
+    fn parse_bloom(&self, bytes: &[u8]) -> Result<BloomFilter> {
         let mut r = wire::Reader::new(bytes);
         let num_bits = r.u64()?;
         let num_hashes = r.u32()?;
@@ -93,10 +113,17 @@ impl DeepReduceCodec {
             "bloom num_bits outside payload"
         );
         ensure!((1..=64).contains(&num_hashes), "bad bloom hash count");
-        let bloom = BloomFilter::from_parts(&payload, num_bits, num_hashes, num_keys);
-        if num_keys > 0 {
-            bloom.decode_mask_into(mask);
-        }
+        Ok(BloomFilter::from_parts(
+            &payload, num_bits, num_hashes, num_keys,
+        ))
+    }
+
+    /// Parse + run the batched Bloom membership kernel directly over
+    /// `mask` (pre-filled with m^{g,t-1}).
+    fn decode_mask_inplace(&self, bytes: &[u8], mask: &mut [f32]) -> Result<()> {
+        let bloom = self.parse_bloom(bytes)?;
+        // The kernel no-ops on an empty key set.
+        bloom.decode_mask_into(mask);
         Ok(())
     }
 }
@@ -161,5 +188,44 @@ mod tests {
             extra_bloom > extra_bfuse,
             "paper §5.1: bloom fp ({extra_bloom}) must exceed bfuse fp ({extra_bfuse})"
         );
+    }
+
+    #[test]
+    fn range_decoder_tiles_to_the_full_decode() {
+        let d = 30_000;
+        let (theta, mk, mg) = setup(d, 5);
+        let ctx = EncodeCtx {
+            d,
+            theta_k: &theta,
+            theta_g: &theta,
+            mask_k: &mk,
+            mask_g: &mg,
+            s_k: &[],
+            s_g: &[],
+            kappa: 1.0,
+            seed: 0,
+        };
+        let dctx = DecodeCtx {
+            d,
+            mask_g: &mg,
+            s_g: &[],
+            seed: 0,
+        };
+        let dr = DeepReduceCodec::default();
+        let enc = dr.encode(&ctx).unwrap();
+        let Update::Mask(want) = dr.decode(&enc.bytes, &dctx).unwrap() else {
+            panic!()
+        };
+        let rd = dr
+            .range_decoder(&enc.bytes, &dctx)
+            .unwrap()
+            .expect("deepreduce supports range decoding");
+        let mut got = mg.clone();
+        for w in [0usize, d / 4, d / 2 + 13, d].windows(2) {
+            rd.decode_range(w[0]..w[1], &mut got[w[0]..w[1]]);
+        }
+        assert_eq!(got, want, "range tiling diverged from full decode");
+        // Malformed records are rejected at parse time, like decode.
+        assert!(dr.range_decoder(&enc.bytes[..6], &dctx).is_err());
     }
 }

@@ -266,15 +266,32 @@ impl BuiltFilter {
     /// Batched Eq. 5 kernel: one dispatch per round into the monomorphic
     /// per-filter block kernels, instead of one enum match per key.
     fn decode_mask_into(&self, mask: &mut [f32]) {
+        self.decode_mask_into_range(mask, 0);
+    }
+
+    /// Range-restricted Eq. 5 kernel: sweep member indexes `start ..
+    /// start + mask.len()` only. One dispatch per (record, range) — the
+    /// dimension-sharded drain calls this once per shard lane.
+    fn decode_mask_into_range(&self, mask: &mut [f32], start: usize) {
         match self {
-            BuiltFilter::B8(f) => f.decode_mask_into(mask),
-            BuiltFilter::B16(f) => f.decode_mask_into(mask),
-            BuiltFilter::B32(f) => f.decode_mask_into(mask),
-            BuiltFilter::B8A3(f) => f.decode_mask_into(mask),
-            BuiltFilter::X8(f) => f.decode_mask_into(mask),
-            BuiltFilter::X16(f) => f.decode_mask_into(mask),
-            BuiltFilter::X32(f) => f.decode_mask_into(mask),
+            BuiltFilter::B8(f) => f.decode_mask_into_range(mask, start),
+            BuiltFilter::B16(f) => f.decode_mask_into_range(mask, start),
+            BuiltFilter::B32(f) => f.decode_mask_into_range(mask, start),
+            BuiltFilter::B8A3(f) => f.decode_mask_into_range(mask, start),
+            BuiltFilter::X8(f) => f.decode_mask_into_range(mask, start),
+            BuiltFilter::X16(f) => f.decode_mask_into_range(mask, start),
+            BuiltFilter::X32(f) => f.decode_mask_into_range(mask, start),
         }
+    }
+}
+
+/// A restored filter is a [`MaskRangeDecoder`](super::MaskRangeDecoder):
+/// membership — false positives included — is a per-index property, so a
+/// range sweep is exactly the full sweep restricted to that range.
+impl super::MaskRangeDecoder for BuiltFilter {
+    fn decode_range(&self, range: std::ops::Range<usize>, mask: &mut [f32]) {
+        debug_assert_eq!(mask.len(), range.len());
+        self.decode_mask_into_range(mask, range.start);
     }
 }
 
@@ -400,15 +417,28 @@ impl UpdateCodec for DeltaMaskCodec {
         }
         Ok(Update::Mask(mask))
     }
+
+    /// Parse/validate once, then sweep per `d`-range: the restored filter
+    /// is the range decoder (its fingerprint array is owned, so nothing
+    /// borrows the wire bytes). Same validation — and therefore the same
+    /// malformed-record rejections — as the full decode.
+    fn range_decoder(
+        &self,
+        bytes: &[u8],
+        ctx: &DecodeCtx,
+    ) -> Result<Option<Box<dyn super::MaskRangeDecoder>>> {
+        let _ = ctx;
+        Ok(Some(Box::new(self.parse_filter(bytes)?)))
+    }
 }
 
 impl DeltaMaskCodec {
-    /// The shared decode core: parse + validate the record, rebuild the
-    /// filter, and run the batched Eq. 5 kernel directly over `mask`
-    /// (already initialized to m^{g,t-1}). The payload is borrowed from the
-    /// wire bytes or the decoded image — no intermediate copies.
-    fn decode_mask_inplace(&self, bytes: &[u8], ctx: &DecodeCtx, mask: &mut [f32]) -> Result<()> {
-        debug_assert_eq!(mask.len(), ctx.d);
+    /// The shared parse core: validate the record header and layout
+    /// params, unpack the PNG stage, and rebuild the filter. The payload
+    /// is borrowed from the wire bytes or the decoded image while the
+    /// fingerprint array is reassembled — no intermediate copies — and the
+    /// returned filter owns its state.
+    fn parse_filter(&self, bytes: &[u8]) -> Result<BuiltFilter> {
         ensure!(bytes.len() >= 30, "deltamask record too short");
         let kind = FilterKind::from_tag(bytes[0])?;
         let is_png = bytes[1] != 0;
@@ -432,13 +462,19 @@ impl DeltaMaskCodec {
             rest
         };
         validate_filter_parts(kind, layout_a, layout_b, payload.len())?;
-        let filter = BuiltFilter::restore(kind, seed, layout_a, layout_b, payload, num_keys);
+        Ok(BuiltFilter::restore(
+            kind, seed, layout_a, layout_b, payload, num_keys,
+        ))
+    }
 
+    /// The shared decode core: [`Self::parse_filter`] + the batched Eq. 5
+    /// kernel directly over `mask` (already initialized to m^{g,t-1}).
+    fn decode_mask_inplace(&self, bytes: &[u8], ctx: &DecodeCtx, mask: &mut [f32]) -> Result<()> {
+        debug_assert_eq!(mask.len(), ctx.d);
+        let filter = self.parse_filter(bytes)?;
         // Eq. 5: batched membership query across all d positions, flipping
-        // hits in place.
-        if num_keys > 0 {
-            filter.decode_mask_into(mask);
-        }
+        // hits in place. (The kernels no-op on an empty key set.)
+        filter.decode_mask_into(mask);
         Ok(())
     }
 }
@@ -771,6 +807,87 @@ mod tests {
         };
         assert_eq!(got2, want);
         assert_eq!(pool.spares(), 0, "pooled decode must draw from the pool");
+    }
+
+    #[test]
+    fn range_decoder_tiles_to_the_full_decode_all_kinds() {
+        // The dimension-sharded decode contract: parse once, sweep per
+        // range — any tiling of [0, d) reproduces the full decode bitwise
+        // (false-positive flips included).
+        let d = 20_000;
+        let (tk, tg, mk, mg) = setup(d, 0.1, 21);
+        for kind in [
+            FilterKind::BFuse8,
+            FilterKind::BFuse16,
+            FilterKind::BFuse8Arity3,
+            FilterKind::Xor8,
+            FilterKind::Xor16,
+        ] {
+            let codec = DeltaMaskCodec::with_filter(kind);
+            let ctx = make_ctx(d, &tk, &tg, &mk, &mg, 0.7);
+            let enc = codec.encode(&ctx).unwrap();
+            let dec_ctx = DecodeCtx {
+                d,
+                mask_g: &mg,
+                s_g: &[],
+                seed: 99,
+            };
+            let Update::Mask(want) = codec.decode(&enc.bytes, &dec_ctx).unwrap() else {
+                panic!()
+            };
+            let rd = codec
+                .range_decoder(&enc.bytes, &dec_ctx)
+                .unwrap()
+                .expect("deltamask supports range decoding");
+            let mut got = mg.clone();
+            // Uneven tiling incl. an empty range and single-element ranges.
+            let cuts = [0usize, 1, 2, 2, d / 3, d / 2 + 7, d];
+            for w in cuts.windows(2) {
+                let (lo, hi) = (w[0], w[1]);
+                rd.decode_range(lo..hi, &mut got[lo..hi]);
+            }
+            assert_eq!(got, want, "{kind:?} range tiling diverged");
+        }
+        // Empty-Δ records range-decode to the unchanged baseline.
+        let theta = vec![0.5f32; 64];
+        let mut mask = Vec::new();
+        sample_mask_seeded(&theta, 1, &mut mask);
+        let codec = DeltaMaskCodec::default();
+        let ctx = make_ctx(64, &theta, &theta, &mask, &mask, 0.8);
+        let enc = codec.encode(&ctx).unwrap();
+        let dec_ctx = DecodeCtx {
+            d: 64,
+            mask_g: &mask,
+            s_g: &[],
+            seed: 99,
+        };
+        let rd = codec.range_decoder(&enc.bytes, &dec_ctx).unwrap().unwrap();
+        let mut got = mask.clone();
+        rd.decode_range(0..64, &mut got[..]);
+        assert_eq!(got, mask);
+    }
+
+    #[test]
+    fn range_decoder_rejects_what_decode_rejects() {
+        let d = 1_000;
+        let (tk, tg, mk, mg) = setup(d, 0.2, 22);
+        let codec = DeltaMaskCodec {
+            use_png: false,
+            ..Default::default()
+        };
+        let ctx = make_ctx(d, &tk, &tg, &mk, &mg, 1.0);
+        let enc = codec.encode(&ctx).unwrap();
+        let dec_ctx = DecodeCtx {
+            d,
+            mask_g: &mg,
+            s_g: &[],
+            seed: 99,
+        };
+        let mut bad = enc.bytes.clone();
+        bad[10..14].copy_from_slice(&0u32.to_le_bytes()); // zero segment length
+        assert!(codec.decode(&bad, &dec_ctx).is_err());
+        assert!(codec.range_decoder(&bad, &dec_ctx).is_err());
+        assert!(codec.range_decoder(&bad[..8], &dec_ctx).is_err(), "truncated");
     }
 
     #[test]

@@ -146,6 +146,40 @@ pub struct EncodeScratch {
     pub keys: Vec<u64>,
 }
 
+/// Lease accounting for a [`ScratchPool`]: how many `take_copy` calls were
+/// served from the free list (`hits`) versus forced to allocate a fresh
+/// buffer (`misses`). Counters are cumulative over the pool's lifetime;
+/// sample them before and after a round and subtract
+/// ([`PoolStats::delta_since`]) for per-round accounting. A pool that
+/// outlives its rounds (the round-resident drain pipeline) shows `misses`
+/// frozen after warm-up — that is the observable form of the cross-round
+/// zero-allocation property.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Leases served from the free list (no allocation).
+    pub hits: u64,
+    /// Leases that allocated because the free list was dry.
+    pub misses: u64,
+}
+
+impl PoolStats {
+    /// Counter deltas since an earlier sample of the same pool.
+    pub fn delta_since(self, baseline: PoolStats) -> PoolStats {
+        PoolStats {
+            hits: self.hits - baseline.hits,
+            misses: self.misses - baseline.misses,
+        }
+    }
+
+    /// Component-wise sum (for folding lane pools into one figure).
+    pub fn merged(self, other: PoolStats) -> PoolStats {
+        PoolStats {
+            hits: self.hits + other.hits,
+            misses: self.misses + other.misses,
+        }
+    }
+}
+
 /// Free-list of reusable `d`-length f32 update buffers for the server-side
 /// decode path. `drain_round` pops a spent buffer for each decode and the
 /// aggregator pushes buffers back once their contents are folded into the
@@ -156,22 +190,27 @@ pub struct EncodeScratch {
 /// (`DrainConfig::workers > 1`): each worker leases its output buffer with
 /// [`ScratchPool::take_copy`] and the absorb stage returns spent buffers
 /// with [`ScratchPool::put`]. The lock is held only for the push/pop, never
-/// across a decode.
+/// across a decode. Every lease is counted ([`ScratchPool::stats`]), so the
+/// zero-alloc steady state is observable, not just asserted.
 ///
 /// ```
 /// use deltamask::compress::ScratchPool;
 /// let pool = ScratchPool::new();
 /// let buf = pool.take_copy(&[1.0, 2.0]); // pool is dry: allocates
 /// assert_eq!(buf, vec![1.0, 2.0]);
+/// assert_eq!(pool.stats().misses, 1);
 /// pool.put(buf); // spent: back on the free list
 /// assert_eq!(pool.spares(), 1);
 /// let again = pool.take_copy(&[7.0]); // reuses the spare, no allocation
 /// assert_eq!(again, vec![7.0]);
 /// assert_eq!(pool.spares(), 0);
+/// assert_eq!((pool.stats().hits, pool.stats().misses), (1, 1));
 /// ```
 #[derive(Debug, Default)]
 pub struct ScratchPool {
     bufs: std::sync::Mutex<Vec<Vec<f32>>>,
+    hits: std::sync::atomic::AtomicU64,
+    misses: std::sync::atomic::AtomicU64,
 }
 
 impl ScratchPool {
@@ -182,7 +221,18 @@ impl ScratchPool {
     /// Pop a spare buffer filled with a copy of `init` (the m^{g,t-1}
     /// baseline for mask decodes), allocating only when the pool is dry.
     pub fn take_copy(&self, init: &[f32]) -> Vec<f32> {
-        let mut buf = self.bufs.lock().unwrap().pop().unwrap_or_default();
+        use std::sync::atomic::Ordering;
+        let spare = self.bufs.lock().unwrap().pop();
+        let mut buf = match spare {
+            Some(buf) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                buf
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                Vec::new()
+            }
+        };
         buf.clear();
         buf.extend_from_slice(init);
         buf
@@ -203,6 +253,34 @@ impl ScratchPool {
     pub fn spares(&self) -> usize {
         self.bufs.lock().unwrap().len()
     }
+
+    /// Cumulative lease counters (see [`PoolStats`]).
+    pub fn stats(&self) -> PoolStats {
+        use std::sync::atomic::Ordering;
+        PoolStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// A parsed-and-validated mask-family record that can reconstruct any
+/// contiguous sub-range of the Eq. 5 decode independently.
+///
+/// Parsing (header validation, PNG/DEFLATE unpacking, filter rebuild)
+/// happens **once** in [`UpdateCodec::range_decoder`]; the membership sweep
+/// then runs per `d`-range, so a dimension-sharded drain can hand each
+/// shard's range to its own absorb lane without ever materializing the
+/// full `d`-length reconstruction — one huge record parallelizes end to
+/// end (the decode sweep, not just the absorb). Range decoding is exact:
+/// concatenating `decode_range` over a tiling of `0..d` is bitwise
+/// identical to the full decode (membership — including the filter's
+/// false positives — is a per-index property).
+pub trait MaskRangeDecoder: Send + Sync {
+    /// Apply the record's mask flips to `mask`, which holds the m^{g,t-1}
+    /// baseline for coordinates `range` (`mask.len() == range.len()`);
+    /// member index `i` flips `mask[i - range.start]`.
+    fn decode_range(&self, range: std::ops::Range<usize>, mask: &mut [f32]);
 }
 
 pub trait UpdateCodec: Send + Sync {
@@ -283,6 +361,30 @@ pub trait UpdateCodec: Send + Sync {
     ) -> anyhow::Result<Update> {
         let _ = pool;
         self.decode(bytes, ctx)
+    }
+
+    /// Parse and validate a record **once** into a [`MaskRangeDecoder`]
+    /// whose membership sweep can then run per `d`-range (the
+    /// dimension-sharded drain decodes each shard's range directly into
+    /// that shard's absorb lane). Returns `Ok(None)` when the codec cannot
+    /// restrict its reconstruction to a range — delta-family transforms
+    /// (FWHT rotations, global dequantization) and dense mask bitmaps need
+    /// the whole vector — in which case callers fall back to
+    /// [`UpdateCodec::decode_pooled`] plus a split at shard boundaries.
+    /// Filter-backed mask codecs (DeltaMask, DeepReduce) override.
+    ///
+    /// Contract: for any tiling of `0..d`, initializing each tile from
+    /// `ctx.mask_g` and applying `decode_range` must reproduce the full
+    /// [`UpdateCodec::decode`] output bitwise, and parse/validation errors
+    /// must match `decode`'s (malformed records are rejected here, before
+    /// any range is swept).
+    fn range_decoder(
+        &self,
+        bytes: &[u8],
+        ctx: &DecodeCtx,
+    ) -> anyhow::Result<Option<Box<dyn MaskRangeDecoder>>> {
+        let _ = (bytes, ctx);
+        Ok(None)
     }
 }
 

@@ -52,11 +52,11 @@ use super::round::RoundPlan;
 use super::shard::ShardRouter;
 use super::transport::{Payload, Transport};
 use super::PipelineMode;
-use crate::compress::{Encoded, ScratchPool, Update, UpdateCodec};
+use crate::compress::{Encoded, PoolStats, ScratchPool, Update, UpdateCodec};
 use crate::util::timer::Stopwatch;
 use anyhow::{anyhow, bail, Result};
 use std::collections::VecDeque;
-use std::sync::{mpsc, Condvar, Mutex};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
 
 /// Streaming aggregation sink: a round is `begin_round(K)` → K×`absorb` →
 /// `finish_round`. Implemented by `fl::server::MaskServer`; any other sink
@@ -198,21 +198,32 @@ pub struct DrainReport {
     /// Total server-side decode compute seconds, summed over records. For
     /// the serial path this equals the decode wall time; for the sharded
     /// path it is the aggregate compute across workers (wall time is lower
-    /// — that gap is the speedup `benches/hotpaths.rs` tracks).
+    /// — that gap is the speedup `benches/hotpaths.rs` tracks). Routing
+    /// hand-offs and lane backpressure are never on this clock, and for
+    /// range-split records (dimension-sharded drain, range-capable codec)
+    /// only the parse/validate/filter-rebuild runs on the decode thread —
+    /// the per-shard membership sweeps run on the absorb lanes and are
+    /// accounted in their `absorb_secs_by_shard` timings.
     pub dec_secs: f64,
     /// Decode compute seconds attributed to each worker, indexed by worker
     /// id (length = resolved worker count; the serial path reports one
     /// entry). Sums to `dec_secs` up to f64 reduction order.
     pub dec_by_worker: Vec<f64>,
+    /// Decode-buffer pool accounting for this round (the pool handed to
+    /// the drain; shard-lane pools are reported by the aggregator). A
+    /// pool that outlives its rounds shows `misses` at zero once warm —
+    /// the observable cross-round zero-allocation property.
+    pub pool: PoolStats,
 }
 
 impl DrainReport {
-    fn new(expected: usize, workers: usize) -> Self {
+    pub(crate) fn new(expected: usize, workers: usize) -> Self {
         Self {
             loss_by_slot: vec![0.0; expected],
             enc_by_slot: vec![0.0; expected],
             dec_secs: 0.0,
             dec_by_worker: vec![0.0; workers],
+            pool: PoolStats::default(),
         }
     }
 
@@ -307,19 +318,22 @@ pub fn drain_round(
     pool: &ScratchPool,
 ) -> Result<DrainReport> {
     let workers = cfg.resolved_workers();
-    if cfg.resolved_shards() > 1 {
+    let pool_before = pool.stats();
+    let mut report = if cfg.resolved_shards() > 1 {
         drain_shard_routed(transport, plan, codec, agg, cfg.mode, pool, workers)
     } else if workers <= 1 {
         drain_serial(transport, plan, codec, agg, cfg.mode, pool)
     } else {
         drain_decode_workers(transport, plan, codec, agg, cfg.mode, pool, workers)
-    }
+    }?;
+    report.pool = pool.stats().delta_since(pool_before);
+    Ok(report)
 }
 
 /// Receive and validate the next wire message, recording its per-slot
 /// accounting. Shared by the serial and sharded paths so both reject the
 /// same malformed inputs with the same messages.
-fn recv_validated(
+pub(crate) fn recv_validated(
     transport: &mut dyn Transport,
     got: usize,
     expected: usize,
@@ -407,8 +421,9 @@ fn drain_serial(
 /// MPMC job queue feeding the decode workers: the draining thread pushes
 /// `(slot, Encoded)` records, workers pop them under a condvar. `close`
 /// stops intake but lets workers drain what remains; `abort` additionally
-/// drops pending jobs (error shutdown).
-struct DecodeQueue {
+/// drops pending jobs (error shutdown). Shared with the round-resident
+/// [`DrainPipeline`](super::DrainPipeline), which creates one per round.
+pub(crate) struct DecodeQueue {
     state: Mutex<QueueState>,
     ready: Condvar,
 }
@@ -419,7 +434,7 @@ struct QueueState {
 }
 
 impl DecodeQueue {
-    fn new() -> Self {
+    pub(crate) fn new() -> Self {
         Self {
             state: Mutex::new(QueueState {
                 jobs: VecDeque::new(),
@@ -429,17 +444,17 @@ impl DecodeQueue {
         }
     }
 
-    fn push(&self, slot: usize, enc: Encoded) {
+    pub(crate) fn push(&self, slot: usize, enc: Encoded) {
         self.state.lock().unwrap().jobs.push_back((slot, enc));
         self.ready.notify_one();
     }
 
-    fn close(&self) {
+    pub(crate) fn close(&self) {
         self.state.lock().unwrap().closed = true;
         self.ready.notify_all();
     }
 
-    fn abort(&self) {
+    pub(crate) fn abort(&self) {
         let mut q = self.state.lock().unwrap();
         q.closed = true;
         q.jobs.clear();
@@ -449,7 +464,7 @@ impl DecodeQueue {
 
     /// Next job, blocking until one is available; `None` once the queue is
     /// closed and drained.
-    fn next(&self) -> Option<(usize, Encoded)> {
+    pub(crate) fn next(&self) -> Option<(usize, Encoded)> {
         let mut q = self.state.lock().unwrap();
         loop {
             if let Some(job) = q.jobs.pop_front() {
@@ -460,6 +475,46 @@ impl DecodeQueue {
             }
             q = self.ready.wait(q).unwrap();
         }
+    }
+}
+
+/// Decode one record for the dimension-sharded drain and hand its shard
+/// splits to the absorb lanes. Mask-family codecs that support
+/// range-restricted reconstruction ([`UpdateCodec::range_decoder`]) are
+/// parsed/validated once here; the per-shard Eq. 5 sweeps then run **on
+/// the lane threads** (each lane sweeps its own `d`-range into a buffer
+/// leased from its own pool) — the full `d`-length reconstruction is
+/// never materialized and no single thread sweeps the whole record.
+/// Codecs without range support fall back to a full pooled decode split
+/// at shard boundaries. Both paths are bitwise identical (the
+/// [`MaskRangeDecoder`](crate::compress::MaskRangeDecoder) contract).
+///
+/// Returns the decode compute seconds spent on the **calling** thread
+/// (parse/validate/filter-rebuild for the range path, the full decode for
+/// the fallback) — routing hand-offs and lane backpressure are
+/// deliberately outside the clock, and range-split sweep time is
+/// accounted by the lanes (`absorb_secs_by_shard`).
+pub(crate) fn decode_and_route(
+    codec: &dyn UpdateCodec,
+    plan: &RoundPlan,
+    slot: usize,
+    enc: &Encoded,
+    pool: &ScratchPool,
+    router: &ShardRouter,
+) -> Result<f64> {
+    let ctx = plan.decode_ctx(slot);
+    let t = Stopwatch::new();
+    if let Some(decoder) = codec.range_decoder(&enc.bytes, &ctx)? {
+        let dec_secs = t.elapsed_secs();
+        let decoder: Arc<dyn crate::compress::MaskRangeDecoder> = Arc::from(decoder);
+        router.route_decoded_ranges(slot, &plan.mask_g, decoder);
+        Ok(dec_secs)
+    } else {
+        let update = codec.decode_pooled(&enc.bytes, &ctx, pool)?;
+        let dec_secs = t.elapsed_secs();
+        router.route(slot, &update);
+        pool.put(update.into_vec());
+        Ok(dec_secs)
     }
 }
 
@@ -658,31 +713,28 @@ fn drain_shard_routed(
 
     let drained: Result<()> = if workers <= 1 {
         // One decode at a time on this thread; the S absorb lanes run
-        // concurrently behind the router.
-        let decode_and_route =
-            |slot: usize, enc: &Encoded, report: &mut DrainReport| -> Result<()> {
-                let t = Stopwatch::new();
-                let update = codec
-                    .decode_pooled(&enc.bytes, &plan.decode_ctx(slot), pool)
-                    .map_err(|e| anyhow!("decode failed for slot {slot}: {e}"))?;
-                report.dec_secs += t.elapsed_secs();
-                router.route(slot, &update);
-                pool.put(update.into_vec());
-                Ok(())
-            };
+        // concurrently behind the router (and for range-capable codecs the
+        // lanes run the per-shard sweeps themselves, so even this
+        // single-decode-worker shape parallelizes a record's sweep).
+        let decode_one = |slot: usize, enc: &Encoded, report: &mut DrainReport| -> Result<()> {
+            let dec_secs = decode_and_route(codec, plan, slot, enc, pool, &router)
+                .map_err(|e| anyhow!("decode failed for slot {slot}: {e}"))?;
+            report.dec_secs += dec_secs;
+            Ok(())
+        };
         let mut run = || -> Result<()> {
             match mode {
                 PipelineMode::Streaming => {
                     for got in 0..expected {
                         let (slot, enc) =
                             recv_validated(transport, got, expected, &mut seen, &mut report)?;
-                        decode_and_route(slot, &enc, &mut report)?;
+                        decode_one(slot, &enc, &mut report)?;
                     }
                 }
                 PipelineMode::Batch => {
                     for (slot, enc) in buffered.iter().enumerate() {
                         let enc = enc.as_ref().expect("all slots arrived");
-                        decode_and_route(slot, enc, &mut report)?;
+                        decode_one(slot, enc, &mut report)?;
                     }
                 }
             }
@@ -773,15 +825,15 @@ fn route_from_workers(
             let router = router.clone();
             scope.spawn(move || {
                 while let Some((slot, enc)) = queue.next() {
-                    let t = Stopwatch::new();
-                    let decoded = codec.decode_pooled(&enc.bytes, &plan.decode_ctx(slot), pool);
-                    let dec_secs = t.elapsed_secs();
-                    let outcome = decoded.map(|update| {
-                        // Hand each shard its slice, then recycle the full
-                        // reconstruction buffer into the decode pool.
-                        router.route(slot, &update);
-                        pool.put(update.into_vec());
-                    });
+                    // Range-capable codecs are parsed here and swept on
+                    // the lanes; the rest decode fully, split, and recycle
+                    // their buffer. Either way the clock covers only this
+                    // thread's decode compute, not routing backpressure.
+                    let (dec_secs, outcome) =
+                        match decode_and_route(codec, plan, slot, &enc, pool, &router) {
+                            Ok(secs) => (secs, Ok(())),
+                            Err(e) => (0.0, Err(e)),
+                        };
                     let rec = RoutedRecord {
                         slot,
                         worker,

@@ -33,6 +33,16 @@
 //!   Bitwise identical to the single-lane path at any shard count, wired
 //!   to the CLI as `--agg-shards N`. The operator's guide to how the
 //!   three knobs compose is `docs/SCALING.md`.
+//! * [`pipeline`] — the round-resident [`DrainPipeline`]: decode workers
+//!   spawned **once per experiment** and parked on an epoch barrier
+//!   between rounds, reusing one decode-buffer [`ScratchPool`] across the
+//!   whole trajectory. Paired with a resident [`ShardedAggregator`]
+//!   (whose absorb lanes are resident threads too), per-round setup cost
+//!   drops from O(threads + pool warm-up) to zero and steady-state rounds
+//!   allocate no decode buffers — observable via the pool's hit/miss
+//!   counters in [`DrainReport`] / `RoundMetrics`. Wired to the CLI as
+//!   `--persistent-pipeline` (env `DELTAMASK_PERSISTENT_PIPELINE=1`);
+//!   bitwise identical to the per-round-spawn drain.
 //! * [`pool`] — a self-scheduling (work-stealing) [`ClientPool`]: workers
 //!   pull the next client job from a shared queue instead of being handed a
 //!   fixed round-robin chunk, so stragglers no longer idle whole threads,
@@ -56,17 +66,19 @@
 //! each layer guarantees are documented in `docs/ARCHITECTURE.md`.
 
 pub mod aggregate;
+pub mod pipeline;
 pub mod pool;
 pub mod round;
 pub mod shard;
 pub mod transport;
 
 pub use aggregate::{drain_round, Aggregator, DrainConfig, DrainReport};
+pub use pipeline::DrainPipeline;
 pub use shard::{shard_bounds, ShardRouter, ShardedAggregator};
 // Re-exported so coordinator users thread the decode buffer pool without
 // reaching into `compress` (the pool type lives beside the codecs because
 // `decode_pooled` is a codec method).
-pub use crate::compress::ScratchPool;
+pub use crate::compress::{PoolStats, ScratchPool};
 pub use pool::ClientPool;
 pub use round::{RoundEngine, RoundPlan};
 pub use transport::{

@@ -1,0 +1,801 @@
+//! The **round-resident drain pipeline**: decode workers, shard lanes and
+//! scratch pools that live for a whole experiment instead of one round.
+//!
+//! [`drain_round`](super::drain_round) (the per-round-spawn path) rebuilds
+//! its worker crew every round: N thread spawns, a fresh results channel,
+//! and — when the caller also rebuilds its sharded view — S lane spawns
+//! plus cold buffer pools. That is O(rounds) setup cost and it forfeits
+//! the cross-round zero-allocation steady state the shared
+//! [`ScratchPool`] otherwise provides. A [`DrainPipeline`] makes all of
+//! that O(1) per experiment:
+//!
+//! * **Spawn once** — [`DrainPipeline::new`] spawns the resolved number of
+//!   decode workers immediately; they park on an **epoch barrier** (a
+//!   `Mutex` + `Condvar` generation counter). [`DrainPipeline::drain_round`]
+//!   publishes a round package (plan snapshot, codec, job queue, results
+//!   queue, optional [`ShardRouter`]) and bumps the epoch; workers wake,
+//!   stream the round, and park again. No thread is spawned or joined
+//!   anywhere in the per-round path.
+//! * **Pools persist** — the pipeline owns the decode-output
+//!   [`ScratchPool`]; round t+1's decodes reuse the buffers round t spent.
+//!   With a resident [`ShardedAggregator`](super::ShardedAggregator)
+//!   (whose lane threads and per-lane pools are resident too), steady-state
+//!   rounds allocate **zero** decode buffers — observable via
+//!   [`DrainReport::pool`] and `ShardedAggregator::lane_pool_stats`, not
+//!   just asserted.
+//! * **Abort and reuse** — a malformed record (or early uplink close)
+//!   aborts the round exactly like the per-round-spawn path: pending jobs
+//!   dropped, the results queue unblocked and drained, every worker
+//!   *parked* (not joined), the aggregator's lanes quiesced via
+//!   [`Aggregator::abort_round`]. The pipeline is immediately reusable for
+//!   the next round. Dropping the pipeline signals shutdown and joins the
+//!   workers.
+//!
+//! Bitwise identity with the per-round-spawn drain is part of the
+//! contract: the pipeline runs the same validation, the same
+//! decode kernels (including the range-restricted per-shard sweep) and
+//! drives the same [`Aggregator`] interface — property-tested across all
+//! 8 codecs × both pipeline modes × worker/shard combinations × multi-round
+//! trajectories in `rust/tests/agg_shards.rs`.
+//!
+//! ```
+//! use std::sync::Arc;
+//! use deltamask::compress::{self, UpdateCodec};
+//! use deltamask::coordinator::{
+//!     ChannelTransport, DrainConfig, DrainPipeline, Payload, PipelineMode, RoundEngine,
+//!     WireMessage,
+//! };
+//! use deltamask::fl::server::MaskServer;
+//! use deltamask::model::sample_mask_seeded;
+//!
+//! let d = 64;
+//! let theta = vec![0.5f32; d];
+//! let s = vec![0.0f32; d];
+//! let codec: Arc<dyn UpdateCodec> = Arc::from(compress::by_name("fedpm").unwrap());
+//! let pipeline = DrainPipeline::new(DrainConfig::new(PipelineMode::Streaming, 2));
+//! let mut engine = RoundEngine::new(7, 2, 1.0, 0.8, 0.25, 2);
+//! let mut server = MaskServer::with_theta0(d, 1.0, 0.5);
+//!
+//! // Two rounds through the SAME resident workers and pool.
+//! for round in 0..2 {
+//!     let plan = Arc::new(engine.plan(round, &server.theta_g, &server.s_g));
+//!     let (mut transport, sender) = ChannelTransport::new();
+//!     for slot in 0..plan.expected() {
+//!         let mut mask_k = Vec::new();
+//!         sample_mask_seeded(&plan.theta_g, plan.client_seed(slot), &mut mask_k);
+//!         let enc = codec
+//!             .encode(&plan.encode_ctx(slot, &plan.theta_g, &mask_k, &[]))
+//!             .unwrap();
+//!         sender
+//!             .send(WireMessage {
+//!                 round,
+//!                 client_id: plan.participants[slot],
+//!                 slot,
+//!                 payload: Payload::Update(enc),
+//!                 enc_secs: 0.0,
+//!                 loss: 0.5,
+//!             })
+//!             .unwrap();
+//!     }
+//!     drop(sender);
+//!     let report = pipeline
+//!         .drain_round(&mut transport, &plan, &codec, &mut server)
+//!         .unwrap();
+//!     assert_eq!(report.dec_by_worker.len(), 2);
+//! }
+//! ```
+
+use super::aggregate::{
+    decode_and_route, drain_round, recv_validated, Aggregator, DecodeQueue, DrainConfig,
+    DrainReport,
+};
+use super::round::RoundPlan;
+use super::shard::ShardRouter;
+use super::transport::Transport;
+use super::PipelineMode;
+use crate::compress::{Encoded, ScratchPool, Update, UpdateCodec};
+use crate::util::timer::Stopwatch;
+use anyhow::{anyhow, bail, Result};
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// A long-lived decode→absorb pipeline: resident decode workers parked on
+/// an epoch barrier between rounds, plus the experiment-lifetime decode
+/// buffer pool. Owned by `fl::Runner` when `--persistent-pipeline` is on;
+/// usable directly by any coordinator driver. See the module docs for the
+/// lifecycle (spawn-once → per-round activate → park → drop-joins).
+pub struct DrainPipeline {
+    /// The drain configuration, with `workers`/`shards` pre-resolved in
+    /// [`DrainPipeline::new`] (so `cfg.workers` ≥ 1; 1 means no resident
+    /// threads — the serial/inline path needs none).
+    cfg: DrainConfig,
+    pool: Arc<ScratchPool>,
+    crew: Option<Crew>,
+}
+
+/// The resident worker crew (present iff `workers > 1`).
+struct Crew {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+/// The epoch barrier the workers park on between rounds.
+struct Shared {
+    state: Mutex<EpochState>,
+    wake: Condvar,
+}
+
+struct EpochState {
+    /// Round generation. Bumped by `drain_round`; a worker that has
+    /// already served this epoch parks until it changes. The current
+    /// round package is replaced (never cleared), so a worker waking
+    /// late always converges on the latest epoch's work.
+    epoch: u64,
+    round: Option<Arc<RoundWork>>,
+    shutdown: bool,
+}
+
+impl Shared {
+    /// Park until a new epoch (returning its round package) or shutdown
+    /// (returning `None`).
+    fn next_round(&self, seen_epoch: &mut u64) -> Option<Arc<RoundWork>> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if st.shutdown {
+                return None;
+            }
+            if st.epoch != *seen_epoch {
+                *seen_epoch = st.epoch;
+                return Some(Arc::clone(st.round.as_ref().expect("epoch implies round")));
+            }
+            st = self.wake.wait(st).unwrap();
+        }
+    }
+}
+
+/// Everything one round's workers need, bundled so a single `Arc` travels
+/// through the epoch barrier.
+struct RoundWork {
+    plan: Arc<RoundPlan>,
+    codec: Arc<dyn UpdateCodec>,
+    /// The master router token for dimension-sharded rounds. Workers clone
+    /// it once when they pick the round up; `drain_round` takes it out
+    /// after the workers quiesce so the absorb lanes can observe
+    /// disconnect on abort (a clone parked inside this struct would keep
+    /// them alive forever).
+    router: Mutex<Option<ShardRouter>>,
+    queue: DecodeQueue,
+    results: ResultsQueue<WorkerRecord>,
+    pool: Arc<ScratchPool>,
+}
+
+impl RoundWork {
+    /// Unblock every worker touching this round: drop pending jobs and
+    /// release producers blocked on the bounded results queue. Idempotent;
+    /// harmless after a completed round (both queues are already drained).
+    fn abort(&self) {
+        self.queue.abort();
+        self.results.abort();
+    }
+
+    /// Release the master router token (no-op if already taken). Without
+    /// this the absorb lanes can never observe disconnect — the round
+    /// package stays published on the epoch barrier until the next epoch
+    /// replaces it.
+    fn release_router(&self) {
+        let mut slot = self
+            .router
+            .lock()
+            .unwrap_or_else(|poisoned| poisoned.into_inner());
+        slot.take();
+    }
+}
+
+/// One worker's outcome for one record. `Ok(Some(update))` = decoded, to
+/// be absorbed on the draining thread; `Ok(None)` = already routed to the
+/// shard lanes by the worker itself.
+struct WorkerRecord {
+    slot: usize,
+    worker: usize,
+    dec_secs: f64,
+    outcome: Result<Option<Update>>,
+}
+
+/// Aborts the round's queues — and releases the master router token — when
+/// dropped, so workers never stay blocked and shard lanes can always reach
+/// their disconnect after an unwinding drain (e.g. an aggregator panic on
+/// the absorb stage: the resident view's own `Drop` then waits for its
+/// lanes, which requires every round sender gone). Runs on every exit
+/// path; see [`RoundWork::abort`] / [`RoundWork::release_router`].
+struct RoundQuiesceGuard<'a>(&'a RoundWork);
+
+impl Drop for RoundQuiesceGuard<'_> {
+    fn drop(&mut self) {
+        self.0.abort();
+        self.0.release_router();
+    }
+}
+
+impl DrainPipeline {
+    /// Spawn the resident crew for `cfg` (resolving `workers == 0` /
+    /// `shards == 0` to the core count once, so every round of the
+    /// experiment uses the same shape). `workers == 1` spawns nothing —
+    /// the per-round path is the inline/serial drain, but the pipeline
+    /// still owns the experiment-lifetime decode pool.
+    pub fn new(cfg: DrainConfig) -> Self {
+        let resolved =
+            DrainConfig::sharded(cfg.mode, cfg.resolved_workers(), cfg.resolved_shards());
+        let workers = resolved.workers;
+        let crew = (workers > 1).then(|| {
+            let shared = Arc::new(Shared {
+                state: Mutex::new(EpochState {
+                    epoch: 0,
+                    round: None,
+                    shutdown: false,
+                }),
+                wake: Condvar::new(),
+            });
+            let handles = (0..workers)
+                .map(|worker| {
+                    let shared = Arc::clone(&shared);
+                    std::thread::spawn(move || worker_loop(&shared, worker))
+                })
+                .collect();
+            Crew { shared, handles }
+        });
+        Self {
+            cfg: resolved,
+            pool: Arc::new(ScratchPool::new()),
+            crew,
+        }
+    }
+
+    /// The drain configuration every round of this pipeline runs under
+    /// (workers/shards pre-resolved).
+    pub fn config(&self) -> DrainConfig {
+        self.cfg
+    }
+
+    /// Resolved decode worker count.
+    pub fn workers(&self) -> usize {
+        self.cfg.workers
+    }
+
+    /// The experiment-lifetime decode buffer pool (its
+    /// [`stats`](ScratchPool::stats) expose the cross-round zero-alloc
+    /// property).
+    pub fn pool(&self) -> &Arc<ScratchPool> {
+        &self.pool
+    }
+
+    /// Drain one round through the resident crew — the pipeline-owned
+    /// equivalent of [`drain_round`](super::drain_round), with identical
+    /// semantics, identical error classification and bitwise-identical
+    /// aggregator state. With `shards > 1` the aggregator must expose a
+    /// [`ShardRouter`] (i.e. be a
+    /// [`ShardedAggregator`](super::ShardedAggregator)); callers keeping
+    /// one resident view across rounds get the full spawn-free,
+    /// allocation-free steady state.
+    ///
+    /// On error the round aborts cleanly — pending jobs dropped, workers
+    /// parked (not joined), lanes quiesced via
+    /// [`Aggregator::abort_round`] — and the pipeline is immediately
+    /// reusable for the next round.
+    pub fn drain_round(
+        &self,
+        transport: &mut dyn Transport,
+        plan: &Arc<RoundPlan>,
+        codec: &Arc<dyn UpdateCodec>,
+        agg: &mut dyn Aggregator,
+    ) -> Result<DrainReport> {
+        match &self.crew {
+            // No resident threads: the serial/inline drain is already
+            // spawn-free; the pipeline contributes the persistent pool.
+            None => drain_round(transport, plan, codec.as_ref(), agg, self.cfg, &self.pool),
+            Some(crew) => self.drain_resident(crew, transport, plan, codec, agg),
+        }
+    }
+
+    fn drain_resident(
+        &self,
+        crew: &Crew,
+        transport: &mut dyn Transport,
+        plan: &Arc<RoundPlan>,
+        codec: &Arc<dyn UpdateCodec>,
+        agg: &mut dyn Aggregator,
+    ) -> Result<DrainReport> {
+        let expected = plan.expected();
+        let mode = self.cfg.mode;
+        let shards = self.cfg.shards;
+        let workers = self.cfg.workers;
+        let pool_before = self.pool.stats();
+        let mut report = DrainReport::new(expected, workers);
+        let mut seen = vec![false; expected];
+
+        // Batch mode: the full-round barrier comes first, before the crew
+        // is activated — a barrier failure has nothing to quiesce.
+        let mut buffered: Vec<Option<Encoded>> = Vec::new();
+        if mode == PipelineMode::Batch {
+            buffered = vec![None; expected];
+            for got in 0..expected {
+                let (slot, enc) = recv_validated(transport, got, expected, &mut seen, &mut report)?;
+                buffered[slot] = Some(enc);
+            }
+        }
+
+        agg.begin_round(expected);
+        let router = if shards > 1 {
+            match agg.shard_router() {
+                Some(router) => Some(router),
+                None => {
+                    agg.abort_round();
+                    bail!(
+                        "DrainConfig::shards > 1 requires a dimension-sharded aggregator \
+                         (coordinator::ShardedAggregator)"
+                    );
+                }
+            }
+        } else {
+            None
+        };
+
+        let work = Arc::new(RoundWork {
+            plan: Arc::clone(plan),
+            codec: Arc::clone(codec),
+            router: Mutex::new(router),
+            queue: DecodeQueue::new(),
+            results: ResultsQueue::new(workers * 2, workers),
+            pool: Arc::clone(&self.pool),
+        });
+        crew.activate(&work);
+        let _quiesce_on_unwind = RoundQuiesceGuard(&work);
+
+        let mut absorbed = 0usize;
+        let mut run = || -> Result<()> {
+            match mode {
+                PipelineMode::Streaming => {
+                    for got in 0..expected {
+                        let (slot, enc) =
+                            recv_validated(transport, got, expected, &mut seen, &mut report)?;
+                        work.queue.push(slot, enc);
+                        // Opportunistically absorb finished decodes between
+                        // arrivals (overlaps aggregation with transport
+                        // waits, keeps the in-flight set small).
+                        while let Some(rec) = work.results.try_pop() {
+                            settle(rec, &mut report, agg, &self.pool)?;
+                            absorbed += 1;
+                        }
+                    }
+                }
+                PipelineMode::Batch => {
+                    // Barrier already passed: fan out in slot order.
+                    for (slot, enc) in std::mem::take(&mut buffered).into_iter().enumerate() {
+                        work.queue.push(slot, enc.expect("all slots arrived"));
+                    }
+                }
+            }
+            work.queue.close();
+            while absorbed < expected {
+                let rec = work
+                    .results
+                    .pop()
+                    .ok_or_else(|| anyhow!("decode workers exited early"))?;
+                settle(rec, &mut report, agg, &self.pool)?;
+                absorbed += 1;
+            }
+            Ok(())
+        };
+        let out = run();
+
+        if out.is_err() {
+            // Clean abort: drop pending jobs, unblock producers, then wait
+            // until every worker has finished the round (pop() returns
+            // `None` only once all producers are done) — after which no
+            // worker holds a router clone and the lanes can be quiesced.
+            work.abort();
+            while work.results.pop().is_some() {}
+        }
+        // Release the master router token; without this the lanes would
+        // never observe disconnect on an aborted round (the round package
+        // stays published on the barrier until the next epoch replaces it).
+        work.release_router();
+
+        match out {
+            Ok(()) => {
+                agg.finish_round();
+                report.pool = self.pool.stats().delta_since(pool_before);
+                Ok(report)
+            }
+            Err(e) => {
+                agg.abort_round();
+                Err(e)
+            }
+        }
+    }
+}
+
+impl Drop for DrainPipeline {
+    /// Signal shutdown on the epoch barrier and join the resident workers.
+    /// `drain_round` always leaves the crew parked (success or error), so
+    /// this never blocks on an in-flight round.
+    fn drop(&mut self) {
+        if let Some(crew) = self.crew.take() {
+            {
+                let mut st = crew.shared.state.lock().unwrap();
+                st.shutdown = true;
+                crew.shared.wake.notify_all();
+            }
+            for handle in crew.handles {
+                let _ = handle.join();
+            }
+        }
+    }
+}
+
+impl Crew {
+    /// Publish a round package and bump the epoch; every parked worker
+    /// wakes and streams this round.
+    fn activate(&self, work: &Arc<RoundWork>) {
+        let mut st = self.shared.state.lock().unwrap();
+        st.epoch += 1;
+        st.round = Some(Arc::clone(work));
+        drop(st);
+        self.shared.wake.notify_all();
+    }
+}
+
+/// Reports a producer as done when dropped — on the normal path and on a
+/// worker panic alike, so the draining thread's `pop()` can always reach
+/// its disconnect signal ("decode workers exited early") instead of
+/// waiting forever on a producer that died.
+struct ProducerDoneGuard<'a>(&'a ResultsQueue<WorkerRecord>);
+
+impl Drop for ProducerDoneGuard<'_> {
+    fn drop(&mut self) {
+        self.0.producer_done();
+    }
+}
+
+/// Resident worker body: park on the barrier, stream a round, park again —
+/// until shutdown. The per-record action is the same decode (or
+/// decode-and-route) the per-round-spawn workers perform.
+fn worker_loop(shared: &Shared, worker: usize) {
+    let mut seen_epoch = 0u64;
+    while let Some(work) = shared.next_round(&mut seen_epoch) {
+        // Declared before the router so drop order (reverse) releases the
+        // router clone first: "all producers done" implies no live
+        // worker-held lane senders.
+        let _done = ProducerDoneGuard(&work.results);
+        let router = work.router.lock().unwrap().clone();
+        while let Some((slot, enc)) = work.queue.next() {
+            // The clock covers only this thread's decode compute (the
+            // record timing lives inside `decode_record`); pushing into
+            // the bounded results queue — backpressure — is off-clock.
+            let (dec_secs, outcome) = match decode_record(&work, router.as_ref(), slot, &enc) {
+                Ok((secs, payload)) => (secs, Ok(payload)),
+                Err(e) => (0.0, Err(e)),
+            };
+            let rec = WorkerRecord {
+                slot,
+                worker,
+                dec_secs,
+                outcome,
+            };
+            work.results.push(rec);
+        }
+    }
+}
+
+/// Decode one record, returning `(decode compute seconds on this thread,
+/// payload)` — `None` payload when the record was routed to the shard
+/// lanes (whose per-range sweep time lands in their absorb timings).
+fn decode_record(
+    work: &RoundWork,
+    router: Option<&ShardRouter>,
+    slot: usize,
+    enc: &Encoded,
+) -> Result<(f64, Option<Update>)> {
+    match router {
+        Some(router) => {
+            let secs =
+                decode_and_route(work.codec.as_ref(), &work.plan, slot, enc, &work.pool, router)?;
+            Ok((secs, None))
+        }
+        None => {
+            let t = Stopwatch::new();
+            let update =
+                work.codec
+                    .decode_pooled(&enc.bytes, &work.plan.decode_ctx(slot), &work.pool)?;
+            Ok((t.elapsed_secs(), Some(update)))
+        }
+    }
+}
+
+/// Fold one worker record into the report (and the aggregator, for
+/// non-routed records), recycling spent buffers.
+fn settle(
+    rec: WorkerRecord,
+    report: &mut DrainReport,
+    agg: &mut dyn Aggregator,
+    pool: &ScratchPool,
+) -> Result<()> {
+    let payload = rec
+        .outcome
+        .map_err(|e| anyhow!("decode failed for slot {}: {e}", rec.slot))?;
+    report.dec_secs += rec.dec_secs;
+    report.dec_by_worker[rec.worker] += rec.dec_secs;
+    if let Some(update) = payload {
+        agg.absorb(rec.slot, update);
+        while let Some(buf) = agg.reclaim_buffer() {
+            pool.put(buf);
+        }
+    }
+    Ok(())
+}
+
+/// Bounded MPSC results queue with explicit producer accounting — the
+/// resident replacement for the per-round `mpsc::sync_channel`: `pop`
+/// returns `None` exactly when every producer has finished the round and
+/// the queue is empty (the disconnect signal a per-round channel gets for
+/// free), and `abort` unblocks producers by discarding their records.
+struct ResultsQueue<T> {
+    state: Mutex<ResultsState<T>>,
+    /// Consumer-side signal: an item arrived or a producer finished.
+    ready: Condvar,
+    /// Producer-side signal: space freed (or abort).
+    space: Condvar,
+}
+
+struct ResultsState<T> {
+    items: VecDeque<T>,
+    cap: usize,
+    producers: usize,
+    aborted: bool,
+}
+
+impl<T> ResultsQueue<T> {
+    fn new(cap: usize, producers: usize) -> Self {
+        Self {
+            state: Mutex::new(ResultsState {
+                items: VecDeque::with_capacity(cap),
+                cap: cap.max(1),
+                producers,
+                aborted: false,
+            }),
+            ready: Condvar::new(),
+            space: Condvar::new(),
+        }
+    }
+
+    /// Enqueue, blocking while full. After `abort` the item is discarded —
+    /// the producer returns immediately instead of deadlocking against a
+    /// consumer that already bailed.
+    fn push(&self, item: T) {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if st.aborted {
+                return;
+            }
+            if st.items.len() < st.cap {
+                st.items.push_back(item);
+                drop(st);
+                self.ready.notify_one();
+                return;
+            }
+            st = self.space.wait(st).unwrap();
+        }
+    }
+
+    /// Non-blocking pop.
+    fn try_pop(&self) -> Option<T> {
+        let mut st = self.state.lock().unwrap();
+        let item = st.items.pop_front();
+        if item.is_some() {
+            drop(st);
+            self.space.notify_one();
+        }
+        item
+    }
+
+    /// Blocking pop; `None` once every producer is done and the queue is
+    /// empty.
+    fn pop(&self) -> Option<T> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(item) = st.items.pop_front() {
+                drop(st);
+                self.space.notify_one();
+                return Some(item);
+            }
+            if st.producers == 0 {
+                return None;
+            }
+            st = self.ready.wait(st).unwrap();
+        }
+    }
+
+    /// A producer finished its round share.
+    fn producer_done(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.producers = st.producers.saturating_sub(1);
+        drop(st);
+        self.ready.notify_all();
+    }
+
+    /// Discard queued items and unblock every producer; subsequent pushes
+    /// are dropped. Idempotent.
+    fn abort(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.aborted = true;
+        st.items.clear();
+        drop(st);
+        self.space.notify_all();
+        self.ready.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress;
+    use crate::coordinator::transport::{ChannelTransport, Payload, WireMessage};
+    use crate::coordinator::RoundEngine;
+    use crate::fl::server::MaskServer;
+    use crate::model::sample_mask_seeded;
+
+    fn plan_of(n: usize, round: usize) -> Arc<RoundPlan> {
+        let theta = vec![0.5f32; 32];
+        let s = vec![0.0f32; 32];
+        Arc::new(RoundEngine::new(1 + round as u64, n, 1.0, 0.8, 0.25, 3).plan(round, &theta, &s))
+    }
+
+    fn fedpm_codec() -> Arc<dyn UpdateCodec> {
+        Arc::from(compress::by_name("fedpm").unwrap())
+    }
+
+    fn send_round(
+        plan: &RoundPlan,
+        codec: &dyn UpdateCodec,
+        skip: Option<usize>,
+    ) -> ChannelTransport {
+        let (transport, sender) = ChannelTransport::new();
+        for slot in 0..plan.expected() {
+            if Some(slot) == skip {
+                continue;
+            }
+            let mut mask_k = Vec::new();
+            sample_mask_seeded(&plan.theta_g, plan.client_seed(slot), &mut mask_k);
+            let enc = codec
+                .encode(&plan.encode_ctx(slot, &plan.theta_g, &mask_k, &[]))
+                .unwrap();
+            sender
+                .send(WireMessage {
+                    round: plan.round,
+                    client_id: plan.participants[slot],
+                    slot,
+                    payload: Payload::Update(enc),
+                    enc_secs: 0.0,
+                    loss: 0.5,
+                })
+                .unwrap();
+        }
+        drop(sender);
+        transport
+    }
+
+    #[test]
+    fn resident_rounds_match_per_round_spawn_bitwise() {
+        let codec = fedpm_codec();
+        for mode in [PipelineMode::Batch, PipelineMode::Streaming] {
+            let pipeline = DrainPipeline::new(DrainConfig::new(mode, 3));
+            let mut resident = MaskServer::with_theta0(32, 1.0, 0.5);
+            let mut oracle = resident.clone();
+            for round in 0..3 {
+                let plan = plan_of(4, round);
+                let mut t1 = send_round(&plan, codec.as_ref(), None);
+                pipeline
+                    .drain_round(&mut t1, &plan, &codec, &mut resident)
+                    .unwrap();
+                let mut t2 = send_round(&plan, codec.as_ref(), None);
+                drain_round(
+                    &mut t2,
+                    &plan,
+                    codec.as_ref(),
+                    &mut oracle,
+                    DrainConfig::serial(mode),
+                    &ScratchPool::new(),
+                )
+                .unwrap();
+                assert_eq!(resident.theta_g, oracle.theta_g, "{mode:?} round {round}");
+                assert_eq!(resident.s_g, oracle.s_g, "{mode:?} round {round}");
+            }
+        }
+    }
+
+    #[test]
+    fn failed_round_leaves_the_pipeline_reusable() {
+        let codec = fedpm_codec();
+        let pipeline = DrainPipeline::new(DrainConfig::new(PipelineMode::Streaming, 2));
+        let mut server = MaskServer::with_theta0(32, 1.0, 0.5);
+
+        // Round 0: slot 1 never reports — early uplink close.
+        let plan = plan_of(3, 0);
+        let mut t = send_round(&plan, codec.as_ref(), Some(1));
+        let err = pipeline
+            .drain_round(&mut t, &plan, &codec, &mut server)
+            .unwrap_err();
+        assert!(err.to_string().contains("2/3"), "{err}");
+
+        // Round 1: a corrupt record fails decode on a resident worker.
+        let plan = plan_of(3, 1);
+        let (mut t, sender) = ChannelTransport::new();
+        for slot in 0..3 {
+            sender
+                .send(WireMessage {
+                    round: 1,
+                    client_id: plan.participants[slot],
+                    slot,
+                    payload: Payload::Update(Encoded { bytes: vec![0; 3] }),
+                    enc_secs: 0.0,
+                    loss: 0.0,
+                })
+                .unwrap();
+        }
+        drop(sender);
+        let err = pipeline
+            .drain_round(&mut t, &plan, &codec, &mut server)
+            .unwrap_err();
+        assert!(err.to_string().contains("decode failed for slot"), "{err}");
+
+        // Round 2: same pipeline, same workers — a clean round succeeds and
+        // matches the serial oracle.
+        let plan = plan_of(3, 2);
+        let mut t = send_round(&plan, codec.as_ref(), None);
+        pipeline
+            .drain_round(&mut t, &plan, &codec, &mut server)
+            .unwrap();
+        let mut oracle = MaskServer::with_theta0(32, 1.0, 0.5);
+        let mut t = send_round(&plan, codec.as_ref(), None);
+        drain_round(
+            &mut t,
+            &plan,
+            codec.as_ref(),
+            &mut oracle,
+            DrainConfig::serial(PipelineMode::Streaming),
+            &ScratchPool::new(),
+        )
+        .unwrap();
+        assert_eq!(server.theta_g, oracle.theta_g);
+    }
+
+    #[test]
+    fn sharded_resident_drain_requires_a_sharded_aggregator() {
+        let codec = fedpm_codec();
+        let pipeline = DrainPipeline::new(DrainConfig::sharded(PipelineMode::Streaming, 2, 3));
+        let mut server = MaskServer::with_theta0(32, 1.0, 0.5);
+        let plan = plan_of(2, 0);
+        let mut t = send_round(&plan, codec.as_ref(), None);
+        let err = pipeline
+            .drain_round(&mut t, &plan, &codec, &mut server)
+            .unwrap_err();
+        assert!(err.to_string().contains("dimension-sharded"), "{err}");
+    }
+
+    #[test]
+    fn results_queue_disconnect_and_abort_semantics() {
+        let q: ResultsQueue<u32> = ResultsQueue::new(2, 1);
+        q.push(7);
+        assert_eq!(q.try_pop(), Some(7));
+        assert_eq!(q.try_pop(), None);
+        q.producer_done();
+        assert_eq!(q.pop(), None, "empty + no producers = disconnect");
+
+        let q: ResultsQueue<u32> = ResultsQueue::new(1, 1);
+        q.push(1);
+        q.abort();
+        q.push(2); // discarded, does not block even though cap is 1
+        q.producer_done();
+        assert_eq!(q.pop(), None, "aborted queue drains to disconnect");
+    }
+}

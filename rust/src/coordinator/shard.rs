@@ -15,17 +15,32 @@
 //!
 //! ## Shape
 //!
-//! A [`ShardedAggregator`] owns `S` lanes. Between rounds each lane is a
-//! quiescent `(range, sink, pool)` triple; `begin_round` moves every sink
-//! onto its own **absorb lane thread** and hands out a clonable
+//! A [`ShardedAggregator`] owns `S` **resident lane threads**, spawned
+//! once at construction and parked between rounds on a per-lane control
+//! channel — round t+1 reuses the threads (and each lane's sub-update
+//! [`ScratchPool`]) that round t warmed up, so a view that outlives its
+//! rounds reaches a cross-round zero-allocation, zero-spawn steady state
+//! (the round-resident drain pipeline keeps one view per experiment).
+//! Between rounds each lane parks its `(range, sink, pool)` triple on the
+//! coordinating thread; `begin_round` ships every sink to its lane thread
+//! together with a fresh bounded job queue and hands out a clonable
 //! [`ShardRouter`]. Routing a decoded record copies each shard's
-//! sub-range into a buffer leased from that shard's pool and enqueues it
-//! on the lane's bounded channel; the lane thread absorbs sub-updates in
+//! sub-range into a buffer leased from that shard's pool (or range-decodes
+//! straight into it, see [`ShardRouter::route_decoded_ranges`]) and
+//! enqueues it on the lane's queue; the lane thread absorbs sub-updates in
 //! arrival order and recycles spent buffers into its own pool.
-//! `finish_round` closes the lanes, joins the threads, runs each slice
-//! sink's `finish_round`, and parks the lanes again — at which point
-//! [`ShardedAggregator::into_shards`] hands the slices back for stitching
-//! (see `fl::server::MaskServer::adopt_shards`).
+//! `finish_round` sends each lane a `Finish` marker, collects the sinks
+//! back and parks the lanes again — at which point
+//! [`ShardedAggregator::into_shards`] (full decomposition) or
+//! [`ShardedAggregator::shard_slices`] (borrowed peek, for the resident
+//! path's per-round θ_g sync) expose the slices for stitching (see
+//! `fl::server::MaskServer::{adopt_shards, sync_from_shards}`).
+//!
+//! Abort discipline is unchanged from the per-round-spawn design: an
+//! aborted round drops every per-round job-queue sender, the lane drains
+//! what was already queued, hands its (mid-round) sink back *unfinished*
+//! and parks — ready for the superseding `begin_round`. Dropping the
+//! whole view mid-round still joins every lane thread.
 //!
 //! ## Why sharding preserves bitwise identity
 //!
@@ -38,13 +53,14 @@
 //! equivalence). Stitching the slices back is a pure copy. The property
 //! suite in `rust/tests/agg_shards.rs` checks bitwise identity across all
 //! 8 codecs × both pipeline modes × shard counts {1,2,3,8} under
-//! adversarial arrival orders.
+//! adversarial arrival orders — and, for the resident path, across
+//! multi-round trajectories through the same view.
 
 use super::aggregate::Aggregator;
-use crate::compress::{ScratchPool, Update};
+use crate::compress::{MaskRangeDecoder, PoolStats, ScratchPool, Update};
 use crate::util::timer::Stopwatch;
 use std::ops::Range;
-use std::sync::mpsc::{self, SyncSender};
+use std::sync::mpsc::{self, Receiver, Sender, SyncSender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
@@ -78,7 +94,7 @@ pub fn shard_bounds(d: usize, shards: usize) -> Vec<Range<usize>> {
     bounds
 }
 
-/// What a lane thread sends back when its round ends (normally via
+/// What a lane thread hands back when its round ends (normally after
 /// `Finish`, or unfinished when the round was aborted).
 struct LaneReturn<A> {
     sink: A,
@@ -87,19 +103,48 @@ struct LaneReturn<A> {
 }
 
 enum LaneMsg {
+    /// A pre-split sub-update: absorb as-is.
     Absorb { slot: usize, update: Update },
+    /// A range-decodable record: the lane runs this shard's slice of the
+    /// Eq. 5 membership sweep itself (`base` is the m^{g,t-1} baseline for
+    /// `range`, leased from the lane's pool; `decoder` is the record's
+    /// parsed filter, shared across the S lanes), then absorbs the
+    /// result. This is what makes a single huge record's *decode* sweep —
+    /// not just its absorb — run on S threads.
+    DecodeAbsorb {
+        slot: usize,
+        range: Range<usize>,
+        base: Vec<f32>,
+        decoder: Arc<dyn MaskRangeDecoder>,
+    },
     Finish,
 }
 
-/// One quiescent shard: its d-range, its slice sink (present between
-/// rounds, on the lane thread while a round is in flight) and its
-/// dedicated sub-update buffer pool.
+/// One round's work package, shipped to a resident lane thread through its
+/// control channel: the expected participant count, the slice sink (moved
+/// onto the lane for the round's duration) and the round's bounded job
+/// queue receiver.
+struct LaneRound<A> {
+    expected: usize,
+    sink: A,
+    jobs: Receiver<LaneMsg>,
+}
+
+/// One quiescent shard: its d-range, its slice sink (parked here between
+/// rounds, on the lane thread while a round is in flight), its dedicated
+/// sub-update buffer pool, and the handles to its resident lane thread.
 struct ShardLane<A> {
     range: Range<usize>,
     sink: Option<A>,
     pool: Arc<ScratchPool>,
     /// Absorb compute seconds this lane spent in the last finished round.
     absorb_secs: f64,
+    /// Control channel feeding round packages to the resident thread;
+    /// dropping it shuts the thread down.
+    ctrl: Option<Sender<LaneRound<A>>>,
+    /// Sinks travel back here at round end (finish or abort).
+    ret: Receiver<LaneReturn<A>>,
+    handle: Option<JoinHandle<()>>,
 }
 
 /// The shareable per-round routing table: shard ranges, pools and lane
@@ -141,27 +186,56 @@ impl ShardRouter {
         }
     }
 
+    /// Range-restricted fan-out: hand each lane a buffer holding its
+    /// slice of the m^{g,t-1} baseline (leased from that lane's pool)
+    /// plus a shared handle to the record's parsed filter; **each lane
+    /// thread then runs its own shard's slice of the Eq. 5 membership
+    /// sweep** before absorbing it. The full `d`-length buffer is never
+    /// materialized and no single thread sweeps the whole record — one
+    /// huge record's decode, not just its absorb, runs on S threads.
+    /// Bitwise identical to decoding fully and calling
+    /// [`ShardRouter::route`] (the [`MaskRangeDecoder`] contract: range
+    /// membership — false positives included — is a per-index property).
+    pub fn route_decoded_ranges(
+        &self,
+        slot: usize,
+        mask_g: &[f32],
+        decoder: Arc<dyn MaskRangeDecoder>,
+    ) {
+        for lane in self.lanes.iter() {
+            let base = lane.pool.take_copy(&mask_g[lane.range.clone()]);
+            let _ = lane.tx.send(LaneMsg::DecodeAbsorb {
+                slot,
+                range: lane.range.clone(),
+                base,
+                decoder: Arc::clone(&decoder),
+            });
+        }
+    }
+
     /// Number of shard lanes this router fans out to.
     pub fn shard_count(&self) -> usize {
         self.lanes.len()
     }
 }
 
-/// Lane threads plus the routing table for one in-flight round.
-struct RunningRound<A> {
+/// The routing table for one in-flight round (the resident lane threads
+/// themselves live in the [`ShardLane`]s for the aggregator's lifetime).
+struct RunningRound {
     router: ShardRouter,
-    handles: Vec<JoinHandle<LaneReturn<A>>>,
 }
 
 /// Dimension-sharded streaming aggregation sink: `S` contiguous shards of
 /// the parameter space, each with its own slice sink, participation
-/// counters and [`ScratchPool`], absorbed on `S` parallel lane threads.
+/// counters and [`ScratchPool`], absorbed on `S` resident lane threads
+/// (spawned once, parked between rounds).
 ///
 /// Construct it from `(range, slice sink)` pairs tiling `0..d` — for the
 /// Bayesian mask server, `fl::server::MaskServer::shard_view` builds the
 /// slices and `adopt_shards` stitches them back after the round. Drive it
 /// either as a plain [`Aggregator`] (inline `absorb` splits each record
-/// and fans it out) or through [`drain_round`](super::drain_round) with
+/// and fans it out) or through [`drain_round`](super::drain_round) /
+/// [`DrainPipeline`](super::DrainPipeline) with
 /// [`DrainConfig::shards`](super::DrainConfig) > 1, where the decode
 /// workers route records to the lanes directly via [`ShardRouter`].
 ///
@@ -194,7 +268,7 @@ struct RunningRound<A> {
 /// ```
 pub struct ShardedAggregator<A> {
     lanes: Vec<ShardLane<A>>,
-    running: Option<RunningRound<A>>,
+    running: Option<RunningRound>,
     /// Full decoded buffers spent by the inline `absorb` path (their
     /// shard sub-ranges already copied out), awaiting reclamation by the
     /// drain loop via [`Aggregator::reclaim_buffer`].
@@ -204,6 +278,8 @@ pub struct ShardedAggregator<A> {
 impl<A: Aggregator + Send + 'static> ShardedAggregator<A> {
     /// Build a sharded sink from `(range, slice sink)` pairs. The ranges
     /// must tile `0..d` contiguously in order (see [`shard_bounds`]).
+    /// Spawns one resident lane thread per shard; the threads park until
+    /// the first `begin_round` and are reused by every subsequent round.
     pub fn new(shards: Vec<(Range<usize>, A)>) -> Self {
         assert!(!shards.is_empty(), "at least one shard required");
         let mut expect = 0;
@@ -218,37 +294,55 @@ impl<A: Aggregator + Send + 'static> ShardedAggregator<A> {
         Self {
             lanes: shards
                 .into_iter()
-                .map(|(range, sink)| ShardLane {
-                    range,
-                    sink: Some(sink),
-                    pool: Arc::new(ScratchPool::new()),
-                    absorb_secs: 0.0,
-                })
+                .map(|(range, sink)| Self::spawn_lane(range, sink))
                 .collect(),
             running: None,
             spent: Vec::new(),
         }
     }
 
-    /// Spawn the lane threads for one round and build the router.
-    fn start_round(&mut self, expected: usize) {
-        let mut handles = Vec::with_capacity(self.lanes.len());
-        let mut router_lanes = Vec::with_capacity(self.lanes.len());
-        for lane in &mut self.lanes {
-            let (tx, rx) = mpsc::sync_channel::<LaneMsg>(LANE_QUEUE_CAP);
-            let mut sink = lane.sink.take().expect("lane sink present between rounds");
-            let pool = Arc::clone(&lane.pool);
-            handles.push(std::thread::spawn(move || {
+    /// Spawn one resident lane thread: it loops over round packages from
+    /// the control channel, absorbing each round's sub-updates and handing
+    /// the sink back, until the control channel is dropped (shutdown).
+    fn spawn_lane(range: Range<usize>, sink: A) -> ShardLane<A> {
+        let pool = Arc::new(ScratchPool::new());
+        let (ctrl_tx, ctrl_rx) = mpsc::channel::<LaneRound<A>>();
+        let (ret_tx, ret_rx) = mpsc::channel::<LaneReturn<A>>();
+        let lane_pool = Arc::clone(&pool);
+        let handle = std::thread::spawn(move || {
+            while let Ok(LaneRound {
+                expected,
+                mut sink,
+                jobs,
+            }) = ctrl_rx.recv()
+            {
                 sink.begin_round(expected);
                 let mut absorb_secs = 0.0;
                 let mut finished = false;
-                while let Ok(msg) = rx.recv() {
+                while let Ok(msg) = jobs.recv() {
                     match msg {
                         LaneMsg::Absorb { slot, update } => {
                             let t = Stopwatch::new();
                             sink.absorb(slot, update);
                             while let Some(buf) = sink.reclaim_buffer() {
-                                pool.put(buf);
+                                lane_pool.put(buf);
+                            }
+                            absorb_secs += t.elapsed_secs();
+                        }
+                        LaneMsg::DecodeAbsorb {
+                            slot,
+                            range,
+                            mut base,
+                            decoder,
+                        } => {
+                            // This shard's slice of the record's Eq. 5
+                            // sweep runs here, on the lane thread, in
+                            // parallel with the other shards' slices.
+                            let t = Stopwatch::new();
+                            decoder.decode_range(range, &mut base);
+                            sink.absorb(slot, Update::Mask(base));
+                            while let Some(buf) = sink.reclaim_buffer() {
+                                lane_pool.put(buf);
                             }
                             absorb_secs += t.elapsed_secs();
                         }
@@ -259,16 +353,48 @@ impl<A: Aggregator + Send + 'static> ShardedAggregator<A> {
                         }
                     }
                 }
-                // Every sender dropped without `Finish` means the round
-                // was aborted: hand the (mid-round) sink back so the next
-                // `begin_round` can supersede its state, exactly like an
-                // aborted serial round.
-                LaneReturn {
-                    sink,
-                    absorb_secs,
-                    finished,
+                // Every round sender dropped without `Finish` means the
+                // round was aborted: hand the (mid-round) sink back so the
+                // next `begin_round` can supersede its state, exactly like
+                // an aborted serial round — then park for the next round.
+                if ret_tx
+                    .send(LaneReturn {
+                        sink,
+                        absorb_secs,
+                        finished,
+                    })
+                    .is_err()
+                {
+                    return; // aggregator gone mid-teardown
                 }
-            }));
+            }
+        });
+        ShardLane {
+            range,
+            sink: Some(sink),
+            pool,
+            absorb_secs: 0.0,
+            ctrl: Some(ctrl_tx),
+            ret: ret_rx,
+            handle: Some(handle),
+        }
+    }
+
+    /// Activate the resident lanes for one round and build the router.
+    fn start_round(&mut self, expected: usize) {
+        let mut router_lanes = Vec::with_capacity(self.lanes.len());
+        for lane in &mut self.lanes {
+            let (tx, rx) = mpsc::sync_channel::<LaneMsg>(LANE_QUEUE_CAP);
+            let sink = lane.sink.take().expect("lane sink present between rounds");
+            let round = LaneRound {
+                expected,
+                sink,
+                jobs: rx,
+            };
+            if lane.ctrl.as_ref().expect("lanes alive").send(round).is_err() {
+                // The resident thread is gone — it can only have panicked.
+                Self::propagate_lane_death(lane);
+            }
             router_lanes.push(RouterLane {
                 range: lane.range.clone(),
                 pool: Arc::clone(&lane.pool),
@@ -279,7 +405,6 @@ impl<A: Aggregator + Send + 'static> ShardedAggregator<A> {
             router: ShardRouter {
                 lanes: router_lanes.into(),
             },
-            handles,
         });
     }
 }
@@ -307,21 +432,50 @@ impl<A> ShardedAggregator<A> {
         self.lanes.iter().map(|l| l.absorb_secs).collect()
     }
 
+    /// Aggregate lease counters across every lane's sub-update pool. For a
+    /// view that outlives its rounds, `misses` freezing after the warm-up
+    /// round is the observable cross-round zero-allocation property.
+    pub fn lane_pool_stats(&self) -> PoolStats {
+        self.lanes
+            .iter()
+            .fold(PoolStats::default(), |acc, l| acc.merged(l.pool.stats()))
+    }
+
+    /// Borrow the parked `(range, slice sink)` pairs — `None` while a
+    /// round is in flight (the sinks are on their lane threads). The
+    /// resident drain path uses this to refresh the global broadcast
+    /// state between rounds without consuming the view.
+    pub fn shard_slices(&self) -> Option<Vec<(Range<usize>, &A)>> {
+        if self.running.is_some() {
+            return None;
+        }
+        self.lanes
+            .iter()
+            .map(|l| l.sink.as_ref().map(|s| (l.range.clone(), s)))
+            .collect()
+    }
+
     /// Tear down an in-flight round without finishing it: drop the lane
-    /// queues, join every lane thread and park the (mid-round) sinks back
-    /// in their lanes. Safe to call at any time; a no-op between rounds.
+    /// job queues, wait for every lane to hand its (mid-round) sink back
+    /// and park. Safe to call at any time; a no-op between rounds.
+    ///
+    /// Callers must ensure no external [`ShardRouter`] clone outlives this
+    /// call (the drain paths join their decode workers first) — a live
+    /// clone would keep a lane's job queue open and stall the hand-back.
     pub fn abort_round(&mut self) {
-        let Some(RunningRound { router, handles }) = self.running.take() else {
+        let Some(RunningRound { router }) = self.running.take() else {
             return;
         };
-        drop(router); // all senders gone → lanes drain their queues and exit
-        self.join_lanes(handles);
+        drop(router); // all round senders gone → lanes drain, return, park
+        self.collect_round();
     }
 
     /// Decompose into `(range, slice sink)` pairs for stitching back into
-    /// the global state. Aborts any round still in flight first.
+    /// the global state. Aborts any round still in flight and shuts the
+    /// resident lane threads down first.
     pub fn into_shards(mut self) -> Vec<(Range<usize>, A)> {
         self.abort_round();
+        self.shutdown_lanes();
         std::mem::take(&mut self.lanes)
             .into_iter()
             .map(|lane| {
@@ -333,20 +487,48 @@ impl<A> ShardedAggregator<A> {
             .collect()
     }
 
-    /// Join lane threads and park their sinks; propagates lane panics.
-    fn join_lanes(&mut self, handles: Vec<JoinHandle<LaneReturn<A>>>) -> bool {
+    /// Collect each lane's round return, parking the sinks; propagates
+    /// lane panics. Returns whether every lane saw `Finish`.
+    fn collect_round(&mut self) -> bool {
         let mut all_finished = true;
-        for (lane, handle) in self.lanes.iter_mut().zip(handles) {
-            match handle.join() {
+        for lane in &mut self.lanes {
+            match lane.ret.recv() {
                 Ok(ret) => {
                     lane.sink = Some(ret.sink);
                     lane.absorb_secs = ret.absorb_secs;
                     all_finished &= ret.finished;
                 }
-                Err(panic) => std::panic::resume_unwind(panic),
+                Err(_) => Self::propagate_lane_death(lane),
             }
         }
         all_finished
+    }
+
+    /// Drop the control channels and join the resident threads; propagates
+    /// a lane panic. Must not be called with a round in flight.
+    fn shutdown_lanes(&mut self) {
+        for lane in &mut self.lanes {
+            lane.ctrl = None;
+        }
+        for lane in &mut self.lanes {
+            if let Some(handle) = lane.handle.take() {
+                if let Err(panic) = handle.join() {
+                    std::panic::resume_unwind(panic);
+                }
+            }
+        }
+    }
+
+    /// A lane's channel disconnected outside shutdown: the resident thread
+    /// died, which only a sink panic can cause — join it and re-raise.
+    fn propagate_lane_death(lane: &mut ShardLane<A>) -> ! {
+        match lane.handle.take() {
+            Some(handle) => match handle.join() {
+                Err(panic) => std::panic::resume_unwind(panic),
+                Ok(()) => unreachable!("lane exited without panicking while in use"),
+            },
+            None => panic!("shard lane thread missing"),
+        }
     }
 }
 
@@ -376,7 +558,7 @@ impl<A: Aggregator + Send + 'static> Aggregator for ShardedAggregator<A> {
     }
 
     fn finish_round(&mut self) {
-        let RunningRound { router, handles } = self
+        let RunningRound { router } = self
             .running
             .take()
             .expect("ShardedAggregator::finish_round called before begin_round");
@@ -387,7 +569,7 @@ impl<A: Aggregator + Send + 'static> Aggregator for ShardedAggregator<A> {
             let _ = lane.tx.send(LaneMsg::Finish);
         }
         drop(router);
-        let finished = self.join_lanes(handles);
+        let finished = self.collect_round();
         assert!(finished, "a shard lane exited before Finish");
     }
 
@@ -406,12 +588,21 @@ impl<A: Aggregator + Send + 'static> Aggregator for ShardedAggregator<A> {
 
 impl<A> Drop for ShardedAggregator<A> {
     /// Dropping mid-round (e.g. the drain bailed on a decode error and
-    /// the caller discards the view) still joins every lane thread.
+    /// the caller discards the view) still quiesces and joins every
+    /// resident lane thread. Lane panics are swallowed here (double
+    /// panics abort); the in-use paths re-raise them instead.
     fn drop(&mut self) {
-        if let Some(RunningRound { router, handles }) = self.running.take() {
+        if let Some(RunningRound { router }) = self.running.take() {
             drop(router);
-            for handle in handles {
-                // Swallow lane panics during unwinding; double panics abort.
+            for lane in &mut self.lanes {
+                let _ = lane.ret.recv();
+            }
+        }
+        for lane in &mut self.lanes {
+            lane.ctrl = None;
+        }
+        for lane in &mut self.lanes {
+            if let Some(handle) = lane.handle.take() {
                 let _ = handle.join();
             }
         }
@@ -422,27 +613,36 @@ impl<A> Drop for ShardedAggregator<A> {
 mod tests {
     use super::*;
 
-    /// Per-lane spy sink recording what it absorbed.
+    /// Per-lane spy sink recording what it absorbed. It releases every
+    /// spent sub-buffer through `reclaim_buffer` (like `MaskServer` does),
+    /// so the lane pools can demonstrate cross-round reuse.
     #[derive(Default)]
     struct LaneSpy {
         d: usize,
-        begun: Option<usize>,
+        begun: Vec<usize>,
         absorbed: Vec<(usize, Vec<f32>)>,
-        finished: bool,
+        spent: Vec<Vec<f32>>,
+        finished: usize,
     }
 
     impl Aggregator for LaneSpy {
         fn begin_round(&mut self, expected: usize) {
-            self.begun = Some(expected);
+            self.begun.push(expected);
         }
 
         fn absorb(&mut self, slot: usize, update: Update) {
             assert_eq!(update.len(), self.d);
-            self.absorbed.push((slot, update.into_vec()));
+            let v = update.into_vec();
+            self.absorbed.push((slot, v.clone()));
+            self.spent.push(v);
         }
 
         fn finish_round(&mut self) {
-            self.finished = true;
+            self.finished += 1;
+        }
+
+        fn reclaim_buffer(&mut self) -> Option<Vec<f32>> {
+            self.spent.pop()
         }
     }
 
@@ -498,8 +698,8 @@ mod tests {
         let shards = agg.into_shards();
         assert_eq!(shards.len(), 3);
         for (range, spy) in shards {
-            assert_eq!(spy.begun, Some(2));
-            assert!(spy.finished);
+            assert_eq!(spy.begun, vec![2]);
+            assert_eq!(spy.finished, 1);
             assert_eq!(spy.absorbed.len(), 2);
             let (slot0, sub0) = &spy.absorbed[0];
             assert_eq!(*slot0, 0);
@@ -517,13 +717,45 @@ mod tests {
         agg.absorb(0, Update::Mask(vec![1.0; 6]));
         agg.abort_round(); // two updates never arrive
         assert!(agg.shard_router().is_none(), "no round in flight");
+        assert!(agg.shard_slices().is_some(), "sinks parked after abort");
         // Lanes were recovered mid-round, unfinished — and can be reused.
         agg.begin_round(1);
+        assert!(agg.shard_slices().is_none(), "sinks on lanes mid-round");
         agg.absorb(0, Update::Mask(vec![0.0; 6]));
         agg.finish_round();
         for (_, spy) in agg.into_shards() {
-            assert!(spy.finished, "superseding round completed");
+            assert_eq!(spy.finished, 1, "superseding round completed");
             assert_eq!(spy.absorbed.len(), 2, "one absorb per round attempt");
+        }
+    }
+
+    #[test]
+    fn resident_lanes_survive_many_rounds_and_reuse_pools() {
+        // The persistence property the round-resident pipeline builds on:
+        // the same S lane threads (and their pools) serve every round.
+        let d = 8;
+        let mut agg = spy_shards(d, 2);
+        for round in 0..5 {
+            agg.begin_round(2);
+            for slot in 0..2 {
+                agg.absorb(slot, Update::Mask(vec![round as f32; d]));
+                while agg.reclaim_buffer().is_some() {}
+            }
+            agg.finish_round();
+        }
+        let stats = agg.lane_pool_stats();
+        // 5 rounds × 2 slots × 2 lanes = 20 sub-leases total; only the
+        // first round's in-flight peak can miss, every later lease is a
+        // pool hit because the lane pools persist across rounds.
+        assert_eq!(stats.hits + stats.misses, 20, "{stats:?}");
+        assert!(
+            stats.misses <= 2 * (LANE_QUEUE_CAP as u64 + 2),
+            "lane pools must be reused across rounds: {stats:?}"
+        );
+        for (_, spy) in agg.into_shards() {
+            assert_eq!(spy.begun.len(), 5);
+            assert_eq!(spy.finished, 5);
+            assert_eq!(spy.absorbed.len(), 10);
         }
     }
 
@@ -552,6 +784,38 @@ mod tests {
                 let expect: Vec<f32> = range.clone().map(|i| (slot * 10 + i) as f32).collect();
                 assert_eq!(sub, &expect, "slot {slot} range {range:?}");
             }
+        }
+    }
+
+    #[test]
+    fn route_decoded_ranges_matches_full_split() {
+        // Range-restricted routing (the sweep runs on each lane thread)
+        // ≡ full-decode-then-split, per lane.
+        struct FlipAll;
+        impl MaskRangeDecoder for FlipAll {
+            fn decode_range(&self, range: Range<usize>, mask: &mut [f32]) {
+                // "Member" at every even index.
+                for (j, m) in mask.iter_mut().enumerate() {
+                    if (range.start + j) % 2 == 0 {
+                        *m = 1.0 - *m;
+                    }
+                }
+            }
+        }
+        let d = 9;
+        let mask_g: Vec<f32> = (0..d).map(|i| (i % 3 == 0) as u32 as f32).collect();
+        let mut agg = spy_shards(d, 3);
+        agg.begin_round(1);
+        let router = agg.shard_router().unwrap();
+        router.route_decoded_ranges(0, &mask_g, Arc::new(FlipAll));
+        drop(router);
+        agg.finish_round();
+        // Oracle: full reconstruction then split at shard boundaries.
+        let mut full = mask_g.clone();
+        FlipAll.decode_range(0..d, &mut full);
+        for (range, spy) in agg.into_shards() {
+            assert_eq!(spy.absorbed.len(), 1);
+            assert_eq!(spy.absorbed[0].1, full[range.clone()].to_vec(), "{range:?}");
         }
     }
 

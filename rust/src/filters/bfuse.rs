@@ -326,10 +326,13 @@ impl<F: Fingerprint, const ARITY: usize> MembershipFilter for BinaryFuse<F, ARIT
         }
     }
 
-    /// Batched Eq. 5 kernel over the dense index range: the hash phase runs
-    /// over a fixed-size index block, then the probe phase flips members in
-    /// place — one virtual dispatch per round instead of one per key.
-    fn decode_mask_into(&self, mask: &mut [f32]) {
+    /// Batched Eq. 5 kernel over one contiguous index range (`start..start
+    /// + mask.len()`): the hash phase runs over a fixed-size index block,
+    /// then the probe phase flips members in place — one virtual dispatch
+    /// per round instead of one per key. `start == 0` is the full-`d`
+    /// sweep (`decode_mask_into`); nonzero starts are the per-shard
+    /// sub-sweeps of the dimension-sharded drain.
+    fn decode_mask_into_range(&self, mask: &mut [f32], start: usize) {
         if self.num_keys == 0 {
             return;
         }
@@ -340,7 +343,7 @@ impl<F: Fingerprint, const ARITY: usize> MembershipFilter for BinaryFuse<F, ARIT
         while base < d {
             let len = BATCH_BLOCK.min(d - base);
             for (j, h) in hashes[..len].iter_mut().enumerate() {
-                *h = mix_split((base + j) as u64, seed);
+                *h = mix_split((start + base + j) as u64, seed);
             }
             for (j, m) in mask[base..base + len].iter_mut().enumerate() {
                 if self.probe_hash(hashes[j]) {
@@ -496,6 +499,16 @@ mod tests {
         scalar_decode_oracle(&f, &mut expect);
         f.decode_mask_into(&mut mask);
         assert_eq!(mask, expect, "decode_mask_into diverged from scalar oracle");
+        // Range-restricted kernel: tiling [0, d) with uneven ranges must
+        // reproduce the full sweep bitwise (the dimension-sharded drain's
+        // per-shard decode contract).
+        let mut tiled: Vec<f32> = (0..d).map(|i| (i % 3 == 0) as u32 as f32).collect();
+        let cuts = [0, (d / 3) as usize, (d / 3 + d / 7 + 1) as usize, d as usize];
+        for w in cuts.windows(2) {
+            let (lo, hi) = (w[0], w[1].max(w[0]));
+            f.decode_mask_into_range(&mut tiled[lo..hi], lo);
+        }
+        assert_eq!(tiled, expect, "range tiling diverged from full decode");
         // contains_batch vs contains on a mixed member/non-member probe set.
         let mut rng = crate::util::rng::Xoshiro256pp::new(seed ^ 0xbb);
         let probes: Vec<u64> = (0..4_000).map(|_| rng.below(2 * d)).collect();

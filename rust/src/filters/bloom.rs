@@ -148,9 +148,10 @@ impl MembershipFilter for BloomFilter {
         }
     }
 
-    /// Batched Eq. 5 kernel over the dense index range (see
-    /// [`MembershipFilter::decode_mask_into`]).
-    fn decode_mask_into(&self, mask: &mut [f32]) {
+    /// Batched Eq. 5 kernel over one contiguous index range (see
+    /// [`MembershipFilter::decode_mask_into_range`]; `start == 0` is the
+    /// full-`d` `decode_mask_into` sweep).
+    fn decode_mask_into_range(&self, mask: &mut [f32], start: usize) {
         if self.num_keys == 0 {
             return;
         }
@@ -161,7 +162,7 @@ impl MembershipFilter for BloomFilter {
         while base < d {
             let len = BATCH_BLOCK.min(d - base);
             for (j, h) in h1s[..len].iter_mut().enumerate() {
-                let (h1, h2) = Self::double_hash((base + j) as u64);
+                let (h1, h2) = Self::double_hash((start + base + j) as u64);
                 *h = h1;
                 h2s[j] = h2;
             }
@@ -292,6 +293,12 @@ mod tests {
             }
             f.decode_mask_into(&mut mask);
             assert_eq!(mask, expect);
+            // Range tiling reproduces the full sweep bitwise.
+            let mut tiled: Vec<f32> = (0..d).map(|i| (i % 5 == 0) as u32 as f32).collect();
+            let mid = (d / 3 + 1) as usize;
+            f.decode_mask_into_range(&mut tiled[..mid], 0);
+            f.decode_mask_into_range(&mut tiled[mid..], mid);
+            assert_eq!(tiled, expect, "range tiling diverged");
             let mut rng = crate::util::rng::Xoshiro256pp::new(n as u64 + 13);
             let probes: Vec<u64> = (0..3_000).map(|_| rng.next_u64()).collect();
             let mut got = vec![false; probes.len()];

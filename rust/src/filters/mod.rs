@@ -93,11 +93,22 @@ pub trait MembershipFilter {
     /// Batched Eq. 5 reconstruction kernel over the dense index range
     /// `[0, mask.len())`: flip `mask[i]` (0.0 ↔ 1.0) at every index the
     /// filter reports as a member. This is the server-side DeltaMask hot
-    /// path; the default is the scalar membership sweep and doubles as the
-    /// parity oracle for the blocked overrides.
+    /// path; it is the `start == 0` case of the range-restricted kernel.
     fn decode_mask_into(&self, mask: &mut [f32]) {
-        for (i, m) in mask.iter_mut().enumerate() {
-            if self.contains(i as u64) {
+        self.decode_mask_into_range(mask, 0);
+    }
+
+    /// Range-restricted Eq. 5 kernel: flip `mask[j]` at every member index
+    /// `start + j` for `j` in `[0, mask.len())`. Restricting the sweep to
+    /// a contiguous `d`-range is what lets the dimension-sharded drain
+    /// split a single record's decode across shard lanes. The default is
+    /// the scalar membership sweep and doubles as the parity oracle for
+    /// the blocked overrides; overrides must agree with it bitwise, and
+    /// tiling `0..d` with ranges must reproduce `decode_mask_into` exactly
+    /// (membership is a per-index property, false positives included).
+    fn decode_mask_into_range(&self, mask: &mut [f32], start: usize) {
+        for (j, m) in mask.iter_mut().enumerate() {
+            if self.contains((start + j) as u64) {
                 *m = 1.0 - *m;
             }
         }

@@ -217,9 +217,10 @@ impl<F: Fingerprint> MembershipFilter for XorFilter<F> {
         }
     }
 
-    /// Batched Eq. 5 kernel over the dense index range (see
-    /// [`MembershipFilter::decode_mask_into`]).
-    fn decode_mask_into(&self, mask: &mut [f32]) {
+    /// Batched Eq. 5 kernel over one contiguous index range (see
+    /// [`MembershipFilter::decode_mask_into_range`]; `start == 0` is the
+    /// full-`d` `decode_mask_into` sweep).
+    fn decode_mask_into_range(&self, mask: &mut [f32], start: usize) {
         if self.num_keys == 0 {
             return;
         }
@@ -230,7 +231,7 @@ impl<F: Fingerprint> MembershipFilter for XorFilter<F> {
         while base < d {
             let len = BATCH_BLOCK.min(d - base);
             for (j, h) in hashes[..len].iter_mut().enumerate() {
-                *h = mix_split((base + j) as u64, seed);
+                *h = mix_split((start + base + j) as u64, seed);
             }
             for (j, m) in mask[base..base + len].iter_mut().enumerate() {
                 if self.probe_hash(hashes[j]) {
@@ -322,6 +323,12 @@ mod tests {
             }
             f8.decode_mask_into(&mut mask);
             assert_eq!(mask, expect);
+            // Range tiling reproduces the full sweep bitwise.
+            let mut tiled: Vec<f32> = (0..d).map(|i| (i % 2 == 0) as u32 as f32).collect();
+            let mid = (d / 2 + 3).min(d) as usize;
+            f8.decode_mask_into_range(&mut tiled[..mid], 0);
+            f8.decode_mask_into_range(&mut tiled[mid..], mid);
+            assert_eq!(tiled, expect, "range tiling diverged");
             // contains_batch parity across widths.
             let mut rng = crate::util::rng::Xoshiro256pp::new(n as u64 + 7);
             let probes: Vec<u64> = (0..3_000).map(|_| rng.below(2 * d)).collect();

@@ -35,6 +35,16 @@ pub struct RoundMetrics {
     /// entries mean the contiguous `d`-split is balanced; a hot shard
     /// flags a dense coordinate range worth re-splitting.
     pub shard_absorb_ms: Vec<f64>,
+    /// Decode/absorb buffer-pool leases served from the free lists this
+    /// round (drain pool + shard-lane pools combined).
+    pub pool_hits: u64,
+    /// Buffer-pool leases that had to allocate this round. Under the
+    /// round-resident pipeline (`--persistent-pipeline`) this drops to
+    /// zero once the pools are warm — the cross-round zero-allocation
+    /// property, reported instead of merely asserted. The per-round-spawn
+    /// path re-allocates its shard-lane pools every round, so a nonzero
+    /// steady state here is the cost that knob removes.
+    pub pool_misses: u64,
     pub train_loss: f64,
     pub accuracy: Option<f64>,
     /// Which server pipeline produced this round: `"streaming"`
@@ -154,6 +164,8 @@ impl ExperimentResult {
                         "shard_absorb_ms",
                         Json::Arr(r.shard_absorb_ms.iter().map(|&v| Json::Num(v)).collect()),
                     )
+                    .set("pool_hits", Json::Num(r.pool_hits as f64))
+                    .set("pool_misses", Json::Num(r.pool_misses as f64))
                     .set("bpp", Json::Num(r.mean_bpp))
                     .set("loss", Json::Num(r.train_loss))
                     .set(
@@ -200,6 +212,8 @@ mod tests {
             dec_worker_ms: vec![2.5, 1.5],
             agg_shards: 4,
             shard_absorb_ms: vec![1.0, 1.25, 0.75, 1.0],
+            pool_hits: 11,
+            pool_misses: 3,
             train_loss: 0.5,
             accuracy: acc,
             pipeline: "streaming",
@@ -239,5 +253,7 @@ mod tests {
         let per_shard = rounds[0].get("shard_absorb_ms").unwrap().as_arr().unwrap();
         assert_eq!(per_shard.len(), 4);
         assert_eq!(per_shard[1].as_f64().unwrap(), 1.25);
+        assert_eq!(rounds[0].get("pool_hits").unwrap().as_usize().unwrap(), 11);
+        assert_eq!(rounds[0].get("pool_misses").unwrap().as_usize().unwrap(), 3);
     }
 }

@@ -96,6 +96,15 @@ pub struct ExperimentConfig {
     /// 0 uses one shard per available core. Bitwise identical at any
     /// setting; the knob surface is documented in `docs/SCALING.md`.
     pub agg_shards: usize,
+    /// Round-resident drain pipeline (`--persistent-pipeline`, env
+    /// `DELTAMASK_PERSISTENT_PIPELINE=1`): spawn the decode workers and
+    /// the dimension-shard absorb lanes **once per experiment** and park
+    /// them between rounds, reusing their scratch pools and
+    /// aggregation-state slices across the whole trajectory — thread-spawn
+    /// and decode-buffer allocation become O(1) per experiment instead of
+    /// O(rounds). Scheduling only: bitwise identical to the per-round
+    /// path at every knob setting (`coordinator::DrainPipeline`).
+    pub persistent_pipeline: bool,
 }
 
 /// Default decode-worker count: `$DELTAMASK_DECODE_WORKERS` when set (CI's
@@ -132,6 +141,24 @@ fn knob_from_env(var: &str) -> usize {
     }
 }
 
+/// Default for the round-resident drain pipeline:
+/// `$DELTAMASK_PERSISTENT_PIPELINE` when set (CI's knob-matrix job runs
+/// the `fl_integration` suite with `=1` combined with the sharding knobs,
+/// so the resident path is exercised end-to-end), else off.
+///
+/// Panics if the variable is set but not one of `0/1/true/false` — the
+/// same fail-loudly policy as the other CI-gating knobs.
+pub fn persistent_pipeline_from_env() -> bool {
+    match std::env::var("DELTAMASK_PERSISTENT_PIPELINE") {
+        Ok(v) => match v.as_str() {
+            "1" | "true" => true,
+            "0" | "false" => false,
+            _ => panic!("DELTAMASK_PERSISTENT_PIPELINE must be 0/1/true/false, got '{v}'"),
+        },
+        Err(_) => false,
+    }
+}
+
 impl Default for ExperimentConfig {
     fn default() -> Self {
         Self {
@@ -157,6 +184,7 @@ impl Default for ExperimentConfig {
             pipeline: crate::coordinator::PipelineMode::default(),
             decode_workers: decode_workers_from_env(),
             agg_shards: agg_shards_from_env(),
+            persistent_pipeline: persistent_pipeline_from_env(),
         }
     }
 }
@@ -214,9 +242,14 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> Result<ExperimentResult> {
         "fine_tuning" => runner.run_finetuning(),
         "linear_probing" => runner.run_linear_probing(),
         name => {
-            let codec = crate::compress::by_name(name)
-                .ok_or_else(|| anyhow!("unknown method '{name}'"))?;
-            runner.run_codec(codec.as_ref())
+            // Arc because the round-resident pipeline's decode workers
+            // hold the codec across rounds.
+            let codec: std::sync::Arc<dyn crate::compress::UpdateCodec> =
+                std::sync::Arc::from(
+                    crate::compress::by_name(name)
+                        .ok_or_else(|| anyhow!("unknown method '{name}'"))?,
+                );
+            runner.run_codec(codec)
         }
     }
 }

@@ -14,13 +14,14 @@ use super::server::MaskServer;
 use super::ExperimentConfig;
 use crate::compress::UpdateCodec;
 use crate::coordinator::{
-    drain_round, ChannelTransport, ClientPool, DrainConfig, Payload, RoundEngine, RoundPlan,
-    ScratchPool, WireMessage,
+    drain_round, ChannelTransport, ClientPool, DrainConfig, DrainPipeline, Payload, PoolStats,
+    RoundEngine, RoundPlan, ScratchPool, ShardedAggregator, WireMessage,
 };
 use crate::model::backend::{Backend, FtState, LpState, ModelParams};
 use crate::model::{accuracy, init_params, sample_mask_seeded};
 use crate::util::timer::Stopwatch;
 use anyhow::{anyhow, Result};
+use std::sync::Arc;
 
 /// Per-round accounting produced by the server-side drain loop.
 #[derive(Clone, Debug, Default)]
@@ -36,6 +37,12 @@ struct RoundTally {
     /// Absorb compute seconds attributed to each dimension shard
     /// (`ShardedAggregator::absorb_secs_by_shard`; empty when unsharded).
     absorb_by_shard: Vec<f64>,
+    /// Decode/absorb buffer-pool leases this round, drain pool + shard
+    /// lane pools combined (`PoolStats`): free-list reuses vs fresh
+    /// allocations. Under the round-resident pipeline, `pool_misses`
+    /// drops to zero once the pools are warm.
+    pool_hits: u64,
+    pool_misses: u64,
     loss: f64,
 }
 
@@ -216,17 +223,42 @@ impl<'a> Runner<'a> {
     /// is planned by the [`RoundEngine`]; decoding and aggregation flow
     /// through the transport into the streaming server (or the batch
     /// barrier when `cfg.pipeline` asks for the A/B reference path).
-    pub fn run_codec(&mut self, codec: &dyn UpdateCodec) -> Result<ExperimentResult> {
+    ///
+    /// With `cfg.persistent_pipeline` the decode workers, the
+    /// dimension-shard absorb lanes and every buffer pool are **round
+    /// resident**: spawned once here, parked between rounds, reused for
+    /// the whole trajectory (`coordinator::DrainPipeline` + one resident
+    /// `MaskServer::shard_view`), and stitched back at the end — bitwise
+    /// identical to the per-round-spawn path.
+    pub fn run_codec(&mut self, codec: Arc<dyn UpdateCodec>) -> Result<ExperimentResult> {
         let d = self.params.cfg.d();
         let sw = Stopwatch::new();
         let head_bits = self.init_head()?;
         let mut rounds = Vec::with_capacity(self.cfg.rounds);
 
+        let drain_cfg =
+            DrainConfig::sharded(self.cfg.pipeline, self.cfg.decode_workers, self.cfg.agg_shards);
+        let pipeline = self
+            .cfg
+            .persistent_pipeline
+            .then(|| DrainPipeline::new(drain_cfg));
+        // The resident dimension-sharded view: lanes, lane pools and
+        // pseudo-count slices live here across rounds; θ_g/s_g sync back
+        // to `self.server` after every round for planning and evaluation.
+        let mut resident_view: Option<ShardedAggregator<MaskServer>> = match &pipeline {
+            Some(pipe) if pipe.config().shards > 1 => {
+                Some(self.server.shard_view(pipe.config().shards))
+            }
+            _ => None,
+        };
+
         for round in 0..self.cfg.rounds {
-            let plan = self
-                .engine
-                .plan(round, &self.server.theta_g, &self.server.s_g);
-            let tally = self.run_round(&plan, codec)?;
+            let plan = Arc::new(
+                self.engine
+                    .plan(round, &self.server.theta_g, &self.server.s_g),
+            );
+            let tally =
+                self.run_round(&plan, &codec, drain_cfg, pipeline.as_ref(), &mut resident_view)?;
 
             // Periodic evaluation of the global model.
             let acc = if (round + 1) % self.cfg.eval_every == 0 || round + 1 == self.cfg.rounds
@@ -251,18 +283,34 @@ impl<'a> Runner<'a> {
                 dec_worker_ms,
                 agg_shards: tally.agg_shards.max(1),
                 shard_absorb_ms,
+                pool_hits: tally.pool_hits,
+                pool_misses: tally.pool_misses,
                 train_loss: tally.loss / kf,
                 accuracy: acc,
                 pipeline: self.cfg.pipeline.as_str(),
             });
+        }
+        // Retire the resident view: the full stitch (incl. pseudo-counts)
+        // brings `self.server` back to the exact unsharded state.
+        if let Some(view) = resident_view.take() {
+            self.server.adopt_shards(view);
         }
         Ok(self.result_with_head(rounds, head_bits, sw.elapsed_secs()))
     }
 
     /// One federated round: fan participants out on the work-stealing pool,
     /// drain their encoded updates off the transport on this thread, and
-    /// aggregate per the configured pipeline mode.
-    fn run_round(&mut self, plan: &RoundPlan, codec: &dyn UpdateCodec) -> Result<RoundTally> {
+    /// aggregate per the configured pipeline mode — through the resident
+    /// `pipeline`/`resident_view` pair when the experiment is persistent,
+    /// through per-round spawns otherwise.
+    fn run_round(
+        &mut self,
+        plan: &Arc<RoundPlan>,
+        codec: &Arc<dyn UpdateCodec>,
+        drain_cfg: DrainConfig,
+        pipeline: Option<&DrainPipeline>,
+        resident_view: &mut Option<ShardedAggregator<MaskServer>>,
+    ) -> Result<RoundTally> {
         let cfg = self.cfg;
         let backend = self.backend;
         let params = &self.params;
@@ -270,6 +318,8 @@ impl<'a> Runner<'a> {
         let round = plan.round;
         let expected = plan.expected();
         let resync = codec.resync_scores();
+        let plan_ref: &RoundPlan = plan.as_ref();
+        let codec_ref: &dyn UpdateCodec = codec.as_ref();
 
         // Hand the participating sessions to the pool; their slots stay
         // visibly empty until the round returns them.
@@ -287,10 +337,10 @@ impl<'a> Runner<'a> {
                 backend,
                 params,
                 &data.clients[id],
-                plan,
+                plan_ref,
                 cfg.local_epochs,
                 resync,
-                codec,
+                codec_ref,
                 slot,
                 sess,
             ) {
@@ -317,40 +367,80 @@ impl<'a> Runner<'a> {
             }
         };
 
-        let drain_cfg = DrainConfig::sharded(cfg.pipeline, cfg.decode_workers, cfg.agg_shards);
         let server = &mut self.server;
         let dec_pool = &self.scratch;
         let server_loop = move || -> Result<RoundTally> {
             // All decoding + aggregation happens inside the coordinator's
             // drain loop; the runner only reduces the report. With
             // `agg_shards > 1` the round drains into a dimension-sharded
-            // view of the server, stitched back (bitwise-identically)
-            // once the drain completes; a failed drain drops the view,
-            // which joins its absorb lanes without touching the server.
-            let (report, agg_shards, absorb_by_shard) =
-                if drain_cfg.resolved_shards() <= 1 {
-                    let report =
-                        drain_round(&mut channel, plan, codec, server, drain_cfg, dec_pool)?;
-                    (report, 1, Vec::new())
-                } else {
-                    let mut view = server.shard_view(drain_cfg.resolved_shards());
-                    let report =
-                        drain_round(&mut channel, plan, codec, &mut view, drain_cfg, dec_pool)?;
-                    let shards = view.shard_count();
-                    let absorb = view.absorb_secs_by_shard();
-                    server.adopt_shards(view);
-                    (report, shards, absorb)
+            // view of the server — the resident one (synced back, kept)
+            // under the persistent pipeline, a per-round one (stitched
+            // back, dropped) otherwise; a failed drain leaves the view's
+            // absorb lanes joined/parked without touching the server.
+            let (report, agg_shards, absorb_by_shard, lane_pool) =
+                match (pipeline, resident_view.as_mut()) {
+                    (Some(pipe), Some(view)) => {
+                        let lanes_before = view.lane_pool_stats();
+                        let report = pipe.drain_round(&mut channel, plan, codec, view)?;
+                        let lane_pool = view.lane_pool_stats().delta_since(lanes_before);
+                        server.sync_from_shards(view);
+                        (
+                            report,
+                            view.shard_count(),
+                            view.absorb_secs_by_shard(),
+                            lane_pool,
+                        )
+                    }
+                    (Some(pipe), None) => {
+                        let report = pipe.drain_round(&mut channel, plan, codec, server)?;
+                        (report, 1, Vec::new(), PoolStats::default())
+                    }
+                    (None, _) if drain_cfg.resolved_shards() > 1 => {
+                        let mut view = server.shard_view(drain_cfg.resolved_shards());
+                        let report = drain_round(
+                            &mut channel,
+                            plan,
+                            codec_ref,
+                            &mut view,
+                            drain_cfg,
+                            dec_pool,
+                        )?;
+                        let shards = view.shard_count();
+                        let absorb = view.absorb_secs_by_shard();
+                        let lane_pool = view.lane_pool_stats();
+                        server.adopt_shards(view);
+                        (report, shards, absorb, lane_pool)
+                    }
+                    (None, _) => {
+                        let report = drain_round(
+                            &mut channel,
+                            plan,
+                            codec_ref,
+                            server,
+                            drain_cfg,
+                            dec_pool,
+                        )?;
+                        (report, 1, Vec::new(), PoolStats::default())
+                    }
                 };
+            // Reduce the report before moving its per-worker vector out
+            // (a struct expression evaluates fields in order, so borrowing
+            // `report` after the move would not compile).
+            let pool = report.pool.merged(lane_pool);
+            let enc_secs = report.total_enc_secs();
+            let loss = report.total_loss();
             Ok(RoundTally {
                 // Exact byte accounting from the transport (integer-valued,
                 // so order-independent).
                 bits: channel.stats().sent_payload_bytes as f64 * 8.0,
-                enc_secs: report.total_enc_secs(),
+                enc_secs,
                 dec_secs: report.dec_secs,
                 dec_by_worker: report.dec_by_worker,
                 agg_shards,
                 absorb_by_shard,
-                loss: report.total_loss(),
+                pool_hits: pool.hits,
+                pool_misses: pool.misses,
+                loss,
             })
         };
 
@@ -510,6 +600,8 @@ impl<'a> Runner<'a> {
                 dec_worker_ms: Vec::new(),
                 agg_shards: 1,
                 shard_absorb_ms: Vec::new(),
+                pool_hits: 0,
+                pool_misses: 0,
                 train_loss: loss / participants.len() as f64,
                 accuracy: acc,
                 pipeline: self.cfg.pipeline.as_str(),
@@ -607,6 +699,8 @@ impl<'a> Runner<'a> {
                 dec_worker_ms: Vec::new(),
                 agg_shards: 1,
                 shard_absorb_ms: Vec::new(),
+                pool_hits: 0,
+                pool_misses: 0,
                 train_loss: loss / participants.len() as f64,
                 accuracy: acc,
                 pipeline: self.cfg.pipeline.as_str(),

@@ -282,6 +282,40 @@ impl MaskServer {
         )
     }
 
+    /// Refresh the broadcast state (θ_g, s_g) and the round counter from a
+    /// **resident** shard view without consuming it — the round-resident
+    /// drain pipeline keeps one view (lanes, pools, pseudo-count slices)
+    /// alive for the whole experiment and calls this after every round so
+    /// planning and evaluation see the advanced global state. The Beta
+    /// pseudo-counts stay resident in the slices (nothing outside the
+    /// slices' own `finish_round` reads them); retire the view with
+    /// [`MaskServer::adopt_shards`] for the full stitch at experiment end.
+    /// Bitwise identical to a per-round `adopt_shards` as far as θ_g/s_g
+    /// are concerned (the copy is the same pure copy).
+    ///
+    /// Panics if the view's geometry does not match this server, a round
+    /// is still in flight on the view, or the slices' round counters
+    /// disagree (all coordinator bugs).
+    pub fn sync_from_shards(&mut self, view: &ShardedAggregator<MaskServer>) {
+        assert_eq!(view.d(), self.theta_g.len(), "shard view dimensionality");
+        let slices = view
+            .shard_slices()
+            .expect("sync_from_shards called mid-round");
+        let mut round = None;
+        for (range, slice) in slices {
+            assert_eq!(slice.theta_g.len(), range.len(), "slice/range mismatch");
+            self.theta_g[range.clone()].copy_from_slice(&slice.theta_g);
+            self.s_g[range.clone()].copy_from_slice(&slice.s_g);
+            match round {
+                None => round = Some(slice.round),
+                Some(r) => assert_eq!(r, slice.round, "shard rounds diverged"),
+            }
+        }
+        if let Some(r) = round {
+            self.round = r;
+        }
+    }
+
     /// Stitch a drained shard view back into this server: copy every
     /// slice's posterior / score state into its coordinate range and
     /// adopt the advanced round counter. The stitched global state is
@@ -580,5 +614,48 @@ mod tests {
         }
         // More shards than coordinates: clamped, still exact.
         shard_trajectory_case(16, 5, true);
+    }
+
+    #[test]
+    fn resident_view_with_per_round_sync_matches_monolithic_bitwise() {
+        // The round-resident regime: ONE view (lanes + pseudo-count slices
+        // resident), θ_g/s_g synced back per round, full stitch at the
+        // end — across the ρ=0.5 prior reset (fires on rounds 0 and 2).
+        use crate::coordinator::Aggregator as _;
+        let d = 257;
+        let mut rng = Xoshiro256pp::new(99);
+        let mut mono = MaskServer::with_theta0(d, 0.5, 0.85);
+        let mut split = mono.clone();
+        let mut view = split.shard_view(3);
+        for round in 0..4 {
+            let k = 2 + round % 2;
+            let updates: Vec<Update> = (0..k)
+                .map(|_| {
+                    Update::Mask(
+                        (0..d)
+                            .map(|_| if rng.next_f32() < 0.5 { 1.0 } else { 0.0 })
+                            .collect(),
+                    )
+                })
+                .collect();
+            mono.aggregate(&updates);
+            view.begin_round(k);
+            for slot in (0..k).rev() {
+                view.absorb(slot, updates[slot].clone());
+            }
+            view.finish_round();
+            split.sync_from_shards(&view);
+            assert_eq!(mono.theta_g, split.theta_g, "round {round}");
+            assert_eq!(mono.s_g, split.s_g, "round {round}");
+            assert_eq!(mono.round, split.round, "round {round}");
+        }
+        // Retiring the view stitches the pseudo-counts too; the next
+        // unsharded round then continues bitwise-identically.
+        split.adopt_shards(view);
+        let next = vec![Update::Mask(vec![1.0; d])];
+        mono.aggregate(&next);
+        split.aggregate(&next);
+        assert_eq!(mono.theta_g, split.theta_g);
+        assert_eq!(mono.s_g, split.s_g);
     }
 }

@@ -10,9 +10,12 @@
 //!   mask derivation; a `Transport` carrying encoded updates with wire
 //!   accounting; a work-stealing `ClientPool`; the batch-vs-streaming
 //!   `PipelineMode`; a `DrainConfig`-sharded server decode pool wired to
-//!   `--decode-workers`; and the dimension-sharded
+//!   `--decode-workers`; the dimension-sharded
 //!   `coordinator::ShardedAggregator` absorb lanes wired to
-//!   `--agg-shards`), and the [`fl`] experiment layer on top of it
+//!   `--agg-shards`; and the round-resident `coordinator::DrainPipeline`
+//!   wired to `--persistent-pipeline`, which keeps workers, lanes and
+//!   buffer pools alive across rounds), and the [`fl`] experiment layer
+//!   on top of it
 //!   (state ownership, the streaming Bayesian [`fl::server::MaskServer`],
 //!   baselines, metrics). Updates are decoded and absorbed per-arrival —
 //!   the server never materializes a round's O(K·d) update set — plus the
@@ -56,7 +59,10 @@
 //! steady-state rounds allocate nothing on the wire path — and the server
 //! decode sweep shards across a worker pool while the absorb sweep shards
 //! across the dimension axis ([`coordinator::DrainConfig`], CLI
-//! `--decode-workers N` / `--agg-shards S`). Every batched
+//! `--decode-workers N` / `--agg-shards S`), with the whole crew
+//! optionally round-resident ([`coordinator::DrainPipeline`], CLI
+//! `--persistent-pipeline`: spawn once, park between rounds, pool
+//! hit/miss counters proving the zero-alloc steady state). Every batched
 //! or sharded variant is parity-locked to a retained scalar/serial oracle:
 //! it changes *how* work is scheduled or queried, never what is encoded —
 //! all 8 codecs stay bitwise-identical on the wire and in the aggregate.

@@ -12,6 +12,8 @@
 //!   deltamask train --pipeline batch --method fedpm   (A/B the old barrier)
 //!   deltamask train --decode-workers 8    (shard server decode; 0 = cores)
 //!   deltamask train --agg-shards 4   (shard aggregation by dimension; 0 = cores)
+//!   deltamask train --persistent-pipeline --decode-workers 4 --agg-shards 4
+//!       (round-resident workers/lanes/pools: spawn once, park between rounds)
 //!   deltamask sweep --datasets cifar10,svhn --methods deltamask,fedpm
 //!   deltamask filters --entries 100000
 //!
@@ -22,8 +24,8 @@
 use deltamask::bench::Table;
 use deltamask::coordinator::PipelineMode;
 use deltamask::fl::{
-    agg_shards_from_env, decode_workers_from_env, run_experiment, BackendKind, ExperimentConfig,
-    HeadInit,
+    agg_shards_from_env, decode_workers_from_env, persistent_pipeline_from_env, run_experiment,
+    BackendKind, ExperimentConfig, HeadInit,
 };
 use deltamask::util::cli::Args;
 
@@ -59,6 +61,7 @@ fn parse_cfg(args: &Args) -> ExperimentConfig {
         pipeline: PipelineMode::from_args(args),
         decode_workers: args.usize("decode-workers", decode_workers_from_env()),
         agg_shards: args.usize("agg-shards", agg_shards_from_env()),
+        persistent_pipeline: args.flag("persistent-pipeline") || persistent_pipeline_from_env(),
     };
     if let Some(w) = args.get("width") {
         let w: usize = w.parse().expect("--width must be an integer");
@@ -70,7 +73,7 @@ fn parse_cfg(args: &Args) -> ExperimentConfig {
 fn cmd_train(args: &Args) -> anyhow::Result<()> {
     let cfg = parse_cfg(args);
     eprintln!(
-        "training: method={} dataset={} arch={} d={} N={} R={} rho={} alpha={} backend={:?} pipeline={} decode_workers={} agg_shards={}",
+        "training: method={} dataset={} arch={} d={} N={} R={} rho={} alpha={} backend={:?} pipeline={} decode_workers={} agg_shards={} persistent_pipeline={}",
         cfg.method,
         cfg.dataset,
         cfg.arch,
@@ -82,7 +85,8 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         cfg.backend,
         cfg.pipeline.as_str(),
         cfg.decode_workers,
-        cfg.agg_shards
+        cfg.agg_shards,
+        cfg.persistent_pipeline
     );
     let res = run_experiment(&cfg)?;
     for r in &res.rounds {

@@ -12,7 +12,11 @@
 //! the feature disabled the [`Executor`] / [`XlaBackend`] stubs below keep
 //! every call site compiling; their constructors return a clear error and
 //! the pure-rust `native` backend remains the execution substrate.
-//! Manifest parsing is plain JSON and stays available either way.
+//! With the feature enabled, the default dependency is the vendored
+//! compile-only shim at `rust/vendor/xla_stub` (CI's `feature-matrix` job
+//! builds + clippy-checks this path); executing real artifacts requires
+//! pointing the `xla` dependency at the real crate. Manifest parsing is
+//! plain JSON and stays available either way.
 
 #[cfg(feature = "xla")]
 pub mod executor;
@@ -37,7 +41,8 @@ mod stub {
     use std::sync::Arc;
 
     const MSG: &str = "built without the `xla` cargo feature: the PJRT/XLA path is unavailable \
-                       (enable the feature and provide the `xla` crate, or use the native backend)";
+                       (enable the feature — swapping the vendored xla_stub for the real `xla` \
+                       crate to actually execute — or use the native backend)";
 
     /// Stub for the PJRT executor (see module docs).
     pub struct Executor;

@@ -8,14 +8,15 @@
 //! the round cleanly: decode workers joined, every shard lane joined,
 //! the view reusable.
 
-use deltamask::compress::{self, Encoded, ScratchPool};
+use deltamask::compress::{self, Encoded, ScratchPool, UpdateCodec};
 use deltamask::coordinator::{
-    drain_round, shard_bounds, ChannelTransport, DrainConfig, Payload, PipelineMode, RoundEngine,
-    RoundPlan, WireMessage,
+    drain_round, shard_bounds, ChannelTransport, DrainConfig, DrainPipeline, Payload,
+    PipelineMode, RoundEngine, RoundPlan, ShardedAggregator, WireMessage,
 };
 use deltamask::fl::server::MaskServer;
 use deltamask::model::sample_mask_seeded;
 use deltamask::util::rng::Xoshiro256pp;
+use std::sync::Arc;
 
 fn logit(p: f32) -> f32 {
     let p = p.clamp(1e-6, 1.0 - 1e-6);
@@ -327,6 +328,245 @@ fn malformed_record_under_sharded_absorb_aborts_cleanly() {
     );
     assert_eq!(reference.theta_g, recovered.theta_g);
     assert_eq!(reference.s_g, recovered.s_g);
+}
+
+// ---------------------------------------------------------------------
+// Round-resident pipeline (persistent workers / lanes / pools)
+// ---------------------------------------------------------------------
+
+/// Drive `rounds` rounds through ONE [`DrainPipeline`] (resident decode
+/// workers + pool) and — when `shards > 1` — ONE resident shard view
+/// (resident lanes + lane pools + pseudo-count slices), syncing θ_g/s_g
+/// back each round and stitching fully at the end. Returns the final
+/// server plus the total pool misses (pipeline pool + lane pools).
+fn drain_trajectory_resident(
+    name: &str,
+    d: usize,
+    rounds: usize,
+    mode: PipelineMode,
+    workers: usize,
+    shards: usize,
+) -> (MaskServer, u64) {
+    let codec: Arc<dyn UpdateCodec> = Arc::from(compress::by_name(name).unwrap());
+    let pipeline = DrainPipeline::new(DrainConfig::sharded(mode, workers, shards));
+    let mut server = MaskServer::with_theta0(d, 0.5, 0.85); // ρ=0.5 ⇒ prior reset rounds 0, 2
+    let mut view: Option<ShardedAggregator<MaskServer>> =
+        (shards > 1).then(|| server.shard_view(shards));
+    let mut engine = RoundEngine::new(11, 4, 1.0, 0.8, 0.25, rounds);
+    for round in 0..rounds {
+        let plan = Arc::new(engine.plan(round, &server.theta_g, &server.s_g));
+        let mut rng = Xoshiro256pp::new(0xAB ^ round as u64);
+        let encs = encode_round(name, &plan, &mut rng);
+        let order: Vec<usize> = (0..plan.expected()).rev().collect();
+        let mut channel = send_all(&plan, &encs, &order);
+        let tag = || format!("{name} {mode:?} workers={workers} shards={shards} round={round}");
+        match view.as_mut() {
+            Some(view) => {
+                pipeline
+                    .drain_round(&mut channel, &plan, &codec, view)
+                    .unwrap_or_else(|e| panic!("{}: {e}", tag()));
+                server.sync_from_shards(view);
+            }
+            None => {
+                pipeline
+                    .drain_round(&mut channel, &plan, &codec, &mut server)
+                    .unwrap_or_else(|e| panic!("{}: {e}", tag()));
+            }
+        }
+    }
+    let lane_misses = view.as_ref().map_or(0, |v| v.lane_pool_stats().misses);
+    if let Some(view) = view {
+        server.adopt_shards(view);
+    }
+    (server, pipeline.pool().stats().misses + lane_misses)
+}
+
+/// The per-round-spawn oracle for the same trajectory: serial
+/// `drain_round` with identical engine/encode seeds.
+fn drain_trajectory_serial(name: &str, d: usize, rounds: usize, mode: PipelineMode) -> MaskServer {
+    let codec = compress::by_name(name).unwrap();
+    let mut server = MaskServer::with_theta0(d, 0.5, 0.85);
+    let mut engine = RoundEngine::new(11, 4, 1.0, 0.8, 0.25, rounds);
+    let pool = ScratchPool::new();
+    for round in 0..rounds {
+        let plan = engine.plan(round, &server.theta_g, &server.s_g);
+        let mut rng = Xoshiro256pp::new(0xAB ^ round as u64);
+        let encs = encode_round(name, &plan, &mut rng);
+        let order: Vec<usize> = (0..plan.expected()).rev().collect();
+        let mut channel = send_all(&plan, &encs, &order);
+        drain_round(
+            &mut channel,
+            &plan,
+            codec.as_ref(),
+            &mut server,
+            DrainConfig::serial(mode),
+            &pool,
+        )
+        .unwrap_or_else(|e| panic!("{name} serial round {round}: {e}"));
+    }
+    server
+}
+
+/// The round-resident tentpole property: a multi-round trajectory through
+/// persistent workers/lanes/pools — across the ⌈1/ρ⌉ prior reset — is
+/// bitwise identical to the per-round-spawn serial path, for all 8 codecs
+/// × both pipeline modes × worker/shard combinations (resident decode
+/// crew only, resident lanes only, both).
+#[test]
+fn persistent_pipeline_matches_per_round_spawn_for_all_codecs() {
+    let d = 512;
+    let rounds = 3;
+    for name in compress::all_names() {
+        for mode in [PipelineMode::Batch, PipelineMode::Streaming] {
+            let oracle = drain_trajectory_serial(name, d, rounds, mode);
+            for (workers, shards) in [(3usize, 1usize), (1, 3), (3, 3)] {
+                let (resident, _) =
+                    drain_trajectory_resident(name, d, rounds, mode, workers, shards);
+                let tag = format!("{name} {mode:?} workers={workers} shards={shards}");
+                assert_eq!(oracle.theta_g, resident.theta_g, "{tag}: theta_g diverged");
+                assert_eq!(oracle.s_g, resident.s_g, "{tag}: s_g diverged");
+                assert_eq!(oracle.round, resident.round, "{tag}: round counter");
+            }
+        }
+    }
+}
+
+/// A malformed record mid-trajectory aborts that round cleanly and leaves
+/// the SAME resident pipeline + view reusable: the following good rounds
+/// drain through the same parked workers/lanes, and the final state is
+/// bitwise identical to a serial replay of the good rounds only.
+#[test]
+fn persistent_pipeline_survives_malformed_round_and_stays_reusable() {
+    let d = 512;
+    let name = "deltamask";
+    let codec: Arc<dyn UpdateCodec> = Arc::from(compress::by_name(name).unwrap());
+    for mode in [PipelineMode::Batch, PipelineMode::Streaming] {
+        let pipeline = DrainPipeline::new(DrainConfig::sharded(mode, 3, 4));
+        let mut server = MaskServer::with_theta0(d, 1.0, 0.85);
+        let mut view = server.shard_view(4);
+        let mut oracle = MaskServer::with_theta0(d, 1.0, 0.85);
+        let oracle_pool = ScratchPool::new();
+        let serial_codec = compress::by_name(name).unwrap();
+        let mut engine = RoundEngine::new(17, 4, 1.0, 0.8, 0.25, 3);
+        let mut engine_o = RoundEngine::new(17, 4, 1.0, 0.8, 0.25, 3);
+        for round in 0..3 {
+            let plan = Arc::new(engine.plan(round, &server.theta_g, &server.s_g));
+            let plan_o = engine_o.plan(round, &oracle.theta_g, &oracle.s_g);
+            let mut rng = Xoshiro256pp::new(0xCC ^ round as u64);
+            let mut encs = encode_round(name, &plan, &mut rng);
+            let order: Vec<usize> = (0..plan.expected()).collect();
+            if round == 1 {
+                // Corrupt one record: this round must abort...
+                encs[2] = Encoded { bytes: vec![0; 8] };
+                let mut channel = send_all(&plan, &encs, &order);
+                let err = pipeline
+                    .drain_round(&mut channel, &plan, &codec, &mut view)
+                    .unwrap_err();
+                assert!(
+                    err.to_string().contains("decode failed for slot 2"),
+                    "{mode:?}: {err}"
+                );
+                // ...and the oracle skips it entirely (its engine still
+                // consumed the round's sampling draw above).
+                continue;
+            }
+            let mut channel = send_all(&plan, &encs, &order);
+            pipeline
+                .drain_round(&mut channel, &plan, &codec, &mut view)
+                .unwrap_or_else(|e| panic!("{mode:?} round {round}: {e}"));
+            server.sync_from_shards(&view);
+
+            let mut channel = send_all(&plan_o, &encs, &order);
+            drain_round(
+                &mut channel,
+                &plan_o,
+                serial_codec.as_ref(),
+                &mut oracle,
+                DrainConfig::serial(mode),
+                &oracle_pool,
+            )
+            .unwrap_or_else(|e| panic!("{mode:?} oracle round {round}: {e}"));
+            assert_eq!(server.theta_g, oracle.theta_g, "{mode:?} round {round}");
+            assert_eq!(server.s_g, oracle.s_g, "{mode:?} round {round}");
+        }
+        server.adopt_shards(view);
+        assert_eq!(server.theta_g, oracle.theta_g, "{mode:?} after stitch");
+    }
+}
+
+/// The zero-alloc claim, observable: with one record per round the pool
+/// concurrency is deterministic, so under the resident pipeline + view
+/// the miss counters must freeze after the warm-up round — steady-state
+/// rounds (round ≥ 2, per the per-round-spawn comparison baseline)
+/// allocate **zero** new decode buffers.
+#[test]
+fn resident_steady_state_rounds_allocate_zero_decode_buffers() {
+    let d = 512;
+    let rounds = 5;
+    for (name, workers, shards) in [
+        ("deltamask", 3usize, 2usize), // range-decoded straight into lane pools
+        ("fedpm", 3, 2),               // full decode (unpooled codec), split via lane pools
+        ("deltamask", 3, 1),           // resident decode crew + pipeline pool only
+    ] {
+        let codec: Arc<dyn UpdateCodec> = Arc::from(compress::by_name(name).unwrap());
+        let pipeline =
+            DrainPipeline::new(DrainConfig::sharded(PipelineMode::Streaming, workers, shards));
+        let mut server = MaskServer::with_theta0(d, 1.0, 0.85);
+        let mut view: Option<ShardedAggregator<MaskServer>> =
+            (shards > 1).then(|| server.shard_view(shards));
+        let mut engine = RoundEngine::new(5, 1, 1.0, 0.8, 0.25, rounds);
+        let mut misses_after: Vec<u64> = Vec::new();
+        for round in 0..rounds {
+            let plan = Arc::new(engine.plan(round, &server.theta_g, &server.s_g));
+            let mut rng = Xoshiro256pp::new(0x2A ^ round as u64);
+            let encs = encode_round(name, &plan, &mut rng);
+            let mut channel = send_all(&plan, &encs, &[0]);
+            match view.as_mut() {
+                Some(view) => {
+                    pipeline
+                        .drain_round(&mut channel, &plan, &codec, view)
+                        .unwrap_or_else(|e| panic!("{name} round {round}: {e}"));
+                    server.sync_from_shards(view);
+                }
+                None => {
+                    pipeline
+                        .drain_round(&mut channel, &plan, &codec, &mut server)
+                        .unwrap_or_else(|e| panic!("{name} round {round}: {e}"));
+                }
+            }
+            let lane = view.as_ref().map_or(0, |v| v.lane_pool_stats().misses);
+            misses_after.push(pipeline.pool().stats().misses + lane);
+        }
+        assert!(misses_after[0] > 0, "{name}: warm-up must allocate something");
+        for r in 2..rounds {
+            assert_eq!(
+                misses_after[r], misses_after[1],
+                "{name} workers={workers} shards={shards}: steady-state round {r} \
+                 allocated new decode buffers ({misses_after:?})"
+            );
+        }
+    }
+}
+
+/// With realistic concurrency (k records racing through W workers into S
+/// lanes) the exact warm-up size is scheduling-dependent, but the resident
+/// pools' total misses stay **hard-bounded by the in-flight caps**,
+/// independent of how many rounds run — whereas per-round-spawn lane pools
+/// re-allocate every round. (Bound: W full buffers in flight on the
+/// pipeline pool; per lane, 4 queued [the lane queue cap] + W being built
+/// + 1 being absorbed sub-buffers.)
+#[test]
+fn resident_pool_misses_are_bounded_across_rounds() {
+    let d = 768;
+    let rounds = 6;
+    let (workers, shards) = (3usize, 2usize);
+    let (_, misses) =
+        drain_trajectory_resident("fedpm", d, rounds, PipelineMode::Streaming, workers, shards);
+    let bound = (workers + shards * (4 + workers + 1)) as u64;
+    assert!(
+        misses <= bound,
+        "resident pools must not re-warm per round: {misses} misses > bound {bound}"
+    );
 }
 
 /// `DrainConfig::shards > 1` against a plain (single-lane) aggregator is

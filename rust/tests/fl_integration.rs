@@ -31,12 +31,15 @@ fn base_cfg() -> ExperimentConfig {
         theta0: 0.85,
         arch_override: None,
         pipeline: PipelineMode::Streaming,
-        // CI re-runs this suite with DELTAMASK_DECODE_WORKERS=4 and (in a
-        // separate run) DELTAMASK_AGG_SHARDS=4, so every end-to-end test
-        // also exercises the sharded server decode path and the
-        // dimension-sharded aggregation path.
+        // CI's knob-matrix job re-runs this suite with
+        // DELTAMASK_DECODE_WORKERS / DELTAMASK_AGG_SHARDS /
+        // DELTAMASK_PERSISTENT_PIPELINE combinations, so every end-to-end
+        // test also exercises the sharded decode path, the
+        // dimension-sharded aggregation path and the round-resident
+        // pipeline.
         decode_workers: deltamask::fl::decode_workers_from_env(),
         agg_shards: deltamask::fl::agg_shards_from_env(),
+        persistent_pipeline: deltamask::fl::persistent_pipeline_from_env(),
     }
 }
 
@@ -215,6 +218,50 @@ fn streaming_and_batch_pipelines_produce_identical_trajectories() {
             batch.final_accuracy(),
             streaming.final_accuracy(),
             "{method}"
+        );
+    }
+}
+
+/// Round-resident acceptance check: a full experiment through the
+/// persistent pipeline (resident decode workers + resident shard lanes +
+/// persistent pools) is trajectory-identical — losses, wire bits, κ and
+/// every evaluated accuracy — to the per-round-spawn path, for one
+/// mask-family and one delta-family codec, and its RoundMetrics expose
+/// the pool hit/miss counters.
+#[test]
+fn persistent_pipeline_trajectories_match_per_round_spawn() {
+    for method in ["deltamask", "eden"] {
+        let mut cfg = base_cfg();
+        cfg.method = method.into();
+        cfg.rounds = 6;
+        cfg.eval_every = 2;
+        cfg.decode_workers = 3;
+        cfg.agg_shards = 2;
+        cfg.persistent_pipeline = false;
+        let spawned = run_experiment(&cfg).unwrap();
+        cfg.persistent_pipeline = true;
+        let resident = run_experiment(&cfg).unwrap();
+
+        assert_eq!(spawned.rounds.len(), resident.rounds.len(), "{method}");
+        for (a, b) in spawned.rounds.iter().zip(&resident.rounds) {
+            assert_eq!(a.round, b.round, "{method}");
+            assert_eq!(a.kappa, b.kappa, "{method} round {}", a.round);
+            assert_eq!(a.mean_bits, b.mean_bits, "{method} round {}", a.round);
+            assert_eq!(a.train_loss, b.train_loss, "{method} round {}", a.round);
+            assert_eq!(a.accuracy, b.accuracy, "{method} round {}", a.round);
+            assert_eq!(a.agg_shards, 2, "{method}");
+            assert_eq!(b.agg_shards, 2, "{method}");
+        }
+        assert_eq!(
+            spawned.final_accuracy(),
+            resident.final_accuracy(),
+            "{method}"
+        );
+        // The pool counters are wired through: every round accounts its
+        // leases (hits + misses covers at least the shard-lane splits).
+        assert!(
+            resident.rounds.iter().all(|r| r.pool_hits + r.pool_misses > 0),
+            "{method}: pool accounting missing from RoundMetrics"
         );
     }
 }

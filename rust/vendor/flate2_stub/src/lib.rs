@@ -1,0 +1,95 @@
+//! Compile-only stub of the `flate2` API surface the `flate2`-gated
+//! DEFLATE cross-validation tests use.
+//!
+//! The point of those tests is to check the from-scratch DEFLATE codec
+//! against an **independent** implementation, so a stub cannot honestly
+//! stand in at run time: every stream operation returns
+//! `io::ErrorKind::Unsupported` with an explanatory message, making the
+//! gated tests fail loudly instead of passing vacuously. What the stub
+//! does buy is **compile coverage**: CI's `feature-matrix` job builds and
+//! clippy-checks `--features flate2`, so the gated test code can no
+//! longer rot. To run the cross-checks for real, replace the
+//! `rust/vendor/flate2_stub` path dependency in the root `Cargo.toml`
+//! with the crates.io `flate2` in a registry-connected environment.
+
+use std::io;
+
+fn unsupported() -> io::Error {
+    io::Error::new(
+        io::ErrorKind::Unsupported,
+        "flate2 stub build: this is the vendored compile-only shim at \
+         rust/vendor/flate2_stub; swap in the real crates.io `flate2` to run the \
+         DEFLATE cross-validation tests",
+    )
+}
+
+/// Compression-level selector (accepted and ignored by the stub).
+#[derive(Clone, Copy, Debug)]
+pub struct Compression(pub u32);
+
+impl Compression {
+    pub fn new(level: u32) -> Self {
+        Self(level)
+    }
+
+    pub fn best() -> Self {
+        Self(9)
+    }
+
+    pub fn fast() -> Self {
+        Self(1)
+    }
+}
+
+pub mod read {
+    use std::io;
+
+    /// Stub zlib decoder: `read` always errors (see the crate docs).
+    pub struct ZlibDecoder<R> {
+        #[allow(dead_code)]
+        inner: R,
+    }
+
+    impl<R: io::Read> ZlibDecoder<R> {
+        pub fn new(inner: R) -> Self {
+            Self { inner }
+        }
+    }
+
+    impl<R: io::Read> io::Read for ZlibDecoder<R> {
+        fn read(&mut self, _buf: &mut [u8]) -> io::Result<usize> {
+            Err(super::unsupported())
+        }
+    }
+}
+
+pub mod write {
+    use std::io;
+
+    /// Stub zlib encoder: `write`/`finish` always error (see the crate
+    /// docs).
+    pub struct ZlibEncoder<W> {
+        #[allow(dead_code)]
+        inner: W,
+    }
+
+    impl<W: io::Write> ZlibEncoder<W> {
+        pub fn new(inner: W, _level: crate::Compression) -> Self {
+            Self { inner }
+        }
+
+        pub fn finish(self) -> io::Result<W> {
+            Err(super::unsupported())
+        }
+    }
+
+    impl<W: io::Write> io::Write for ZlibEncoder<W> {
+        fn write(&mut self, _buf: &[u8]) -> io::Result<usize> {
+            Err(super::unsupported())
+        }
+
+        fn flush(&mut self) -> io::Result<()> {
+            Ok(())
+        }
+    }
+}
