@@ -9,7 +9,9 @@
 //!
 //! `--smoke` shrinks the dimension sweep and iteration counts to CI scale.
 //! Cases: filter membership kernels, the DeltaMask wire path (scratch
-//! encode + pooled decode), the sharded `drain_round` (serial vs 4 decode
+//! encode + pooled decode), the `deltamask-pco` numeric-latent wire path on
+//! the same fixture (with the ≥ 20% bytes-on-wire gate vs the PNG+DEFLATE
+//! record asserted in-run), the sharded `drain_round` (serial vs 4 decode
 //! workers, vs 4 decode workers × 4 dimension shards — the `_s4` case —
 //! and vs the round-resident `DrainPipeline` reusing one crew/view across
 //! iterations — the `_s4_resident` case), matmuls, and tracked
@@ -19,7 +21,8 @@
 use deltamask::bench::{summarize, time_fn, Table};
 use deltamask::codec::{deflate, png};
 use deltamask::compress::{
-    DecodeCtx, DeltaMaskCodec, EncodeCtx, EncodeScratch, ScratchPool, Update, UpdateCodec,
+    DecodeCtx, DeltaMaskCodec, DeltaMaskPcoCodec, EncodeCtx, EncodeScratch, ScratchPool, Update,
+    UpdateCodec,
 };
 use deltamask::filters::{BinaryFuse, BloomFilter, MembershipFilter, XorFilter};
 use deltamask::native::linalg;
@@ -190,6 +193,61 @@ fn main() {
             scalar_secs: dec_plain_secs,
             batched_secs: dec_pool_secs,
             parity: want == got,
+        });
+
+        // -- deltamask-pco (codec 9): the numeric-latent index stream on the
+        // same fixture. Scalar column = fresh-alloc encode / decode; batched
+        // column = scratch-reusing encode / pooled decode, like above. The
+        // bytes-on-wire acceptance gate (pco record ≥ 20% under the
+        // PNG+DEFLATE record) is asserted here so a codec regression fails
+        // the bench run, not just shifts a number.
+        let pco = DeltaMaskPcoCodec::default();
+        let pco_enc_plain_secs =
+            summarize(&time_fn(warmup, iters, || pco.encode(&ctx).unwrap())).min;
+        let mut pco_scratch = EncodeScratch::default();
+        let pco_enc_scratch_secs = summarize(&time_fn(warmup, iters, || {
+            pco.encode_with(&ctx, &mut pco_scratch).unwrap()
+        }))
+        .min;
+        let pco_plain = pco.encode(&ctx).unwrap();
+        let pco_reused = pco.encode_with(&ctx, &mut pco_scratch).unwrap();
+        pairs.push(Pair {
+            name: format!("deltamask_pco_encode_d{d}"),
+            scalar_secs: pco_enc_plain_secs,
+            batched_secs: pco_enc_scratch_secs,
+            parity: pco_plain.bytes == pco_reused.bytes,
+        });
+        assert!(
+            pco_plain.bytes.len() * 10 <= plain.bytes.len() * 8,
+            "bytes-on-wire gate: deltamask-pco ({}B) must be >= 20% smaller \
+             than the PNG+DEFLATE record ({}B) on the tracked d={d} fixture",
+            pco_plain.bytes.len(),
+            plain.bytes.len()
+        );
+
+        let pco_dec_plain_secs = summarize(&time_fn(warmup, iters, || {
+            pco.decode(&pco_plain.bytes, &dctx).unwrap()
+        }))
+        .min;
+        let pco_dec_pool_secs = summarize(&time_fn(warmup, iters, || {
+            let u = pco.decode_pooled(&pco_plain.bytes, &dctx, &pool).unwrap();
+            if let Update::Mask(m) = u {
+                pool.put(m);
+            }
+        }))
+        .min;
+        let Update::Mask(pco_want) = pco.decode(&pco_plain.bytes, &dctx).unwrap() else {
+            panic!()
+        };
+        let Update::Mask(pco_got) = pco.decode_pooled(&pco_plain.bytes, &dctx, &pool).unwrap()
+        else {
+            panic!()
+        };
+        pairs.push(Pair {
+            name: format!("deltamask_pco_decode_d{d}"),
+            scalar_secs: pco_dec_plain_secs,
+            batched_secs: pco_dec_pool_secs,
+            parity: pco_want == pco_got,
         });
     }
 
@@ -444,6 +502,18 @@ fn main() {
         let t =
             summarize(&time_fn(warmup, iters, || deflate::zlib_decompress(&z).unwrap())).min;
         tracked.push((format!("inflate_{payload_len}B"), t));
+        // Fast-level match finder (4-byte hash, early-exit / capped-lazy
+        // heuristics): tracked alongside the baseline emitter so the
+        // `deflate_fast_*` − `deflate_*` gap is the measured speedup, and
+        // roundtripped through the SAME inflate to pin stream validity.
+        let zf = deflate::zlib_compress_fast(&payload);
+        let t = summarize(&time_fn(warmup, iters, || deflate::zlib_compress_fast(&payload))).min;
+        tracked.push((format!("deflate_fast_{payload_len}B"), t));
+        assert_eq!(
+            deflate::zlib_decompress(&zf).unwrap(),
+            payload,
+            "deflate_fast roundtrip parity"
+        );
         assert_eq!(
             deflate::zlib_decompress(&z).unwrap(),
             payload,

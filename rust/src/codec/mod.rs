@@ -10,9 +10,15 @@
 //!   "single grayscale image" that carries the fingerprint array.
 //! * [`arith`] — adaptive binary arithmetic coder (Rissanen–Langdon), the
 //!   sub-1bpp entropy coder FedPM uses for sparse binary masks.
+//! * [`pco`] — pcodec-inspired numeric latent compressor (delta /
+//!   double-delta coding, GCD extraction, equal-count quantile bins with
+//!   adaptive-bit packing, word-aligned batch decode) for the numeric
+//!   sequences the wire path carries — sorted mask-index sets and
+//!   quantized score side-info.
 
 pub mod arith;
 pub mod bitio;
 pub mod crc;
 pub mod deflate;
+pub mod pco;
 pub mod png;

@@ -1,0 +1,696 @@
+//! **Pco-style numeric latent compressor** — a self-contained,
+//! pcodec-inspired codec for the numeric sequences the wire path actually
+//! carries (sorted mask-index sets, score quantization levels), instead of
+//! treating them as opaque bytes for PNG + DEFLATE.
+//!
+//! Pipeline (mirroring pcodec's architecture at a deliberately small scale):
+//!
+//! 1. **Delta coding** — three modes, chosen per stream by exact bit-cost:
+//!    `Direct` (values as-is), `Delta` (first differences — sorted index
+//!    sets become small gaps), `DoubleDelta` (second differences —
+//!    arithmetic-ish ramps collapse to near-zero latents). Signed
+//!    differences are zigzag-mapped to unsigned latents.
+//! 2. **GCD extraction** — a common divisor of all latents is factored out
+//!    and stored once (quantized grids pay bits for their step size once,
+//!    not per value).
+//! 3. **Bin-based latent histogram** — the latents are split into
+//!    `2^k` equal-count quantile bins (k ≤ [`MAX_BIN_BITS`], chosen by
+//!    exact cost); each bin stores its lower bound and an offset width, and
+//!    each latent is coded as `k` bin-index bits plus `offset_bits[bin]`
+//!    offset bits. This is adaptive-bit packing: dense regions of the value
+//!    distribution get narrow offsets, outliers ride in their own bins.
+//! 4. **Word-aligned batch decode** — when `k + offset_bits ≤ 32` for every
+//!    bin (the common case), the decoder reads each latent with a single
+//!    32-bit peek and one consume, in the style of the repo's other blocked
+//!    kernels; a two-phase scalar path (kept as the tests' parity oracle)
+//!    handles wide latents.
+//!
+//! Floats ride through an order-preserving bijection to `u32`
+//! ([`f32_to_ord_u32`]) so the integer delta/bin machinery applies
+//! unchanged — the "float-to-int latent split".
+//!
+//! Decode is **total**: truncated, bit-flipped or random bytes return
+//! `Err`, never panic — the body is decoded against an explicit bit budget
+//! (the underlying [`BitReader`] zero-pads past the end, so truncation must
+//! be detected by accounting, not by read failures), every header field is
+//! bounds-checked, and all arithmetic on untrusted latents is checked.
+
+use super::bitio::{BitReader, BitWriter};
+
+/// Stream format version byte (first byte of every stream).
+pub const VERSION: u8 = 1;
+/// Maximum bin-index width: up to `2^7 = 128` quantile bins.
+pub const MAX_BIN_BITS: u32 = 7;
+
+const MODE_DIRECT: u8 = 0;
+const MODE_DELTA: u8 = 1;
+const MODE_DOUBLE_DELTA: u8 = 2;
+
+#[inline]
+fn zigzag(v: i64) -> u64 {
+    (v.wrapping_shl(1) ^ (v >> 63)) as u64
+}
+
+#[inline]
+fn unzigzag(u: u64) -> i64 {
+    ((u >> 1) as i64) ^ -((u & 1) as i64)
+}
+
+#[inline]
+fn bits_for(w: u64) -> u32 {
+    64 - w.leading_zeros()
+}
+
+fn gcd_u64(mut a: u64, mut b: u64) -> u64 {
+    while b != 0 {
+        let t = a % b;
+        a = b;
+        b = t;
+    }
+    a
+}
+
+/// Order-preserving bijection `f32 → u32`: negative floats map below
+/// positive ones, and within each sign the integer order matches the float
+/// order. Total (NaNs and infinities round-trip bit-exactly).
+#[inline]
+pub fn f32_to_ord_u32(v: f32) -> u32 {
+    let b = v.to_bits();
+    if b & 0x8000_0000 != 0 {
+        !b
+    } else {
+        b ^ 0x8000_0000
+    }
+}
+
+/// Inverse of [`f32_to_ord_u32`].
+#[inline]
+pub fn ord_u32_to_f32(u: u32) -> f32 {
+    let b = if u & 0x8000_0000 != 0 {
+        u ^ 0x8000_0000
+    } else {
+        !u
+    };
+    f32::from_bits(b)
+}
+
+#[inline]
+fn write_bits64(w: &mut BitWriter, v: u64, n: u32) {
+    debug_assert!(n <= 64);
+    if n <= 32 {
+        let mask = if n == 32 { u32::MAX } else { (1u32 << n) - 1 };
+        w.write_bits(v as u32 & mask, n);
+    } else {
+        w.write_bits(v as u32, 32);
+        let hi = (v >> 32) as u32 & ((1u32 << (n - 32)) - 1);
+        w.write_bits(hi, n - 32);
+    }
+}
+
+#[inline]
+fn read_bits64(r: &mut BitReader, n: u32) -> u64 {
+    debug_assert!(n <= 64);
+    if n <= 32 {
+        r.read_bits(n) as u64
+    } else {
+        let lo = r.read_bits(32) as u64;
+        let hi = r.read_bits(n - 32) as u64;
+        lo | (hi << 32)
+    }
+}
+
+/// Latent sequences for each delta mode. `None` when the mode is not
+/// applicable at this length (DoubleDelta needs two anchors).
+fn latents_for_mode(values: &[u32], mode: u8) -> Option<Vec<u64>> {
+    match mode {
+        MODE_DIRECT => Some(values.iter().map(|&v| v as u64).collect()),
+        MODE_DELTA => {
+            if values.is_empty() {
+                return None;
+            }
+            Some(
+                values
+                    .windows(2)
+                    .map(|w| zigzag(w[1] as i64 - w[0] as i64))
+                    .collect(),
+            )
+        }
+        MODE_DOUBLE_DELTA => {
+            if values.len() < 2 {
+                return None;
+            }
+            let mut prev_d = values[1] as i64 - values[0] as i64;
+            Some(
+                values
+                    .windows(2)
+                    .skip(1)
+                    .map(|w| {
+                        let d = w[1] as i64 - w[0] as i64;
+                        let out = zigzag(d - prev_d);
+                        prev_d = d;
+                        out
+                    })
+                    .collect(),
+            )
+        }
+        _ => unreachable!(),
+    }
+}
+
+/// Equal-count quantile bin table over `sorted` (non-empty): per-bin
+/// (lower bound, offset width). Chunk `c` of the sorted latents covers
+/// `[c·n/bins, (c+1)·n/bins)`; its lower is the chunk minimum and its
+/// offset width spans the chunk. Encoding assigns each latent to the
+/// **rightmost** bin whose lower is ≤ the latent, which always fits its
+/// offset budget: if that bin is later than the latent's own chunk, the
+/// latent equals the later bin's lower (offset 0).
+fn bin_table(sorted: &[u64], k: u32) -> (Vec<u64>, Vec<u32>) {
+    let n = sorted.len();
+    let bins = 1usize << k;
+    debug_assert!(bins <= n);
+    let mut lowers = Vec::with_capacity(bins);
+    let mut obs = Vec::with_capacity(bins);
+    for c in 0..bins {
+        let start = c * n / bins;
+        let end = (c + 1) * n / bins;
+        let lo = sorted[start];
+        let width = sorted[end - 1] - lo;
+        lowers.push(lo);
+        obs.push(if width == 0 { 0 } else { bits_for(width) });
+    }
+    (lowers, obs)
+}
+
+/// Exact coded size in bits of body + bin table for this `k` (the mode/k
+/// search objective; header/anchor bytes are added by the caller).
+fn table_cost_bits(sorted: &[u64], k: u32) -> u64 {
+    let n = sorted.len();
+    let bins = 1usize << k;
+    let mut bits = bins as u64 * (64 + 8); // lower u64 + offset-width u8 per bin
+    bits += n as u64 * k as u64;
+    for c in 0..bins {
+        let start = c * n / bins;
+        let end = (c + 1) * n / bins;
+        let width = sorted[end - 1] - sorted[start];
+        let ob = if width == 0 { 0 } else { bits_for(width) } as u64;
+        bits += (end - start) as u64 * ob;
+    }
+    bits
+}
+
+/// Compress a `u32` sequence. Always succeeds; an incompressible stream
+/// costs at most a small constant over `Direct` mode with one wide bin.
+pub fn compress_u32s(values: &[u32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(values.len() * 2 + 32);
+    out.push(VERSION);
+    out.extend_from_slice(&(values.len() as u32).to_le_bytes());
+    if values.is_empty() {
+        return out;
+    }
+
+    // Search (mode, k) by exact coded size; anchors charge 4 bytes each.
+    let mut best: Option<(u8, u32, Vec<u64>)> = None; // (mode, k, latents)
+    let mut best_cost = u64::MAX;
+    for mode in [MODE_DIRECT, MODE_DELTA, MODE_DOUBLE_DELTA] {
+        let Some(latents) = latents_for_mode(values, mode) else {
+            continue;
+        };
+        let anchor_bits = 32 * mode as u64;
+        if latents.is_empty() {
+            // Anchors alone carry the whole stream (n ≤ mode).
+            if anchor_bits < best_cost {
+                best_cost = anchor_bits;
+                best = Some((mode, 0, latents));
+            }
+            continue;
+        }
+        let g = latents.iter().fold(0u64, |acc, &l| gcd_u64(acc, l)).max(1);
+        let reduced: Vec<u64> = latents.iter().map(|&l| l / g).collect();
+        let mut sorted = reduced.clone();
+        sorted.sort_unstable();
+        let mut k = 0u32;
+        while k <= MAX_BIN_BITS && (1usize << k) <= sorted.len() {
+            let cost = anchor_bits + table_cost_bits(&sorted, k);
+            if cost < best_cost {
+                best_cost = cost;
+                best = Some((mode, k, reduced.clone()));
+            }
+            k += 1;
+        }
+    }
+    let (mode, k, reduced) = best.expect("direct mode is always applicable");
+
+    out.push(mode);
+    if mode >= MODE_DELTA {
+        out.extend_from_slice(&values[0].to_le_bytes());
+    }
+    if mode >= MODE_DOUBLE_DELTA {
+        out.extend_from_slice(&values[1].to_le_bytes());
+    }
+    if reduced.is_empty() {
+        return out;
+    }
+
+    // Recompute the gcd/table for the winning mode (the search kept only
+    // the reduced latents to avoid storing a table per candidate).
+    let latents = latents_for_mode(values, mode).unwrap();
+    let g = latents.iter().fold(0u64, |acc, &l| gcd_u64(acc, l)).max(1);
+    let mut sorted = reduced.clone();
+    sorted.sort_unstable();
+    let (lowers, obs) = bin_table(&sorted, k);
+
+    out.push(k as u8);
+    out.extend_from_slice(&g.to_le_bytes());
+    for (lo, ob) in lowers.iter().zip(&obs) {
+        out.extend_from_slice(&lo.to_le_bytes());
+        out.push(*ob as u8);
+    }
+
+    let mut w = BitWriter::new();
+    for &l in &reduced {
+        // Rightmost bin with lower ≤ l (lowers are non-decreasing).
+        let bin = lowers.partition_point(|&lo| lo <= l) - 1;
+        if k > 0 {
+            w.write_bits(bin as u32, k);
+        }
+        write_bits64(&mut w, l - lowers[bin], obs[bin]);
+    }
+    out.extend_from_slice(&w.finish());
+    out
+}
+
+/// Header cursor over untrusted bytes (every read is bounds-checked).
+struct Cursor<'a> {
+    data: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn u8(&mut self) -> Result<u8, String> {
+        let v = *self.data.get(self.pos).ok_or("pco: truncated header")?;
+        self.pos += 1;
+        Ok(v)
+    }
+
+    fn u32(&mut self) -> Result<u32, String> {
+        if self.pos + 4 > self.data.len() {
+            return Err("pco: truncated header".into());
+        }
+        let v = u32::from_le_bytes(self.data[self.pos..self.pos + 4].try_into().unwrap());
+        self.pos += 4;
+        Ok(v)
+    }
+
+    fn u64(&mut self) -> Result<u64, String> {
+        if self.pos + 8 > self.data.len() {
+            return Err("pco: truncated header".into());
+        }
+        let v = u64::from_le_bytes(self.data[self.pos..self.pos + 8].try_into().unwrap());
+        self.pos += 8;
+        Ok(v)
+    }
+}
+
+/// Decode the bit-packed latent body against an explicit bit budget.
+/// `force_scalar` pins the two-phase reference path (the fused single-peek
+/// fast path must be bit-identical to it; the tests assert so).
+fn decode_latents(
+    body: &[u8],
+    n_lat: usize,
+    k: u32,
+    lowers: &[u64],
+    obs: &[u32],
+    force_scalar: bool,
+) -> Result<Vec<u64>, String> {
+    let avail = body.len() as u64 * 8;
+    let mut used = 0u64;
+    let mut r = BitReader::new(body);
+    let mut out = Vec::with_capacity(n_lat);
+    let fused = !force_scalar && obs.iter().all(|&ob| k + ob <= 32);
+    if fused {
+        // Word-aligned batch path: one 32-bit peek yields bin index AND
+        // offset, one consume per latent.
+        let idx_mask = (1u64 << k) - 1;
+        for _ in 0..n_lat {
+            let word = r.peek_bits(32) as u64;
+            let bin = (word & idx_mask) as usize;
+            let ob = obs[bin];
+            used += (k + ob) as u64;
+            if used > avail {
+                return Err("pco: truncated body".into());
+            }
+            let off = (word >> k) & ((1u64 << ob) - 1);
+            r.consume(k + ob);
+            let l = lowers[bin]
+                .checked_add(off)
+                .ok_or("pco: latent overflow")?;
+            out.push(l);
+        }
+    } else {
+        for _ in 0..n_lat {
+            used += k as u64;
+            if used > avail {
+                return Err("pco: truncated body".into());
+            }
+            let bin = if k > 0 { r.read_bits(k) as usize } else { 0 };
+            let ob = obs[bin];
+            used += ob as u64;
+            if used > avail {
+                return Err("pco: truncated body".into());
+            }
+            let off = read_bits64(&mut r, ob);
+            let l = lowers[bin]
+                .checked_add(off)
+                .ok_or("pco: latent overflow")?;
+            out.push(l);
+        }
+    }
+    // Encoder pads the last byte only: more than 7 slack bits means the
+    // stream length is inconsistent with its own header.
+    if avail - used >= 8 {
+        return Err("pco: trailing bytes after body".into());
+    }
+    Ok(out)
+}
+
+fn decompress_u32s_inner(
+    bytes: &[u8],
+    max_count: usize,
+    force_scalar: bool,
+) -> Result<Vec<u32>, String> {
+    let mut c = Cursor {
+        data: bytes,
+        pos: 0,
+    };
+    let version = c.u8()?;
+    if version != VERSION {
+        return Err(format!("pco: unknown stream version {version}"));
+    }
+    let count = c.u32()? as usize;
+    if count > max_count {
+        return Err(format!("pco: count {count} exceeds limit {max_count}"));
+    }
+    if count == 0 {
+        if c.pos != bytes.len() {
+            return Err("pco: trailing bytes after empty stream".into());
+        }
+        return Ok(Vec::new());
+    }
+    let mode = c.u8()?;
+    if mode > MODE_DOUBLE_DELTA {
+        return Err(format!("pco: unknown delta mode {mode}"));
+    }
+    let a0 = if mode >= MODE_DELTA { Some(c.u32()?) } else { None };
+    let a1 = if mode >= MODE_DOUBLE_DELTA {
+        if count < 2 {
+            return Err("pco: double-delta needs two anchors".into());
+        }
+        Some(c.u32()?)
+    } else {
+        None
+    };
+    let n_lat = count - mode as usize;
+    if n_lat == 0 {
+        if c.pos != bytes.len() {
+            return Err("pco: trailing bytes after anchors".into());
+        }
+        let mut out = Vec::with_capacity(count);
+        if let Some(a) = a0 {
+            out.push(a);
+        }
+        if let Some(a) = a1 {
+            out.push(a);
+        }
+        if mode == MODE_DIRECT {
+            // count > 0 with no latents is impossible in Direct mode.
+            return Err("pco: direct mode with empty body".into());
+        }
+        return Ok(out);
+    }
+
+    let k = c.u8()? as u32;
+    if k > MAX_BIN_BITS {
+        return Err(format!("pco: bin-index width {k} exceeds {MAX_BIN_BITS}"));
+    }
+    let gcd = c.u64()?;
+    if gcd == 0 {
+        return Err("pco: zero gcd".into());
+    }
+    let bins = 1usize << k;
+    let mut lowers = Vec::with_capacity(bins);
+    let mut obs = Vec::with_capacity(bins);
+    for _ in 0..bins {
+        lowers.push(c.u64()?);
+        let ob = c.u8()? as u32;
+        if ob > 64 {
+            return Err(format!("pco: offset width {ob} exceeds 64"));
+        }
+        obs.push(ob);
+    }
+    let body = &bytes[c.pos..];
+    let latents = decode_latents(body, n_lat, k, &lowers, &obs, force_scalar)?;
+
+    // Undo gcd + delta coding with checked arithmetic throughout: corrupt
+    // tables can put latents anywhere in u64, and nothing reconstructed
+    // from them may wrap or escape u32.
+    let mut out: Vec<u32> = Vec::with_capacity(count);
+    let to_u32 = |v: i64| -> Result<u32, String> {
+        u32::try_from(v).map_err(|_| "pco: reconstructed value out of u32 range".into())
+    };
+    match mode {
+        MODE_DIRECT => {
+            for l in latents {
+                let v = l.checked_mul(gcd).ok_or("pco: gcd overflow")?;
+                out.push(u32::try_from(v).map_err(|_| "pco: value out of u32 range")?);
+            }
+        }
+        MODE_DELTA => {
+            let mut prev = a0.unwrap() as i64;
+            out.push(a0.unwrap());
+            for l in latents {
+                let z = l.checked_mul(gcd).ok_or("pco: gcd overflow")?;
+                let d = unzigzag(z);
+                prev = prev.checked_add(d).ok_or("pco: delta overflow")?;
+                out.push(to_u32(prev)?);
+            }
+        }
+        MODE_DOUBLE_DELTA => {
+            let (v0, v1) = (a0.unwrap(), a1.unwrap());
+            out.push(v0);
+            out.push(v1);
+            let mut prev = v1 as i64;
+            let mut d_prev = v1 as i64 - v0 as i64;
+            for l in latents {
+                let z = l.checked_mul(gcd).ok_or("pco: gcd overflow")?;
+                let dd = unzigzag(z);
+                d_prev = d_prev.checked_add(dd).ok_or("pco: delta overflow")?;
+                prev = prev.checked_add(d_prev).ok_or("pco: delta overflow")?;
+                out.push(to_u32(prev)?);
+            }
+        }
+        _ => unreachable!(),
+    }
+    debug_assert_eq!(out.len(), count);
+    Ok(out)
+}
+
+/// Decompress a stream produced by [`compress_u32s`]. `max_count` bounds
+/// the decoded length (callers pass the model dimension `d`), so a corrupt
+/// count field cannot force an unbounded allocation.
+pub fn decompress_u32s(bytes: &[u8], max_count: usize) -> Result<Vec<u32>, String> {
+    decompress_u32s_inner(bytes, max_count, false)
+}
+
+/// Compress an `f32` sequence via the order-preserving integer bijection.
+pub fn compress_f32s(values: &[f32]) -> Vec<u8> {
+    let ints: Vec<u32> = values.iter().map(|&v| f32_to_ord_u32(v)).collect();
+    compress_u32s(&ints)
+}
+
+/// Decompress a stream produced by [`compress_f32s`] (bit-exact, including
+/// NaNs, infinities and signed zeros).
+pub fn decompress_f32s(bytes: &[u8], max_count: usize) -> Result<Vec<f32>, String> {
+    Ok(decompress_u32s(bytes, max_count)?
+        .into_iter()
+        .map(ord_u32_to_f32)
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256pp;
+
+    fn sample_sequences() -> Vec<Vec<u32>> {
+        let mut rng = Xoshiro256pp::new(0x9c0);
+        let mut out: Vec<Vec<u32>> = vec![
+            vec![],
+            vec![0],
+            vec![u32::MAX],
+            vec![5, 5],
+            vec![0, u32::MAX],
+            vec![7; 1000],
+            (0..1000u32).collect(),                     // perfect ramp
+            (0..1000u32).map(|i| i * 24).collect(),     // ramp with gcd
+            (0..500u32).map(|i| i * i).collect(),       // quadratic (double-delta-friendly)
+        ];
+        // Sorted index gaps — the Δ′ shape the wire path carries.
+        let mut idx: Vec<u32> = (0..4_000).map(|_| rng.below(200_000) as u32).collect();
+        idx.sort_unstable();
+        idx.dedup();
+        out.push(idx);
+        // Uniform random (incompressible).
+        out.push((0..2_000).map(|_| rng.next_u64() as u32).collect());
+        // Clustered: two value populations (bins should split them).
+        out.push(
+            (0..3_000)
+                .map(|_| {
+                    if rng.next_f32() < 0.9 {
+                        rng.below(100) as u32
+                    } else {
+                        1_000_000 + rng.below(1_000_000) as u32
+                    }
+                })
+                .collect(),
+        );
+        out
+    }
+
+    #[test]
+    fn roundtrip_all_sample_sequences() {
+        for (i, vals) in sample_sequences().iter().enumerate() {
+            let z = compress_u32s(vals);
+            let back = decompress_u32s(&z, vals.len())
+                .unwrap_or_else(|e| panic!("case {i}: {e}"));
+            assert_eq!(&back, vals, "case {i}");
+        }
+    }
+
+    #[test]
+    fn fused_and_scalar_body_decoders_agree() {
+        for (i, vals) in sample_sequences().iter().enumerate() {
+            let z = compress_u32s(vals);
+            let fast = decompress_u32s_inner(&z, vals.len(), false).unwrap();
+            let slow = decompress_u32s_inner(&z, vals.len(), true).unwrap();
+            assert_eq!(fast, slow, "case {i}: fused path diverged from scalar oracle");
+        }
+    }
+
+    #[test]
+    fn sorted_gap_streams_beat_raw_and_ramp_collapses() {
+        let mut rng = Xoshiro256pp::new(0x6a9);
+        let mut idx: Vec<u32> = (0..5_000).map(|_| rng.below(327_680) as u32).collect();
+        idx.sort_unstable();
+        idx.dedup();
+        let z = compress_u32s(&idx);
+        // Gap coding a sorted 1.5%-dense index set costs ≈ log2(d/n)+2 bits
+        // per index — far below 32-bit raw.
+        assert!(
+            z.len() * 8 < idx.len() * 12,
+            "gaps: {} bytes for {} indexes",
+            z.len(),
+            idx.len()
+        );
+        // A perfect arithmetic ramp double-deltas to all-zero latents.
+        let ramp: Vec<u32> = (0..10_000u32).map(|i| 17 + i * 3).collect();
+        let z = compress_u32s(&ramp);
+        assert!(z.len() < 200, "ramp should collapse, got {} bytes", z.len());
+        // Constant sequences delta to zero.
+        let constant = vec![123_456u32; 10_000];
+        let z = compress_u32s(&constant);
+        assert!(z.len() < 200, "constant should collapse, got {} bytes", z.len());
+    }
+
+    #[test]
+    fn incompressible_overhead_is_bounded() {
+        let mut rng = Xoshiro256pp::new(0xbad);
+        let vals: Vec<u32> = (0..10_000).map(|_| rng.next_u64() as u32).collect();
+        let z = compress_u32s(&vals);
+        // ≤ 32 latent bits + ~2 bin-index bits per value + table/header.
+        assert!(z.len() <= vals.len() * 5 + 1_400, "blowup: {} bytes", z.len());
+    }
+
+    #[test]
+    fn max_count_limit_is_enforced() {
+        let vals: Vec<u32> = (0..100u32).collect();
+        let z = compress_u32s(&vals);
+        assert!(decompress_u32s(&z, 100).is_ok());
+        assert!(decompress_u32s(&z, 99).is_err());
+    }
+
+    #[test]
+    fn decode_is_total_under_corruption() {
+        let mut rng = Xoshiro256pp::new(0xf02);
+        for vals in sample_sequences() {
+            let z = compress_u32s(&vals);
+            // (a) Every truncation prefix.
+            let stride = (z.len() / 48).max(1);
+            for cut in (0..z.len()).step_by(stride) {
+                match decompress_u32s(&z[..cut], vals.len()) {
+                    Err(_) => {}
+                    Ok(v) => assert!(v.len() <= vals.len()),
+                }
+            }
+            // (b) Single-bit flips across the whole stream.
+            for pos in (0..z.len()).step_by(stride) {
+                for bit in [0, 3, 7] {
+                    let mut bad = z.clone();
+                    bad[pos] ^= 1 << bit;
+                    match decompress_u32s(&bad, vals.len()) {
+                        Err(_) => {}
+                        Ok(v) => assert!(v.len() <= vals.len()),
+                    }
+                }
+            }
+            // (c) Random byte strings.
+            for _ in 0..20 {
+                let n = (rng.next_u64() % 200) as usize;
+                let junk: Vec<u8> = (0..n).map(|_| rng.next_u64() as u8).collect();
+                match decompress_u32s(&junk, 10_000) {
+                    Err(_) => {}
+                    Ok(v) => assert!(v.len() <= 10_000),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn version_gate_rejects_future_streams() {
+        let mut z = compress_u32s(&[1, 2, 3]);
+        z[0] = VERSION + 1;
+        assert!(decompress_u32s(&z, 3).is_err());
+    }
+
+    #[test]
+    fn float_bijection_preserves_order_and_roundtrips() {
+        let mut rng = Xoshiro256pp::new(0xf10a7);
+        let mut vals: Vec<f32> = (0..2_000)
+            .map(|_| (rng.next_f32() - 0.5) * 1e6)
+            .collect();
+        vals.extend_from_slice(&[0.0, -0.0, f32::INFINITY, f32::NEG_INFINITY, f32::NAN, 1e-38]);
+        // Order preservation on the comparable subset.
+        let mut finite: Vec<f32> = vals.iter().cloned().filter(|v| !v.is_nan()).collect();
+        finite.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mapped: Vec<u32> = finite.iter().map(|&v| f32_to_ord_u32(v)).collect();
+        let mut sorted_mapped = mapped.clone();
+        sorted_mapped.sort_unstable();
+        assert_eq!(mapped, sorted_mapped, "bijection must be monotone");
+        // Bit-exact roundtrip including NaN.
+        let z = compress_f32s(&vals);
+        let back = decompress_f32s(&z, vals.len()).unwrap();
+        assert_eq!(back.len(), vals.len());
+        for (a, b) in vals.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn empty_stream_is_minimal_and_strict() {
+        let z = compress_u32s(&[]);
+        assert_eq!(z.len(), 5);
+        assert_eq!(decompress_u32s(&z, 0).unwrap(), Vec::<u32>::new());
+        let mut padded = z.clone();
+        padded.push(0);
+        assert!(decompress_u32s(&padded, 0).is_err(), "trailing bytes must be rejected");
+    }
+}

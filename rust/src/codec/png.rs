@@ -9,7 +9,7 @@
 //! fingerprint locations" beyond raw DEFLATE.
 
 use super::crc::crc32;
-use super::deflate::{zlib_compress, zlib_decompress};
+use super::deflate::{zlib_compress, zlib_compress_fast, zlib_decompress};
 
 const PNG_SIG: [u8; 8] = [0x89, b'P', b'N', b'G', b'\r', b'\n', 0x1a, b'\n'];
 
@@ -117,8 +117,9 @@ fn chunk(out: &mut Vec<u8>, tag: &[u8; 4], data: &[u8]) {
     out.extend_from_slice(&crc32(&crc_input).to_be_bytes());
 }
 
-/// Encode to a PNG byte stream (color type 0, bit depth 8, no interlace).
-pub fn encode(img: &GrayImage) -> Vec<u8> {
+/// Filtered scanline stream (filter-type byte + filtered row per scanline)
+/// with the MSAD per-row filter choice — shared by both encoders.
+fn filtered_scanlines(img: &GrayImage) -> Vec<u8> {
     let w = img.width as usize;
     let mut raw = Vec::with_capacity((w + 1) * img.height as usize);
     let zero_row = vec![0u8; w];
@@ -145,16 +146,32 @@ pub fn encode(img: &GrayImage) -> Vec<u8> {
         raw.push(best_ft);
         raw.extend_from_slice(&best_row);
     }
+    raw
+}
 
+fn assemble(img: &GrayImage, idat: Vec<u8>) -> Vec<u8> {
     let mut out = PNG_SIG.to_vec();
     let mut ihdr = Vec::with_capacity(13);
     ihdr.extend_from_slice(&img.width.to_be_bytes());
     ihdr.extend_from_slice(&img.height.to_be_bytes());
     ihdr.extend_from_slice(&[8, 0, 0, 0, 0]); // depth 8, gray, deflate, adaptive, no interlace
     chunk(&mut out, b"IHDR", &ihdr);
-    chunk(&mut out, b"IDAT", &zlib_compress(&raw));
+    chunk(&mut out, b"IDAT", &idat);
     chunk(&mut out, b"IEND", &[]);
     out
+}
+
+/// Encode to a PNG byte stream (color type 0, bit depth 8, no interlace).
+pub fn encode(img: &GrayImage) -> Vec<u8> {
+    assemble(img, zlib_compress(&filtered_scanlines(img)))
+}
+
+/// Like [`encode`] but compresses the IDAT with the fast DEFLATE match
+/// finder ([`zlib_compress_fast`]). The output is a standard PNG any
+/// decoder (including [`decode`]) reads; only the IDAT bytes differ, so
+/// callers must gate it behind a wire version tag.
+pub fn encode_fast(img: &GrayImage) -> Vec<u8> {
+    assemble(img, zlib_compress_fast(&filtered_scanlines(img)))
 }
 
 /// Decode a grayscale-8 PNG produced by [`encode`] (also accepts any
@@ -262,6 +279,15 @@ mod tests {
     fn roundtrip() {
         for img in images() {
             let png = encode(&img);
+            let back = decode(&png).unwrap();
+            assert_eq!(back, img);
+        }
+    }
+
+    #[test]
+    fn encode_fast_roundtrips_through_same_decoder() {
+        for img in images() {
+            let png = encode_fast(&img);
             let back = decode(&png).unwrap();
             assert_eq!(back, img);
         }

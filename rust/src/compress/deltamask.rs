@@ -88,13 +88,49 @@ pub enum Ranking {
     Random,
 }
 
+/// Versioned payload stage for the fingerprint array. The tag travels in
+/// byte 1 of every record, which the v1 wire format wrote as a boolean PNG
+/// flag (`0` = raw, `1` = PNG) — so `Raw` and `Png` records are
+/// byte-identical to v1, and `PngFast` (a standard PNG whose IDAT was
+/// produced by the fast DEFLATE match finder) still decodes on v1 servers,
+/// which treated any nonzero byte as "PNG". Tags ≥ 3 are reserved for
+/// future payload formats and are rejected.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum PayloadBackend {
+    /// Fingerprint bytes as-is (the ablation that isolates the filter).
+    Raw,
+    /// Grayscale-PNG + baseline DEFLATE (§3.2) — the v1 default.
+    #[default]
+    Png,
+    /// Grayscale-PNG + fast match finder: same decoder, cheaper encode.
+    PngFast,
+}
+
+impl PayloadBackend {
+    fn tag(self) -> u8 {
+        match self {
+            PayloadBackend::Raw => 0,
+            PayloadBackend::Png => 1,
+            PayloadBackend::PngFast => 2,
+        }
+    }
+
+    fn from_tag(tag: u8) -> Result<Self> {
+        Ok(match tag {
+            0 => PayloadBackend::Raw,
+            1 => PayloadBackend::Png,
+            2 => PayloadBackend::PngFast,
+            _ => bail!("unknown payload backend tag {tag}"),
+        })
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct DeltaMaskCodec {
     pub filter: FilterKind,
     pub ranking: Ranking,
-    /// Pack through the grayscale-PNG stage (§3.2). Disabled only by the
-    /// ablation that isolates the filter's contribution.
-    pub use_png: bool,
+    /// Payload stage for the fingerprint array (§3.2 uses the PNG path).
+    pub payload: PayloadBackend,
 }
 
 impl Default for DeltaMaskCodec {
@@ -102,7 +138,7 @@ impl Default for DeltaMaskCodec {
         Self {
             filter: FilterKind::BFuse8,
             ranking: Ranking::Kl,
-            use_png: true,
+            payload: PayloadBackend::Png,
         }
     }
 }
@@ -382,21 +418,27 @@ impl UpdateCodec for DeltaMaskCodec {
         let filter = BuiltFilter::build(self.filter, &scratch.keys)?;
         let (seed, layout_a, layout_b, payload, num_keys) = filter.parts();
 
-        // Wire format: tag(1) png_flag(1) seed(8) layout_a(4) layout_b(8)
-        //              num_keys(4) payload_len(4) payload(PNG or raw)
+        // Wire format: tag(1) backend(1) seed(8) layout_a(4) layout_b(8)
+        //              num_keys(4) payload_len(4) payload(PNG or raw).
+        // Byte 1 was the v1 boolean PNG flag; see [`PayloadBackend`].
         let mut bytes = Vec::with_capacity(payload.len() + 32);
         bytes.push(self.filter.tag());
-        bytes.push(self.use_png as u8);
+        bytes.push(self.payload.tag());
         wire::put_u64(&mut bytes, seed);
         wire::put_u32(&mut bytes, layout_a);
         wire::put_u64(&mut bytes, layout_b);
         wire::put_u32(&mut bytes, num_keys as u32);
         wire::put_u32(&mut bytes, payload.len() as u32);
-        if self.use_png {
-            let img = GrayImage::from_payload(&payload);
-            bytes.extend_from_slice(&png::encode(&img));
-        } else {
-            bytes.extend_from_slice(&payload);
+        match self.payload {
+            PayloadBackend::Raw => bytes.extend_from_slice(&payload),
+            PayloadBackend::Png => {
+                let img = GrayImage::from_payload(&payload);
+                bytes.extend_from_slice(&png::encode(&img));
+            }
+            PayloadBackend::PngFast => {
+                let img = GrayImage::from_payload(&payload);
+                bytes.extend_from_slice(&png::encode_fast(&img));
+            }
         }
         Ok(Encoded { bytes })
     }
@@ -441,7 +483,9 @@ impl DeltaMaskCodec {
     fn parse_filter(&self, bytes: &[u8]) -> Result<BuiltFilter> {
         ensure!(bytes.len() >= 30, "deltamask record too short");
         let kind = FilterKind::from_tag(bytes[0])?;
-        let is_png = bytes[1] != 0;
+        // Both PNG backends produce standard PNG streams; only the tag and
+        // the IDAT bytes differ.
+        let is_png = PayloadBackend::from_tag(bytes[1])? != PayloadBackend::Raw;
         let mut r = wire::Reader::new(&bytes[2..]);
         let seed = r.u64()?;
         let layout_a = r.u32()?;
@@ -872,7 +916,7 @@ mod tests {
         let d = 1_000;
         let (tk, tg, mk, mg) = setup(d, 0.2, 22);
         let codec = DeltaMaskCodec {
-            use_png: false,
+            payload: PayloadBackend::Raw,
             ..Default::default()
         };
         let ctx = make_ctx(d, &tk, &tg, &mk, &mg, 1.0);
@@ -897,7 +941,7 @@ mod tests {
         let d = 1_000;
         let (tk, tg, mk, mg) = setup(d, 0.2, 16);
         let codec = DeltaMaskCodec {
-            use_png: false,
+            payload: PayloadBackend::Raw,
             ..Default::default()
         };
         let ctx = make_ctx(d, &tk, &tg, &mk, &mg, 1.0);
@@ -930,7 +974,7 @@ mod tests {
         let (tk, tg, mk, mg) = setup(d, 0.05, 8);
         let with_png = DeltaMaskCodec::default();
         let without = DeltaMaskCodec {
-            use_png: false,
+            payload: PayloadBackend::Raw,
             ..Default::default()
         };
         let ctx = make_ctx(d, &tk, &tg, &mk, &mg, 0.8);
@@ -939,5 +983,50 @@ mod tests {
         // Fingerprints are near-uniform, so PNG gains are small — but the
         // overhead must stay tiny (≤ ~2% + fixed header).
         assert!(a <= b + b / 50 + 128, "png={a} raw={b}");
+    }
+
+    #[test]
+    fn all_payload_backends_roundtrip_and_keep_wire_tags() {
+        let d = 50_000;
+        let (tk, tg, mk, mg) = setup(d, 0.1, 31);
+        let ctx = make_ctx(d, &tk, &tg, &mk, &mg, 1.0);
+        let dec_ctx = DecodeCtx {
+            d,
+            mask_g: &mg,
+            s_g: &[],
+            seed: 99,
+        };
+        // The default (v1-identical) decoder must read every backend's
+        // record, and each record must carry its backend tag in byte 1.
+        let v1_decoder = DeltaMaskCodec::default();
+        let mut decoded = Vec::new();
+        for backend in [
+            PayloadBackend::Raw,
+            PayloadBackend::Png,
+            PayloadBackend::PngFast,
+        ] {
+            let codec = DeltaMaskCodec {
+                payload: backend,
+                ..Default::default()
+            };
+            let enc = codec.encode(&ctx).unwrap();
+            assert_eq!(enc.bytes[1], backend.tag(), "{backend:?}");
+            let Update::Mask(m) = v1_decoder.decode(&enc.bytes, &dec_ctx).unwrap() else {
+                panic!()
+            };
+            let missed = (0..d)
+                .filter(|&i| mk[i] != mg[i] && m[i] != mk[i])
+                .count();
+            assert_eq!(missed, 0, "{backend:?} missed true updates");
+            decoded.push(m);
+        }
+        // Same filter fingerprint underneath ⇒ identical decoded masks.
+        assert_eq!(decoded[0], decoded[1]);
+        assert_eq!(decoded[0], decoded[2]);
+        // Reserved backend tags are rejected, not misread as PNG.
+        let enc = v1_decoder.encode(&ctx).unwrap();
+        let mut bad = enc.bytes.clone();
+        bad[1] = 3;
+        assert!(v1_decoder.decode(&bad, &dec_ctx).is_err());
     }
 }

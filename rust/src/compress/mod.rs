@@ -5,7 +5,8 @@
 //! Two update families exist:
 //! * **Mask family** — clients transmit (a compressed form of) their sampled
 //!   binary mask `m^{k,t}`; the server Bayesian-aggregates (Alg. 2).
-//!   DeltaMask, FedPM, FedMask, DeepReduce.
+//!   DeltaMask (filter + PNG payload, or the `deltamask-pco` numeric-latent
+//!   index stream), FedPM, FedMask, DeepReduce.
 //! * **Delta family** — clients transmit a compressed score update
 //!   `Δs = s^{k,t} − s^{g,t-1}`; the server FedAvg-aggregates scores.
 //!   EDEN, DRIVE, QSGD, FedCode (classic gradient compression applied to
@@ -18,6 +19,7 @@
 
 pub mod deepreduce;
 pub mod deltamask;
+pub mod deltamask_pco;
 pub mod drive;
 pub mod eden;
 pub mod fedcode;
@@ -25,7 +27,8 @@ pub mod fedmask;
 pub mod fedpm;
 pub mod qsgd;
 
-pub use deltamask::{DeltaMaskCodec, FilterKind, Ranking};
+pub use deltamask::{DeltaMaskCodec, FilterKind, PayloadBackend, Ranking};
+pub use deltamask_pco::DeltaMaskPcoCodec;
 
 use crate::util::rng::Xoshiro256pp;
 
@@ -398,6 +401,7 @@ pub fn by_name(name: &str) -> Option<Box<dyn UpdateCodec>> {
         "deltamask-xor16" => Box::new(DeltaMaskCodec::with_filter(FilterKind::Xor16)),
         "deltamask-xor32" => Box::new(DeltaMaskCodec::with_filter(FilterKind::Xor32)),
         "deltamask-random" => Box::new(DeltaMaskCodec::with_ranking(Ranking::Random)),
+        "deltamask-pco" => Box::new(DeltaMaskPcoCodec::default()),
         "fedpm" => Box::new(fedpm::FedPmCodec),
         "fedmask" => Box::new(fedmask::FedMaskCodec::default()),
         "deepreduce" => Box::new(deepreduce::DeepReduceCodec::default()),
@@ -412,7 +416,15 @@ pub fn by_name(name: &str) -> Option<Box<dyn UpdateCodec>> {
 /// All codec names used across the benches.
 pub fn all_names() -> &'static [&'static str] {
     &[
-        "deltamask", "fedpm", "fedmask", "deepreduce", "eden", "drive", "qsgd", "fedcode",
+        "deltamask",
+        "deltamask-pco",
+        "fedpm",
+        "fedmask",
+        "deepreduce",
+        "eden",
+        "drive",
+        "qsgd",
+        "fedcode",
     ]
 }
 

@@ -130,6 +130,22 @@ pub fn agg_shards_from_env() -> usize {
     knob_from_env("DELTAMASK_AGG_SHARDS")
 }
 
+/// Default update-codec method: `$DELTAMASK_METHOD` when set and
+/// non-empty (CI's knob-matrix job runs the `fl_integration` suite with
+/// `=deltamask-pco` so the codec-9 numeric-latent wire path is exercised
+/// under the full scaling stack), else `"deltamask"`.
+///
+/// No validation here: an unknown name fails loudly downstream, because
+/// [`run_experiment`] bails on any method `compress::by_name` doesn't
+/// resolve — the same can't-silently-exercise-nothing policy as the
+/// integer knobs.
+pub fn method_from_env() -> String {
+    match std::env::var("DELTAMASK_METHOD") {
+        Ok(v) if !v.is_empty() => v,
+        _ => "deltamask".into(),
+    }
+}
+
 /// Shared parse-or-panic policy for the two CI-gating env knobs: a set
 /// but malformed value must fail loudly, an unset one means 1 (serial).
 fn knob_from_env(var: &str) -> usize {

@@ -189,7 +189,7 @@ fn corrupted_records_error_not_panic() {
 
 #[test]
 fn decode_is_total_for_every_codec() {
-    // Property: `decode` is a *total* function over byte strings — for all 8
+    // Property: `decode` is a *total* function over byte strings — for all 9
     // codecs it returns `Ok` (a well-formed d-length update) or `Err`, and
     // never panics or over-reads, on (a) every truncation prefix of a valid
     // record, (b) single-bit corruptions throughout the record, and (c)
@@ -275,6 +275,144 @@ fn decode_is_total_for_every_codec() {
                 junk[..keep].copy_from_slice(&enc.bytes[..keep]);
             }
             check(codec.as_ref(), &junk, "random bytes");
+        }
+    }
+}
+
+#[test]
+fn pco_stream_roundtrips_and_decode_is_total() {
+    // The codec-9 numeric-latent substrate: every u32 sequence roundtrips
+    // bit-exactly, and `decompress_u32s` is total — truncations, bit flips,
+    // and random byte strings return `Err` (or a within-limit `Ok`), never
+    // panic or over-allocate past `max_count`.
+    use deltamask::codec::pco;
+
+    let mut rng = Xoshiro256pp::new(0x9c05);
+    for trial in 0..60u64 {
+        let n = (rng.next_u64() % 2_500) as usize;
+        let vals: Vec<u32> = match trial % 5 {
+            0 => (0..n).map(|_| rng.next_u32()).collect(), // incompressible
+            1 => {
+                // sorted index sets — the deltamask-pco payload shape
+                let mut v: Vec<u32> =
+                    (0..n).map(|_| (rng.next_u64() % 200_000) as u32).collect();
+                v.sort_unstable();
+                v.dedup();
+                v
+            }
+            2 => (0..n as u32).map(|i| 17 + 3 * i).collect(), // pure ramp
+            3 => vec![123_456; n],                            // constant
+            _ => {
+                let step = 1 + (rng.next_u64() % 997) as u32;
+                (0..n as u32)
+                    .map(|i| i.wrapping_mul(step) ^ (rng.next_u32() & 7))
+                    .collect() // jittered ramp
+            }
+        };
+        let z = pco::compress_u32s(&vals);
+        let back = pco::decompress_u32s(&z, vals.len())
+            .unwrap_or_else(|e| panic!("trial {trial}: {e}"));
+        assert_eq!(back, vals, "trial {trial}");
+        if !vals.is_empty() {
+            assert!(
+                pco::decompress_u32s(&z, vals.len() - 1).is_err(),
+                "trial {trial}: max_count must be enforced"
+            );
+        }
+
+        let total = |bytes: &[u8], what: &str| match pco::decompress_u32s(bytes, vals.len()) {
+            Ok(v) => assert!(v.len() <= vals.len(), "trial {trial}: {what}"),
+            Err(_) => {}
+        };
+        let stride = (z.len() / 32).max(1);
+        for cut in (0..z.len()).step_by(stride) {
+            total(&z[..cut], "truncation");
+        }
+        for pos in (0..z.len()).step_by(stride) {
+            for bit in [0u8, 3, 7] {
+                let mut bad = z.clone();
+                bad[pos] ^= 1 << bit;
+                total(&bad, "bit flip");
+            }
+        }
+    }
+    for _ in 0..200 {
+        let n = (rng.next_u64() % 300) as usize;
+        let junk: Vec<u8> = (0..n).map(|_| rng.next_u64() as u8).collect();
+        match pco::decompress_u32s(&junk, 10_000) {
+            Ok(v) => assert!(v.len() <= 10_000),
+            Err(_) => {}
+        }
+    }
+}
+
+#[test]
+fn wire_tags_pin_codec_9_and_payload_backends() {
+    // Wire identity: the v1 record layout must stay byte-stable (byte 0 =
+    // filter tag, byte 1 = payload backend tag where PNG==1 matches the old
+    // `use_png` boolean), and the codec-9 record must announce itself with
+    // tag 7 — one past the v1 filter-tag space — so old decoders bail with
+    // an error instead of misreading it.
+    use deltamask::compress::{DeltaMaskCodec, DeltaMaskPcoCodec, PayloadBackend, UpdateCodec};
+
+    let d = 4_000usize;
+    let mut rng = Xoshiro256pp::new(0x7a95);
+    let theta: Vec<f32> = (0..d).map(|_| rng.next_f32()).collect();
+    let mut mask_g = Vec::new();
+    sample_mask_seeded(&theta, 3, &mut mask_g);
+    let mut mask_k = mask_g.clone();
+    for i in 0..80 {
+        mask_k[(i * 31) % d] = 1.0 - mask_k[(i * 31) % d];
+    }
+    let ctx = EncodeCtx {
+        d,
+        theta_k: &theta,
+        theta_g: &theta,
+        mask_k: &mask_k,
+        mask_g: &mask_g,
+        s_k: &[],
+        s_g: &[],
+        kappa: 0.8,
+        seed: 11,
+    };
+    let dctx = DecodeCtx {
+        d,
+        mask_g: &mask_g,
+        s_g: &[],
+        seed: 11,
+    };
+
+    let png_rec = DeltaMaskCodec::default().encode(&ctx).unwrap().bytes;
+    assert_eq!(png_rec[0], 0, "default filter tag (bfuse8)");
+    assert_eq!(png_rec[1], 1, "PNG backend keeps v1's use_png=true byte");
+    let raw_rec = DeltaMaskCodec { payload: PayloadBackend::Raw, ..Default::default() }
+        .encode(&ctx)
+        .unwrap()
+        .bytes;
+    assert_eq!(raw_rec[1], 0, "raw backend keeps v1's use_png=false byte");
+    let fast_rec = DeltaMaskCodec { payload: PayloadBackend::PngFast, ..Default::default() }
+        .encode(&ctx)
+        .unwrap()
+        .bytes;
+    assert_eq!(fast_rec[1], 2, "fast backend claims the first new tag");
+
+    let pco_rec = DeltaMaskPcoCodec::default().encode(&ctx).unwrap().bytes;
+    assert_eq!(pco_rec[0], 7, "codec-9 record tag");
+    assert_eq!(pco_rec[1], 1, "pco stream version");
+    assert!(
+        DeltaMaskCodec::default().decode(&pco_rec, &dctx).is_err(),
+        "a v1 filter decoder must reject the codec-9 record"
+    );
+
+    // All three backends and the pco record describe the same mask.
+    let want = match DeltaMaskCodec::default().decode(&png_rec, &dctx).unwrap() {
+        Update::Mask(m) => m,
+        _ => panic!(),
+    };
+    for bytes in [&raw_rec, &fast_rec] {
+        match DeltaMaskCodec::default().decode(bytes, &dctx).unwrap() {
+            Update::Mask(m) => assert_eq!(m, want),
+            _ => panic!(),
         }
     }
 }

@@ -13,7 +13,11 @@ fn base_cfg() -> ExperimentConfig {
     ExperimentConfig {
         dataset: "cifar10".into(),
         arch: "test".into(),
-        method: "deltamask".into(),
+        // "deltamask" unless the CI knob matrix overrides it (its codec-9
+        // entry sets DELTAMASK_METHOD=deltamask-pco so the numeric-latent
+        // wire path runs end-to-end under the full scaling stack). Tests
+        // that pin a specific method still assign `cfg.method` explicitly.
+        method: deltamask::fl::method_from_env(),
         n_clients: 6,
         rounds: 12,
         rho: 1.0,
@@ -83,8 +87,8 @@ fn deltamask_matches_fedpm_accuracy_with_lower_bpp() {
 #[test]
 fn all_methods_run_and_report_metrics() {
     for method in [
-        "deltamask", "fedpm", "fedmask", "deepreduce", "eden", "drive", "qsgd", "fedcode",
-        "linear_probing", "fine_tuning",
+        "deltamask", "deltamask-pco", "fedpm", "fedmask", "deepreduce", "eden", "drive", "qsgd",
+        "fedcode", "linear_probing", "fine_tuning",
     ] {
         let mut cfg = base_cfg();
         cfg.method = method.into();
