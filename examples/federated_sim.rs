@@ -43,6 +43,10 @@ fn main() -> anyhow::Result<()> {
         agg_shards: args.usize("agg-shards", deltamask::fl::agg_shards_from_env()),
         persistent_pipeline: args.flag("persistent-pipeline")
             || deltamask::fl::persistent_pipeline_from_env(),
+        quorum: deltamask::fl::quorum_from_env(),
+        round_deadline_ms: deltamask::fl::round_deadline_ms_from_env(),
+        on_decode_error: deltamask::fl::on_decode_error_from_env(),
+        chaos: deltamask::fl::chaos_from_env(),
     };
 
     let split = if noniid { "non-IID Dir(0.1)" } else { "IID Dir(10)" };

@@ -40,6 +40,10 @@ fn main() -> anyhow::Result<()> {
         decode_workers: 2,                 // shard the server decode sweep
         agg_shards: 2,                     // shard aggregation by dimension
         persistent_pipeline: true,         // spawn workers/lanes once, park between rounds
+        quorum: 1.0,                       // strict: every planned client must report
+        round_deadline_ms: 0,              // no drain deadline
+        on_decode_error: Default::default(), // abort on undecodable records
+        chaos: String::new(),              // clean transport
     };
 
     println!(

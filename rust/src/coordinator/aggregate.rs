@@ -47,16 +47,37 @@
 //! property-tests that across every codec, both pipeline modes and shard
 //! counts {1, 2, 3, 8}. The operator-facing guide to how `--pipeline`,
 //! `--decode-workers` and `--agg-shards` compose is `docs/SCALING.md`.
+//!
+//! ## Fault tolerance
+//!
+//! Every drain path admits wire messages through one shared [`RoundGate`]:
+//! the first well-formed record per `(round, slot)` wins, and duplicates,
+//! stale-round replays, out-of-range slots and in-band `Payload::Failed`
+//! reports are **counted and dropped** ([`FaultCounters`]) instead of
+//! aborting the round or corrupting aggregation state. Round completion is
+//! governed by a [`DrainPolicy`]: with `quorum < 1.0` the round finishes —
+//! flagged `degraded` in the [`DrainReport`] — once the uplink closes (or
+//! the `deadline_ms` budget expires) with at least `⌈quorum · K⌉` records
+//! absorbed, instead of failing because a straggler never reported; with
+//! the strict default (quorum 1.0, no deadline, abort on decode error) the
+//! behaviour and the aggregate are bit-identical to the fault-oblivious
+//! drain. Degraded rounds finish through
+//! [`Aggregator::finish_round_partial`], and the quorum verdict is taken
+//! on records actually *absorbed* — so decode failures skipped under
+//! [`OnDecodeError::Skip`] also count against the quorum. The
+//! deterministic chaos harness that exercises all of this is
+//! [`ChaosTransport`](super::ChaosTransport) + `rust/tests/churn.rs`.
 
 use super::round::RoundPlan;
 use super::shard::ShardRouter;
-use super::transport::{Payload, Transport};
+use super::transport::{Payload, RecvOutcome, Transport, WireMessage};
 use super::PipelineMode;
 use crate::compress::{Encoded, PoolStats, ScratchPool, Update, UpdateCodec};
 use crate::util::timer::Stopwatch;
 use anyhow::{anyhow, bail, Result};
 use std::collections::VecDeque;
 use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 /// Streaming aggregation sink: a round is `begin_round(K)` → K×`absorb` →
 /// `finish_round`. Implemented by `fl::server::MaskServer`; any other sink
@@ -98,6 +119,128 @@ pub trait Aggregator {
     /// serial round, the next `begin_round` supersedes it. Default: no-op
     /// (single-lane sinks hold no threads).
     fn abort_round(&mut self) {}
+
+    /// Finish a **degraded** round: publish new global state from however
+    /// many records were actually absorbed — a quorum of
+    /// `begin_round(K)`'s announced count, not necessarily all of it.
+    /// Sinks whose `finish_round` asserts full participation must
+    /// override this (see `MaskServer`, which also flushes its
+    /// delta-family reorder window in ascending slot order so the result
+    /// stays arrival-order invariant); the default delegates to
+    /// [`finish_round`](Self::finish_round) for sinks that already
+    /// tolerate partial rounds.
+    fn finish_round_partial(&mut self) {
+        self.finish_round();
+    }
+}
+
+/// What to do when a record fails to decode mid-round.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum OnDecodeError {
+    /// Abort the round with an error (the strict default — a malformed
+    /// record is evidence of a bug somewhere, surface it).
+    #[default]
+    Abort,
+    /// Count the record as corrupt, skip it, and keep draining; the slot
+    /// then counts against the quorum like any other missing record.
+    Skip,
+}
+
+impl OnDecodeError {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            OnDecodeError::Abort => "abort",
+            OnDecodeError::Skip => "skip",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "abort" => Ok(OnDecodeError::Abort),
+            "skip" => Ok(OnDecodeError::Skip),
+            other => bail!("unknown on-decode-error policy `{other}` (expected abort|skip)"),
+        }
+    }
+}
+
+/// Round completion policy: when is a drained round *done*?
+///
+/// The strict default — quorum 1.0, no deadline, abort on decode error —
+/// reproduces the fault-oblivious drain exactly: every planned record must
+/// arrive and decode. Relaxing `quorum` lets the round finish degraded
+/// over whoever showed up once the uplink closes; adding a deadline bounds
+/// how long the server waits for stragglers at all. The quorum is a
+/// **floor, not an early exit**: the drain keeps receiving until intake
+/// genuinely ends (every sender gone, or the deadline passes), so which
+/// cohort survives never depends on thread scheduling or arrival order —
+/// the property the degradation-correctness tests in
+/// `rust/tests/churn.rs` pin down.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DrainPolicy {
+    /// Fraction of `RoundPlan::expected()` records that must be absorbed
+    /// for the round to complete (`⌈quorum · K⌉`, clamped to `[1, K]`).
+    pub quorum: f64,
+    /// Wall-clock budget for the drain in milliseconds; `0` = no deadline
+    /// (wait until every sender handle drops).
+    pub deadline_ms: u64,
+    /// Decode-failure handling (see [`OnDecodeError`]).
+    pub on_decode_error: OnDecodeError,
+}
+
+impl Default for DrainPolicy {
+    fn default() -> Self {
+        Self {
+            quorum: 1.0,
+            deadline_ms: 0,
+            on_decode_error: OnDecodeError::Abort,
+        }
+    }
+}
+
+impl DrainPolicy {
+    /// The strict reference policy (everyone reports, no deadline, abort
+    /// on decode error).
+    pub fn strict() -> Self {
+        Self::default()
+    }
+
+    /// Absolute number of absorbed records required for `expected`
+    /// planned participants. At least one record is always required.
+    pub fn quorum_count(&self, expected: usize) -> usize {
+        (((self.quorum * expected as f64).ceil()) as usize).clamp(1.min(expected), expected)
+    }
+
+    fn deadline(&self) -> Option<Instant> {
+        (self.deadline_ms > 0).then(|| Instant::now() + Duration::from_millis(self.deadline_ms))
+    }
+}
+
+/// Per-round admission/fault accounting. Every rejected message is counted
+/// here rather than silently swallowed or fatally surfaced, so churn
+/// experiments get honest numbers and reproducibility tests can assert
+/// exact counter values per chaos seed.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultCounters {
+    /// Messages pulled off the transport during the round.
+    pub received: u64,
+    /// Records admitted (first well-formed record per slot).
+    pub accepted: u64,
+    /// Extra copies of an already-admitted `(round, slot)` — replay or
+    /// duplicate delivery; first record wins.
+    pub duplicates: u64,
+    /// Replays carrying a different round number than the live round.
+    pub stale: u64,
+    /// Slot indices outside the round plan (buggy or malicious client).
+    pub bad_slot: u64,
+    /// In-band `Payload::Failed` reports (client died mid-round).
+    pub failed: u64,
+    /// Undecodable records skipped under [`OnDecodeError::Skip`].
+    pub corrupt: u64,
+    /// Current-round records that arrived after the deadline expired
+    /// (found by the non-blocking late sweep, not absorbed).
+    pub late: u64,
+    /// Planned slots with no absorbed record when the round finished.
+    pub missing: u64,
 }
 
 /// Server-side decode→absorb scheduling for one drained round: the
@@ -125,7 +268,7 @@ pub trait Aggregator {
 /// assert_eq!(dim_sharded.resolved_shards(), 8);
 /// assert!(DrainConfig::sharded(PipelineMode::Streaming, 0, 0).resolved_shards() >= 1);
 /// ```
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct DrainConfig {
     /// Batch (full-round barrier) vs streaming (per-arrival absorb).
     pub mode: PipelineMode,
@@ -135,6 +278,9 @@ pub struct DrainConfig {
     /// single-lane reference path, N > 1 = that many parallel absorb
     /// lanes fed through a [`ShardRouter`], 0 = one shard per core.
     pub shards: usize,
+    /// Round completion policy (quorum / deadline / decode-error
+    /// handling). The default is strict — see [`DrainPolicy`].
+    pub policy: DrainPolicy,
 }
 
 impl DrainConfig {
@@ -143,6 +289,7 @@ impl DrainConfig {
             mode,
             workers,
             shards: 1,
+            policy: DrainPolicy::default(),
         }
     }
 
@@ -152,6 +299,7 @@ impl DrainConfig {
             mode,
             workers: 1,
             shards: 1,
+            policy: DrainPolicy::default(),
         }
     }
 
@@ -162,7 +310,14 @@ impl DrainConfig {
             mode,
             workers,
             shards,
+            policy: DrainPolicy::default(),
         }
+    }
+
+    /// Builder-style completion-policy override.
+    pub fn with_policy(mut self, policy: DrainPolicy) -> Self {
+        self.policy = policy;
+        self
     }
 
     /// Effective worker count: `0` resolves to the available parallelism.
@@ -214,6 +369,16 @@ pub struct DrainReport {
     /// pool that outlives its rounds shows `misses` at zero once warm —
     /// the observable cross-round zero-allocation property.
     pub pool: PoolStats,
+    /// Admission/fault accounting (see [`FaultCounters`]). All zeros on a
+    /// fault-free round.
+    pub faults: FaultCounters,
+    /// Whether the quorum was met by absorbed records. Always `true` on a
+    /// returned report — a missed quorum is an error — but carried so the
+    /// metrics emission states it explicitly.
+    pub quorum_met: bool,
+    /// `true` when the round finished with fewer than the planned number
+    /// of absorbed records (partial participation).
+    pub degraded: bool,
 }
 
 impl DrainReport {
@@ -224,6 +389,9 @@ impl DrainReport {
             dec_secs: 0.0,
             dec_by_worker: vec![0.0; workers],
             pool: PoolStats::default(),
+            faults: FaultCounters::default(),
+            quorum_met: true,
+            degraded: false,
         }
     }
 
@@ -254,10 +422,15 @@ impl DrainReport {
 /// outlives the round (the runner owns one per experiment) makes
 /// steady-state decode allocation-free.
 ///
-/// Errors if the uplink closes early, a client reports an in-band failure,
-/// a slot arrives twice, or decoding fails — in the sharded path a decode
-/// error surfaced by any worker aborts the round cleanly (pending work is
-/// dropped, every worker joins) before the error is returned.
+/// Admission and completion are governed by `cfg.policy` (see
+/// [`DrainPolicy`] and the module docs): duplicates, stale-round replays,
+/// bad slots and in-band client failures are counted and dropped; the
+/// round errors only when intake ends (uplink closed or deadline expired)
+/// below the quorum, or — under the default
+/// [`OnDecodeError::Abort`] — when a record fails to decode. In the
+/// sharded path an aborting decode error surfaced by any worker tears the
+/// round down cleanly (pending work dropped, every worker joined,
+/// [`Aggregator::abort_round`] called) before the error is returned.
 ///
 /// ```
 /// use deltamask::compress::{self, ScratchPool};
@@ -320,45 +493,193 @@ pub fn drain_round(
     let workers = cfg.resolved_workers();
     let pool_before = pool.stats();
     let mut report = if cfg.resolved_shards() > 1 {
-        drain_shard_routed(transport, plan, codec, agg, cfg.mode, pool, workers)
+        drain_shard_routed(transport, plan, codec, agg, cfg.mode, cfg.policy, pool, workers)
     } else if workers <= 1 {
-        drain_serial(transport, plan, codec, agg, cfg.mode, pool)
+        drain_serial(transport, plan, codec, agg, cfg.mode, cfg.policy, pool)
     } else {
-        drain_decode_workers(transport, plan, codec, agg, cfg.mode, pool, workers)
+        drain_decode_workers(transport, plan, codec, agg, cfg.mode, cfg.policy, pool, workers)
     }?;
     report.pool = pool.stats().delta_since(pool_before);
     Ok(report)
 }
 
-/// Receive and validate the next wire message, recording its per-slot
-/// accounting. Shared by the serial and sharded paths so both reject the
-/// same malformed inputs with the same messages.
-pub(crate) fn recv_validated(
-    transport: &mut dyn Transport,
-    got: usize,
+/// Per-round admission gate + completion policy, shared by every drain
+/// path (serial, decode-workers, shard-routed, and the round-resident
+/// [`DrainPipeline`](super::DrainPipeline)) so all of them reject the same
+/// malformed inputs, count the same faults, and finish under the same
+/// quorum/deadline rules.
+///
+/// The gate owns the per-round slot bitmap: the first well-formed record
+/// per `(round, slot)` wins; everything else is counted and dropped.
+/// Transport data must never panic the server, so all of this is
+/// recoverable accounting; `MaskServer::absorb` re-checks the slot
+/// invariants with a panic to protect `Aggregator` drivers other than
+/// these loops (the two layers are intentionally redundant).
+pub(crate) struct RoundGate {
+    round: usize,
     expected: usize,
-    seen: &mut [bool],
-    report: &mut DrainReport,
-) -> Result<(usize, Encoded)> {
-    let msg = match transport.recv() {
-        Some(msg) => msg,
-        None => bail!("uplink closed after {got}/{expected} updates"),
-    };
-    let enc = match msg.payload {
-        Payload::Update(enc) => enc,
-        Payload::Failed(err) => bail!("client {} failed: {err}", msg.client_id),
-    };
-    // Transport data must never panic the server, so bad slots are a
-    // recoverable error here; `MaskServer::absorb` re-checks the same
-    // invariant with a panic to protect Aggregator drivers other than
-    // this loop (the two layers are intentionally redundant).
-    if msg.slot >= expected || seen[msg.slot] {
-        bail!("bad or duplicate participant slot {}", msg.slot);
+    quorum: usize,
+    deadline: Option<Instant>,
+    on_decode_error: OnDecodeError,
+    seen: Vec<bool>,
+    accepted: usize,
+    /// In-band failure reasons, embedded in shortfall errors so a round
+    /// that dies of client failures says *which* clients and *why*.
+    failures: Vec<String>,
+    counters: FaultCounters,
+}
+
+impl RoundGate {
+    pub(crate) fn new(plan: &RoundPlan, policy: &DrainPolicy) -> Self {
+        let expected = plan.expected();
+        Self {
+            round: plan.round,
+            expected,
+            quorum: policy.quorum_count(expected),
+            deadline: policy.deadline(),
+            on_decode_error: policy.on_decode_error,
+            seen: vec![false; expected],
+            accepted: 0,
+            failures: Vec::new(),
+            counters: FaultCounters::default(),
+        }
     }
-    seen[msg.slot] = true;
-    report.loss_by_slot[msg.slot] = msg.loss as f64;
-    report.enc_by_slot[msg.slot] = msg.enc_secs;
-    Ok((msg.slot, enc))
+
+    /// Records admitted so far (= jobs handed to the decode stage).
+    pub(crate) fn accepted(&self) -> usize {
+        self.accepted
+    }
+
+    /// Pull the next admissible record. `Ok(Some((slot, enc)))` admits a
+    /// record; `Ok(None)` means intake is over (every planned record
+    /// admitted, or the uplink closed / the deadline expired with the
+    /// quorum met); `Err` means intake ended below the quorum.
+    pub(crate) fn next_record(
+        &mut self,
+        transport: &mut dyn Transport,
+        report: &mut DrainReport,
+    ) -> Result<Option<(usize, Encoded)>> {
+        loop {
+            if self.accepted == self.expected {
+                return Ok(None);
+            }
+            let msg = match self.deadline {
+                None => match transport.recv() {
+                    Some(msg) => msg,
+                    None => return self.on_closed(),
+                },
+                Some(deadline) => match transport.recv_deadline(deadline) {
+                    RecvOutcome::Msg(msg) => msg,
+                    RecvOutcome::Closed => return self.on_closed(),
+                    RecvOutcome::TimedOut => return self.on_deadline(transport),
+                },
+            };
+            if let Some(admitted) = self.admit(msg, report) {
+                return Ok(Some(admitted));
+            }
+        }
+    }
+
+    /// Apply the admission rules to one message. `None` = counted and
+    /// dropped.
+    fn admit(&mut self, msg: WireMessage, report: &mut DrainReport) -> Option<(usize, Encoded)> {
+        self.counters.received += 1;
+        if msg.round != self.round {
+            self.counters.stale += 1;
+            return None;
+        }
+        let enc = match msg.payload {
+            Payload::Update(enc) => enc,
+            Payload::Failed(err) => {
+                self.counters.failed += 1;
+                self.failures
+                    .push(format!("client {} failed: {err}", msg.client_id));
+                return None;
+            }
+        };
+        if msg.slot >= self.expected {
+            self.counters.bad_slot += 1;
+            return None;
+        }
+        if self.seen[msg.slot] {
+            self.counters.duplicates += 1;
+            return None;
+        }
+        self.seen[msg.slot] = true;
+        self.accepted += 1;
+        self.counters.accepted += 1;
+        report.loss_by_slot[msg.slot] = msg.loss as f64;
+        report.enc_by_slot[msg.slot] = msg.enc_secs;
+        Some((msg.slot, enc))
+    }
+
+    fn on_closed(&mut self) -> Result<Option<(usize, Encoded)>> {
+        if self.accepted >= self.quorum {
+            Ok(None)
+        } else {
+            Err(self.shortfall("uplink closed", self.accepted))
+        }
+    }
+
+    fn on_deadline(&mut self, transport: &mut dyn Transport) -> Result<Option<(usize, Encoded)>> {
+        // Late sweep: count whatever already arrived past the deadline
+        // without waiting on anything further. Late current-round records
+        // are *not* absorbed — completion must not depend on how late a
+        // straggler is, only on the deadline.
+        while let Some(msg) = transport.try_recv() {
+            self.counters.received += 1;
+            if msg.round == self.round {
+                self.counters.late += 1;
+            } else {
+                self.counters.stale += 1;
+            }
+        }
+        if self.accepted >= self.quorum {
+            Ok(None)
+        } else {
+            Err(self.shortfall("round deadline expired", self.accepted))
+        }
+    }
+
+    /// Handle a decode failure per policy: `Err` aborts the round, `Ok`
+    /// counts the record as corrupt and lets the drain continue.
+    pub(crate) fn decode_failed(&mut self, slot: usize, err: anyhow::Error) -> Result<()> {
+        match self.on_decode_error {
+            OnDecodeError::Abort => Err(anyhow!("decode failed for slot {slot}: {err}")),
+            OnDecodeError::Skip => {
+                self.counters.corrupt += 1;
+                Ok(())
+            }
+        }
+    }
+
+    /// Final verdict once every admitted record has settled: `absorbed`
+    /// is how many reached the aggregator (decode skips may put it below
+    /// `accepted`). Writes the fault counters into the report and returns
+    /// whether the round is partial (finish via
+    /// [`Aggregator::finish_round_partial`]).
+    pub(crate) fn settle(&self, absorbed: usize, report: &mut DrainReport) -> Result<bool> {
+        report.faults = self.counters;
+        report.faults.missing = (self.expected - absorbed) as u64;
+        report.quorum_met = absorbed >= self.quorum;
+        report.degraded = absorbed < self.expected;
+        if !report.quorum_met {
+            return Err(self.shortfall("quorum unmet", absorbed));
+        }
+        Ok(report.degraded)
+    }
+
+    fn shortfall(&self, reason: &str, count: usize) -> anyhow::Error {
+        let mut msg = format!(
+            "{reason} after {count}/{} updates (quorum {})",
+            self.expected, self.quorum
+        );
+        if !self.failures.is_empty() {
+            msg.push_str("; ");
+            msg.push_str(&self.failures.join("; "));
+        }
+        anyhow!(msg)
+    }
 }
 
 /// The single-threaded reference drain (`DrainConfig::serial`).
@@ -368,51 +689,88 @@ fn drain_serial(
     codec: &dyn UpdateCodec,
     agg: &mut dyn Aggregator,
     mode: PipelineMode,
+    policy: DrainPolicy,
     pool: &ScratchPool,
 ) -> Result<DrainReport> {
     let expected = plan.expected();
     let mut report = DrainReport::new(expected, 1);
-    let mut seen = vec![false; expected];
-    let mut buffered: Vec<Option<Encoded>> = match mode {
-        PipelineMode::Streaming => Vec::new(),
-        PipelineMode::Batch => vec![None; expected],
-    };
+    let mut gate = RoundGate::new(plan, &policy);
+    let mut absorbed = 0usize;
 
-    if mode == PipelineMode::Streaming {
-        agg.begin_round(expected);
-    }
-    for got in 0..expected {
-        let (slot, enc) = recv_validated(transport, got, expected, &mut seen, &mut report)?;
-        match mode {
-            PipelineMode::Streaming => {
-                let t = Stopwatch::new();
-                let update = codec.decode_pooled(&enc.bytes, &plan.decode_ctx(slot), pool)?;
+    // Decode + absorb one admitted record, per decode-error policy.
+    fn decode_absorb(
+        codec: &dyn UpdateCodec,
+        plan: &RoundPlan,
+        slot: usize,
+        enc: &Encoded,
+        agg: &mut dyn Aggregator,
+        pool: &ScratchPool,
+        gate: &mut RoundGate,
+        report: &mut DrainReport,
+        absorbed: &mut usize,
+    ) -> Result<()> {
+        let t = Stopwatch::new();
+        match codec.decode_pooled(&enc.bytes, &plan.decode_ctx(slot), pool) {
+            Ok(update) => {
                 report.dec_secs += t.elapsed_secs();
                 agg.absorb(slot, update);
                 while let Some(buf) = agg.reclaim_buffer() {
                     pool.put(buf);
                 }
+                *absorbed += 1;
+                Ok(())
             }
-            PipelineMode::Batch => buffered[slot] = Some(enc),
+            Err(e) => gate.decode_failed(slot, e),
         }
     }
+
     match mode {
-        PipelineMode::Streaming => agg.finish_round(),
+        PipelineMode::Streaming => {
+            agg.begin_round(expected);
+            while let Some((slot, enc)) = gate.next_record(transport, &mut report)? {
+                decode_absorb(
+                    codec,
+                    plan,
+                    slot,
+                    &enc,
+                    agg,
+                    pool,
+                    &mut gate,
+                    &mut report,
+                    &mut absorbed,
+                )?;
+            }
+        }
         PipelineMode::Batch => {
-            // Barrier passed: one begin/absorb×K/finish sweep in slot order.
+            // Barrier first, then one begin/absorb×K/finish sweep in slot
+            // order. Slots that never arrived stay `None` and are skipped.
+            let mut buffered: Vec<Option<Encoded>> = vec![None; expected];
+            while let Some((slot, enc)) = gate.next_record(transport, &mut report)? {
+                buffered[slot] = Some(enc);
+            }
             agg.begin_round(expected);
             for (slot, enc) in buffered.iter().enumerate() {
-                let enc = enc.as_ref().expect("all slots arrived");
-                let t = Stopwatch::new();
-                let update = codec.decode_pooled(&enc.bytes, &plan.decode_ctx(slot), pool)?;
-                report.dec_secs += t.elapsed_secs();
-                agg.absorb(slot, update);
-                while let Some(buf) = agg.reclaim_buffer() {
-                    pool.put(buf);
+                if let Some(enc) = enc {
+                    decode_absorb(
+                        codec,
+                        plan,
+                        slot,
+                        enc,
+                        agg,
+                        pool,
+                        &mut gate,
+                        &mut report,
+                        &mut absorbed,
+                    )?;
                 }
             }
-            agg.finish_round();
         }
+    }
+    let partial = gate.settle(absorbed, &mut report)?;
+    if partial {
+        agg.finish_round_partial();
+    } else {
+        agg.finish_round();
     }
     report.dec_by_worker[0] = report.dec_secs;
     Ok(report)
@@ -537,22 +895,29 @@ struct DecodedRecord {
 }
 
 /// Fold one finished decode into the aggregator and recycle spent buffers.
+/// Returns whether the record was absorbed (`false` = decode failure
+/// skipped under [`OnDecodeError::Skip`]; an aborting failure is `Err`).
 fn absorb_decoded(
     rec: DecodedRecord,
     report: &mut DrainReport,
     agg: &mut dyn Aggregator,
     pool: &ScratchPool,
-) -> Result<()> {
-    let update = rec
-        .update
-        .map_err(|e| anyhow!("decode failed for slot {}: {e}", rec.slot))?;
+    gate: &mut RoundGate,
+) -> Result<bool> {
+    let update = match rec.update {
+        Ok(update) => update,
+        Err(e) => {
+            gate.decode_failed(rec.slot, e)?;
+            return Ok(false);
+        }
+    };
     report.dec_secs += rec.dec_secs;
     report.dec_by_worker[rec.worker] += rec.dec_secs;
     agg.absorb(rec.slot, update);
     while let Some(buf) = agg.reclaim_buffer() {
         pool.put(buf);
     }
-    Ok(())
+    Ok(true)
 }
 
 /// The sharded-decode drain: N decode workers + the absorb stage on the
@@ -565,12 +930,14 @@ fn drain_decode_workers(
     codec: &dyn UpdateCodec,
     agg: &mut dyn Aggregator,
     mode: PipelineMode,
+    policy: DrainPolicy,
     pool: &ScratchPool,
     workers: usize,
 ) -> Result<DrainReport> {
     let expected = plan.expected();
     let mut report = DrainReport::new(expected, workers);
-    let mut seen = vec![false; expected];
+    let mut gate = RoundGate::new(plan, &policy);
+    let mut absorbed = 0usize;
     let queue = DecodeQueue::new();
 
     if mode == PipelineMode::Streaming {
@@ -610,44 +977,49 @@ fn drain_decode_workers(
         drop(tx);
 
         let mut run = || -> Result<()> {
-            let mut absorbed = 0usize;
+            // Settled = absorbed + skipped-as-corrupt: every job pushed to
+            // the workers must come back before the round can finish.
+            let mut settled = 0usize;
             match mode {
                 PipelineMode::Streaming => {
-                    for got in 0..expected {
-                        let (slot, enc) =
-                            recv_validated(transport, got, expected, &mut seen, &mut report)?;
+                    while let Some((slot, enc)) = gate.next_record(transport, &mut report)? {
                         queue.push(slot, enc);
                         // Opportunistically absorb finished decodes between
                         // arrivals: keeps the in-flight set small and
                         // overlaps aggregation with transport waits.
                         while let Ok(rec) = rx.try_recv() {
-                            absorb_decoded(rec, &mut report, agg, pool)?;
-                            absorbed += 1;
+                            if absorb_decoded(rec, &mut report, agg, pool, &mut gate)? {
+                                absorbed += 1;
+                            }
+                            settled += 1;
                         }
                     }
                 }
                 PipelineMode::Batch => {
                     // Barrier first (the reference semantics), then fan the
-                    // buffered records out to the workers in slot order.
+                    // buffered records out to the workers in slot order —
+                    // slots that never arrived are skipped.
                     let mut buffered: Vec<Option<Encoded>> = vec![None; expected];
-                    for got in 0..expected {
-                        let (slot, enc) =
-                            recv_validated(transport, got, expected, &mut seen, &mut report)?;
+                    while let Some((slot, enc)) = gate.next_record(transport, &mut report)? {
                         buffered[slot] = Some(enc);
                     }
                     agg.begin_round(expected);
                     for (slot, enc) in buffered.into_iter().enumerate() {
-                        queue.push(slot, enc.expect("all slots arrived"));
+                        if let Some(enc) = enc {
+                            queue.push(slot, enc);
+                        }
                     }
                 }
             }
             queue.close();
-            while absorbed < expected {
+            while settled < gate.accepted() {
                 let rec = rx
                     .recv()
                     .map_err(|_| anyhow!("decode workers exited early"))?;
-                absorb_decoded(rec, &mut report, agg, pool)?;
-                absorbed += 1;
+                if absorb_decoded(rec, &mut report, agg, pool, &mut gate)? {
+                    absorbed += 1;
+                }
+                settled += 1;
             }
             Ok(())
         };
@@ -662,7 +1034,12 @@ fn drain_decode_workers(
         out
     });
     drained?;
-    agg.finish_round();
+    let partial = gate.settle(absorbed, &mut report)?;
+    if partial {
+        agg.finish_round_partial();
+    } else {
+        agg.finish_round();
+    }
     Ok(report)
 }
 
@@ -681,20 +1058,20 @@ fn drain_shard_routed(
     codec: &dyn UpdateCodec,
     agg: &mut dyn Aggregator,
     mode: PipelineMode,
+    policy: DrainPolicy,
     pool: &ScratchPool,
     workers: usize,
 ) -> Result<DrainReport> {
     let expected = plan.expected();
     let mut report = DrainReport::new(expected, workers);
-    let mut seen = vec![false; expected];
+    let mut gate = RoundGate::new(plan, &policy);
 
     // Batch mode: the full-round barrier comes first, before any lane is
     // spawned — a barrier failure therefore has nothing to tear down.
     let mut buffered: Vec<Option<Encoded>> = Vec::new();
     if mode == PipelineMode::Batch {
         buffered = vec![None; expected];
-        for got in 0..expected {
-            let (slot, enc) = recv_validated(transport, got, expected, &mut seen, &mut report)?;
+        while let Some((slot, enc)) = gate.next_record(transport, &mut report)? {
             buffered[slot] = Some(enc);
         }
     }
@@ -711,30 +1088,67 @@ fn drain_shard_routed(
         }
     };
 
-    let drained: Result<()> = if workers <= 1 {
+    let drained: Result<usize> = if workers <= 1 {
         // One decode at a time on this thread; the S absorb lanes run
         // concurrently behind the router (and for range-capable codecs the
         // lanes run the per-shard sweeps themselves, so even this
         // single-decode-worker shape parallelizes a record's sweep).
-        let decode_one = |slot: usize, enc: &Encoded, report: &mut DrainReport| -> Result<()> {
-            let dec_secs = decode_and_route(codec, plan, slot, enc, pool, &router)
-                .map_err(|e| anyhow!("decode failed for slot {slot}: {e}"))?;
-            report.dec_secs += dec_secs;
-            Ok(())
-        };
+        let mut absorbed = 0usize;
+        // Decode-and-route one record, per decode-error policy. A failed
+        // decode routes nothing (both router paths validate before any
+        // lane hand-off), so skipping it leaves the lanes consistent.
+        fn decode_one(
+            codec: &dyn UpdateCodec,
+            plan: &RoundPlan,
+            slot: usize,
+            enc: &Encoded,
+            pool: &ScratchPool,
+            router: &ShardRouter,
+            gate: &mut RoundGate,
+            report: &mut DrainReport,
+            absorbed: &mut usize,
+        ) -> Result<()> {
+            match decode_and_route(codec, plan, slot, enc, pool, router) {
+                Ok(dec_secs) => {
+                    report.dec_secs += dec_secs;
+                    *absorbed += 1;
+                    Ok(())
+                }
+                Err(e) => gate.decode_failed(slot, e),
+            }
+        }
         let mut run = || -> Result<()> {
             match mode {
                 PipelineMode::Streaming => {
-                    for got in 0..expected {
-                        let (slot, enc) =
-                            recv_validated(transport, got, expected, &mut seen, &mut report)?;
-                        decode_one(slot, &enc, &mut report)?;
+                    while let Some((slot, enc)) = gate.next_record(transport, &mut report)? {
+                        decode_one(
+                            codec,
+                            plan,
+                            slot,
+                            &enc,
+                            pool,
+                            &router,
+                            &mut gate,
+                            &mut report,
+                            &mut absorbed,
+                        )?;
                     }
                 }
                 PipelineMode::Batch => {
                     for (slot, enc) in buffered.iter().enumerate() {
-                        let enc = enc.as_ref().expect("all slots arrived");
-                        decode_one(slot, enc, &mut report)?;
+                        if let Some(enc) = enc {
+                            decode_one(
+                                codec,
+                                plan,
+                                slot,
+                                enc,
+                                pool,
+                                &router,
+                                &mut gate,
+                                &mut report,
+                                &mut absorbed,
+                            )?;
+                        }
                     }
                 }
             }
@@ -742,7 +1156,7 @@ fn drain_shard_routed(
         };
         let out = run();
         report.dec_by_worker[0] = report.dec_secs;
-        out
+        out.map(|()| absorbed)
     } else {
         route_from_workers(
             transport,
@@ -752,17 +1166,20 @@ fn drain_shard_routed(
             mode,
             pool,
             workers,
-            expected,
-            &mut seen,
+            &mut gate,
             &mut report,
             buffered,
         )
     };
 
     drop(router);
-    match drained {
-        Ok(()) => {
-            agg.finish_round();
+    match drained.and_then(|absorbed| gate.settle(absorbed, &mut report)) {
+        Ok(partial) => {
+            if partial {
+                agg.finish_round_partial();
+            } else {
+                agg.finish_round();
+            }
             Ok(report)
         }
         Err(e) => {
@@ -782,13 +1199,17 @@ struct RoutedRecord {
     outcome: Result<()>,
 }
 
-/// Fold one routed record's accounting into the report.
-fn settle_routed(rec: RoutedRecord, report: &mut DrainReport) -> Result<()> {
-    rec.outcome
-        .map_err(|e| anyhow!("decode failed for slot {}: {e}", rec.slot))?;
+/// Fold one routed record's accounting into the report. Returns whether
+/// the record was absorbed (`false` = decode failure skipped under
+/// [`OnDecodeError::Skip`]; an aborting failure is `Err`).
+fn settle_routed(rec: RoutedRecord, report: &mut DrainReport, gate: &mut RoundGate) -> Result<bool> {
+    if let Err(e) = rec.outcome {
+        gate.decode_failed(rec.slot, e)?;
+        return Ok(false);
+    }
     report.dec_secs += rec.dec_secs;
     report.dec_by_worker[rec.worker] += rec.dec_secs;
-    Ok(())
+    Ok(true)
 }
 
 /// Decode stage of the dimension-sharded drain: N scoped workers decode
@@ -810,13 +1231,13 @@ fn route_from_workers(
     mode: PipelineMode,
     pool: &ScratchPool,
     workers: usize,
-    expected: usize,
-    seen: &mut [bool],
+    gate: &mut RoundGate,
     report: &mut DrainReport,
     buffered: Vec<Option<Encoded>>,
-) -> Result<()> {
+) -> Result<usize> {
     let queue = DecodeQueue::new();
-    std::thread::scope(|scope| {
+    let mut absorbed = 0usize;
+    let drained: Result<()> = std::thread::scope(|scope| {
         let (tx, rx) = mpsc::sync_channel::<RoutedRecord>(workers * 2);
         let _abort_on_unwind = QueueAbortGuard(&queue);
         for worker in 0..workers {
@@ -852,30 +1273,34 @@ fn route_from_workers(
             let mut settled = 0usize;
             match mode {
                 PipelineMode::Streaming => {
-                    for got in 0..expected {
-                        let (slot, enc) =
-                            recv_validated(transport, got, expected, seen, report)?;
+                    while let Some((slot, enc)) = gate.next_record(transport, report)? {
                         queue.push(slot, enc);
                         while let Ok(rec) = rx.try_recv() {
-                            settle_routed(rec, report)?;
+                            if settle_routed(rec, report, gate)? {
+                                absorbed += 1;
+                            }
                             settled += 1;
                         }
                     }
                 }
                 PipelineMode::Batch => {
                     // Barrier already passed in the caller: fan out in
-                    // slot order.
+                    // slot order, skipping slots that never arrived.
                     for (slot, enc) in buffered.into_iter().enumerate() {
-                        queue.push(slot, enc.expect("all slots arrived"));
+                        if let Some(enc) = enc {
+                            queue.push(slot, enc);
+                        }
                     }
                 }
             }
             queue.close();
-            while settled < expected {
+            while settled < gate.accepted() {
                 let rec = rx
                     .recv()
                     .map_err(|_| anyhow!("decode workers exited early"))?;
-                settle_routed(rec, report)?;
+                if settle_routed(rec, report, gate)? {
+                    absorbed += 1;
+                }
                 settled += 1;
             }
             Ok(())
@@ -886,7 +1311,8 @@ fn route_from_workers(
             while rx.recv().is_ok() {}
         }
         out
-    })
+    });
+    drained.map(|()| absorbed)
 }
 
 #[cfg(test)]
@@ -903,6 +1329,7 @@ mod tests {
         begun: Option<usize>,
         absorbed: Vec<usize>,
         finished: bool,
+        finished_partial: bool,
     }
 
     impl Aggregator for Spy {
@@ -916,6 +1343,11 @@ mod tests {
 
         fn finish_round(&mut self) {
             self.finished = true;
+        }
+
+        fn finish_round_partial(&mut self) {
+            self.finished = true;
+            self.finished_partial = true;
         }
     }
 
@@ -971,7 +1403,7 @@ mod tests {
     }
 
     #[test]
-    fn duplicate_slot_rejected_before_decode() {
+    fn duplicate_slot_counts_against_quorum_under_strict_policy() {
         let plan = plan_of(2);
         let codec = compress::by_name("fedpm").unwrap();
         let (mut transport, sender) = ChannelTransport::new();
@@ -990,7 +1422,184 @@ mod tests {
             &ScratchPool::new(),
         )
         .unwrap_err();
-        assert!(err.to_string().contains("duplicate"), "{err}");
+        // The duplicate is dropped, not fatal; the round then dies of the
+        // missing slot-0 record under the strict all-must-report quorum.
+        assert!(err.to_string().contains("1/2"), "{err}");
+    }
+
+    #[test]
+    fn first_record_wins_and_rejections_are_counted() {
+        let plan = plan_of(3);
+        let codec = compress::by_name("fedpm").unwrap();
+        for mode in [PipelineMode::Streaming, PipelineMode::Batch] {
+            let (mut transport, sender) = ChannelTransport::new();
+            sender.send(msg(0, fedpm_record(&plan, 0))).unwrap();
+            // Duplicate of slot 0: dropped, first record wins.
+            sender.send(msg(0, fedpm_record(&plan, 0))).unwrap();
+            // Stale replay from another round: dropped.
+            let mut stale = msg(1, fedpm_record(&plan, 1));
+            stale.round = 7;
+            sender.send(stale).unwrap();
+            // Out-of-range slot from a buggy client: dropped.
+            sender.send(msg(99, fedpm_record(&plan, 1))).unwrap();
+            sender.send(msg(2, fedpm_record(&plan, 2))).unwrap();
+            drop(sender); // slot 1 never reports
+            let mut spy = Spy::default();
+            let report = drain_round(
+                &mut transport,
+                &plan,
+                codec.as_ref(),
+                &mut spy,
+                DrainConfig::serial(mode).with_policy(DrainPolicy {
+                    quorum: 0.5,
+                    ..DrainPolicy::default()
+                }),
+                &ScratchPool::new(),
+            )
+            .unwrap();
+            let mut slots = spy.absorbed.clone();
+            slots.sort_unstable();
+            assert_eq!(slots, vec![0, 2], "{mode:?}");
+            assert!(spy.finished_partial, "{mode:?}");
+            assert_eq!(report.faults.received, 5, "{mode:?}");
+            assert_eq!(report.faults.accepted, 2, "{mode:?}");
+            assert_eq!(report.faults.duplicates, 1, "{mode:?}");
+            assert_eq!(report.faults.stale, 1, "{mode:?}");
+            assert_eq!(report.faults.bad_slot, 1, "{mode:?}");
+            assert_eq!(report.faults.missing, 1, "{mode:?}");
+            assert!(report.quorum_met && report.degraded, "{mode:?}");
+        }
+    }
+
+    #[test]
+    fn quorum_lets_a_failed_client_degrade_instead_of_abort() {
+        let plan = plan_of(2);
+        let codec = compress::by_name("fedpm").unwrap();
+        let (mut transport, sender) = ChannelTransport::new();
+        sender.send(msg(0, fedpm_record(&plan, 0))).unwrap();
+        sender
+            .send(msg(1, Payload::Failed("client oom".into())))
+            .unwrap();
+        drop(sender);
+        let mut spy = Spy::default();
+        let report = drain_round(
+            &mut transport,
+            &plan,
+            codec.as_ref(),
+            &mut spy,
+            DrainConfig::serial(PipelineMode::Streaming).with_policy(DrainPolicy {
+                quorum: 0.5,
+                ..DrainPolicy::default()
+            }),
+            &ScratchPool::new(),
+        )
+        .unwrap();
+        assert_eq!(spy.absorbed, vec![0]);
+        assert!(spy.finished_partial);
+        assert_eq!(report.faults.failed, 1);
+        assert_eq!(report.faults.missing, 1);
+        assert!(report.degraded);
+    }
+
+    #[test]
+    fn skip_policy_counts_undecodable_records_as_corrupt() {
+        let plan = plan_of(2);
+        let codec = compress::by_name("fedpm").unwrap();
+        let skip = DrainPolicy {
+            quorum: 0.5,
+            on_decode_error: OnDecodeError::Skip,
+            ..DrainPolicy::default()
+        };
+        // Across the serial and decode-worker paths, both modes.
+        for workers in [1usize, 3] {
+            for mode in [PipelineMode::Streaming, PipelineMode::Batch] {
+                let (mut transport, sender) = ChannelTransport::new();
+                sender.send(msg(0, fedpm_record(&plan, 0))).unwrap();
+                sender
+                    .send(msg(1, Payload::Update(Encoded { bytes: vec![0; 3] })))
+                    .unwrap();
+                drop(sender);
+                let mut spy = Spy::default();
+                let report = drain_round(
+                    &mut transport,
+                    &plan,
+                    codec.as_ref(),
+                    &mut spy,
+                    DrainConfig::new(mode, workers).with_policy(skip),
+                    &ScratchPool::new(),
+                )
+                .unwrap();
+                assert_eq!(spy.absorbed, vec![0], "w{workers} {mode:?}");
+                assert!(spy.finished_partial, "w{workers} {mode:?}");
+                assert_eq!(report.faults.corrupt, 1, "w{workers} {mode:?}");
+                assert_eq!(report.faults.missing, 1, "w{workers} {mode:?}");
+                assert!(report.degraded, "w{workers} {mode:?}");
+            }
+        }
+        // Under the default abort policy the same round errors.
+        let (mut transport, sender) = ChannelTransport::new();
+        sender.send(msg(0, fedpm_record(&plan, 0))).unwrap();
+        sender
+            .send(msg(1, Payload::Update(Encoded { bytes: vec![0; 3] })))
+            .unwrap();
+        drop(sender);
+        let mut spy = Spy::default();
+        let err = drain_round(
+            &mut transport,
+            &plan,
+            codec.as_ref(),
+            &mut spy,
+            DrainConfig::serial(PipelineMode::Streaming),
+            &ScratchPool::new(),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("decode failed for slot 1"), "{err}");
+    }
+
+    #[test]
+    fn deadline_expiry_finishes_with_quorum_or_errors_without() {
+        let plan = plan_of(2);
+        let codec = compress::by_name("fedpm").unwrap();
+        // Quorum met at the deadline: the round finishes degraded even
+        // though one sender handle is still alive (a hung client).
+        let (mut transport, sender) = ChannelTransport::new();
+        sender.send(msg(0, fedpm_record(&plan, 0))).unwrap();
+        let mut spy = Spy::default();
+        let report = drain_round(
+            &mut transport,
+            &plan,
+            codec.as_ref(),
+            &mut spy,
+            DrainConfig::serial(PipelineMode::Streaming).with_policy(DrainPolicy {
+                quorum: 0.5,
+                deadline_ms: 40,
+                ..DrainPolicy::default()
+            }),
+            &ScratchPool::new(),
+        )
+        .unwrap();
+        assert_eq!(spy.absorbed, vec![0]);
+        assert!(report.degraded && report.quorum_met);
+        // Quorum unmet at the deadline: the round errors with progress.
+        let (mut transport2, sender2) = ChannelTransport::new();
+        let mut spy = Spy::default();
+        let err = drain_round(
+            &mut transport2,
+            &plan,
+            codec.as_ref(),
+            &mut spy,
+            DrainConfig::serial(PipelineMode::Streaming).with_policy(DrainPolicy {
+                quorum: 1.0,
+                deadline_ms: 10,
+                ..DrainPolicy::default()
+            }),
+            &ScratchPool::new(),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("deadline expired"), "{err}");
+        assert!(err.to_string().contains("0/2"), "{err}");
+        drop(sender);
+        drop(sender2);
     }
 
     #[test]

@@ -43,6 +43,18 @@
 //!   counters in [`DrainReport`] / `RoundMetrics`. Wired to the CLI as
 //!   `--persistent-pipeline` (env `DELTAMASK_PERSISTENT_PIPELINE=1`);
 //!   bitwise identical to the per-round-spawn drain.
+//! * **Fault tolerance** — every drain path (per-round-spawn and
+//!   resident) admits wire traffic through one shared gate: first record
+//!   per `(round, slot)` wins; duplicates, stale-round replays, bad slots
+//!   and in-band `Payload::Failed` reports are counted
+//!   ([`FaultCounters`]) and dropped. A [`DrainPolicy`]
+//!   (`--quorum`/`--round-deadline-ms`/`--on-decode-error`) lets rounds
+//!   finish **degraded** over whoever showed up instead of aborting on
+//!   the first straggler. The deterministic chaos harness —
+//!   [`ChaosTransport`] over a seeded [`FaultPlan`] (drop, duplicate,
+//!   reorder, corrupt, straggle, die, flaky sends) plus
+//!   [`send_with_retry`] on the client path — makes every failure mode
+//!   reproducible in CI (`rust/tests/churn.rs`).
 //! * [`pool`] — a self-scheduling (work-stealing) [`ClientPool`]: workers
 //!   pull the next client job from a shared queue instead of being handed a
 //!   fixed round-robin chunk, so stragglers no longer idle whole threads,
@@ -72,7 +84,9 @@ pub mod round;
 pub mod shard;
 pub mod transport;
 
-pub use aggregate::{drain_round, Aggregator, DrainConfig, DrainReport};
+pub use aggregate::{
+    drain_round, Aggregator, DrainConfig, DrainPolicy, DrainReport, FaultCounters, OnDecodeError,
+};
 pub use pipeline::DrainPipeline;
 pub use shard::{shard_bounds, ShardRouter, ShardedAggregator};
 // Re-exported so coordinator users thread the decode buffer pool without
@@ -82,7 +96,8 @@ pub use crate::compress::{PoolStats, ScratchPool};
 pub use pool::ClientPool;
 pub use round::{RoundEngine, RoundPlan};
 pub use transport::{
-    ChannelTransport, Payload, Transport, TransportSender, TransportStats, WireMessage,
+    send_with_retry, ChannelTransport, ChaosTransport, FaultPlan, FaultVerdict, Payload,
+    RecvOutcome, Transport, TransportSender, TransportStats, WireMessage,
 };
 
 /// Server-side decode→aggregate scheduling policy for one experiment.

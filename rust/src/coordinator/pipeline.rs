@@ -86,8 +86,7 @@
 //! ```
 
 use super::aggregate::{
-    decode_and_route, drain_round, recv_validated, Aggregator, DecodeQueue, DrainConfig,
-    DrainReport,
+    decode_and_route, drain_round, Aggregator, DecodeQueue, DrainConfig, DrainReport, RoundGate,
 };
 use super::round::RoundPlan;
 use super::shard::ShardRouter;
@@ -224,8 +223,8 @@ impl DrainPipeline {
     /// the per-round path is the inline/serial drain, but the pipeline
     /// still owns the experiment-lifetime decode pool.
     pub fn new(cfg: DrainConfig) -> Self {
-        let resolved =
-            DrainConfig::sharded(cfg.mode, cfg.resolved_workers(), cfg.resolved_shards());
+        let resolved = DrainConfig::sharded(cfg.mode, cfg.resolved_workers(), cfg.resolved_shards())
+            .with_policy(cfg.policy);
         let workers = resolved.workers;
         let crew = (workers > 1).then(|| {
             let shared = Arc::new(Shared {
@@ -311,15 +310,14 @@ impl DrainPipeline {
         let workers = self.cfg.workers;
         let pool_before = self.pool.stats();
         let mut report = DrainReport::new(expected, workers);
-        let mut seen = vec![false; expected];
+        let mut gate = RoundGate::new(plan, &self.cfg.policy);
 
         // Batch mode: the full-round barrier comes first, before the crew
         // is activated — a barrier failure has nothing to quiesce.
         let mut buffered: Vec<Option<Encoded>> = Vec::new();
         if mode == PipelineMode::Batch {
             buffered = vec![None; expected];
-            for got in 0..expected {
-                let (slot, enc) = recv_validated(transport, got, expected, &mut seen, &mut report)?;
+            while let Some((slot, enc)) = gate.next_record(transport, &mut report)? {
                 buffered[slot] = Some(enc);
             }
         }
@@ -353,36 +351,44 @@ impl DrainPipeline {
 
         let mut absorbed = 0usize;
         let mut run = || -> Result<()> {
+            // Settled = absorbed + skipped-as-corrupt: every job pushed to
+            // the workers must come back before the round can finish.
+            let mut settled = 0usize;
             match mode {
                 PipelineMode::Streaming => {
-                    for got in 0..expected {
-                        let (slot, enc) =
-                            recv_validated(transport, got, expected, &mut seen, &mut report)?;
+                    while let Some((slot, enc)) = gate.next_record(transport, &mut report)? {
                         work.queue.push(slot, enc);
                         // Opportunistically absorb finished decodes between
                         // arrivals (overlaps aggregation with transport
                         // waits, keeps the in-flight set small).
                         while let Some(rec) = work.results.try_pop() {
-                            settle(rec, &mut report, agg, &self.pool)?;
-                            absorbed += 1;
+                            if settle(rec, &mut report, agg, &self.pool, &mut gate)? {
+                                absorbed += 1;
+                            }
+                            settled += 1;
                         }
                     }
                 }
                 PipelineMode::Batch => {
-                    // Barrier already passed: fan out in slot order.
+                    // Barrier already passed: fan out in slot order,
+                    // skipping slots that never arrived.
                     for (slot, enc) in std::mem::take(&mut buffered).into_iter().enumerate() {
-                        work.queue.push(slot, enc.expect("all slots arrived"));
+                        if let Some(enc) = enc {
+                            work.queue.push(slot, enc);
+                        }
                     }
                 }
             }
             work.queue.close();
-            while absorbed < expected {
+            while settled < gate.accepted() {
                 let rec = work
                     .results
                     .pop()
                     .ok_or_else(|| anyhow!("decode workers exited early"))?;
-                settle(rec, &mut report, agg, &self.pool)?;
-                absorbed += 1;
+                if settle(rec, &mut report, agg, &self.pool, &mut gate)? {
+                    absorbed += 1;
+                }
+                settled += 1;
             }
             Ok(())
         };
@@ -401,9 +407,13 @@ impl DrainPipeline {
         // stays published on the barrier until the next epoch replaces it).
         work.release_router();
 
-        match out {
-            Ok(()) => {
-                agg.finish_round();
+        match out.and_then(|()| gate.settle(absorbed, &mut report)) {
+            Ok(partial) => {
+                if partial {
+                    agg.finish_round_partial();
+                } else {
+                    agg.finish_round();
+                }
                 report.pool = self.pool.stats().delta_since(pool_before);
                 Ok(report)
             }
@@ -513,16 +523,23 @@ fn decode_record(
 }
 
 /// Fold one worker record into the report (and the aggregator, for
-/// non-routed records), recycling spent buffers.
+/// non-routed records), recycling spent buffers. Returns whether the
+/// record was absorbed (`false` = decode failure skipped under the
+/// gate's skip policy; an aborting failure is `Err`).
 fn settle(
     rec: WorkerRecord,
     report: &mut DrainReport,
     agg: &mut dyn Aggregator,
     pool: &ScratchPool,
-) -> Result<()> {
-    let payload = rec
-        .outcome
-        .map_err(|e| anyhow!("decode failed for slot {}: {e}", rec.slot))?;
+    gate: &mut RoundGate,
+) -> Result<bool> {
+    let payload = match rec.outcome {
+        Ok(payload) => payload,
+        Err(e) => {
+            gate.decode_failed(rec.slot, e)?;
+            return Ok(false);
+        }
+    };
     report.dec_secs += rec.dec_secs;
     report.dec_by_worker[rec.worker] += rec.dec_secs;
     if let Some(update) = payload {
@@ -531,7 +548,7 @@ fn settle(
             pool.put(buf);
         }
     }
-    Ok(())
+    Ok(true)
 }
 
 /// Bounded MPSC results queue with explicit producer accounting — the
@@ -767,6 +784,63 @@ mod tests {
         )
         .unwrap();
         assert_eq!(server.theta_g, oracle.theta_g);
+    }
+
+    #[test]
+    fn resident_degraded_round_matches_serial_over_the_surviving_cohort() {
+        use crate::coordinator::DrainPolicy;
+        let codec = fedpm_codec();
+        let relaxed = DrainPolicy {
+            quorum: 0.5,
+            ..DrainPolicy::default()
+        };
+        for mode in [PipelineMode::Batch, PipelineMode::Streaming] {
+            let pipeline =
+                DrainPipeline::new(DrainConfig::new(mode, 2).with_policy(relaxed));
+            let mut resident = MaskServer::with_theta0(32, 1.0, 0.5);
+            let mut oracle = resident.clone();
+
+            // Round 0: slot 1 never reports; both paths finish degraded.
+            let plan = plan_of(3, 0);
+            let mut t1 = send_round(&plan, codec.as_ref(), Some(1));
+            let report = pipeline
+                .drain_round(&mut t1, &plan, &codec, &mut resident)
+                .unwrap();
+            assert!(report.degraded && report.quorum_met, "{mode:?}");
+            assert_eq!(report.faults.missing, 1, "{mode:?}");
+            let mut t2 = send_round(&plan, codec.as_ref(), Some(1));
+            drain_round(
+                &mut t2,
+                &plan,
+                codec.as_ref(),
+                &mut oracle,
+                DrainConfig::serial(mode).with_policy(relaxed),
+                &ScratchPool::new(),
+            )
+            .unwrap();
+            assert_eq!(resident.theta_g, oracle.theta_g, "{mode:?}");
+            assert_eq!(resident.s_g, oracle.s_g, "{mode:?}");
+
+            // Round 1: the same pipeline runs a full round cleanly after
+            // the degraded one — and stays bitwise-locked to the oracle.
+            let plan = plan_of(3, 1);
+            let mut t1 = send_round(&plan, codec.as_ref(), None);
+            let report = pipeline
+                .drain_round(&mut t1, &plan, &codec, &mut resident)
+                .unwrap();
+            assert!(!report.degraded, "{mode:?}");
+            let mut t2 = send_round(&plan, codec.as_ref(), None);
+            drain_round(
+                &mut t2,
+                &plan,
+                codec.as_ref(),
+                &mut oracle,
+                DrainConfig::serial(mode).with_policy(relaxed),
+                &ScratchPool::new(),
+            )
+            .unwrap();
+            assert_eq!(resident.theta_g, oracle.theta_g, "{mode:?}");
+        }
     }
 
     #[test]

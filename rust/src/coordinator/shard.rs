@@ -117,7 +117,9 @@ enum LaneMsg {
         base: Vec<f32>,
         decoder: Arc<dyn MaskRangeDecoder>,
     },
-    Finish,
+    /// Close the lane's round; `partial` finishes degraded (quorum) rounds
+    /// through the slice sink's `finish_round_partial`.
+    Finish { partial: bool },
 }
 
 /// One round's work package, shipped to a resident lane thread through its
@@ -346,8 +348,12 @@ impl<A: Aggregator + Send + 'static> ShardedAggregator<A> {
                             }
                             absorb_secs += t.elapsed_secs();
                         }
-                        LaneMsg::Finish => {
-                            sink.finish_round();
+                        LaneMsg::Finish { partial } => {
+                            if partial {
+                                sink.finish_round_partial();
+                            } else {
+                                sink.finish_round();
+                            }
                             finished = true;
                             break;
                         }
@@ -406,6 +412,24 @@ impl<A: Aggregator + Send + 'static> ShardedAggregator<A> {
                 lanes: router_lanes.into(),
             },
         });
+    }
+
+    /// Close the in-flight round on every lane — `partial` routes to the
+    /// slice sinks' `finish_round_partial` (degraded quorum rounds).
+    fn finish_lanes(&mut self, partial: bool) {
+        let RunningRound { router } = self
+            .running
+            .take()
+            .expect("ShardedAggregator::finish_round called before begin_round");
+        // Lane queues are FIFO and every routed sub-update was enqueued
+        // before its completion was acknowledged, so `Finish` lands after
+        // the round's full absorb set on every lane.
+        for lane in router.lanes.iter() {
+            let _ = lane.tx.send(LaneMsg::Finish { partial });
+        }
+        drop(router);
+        let finished = self.collect_round();
+        assert!(finished, "a shard lane exited before Finish");
     }
 }
 
@@ -558,19 +582,11 @@ impl<A: Aggregator + Send + 'static> Aggregator for ShardedAggregator<A> {
     }
 
     fn finish_round(&mut self) {
-        let RunningRound { router } = self
-            .running
-            .take()
-            .expect("ShardedAggregator::finish_round called before begin_round");
-        // Lane queues are FIFO and every routed sub-update was enqueued
-        // before its completion was acknowledged, so `Finish` lands after
-        // the round's full absorb set on every lane.
-        for lane in router.lanes.iter() {
-            let _ = lane.tx.send(LaneMsg::Finish);
-        }
-        drop(router);
-        let finished = self.collect_round();
-        assert!(finished, "a shard lane exited before Finish");
+        self.finish_lanes(false);
+    }
+
+    fn finish_round_partial(&mut self) {
+        self.finish_lanes(true);
     }
 
     fn reclaim_buffer(&mut self) -> Option<Vec<f32>> {
@@ -623,6 +639,7 @@ mod tests {
         absorbed: Vec<(usize, Vec<f32>)>,
         spent: Vec<Vec<f32>>,
         finished: usize,
+        finished_partial: usize,
     }
 
     impl Aggregator for LaneSpy {
@@ -639,6 +656,11 @@ mod tests {
 
         fn finish_round(&mut self) {
             self.finished += 1;
+        }
+
+        fn finish_round_partial(&mut self) {
+            self.finished += 1;
+            self.finished_partial += 1;
         }
 
         fn reclaim_buffer(&mut self) -> Option<Vec<f32>> {
@@ -816,6 +838,25 @@ mod tests {
         for (range, spy) in agg.into_shards() {
             assert_eq!(spy.absorbed.len(), 1);
             assert_eq!(spy.absorbed[0].1, full[range.clone()].to_vec(), "{range:?}");
+        }
+    }
+
+    #[test]
+    fn partial_finish_reaches_every_lane() {
+        let mut agg = spy_shards(6, 3);
+        agg.begin_round(3);
+        agg.absorb(0, Update::Mask(vec![1.0; 6]));
+        agg.absorb(2, Update::Mask(vec![0.0; 6]));
+        // A quorum-degraded round: slot 1 never arrives.
+        agg.finish_round_partial();
+        // The view stays reusable after a degraded round.
+        agg.begin_round(1);
+        agg.absorb(0, Update::Mask(vec![1.0; 6]));
+        agg.finish_round();
+        for (_, spy) in agg.into_shards() {
+            assert_eq!(spy.finished, 2);
+            assert_eq!(spy.finished_partial, 1);
+            assert_eq!(spy.absorbed.len(), 3);
         }
     }
 

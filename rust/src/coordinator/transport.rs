@@ -5,11 +5,23 @@
 //! loop measures honest wire costs without threading bookkeeping through
 //! client code. The in-process [`ChannelTransport`] backs simulations; a
 //! networked implementation only has to provide the same two traits.
+//!
+//! For fault-tolerance work the module also ships a deterministic fault
+//! injector: [`ChaosTransport`] wraps any [`Transport`] and perturbs the
+//! delivery stream (drop, duplicate, reorder, straggle, bit-flip
+//! corruption, mid-round client death) according to a seeded
+//! [`FaultPlan`]. Every decision is a pure hash of
+//! `(seed, round, client, fault kind)` — no RNG state, no wall clock — so
+//! a chaos run is bit-reproducible in CI regardless of thread schedule or
+//! arrival order. [`send_with_retry`] gives the client send path bounded
+//! retry-with-backoff against transient failures (injectable via
+//! [`FaultPlan::flaky`] + [`FaultPlan::wrap_sender`]).
 
 use crate::compress::Encoded;
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Result};
+use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::{mpsc, Arc, Mutex};
 use std::time::Instant;
 
 /// What a client produced for the round: an encoded update, or a terminal
@@ -69,11 +81,44 @@ impl Clone for Box<dyn TransportSender> {
     }
 }
 
+/// Outcome of a deadline-bounded receive.
+#[derive(Debug)]
+pub enum RecvOutcome {
+    /// A message arrived before the deadline.
+    Msg(WireMessage),
+    /// The deadline passed with messages potentially still in flight.
+    TimedOut,
+    /// Every sender handle dropped and the queue is drained — nothing can
+    /// arrive anymore.
+    Closed,
+}
+
 /// Server-side end of an uplink.
 pub trait Transport {
     /// Next message in arrival order; `None` once every sender handle has
     /// been dropped and the queue is drained.
     fn recv(&mut self) -> Option<WireMessage>;
+
+    /// Next message, abandoning the wait at `deadline`.
+    ///
+    /// The default implementation has infinite patience (it ignores the
+    /// deadline and blocks until a message arrives or the uplink closes);
+    /// transports that can time out should override it.
+    fn recv_deadline(&mut self, deadline: Instant) -> RecvOutcome {
+        let _ = deadline;
+        match self.recv() {
+            Some(msg) => RecvOutcome::Msg(msg),
+            None => RecvOutcome::Closed,
+        }
+    }
+
+    /// Non-blocking poll: a message if one is already buffered. Backs the
+    /// post-deadline late sweep, which counts stragglers without waiting
+    /// on them. The default has nothing buffered.
+    fn try_recv(&mut self) -> Option<WireMessage> {
+        None
+    }
+
     fn stats(&self) -> TransportStats;
 }
 
@@ -116,6 +161,12 @@ impl ChannelTransport {
         };
         (server, Box::new(ChannelSender { tx, counters }))
     }
+
+    fn absorb(&mut self, stamped: Stamped) -> WireMessage {
+        self.received += 1;
+        self.transit_secs += stamped.sent_at.elapsed().as_secs_f64();
+        stamped.msg
+    }
 }
 
 impl TransportSender for ChannelSender {
@@ -143,11 +194,23 @@ impl TransportSender for ChannelSender {
 impl Transport for ChannelTransport {
     fn recv(&mut self) -> Option<WireMessage> {
         match self.rx.recv() {
-            Ok(stamped) => {
-                self.received += 1;
-                self.transit_secs += stamped.sent_at.elapsed().as_secs_f64();
-                Some(stamped.msg)
-            }
+            Ok(stamped) => Some(self.absorb(stamped)),
+            Err(_) => None,
+        }
+    }
+
+    fn recv_deadline(&mut self, deadline: Instant) -> RecvOutcome {
+        let wait = deadline.saturating_duration_since(Instant::now());
+        match self.rx.recv_timeout(wait) {
+            Ok(stamped) => RecvOutcome::Msg(self.absorb(stamped)),
+            Err(mpsc::RecvTimeoutError::Timeout) => RecvOutcome::TimedOut,
+            Err(mpsc::RecvTimeoutError::Disconnected) => RecvOutcome::Closed,
+        }
+    }
+
+    fn try_recv(&mut self) -> Option<WireMessage> {
+        match self.rx.try_recv() {
+            Ok(stamped) => Some(self.absorb(stamped)),
             Err(_) => None,
         }
     }
@@ -160,6 +223,416 @@ impl Transport for ChannelTransport {
             transit_secs: self.transit_secs,
         }
     }
+}
+
+// ---------------------------------------------------------------------------
+// Deterministic fault injection.
+// ---------------------------------------------------------------------------
+
+/// splitmix64 finalizer — the avalanche behind every chaos decision.
+fn mix(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+const KIND_DROP: u64 = 1;
+const KIND_DUP: u64 = 2;
+const KIND_REORDER: u64 = 3;
+const KIND_CORRUPT: u64 = 4;
+const KIND_STRAGGLE: u64 = 5;
+const KIND_DIE: u64 = 6;
+const KIND_FLAKY: u64 = 7;
+
+/// What the chaos layer ultimately does to one `(round, client)` record.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultVerdict {
+    /// Delivered intact (possibly duplicated or reordered on top — the
+    /// first copy is still accepted).
+    Deliver,
+    /// Never arrives.
+    Drop,
+    /// Arrives later than every on-time sender: after the uplink closes
+    /// under an infinite-patience drain, or only in the post-deadline late
+    /// sweep when the drain runs a deadline.
+    Straggle,
+    /// Arrives as an in-band `Payload::Failed` (client death mid-round).
+    Die,
+    /// Arrives with an undecodable payload (bit flips + truncation).
+    Corrupt,
+}
+
+/// Seeded description of every fault [`ChaosTransport`] may inject.
+///
+/// Rates are probabilities in `[0, 1]`, evaluated independently per
+/// `(round, client)` pair by hashing — two runs with the same plan fault
+/// exactly the same records, which is what makes churn scenarios
+/// reproducible in CI. Parse one from a spec string like
+/// `"seed=7,drop=0.1,dup=0.05,straggle=0.2"`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultPlan {
+    pub seed: u64,
+    /// Record never arrives.
+    pub drop: f64,
+    /// Record arrives twice.
+    pub duplicate: f64,
+    /// Record swaps places with the next delivery.
+    pub reorder: f64,
+    /// Record arrives undecodable (seeded bit flips + truncation —
+    /// destructive on purpose, so it reliably fails the codecs'
+    /// bounds-checked decode instead of sneaking through as a
+    /// different-but-valid record).
+    pub corrupt: f64,
+    /// Record arrives later than every on-time sender (see
+    /// [`FaultVerdict::Straggle`]).
+    pub straggle: f64,
+    /// Client dies mid-round: its slot reports `Payload::Failed` in-band.
+    pub die: f64,
+    /// Fraction of `(round, client)` pairs whose first `flaky_sends` send
+    /// attempts fail, exercising the retry path ([`FaultPlan::wrap_sender`]).
+    pub flaky: f64,
+    /// How many leading send attempts fail for a flaky pair.
+    pub flaky_sends: u32,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        Self {
+            seed: 0,
+            drop: 0.0,
+            duplicate: 0.0,
+            reorder: 0.0,
+            corrupt: 0.0,
+            straggle: 0.0,
+            die: 0.0,
+            flaky: 0.0,
+            flaky_sends: 2,
+        }
+    }
+}
+
+impl FaultPlan {
+    /// Parse a comma-separated `key=value` spec. Keys: `seed`, `drop`,
+    /// `dup`/`duplicate`, `reorder`, `corrupt`, `straggle`/`delay`, `die`,
+    /// `flaky`, `flaky_sends`. Rates must be in `[0, 1]`; unknown keys are
+    /// an error (the config layer fails loudly rather than silently
+    /// running a different scenario than asked).
+    pub fn parse(spec: &str) -> Result<Self> {
+        fn rate(key: &str, value: &str) -> Result<f64> {
+            let r: f64 = value
+                .parse()
+                .map_err(|_| anyhow!("chaos spec: `{key}={value}` is not a number"))?;
+            if !(0.0..=1.0).contains(&r) {
+                bail!("chaos spec: rate `{key}={value}` outside [0, 1]");
+            }
+            Ok(r)
+        }
+        let mut plan = FaultPlan::default();
+        for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let (key, value) = part
+                .split_once('=')
+                .ok_or_else(|| anyhow!("chaos spec: entry `{part}` is not key=value"))?;
+            match key.trim() {
+                "seed" => {
+                    plan.seed = value
+                        .parse()
+                        .map_err(|_| anyhow!("chaos spec: `seed={value}` is not a u64"))?
+                }
+                "drop" => plan.drop = rate(key, value)?,
+                "dup" | "duplicate" => plan.duplicate = rate(key, value)?,
+                "reorder" => plan.reorder = rate(key, value)?,
+                "corrupt" => plan.corrupt = rate(key, value)?,
+                "straggle" | "delay" => plan.straggle = rate(key, value)?,
+                "die" => plan.die = rate(key, value)?,
+                "flaky" => plan.flaky = rate(key, value)?,
+                "flaky_sends" => {
+                    plan.flaky_sends = value
+                        .parse()
+                        .map_err(|_| anyhow!("chaos spec: `flaky_sends={value}` is not a u32"))?
+                }
+                other => bail!(
+                    "chaos spec: unknown key `{other}` (expected seed, drop, dup, \
+                     reorder, corrupt, straggle, die, flaky, flaky_sends)"
+                ),
+            }
+        }
+        Ok(plan)
+    }
+
+    /// Whether any fault can fire at all.
+    pub fn is_active(&self) -> bool {
+        self.drop > 0.0
+            || self.duplicate > 0.0
+            || self.reorder > 0.0
+            || self.corrupt > 0.0
+            || self.straggle > 0.0
+            || self.die > 0.0
+            || self.flaky > 0.0
+    }
+
+    /// Deterministic uniform draw in `[0, 1)` for one decision.
+    fn unit(&self, round: usize, client: usize, kind: u64) -> f64 {
+        let h = mix(self.seed ^ mix((round as u64) ^ mix((client as u64) ^ (kind << 56))));
+        (h >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    fn hit(&self, rate: f64, round: usize, client: usize, kind: u64) -> bool {
+        rate > 0.0 && self.unit(round, client, kind) < rate
+    }
+
+    /// The terminal fate of one `(round, client)` record under this plan.
+    /// Precedence: die > drop > straggle > corrupt > deliver — so tests can
+    /// compute the surviving cohort of any round without replaying the
+    /// transport.
+    pub fn verdict(&self, round: usize, client: usize) -> FaultVerdict {
+        if self.hit(self.die, round, client, KIND_DIE) {
+            FaultVerdict::Die
+        } else if self.hit(self.drop, round, client, KIND_DROP) {
+            FaultVerdict::Drop
+        } else if self.hit(self.straggle, round, client, KIND_STRAGGLE) {
+            FaultVerdict::Straggle
+        } else if self.hit(self.corrupt, round, client, KIND_CORRUPT) {
+            FaultVerdict::Corrupt
+        } else {
+            FaultVerdict::Deliver
+        }
+    }
+
+    /// Whether every one of `attempts` retried sends fails for this pair
+    /// (i.e. the runner will escalate to an in-band `Payload::Failed`).
+    pub fn exhausts_retries(&self, round: usize, client: usize, attempts: u32) -> bool {
+        self.hit(self.flaky, round, client, KIND_FLAKY) && self.flaky_sends >= attempts
+    }
+
+    /// Wrap a sender so flaky `(round, client)` pairs fail their first
+    /// `flaky_sends` attempts. A no-op (returns the sender unchanged) when
+    /// `flaky` is zero.
+    pub fn wrap_sender(&self, inner: Box<dyn TransportSender>) -> Box<dyn TransportSender> {
+        if self.flaky <= 0.0 {
+            return inner;
+        }
+        Box::new(ChaosSender {
+            inner,
+            plan: *self,
+            attempts: Arc::new(Mutex::new(HashMap::new())),
+        })
+    }
+}
+
+fn corrupt_message(mut msg: WireMessage, seed: u64) -> WireMessage {
+    if let Payload::Update(Encoded { bytes }) = &mut msg.payload {
+        for (i, b) in bytes.iter_mut().take(8).enumerate() {
+            *b ^= 1 << (mix(seed ^ (i as u64) ^ 0xC0_22) % 8);
+        }
+        let half = bytes.len() / 2;
+        bytes.truncate(half);
+        if bytes.is_empty() {
+            bytes.push(0xFF);
+        }
+    }
+    msg
+}
+
+/// Deterministic fault injector over any [`Transport`].
+///
+/// Pull-driven: each inner message is assigned its fate by
+/// [`FaultPlan::verdict`] the moment it is pulled, so the fault pattern
+/// depends only on `(seed, round, client)` — never on timing. Straggled
+/// messages are withheld until the inner uplink closes (an
+/// infinite-patience `recv` then drains them last) or, under
+/// `recv_deadline`, forever — the drain sees `TimedOut` and collects them
+/// in its `try_recv` late sweep. That simulates "still in flight past any
+/// deadline" without a single real sleep, keeping churn tests fast and
+/// deterministic.
+pub struct ChaosTransport<T: Transport> {
+    inner: T,
+    plan: FaultPlan,
+    /// Ready for delivery ahead of the inner stream (duplicates, resolved
+    /// reorder swaps).
+    pending: VecDeque<WireMessage>,
+    /// Held back by a reorder fault; delivered after the next message.
+    held: Option<WireMessage>,
+    /// Withheld stragglers (see the type docs).
+    straggled: VecDeque<WireMessage>,
+}
+
+impl<T: Transport> ChaosTransport<T> {
+    pub fn new(inner: T, plan: FaultPlan) -> Self {
+        Self {
+            inner,
+            plan,
+            pending: VecDeque::new(),
+            held: None,
+            straggled: VecDeque::new(),
+        }
+    }
+
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    fn release_held(&mut self) {
+        if let Some(h) = self.held.take() {
+            self.pending.push_back(h);
+        }
+    }
+
+    /// Apply this message's fate, queueing whatever should be delivered.
+    fn admit(&mut self, msg: WireMessage) {
+        let (round, client) = (msg.round, msg.client_id);
+        let msg = match self.plan.verdict(round, client) {
+            FaultVerdict::Drop => return,
+            FaultVerdict::Straggle => {
+                self.straggled.push_back(msg);
+                return;
+            }
+            FaultVerdict::Die => WireMessage {
+                payload: Payload::Failed(format!("chaos: client {client} died mid-round")),
+                ..msg
+            },
+            FaultVerdict::Corrupt => corrupt_message(msg, self.plan.seed),
+            FaultVerdict::Deliver => msg,
+        };
+        let dup = self.plan.hit(self.plan.duplicate, round, client, KIND_DUP);
+        if self.plan.hit(self.plan.reorder, round, client, KIND_REORDER) && self.held.is_none() {
+            if dup {
+                self.pending.push_back(msg.clone());
+            }
+            self.held = Some(msg);
+            return;
+        }
+        self.pending.push_back(msg.clone());
+        if dup {
+            self.pending.push_back(msg);
+        }
+        self.release_held();
+    }
+
+    /// Flush the reorder hold, then report whether anything is deliverable.
+    fn drain_tail(&mut self) -> Option<WireMessage> {
+        self.release_held();
+        self.pending.pop_front()
+    }
+}
+
+impl<T: Transport> Transport for ChaosTransport<T> {
+    fn recv(&mut self) -> Option<WireMessage> {
+        loop {
+            if let Some(m) = self.pending.pop_front() {
+                return Some(m);
+            }
+            match self.inner.recv() {
+                Some(msg) => self.admit(msg),
+                // Infinite patience: stragglers arrive after everyone else.
+                None => return self.drain_tail().or_else(|| self.straggled.pop_front()),
+            }
+        }
+    }
+
+    fn recv_deadline(&mut self, deadline: Instant) -> RecvOutcome {
+        loop {
+            if let Some(m) = self.pending.pop_front() {
+                return RecvOutcome::Msg(m);
+            }
+            match self.inner.recv_deadline(deadline) {
+                RecvOutcome::Msg(msg) => self.admit(msg),
+                RecvOutcome::TimedOut => return RecvOutcome::TimedOut,
+                RecvOutcome::Closed => {
+                    if let Some(m) = self.drain_tail() {
+                        return RecvOutcome::Msg(m);
+                    }
+                    // Only stragglers remain: under a deadline they are
+                    // "still in flight", however long the caller waits —
+                    // surface as a timeout so the late sweep finds them
+                    // and no test ever sleeps out a real deadline.
+                    return if self.straggled.is_empty() {
+                        RecvOutcome::Closed
+                    } else {
+                        RecvOutcome::TimedOut
+                    };
+                }
+            }
+        }
+    }
+
+    fn try_recv(&mut self) -> Option<WireMessage> {
+        loop {
+            if let Some(m) = self.pending.pop_front() {
+                return Some(m);
+            }
+            match self.inner.try_recv() {
+                Some(msg) => self.admit(msg),
+                None => return self.drain_tail().or_else(|| self.straggled.pop_front()),
+            }
+        }
+    }
+
+    fn stats(&self) -> TransportStats {
+        self.inner.stats()
+    }
+}
+
+struct ChaosSender {
+    inner: Box<dyn TransportSender>,
+    plan: FaultPlan,
+    attempts: Arc<Mutex<HashMap<(usize, usize), u32>>>,
+}
+
+impl TransportSender for ChaosSender {
+    fn send(&self, msg: WireMessage) -> Result<()> {
+        if self.plan.hit(self.plan.flaky, msg.round, msg.client_id, KIND_FLAKY) {
+            let mut seen = self.attempts.lock().unwrap();
+            let n = seen.entry((msg.round, msg.client_id)).or_insert(0);
+            if *n < self.plan.flaky_sends {
+                *n += 1;
+                bail!(
+                    "chaos: transient send failure {}/{} for client {}",
+                    *n,
+                    self.plan.flaky_sends,
+                    msg.client_id
+                );
+            }
+        }
+        self.inner.send(msg)
+    }
+
+    fn clone_sender(&self) -> Box<dyn TransportSender> {
+        Box::new(ChaosSender {
+            inner: self.inner.clone_sender(),
+            plan: self.plan,
+            attempts: self.attempts.clone(),
+        })
+    }
+}
+
+/// Send with bounded retry: up to `attempts` tries, sleeping `backoff`
+/// (doubling each time) between failures. Returns the last error once
+/// exhausted — callers escalate by reporting `Payload::Failed` in-band so
+/// the server hears about the loss instead of waiting on it.
+pub fn send_with_retry(
+    sender: &dyn TransportSender,
+    msg: WireMessage,
+    attempts: u32,
+    backoff: std::time::Duration,
+) -> Result<()> {
+    let attempts = attempts.max(1);
+    let mut wait = backoff;
+    let mut last = None;
+    for attempt in 0..attempts {
+        match sender.send(msg.clone()) {
+            Ok(()) => return Ok(()),
+            Err(e) => last = Some(e),
+        }
+        if attempt + 1 < attempts && !wait.is_zero() {
+            std::thread::sleep(wait);
+            wait *= 2;
+        }
+    }
+    Err(anyhow!(
+        "send failed after {attempts} attempts: {}",
+        last.expect("attempts >= 1")
+    ))
 }
 
 #[cfg(test)]
@@ -238,5 +711,176 @@ mod tests {
         slots.sort_unstable();
         assert_eq!(slots, vec![0, 1, 2, 3]);
         assert_eq!(server.stats().sent_payload_bytes, 1 + 2 + 3 + 4);
+    }
+
+    #[test]
+    fn recv_deadline_times_out_then_sees_close() {
+        let (mut server, sender) = ChannelTransport::new();
+        // Sender alive, nothing queued: the deadline fires.
+        let soon = Instant::now() + std::time::Duration::from_millis(5);
+        assert!(matches!(server.recv_deadline(soon), RecvOutcome::TimedOut));
+        sender.send(msg(0, 4)).unwrap();
+        drop(sender);
+        let far = Instant::now() + std::time::Duration::from_secs(30);
+        assert!(matches!(server.recv_deadline(far), RecvOutcome::Msg(_)));
+        assert!(matches!(server.recv_deadline(far), RecvOutcome::Closed));
+    }
+
+    #[test]
+    fn try_recv_polls_without_blocking() {
+        let (mut server, sender) = ChannelTransport::new();
+        assert!(server.try_recv().is_none());
+        sender.send(msg(2, 4)).unwrap();
+        assert_eq!(server.try_recv().unwrap().slot, 2);
+        assert!(server.try_recv().is_none());
+    }
+
+    #[test]
+    fn fault_plan_parses_and_rejects_bad_specs() {
+        let plan = FaultPlan::parse("seed=7, drop=0.25,dup=0.5,straggle=1,flaky_sends=3").unwrap();
+        assert_eq!(plan.seed, 7);
+        assert_eq!(plan.drop, 0.25);
+        assert_eq!(plan.duplicate, 0.5);
+        assert_eq!(plan.straggle, 1.0);
+        assert_eq!(plan.flaky_sends, 3);
+        assert!(plan.is_active());
+        assert!(!FaultPlan::parse("").unwrap().is_active());
+        assert!(FaultPlan::parse("drop=1.5").is_err(), "rate outside [0,1]");
+        assert!(FaultPlan::parse("warp=0.1").is_err(), "unknown key");
+        assert!(FaultPlan::parse("drop").is_err(), "missing value");
+    }
+
+    /// Chaos delivery is a pure function of (plan, message stream): two
+    /// runs over the same stream produce byte-identical delivery
+    /// sequences, and every delivered/absent record matches its verdict.
+    #[test]
+    fn chaos_faults_are_deterministic_and_match_verdicts() {
+        let plan = FaultPlan::parse("seed=11,drop=0.3,dup=0.3,reorder=0.3,die=0.2").unwrap();
+        let run = || -> Vec<(usize, usize, bool)> {
+            let (server, sender) = ChannelTransport::new();
+            for round in 0..3 {
+                for client in 0..8 {
+                    let mut m = msg(client, 16);
+                    m.round = round;
+                    sender.send(m).unwrap();
+                }
+            }
+            drop(sender);
+            let mut chaos = ChaosTransport::new(server, plan);
+            std::iter::from_fn(|| chaos.recv())
+                .map(|m| {
+                    (
+                        m.round,
+                        m.client_id,
+                        matches!(m.payload, Payload::Failed(_)),
+                    )
+                })
+                .collect()
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a, b, "same plan, same stream ⇒ same deliveries");
+        for round in 0..3usize {
+            for client in 0..8usize {
+                let copies = a
+                    .iter()
+                    .filter(|&&(r, c, _)| r == round && c == client)
+                    .count();
+                match plan.verdict(round, client) {
+                    FaultVerdict::Drop => assert_eq!(copies, 0, "dropped r{round} c{client}"),
+                    FaultVerdict::Die => {
+                        assert!(copies >= 1);
+                        assert!(a
+                            .iter()
+                            .any(|&(r, c, failed)| r == round && c == client && failed));
+                    }
+                    _ => assert!(copies >= 1, "delivered r{round} c{client}"),
+                }
+            }
+        }
+    }
+
+    /// Stragglers arrive last under infinite patience, and only via the
+    /// late sweep under a deadline — with no real sleeping either way.
+    #[test]
+    fn stragglers_arrive_after_close_or_in_the_late_sweep() {
+        let plan = FaultPlan::parse("seed=5,straggle=1").unwrap();
+        let (server, sender) = ChannelTransport::new();
+        for c in 0..3 {
+            sender.send(msg(c, 8)).unwrap();
+        }
+        drop(sender);
+        let mut chaos = ChaosTransport::new(server, plan);
+        let far = Instant::now() + std::time::Duration::from_secs(30);
+        // Everything straggled ⇒ a deadline drain times out instantly …
+        assert!(matches!(chaos.recv_deadline(far), RecvOutcome::TimedOut));
+        // … and the late sweep yields all three without blocking.
+        let late: Vec<usize> = std::iter::from_fn(|| chaos.try_recv())
+            .map(|m| m.client_id)
+            .collect();
+        assert_eq!(late, vec![0, 1, 2]);
+
+        // Infinite patience: same stream, stragglers delivered at the end.
+        let (server, sender) = ChannelTransport::new();
+        for c in 0..3 {
+            sender.send(msg(c, 8)).unwrap();
+        }
+        drop(sender);
+        let mut chaos = ChaosTransport::new(server, plan);
+        let got: Vec<usize> = std::iter::from_fn(|| chaos.recv())
+            .map(|m| m.client_id)
+            .collect();
+        assert_eq!(got, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn corruption_is_destructive_and_deterministic() {
+        let plan = FaultPlan::parse("seed=3,corrupt=1").unwrap();
+        let deliver = || {
+            let (server, sender) = ChannelTransport::new();
+            sender.send(msg(0, 32)).unwrap();
+            drop(sender);
+            ChaosTransport::new(server, plan).recv().unwrap()
+        };
+        let a = deliver();
+        let b = deliver();
+        let bytes = |m: &WireMessage| match &m.payload {
+            Payload::Update(enc) => enc.bytes.clone(),
+            Payload::Failed(_) => panic!("corrupt keeps the Update shape"),
+        };
+        assert_eq!(bytes(&a), bytes(&b), "same seed ⇒ same corruption");
+        assert_eq!(bytes(&a).len(), 16, "truncated to half");
+        assert_ne!(bytes(&a), vec![0xAB; 16], "bits actually flipped");
+    }
+
+    #[test]
+    fn flaky_sender_fails_then_recovers_under_retry() {
+        let plan = FaultPlan::parse("seed=9,flaky=1,flaky_sends=2").unwrap();
+        let (mut server, sender) = ChannelTransport::new();
+        let flaky = plan.wrap_sender(sender);
+        // Two raw sends fail, the third lands.
+        assert!(flaky.send(msg(0, 4)).is_err());
+        assert!(flaky.send(msg(0, 4)).is_err());
+        assert!(flaky.send(msg(0, 4)).is_ok());
+        // Retry helper rides out the transient window for a fresh client.
+        let m = WireMessage {
+            client_id: 1,
+            ..msg(1, 4)
+        };
+        send_with_retry(flaky.as_ref(), m, 3, std::time::Duration::ZERO).unwrap();
+        // A different pair with too few attempts exhausts and errors.
+        let m = WireMessage {
+            client_id: 2,
+            ..msg(2, 4)
+        };
+        let err = send_with_retry(flaky.as_ref(), m, 2, std::time::Duration::ZERO).unwrap_err();
+        assert!(err.to_string().contains("after 2 attempts"), "{err}");
+        assert!(plan.exhausts_retries(0, 2, 2));
+        assert!(!plan.exhausts_retries(0, 2, 3));
+        drop(flaky);
+        let delivered: Vec<usize> = std::iter::from_fn(|| server.recv())
+            .map(|m| m.client_id)
+            .collect();
+        assert_eq!(delivered, vec![0, 1]);
     }
 }

@@ -50,6 +50,23 @@ pub struct RoundMetrics {
     /// Which server pipeline produced this round: `"streaming"`
     /// (per-arrival decode→absorb) or `"batch"` (full-round barrier).
     pub pipeline: &'static str,
+    /// Admission/fault accounting from the round's drain — received /
+    /// accepted records plus every rejection class (duplicates, stale
+    /// replays, bad slots, in-band failures, corrupt skips, late
+    /// arrivals, missing slots). All zeros on a clean codec round and for
+    /// the weight-space baselines (which don't drain a transport).
+    pub faults: crate::coordinator::FaultCounters,
+    /// Whether absorbed records met the round-completion quorum. Always
+    /// `true` on an emitted round (a missed quorum aborts the run);
+    /// carried so churn logs state it explicitly.
+    pub quorum_met: bool,
+    /// `true` when the round finished over fewer than the planned K
+    /// records — degraded completion under `--quorum < 1.0`.
+    pub degraded: bool,
+    /// Uplink transport accounting for the round: messages/payload bytes
+    /// handed to senders, messages drained server-side, and total
+    /// send→receive queue latency. Zeros for the weight-space baselines.
+    pub wire: crate::coordinator::TransportStats,
 }
 
 #[derive(Clone, Debug)]
@@ -166,6 +183,37 @@ impl ExperimentResult {
                     )
                     .set("pool_hits", Json::Num(r.pool_hits as f64))
                     .set("pool_misses", Json::Num(r.pool_misses as f64))
+                    .set("quorum_met", Json::Bool(r.quorum_met))
+                    .set("degraded", Json::Bool(r.degraded))
+                    .set("faults", {
+                        let f = &r.faults;
+                        let mut o = Json::obj();
+                        o.set("received", Json::Num(f.received as f64))
+                            .set("accepted", Json::Num(f.accepted as f64))
+                            .set("duplicates", Json::Num(f.duplicates as f64))
+                            .set("stale", Json::Num(f.stale as f64))
+                            .set("bad_slot", Json::Num(f.bad_slot as f64))
+                            .set("failed", Json::Num(f.failed as f64))
+                            .set("corrupt", Json::Num(f.corrupt as f64))
+                            .set("late", Json::Num(f.late as f64))
+                            .set("missing", Json::Num(f.missing as f64));
+                        o
+                    })
+                    .set("wire", {
+                        let w = &r.wire;
+                        let mut o = Json::obj();
+                        o.set("sent_messages", Json::Num(w.sent_messages as f64))
+                            .set(
+                                "sent_payload_bytes",
+                                Json::Num(w.sent_payload_bytes as f64),
+                            )
+                            .set(
+                                "received_messages",
+                                Json::Num(w.received_messages as f64),
+                            )
+                            .set("transit_secs", Json::Num(w.transit_secs));
+                        o
+                    })
                     .set("bpp", Json::Num(r.mean_bpp))
                     .set("loss", Json::Num(r.train_loss))
                     .set(
@@ -217,6 +265,25 @@ mod tests {
             train_loss: 0.5,
             accuracy: acc,
             pipeline: "streaming",
+            faults: crate::coordinator::FaultCounters {
+                received: 12,
+                accepted: 10,
+                duplicates: 1,
+                stale: 1,
+                bad_slot: 0,
+                failed: 0,
+                corrupt: 0,
+                late: 0,
+                missing: 2,
+            },
+            quorum_met: true,
+            degraded: true,
+            wire: crate::coordinator::TransportStats {
+                sent_messages: 12,
+                sent_payload_bytes: 4096,
+                received_messages: 12,
+                transit_secs: 0.25,
+            },
         }
     }
 
@@ -255,5 +322,19 @@ mod tests {
         assert_eq!(per_shard[1].as_f64().unwrap(), 1.25);
         assert_eq!(rounds[0].get("pool_hits").unwrap().as_usize().unwrap(), 11);
         assert_eq!(rounds[0].get("pool_misses").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(rounds[0].get("quorum_met").unwrap().as_bool().unwrap(), true);
+        assert_eq!(rounds[0].get("degraded").unwrap().as_bool().unwrap(), true);
+        let faults = rounds[0].get("faults").unwrap();
+        assert_eq!(faults.get("received").unwrap().as_usize().unwrap(), 12);
+        assert_eq!(faults.get("accepted").unwrap().as_usize().unwrap(), 10);
+        assert_eq!(faults.get("duplicates").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(faults.get("missing").unwrap().as_usize().unwrap(), 2);
+        let wire = rounds[0].get("wire").unwrap();
+        assert_eq!(wire.get("sent_messages").unwrap().as_usize().unwrap(), 12);
+        assert_eq!(
+            wire.get("sent_payload_bytes").unwrap().as_usize().unwrap(),
+            4096
+        );
+        assert_eq!(wire.get("transit_secs").unwrap().as_f64().unwrap(), 0.25);
     }
 }

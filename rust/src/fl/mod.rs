@@ -105,6 +105,30 @@ pub struct ExperimentConfig {
     /// O(rounds). Scheduling only: bitwise identical to the per-round
     /// path at every knob setting (`coordinator::DrainPipeline`).
     pub persistent_pipeline: bool,
+    /// Round-completion quorum (`--quorum Q`, env `DELTAMASK_QUORUM`) as a
+    /// fraction of the planned cohort in (0, 1]. The drain never exits
+    /// early on quorum — it waits for the full cohort, the uplink closing
+    /// or the deadline — but once the round ends, `ceil(Q·K)` absorbed
+    /// updates suffice to finish **degraded** over the survivors instead
+    /// of aborting. 1.0 (the default) is the strict all-K behaviour.
+    pub quorum: f64,
+    /// Per-round drain deadline in milliseconds (`--round-deadline-ms`,
+    /// env `DELTAMASK_ROUND_DEADLINE_MS`); 0 (the default) waits forever.
+    /// On expiry the round finishes if quorum is met, errors otherwise —
+    /// see `coordinator::DrainPolicy`.
+    pub round_deadline_ms: u64,
+    /// What an undecodable record does to the round
+    /// (`--on-decode-error {abort,skip}`, env `DELTAMASK_ON_DECODE_ERROR`):
+    /// `abort` (the default) fails the round on the first decode error;
+    /// `skip` counts the record as corrupt and lets it fall against quorum.
+    pub on_decode_error: crate::coordinator::OnDecodeError,
+    /// Deterministic chaos-injection spec (`--chaos SPEC`, env
+    /// `DELTAMASK_CHAOS`), e.g. `"seed=7,drop=0.1,straggle=0.2"` — parsed
+    /// by `coordinator::FaultPlan::parse`. Empty (the default) runs the
+    /// clean transport; a non-empty spec wraps the uplink in
+    /// `coordinator::ChaosTransport`, with every fault a pure function of
+    /// (seed, round, client), so a faulted run is reproducible in CI.
+    pub chaos: String,
 }
 
 /// Default decode-worker count: `$DELTAMASK_DECODE_WORKERS` when set (CI's
@@ -175,6 +199,74 @@ pub fn persistent_pipeline_from_env() -> bool {
     }
 }
 
+/// Default round-completion quorum: `$DELTAMASK_QUORUM` when set (CI's
+/// knob-matrix `churn` entry runs the suite with `<1.0` plus a seeded
+/// `DELTAMASK_CHAOS` spec so degraded completion is exercised end-to-end),
+/// else 1.0 (strict all-K).
+///
+/// Panics if the variable is set but not a number in (0, 1] — a malformed
+/// value silently falling back to strict would let the CI churn entry pass
+/// while exercising nothing.
+pub fn quorum_from_env() -> f64 {
+    match std::env::var("DELTAMASK_QUORUM") {
+        // Empty means unset (the CI matrix sets every knob key for every
+        // entry, with "" for the knobs an entry doesn't exercise).
+        Ok(v) if v.is_empty() => 1.0,
+        Ok(v) => {
+            let q: f64 = v
+                .parse()
+                .unwrap_or_else(|_| panic!("DELTAMASK_QUORUM must be a number, got '{v}'"));
+            assert!(
+                q > 0.0 && q <= 1.0,
+                "DELTAMASK_QUORUM must be in (0, 1], got '{v}'"
+            );
+            q
+        }
+        Err(_) => 1.0,
+    }
+}
+
+/// Default per-round drain deadline: `$DELTAMASK_ROUND_DEADLINE_MS` when
+/// set, else 0 (wait forever). Panics on a set-but-malformed value — the
+/// same fail-loudly policy as the other CI-gating knobs.
+pub fn round_deadline_ms_from_env() -> u64 {
+    match std::env::var("DELTAMASK_ROUND_DEADLINE_MS") {
+        Ok(v) if v.is_empty() => 0,
+        Ok(v) => v.parse().unwrap_or_else(|_| {
+            panic!("DELTAMASK_ROUND_DEADLINE_MS must be a non-negative integer, got '{v}'")
+        }),
+        Err(_) => 0,
+    }
+}
+
+/// Default decode-error policy: `$DELTAMASK_ON_DECODE_ERROR` when set
+/// (`abort` or `skip`), else abort. Panics on anything else.
+pub fn on_decode_error_from_env() -> crate::coordinator::OnDecodeError {
+    match std::env::var("DELTAMASK_ON_DECODE_ERROR") {
+        Ok(v) if v.is_empty() => crate::coordinator::OnDecodeError::default(),
+        Ok(v) => crate::coordinator::OnDecodeError::parse(&v)
+            .unwrap_or_else(|_| panic!("DELTAMASK_ON_DECODE_ERROR must be abort/skip, got '{v}'")),
+        Err(_) => crate::coordinator::OnDecodeError::default(),
+    }
+}
+
+/// Default chaos spec: `$DELTAMASK_CHAOS` when set (CI's knob-matrix
+/// `churn` entry injects a seeded fault plan under the full scaling
+/// stack), else empty (clean transport). Validated eagerly via
+/// `FaultPlan::parse` so a typo'd spec fails at startup, not as a
+/// mysteriously-clean run.
+pub fn chaos_from_env() -> String {
+    match std::env::var("DELTAMASK_CHAOS") {
+        Ok(v) if v.is_empty() => String::new(),
+        Ok(v) => {
+            crate::coordinator::FaultPlan::parse(&v)
+                .unwrap_or_else(|e| panic!("DELTAMASK_CHAOS is not a valid fault spec: {e}"));
+            v
+        }
+        Err(_) => String::new(),
+    }
+}
+
 impl Default for ExperimentConfig {
     fn default() -> Self {
         Self {
@@ -201,6 +293,10 @@ impl Default for ExperimentConfig {
             decode_workers: decode_workers_from_env(),
             agg_shards: agg_shards_from_env(),
             persistent_pipeline: persistent_pipeline_from_env(),
+            quorum: quorum_from_env(),
+            round_deadline_ms: round_deadline_ms_from_env(),
+            on_decode_error: on_decode_error_from_env(),
+            chaos: chaos_from_env(),
         }
     }
 }
@@ -234,6 +330,28 @@ impl ExperimentConfig {
         let classes = data::profile(&self.dataset).map(|p| p.classes).unwrap_or(100);
         self.arch_override = Some(ArchConfig::new(f, classes, b, 5));
         self
+    }
+
+    /// The round-completion policy the drain runs under, assembled from
+    /// the three fault-tolerance knobs.
+    pub fn drain_policy(&self) -> crate::coordinator::DrainPolicy {
+        crate::coordinator::DrainPolicy {
+            quorum: self.quorum,
+            deadline_ms: self.round_deadline_ms,
+            on_decode_error: self.on_decode_error,
+        }
+    }
+
+    /// The parsed chaos plan, or `None` when the spec is empty / inert
+    /// (all rates zero) — callers skip the `ChaosTransport` wrapper
+    /// entirely in that case so the default path stays byte-for-byte the
+    /// clean transport.
+    pub fn fault_plan(&self) -> Result<Option<crate::coordinator::FaultPlan>> {
+        if self.chaos.is_empty() {
+            return Ok(None);
+        }
+        let plan = crate::coordinator::FaultPlan::parse(&self.chaos)?;
+        Ok(if plan.is_active() { Some(plan) } else { None })
     }
 }
 

@@ -14,14 +14,21 @@ use super::server::MaskServer;
 use super::ExperimentConfig;
 use crate::compress::UpdateCodec;
 use crate::coordinator::{
-    drain_round, ChannelTransport, ClientPool, DrainConfig, DrainPipeline, Payload, PoolStats,
-    RoundEngine, RoundPlan, ScratchPool, ShardedAggregator, WireMessage,
+    drain_round, send_with_retry, ChannelTransport, ChaosTransport, ClientPool, DrainConfig,
+    DrainPipeline, FaultCounters, FaultPlan, Payload, PoolStats, RoundEngine, RoundPlan,
+    ScratchPool, ShardedAggregator, Transport, TransportStats, WireMessage,
 };
 use crate::model::backend::{Backend, FtState, LpState, ModelParams};
 use crate::model::{accuracy, init_params, sample_mask_seeded};
 use crate::util::timer::Stopwatch;
 use anyhow::{anyhow, Result};
 use std::sync::Arc;
+
+/// Client-side uplink send attempts before escalating to an in-band
+/// `Payload::Failed` report. One more than `FaultPlan`'s default
+/// `flaky_sends`, so default-flaky chaos recovers under retry while
+/// `flaky_sends>=3` exercises the escalation path.
+const SEND_ATTEMPTS: u32 = 3;
 
 /// Per-round accounting produced by the server-side drain loop.
 #[derive(Clone, Debug, Default)]
@@ -44,6 +51,14 @@ struct RoundTally {
     pool_hits: u64,
     pool_misses: u64,
     loss: f64,
+    /// Admission/fault accounting from the drain
+    /// (`DrainReport::faults`); all zeros on a clean round.
+    faults: FaultCounters,
+    /// Quorum verdict and degraded-completion flag from the drain.
+    quorum_met: bool,
+    degraded: bool,
+    /// Uplink transport accounting for the round.
+    wire: TransportStats,
 }
 
 pub struct Runner<'a> {
@@ -237,7 +252,11 @@ impl<'a> Runner<'a> {
         let mut rounds = Vec::with_capacity(self.cfg.rounds);
 
         let drain_cfg =
-            DrainConfig::sharded(self.cfg.pipeline, self.cfg.decode_workers, self.cfg.agg_shards);
+            DrainConfig::sharded(self.cfg.pipeline, self.cfg.decode_workers, self.cfg.agg_shards)
+                .with_policy(self.cfg.drain_policy());
+        // Parsed once; `None` (the default) keeps the clean transport with
+        // zero wrapping, so chaos-off runs are byte-for-byte the old path.
+        let fault_plan = self.cfg.fault_plan()?;
         let pipeline = self
             .cfg
             .persistent_pipeline
@@ -257,8 +276,14 @@ impl<'a> Runner<'a> {
                 self.engine
                     .plan(round, &self.server.theta_g, &self.server.s_g),
             );
-            let tally =
-                self.run_round(&plan, &codec, drain_cfg, pipeline.as_ref(), &mut resident_view)?;
+            let tally = self.run_round(
+                &plan,
+                &codec,
+                drain_cfg,
+                fault_plan,
+                pipeline.as_ref(),
+                &mut resident_view,
+            )?;
 
             // Periodic evaluation of the global model.
             let acc = if (round + 1) % self.cfg.eval_every == 0 || round + 1 == self.cfg.rounds
@@ -288,6 +313,10 @@ impl<'a> Runner<'a> {
                 train_loss: tally.loss / kf,
                 accuracy: acc,
                 pipeline: self.cfg.pipeline.as_str(),
+                faults: tally.faults,
+                quorum_met: tally.quorum_met,
+                degraded: tally.degraded,
+                wire: tally.wire,
             });
         }
         // Retire the resident view: the full stitch (incl. pseudo-counts)
@@ -308,6 +337,7 @@ impl<'a> Runner<'a> {
         plan: &Arc<RoundPlan>,
         codec: &Arc<dyn UpdateCodec>,
         drain_cfg: DrainConfig,
+        fault_plan: Option<FaultPlan>,
         pipeline: Option<&DrainPipeline>,
         resident_view: &mut Option<ShardedAggregator<MaskServer>>,
     ) -> Result<RoundTally> {
@@ -331,7 +361,19 @@ impl<'a> Runner<'a> {
             items.push((id, sess));
         }
 
-        let (mut channel, sender) = ChannelTransport::new();
+        let (channel, sender) = ChannelTransport::new();
+        // Chaos injection wraps both ends when a plan is active: the
+        // sender so flaky pairs exercise the retry path, the receiver so
+        // drop/duplicate/reorder/corrupt/straggle/die fire on delivery.
+        // With no plan both ends are exactly the clean transport.
+        let sender = match fault_plan {
+            Some(p) => p.wrap_sender(sender),
+            None => sender,
+        };
+        let mut transport: Box<dyn Transport> = match fault_plan {
+            Some(p) => Box::new(ChaosTransport::new(channel, p)),
+            None => Box::new(channel),
+        };
         let job = move |slot: usize, id: usize, sess: &mut ClientSession| -> Result<()> {
             match client_round(
                 backend,
@@ -345,10 +387,27 @@ impl<'a> Runner<'a> {
                 sess,
             ) {
                 Ok(msg) => {
-                    // A send failure only means the server already aborted
-                    // the round (receiver dropped); its error is the root
-                    // cause, so don't manufacture a client error here.
-                    let _ = sender.send(msg);
+                    // Bounded retry rides out transient send failures; on
+                    // exhaustion escalate with an in-band failure report so
+                    // the server hears about the loss instead of waiting on
+                    // the slot. If even that send fails, the server already
+                    // aborted the round (receiver dropped) and its error is
+                    // the root cause — no client error is manufactured.
+                    if let Err(e) = send_with_retry(
+                        sender.as_ref(),
+                        msg,
+                        SEND_ATTEMPTS,
+                        std::time::Duration::from_millis(1),
+                    ) {
+                        let _ = sender.send(WireMessage {
+                            round,
+                            client_id: id,
+                            slot,
+                            enc_secs: 0.0,
+                            loss: 0.0,
+                            payload: Payload::Failed(format!("client {id}: {e}")),
+                        });
+                    }
                     Ok(())
                 }
                 Err(e) => {
@@ -381,7 +440,7 @@ impl<'a> Runner<'a> {
                 match (pipeline, resident_view.as_mut()) {
                     (Some(pipe), Some(view)) => {
                         let lanes_before = view.lane_pool_stats();
-                        let report = pipe.drain_round(&mut channel, plan, codec, view)?;
+                        let report = pipe.drain_round(&mut *transport, plan, codec, view)?;
                         let lane_pool = view.lane_pool_stats().delta_since(lanes_before);
                         server.sync_from_shards(view);
                         (
@@ -392,13 +451,13 @@ impl<'a> Runner<'a> {
                         )
                     }
                     (Some(pipe), None) => {
-                        let report = pipe.drain_round(&mut channel, plan, codec, server)?;
+                        let report = pipe.drain_round(&mut *transport, plan, codec, server)?;
                         (report, 1, Vec::new(), PoolStats::default())
                     }
                     (None, _) if drain_cfg.resolved_shards() > 1 => {
                         let mut view = server.shard_view(drain_cfg.resolved_shards());
                         let report = drain_round(
-                            &mut channel,
+                            &mut *transport,
                             plan,
                             codec_ref,
                             &mut view,
@@ -413,7 +472,7 @@ impl<'a> Runner<'a> {
                     }
                     (None, _) => {
                         let report = drain_round(
-                            &mut channel,
+                            &mut *transport,
                             plan,
                             codec_ref,
                             server,
@@ -429,10 +488,11 @@ impl<'a> Runner<'a> {
             let pool = report.pool.merged(lane_pool);
             let enc_secs = report.total_enc_secs();
             let loss = report.total_loss();
+            let wire = transport.stats();
             Ok(RoundTally {
                 // Exact byte accounting from the transport (integer-valued,
                 // so order-independent).
-                bits: channel.stats().sent_payload_bytes as f64 * 8.0,
+                bits: wire.sent_payload_bytes as f64 * 8.0,
                 enc_secs,
                 dec_secs: report.dec_secs,
                 dec_by_worker: report.dec_by_worker,
@@ -441,15 +501,23 @@ impl<'a> Runner<'a> {
                 pool_hits: pool.hits,
                 pool_misses: pool.misses,
                 loss,
+                faults: report.faults,
+                quorum_met: report.quorum_met,
+                degraded: report.degraded,
+                wire,
             })
         };
 
         let pool = ClientPool::sized_for(expected);
         let (finished, tally) = pool.run_with_server(items, job, server_loop);
 
-        // Return sessions to their slots. Error priority: a genuine client
-        // failure (the root cause behind a server-side "client X failed"
-        // bail) wins; otherwise the drain loop's own error surfaces.
+        // Return sessions to their slots. Error priority: when the drain
+        // itself failed, a genuine client failure (the root cause behind a
+        // server-side shortfall) wins over the drain's own error. When the
+        // drain *succeeded* — a relaxed quorum absorbed the loss — client
+        // errors are not fatal: they are already accounted in the round's
+        // fault counters (`failed`/`missing`), which is the whole point of
+        // degraded completion.
         let mut client_err: Option<anyhow::Error> = None;
         for (id, sess, out) in finished {
             if let Some(sess) = sess {
@@ -461,10 +529,10 @@ impl<'a> Runner<'a> {
                 }
             }
         }
-        if let Some(e) = client_err {
-            return Err(e);
+        match (tally, client_err) {
+            (Err(_), Some(e)) => Err(e),
+            (other, _) => other,
         }
-        tally
     }
 
     /// Evaluate the global model with the posterior-mean (expected) mask
@@ -605,6 +673,10 @@ impl<'a> Runner<'a> {
                 train_loss: loss / participants.len() as f64,
                 accuracy: acc,
                 pipeline: self.cfg.pipeline.as_str(),
+                faults: FaultCounters::default(),
+                quorum_met: true,
+                degraded: false,
+                wire: TransportStats::default(),
             });
         }
         Ok(self.result(rounds, sw.elapsed_secs()))
@@ -704,6 +776,10 @@ impl<'a> Runner<'a> {
                 train_loss: loss / participants.len() as f64,
                 accuracy: acc,
                 pipeline: self.cfg.pipeline.as_str(),
+                faults: FaultCounters::default(),
+                quorum_met: true,
+                degraded: false,
+                wire: TransportStats::default(),
             });
         }
         Ok(self.result(rounds, sw.elapsed_secs()))

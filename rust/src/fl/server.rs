@@ -160,17 +160,41 @@ impl MaskServer {
 
     /// Close the round: refresh θ_g / s_g from the absorbed updates and
     /// advance the round counter. Panics if updates announced by
-    /// `begin_round` never arrived.
+    /// `begin_round` never arrived — use
+    /// [`MaskServer::finish_round_partial`] for a quorum-degraded round.
     pub fn finish_round(&mut self) {
-        let stream = self
+        self.finish_stream(false);
+    }
+
+    /// Close a **degraded** round: refresh global state from however many
+    /// updates were actually absorbed (a quorum of the planned K, enforced
+    /// upstream by the drain's completion policy).
+    ///
+    /// * **Mask family** — the Eq. 3 posterior mode is computed from the
+    ///   pseudo-counts of whoever reported; FedPM's Bayesian aggregation is
+    ///   defined over the observed cohort, so nothing else changes.
+    /// * **Delta family** — a missing participant contributes an implicit
+    ///   zero delta: FedAvg keeps dividing by the *planned* K, and any
+    ///   decoded deltas still held in the reorder window behind a missing
+    ///   slot are flushed in ascending slot order (keeping the arithmetic
+    ///   sequence deterministic and arrival-order invariant).
+    pub fn finish_round_partial(&mut self) {
+        self.finish_stream(true);
+    }
+
+    fn finish_stream(&mut self, allow_partial: bool) {
+        let mut stream = self
             .stream
             .take()
             .expect("MaskServer::finish_round called before begin_round");
-        assert_eq!(
-            stream.absorbed, stream.expected,
-            "finish_round with {}/{} updates absorbed",
-            stream.absorbed, stream.expected
-        );
+        if !allow_partial {
+            assert_eq!(
+                stream.absorbed, stream.expected,
+                "finish_round with {}/{} updates absorbed",
+                stream.absorbed, stream.expected
+            );
+            debug_assert!(stream.reorder.is_empty());
+        }
         match stream.family {
             Some(Family::Mask) => {
                 for i in 0..self.theta_g.len() {
@@ -186,7 +210,16 @@ impl MaskServer {
                 self.refresh_scores();
             }
             Some(Family::Delta) => {
-                debug_assert!(stream.reorder.is_empty());
+                // Flush deltas held behind slots that never arrived
+                // (ascending slot order, /K with the planned K — the
+                // missing slots' implicit zero deltas need no arithmetic).
+                let k = stream.expected as f32;
+                for (_, next) in std::mem::take(&mut stream.reorder) {
+                    for i in 0..self.s_g.len() {
+                        self.s_g[i] += next[i] / k;
+                    }
+                    self.spent.push(next);
+                }
                 theta_from_scores(&self.s_g, &mut self.theta_g);
             }
             // A zero-participant round leaves the global state untouched.
@@ -359,6 +392,10 @@ impl crate::coordinator::Aggregator for MaskServer {
 
     fn finish_round(&mut self) {
         MaskServer::finish_round(self);
+    }
+
+    fn finish_round_partial(&mut self) {
+        MaskServer::finish_round_partial(self);
     }
 
     fn reclaim_buffer(&mut self) -> Option<Vec<f32>> {
@@ -566,6 +603,40 @@ mod tests {
         srv.begin_round(2);
         srv.absorb(0, Update::Mask(vec![1.0, 0.0]));
         srv.finish_round();
+    }
+
+    #[test]
+    fn partial_finish_mask_family_aggregates_the_survivors() {
+        let mut srv = MaskServer::new(2, 1.0);
+        srv.begin_round(3);
+        srv.absorb(0, Update::Mask(vec![1.0, 0.0]));
+        srv.absorb(2, Update::Mask(vec![1.0, 1.0]));
+        // Slot 1 never reports: the posterior mode is over who showed up.
+        srv.finish_round_partial();
+        assert_eq!(srv.theta_g, vec![0.99, 0.5]);
+        assert_eq!(srv.round, 1);
+    }
+
+    #[test]
+    fn partial_finish_flushes_delta_reorder_window_with_implicit_zeros() {
+        let mut srv = MaskServer::new(2, 1.0);
+        srv.begin_round(3);
+        // Slot 0 never arrives, so both deltas are held by the reorder
+        // window until the partial finish flushes them in slot order.
+        srv.absorb(2, Update::ScoreDelta(vec![3.0, 0.0]));
+        srv.absorb(1, Update::ScoreDelta(vec![0.0, 3.0]));
+        assert!(srv.take_spent().is_none(), "held behind the missing slot");
+        srv.finish_round_partial();
+        // FedAvg over the planned K = 3: the missing slot is a zero delta.
+        assert_eq!(srv.s_g, vec![1.0, 1.0]);
+        // A degraded run matches a clean run over exactly that cohort.
+        let mut clean = MaskServer::new(2, 1.0);
+        clean.begin_round(3);
+        clean.absorb(1, Update::ScoreDelta(vec![0.0, 3.0]));
+        clean.absorb(2, Update::ScoreDelta(vec![3.0, 0.0]));
+        clean.finish_round_partial();
+        assert_eq!(srv.s_g, clean.s_g);
+        assert_eq!(srv.theta_g, clean.theta_g);
     }
 
     /// Random rounds for `rounds` iterations of `family`, aggregated

@@ -14,6 +14,10 @@
 //!   deltamask train --agg-shards 4   (shard aggregation by dimension; 0 = cores)
 //!   deltamask train --persistent-pipeline --decode-workers 4 --agg-shards 4
 //!       (round-resident workers/lanes/pools: spawn once, park between rounds)
+//!   deltamask train --quorum 0.8 --round-deadline-ms 5000 --on-decode-error skip
+//!       (fault-tolerant completion: finish degraded over ⌈0.8·K⌉ survivors)
+//!   deltamask train --chaos seed=7,drop=0.1,straggle=0.2 --quorum 0.6
+//!       (deterministic churn injection — same seed, same faults, every run)
 //!   deltamask sweep --datasets cifar10,svhn --methods deltamask,fedpm
 //!   deltamask filters --entries 100000
 //!
@@ -22,9 +26,10 @@
 //! docs/SCALING.md.
 
 use deltamask::bench::Table;
-use deltamask::coordinator::PipelineMode;
+use deltamask::coordinator::{FaultPlan, OnDecodeError, PipelineMode};
 use deltamask::fl::{
-    agg_shards_from_env, decode_workers_from_env, persistent_pipeline_from_env, run_experiment,
+    agg_shards_from_env, chaos_from_env, decode_workers_from_env, on_decode_error_from_env,
+    persistent_pipeline_from_env, quorum_from_env, round_deadline_ms_from_env, run_experiment,
     BackendKind, ExperimentConfig, HeadInit,
 };
 use deltamask::util::cli::Args;
@@ -62,7 +67,31 @@ fn parse_cfg(args: &Args) -> ExperimentConfig {
         decode_workers: args.usize("decode-workers", decode_workers_from_env()),
         agg_shards: args.usize("agg-shards", agg_shards_from_env()),
         persistent_pipeline: args.flag("persistent-pipeline") || persistent_pipeline_from_env(),
+        quorum: args.f64("quorum", quorum_from_env()),
+        round_deadline_ms: args.u64("round-deadline-ms", round_deadline_ms_from_env()),
+        on_decode_error: OnDecodeError::parse(args.choice(
+            "on-decode-error",
+            &["abort", "skip"],
+            on_decode_error_from_env().as_str(),
+        ))
+        .expect("choice() already validated the value"),
+        chaos: args
+            .get("chaos")
+            .map(|s| s.to_string())
+            .unwrap_or_else(chaos_from_env),
     };
+    assert!(
+        cfg.quorum > 0.0 && cfg.quorum <= 1.0,
+        "--quorum must be in (0, 1], got {}",
+        cfg.quorum
+    );
+    // Validate the chaos spec at startup — a typo'd spec must fail loudly,
+    // not silently run a different scenario than asked.
+    if !cfg.chaos.is_empty() {
+        if let Err(e) = FaultPlan::parse(&cfg.chaos) {
+            panic!("--chaos spec invalid: {e}");
+        }
+    }
     if let Some(w) = args.get("width") {
         let w: usize = w.parse().expect("--width must be an integer");
         cfg = cfg.miniaturize(w, args.usize("batch", 8));
@@ -73,7 +102,7 @@ fn parse_cfg(args: &Args) -> ExperimentConfig {
 fn cmd_train(args: &Args) -> anyhow::Result<()> {
     let cfg = parse_cfg(args);
     eprintln!(
-        "training: method={} dataset={} arch={} d={} N={} R={} rho={} alpha={} backend={:?} pipeline={} decode_workers={} agg_shards={} persistent_pipeline={}",
+        "training: method={} dataset={} arch={} d={} N={} R={} rho={} alpha={} backend={:?} pipeline={} decode_workers={} agg_shards={} persistent_pipeline={} quorum={} round_deadline_ms={} on_decode_error={} chaos={}",
         cfg.method,
         cfg.dataset,
         cfg.arch,
@@ -86,7 +115,11 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         cfg.pipeline.as_str(),
         cfg.decode_workers,
         cfg.agg_shards,
-        cfg.persistent_pipeline
+        cfg.persistent_pipeline,
+        cfg.quorum,
+        cfg.round_deadline_ms,
+        cfg.on_decode_error.as_str(),
+        if cfg.chaos.is_empty() { "off" } else { &cfg.chaos }
     );
     let res = run_experiment(&cfg)?;
     for r in &res.rounds {

@@ -44,6 +44,13 @@ fn base_cfg() -> ExperimentConfig {
         decode_workers: deltamask::fl::decode_workers_from_env(),
         agg_shards: deltamask::fl::agg_shards_from_env(),
         persistent_pipeline: deltamask::fl::persistent_pipeline_from_env(),
+        // The churn knob-matrix entry additionally sets DELTAMASK_CHAOS +
+        // DELTAMASK_QUORUM, so the whole suite runs under seeded faults
+        // with degraded completion allowed.
+        quorum: deltamask::fl::quorum_from_env(),
+        round_deadline_ms: deltamask::fl::round_deadline_ms_from_env(),
+        on_decode_error: deltamask::fl::on_decode_error_from_env(),
+        chaos: deltamask::fl::chaos_from_env(),
     }
 }
 
