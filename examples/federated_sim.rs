@@ -47,6 +47,7 @@ fn main() -> anyhow::Result<()> {
         round_deadline_ms: deltamask::fl::round_deadline_ms_from_env(),
         on_decode_error: deltamask::fl::on_decode_error_from_env(),
         chaos: deltamask::fl::chaos_from_env(),
+        transport: deltamask::fl::transport_from_env(),
     };
 
     let split = if noniid { "non-IID Dir(0.1)" } else { "IID Dir(10)" };

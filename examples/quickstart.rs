@@ -44,6 +44,7 @@ fn main() -> anyhow::Result<()> {
         round_deadline_ms: 0,              // no drain deadline
         on_decode_error: Default::default(), // abort on undecodable records
         chaos: String::new(),              // clean transport
+        transport: Default::default(),     // in-process channel uplink
     };
 
     println!(

@@ -14,7 +14,13 @@
 //!   in-process [`ChannelTransport`] used by simulations. Messages carry
 //!   [`Encoded`](crate::compress::Encoded) payloads plus per-message byte
 //!   and queue-latency accounting, replacing the old ad-hoc
-//!   `ClientRoundOutput` plumbing.
+//!   `ClientRoundOutput` plumbing. The networked implementation is
+//!   [`transport::socket`]: a length-prefixed framed transport over
+//!   TCP / Unix-domain sockets with bounded-admission backpressure and
+//!   session-multiplexed connections — [`SocketHub`] wires it loopback
+//!   in-process (`--transport tcp|uds`), [`FleetServer`]/[`FleetLink`]
+//!   run coordinator and client fleet as separate OS processes
+//!   (`deltamask serve` / `deltamask client-fleet`).
 //! * [`aggregate`] — the server-side drain loop ([`drain_round`]) over an
 //!   [`Aggregator`] sink: per-arrival decode→absorb in streaming mode, the
 //!   old full-round barrier in batch mode, with deterministic per-slot
@@ -95,6 +101,10 @@ pub use shard::{shard_bounds, ShardRouter, ShardedAggregator};
 pub use crate::compress::{PoolStats, ScratchPool};
 pub use pool::ClientPool;
 pub use round::{RoundEngine, RoundPlan};
+pub use transport::socket::{
+    ConfigFingerprint, ControlMsg, FleetLink, FleetServer, Listener, PlanWire, SocketAddrSpec,
+    SocketConfig, SocketHub, SocketTransport, TransportKind,
+};
 pub use transport::{
     send_with_retry, ChannelTransport, ChaosTransport, FaultPlan, FaultVerdict, Payload,
     RecvOutcome, Transport, TransportSender, TransportStats, WireMessage,

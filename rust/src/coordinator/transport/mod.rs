@@ -16,6 +16,14 @@
 //! arrival order. [`send_with_retry`] gives the client send path bounded
 //! retry-with-backoff against transient failures (injectable via
 //! [`FaultPlan::flaky`] + [`FaultPlan::wrap_sender`]).
+//!
+//! The networked implementation lives in [`socket`]: a length-prefixed
+//! framed transport over TCP / Unix-domain sockets with bounded inbound
+//! admission (real backpressure) and session-multiplexed connections.
+//! Because [`ChaosTransport`] wraps any [`Transport`], the whole fault
+//! model composes onto the socket unchanged.
+
+pub mod socket;
 
 use crate::compress::Encoded;
 use anyhow::{anyhow, bail, Result};
@@ -59,7 +67,8 @@ impl WireMessage {
 /// Aggregate transport accounting.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct TransportStats {
-    /// Messages handed to the sender side.
+    /// Messages handed to the sender side (for socket transports: data
+    /// messages that arrived intact at the coordinator's reader).
     pub sent_messages: u64,
     /// Sum of payload bytes handed to the sender side.
     pub sent_payload_bytes: u64,
@@ -67,6 +76,33 @@ pub struct TransportStats {
     pub received_messages: u64,
     /// Total send→receive queue latency over drained messages.
     pub transit_secs: f64,
+    /// Frames read off socket connections, control frames included.
+    /// Zero for the in-process channel (it has no frames).
+    pub wire_frames: u64,
+    /// Framed bytes (headers + payloads) read off socket connections.
+    pub wire_bytes: u64,
+    /// Times a connection reader blocked on admission because the global
+    /// inbound budget or its per-connection budget was full — each stall
+    /// propagates flow control to the sender through the kernel socket
+    /// buffer instead of buffering unboundedly.
+    pub backpressure_stalls: u64,
+}
+
+impl TransportStats {
+    /// Counter difference `self − before`, for per-round accounting over a
+    /// transport that persists across rounds (the per-round channel
+    /// transport starts from zero; a long-lived socket does not).
+    pub fn delta_since(&self, before: &TransportStats) -> TransportStats {
+        TransportStats {
+            sent_messages: self.sent_messages - before.sent_messages,
+            sent_payload_bytes: self.sent_payload_bytes - before.sent_payload_bytes,
+            received_messages: self.received_messages - before.received_messages,
+            transit_secs: self.transit_secs - before.transit_secs,
+            wire_frames: self.wire_frames - before.wire_frames,
+            wire_bytes: self.wire_bytes - before.wire_bytes,
+            backpressure_stalls: self.backpressure_stalls - before.backpressure_stalls,
+        }
+    }
 }
 
 /// Client-side handle. Cheap to clone; every worker thread owns one.
@@ -101,6 +137,16 @@ pub trait Transport {
 
     /// Next message, abandoning the wait at `deadline`.
     ///
+    /// Outcome precedence is part of the trait contract and must be
+    /// transport-independent, or `DrainPolicy`'s deadline sweep would
+    /// classify the same scenario differently per transport:
+    /// `Msg` > `Closed` > `TimedOut`. Concretely, when the deadline
+    /// expires in the same instant the last sender drops, a buffered
+    /// message is still delivered, and an empty closed uplink reports
+    /// `Closed` — never `TimedOut` — so the gate counts the shortfall as
+    /// `missing` senders rather than waiting on a wire that can no longer
+    /// speak.
+    ///
     /// The default implementation has infinite patience (it ignores the
     /// deadline and blocks until a message arrives or the uplink closes);
     /// transports that can time out should override it.
@@ -119,7 +165,39 @@ pub trait Transport {
         None
     }
 
+    /// Drop any undelivered in-flight state (chaos holds, straggler
+    /// queues) without counting it received. Round-persistent transports
+    /// call this between rounds so leftover duplicates from round `r`
+    /// can't surface as `stale` in round `r+1` — the per-round channel
+    /// transport gets the same effect by being dropped. Default: no-op.
+    fn discard_inflight(&mut self) {}
+
     fn stats(&self) -> TransportStats;
+}
+
+/// Forwarding impl so a type-erased uplink (channel or socket, chosen at
+/// runtime) can still be wrapped by generic adapters like
+/// [`ChaosTransport`].
+impl Transport for Box<dyn Transport> {
+    fn recv(&mut self) -> Option<WireMessage> {
+        (**self).recv()
+    }
+
+    fn recv_deadline(&mut self, deadline: Instant) -> RecvOutcome {
+        (**self).recv_deadline(deadline)
+    }
+
+    fn try_recv(&mut self) -> Option<WireMessage> {
+        (**self).try_recv()
+    }
+
+    fn discard_inflight(&mut self) {
+        (**self).discard_inflight()
+    }
+
+    fn stats(&self) -> TransportStats {
+        (**self).stats()
+    }
 }
 
 struct Stamped {
@@ -203,7 +281,16 @@ impl Transport for ChannelTransport {
         let wait = deadline.saturating_duration_since(Instant::now());
         match self.rx.recv_timeout(wait) {
             Ok(stamped) => RecvOutcome::Msg(self.absorb(stamped)),
-            Err(mpsc::RecvTimeoutError::Timeout) => RecvOutcome::TimedOut,
+            // `recv_timeout` reports Timeout even when the senders are
+            // already gone (it only notices the disconnect while waiting).
+            // Re-poll so a sender dropping exactly at the deadline yields
+            // `Closed`, upholding the trait's Msg > Closed > TimedOut
+            // ordering that the socket transport also implements.
+            Err(mpsc::RecvTimeoutError::Timeout) => match self.rx.try_recv() {
+                Ok(stamped) => RecvOutcome::Msg(self.absorb(stamped)),
+                Err(mpsc::TryRecvError::Disconnected) => RecvOutcome::Closed,
+                Err(mpsc::TryRecvError::Empty) => RecvOutcome::TimedOut,
+            },
             Err(mpsc::RecvTimeoutError::Disconnected) => RecvOutcome::Closed,
         }
     }
@@ -221,6 +308,8 @@ impl Transport for ChannelTransport {
             sent_payload_bytes: self.counters.payload_bytes.load(Ordering::Relaxed),
             received_messages: self.received,
             transit_secs: self.transit_secs,
+            // The channel has no frames and never blocks admission.
+            ..TransportStats::default()
         }
     }
 }
@@ -568,6 +657,13 @@ impl<T: Transport> Transport for ChaosTransport<T> {
         }
     }
 
+    fn discard_inflight(&mut self) {
+        self.pending.clear();
+        self.held = None;
+        self.straggled.clear();
+        self.inner.discard_inflight();
+    }
+
     fn stats(&self) -> TransportStats {
         self.inner.stats()
     }
@@ -726,6 +822,34 @@ mod tests {
         assert!(matches!(server.recv_deadline(far), RecvOutcome::Closed));
     }
 
+    /// The trait's Msg > Closed > TimedOut contract at the razor's edge:
+    /// senders gone and the deadline already expired must read as Closed
+    /// (nothing can ever arrive), and a buffered message beats both.
+    #[test]
+    fn recv_deadline_prefers_msg_then_closed_over_timeout() {
+        // Expired deadline + closed empty uplink ⇒ Closed, not TimedOut.
+        let (mut server, sender) = ChannelTransport::new();
+        drop(sender);
+        let past = Instant::now() - std::time::Duration::from_millis(1);
+        assert!(matches!(server.recv_deadline(past), RecvOutcome::Closed));
+
+        // Expired deadline + buffered message ⇒ the message still lands.
+        let (mut server, sender) = ChannelTransport::new();
+        sender.send(msg(4, 8)).unwrap();
+        drop(sender);
+        let past = Instant::now() - std::time::Duration::from_millis(1);
+        match server.recv_deadline(past) {
+            RecvOutcome::Msg(m) => assert_eq!(m.slot, 4),
+            other => panic!("expected Msg, got {other:?}"),
+        }
+        assert!(matches!(server.recv_deadline(past), RecvOutcome::Closed));
+
+        // Expired deadline + live sender, nothing queued ⇒ TimedOut.
+        let (mut server, _sender) = ChannelTransport::new();
+        let past = Instant::now() - std::time::Duration::from_millis(1);
+        assert!(matches!(server.recv_deadline(past), RecvOutcome::TimedOut));
+    }
+
     #[test]
     fn try_recv_polls_without_blocking() {
         let (mut server, sender) = ChannelTransport::new();
@@ -831,6 +955,25 @@ mod tests {
             .map(|m| m.client_id)
             .collect();
         assert_eq!(got, vec![0, 1, 2]);
+    }
+
+    /// Between-rounds hygiene for round-persistent transports: discarding
+    /// in-flight chaos state drops undelivered stragglers/holds without
+    /// counting them, exactly like dropping a per-round channel would.
+    #[test]
+    fn discard_inflight_clears_chaos_holds() {
+        let plan = FaultPlan::parse("seed=5,straggle=1").unwrap();
+        let (server, sender) = ChannelTransport::new();
+        for c in 0..3 {
+            sender.send(msg(c, 8)).unwrap();
+        }
+        drop(sender);
+        let mut chaos = ChaosTransport::new(server, plan);
+        let far = Instant::now() + std::time::Duration::from_secs(30);
+        assert!(matches!(chaos.recv_deadline(far), RecvOutcome::TimedOut));
+        chaos.discard_inflight();
+        assert!(chaos.try_recv().is_none(), "stragglers discarded");
+        assert!(chaos.recv().is_none(), "uplink reads closed afterwards");
     }
 
     #[test]

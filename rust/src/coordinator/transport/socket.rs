@@ -1,0 +1,1562 @@
+//! Networked uplink: a length-prefixed framed transport over TCP and
+//! Unix-domain sockets implementing [`Transport`]/[`TransportSender`].
+//!
+//! ## Frame format
+//!
+//! Every frame is a 16-byte little-endian header followed by `len` payload
+//! bytes:
+//!
+//! ```text
+//! offset  size  field
+//!      0     4  magic  "DMW1"
+//!      4     1  version (1)
+//!      5     1  kind    (1=Update 2=Failed 3=Hello 4=Plan 5=EndOfRound 6=Shutdown)
+//!      6     2  reserved, must be zero
+//!      8     4  session — logical client id for data frames; this is what
+//!               lets M OS connections carry K ≫ M multiplexed clients
+//!     12     4  len     — payload bytes, ≤ the configured max frame size
+//! ```
+//!
+//! Decode is *total*: [`parse_header`]/[`parse_frame`] are bounds-checked
+//! pure functions over byte slices that return errors, never panic, for
+//! any input. A frame whose header is valid but whose payload is garbage
+//! is skipped (the length keeps the stream in sync) and counted; a frame
+//! whose header is invalid kills the connection (a length-prefixed stream
+//! cannot resync after a bogus length), surfacing as missing senders in
+//! the drain. Garbage *codec* bytes inside a structurally-valid `Update`
+//! flow through to the round gate, where they fail the codecs'
+//! bounds-checked decode and count as `FaultCounters.corrupt` — exactly
+//! like chaos-injected corruption.
+//!
+//! ## Backpressure
+//!
+//! Each connection gets a dedicated reader thread feeding one bounded
+//! inbound queue. Admission enforces a global byte budget plus a
+//! per-connection byte budget; a reader whose frame does not fit *blocks*
+//! (counted in [`TransportStats::backpressure_stalls`]) instead of
+//! buffering, so the kernel socket buffer fills and flow control
+//! propagates to the client's `send` — a slow coordinator slows the fleet
+//! down rather than OOMing. One frame per connection always makes
+//! progress even when it alone exceeds a budget, so oversized-but-legal
+//! frames cannot deadlock admission.
+//!
+//! ## Lifecycles
+//!
+//! Two wirings share all of the above:
+//!
+//! * **Loopback** ([`SocketHub`]): one experiment binds once, each round
+//!   connects a fresh set of M connections. Dropping the round's last
+//!   sender closes the sockets, the readers see EOF and the transport
+//!   reports `Closed` — the exact semantics of the per-round
+//!   [`ChannelTransport`], which is what makes channel↔socket trajectory
+//!   identity hold by construction.
+//! * **Two-process** ([`FleetServer`]/[`FleetLink`]): connections persist
+//!   across rounds, so closure is protocol-level instead: the fleet marks
+//!   each connection with an `EndOfRound` frame after its round's sends,
+//!   and the server's between-rounds [`FleetServer::end_round`] waits for
+//!   those marks while discarding whatever the drain left unread —
+//!   the per-round accounting a dropped channel would have produced.
+//!
+//! [`ChannelTransport`]: super::ChannelTransport
+
+use super::{Counters, Payload, RecvOutcome, Transport, TransportSender, TransportStats, WireMessage};
+use crate::compress::Encoded;
+use crate::coordinator::round::RoundPlan;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::VecDeque;
+use std::io::{self, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+/// Which uplink implementation an experiment runs on.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum TransportKind {
+    /// In-process mpsc channel (the simulation default).
+    #[default]
+    Channel,
+    /// Framed TCP socket (loopback in-process, or `serve`/`client-fleet`).
+    Tcp,
+    /// Framed Unix-domain socket.
+    Uds,
+}
+
+impl TransportKind {
+    /// Parse `channel` / `tcp` / `uds` (alias `unix`). `None` on anything
+    /// else so config layers can fail loudly with their own message.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.trim() {
+            "channel" => Some(Self::Channel),
+            "tcp" => Some(Self::Tcp),
+            "uds" | "unix" => Some(Self::Uds),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Self::Channel => "channel",
+            Self::Tcp => "tcp",
+            Self::Uds => "uds",
+        }
+    }
+}
+
+/// Admission budgets and the frame-size cap.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SocketConfig {
+    /// Hard per-frame payload cap; a header announcing more is treated as
+    /// stream corruption (connection-fatal).
+    pub max_frame: usize,
+    /// Global bound on queued inbound bytes across all connections.
+    pub inbound_budget: usize,
+    /// Per-connection bound on queued inbound bytes.
+    pub conn_budget: usize,
+}
+
+impl Default for SocketConfig {
+    fn default() -> Self {
+        Self {
+            max_frame: 64 << 20,
+            inbound_budget: 8 << 20,
+            conn_budget: 2 << 20,
+        }
+    }
+}
+
+impl SocketConfig {
+    /// Read `DELTAMASK_MAX_FRAME_BYTES` / `DELTAMASK_INBOUND_BUDGET_BYTES`
+    /// / `DELTAMASK_CONN_BUDGET_BYTES`. Empty or unset keeps the default;
+    /// malformed values panic loudly rather than silently running a
+    /// different configuration than asked.
+    pub fn from_env() -> Self {
+        fn knob(name: &str, default: usize) -> usize {
+            match std::env::var(name) {
+                Ok(v) if v.is_empty() => default,
+                Ok(v) => v
+                    .parse()
+                    .unwrap_or_else(|_| panic!("{name} must be a byte count, got `{v}`")),
+                Err(_) => default,
+            }
+        }
+        let d = Self::default();
+        Self {
+            max_frame: knob("DELTAMASK_MAX_FRAME_BYTES", d.max_frame),
+            inbound_budget: knob("DELTAMASK_INBOUND_BUDGET_BYTES", d.inbound_budget),
+            conn_budget: knob("DELTAMASK_CONN_BUDGET_BYTES", d.conn_budget),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Frame codec — total, bounds-checked, pure.
+// ---------------------------------------------------------------------------
+
+pub const MAGIC: [u8; 4] = *b"DMW1";
+pub const VERSION: u8 = 1;
+pub const HEADER_LEN: usize = 16;
+
+const K_UPDATE: u8 = 1;
+const K_FAILED: u8 = 2;
+const K_HELLO: u8 = 3;
+const K_PLAN: u8 = 4;
+const K_EOR: u8 = 5;
+const K_SHUTDOWN: u8 = 6;
+
+/// A validated frame header.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FrameHeader {
+    pub kind: u8,
+    pub session: u32,
+    pub len: usize,
+}
+
+/// Decoded frame payload.
+#[derive(Clone, Debug)]
+pub enum FrameBody {
+    /// An uplink data record (`Update` or in-band `Failed`).
+    Msg(WireMessage),
+    /// Fleet handshake: connection identity plus a config fingerprint.
+    Hello(Hello),
+    /// Downlink round broadcast (raw; the mask is re-derived locally).
+    Plan(PlanWire),
+    /// The sending side has no more data frames for `round`.
+    EndOfRound(u64),
+    /// The experiment is over; the fleet should exit cleanly.
+    Shutdown,
+}
+
+/// Fleet handshake record. The fingerprint catches the deadliest two-process
+/// operator error — `serve` and `client-fleet` launched with different
+/// experiment configs — before a single round runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Hello {
+    pub conn_index: u32,
+    pub conns_total: u32,
+    pub fingerprint: ConfigFingerprint,
+}
+
+/// The config facts both processes must agree on for lockstep trajectories.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ConfigFingerprint {
+    pub seed: u64,
+    pub n_clients: u64,
+    pub rounds: u64,
+    pub d: u64,
+}
+
+/// Raw `Plan` frame contents. `mask_g` is never transmitted: it is a pure
+/// function of `(theta_g, seed)` (§3.2 common random numbers), so the
+/// fleet re-derives it via [`RoundPlan`]'s sampling path.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PlanWire {
+    pub round: u64,
+    pub seed: u64,
+    pub kappa: f64,
+    pub participants: Vec<u64>,
+    pub theta_g: Vec<f32>,
+    pub s_g: Vec<f32>,
+}
+
+impl PlanWire {
+    pub fn from_plan(plan: &RoundPlan) -> Self {
+        Self {
+            round: plan.round as u64,
+            seed: plan.seed,
+            kappa: plan.kappa,
+            participants: plan.participants.iter().map(|&p| p as u64).collect(),
+            theta_g: plan.theta_g.clone(),
+            s_g: plan.s_g.clone(),
+        }
+    }
+
+    /// Rebuild the full broadcast plan, re-deriving the shared-seed global
+    /// mask locally.
+    pub fn into_round_plan(self) -> RoundPlan {
+        let mut mask_g = Vec::new();
+        crate::model::sample_mask_seeded(&self.theta_g, self.seed, &mut mask_g);
+        RoundPlan {
+            round: self.round as usize,
+            seed: self.seed,
+            kappa: self.kappa,
+            participants: self.participants.iter().map(|&p| p as usize).collect(),
+            mask_g,
+            theta_g: self.theta_g,
+            s_g: self.s_g,
+        }
+    }
+}
+
+/// Bounds-checked little-endian cursor; every read is fallible.
+struct Cur<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .filter(|&e| e <= self.buf.len())
+            .ok_or_else(|| anyhow!("frame truncated: need {n} bytes at offset {}", self.pos))?;
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f32s(&mut self, n: usize) -> Result<Vec<f32>> {
+        let raw = self.take(n.checked_mul(4).ok_or_else(|| anyhow!("f32 run overflows"))?)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    fn rest(&mut self) -> &'a [u8] {
+        let s = &self.buf[self.pos..];
+        self.pos = self.buf.len();
+        s
+    }
+
+    fn done(&self) -> Result<()> {
+        if self.pos != self.buf.len() {
+            bail!("frame has {} trailing bytes", self.buf.len() - self.pos);
+        }
+        Ok(())
+    }
+}
+
+fn header_bytes(kind: u8, session: u32, len: usize) -> [u8; HEADER_LEN] {
+    let mut h = [0u8; HEADER_LEN];
+    h[0..4].copy_from_slice(&MAGIC);
+    h[4] = VERSION;
+    h[5] = kind;
+    // bytes 6..8 reserved, zero.
+    h[8..12].copy_from_slice(&session.to_le_bytes());
+    h[12..16].copy_from_slice(&(len as u32).to_le_bytes());
+    h
+}
+
+/// Validate a 16-byte header. Rejects bad magic/version/kind, non-zero
+/// reserved bytes, and any announced length above `max_frame` — the only
+/// defense a length-prefixed stream has against a corrupted length.
+pub fn parse_header(buf: &[u8; HEADER_LEN], max_frame: usize) -> Result<FrameHeader> {
+    if buf[0..4] != MAGIC {
+        bail!("bad frame magic {:02x?}", &buf[0..4]);
+    }
+    if buf[4] != VERSION {
+        bail!("unsupported frame version {}", buf[4]);
+    }
+    let kind = buf[5];
+    if !(K_UPDATE..=K_SHUTDOWN).contains(&kind) {
+        bail!("unknown frame kind {kind}");
+    }
+    if buf[6] != 0 || buf[7] != 0 {
+        bail!("reserved header bytes are non-zero");
+    }
+    let session = u32::from_le_bytes(buf[8..12].try_into().unwrap());
+    let len = u32::from_le_bytes(buf[12..16].try_into().unwrap()) as usize;
+    if len > max_frame {
+        bail!("frame length {len} exceeds max frame size {max_frame}");
+    }
+    Ok(FrameHeader { kind, session, len })
+}
+
+/// Decode a frame payload for a validated header. Total: any byte string
+/// yields `Ok` or `Err`, never a panic.
+pub fn parse_frame(header: FrameHeader, payload: &[u8]) -> Result<FrameBody> {
+    if payload.len() != header.len {
+        bail!(
+            "payload length {} does not match header length {}",
+            payload.len(),
+            header.len
+        );
+    }
+    let mut c = Cur::new(payload);
+    match header.kind {
+        K_UPDATE | K_FAILED => {
+            let round = c.u64()? as usize;
+            let client_id = c.u64()? as usize;
+            let slot = c.u64()? as usize;
+            let enc_secs = c.f64()?;
+            let loss = c.f32()?;
+            if header.session != client_id as u32 {
+                bail!(
+                    "session {} disagrees with client id {client_id}",
+                    header.session
+                );
+            }
+            let payload = if header.kind == K_UPDATE {
+                Payload::Update(Encoded {
+                    bytes: c.rest().to_vec(),
+                })
+            } else {
+                Payload::Failed(
+                    std::str::from_utf8(c.rest())
+                        .context("Failed frame message is not UTF-8")?
+                        .to_string(),
+                )
+            };
+            Ok(FrameBody::Msg(WireMessage {
+                round,
+                client_id,
+                slot,
+                payload,
+                enc_secs,
+                loss,
+            }))
+        }
+        K_HELLO => {
+            let hello = Hello {
+                conn_index: c.u32()?,
+                conns_total: c.u32()?,
+                fingerprint: ConfigFingerprint {
+                    seed: c.u64()?,
+                    n_clients: c.u64()?,
+                    rounds: c.u64()?,
+                    d: c.u64()?,
+                },
+            };
+            c.done()?;
+            if hello.conns_total == 0 || hello.conn_index >= hello.conns_total {
+                bail!(
+                    "hello connection {}/{} out of range",
+                    hello.conn_index,
+                    hello.conns_total
+                );
+            }
+            Ok(FrameBody::Hello(hello))
+        }
+        K_PLAN => {
+            let round = c.u64()?;
+            let seed = c.u64()?;
+            let kappa = c.f64()?;
+            let n = c.u64()? as usize;
+            let mut participants = Vec::new();
+            for _ in 0..n {
+                participants.push(c.u64()?);
+            }
+            let d = c.u64()? as usize;
+            let theta_g = c.f32s(d)?;
+            let s_g = c.f32s(d)?;
+            c.done()?;
+            Ok(FrameBody::Plan(PlanWire {
+                round,
+                seed,
+                kappa,
+                participants,
+                theta_g,
+                s_g,
+            }))
+        }
+        K_EOR => {
+            let round = c.u64()?;
+            c.done()?;
+            Ok(FrameBody::EndOfRound(round))
+        }
+        K_SHUTDOWN => {
+            c.done()?;
+            Ok(FrameBody::Shutdown)
+        }
+        _ => unreachable!("parse_header validated the kind"),
+    }
+}
+
+fn frame(kind: u8, session: u32, payload: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
+    out.extend_from_slice(&header_bytes(kind, session, payload.len()));
+    out.extend_from_slice(payload);
+    out
+}
+
+/// Encode one uplink record as a full frame (header + payload).
+pub fn encode_message(msg: &WireMessage) -> Vec<u8> {
+    let (kind, body): (u8, &[u8]) = match &msg.payload {
+        Payload::Update(enc) => (K_UPDATE, &enc.bytes),
+        Payload::Failed(e) => (K_FAILED, e.as_bytes()),
+    };
+    let mut payload = Vec::with_capacity(36 + body.len());
+    payload.extend_from_slice(&(msg.round as u64).to_le_bytes());
+    payload.extend_from_slice(&(msg.client_id as u64).to_le_bytes());
+    payload.extend_from_slice(&(msg.slot as u64).to_le_bytes());
+    payload.extend_from_slice(&msg.enc_secs.to_le_bytes());
+    payload.extend_from_slice(&msg.loss.to_le_bytes());
+    payload.extend_from_slice(body);
+    frame(kind, msg.client_id as u32, &payload)
+}
+
+pub fn encode_hello(hello: &Hello) -> Vec<u8> {
+    let mut p = Vec::with_capacity(40);
+    p.extend_from_slice(&hello.conn_index.to_le_bytes());
+    p.extend_from_slice(&hello.conns_total.to_le_bytes());
+    p.extend_from_slice(&hello.fingerprint.seed.to_le_bytes());
+    p.extend_from_slice(&hello.fingerprint.n_clients.to_le_bytes());
+    p.extend_from_slice(&hello.fingerprint.rounds.to_le_bytes());
+    p.extend_from_slice(&hello.fingerprint.d.to_le_bytes());
+    frame(K_HELLO, hello.conn_index, &p)
+}
+
+pub fn encode_plan(plan: &RoundPlan) -> Vec<u8> {
+    let w = PlanWire::from_plan(plan);
+    let mut p =
+        Vec::with_capacity(40 + 8 * w.participants.len() + 4 * (w.theta_g.len() + w.s_g.len()));
+    p.extend_from_slice(&w.round.to_le_bytes());
+    p.extend_from_slice(&w.seed.to_le_bytes());
+    p.extend_from_slice(&w.kappa.to_le_bytes());
+    p.extend_from_slice(&(w.participants.len() as u64).to_le_bytes());
+    for id in &w.participants {
+        p.extend_from_slice(&id.to_le_bytes());
+    }
+    p.extend_from_slice(&(w.theta_g.len() as u64).to_le_bytes());
+    for v in &w.theta_g {
+        p.extend_from_slice(&v.to_le_bytes());
+    }
+    for v in &w.s_g {
+        p.extend_from_slice(&v.to_le_bytes());
+    }
+    frame(K_PLAN, 0, &p)
+}
+
+pub fn encode_eor(round: u64) -> Vec<u8> {
+    frame(K_EOR, 0, &round.to_le_bytes())
+}
+
+pub fn encode_shutdown() -> Vec<u8> {
+    frame(K_SHUTDOWN, 0, &[])
+}
+
+// ---------------------------------------------------------------------------
+// Streams and listeners (TCP + UDS behind one enum).
+// ---------------------------------------------------------------------------
+
+/// Where a socket endpoint lives.
+#[derive(Clone, Debug)]
+pub enum SocketAddrSpec {
+    Tcp(String),
+    Uds(PathBuf),
+}
+
+impl SocketAddrSpec {
+    /// Interpret a CLI address for the given transport kind. `Channel`
+    /// has no address and is rejected here.
+    pub fn parse(kind: TransportKind, addr: &str) -> Result<Self> {
+        match kind {
+            TransportKind::Tcp => Ok(Self::Tcp(addr.to_string())),
+            TransportKind::Uds => Ok(Self::Uds(PathBuf::from(addr))),
+            TransportKind::Channel => {
+                bail!("the in-process channel transport has no socket address")
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for SocketAddrSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::Tcp(a) => write!(f, "tcp://{a}"),
+            Self::Uds(p) => write!(f, "uds://{}", p.display()),
+        }
+    }
+}
+
+/// One accepted or connected socket (either family).
+#[derive(Debug)]
+pub enum Stream {
+    Tcp(TcpStream),
+    Uds(UnixStream),
+}
+
+impl Stream {
+    pub fn connect(spec: &SocketAddrSpec) -> Result<Self> {
+        match spec {
+            SocketAddrSpec::Tcp(addr) => {
+                let s = TcpStream::connect(addr).with_context(|| format!("connect {spec}"))?;
+                s.set_nodelay(true)?;
+                Ok(Self::Tcp(s))
+            }
+            SocketAddrSpec::Uds(path) => Ok(Self::Uds(
+                UnixStream::connect(path).with_context(|| format!("connect {spec}"))?,
+            )),
+        }
+    }
+
+    pub fn try_clone(&self) -> io::Result<Self> {
+        match self {
+            Self::Tcp(s) => s.try_clone().map(Self::Tcp),
+            Self::Uds(s) => s.try_clone().map(Self::Uds),
+        }
+    }
+
+    /// Tear down both directions; unblocks any thread parked in `read`.
+    pub fn shutdown_both(&self) {
+        let _ = match self {
+            Self::Tcp(s) => s.shutdown(std::net::Shutdown::Both),
+            Self::Uds(s) => s.shutdown(std::net::Shutdown::Both),
+        };
+    }
+}
+
+impl Read for Stream {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        match self {
+            Self::Tcp(s) => s.read(buf),
+            Self::Uds(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Stream {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        match self {
+            Self::Tcp(s) => s.write(buf),
+            Self::Uds(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        match self {
+            Self::Tcp(s) => s.flush(),
+            Self::Uds(s) => s.flush(),
+        }
+    }
+}
+
+/// A bound accept socket (either family).
+#[derive(Debug)]
+pub enum Listener {
+    Tcp(TcpListener),
+    Uds(UnixListener),
+}
+
+impl Listener {
+    pub fn bind(spec: &SocketAddrSpec) -> Result<Self> {
+        match spec {
+            SocketAddrSpec::Tcp(addr) => Ok(Self::Tcp(
+                TcpListener::bind(addr).with_context(|| format!("bind {spec}"))?,
+            )),
+            SocketAddrSpec::Uds(path) => {
+                match UnixListener::bind(path) {
+                    Ok(l) => Ok(Self::Uds(l)),
+                    Err(e) if e.kind() == io::ErrorKind::AddrInUse => {
+                        // A socket file left behind by a dead process: safe
+                        // to reclaim iff nothing answers on it.
+                        if UnixStream::connect(path).is_err() {
+                            std::fs::remove_file(path)?;
+                            Ok(Self::Uds(UnixListener::bind(path)?))
+                        } else {
+                            bail!("{spec} already has a live listener");
+                        }
+                    }
+                    Err(e) => Err(e).with_context(|| format!("bind {spec}")),
+                }
+            }
+        }
+    }
+
+    /// The resolved address peers should connect to (TCP `:0` binds get
+    /// their assigned port back).
+    pub fn local_spec(&self) -> Result<SocketAddrSpec> {
+        match self {
+            Self::Tcp(l) => Ok(SocketAddrSpec::Tcp(l.local_addr()?.to_string())),
+            Self::Uds(l) => {
+                let addr = l.local_addr()?;
+                let path = addr
+                    .as_pathname()
+                    .ok_or_else(|| anyhow!("unnamed unix listener"))?;
+                Ok(SocketAddrSpec::Uds(path.to_path_buf()))
+            }
+        }
+    }
+
+    pub fn accept(&self) -> Result<Stream> {
+        match self {
+            Self::Tcp(l) => {
+                let (s, _) = l.accept()?;
+                s.set_nodelay(true)?;
+                Ok(Stream::Tcp(s))
+            }
+            Self::Uds(l) => {
+                let (s, _) = l.accept()?;
+                Ok(Stream::Uds(s))
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Inbound queue with bounded admission.
+// ---------------------------------------------------------------------------
+
+struct Queued {
+    msg: WireMessage,
+    conn: usize,
+    cost: usize,
+    at: Instant,
+}
+
+struct InboundState {
+    queue: VecDeque<Queued>,
+    queued_bytes: usize,
+    peak_queued_bytes: usize,
+    conn_bytes: Vec<usize>,
+    conn_alive: Vec<bool>,
+    /// Highest `EndOfRound` mark seen per connection (two-process mode).
+    conn_eor: Vec<Option<u64>>,
+    live_conns: usize,
+    current_round: u64,
+    closing: bool,
+    // Accounting (see `TransportStats` for which side reads what).
+    arrived_messages: u64,
+    arrived_payload_bytes: u64,
+    received: u64,
+    transit_secs: f64,
+    frames: u64,
+    frame_bytes: u64,
+    stalls: u64,
+    corrupt_frames: u64,
+}
+
+impl InboundState {
+    fn new(conns: usize) -> Self {
+        Self {
+            queue: VecDeque::new(),
+            queued_bytes: 0,
+            peak_queued_bytes: 0,
+            conn_bytes: vec![0; conns],
+            conn_alive: vec![true; conns],
+            conn_eor: vec![None; conns],
+            live_conns: conns,
+            current_round: 0,
+            closing: false,
+            arrived_messages: 0,
+            arrived_payload_bytes: 0,
+            received: 0,
+            transit_secs: 0.0,
+            frames: 0,
+            frame_bytes: 0,
+            stalls: 0,
+            corrupt_frames: 0,
+        }
+    }
+
+    /// Nothing queued and nothing can arrive for the current round: every
+    /// connection is gone, or every surviving one has marked end-of-round.
+    fn closed(&self) -> bool {
+        self.queue.is_empty()
+            && (self.live_conns == 0
+                || self
+                    .conn_alive
+                    .iter()
+                    .zip(&self.conn_eor)
+                    .filter(|(alive, _)| **alive)
+                    .all(|(_, eor)| eor.is_some_and(|r| r >= self.current_round)))
+    }
+
+    fn release(&mut self, q: &Queued) {
+        self.queued_bytes -= q.cost;
+        self.conn_bytes[q.conn] -= q.cost;
+    }
+}
+
+struct Inbound {
+    state: Mutex<InboundState>,
+    /// Consumers (and end-of-round waiters) park here.
+    readable: Condvar,
+    /// Backpressured readers park here.
+    writable: Condvar,
+}
+
+impl Inbound {
+    fn pop(&self, st: &mut MutexGuard<'_, InboundState>) -> Option<WireMessage> {
+        st.queue.pop_front().map(|q| {
+            st.release(&q);
+            st.received += 1;
+            st.transit_secs += q.at.elapsed().as_secs_f64();
+            self.writable.notify_all();
+            q.msg
+        })
+    }
+
+    fn conn_down(&self, conn: usize) {
+        let mut st = self.state.lock().unwrap();
+        if st.conn_alive[conn] {
+            st.conn_alive[conn] = false;
+            st.live_conns -= 1;
+        }
+        drop(st);
+        self.readable.notify_all();
+        self.writable.notify_all();
+    }
+}
+
+/// Read exactly `buf.len()` bytes. `Ok(false)` on a clean EOF at offset 0;
+/// an error on EOF mid-buffer (a torn frame).
+fn read_exact_or_eof(r: &mut impl Read, buf: &mut [u8]) -> io::Result<bool> {
+    let mut off = 0;
+    while off < buf.len() {
+        match r.read(&mut buf[off..]) {
+            Ok(0) => {
+                return if off == 0 {
+                    Ok(false)
+                } else {
+                    Err(io::Error::new(
+                        io::ErrorKind::UnexpectedEof,
+                        "connection closed mid-frame",
+                    ))
+                }
+            }
+            Ok(n) => off += n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(true)
+}
+
+fn reader_loop(conn: usize, mut stream: Stream, inbound: Arc<Inbound>, cfg: SocketConfig) {
+    let mut header = [0u8; HEADER_LEN];
+    loop {
+        match read_exact_or_eof(&mut stream, &mut header) {
+            Ok(true) => {}
+            // Clean EOF at a frame boundary: the peer is done.
+            Ok(false) => break,
+            // Torn frame or transport error: dirty close.
+            Err(_) => {
+                inbound.state.lock().unwrap().corrupt_frames += 1;
+                break;
+            }
+        }
+        let h = match parse_header(&header, cfg.max_frame) {
+            Ok(h) => h,
+            // A corrupt header (including a bogus length) desynchronizes a
+            // length-prefixed stream beyond recovery — connection-fatal.
+            // The round drain sees the dead connection as missing senders.
+            Err(_) => {
+                inbound.state.lock().unwrap().corrupt_frames += 1;
+                break;
+            }
+        };
+        let mut payload = vec![0u8; h.len];
+        if !matches!(read_exact_or_eof(&mut stream, &mut payload), Ok(true)) {
+            inbound.state.lock().unwrap().corrupt_frames += 1;
+            break;
+        }
+        let cost = HEADER_LEN + h.len;
+        let body = parse_frame(h, &payload);
+        let mut st = inbound.state.lock().unwrap();
+        st.frames += 1;
+        st.frame_bytes += cost as u64;
+        match body {
+            Ok(FrameBody::Msg(msg)) => {
+                // Bounded admission: block (stall) while this frame would
+                // overflow either budget, unless the connection's queue is
+                // empty — one in-flight frame per connection always makes
+                // progress, so a single oversized frame can't deadlock.
+                let mut stalled = false;
+                while !st.closing
+                    && ((st.queued_bytes > 0 && st.queued_bytes + cost > cfg.inbound_budget)
+                        || (st.conn_bytes[conn] > 0
+                            && st.conn_bytes[conn] + cost > cfg.conn_budget))
+                {
+                    if !stalled {
+                        stalled = true;
+                        st.stalls += 1;
+                    }
+                    st = inbound.writable.wait(st).unwrap();
+                }
+                if st.closing {
+                    break;
+                }
+                st.queued_bytes += cost;
+                st.conn_bytes[conn] += cost;
+                st.peak_queued_bytes = st.peak_queued_bytes.max(st.queued_bytes);
+                st.arrived_messages += 1;
+                st.arrived_payload_bytes += msg.payload_bytes() as u64;
+                st.queue.push_back(Queued {
+                    msg,
+                    conn,
+                    cost,
+                    at: Instant::now(),
+                });
+                drop(st);
+                inbound.readable.notify_all();
+            }
+            Ok(FrameBody::EndOfRound(round)) => {
+                let mark = st.conn_eor[conn].map_or(round, |prev| prev.max(round));
+                st.conn_eor[conn] = Some(mark);
+                drop(st);
+                inbound.readable.notify_all();
+            }
+            // Data direction never carries Hello/Plan/Shutdown past the
+            // handshake; a structurally-broken payload lands here too. The
+            // length kept the stream in sync, so skip and count.
+            Ok(_) | Err(_) => {
+                st.corrupt_frames += 1;
+                if st.closing {
+                    break;
+                }
+            }
+        }
+    }
+    inbound.conn_down(conn);
+}
+
+/// Where `TransportStats::sent_*` come from: the loopback hub shares the
+/// sender's counters (send-time accounting, exactly like the channel); a
+/// standalone server only sees what arrived at its readers.
+enum SentAccounting {
+    Local(Arc<Counters>),
+    Intake,
+}
+
+/// Server end of a framed socket uplink: one reader thread per connection
+/// feeding a bounded inbound queue. See the module docs for the
+/// backpressure and closure rules.
+pub struct SocketTransport {
+    inbound: Arc<Inbound>,
+    /// Clones kept only to shutdown blocked readers on drop.
+    streams: Vec<Stream>,
+    readers: Vec<std::thread::JoinHandle<()>>,
+    sent: SentAccounting,
+}
+
+impl SocketTransport {
+    fn start(streams: Vec<Stream>, cfg: SocketConfig, sent: SentAccounting) -> Result<Self> {
+        let inbound = Arc::new(Inbound {
+            state: Mutex::new(InboundState::new(streams.len())),
+            readable: Condvar::new(),
+            writable: Condvar::new(),
+        });
+        let mut shutdown_handles = Vec::with_capacity(streams.len());
+        let mut readers = Vec::with_capacity(streams.len());
+        for (conn, stream) in streams.into_iter().enumerate() {
+            shutdown_handles.push(stream.try_clone()?);
+            let inbound = inbound.clone();
+            readers.push(
+                std::thread::Builder::new()
+                    .name(format!("dm-sock-reader-{conn}"))
+                    .spawn(move || reader_loop(conn, stream, inbound, cfg))?,
+            );
+        }
+        Ok(Self {
+            inbound,
+            streams: shutdown_handles,
+            readers,
+            sent,
+        })
+    }
+
+    /// High-water mark of queued inbound bytes — the backpressure tests'
+    /// bounded-memory witness.
+    pub fn peak_inbound_bytes(&self) -> usize {
+        self.inbound.state.lock().unwrap().peak_queued_bytes
+    }
+
+    /// Structurally-corrupt frames skipped or connection-fatal so far.
+    pub fn frame_corruptions(&self) -> u64 {
+        self.inbound.state.lock().unwrap().corrupt_frames
+    }
+}
+
+impl Transport for SocketTransport {
+    fn recv(&mut self) -> Option<WireMessage> {
+        let mut st = self.inbound.state.lock().unwrap();
+        loop {
+            if let Some(m) = self.inbound.pop(&mut st) {
+                return Some(m);
+            }
+            if st.closed() {
+                return None;
+            }
+            st = self.inbound.readable.wait(st).unwrap();
+        }
+    }
+
+    fn recv_deadline(&mut self, deadline: Instant) -> RecvOutcome {
+        let mut st = self.inbound.state.lock().unwrap();
+        loop {
+            // Trait contract: Msg > Closed > TimedOut, so a message racing
+            // the deadline still lands and a dead wire never reads as
+            // "maybe still in flight".
+            if let Some(m) = self.inbound.pop(&mut st) {
+                return RecvOutcome::Msg(m);
+            }
+            if st.closed() {
+                return RecvOutcome::Closed;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return RecvOutcome::TimedOut;
+            }
+            let (guard, _) = self
+                .inbound
+                .readable
+                .wait_timeout(st, deadline - now)
+                .unwrap();
+            st = guard;
+        }
+    }
+
+    fn try_recv(&mut self) -> Option<WireMessage> {
+        let mut st = self.inbound.state.lock().unwrap();
+        self.inbound.pop(&mut st)
+    }
+
+    fn discard_inflight(&mut self) {
+        let mut st = self.inbound.state.lock().unwrap();
+        while let Some(q) = st.queue.pop_front() {
+            st.release(&q);
+        }
+        drop(st);
+        self.inbound.writable.notify_all();
+    }
+
+    fn stats(&self) -> TransportStats {
+        let st = self.inbound.state.lock().unwrap();
+        let (sent_messages, sent_payload_bytes) = match &self.sent {
+            SentAccounting::Local(c) => (
+                c.messages.load(Ordering::Relaxed),
+                c.payload_bytes.load(Ordering::Relaxed),
+            ),
+            SentAccounting::Intake => (st.arrived_messages, st.arrived_payload_bytes),
+        };
+        TransportStats {
+            sent_messages,
+            sent_payload_bytes,
+            received_messages: st.received,
+            transit_secs: st.transit_secs,
+            wire_frames: st.frames,
+            wire_bytes: st.frame_bytes,
+            backpressure_stalls: st.stalls,
+        }
+    }
+}
+
+impl Drop for SocketTransport {
+    fn drop(&mut self) {
+        {
+            self.inbound.state.lock().unwrap().closing = true;
+        }
+        self.inbound.readable.notify_all();
+        self.inbound.writable.notify_all();
+        for s in &self.streams {
+            s.shutdown_both();
+        }
+        for h in self.readers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Client-side frame writer: M shared connections carrying any number of
+/// logical clients, routed by `client_id % M` with the client id in the
+/// frame's session field. Cheap to clone (all clones share the
+/// connections); dropping the last clone closes the write side, which is
+/// how loopback rounds signal completion.
+pub struct SocketSender {
+    conns: Arc<Vec<Mutex<Stream>>>,
+    counters: Arc<Counters>,
+}
+
+impl TransportSender for SocketSender {
+    fn send(&self, msg: WireMessage) -> Result<()> {
+        // Count before writing, mirroring the channel sender: a send the
+        // server never reads (it aborted) is still a send.
+        self.counters
+            .payload_bytes
+            .fetch_add(msg.payload_bytes() as u64, Ordering::Relaxed);
+        self.counters.messages.fetch_add(1, Ordering::Relaxed);
+        let frame = encode_message(&msg);
+        let idx = msg.client_id % self.conns.len();
+        let mut conn = self.conns[idx]
+            .lock()
+            .map_err(|_| anyhow!("socket sender lock poisoned"))?;
+        conn.write_all(&frame)
+            .and_then(|()| conn.flush())
+            .with_context(|| format!("uplink send for client {}", msg.client_id))
+    }
+
+    fn clone_sender(&self) -> Box<dyn TransportSender> {
+        Box::new(Self {
+            conns: self.conns.clone(),
+            counters: self.counters.clone(),
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Loopback hub: in-process experiments over a real socket.
+// ---------------------------------------------------------------------------
+
+static HUB_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Per-experiment loopback endpoint: binds once, then wires a fresh
+/// (transport, sender) pair per round — preserving the per-round channel
+/// lifecycle (close-on-drop) over a real socket.
+pub struct SocketHub {
+    listener: Listener,
+    target: SocketAddrSpec,
+    cfg: SocketConfig,
+    conns: usize,
+    uds_path: Option<PathBuf>,
+}
+
+impl SocketHub {
+    /// Bind an ephemeral loopback endpoint: TCP on `127.0.0.1:0`, or a
+    /// unique socket file under the system temp dir.
+    pub fn bind_loopback(kind: TransportKind, cfg: SocketConfig, conns: usize) -> Result<Self> {
+        let spec = match kind {
+            TransportKind::Tcp => SocketAddrSpec::Tcp("127.0.0.1:0".into()),
+            TransportKind::Uds => {
+                let seq = HUB_SEQ.fetch_add(1, Ordering::Relaxed);
+                SocketAddrSpec::Uds(std::env::temp_dir().join(format!(
+                    "deltamask-{}-{seq}.sock",
+                    std::process::id()
+                )))
+            }
+            TransportKind::Channel => bail!("channel transport needs no socket hub"),
+        };
+        let listener = Listener::bind(&spec)?;
+        let target = listener.local_spec()?;
+        let uds_path = match &target {
+            SocketAddrSpec::Uds(p) => Some(p.clone()),
+            SocketAddrSpec::Tcp(_) => None,
+        };
+        Ok(Self {
+            listener,
+            target,
+            cfg,
+            conns: conns.max(1),
+            uds_path,
+        })
+    }
+
+    pub fn config(&self) -> SocketConfig {
+        self.cfg
+    }
+
+    /// Fresh per-round link: M connections (capped at the expected sender
+    /// count), a reader-backed transport, and the multiplexing sender.
+    /// The listener backlog absorbs the connects, so no handshake thread
+    /// is needed.
+    pub fn round_link(&self, expected: usize) -> Result<(SocketTransport, Box<dyn TransportSender>)> {
+        let n = self.conns.min(expected.max(1));
+        let mut client_ends = Vec::with_capacity(n);
+        let mut server_ends = Vec::with_capacity(n);
+        for _ in 0..n {
+            client_ends.push(Stream::connect(&self.target)?);
+        }
+        for _ in 0..n {
+            server_ends.push(self.listener.accept()?);
+        }
+        let counters = Arc::new(Counters::default());
+        let transport =
+            SocketTransport::start(server_ends, self.cfg, SentAccounting::Local(counters.clone()))?;
+        let sender = SocketSender {
+            conns: Arc::new(client_ends.into_iter().map(Mutex::new).collect()),
+            counters,
+        };
+        Ok((transport, Box::new(sender)))
+    }
+}
+
+impl Drop for SocketHub {
+    fn drop(&mut self) {
+        if let Some(p) = &self.uds_path {
+            let _ = std::fs::remove_file(p);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Two-process mode: FleetServer (coordinator) and FleetLink (client fleet).
+// ---------------------------------------------------------------------------
+
+/// Coordinator side of a `serve` / `client-fleet` pair: accepted fleet
+/// connections, their reader-backed transport, and the downlink for plan
+/// broadcast and round bookkeeping.
+pub struct FleetServer {
+    transport: Option<SocketTransport>,
+    inbound: Arc<Inbound>,
+    /// Write handles to every connection whose fleet-side `conn_index` is
+    /// 0 — the only connection each fleet reads control frames from.
+    control: Vec<Stream>,
+}
+
+impl FleetServer {
+    /// Accept one fleet: the first Hello announces how many connections
+    /// the fleet opens; every Hello must agree on that count and on the
+    /// config fingerprint, or the handshake fails loudly before round 0.
+    pub fn accept_fleet(
+        listener: &Listener,
+        cfg: SocketConfig,
+        expect: ConfigFingerprint,
+    ) -> Result<Self> {
+        let mut streams: Vec<Stream> = Vec::new();
+        let mut hellos: Vec<Hello> = Vec::new();
+        loop {
+            let mut stream = listener.accept()?;
+            let hello = read_hello(&mut stream, cfg)?;
+            if hello.fingerprint != expect {
+                bail!(
+                    "fleet config fingerprint {:?} does not match serve config {:?} — \
+                     serve and client-fleet must run identical experiment settings",
+                    hello.fingerprint,
+                    expect
+                );
+            }
+            if let Some(first) = hellos.first() {
+                if hello.conns_total != first.conns_total {
+                    bail!(
+                        "fleet connections disagree on their count ({} vs {})",
+                        hello.conns_total,
+                        first.conns_total
+                    );
+                }
+            }
+            if hellos.iter().any(|h| h.conn_index == hello.conn_index) {
+                bail!("duplicate fleet connection index {}", hello.conn_index);
+            }
+            let total = hello.conns_total as usize;
+            streams.push(stream);
+            hellos.push(hello);
+            if streams.len() == total {
+                break;
+            }
+        }
+        let mut control = Vec::new();
+        for (stream, hello) in streams.iter().zip(&hellos) {
+            if hello.conn_index == 0 {
+                control.push(stream.try_clone()?);
+            }
+        }
+        let transport = SocketTransport::start(streams, cfg, SentAccounting::Intake)?;
+        let inbound = transport.inbound.clone();
+        Ok(Self {
+            transport: Some(transport),
+            inbound,
+            control,
+        })
+    }
+
+    /// The uplink transport, to be owned (and optionally chaos-wrapped) by
+    /// the drain loop. Callable once.
+    pub fn take_transport(&mut self) -> SocketTransport {
+        self.transport
+            .take()
+            .expect("FleetServer transport already taken")
+    }
+
+    /// Mark the round open and broadcast its plan to the fleet.
+    pub fn broadcast_plan(&mut self, plan: &RoundPlan) -> Result<()> {
+        {
+            self.inbound.state.lock().unwrap().current_round = plan.round as u64;
+        }
+        let frame = encode_plan(plan);
+        for conn in &mut self.control {
+            conn.write_all(&frame)?;
+            conn.flush()?;
+        }
+        Ok(())
+    }
+
+    /// Between-rounds barrier: wait for every surviving connection's
+    /// `EndOfRound(round)` mark, discarding (uncounted) any data frames
+    /// the drain left unread — leftover duplicates must not leak into the
+    /// next round as `stale`, matching the dropped per-round channel.
+    /// Keeps draining while it waits so a backpressured fleet can always
+    /// finish flushing.
+    pub fn end_round(&self, round: usize) {
+        let mut st = self.inbound.state.lock().unwrap();
+        loop {
+            while let Some(q) = st.queue.pop_front() {
+                st.release(&q);
+            }
+            self.inbound.writable.notify_all();
+            let done = st.live_conns == 0
+                || st
+                    .conn_alive
+                    .iter()
+                    .zip(&st.conn_eor)
+                    .filter(|(alive, _)| **alive)
+                    .all(|(_, eor)| eor.is_some_and(|r| r >= round as u64));
+            if done {
+                return;
+            }
+            st = self.inbound.readable.wait(st).unwrap();
+        }
+    }
+
+    /// Tell the fleet the experiment is over.
+    pub fn shutdown(&mut self) -> Result<()> {
+        let frame = encode_shutdown();
+        for conn in &mut self.control {
+            conn.write_all(&frame)?;
+            conn.flush()?;
+        }
+        Ok(())
+    }
+}
+
+fn read_hello(stream: &mut Stream, cfg: SocketConfig) -> Result<Hello> {
+    match read_frame(stream, cfg)? {
+        FrameBody::Hello(h) => Ok(h),
+        other => bail!("expected Hello handshake frame, got {other:?}"),
+    }
+}
+
+/// Blocking read of one whole frame (handshake / control paths).
+fn read_frame(stream: &mut Stream, cfg: SocketConfig) -> Result<FrameBody> {
+    let mut header = [0u8; HEADER_LEN];
+    if !read_exact_or_eof(stream, &mut header)? {
+        bail!("connection closed");
+    }
+    let h = parse_header(&header, cfg.max_frame)?;
+    let mut payload = vec![0u8; h.len];
+    if !read_exact_or_eof(stream, &mut payload)? {
+        bail!("connection closed mid-frame");
+    }
+    parse_frame(h, &payload)
+}
+
+/// Downlink control messages a fleet reacts to.
+#[derive(Clone, Debug)]
+pub enum ControlMsg {
+    Plan(PlanWire),
+    Shutdown,
+}
+
+/// Client-fleet side of a `serve` / `client-fleet` pair: M persistent
+/// connections multiplexing all local clients, with control frames read
+/// from connection 0.
+pub struct FleetLink {
+    control: Stream,
+    conns: Arc<Vec<Mutex<Stream>>>,
+    counters: Arc<Counters>,
+    cfg: SocketConfig,
+}
+
+impl FleetLink {
+    /// Connect `conns` streams and complete the Hello handshake. Retries
+    /// the first connection until `timeout` so the fleet can start before
+    /// the server finishes binding.
+    pub fn connect(
+        spec: &SocketAddrSpec,
+        conns: usize,
+        fingerprint: ConfigFingerprint,
+        cfg: SocketConfig,
+        timeout: Duration,
+    ) -> Result<Self> {
+        let conns = conns.max(1);
+        let deadline = Instant::now() + timeout;
+        let first = loop {
+            match Stream::connect(spec) {
+                Ok(s) => break s,
+                Err(e) => {
+                    if Instant::now() >= deadline {
+                        return Err(e.context(format!("fleet connect to {spec} timed out")));
+                    }
+                    std::thread::sleep(Duration::from_millis(50));
+                }
+            }
+        };
+        let mut streams = vec![first];
+        for _ in 1..conns {
+            streams.push(Stream::connect(spec)?);
+        }
+        for (i, s) in streams.iter_mut().enumerate() {
+            let hello = Hello {
+                conn_index: i as u32,
+                conns_total: conns as u32,
+                fingerprint,
+            };
+            s.write_all(&encode_hello(&hello))?;
+            s.flush()?;
+        }
+        let control = streams[0].try_clone()?;
+        Ok(Self {
+            control,
+            conns: Arc::new(streams.into_iter().map(Mutex::new).collect()),
+            counters: Arc::new(Counters::default()),
+            cfg,
+        })
+    }
+
+    /// A multiplexing sender over the fleet's connections. Clones share
+    /// the connections; the link keeps its own handles, so round senders
+    /// dropping never closes the wire.
+    pub fn sender(&self) -> Box<dyn TransportSender> {
+        Box::new(SocketSender {
+            conns: self.conns.clone(),
+            counters: self.counters.clone(),
+        })
+    }
+
+    /// Block until the server's next control frame.
+    pub fn recv_control(&mut self) -> Result<ControlMsg> {
+        match read_frame(&mut self.control, self.cfg)? {
+            FrameBody::Plan(p) => Ok(ControlMsg::Plan(p)),
+            FrameBody::Shutdown => Ok(ControlMsg::Shutdown),
+            other => bail!("unexpected control frame {other:?}"),
+        }
+    }
+
+    /// Mark every connection quiescent for `round`.
+    pub fn send_eor(&self, round: usize) -> Result<()> {
+        let frame = encode_eor(round as u64);
+        for conn in self.conns.iter() {
+            let mut c = conn.lock().map_err(|_| anyhow!("fleet conn lock poisoned"))?;
+            c.write_all(&frame)?;
+            c.flush()?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn update(round: usize, client: usize, slot: usize, n: usize) -> WireMessage {
+        WireMessage {
+            round,
+            client_id: client,
+            slot,
+            payload: Payload::Update(Encoded {
+                bytes: (0..n).map(|i| (i * 7 + client) as u8).collect(),
+            }),
+            enc_secs: 0.0625,
+            loss: 1.5,
+        }
+    }
+
+    fn decode_all(frame_bytes: &[u8], max_frame: usize) -> Result<FrameBody> {
+        let header: [u8; HEADER_LEN] = frame_bytes[..HEADER_LEN].try_into().unwrap();
+        let h = parse_header(&header, max_frame)?;
+        parse_frame(h, &frame_bytes[HEADER_LEN..])
+    }
+
+    #[test]
+    fn frames_round_trip() {
+        let msg = update(3, 41, 5, 100);
+        let body = decode_all(&encode_message(&msg), 1 << 20).unwrap();
+        match body {
+            FrameBody::Msg(m) => {
+                assert_eq!(m.round, 3);
+                assert_eq!(m.client_id, 41);
+                assert_eq!(m.slot, 5);
+                assert_eq!(m.enc_secs, 0.0625);
+                assert_eq!(m.loss, 1.5);
+                assert_eq!(m.payload_bytes(), 100);
+            }
+            other => panic!("wrong body {other:?}"),
+        }
+
+        let failed = WireMessage {
+            payload: Payload::Failed("oom while training".into()),
+            ..update(1, 2, 0, 0)
+        };
+        match decode_all(&encode_message(&failed), 1 << 20).unwrap() {
+            FrameBody::Msg(m) => {
+                assert!(matches!(m.payload, Payload::Failed(ref e) if e == "oom while training"))
+            }
+            other => panic!("wrong body {other:?}"),
+        }
+
+        let hello = Hello {
+            conn_index: 2,
+            conns_total: 4,
+            fingerprint: ConfigFingerprint {
+                seed: 42,
+                n_clients: 10,
+                rounds: 3,
+                d: 1000,
+            },
+        };
+        match decode_all(&encode_hello(&hello), 1 << 20).unwrap() {
+            FrameBody::Hello(h) => assert_eq!(h, hello),
+            other => panic!("wrong body {other:?}"),
+        }
+
+        match decode_all(&encode_eor(7), 1 << 20).unwrap() {
+            FrameBody::EndOfRound(r) => assert_eq!(r, 7),
+            other => panic!("wrong body {other:?}"),
+        }
+        assert!(matches!(
+            decode_all(&encode_shutdown(), 1 << 20).unwrap(),
+            FrameBody::Shutdown
+        ));
+    }
+
+    #[test]
+    fn plan_frames_round_trip_and_rederive_the_mask() {
+        use crate::coordinator::round::RoundEngine;
+        let theta: Vec<f32> = (0..64).map(|i| 0.2 + (i as f32) * 0.01).collect();
+        let s: Vec<f32> = (0..64).map(|i| -1.0 + (i as f32) * 0.02).collect();
+        let plan = RoundEngine::new(42, 10, 0.5, 0.8, 0.25, 10).plan(2, &theta, &s);
+        match decode_all(&encode_plan(&plan), 1 << 20).unwrap() {
+            FrameBody::Plan(w) => {
+                let rebuilt = w.into_round_plan();
+                assert_eq!(rebuilt.round, plan.round);
+                assert_eq!(rebuilt.seed, plan.seed);
+                assert_eq!(rebuilt.kappa, plan.kappa);
+                assert_eq!(rebuilt.participants, plan.participants);
+                assert_eq!(rebuilt.theta_g, plan.theta_g);
+                assert_eq!(rebuilt.s_g, plan.s_g);
+                assert_eq!(rebuilt.mask_g, plan.mask_g, "CRN mask re-derived bitwise");
+            }
+            other => panic!("wrong body {other:?}"),
+        }
+    }
+
+    #[test]
+    fn header_rejections_are_errors_not_panics() {
+        let good = header_bytes(K_UPDATE, 9, 32);
+        assert!(parse_header(&good, 1 << 20).is_ok());
+
+        let mut bad = good;
+        bad[0] = b'X';
+        assert!(parse_header(&bad, 1 << 20).is_err(), "magic");
+        let mut bad = good;
+        bad[4] = 9;
+        assert!(parse_header(&bad, 1 << 20).is_err(), "version");
+        let mut bad = good;
+        bad[5] = 0;
+        assert!(parse_header(&bad, 1 << 20).is_err(), "kind 0");
+        let mut bad = good;
+        bad[5] = 200;
+        assert!(parse_header(&bad, 1 << 20).is_err(), "kind out of range");
+        let mut bad = good;
+        bad[6] = 1;
+        assert!(parse_header(&bad, 1 << 20).is_err(), "reserved");
+        let oversized = header_bytes(K_UPDATE, 9, (1 << 20) + 1);
+        assert!(
+            parse_header(&oversized, 1 << 20).is_err(),
+            "length above the cap"
+        );
+    }
+
+    #[test]
+    fn session_must_match_the_client_id() {
+        let mut f = encode_message(&update(0, 300, 1, 8));
+        // Flip a session byte: the integrity cross-check fires.
+        f[8] ^= 0xFF;
+        // Keep header length consistent so the payload parse is reached.
+        assert!(decode_all(&f, 1 << 20).is_err());
+    }
+
+    #[test]
+    fn loopback_hub_delivers_over_a_real_socket() {
+        for kind in [TransportKind::Uds, TransportKind::Tcp] {
+            let hub = SocketHub::bind_loopback(kind, SocketConfig::default(), 3).unwrap();
+            let (mut transport, sender) = hub.round_link(8).unwrap();
+            for c in 0..8 {
+                sender.send(update(0, c, c, 64)).unwrap();
+            }
+            drop(sender);
+            let mut slots: Vec<usize> =
+                std::iter::from_fn(|| transport.recv()).map(|m| m.slot).collect();
+            slots.sort_unstable();
+            assert_eq!(slots, (0..8).collect::<Vec<_>>(), "{kind:?}");
+            let st = transport.stats();
+            assert_eq!(st.sent_messages, 8);
+            assert_eq!(st.sent_payload_bytes, 8 * 64);
+            assert_eq!(st.received_messages, 8);
+            assert_eq!(st.wire_frames, 8);
+            assert_eq!(st.wire_bytes, 8 * (HEADER_LEN + 36 + 64) as u64);
+        }
+    }
+
+    #[test]
+    fn transport_kind_parses() {
+        assert_eq!(TransportKind::parse("channel"), Some(TransportKind::Channel));
+        assert_eq!(TransportKind::parse("tcp"), Some(TransportKind::Tcp));
+        assert_eq!(TransportKind::parse("uds"), Some(TransportKind::Uds));
+        assert_eq!(TransportKind::parse("unix"), Some(TransportKind::Uds));
+        assert_eq!(TransportKind::parse("smoke-signals"), None);
+    }
+}

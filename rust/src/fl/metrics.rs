@@ -64,8 +64,11 @@ pub struct RoundMetrics {
     /// records — degraded completion under `--quorum < 1.0`.
     pub degraded: bool,
     /// Uplink transport accounting for the round: messages/payload bytes
-    /// handed to senders, messages drained server-side, and total
-    /// send→receive queue latency. Zeros for the weight-space baselines.
+    /// handed to senders, messages drained server-side, total
+    /// send→receive queue latency, and — on the socket transports —
+    /// frames, framed bytes and backpressure stalls read off the wire
+    /// (zeros on the in-process channel). Zeros for the weight-space
+    /// baselines.
     pub wire: crate::coordinator::TransportStats,
 }
 
@@ -211,7 +214,13 @@ impl ExperimentResult {
                                 "received_messages",
                                 Json::Num(w.received_messages as f64),
                             )
-                            .set("transit_secs", Json::Num(w.transit_secs));
+                            .set("transit_secs", Json::Num(w.transit_secs))
+                            .set("wire_frames", Json::Num(w.wire_frames as f64))
+                            .set("wire_bytes", Json::Num(w.wire_bytes as f64))
+                            .set(
+                                "backpressure_stalls",
+                                Json::Num(w.backpressure_stalls as f64),
+                            );
                         o
                     })
                     .set("bpp", Json::Num(r.mean_bpp))
@@ -283,6 +292,9 @@ mod tests {
                 sent_payload_bytes: 4096,
                 received_messages: 12,
                 transit_secs: 0.25,
+                wire_frames: 14,
+                wire_bytes: 4300,
+                backpressure_stalls: 2,
             },
         }
     }
@@ -336,5 +348,11 @@ mod tests {
             4096
         );
         assert_eq!(wire.get("transit_secs").unwrap().as_f64().unwrap(), 0.25);
+        assert_eq!(wire.get("wire_frames").unwrap().as_usize().unwrap(), 14);
+        assert_eq!(wire.get("wire_bytes").unwrap().as_usize().unwrap(), 4300);
+        assert_eq!(
+            wire.get("backpressure_stalls").unwrap().as_usize().unwrap(),
+            2
+        );
     }
 }

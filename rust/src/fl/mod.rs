@@ -19,6 +19,7 @@
 pub mod client;
 pub mod data;
 pub mod metrics;
+pub mod remote;
 pub mod runner;
 pub mod server;
 
@@ -129,6 +130,15 @@ pub struct ExperimentConfig {
     /// `coordinator::ChaosTransport`, with every fault a pure function of
     /// (seed, round, client), so a faulted run is reproducible in CI.
     pub chaos: String,
+    /// Which uplink the experiment runs over (`--transport
+    /// {channel,tcp,uds}`, env `DELTAMASK_TRANSPORT`). `Channel` (the
+    /// default) is the in-process mpsc path; `Tcp`/`Uds` route every
+    /// update through the length-prefixed framed socket transport —
+    /// loopback inside `run_experiment` (one fresh socket link per round,
+    /// trajectory-identical to the channel), or across OS processes via
+    /// `deltamask serve` / `deltamask client-fleet`
+    /// ([`remote::serve_experiment`] / [`remote::run_client_fleet`]).
+    pub transport: crate::coordinator::TransportKind,
 }
 
 /// Default decode-worker count: `$DELTAMASK_DECODE_WORKERS` when set (CI's
@@ -250,6 +260,22 @@ pub fn on_decode_error_from_env() -> crate::coordinator::OnDecodeError {
     }
 }
 
+/// Default uplink transport: `$DELTAMASK_TRANSPORT` when set (CI's
+/// knob-matrix `uds-transport` entry runs the `fl_integration` and
+/// `churn` suites with `=uds` so every update crosses a real socket),
+/// else the in-process channel. Empty means unset; anything that is not
+/// `channel`/`tcp`/`uds` panics — the same fail-loudly policy as the
+/// other CI-gating knobs.
+pub fn transport_from_env() -> crate::coordinator::TransportKind {
+    match std::env::var("DELTAMASK_TRANSPORT") {
+        Ok(v) if v.is_empty() => crate::coordinator::TransportKind::default(),
+        Ok(v) => crate::coordinator::TransportKind::parse(&v).unwrap_or_else(|| {
+            panic!("DELTAMASK_TRANSPORT must be channel/tcp/uds, got '{v}'")
+        }),
+        Err(_) => crate::coordinator::TransportKind::default(),
+    }
+}
+
 /// Default chaos spec: `$DELTAMASK_CHAOS` when set (CI's knob-matrix
 /// `churn` entry injects a seeded fault plan under the full scaling
 /// stack), else empty (clean transport). Validated eagerly via
@@ -297,6 +323,7 @@ impl Default for ExperimentConfig {
             round_deadline_ms: round_deadline_ms_from_env(),
             on_decode_error: on_decode_error_from_env(),
             chaos: chaos_from_env(),
+            transport: transport_from_env(),
         }
     }
 }
@@ -358,7 +385,33 @@ impl ExperimentConfig {
 /// Run one experiment end-to-end with the configured method/backend.
 /// This is the single entry point the CLI, the examples and every bench use.
 pub fn run_experiment(cfg: &ExperimentConfig) -> Result<ExperimentResult> {
-    let backend_holder: BackendHolder = match cfg.backend {
+    with_backend(cfg, |backend| {
+        let mut runner = Runner::new(cfg, backend)?;
+        match cfg.method.as_str() {
+            "fine_tuning" => runner.run_finetuning(),
+            "linear_probing" => runner.run_linear_probing(),
+            name => {
+                // Arc because the round-resident pipeline's decode workers
+                // hold the codec across rounds.
+                let codec: std::sync::Arc<dyn crate::compress::UpdateCodec> =
+                    std::sync::Arc::from(
+                        crate::compress::by_name(name)
+                            .ok_or_else(|| anyhow!("unknown method '{name}'"))?,
+                    );
+                runner.run_codec(codec)
+            }
+        }
+    })
+}
+
+/// Construct the configured backend and hand it to `f` — the shared
+/// backend-selection path for [`run_experiment`] and the two-process
+/// entry points in [`remote`].
+pub(crate) fn with_backend<R>(
+    cfg: &ExperimentConfig,
+    f: impl FnOnce(&dyn crate::model::Backend) -> Result<R>,
+) -> Result<R> {
+    let holder: BackendHolder = match cfg.backend {
         BackendKind::Native => BackendHolder::Native(crate::native::NativeBackend),
         BackendKind::Xla => {
             let exec = std::sync::Arc::new(crate::runtime::Executor::from_artifacts()?);
@@ -366,26 +419,11 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> Result<ExperimentResult> {
             BackendHolder::Xla(crate::runtime::XlaBackend::new(exec, &cfg.arch, arch.c)?)
         }
     };
-    let backend: &dyn crate::model::Backend = match &backend_holder {
+    let backend: &dyn crate::model::Backend = match &holder {
         BackendHolder::Native(b) => b,
         BackendHolder::Xla(b) => b,
     };
-
-    let mut runner = Runner::new(cfg, backend)?;
-    match cfg.method.as_str() {
-        "fine_tuning" => runner.run_finetuning(),
-        "linear_probing" => runner.run_linear_probing(),
-        name => {
-            // Arc because the round-resident pipeline's decode workers
-            // hold the codec across rounds.
-            let codec: std::sync::Arc<dyn crate::compress::UpdateCodec> =
-                std::sync::Arc::from(
-                    crate::compress::by_name(name)
-                        .ok_or_else(|| anyhow!("unknown method '{name}'"))?,
-                );
-            runner.run_codec(codec)
-        }
-    }
+    f(backend)
 }
 
 enum BackendHolder {

@@ -1,0 +1,143 @@
+//! Two-process experiment entry points: `deltamask serve` hosts the
+//! coordinator half of an experiment on a TCP or Unix-domain socket,
+//! `deltamask client-fleet` connects the training half to it.
+//!
+//! Both processes are launched with the **same** `ExperimentConfig`
+//! (dataset, seed, rounds, knobs): data generation, parameter init and
+//! head initialization are deterministic in the config, so the two
+//! processes reconstruct identical state without ever shipping weights —
+//! only plans (θ_g, s_g, participants) and encoded mask updates cross the
+//! wire. A [`ConfigFingerprint`] in the fleet's `Hello` frames catches
+//! mismatched launches at connect time instead of as a silently divergent
+//! trajectory.
+//!
+//! The round loop itself is [`Runner::serve_codec`] /
+//! [`Runner::fleet_loop`]; this module only owns address parsing, backend
+//! construction and the socket handshake.
+
+use super::{ExperimentConfig, ExperimentResult, Runner};
+use crate::compress::UpdateCodec;
+use crate::coordinator::{
+    ConfigFingerprint, FleetLink, FleetServer, Listener, SocketAddrSpec, SocketConfig,
+    TransportKind,
+};
+use anyhow::{anyhow, bail, Result};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// How long `client-fleet` keeps retrying its first connection, covering
+/// the serve process still binding its listener.
+const CONNECT_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// The config facts both processes must agree on for lockstep
+/// trajectories (checked at handshake; everything else diverges loudly
+/// later via the plan/update frames themselves).
+fn fingerprint(cfg: &ExperimentConfig) -> ConfigFingerprint {
+    ConfigFingerprint {
+        seed: cfg.seed,
+        n_clients: cfg.n_clients as u64,
+        rounds: cfg.rounds as u64,
+        d: cfg.arch_config().d() as u64,
+    }
+}
+
+/// Resolve the experiment's update codec. The weight-space baselines
+/// (`fine_tuning` / `linear_probing`) never touch a transport, so serving
+/// them remotely is a config error, not a silent in-process fallback.
+fn codec_for(cfg: &ExperimentConfig) -> Result<Arc<dyn UpdateCodec>> {
+    match cfg.method.as_str() {
+        "fine_tuning" | "linear_probing" => {
+            bail!(
+                "method '{}' is a weight-space baseline and runs in-process only",
+                cfg.method
+            )
+        }
+        name => Ok(Arc::from(
+            crate::compress::by_name(name).ok_or_else(|| anyhow!("unknown method '{name}'"))?,
+        )),
+    }
+}
+
+/// The socket address for a remote run; `--transport channel` has none.
+fn addr_spec(cfg: &ExperimentConfig, addr: &str) -> Result<SocketAddrSpec> {
+    if cfg.transport == TransportKind::Channel {
+        bail!("serve/client-fleet need --transport tcp or --transport uds");
+    }
+    SocketAddrSpec::parse(cfg.transport, addr)
+}
+
+/// Host the coordinator half of an experiment: bind `listen`, wait for a
+/// client fleet whose config fingerprint matches, then run every round —
+/// plan broadcast, socket drain, aggregation, metrics — exactly as the
+/// in-process path would, and return the same [`ExperimentResult`].
+pub fn serve_experiment(cfg: &ExperimentConfig, listen: &str) -> Result<ExperimentResult> {
+    let spec = addr_spec(cfg, listen)?;
+    let codec = codec_for(cfg)?;
+    let scfg = SocketConfig::from_env();
+    let listener = Listener::bind(&spec)?;
+    // The bound spec, not the requested one: `tcp://127.0.0.1:0` resolves
+    // to a real port here.
+    eprintln!("[serve] listening on {}", listener.local_spec()?);
+    let mut fleet = FleetServer::accept_fleet(&listener, scfg, fingerprint(cfg))?;
+    eprintln!("[serve] fleet connected, running {} rounds", cfg.rounds);
+
+    let result = super::with_backend(cfg, |backend| {
+        let mut runner = Runner::new(cfg, backend)?;
+        runner.serve_codec(codec, &mut fleet)
+    });
+    // A UDS listener leaves its socket file behind; reclaim it so reruns
+    // bind cleanly even after an error.
+    if let SocketAddrSpec::Uds(path) = &spec {
+        let _ = std::fs::remove_file(path);
+    }
+    result
+}
+
+/// Run the training half of an experiment: dial the coordinator at
+/// `connect` over `conns` multiplexed OS connections (retrying until it
+/// binds), then follow its control stream until shutdown.
+pub fn run_client_fleet(cfg: &ExperimentConfig, connect: &str, conns: usize) -> Result<()> {
+    let spec = addr_spec(cfg, connect)?;
+    let codec = codec_for(cfg)?;
+    let scfg = SocketConfig::from_env();
+    let mut link = FleetLink::connect(&spec, conns, fingerprint(cfg), scfg, CONNECT_TIMEOUT)?;
+    eprintln!(
+        "[fleet] connected to {spec} with {} connection(s), {} clients",
+        conns.max(1),
+        cfg.n_clients
+    );
+    super::with_backend(cfg, |backend| {
+        let mut runner = Runner::new(cfg, backend)?;
+        runner.fleet_loop(codec, &mut link)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn baselines_are_refused_a_socket() {
+        let cfg = ExperimentConfig {
+            method: "fine_tuning".into(),
+            ..Default::default()
+        };
+        assert!(codec_for(&cfg).is_err());
+    }
+
+    #[test]
+    fn channel_transport_has_no_address() {
+        let cfg = ExperimentConfig::default();
+        assert_eq!(cfg.transport, TransportKind::Channel);
+        assert!(addr_spec(&cfg, "127.0.0.1:0").is_err());
+    }
+
+    #[test]
+    fn fingerprint_tracks_the_config() {
+        let a = ExperimentConfig::default();
+        let mut b = ExperimentConfig::default();
+        assert_eq!(fingerprint(&a), fingerprint(&b));
+        b.seed ^= 1;
+        assert_ne!(fingerprint(&a), fingerprint(&b));
+    }
+}

@@ -14,9 +14,10 @@ use super::server::MaskServer;
 use super::ExperimentConfig;
 use crate::compress::UpdateCodec;
 use crate::coordinator::{
-    drain_round, send_with_retry, ChannelTransport, ChaosTransport, ClientPool, DrainConfig,
-    DrainPipeline, FaultCounters, FaultPlan, Payload, PoolStats, RoundEngine, RoundPlan,
-    ScratchPool, ShardedAggregator, Transport, TransportStats, WireMessage,
+    drain_round, send_with_retry, ChannelTransport, ChaosTransport, ClientPool, ControlMsg,
+    DrainConfig, DrainPipeline, DrainReport, FaultCounters, FaultPlan, FleetLink, FleetServer,
+    Payload, PoolStats, RoundEngine, RoundPlan, ScratchPool, ShardedAggregator, SocketConfig,
+    SocketHub, Transport, TransportKind, TransportSender, TransportStats, WireMessage,
 };
 use crate::model::backend::{Backend, FtState, LpState, ModelParams};
 use crate::model::{accuracy, init_params, sample_mask_seeded};
@@ -29,6 +30,13 @@ use std::sync::Arc;
 /// `flaky_sends`, so default-flaky chaos recovers under retry while
 /// `flaky_sends>=3` exercises the escalation path.
 const SEND_ATTEMPTS: u32 = 3;
+
+/// OS connections a loopback socket experiment (`--transport tcp|uds`
+/// without `serve`/`client-fleet`) multiplexes its clients over, capped at
+/// the round's cohort size. Deliberately small: the design point is
+/// M connections ≪ K logical clients, and a low M exercises the
+/// session-multiplexing path on every round.
+const LOOPBACK_CONNS: usize = 4;
 
 /// Per-round accounting produced by the server-side drain loop.
 #[derive(Clone, Debug, Default)]
@@ -257,6 +265,18 @@ impl<'a> Runner<'a> {
         // Parsed once; `None` (the default) keeps the clean transport with
         // zero wrapping, so chaos-off runs are byte-for-byte the old path.
         let fault_plan = self.cfg.fault_plan()?;
+        // Loopback socket mode (`--transport tcp|uds`): bind one hub for
+        // the whole experiment; every round dials a fresh framed link so
+        // the channel's close-on-drop round lifecycle is preserved over a
+        // real socket and the two trajectories stay bitwise identical.
+        let hub = match self.cfg.transport {
+            TransportKind::Channel => None,
+            kind => Some(SocketHub::bind_loopback(
+                kind,
+                SocketConfig::from_env(),
+                LOOPBACK_CONNS,
+            )?),
+        };
         let pipeline = self
             .cfg
             .persistent_pipeline
@@ -281,6 +301,7 @@ impl<'a> Runner<'a> {
                 &codec,
                 drain_cfg,
                 fault_plan,
+                hub.as_ref(),
                 pipeline.as_ref(),
                 &mut resident_view,
             )?;
@@ -292,32 +313,7 @@ impl<'a> Runner<'a> {
             } else {
                 None
             };
-            let kf = plan.expected() as f64;
-            let dec_worker_ms: Vec<f64> = tally.dec_by_worker.iter().map(|s| s * 1e3).collect();
-            let shard_absorb_ms: Vec<f64> =
-                tally.absorb_by_shard.iter().map(|s| s * 1e3).collect();
-            rounds.push(RoundMetrics {
-                round,
-                kappa: plan.kappa,
-                mean_bits: tally.bits / kf,
-                mean_bpp: (tally.bits / kf) / d as f64,
-                enc_ms_mean: tally.enc_secs / kf * 1e3,
-                dec_ms_mean: tally.dec_secs / kf * 1e3,
-                dec_kernel_ms: tally.dec_secs * 1e3,
-                decode_workers: dec_worker_ms.len().max(1),
-                dec_worker_ms,
-                agg_shards: tally.agg_shards.max(1),
-                shard_absorb_ms,
-                pool_hits: tally.pool_hits,
-                pool_misses: tally.pool_misses,
-                train_loss: tally.loss / kf,
-                accuracy: acc,
-                pipeline: self.cfg.pipeline.as_str(),
-                faults: tally.faults,
-                quorum_met: tally.quorum_met,
-                degraded: tally.degraded,
-                wire: tally.wire,
-            });
+            rounds.push(self.metrics_for_round(&plan, tally, acc, d));
         }
         // Retire the resident view: the full stitch (incl. pseudo-counts)
         // brings `self.server` back to the exact unsharded state.
@@ -332,12 +328,14 @@ impl<'a> Runner<'a> {
     /// aggregate per the configured pipeline mode — through the resident
     /// `pipeline`/`resident_view` pair when the experiment is persistent,
     /// through per-round spawns otherwise.
+    #[allow(clippy::too_many_arguments)]
     fn run_round(
         &mut self,
         plan: &Arc<RoundPlan>,
         codec: &Arc<dyn UpdateCodec>,
         drain_cfg: DrainConfig,
         fault_plan: Option<FaultPlan>,
+        hub: Option<&SocketHub>,
         pipeline: Option<&DrainPipeline>,
         resident_view: &mut Option<ShardedAggregator<MaskServer>>,
     ) -> Result<RoundTally> {
@@ -345,7 +343,6 @@ impl<'a> Runner<'a> {
         let backend = self.backend;
         let params = &self.params;
         let data = &self.data;
-        let round = plan.round;
         let expected = plan.expected();
         let resync = codec.resync_scores();
         let plan_ref: &RoundPlan = plan.as_ref();
@@ -361,21 +358,35 @@ impl<'a> Runner<'a> {
             items.push((id, sess));
         }
 
-        let (channel, sender) = ChannelTransport::new();
+        // The uplink: an in-process channel, or a fresh loopback socket
+        // link dialed through the hub. Both have identical round
+        // lifecycles (senders dropping closes the transport) and identical
+        // send-time `sent_*` accounting, so the trajectories match.
+        let (bare_transport, bare_sender): (Box<dyn Transport>, Box<dyn TransportSender>) =
+            match hub {
+                Some(hub) => {
+                    let (sock, sender) = hub.round_link(expected)?;
+                    (Box::new(sock), sender)
+                }
+                None => {
+                    let (channel, sender) = ChannelTransport::new();
+                    (Box::new(channel), sender)
+                }
+            };
         // Chaos injection wraps both ends when a plan is active: the
         // sender so flaky pairs exercise the retry path, the receiver so
         // drop/duplicate/reorder/corrupt/straggle/die fire on delivery.
         // With no plan both ends are exactly the clean transport.
         let sender = match fault_plan {
-            Some(p) => p.wrap_sender(sender),
-            None => sender,
+            Some(p) => p.wrap_sender(bare_sender),
+            None => bare_sender,
         };
         let mut transport: Box<dyn Transport> = match fault_plan {
-            Some(p) => Box::new(ChaosTransport::new(channel, p)),
-            None => Box::new(channel),
+            Some(p) => Box::new(ChaosTransport::new(bare_transport, p)),
+            None => bare_transport,
         };
         let job = move |slot: usize, id: usize, sess: &mut ClientSession| -> Result<()> {
-            match client_round(
+            run_client_slot(
                 backend,
                 params,
                 &data.clients[id],
@@ -383,129 +394,31 @@ impl<'a> Runner<'a> {
                 cfg.local_epochs,
                 resync,
                 codec_ref,
+                sender.as_ref(),
                 slot,
+                id,
                 sess,
-            ) {
-                Ok(msg) => {
-                    // Bounded retry rides out transient send failures; on
-                    // exhaustion escalate with an in-band failure report so
-                    // the server hears about the loss instead of waiting on
-                    // the slot. If even that send fails, the server already
-                    // aborted the round (receiver dropped) and its error is
-                    // the root cause — no client error is manufactured.
-                    if let Err(e) = send_with_retry(
-                        sender.as_ref(),
-                        msg,
-                        SEND_ATTEMPTS,
-                        std::time::Duration::from_millis(1),
-                    ) {
-                        let _ = sender.send(WireMessage {
-                            round,
-                            client_id: id,
-                            slot,
-                            enc_secs: 0.0,
-                            loss: 0.0,
-                            payload: Payload::Failed(format!("client {id}: {e}")),
-                        });
-                    }
-                    Ok(())
-                }
-                Err(e) => {
-                    // Report in-band so the server never waits on us, then
-                    // surface the error through the pool result.
-                    let _ = sender.send(WireMessage {
-                        round,
-                        client_id: id,
-                        slot,
-                        enc_secs: 0.0,
-                        loss: 0.0,
-                        payload: Payload::Failed(e.to_string()),
-                    });
-                    Err(e)
-                }
-            }
+            )
         };
 
         let server = &mut self.server;
         let dec_pool = &self.scratch;
         let server_loop = move || -> Result<RoundTally> {
             // All decoding + aggregation happens inside the coordinator's
-            // drain loop; the runner only reduces the report. With
-            // `agg_shards > 1` the round drains into a dimension-sharded
-            // view of the server — the resident one (synced back, kept)
-            // under the persistent pipeline, a per-round one (stitched
-            // back, dropped) otherwise; a failed drain leaves the view's
-            // absorb lanes joined/parked without touching the server.
-            let (report, agg_shards, absorb_by_shard, lane_pool) =
-                match (pipeline, resident_view.as_mut()) {
-                    (Some(pipe), Some(view)) => {
-                        let lanes_before = view.lane_pool_stats();
-                        let report = pipe.drain_round(&mut *transport, plan, codec, view)?;
-                        let lane_pool = view.lane_pool_stats().delta_since(lanes_before);
-                        server.sync_from_shards(view);
-                        (
-                            report,
-                            view.shard_count(),
-                            view.absorb_secs_by_shard(),
-                            lane_pool,
-                        )
-                    }
-                    (Some(pipe), None) => {
-                        let report = pipe.drain_round(&mut *transport, plan, codec, server)?;
-                        (report, 1, Vec::new(), PoolStats::default())
-                    }
-                    (None, _) if drain_cfg.resolved_shards() > 1 => {
-                        let mut view = server.shard_view(drain_cfg.resolved_shards());
-                        let report = drain_round(
-                            &mut *transport,
-                            plan,
-                            codec_ref,
-                            &mut view,
-                            drain_cfg,
-                            dec_pool,
-                        )?;
-                        let shards = view.shard_count();
-                        let absorb = view.absorb_secs_by_shard();
-                        let lane_pool = view.lane_pool_stats();
-                        server.adopt_shards(view);
-                        (report, shards, absorb, lane_pool)
-                    }
-                    (None, _) => {
-                        let report = drain_round(
-                            &mut *transport,
-                            plan,
-                            codec_ref,
-                            server,
-                            drain_cfg,
-                            dec_pool,
-                        )?;
-                        (report, 1, Vec::new(), PoolStats::default())
-                    }
-                };
-            // Reduce the report before moving its per-worker vector out
-            // (a struct expression evaluates fields in order, so borrowing
-            // `report` after the move would not compile).
-            let pool = report.pool.merged(lane_pool);
-            let enc_secs = report.total_enc_secs();
-            let loss = report.total_loss();
+            // drain loop (`drain_dispatch`); the runner only reduces the
+            // report into the round tally.
+            let out = drain_dispatch(
+                &mut *transport,
+                plan,
+                codec,
+                drain_cfg,
+                pipeline,
+                resident_view,
+                server,
+                dec_pool,
+            )?;
             let wire = transport.stats();
-            Ok(RoundTally {
-                // Exact byte accounting from the transport (integer-valued,
-                // so order-independent).
-                bits: wire.sent_payload_bytes as f64 * 8.0,
-                enc_secs,
-                dec_secs: report.dec_secs,
-                dec_by_worker: report.dec_by_worker,
-                agg_shards,
-                absorb_by_shard,
-                pool_hits: pool.hits,
-                pool_misses: pool.misses,
-                loss,
-                faults: report.faults,
-                quorum_met: report.quorum_met,
-                degraded: report.degraded,
-                wire,
-            })
+            Ok(tally_from(out, wire))
         };
 
         let pool = ClientPool::sized_for(expected);
@@ -533,6 +446,215 @@ impl<'a> Runner<'a> {
             (Err(_), Some(e)) => Err(e),
             (other, _) => other,
         }
+    }
+
+    /// Assemble one round's metrics record from the drain tally.
+    fn metrics_for_round(
+        &self,
+        plan: &RoundPlan,
+        tally: RoundTally,
+        acc: Option<f64>,
+        d: usize,
+    ) -> RoundMetrics {
+        let kf = plan.expected() as f64;
+        let dec_worker_ms: Vec<f64> = tally.dec_by_worker.iter().map(|s| s * 1e3).collect();
+        let shard_absorb_ms: Vec<f64> = tally.absorb_by_shard.iter().map(|s| s * 1e3).collect();
+        RoundMetrics {
+            round: plan.round,
+            kappa: plan.kappa,
+            mean_bits: tally.bits / kf,
+            mean_bpp: (tally.bits / kf) / d as f64,
+            enc_ms_mean: tally.enc_secs / kf * 1e3,
+            dec_ms_mean: tally.dec_secs / kf * 1e3,
+            dec_kernel_ms: tally.dec_secs * 1e3,
+            decode_workers: dec_worker_ms.len().max(1),
+            dec_worker_ms,
+            agg_shards: tally.agg_shards.max(1),
+            shard_absorb_ms,
+            pool_hits: tally.pool_hits,
+            pool_misses: tally.pool_misses,
+            train_loss: tally.loss / kf,
+            accuracy: acc,
+            pipeline: self.cfg.pipeline.as_str(),
+            faults: tally.faults,
+            quorum_met: tally.quorum_met,
+            degraded: tally.degraded,
+            wire: tally.wire,
+        }
+    }
+
+    /// Serve the experiment to a remote client fleet (`deltamask serve`):
+    /// the same round loop as [`Runner::run_codec`] — identical planning,
+    /// drain dispatch, metrics and final stitch — except each plan is
+    /// broadcast over the fleet's control connections and the encoded
+    /// updates drain off the fleet's socket transport instead of an
+    /// in-process pool. Training happens in the fleet process; this
+    /// runner's sessions only mirror head initialization so both sides
+    /// start from identical parameters.
+    pub fn serve_codec(
+        &mut self,
+        codec: Arc<dyn UpdateCodec>,
+        fleet: &mut FleetServer,
+    ) -> Result<ExperimentResult> {
+        let d = self.params.cfg.d();
+        let sw = Stopwatch::new();
+        let head_bits = self.init_head()?;
+        let mut rounds = Vec::with_capacity(self.cfg.rounds);
+
+        let drain_cfg =
+            DrainConfig::sharded(self.cfg.pipeline, self.cfg.decode_workers, self.cfg.agg_shards)
+                .with_policy(self.cfg.drain_policy());
+        let fault_plan = self.cfg.fault_plan()?;
+        let pipeline = self
+            .cfg
+            .persistent_pipeline
+            .then(|| DrainPipeline::new(drain_cfg));
+        let mut resident_view: Option<ShardedAggregator<MaskServer>> = match &pipeline {
+            Some(pipe) if pipe.config().shards > 1 => {
+                Some(self.server.shard_view(pipe.config().shards))
+            }
+            _ => None,
+        };
+
+        // One socket transport for the whole experiment. Chaos wraps it
+        // once: verdicts are pure in (seed, round, client), so a resident
+        // wrapper delivers the same fault schedule as the loopback path's
+        // per-round wrappers.
+        let mut transport: Box<dyn Transport> = {
+            let sock = fleet.take_transport();
+            match fault_plan {
+                Some(p) => Box::new(ChaosTransport::new(sock, p)),
+                None => Box::new(sock),
+            }
+        };
+
+        for round in 0..self.cfg.rounds {
+            let plan = Arc::new(
+                self.engine
+                    .plan(round, &self.server.theta_g, &self.server.s_g),
+            );
+            fleet.broadcast_plan(&plan)?;
+            let before = transport.stats();
+            let out = drain_dispatch(
+                &mut *transport,
+                &plan,
+                &codec,
+                drain_cfg,
+                pipeline.as_ref(),
+                &mut resident_view,
+                &mut self.server,
+                &self.scratch,
+            )?;
+            // Quarantine straggler traffic still in flight (uncounted, and
+            // clears any chaos hold buffers), then wait for every live
+            // connection to pass the round's end-of-round barrier so the
+            // next round starts from a quiet wire.
+            transport.discard_inflight();
+            fleet.end_round(round);
+            let wire = transport.stats().delta_since(&before);
+            let tally = tally_from(out, wire);
+            let acc = if (round + 1) % self.cfg.eval_every == 0 || round + 1 == self.cfg.rounds
+            {
+                Some(self.eval_global(plan.seed)?)
+            } else {
+                None
+            };
+            rounds.push(self.metrics_for_round(&plan, tally, acc, d));
+        }
+        if let Some(view) = resident_view.take() {
+            self.server.adopt_shards(view);
+        }
+        fleet.shutdown()?;
+        Ok(self.result_with_head(rounds, head_bits, sw.elapsed_secs()))
+    }
+
+    /// The client-fleet side of a two-process experiment
+    /// (`deltamask client-fleet`): follow the coordinator's control
+    /// stream, training and uploading every planned round until the
+    /// shutdown frame arrives. Head initialization runs locally first —
+    /// both processes derive it from the same seed, keeping parameters in
+    /// lockstep without ever shipping weights.
+    pub fn fleet_loop(
+        &mut self,
+        codec: Arc<dyn UpdateCodec>,
+        link: &mut FleetLink,
+    ) -> Result<()> {
+        self.init_head()?;
+        let fault_plan = self.cfg.fault_plan()?;
+        loop {
+            match link.recv_control()? {
+                ControlMsg::Plan(pw) => {
+                    let plan = Arc::new(pw.into_round_plan());
+                    let round = plan.round;
+                    self.fleet_round(&plan, &codec, fault_plan, link)?;
+                    // The barrier mark: tells the coordinator this process
+                    // has nothing more in flight for `round`.
+                    link.send_eor(round)?;
+                }
+                ControlMsg::Shutdown => return Ok(()),
+            }
+        }
+    }
+
+    /// One fleet-side round: identical client work to [`Runner::run_round`]
+    /// (same pool, same retry/escalation policy, same chaos sender wrap),
+    /// with the coordinator's socket as the uplink. Client errors are
+    /// reported in-band and logged, never fatal here — the coordinator's
+    /// drain policy owns the abort/degrade verdict.
+    fn fleet_round(
+        &mut self,
+        plan: &Arc<RoundPlan>,
+        codec: &Arc<dyn UpdateCodec>,
+        fault_plan: Option<FaultPlan>,
+        link: &FleetLink,
+    ) -> Result<()> {
+        let cfg = self.cfg;
+        let backend = self.backend;
+        let params = &self.params;
+        let data = &self.data;
+        let expected = plan.expected();
+        let resync = codec.resync_scores();
+        let plan_ref: &RoundPlan = plan.as_ref();
+        let codec_ref: &dyn UpdateCodec = codec.as_ref();
+
+        let mut items: Vec<(usize, ClientSession)> = Vec::with_capacity(expected);
+        for &id in &plan.participants {
+            let sess = self.sessions[id]
+                .take()
+                .ok_or_else(|| anyhow!("client {id} session already in flight"))?;
+            items.push((id, sess));
+        }
+
+        let sender = match fault_plan {
+            Some(p) => p.wrap_sender(link.sender()),
+            None => link.sender(),
+        };
+        let job = move |slot: usize, id: usize, sess: &mut ClientSession| -> Result<()> {
+            run_client_slot(
+                backend,
+                params,
+                &data.clients[id],
+                plan_ref,
+                cfg.local_epochs,
+                resync,
+                codec_ref,
+                sender.as_ref(),
+                slot,
+                id,
+                sess,
+            )
+        };
+        let pool = ClientPool::sized_for(expected);
+        let finished = pool.run(items, job);
+        for (id, sess, out) in finished {
+            if let Some(sess) = sess {
+                self.sessions[id] = Some(sess);
+            }
+            if let Err(e) = out {
+                eprintln!("[fleet] client {id} failed in round {}: {e:#}", plan.round);
+            }
+        }
+        Ok(())
     }
 
     /// Evaluate the global model with the posterior-mean (expected) mask
@@ -783,6 +905,185 @@ impl<'a> Runner<'a> {
             });
         }
         Ok(self.result(rounds, sw.elapsed_secs()))
+    }
+}
+
+/// Per-round accounting produced by the server-side drain dispatch,
+/// before the transport's wire stats are folded in.
+struct DrainOutcome {
+    report: DrainReport,
+    agg_shards: usize,
+    absorb_by_shard: Vec<f64>,
+    lane_pool: PoolStats,
+}
+
+/// The four-way drain dispatch shared by the in-process round loop and the
+/// two-process serve loop. With `agg_shards > 1` the round drains into a
+/// dimension-sharded view of the server — the resident one (synced back,
+/// kept) under the persistent pipeline, a per-round one (stitched back,
+/// dropped) otherwise; a failed drain leaves the view's absorb lanes
+/// joined/parked without touching the server.
+#[allow(clippy::too_many_arguments)]
+fn drain_dispatch(
+    transport: &mut dyn Transport,
+    plan: &Arc<RoundPlan>,
+    codec: &Arc<dyn UpdateCodec>,
+    drain_cfg: DrainConfig,
+    pipeline: Option<&DrainPipeline>,
+    resident_view: &mut Option<ShardedAggregator<MaskServer>>,
+    server: &mut MaskServer,
+    dec_pool: &ScratchPool,
+) -> Result<DrainOutcome> {
+    let codec_ref: &dyn UpdateCodec = codec.as_ref();
+    let (report, agg_shards, absorb_by_shard, lane_pool) =
+        match (pipeline, resident_view.as_mut()) {
+            (Some(pipe), Some(view)) => {
+                let lanes_before = view.lane_pool_stats();
+                let report = pipe.drain_round(&mut *transport, plan, codec, view)?;
+                let lane_pool = view.lane_pool_stats().delta_since(lanes_before);
+                server.sync_from_shards(view);
+                (
+                    report,
+                    view.shard_count(),
+                    view.absorb_secs_by_shard(),
+                    lane_pool,
+                )
+            }
+            (Some(pipe), None) => {
+                let report = pipe.drain_round(&mut *transport, plan, codec, server)?;
+                (report, 1, Vec::new(), PoolStats::default())
+            }
+            (None, _) if drain_cfg.resolved_shards() > 1 => {
+                let mut view = server.shard_view(drain_cfg.resolved_shards());
+                let report = drain_round(
+                    &mut *transport,
+                    plan,
+                    codec_ref,
+                    &mut view,
+                    drain_cfg,
+                    dec_pool,
+                )?;
+                let shards = view.shard_count();
+                let absorb = view.absorb_secs_by_shard();
+                let lane_pool = view.lane_pool_stats();
+                server.adopt_shards(view);
+                (report, shards, absorb, lane_pool)
+            }
+            (None, _) => {
+                let report = drain_round(
+                    &mut *transport,
+                    plan,
+                    codec_ref,
+                    server,
+                    drain_cfg,
+                    dec_pool,
+                )?;
+                (report, 1, Vec::new(), PoolStats::default())
+            }
+        };
+    Ok(DrainOutcome {
+        report,
+        agg_shards,
+        absorb_by_shard,
+        lane_pool,
+    })
+}
+
+/// Reduce a drain outcome plus the round's wire accounting into the tally
+/// the metrics layer consumes.
+fn tally_from(out: DrainOutcome, wire: TransportStats) -> RoundTally {
+    let report = out.report;
+    // Reduce the report before moving its per-worker vector out (a struct
+    // expression evaluates fields in order, so borrowing `report` after
+    // the move would not compile).
+    let pool = report.pool.merged(out.lane_pool);
+    let enc_secs = report.total_enc_secs();
+    let loss = report.total_loss();
+    RoundTally {
+        // Exact byte accounting from the transport (integer-valued, so
+        // order-independent).
+        bits: wire.sent_payload_bytes as f64 * 8.0,
+        enc_secs,
+        dec_secs: report.dec_secs,
+        dec_by_worker: report.dec_by_worker,
+        agg_shards: out.agg_shards,
+        absorb_by_shard: out.absorb_by_shard,
+        pool_hits: pool.hits,
+        pool_misses: pool.misses,
+        loss,
+        faults: report.faults,
+        quorum_met: report.quorum_met,
+        degraded: report.degraded,
+        wire,
+    }
+}
+
+/// The client half of one round slot, shared by the in-process pool job
+/// and the fleet process: train + encode (`client_round`), send with
+/// bounded retry, escalate exhaustion as an in-band `Payload::Failed`
+/// report.
+#[allow(clippy::too_many_arguments)]
+fn run_client_slot(
+    backend: &dyn Backend,
+    params: &ModelParams,
+    shard: &ClientData,
+    plan: &RoundPlan,
+    local_epochs: usize,
+    resync: bool,
+    codec: &dyn UpdateCodec,
+    sender: &dyn TransportSender,
+    slot: usize,
+    id: usize,
+    sess: &mut ClientSession,
+) -> Result<()> {
+    match client_round(
+        backend,
+        params,
+        shard,
+        plan,
+        local_epochs,
+        resync,
+        codec,
+        slot,
+        sess,
+    ) {
+        Ok(msg) => {
+            // Bounded retry rides out transient send failures; on
+            // exhaustion escalate with an in-band failure report so the
+            // server hears about the loss instead of waiting on the slot.
+            // If even that send fails, the server already ended the round
+            // (receiver dropped) and its error is the root cause — no
+            // client error is manufactured.
+            if let Err(e) = send_with_retry(
+                sender,
+                msg,
+                SEND_ATTEMPTS,
+                std::time::Duration::from_millis(1),
+            ) {
+                let _ = sender.send(WireMessage {
+                    round: plan.round,
+                    client_id: id,
+                    slot,
+                    enc_secs: 0.0,
+                    loss: 0.0,
+                    payload: Payload::Failed(format!("client {id}: {e}")),
+                });
+            }
+            Ok(())
+        }
+        Err(e) => {
+            // Report in-band so the server never waits on us, then
+            // surface the error through the pool result.
+            let _ = sender.send(WireMessage {
+                round: plan.round,
+                client_id: id,
+                slot,
+                enc_secs: 0.0,
+                loss: 0.0,
+                payload: Payload::Failed(e.to_string()),
+            });
+            Err(e)
+        }
     }
 }
 

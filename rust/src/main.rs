@@ -1,10 +1,12 @@
 //! `deltamask` — the L3 coordinator CLI.
 //!
 //! Subcommands:
-//!   train     run one federated experiment (method × dataset × settings)
-//!   sweep     run a method sweep over datasets and print a paper-style table
-//!   filters   micro-benchmark the probabilistic filters (Table 4 regime)
-//!   info      print manifest / artifact status
+//!   train         run one federated experiment (method × dataset × settings)
+//!   serve         host the coordinator half of an experiment on a socket
+//!   client-fleet  connect the training half to a running `serve`
+//!   sweep         run a method sweep over datasets and print a paper-style table
+//!   filters       micro-benchmark the probabilistic filters (Table 4 regime)
+//!   info          print manifest / artifact status
 //!
 //! Examples:
 //!   deltamask train --method deltamask --dataset cifar100 --rounds 30
@@ -18,6 +20,11 @@
 //!       (fault-tolerant completion: finish degraded over ⌈0.8·K⌉ survivors)
 //!   deltamask train --chaos seed=7,drop=0.1,straggle=0.2 --quorum 0.6
 //!       (deterministic churn injection — same seed, same faults, every run)
+//!   deltamask train --transport uds
+//!       (route every update through the framed socket transport, loopback)
+//!   deltamask serve --transport uds --listen /tmp/dm.sock --rounds 30
+//!   deltamask client-fleet --transport uds --connect /tmp/dm.sock --rounds 30
+//!       (two OS processes, same config both sides; also tcp + host:port)
 //!   deltamask sweep --datasets cifar10,svhn --methods deltamask,fedpm
 //!   deltamask filters --entries 100000
 //!
@@ -26,11 +33,12 @@
 //! docs/SCALING.md.
 
 use deltamask::bench::Table;
-use deltamask::coordinator::{FaultPlan, OnDecodeError, PipelineMode};
+use deltamask::coordinator::{FaultPlan, OnDecodeError, PipelineMode, TransportKind};
+use deltamask::fl::metrics::ExperimentResult;
 use deltamask::fl::{
     agg_shards_from_env, chaos_from_env, decode_workers_from_env, on_decode_error_from_env,
-    persistent_pipeline_from_env, quorum_from_env, round_deadline_ms_from_env, run_experiment,
-    BackendKind, ExperimentConfig, HeadInit,
+    persistent_pipeline_from_env, quorum_from_env, remote, round_deadline_ms_from_env,
+    run_experiment, transport_from_env, BackendKind, ExperimentConfig, HeadInit,
 };
 use deltamask::util::cli::Args;
 
@@ -79,6 +87,12 @@ fn parse_cfg(args: &Args) -> ExperimentConfig {
             .get("chaos")
             .map(|s| s.to_string())
             .unwrap_or_else(chaos_from_env),
+        transport: TransportKind::parse(args.choice(
+            "transport",
+            &["channel", "tcp", "uds"],
+            transport_from_env().as_str(),
+        ))
+        .expect("choice() already validated the value"),
     };
     assert!(
         cfg.quorum > 0.0 && cfg.quorum <= 1.0,
@@ -99,10 +113,9 @@ fn parse_cfg(args: &Args) -> ExperimentConfig {
     cfg
 }
 
-fn cmd_train(args: &Args) -> anyhow::Result<()> {
-    let cfg = parse_cfg(args);
+fn print_banner(verb: &str, cfg: &ExperimentConfig) {
     eprintln!(
-        "training: method={} dataset={} arch={} d={} N={} R={} rho={} alpha={} backend={:?} pipeline={} decode_workers={} agg_shards={} persistent_pipeline={} quorum={} round_deadline_ms={} on_decode_error={} chaos={}",
+        "{verb}: method={} dataset={} arch={} d={} N={} R={} rho={} alpha={} backend={:?} pipeline={} decode_workers={} agg_shards={} persistent_pipeline={} quorum={} round_deadline_ms={} on_decode_error={} chaos={} transport={}",
         cfg.method,
         cfg.dataset,
         cfg.arch,
@@ -119,9 +132,15 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         cfg.quorum,
         cfg.round_deadline_ms,
         cfg.on_decode_error.as_str(),
-        if cfg.chaos.is_empty() { "off" } else { &cfg.chaos }
+        if cfg.chaos.is_empty() { "off" } else { &cfg.chaos },
+        cfg.transport.as_str()
     );
-    let res = run_experiment(&cfg)?;
+}
+
+/// Per-round lines, the final summary line, and the optional `--out` JSON
+/// dump — shared by `train` and `serve` so a two-process run is inspected
+/// exactly like an in-process one.
+fn print_result(args: &Args, res: &ExperimentResult) -> anyhow::Result<()> {
     for r in &res.rounds {
         if let Some(acc) = r.accuracy {
             eprintln!(
@@ -144,6 +163,39 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         std::fs::write(out, res.to_json().to_string_pretty())?;
         eprintln!("wrote {out}");
     }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> anyhow::Result<()> {
+    let cfg = parse_cfg(args);
+    print_banner("training", &cfg);
+    let res = run_experiment(&cfg)?;
+    print_result(args, &res)
+}
+
+/// Host the coordinator half of a two-process experiment. Both processes
+/// must be launched with the same experiment options; the handshake
+/// fingerprint rejects mismatches.
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let cfg = parse_cfg(args);
+    let listen = args
+        .get("listen")
+        .ok_or_else(|| anyhow::anyhow!("serve needs --listen <addr|path>"))?;
+    print_banner("serving", &cfg);
+    let res = remote::serve_experiment(&cfg, listen)?;
+    print_result(args, &res)
+}
+
+/// Run the training half of a two-process experiment against a `serve`.
+fn cmd_client_fleet(args: &Args) -> anyhow::Result<()> {
+    let cfg = parse_cfg(args);
+    let connect = args
+        .get("connect")
+        .ok_or_else(|| anyhow::anyhow!("client-fleet needs --connect <addr|path>"))?;
+    let conns = args.usize("connections", 4);
+    print_banner("fleet", &cfg);
+    remote::run_client_fleet(&cfg, connect, conns)?;
+    eprintln!("fleet: coordinator shut the experiment down cleanly");
     Ok(())
 }
 
@@ -247,12 +299,14 @@ fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
     match args.positional.first().map(|s| s.as_str()) {
         Some("train") => cmd_train(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("client-fleet") => cmd_client_fleet(&args),
         Some("sweep") => cmd_sweep(&args),
         Some("filters") => cmd_filters(&args),
         Some("info") => cmd_info(),
         _ => {
             eprintln!(
-                "usage: deltamask <train|sweep|filters|info> [--options]\n\
+                "usage: deltamask <train|serve|client-fleet|sweep|filters|info> [--options]\n\
                  see `rust/src/main.rs` header for examples"
             );
             Ok(())

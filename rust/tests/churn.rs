@@ -22,7 +22,7 @@ use deltamask::compress::{self, Encoded, ScratchPool, UpdateCodec};
 use deltamask::coordinator::{
     drain_round, ChannelTransport, ChaosTransport, DrainConfig, DrainPipeline, DrainPolicy,
     DrainReport, FaultCounters, FaultPlan, FaultVerdict, OnDecodeError, Payload, PipelineMode,
-    RoundEngine, RoundPlan, Transport, WireMessage,
+    RoundEngine, RoundPlan, Transport, TransportKind, WireMessage,
 };
 use deltamask::fl::server::MaskServer;
 use deltamask::fl::{run_experiment, BackendKind, ExperimentConfig, HeadInit};
@@ -708,6 +708,10 @@ fn mini_cfg(method: &str) -> ExperimentConfig {
         round_deadline_ms: 0,
         on_decode_error: OnDecodeError::Abort,
         chaos: String::new(),
+        // The CI uds-transport knob-matrix entry sets
+        // DELTAMASK_TRANSPORT=uds, re-running this whole suite — chaos,
+        // quorum, retry and all — over the loopback framed socket.
+        transport: deltamask::fl::transport_from_env(),
     }
 }
 
@@ -886,4 +890,126 @@ fn relaxed_policy_without_chaos_is_bitwise_dormant_end_to_end() {
             assert_eq!(m.wire.sent_messages, 5, "round {}", m.round);
         }
     }
+}
+
+// ---------------------------------------------------------------------
+// End-to-end: the wire (loopback socket) vs the in-process channel
+// ---------------------------------------------------------------------
+
+/// The per-round facts that must be transport-invariant: the model
+/// trajectory (loss / bits / accuracy), the fault accounting and
+/// completion verdicts, and the send-time wire counters. Timing fields
+/// and the socket-only frame/backpressure counters are excluded — those
+/// are allowed (expected, even) to differ across transports.
+fn assert_transport_invariant(
+    label: &str,
+    a: &deltamask::fl::ExperimentResult,
+    b: &deltamask::fl::ExperimentResult,
+) {
+    assert_eq!(a.rounds.len(), b.rounds.len(), "{label}: round count");
+    for (x, y) in a.rounds.iter().zip(&b.rounds) {
+        let r = x.round;
+        assert_eq!(x.train_loss, y.train_loss, "{label} round {r}: loss");
+        assert_eq!(x.mean_bits, y.mean_bits, "{label} round {r}: bits");
+        assert_eq!(x.mean_bpp, y.mean_bpp, "{label} round {r}: bpp");
+        assert_eq!(x.accuracy, y.accuracy, "{label} round {r}: accuracy");
+        assert_eq!(x.faults, y.faults, "{label} round {r}: fault counters");
+        assert_eq!(x.quorum_met, y.quorum_met, "{label} round {r}: quorum");
+        assert_eq!(x.degraded, y.degraded, "{label} round {r}: degraded");
+        assert_eq!(
+            x.wire.sent_messages, y.wire.sent_messages,
+            "{label} round {r}: sent messages"
+        );
+        assert_eq!(
+            x.wire.sent_payload_bytes, y.wire.sent_payload_bytes,
+            "{label} round {r}: sent payload bytes"
+        );
+    }
+    assert_eq!(
+        a.final_accuracy(),
+        b.final_accuracy(),
+        "{label}: final accuracy"
+    );
+}
+
+/// Pointing the experiment at a real socket changes nothing but the wire:
+/// for both TCP and Unix-domain loopback, a clean run is
+/// trajectory-identical to the in-process channel — and the socket run
+/// demonstrably framed its traffic (the channel reports zero frames).
+#[test]
+fn clean_socket_trajectories_match_the_channel() {
+    let mut base = mini_cfg("deltamask");
+    base.transport = TransportKind::Channel;
+    let channel = run_experiment(&base).unwrap();
+    for kind in [TransportKind::Tcp, TransportKind::Uds] {
+        let mut cfg = mini_cfg("deltamask");
+        cfg.transport = kind;
+        let socket = run_experiment(&cfg).unwrap();
+        assert_transport_invariant(kind.as_str(), &channel, &socket);
+        for m in &channel.rounds {
+            assert_eq!(m.wire.wire_frames, 0, "channel framed round {}", m.round);
+        }
+        for m in &socket.rounds {
+            // Every accepted message crossed the wire as a frame, and the
+            // 16-byte headers make the wire strictly fatter than the
+            // payloads. (Both counters are settled by the time a strict
+            // round completes: the drain saw all five updates.)
+            assert!(
+                m.wire.wire_frames >= m.wire.sent_messages,
+                "{} round {}: {} frames < {} messages",
+                kind.as_str(),
+                m.round,
+                m.wire.wire_frames,
+                m.wire.sent_messages
+            );
+            assert!(
+                m.wire.wire_bytes > m.wire.sent_payload_bytes,
+                "{} round {}: framing overhead missing",
+                kind.as_str(),
+                m.round
+            );
+        }
+    }
+}
+
+/// The PR 7 fault model composes onto the socket for free: the same
+/// seeded chaos spec over uds loopback reproduces the channel run's
+/// fault counters, degraded verdicts, losses and accuracy exactly — and a
+/// socket replay of the same seed reproduces the socket run.
+#[test]
+fn chaos_over_the_socket_reproduces_the_channel_fault_trajectory() {
+    let n = 5;
+    let rounds = 3;
+    // Same scenario search as the drain-shape test: every round keeps
+    // quorum (3 of 5), at least one round actually degrades; flaky sends
+    // additionally exercise the socket sender's retry path.
+    let fault = find_plan(
+        |seed| {
+            FaultPlan::parse(&format!("seed={seed},drop=0.25,die=0.2,flaky=0.5")).unwrap()
+        },
+        |f| {
+            let lost = |r: usize| {
+                (0..n)
+                    .filter(|&c| f.verdict(r, c) != FaultVerdict::Deliver)
+                    .count()
+            };
+            (0..rounds).all(|r| n - lost(r) >= 3) && (0..rounds).map(lost).sum::<usize>() >= 1
+        },
+    );
+    let mut base = mini_cfg("deltamask");
+    base.quorum = 0.6;
+    base.chaos = format!("seed={},drop=0.25,die=0.2,flaky=0.5", fault.seed);
+
+    base.transport = TransportKind::Channel;
+    let channel = run_experiment(&base).unwrap();
+    base.transport = TransportKind::Uds;
+    let socket = run_experiment(&base).unwrap();
+    let socket_replay = run_experiment(&base).unwrap();
+
+    assert_transport_invariant("uds-chaos", &channel, &socket);
+    assert_transport_invariant("uds-replay", &socket, &socket_replay);
+    assert!(
+        socket.rounds.iter().any(|m| m.degraded),
+        "the searched fault plan must actually degrade a round"
+    );
 }

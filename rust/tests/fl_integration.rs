@@ -51,6 +51,10 @@ fn base_cfg() -> ExperimentConfig {
         round_deadline_ms: deltamask::fl::round_deadline_ms_from_env(),
         on_decode_error: deltamask::fl::on_decode_error_from_env(),
         chaos: deltamask::fl::chaos_from_env(),
+        // The uds-transport knob-matrix entry sets DELTAMASK_TRANSPORT=uds,
+        // rerouting every update in this suite through the length-prefixed
+        // framed socket transport over a loopback Unix socket.
+        transport: deltamask::fl::transport_from_env(),
     }
 }
 

@@ -1,0 +1,635 @@
+//! Framed socket transport suite: frame-codec totality under mutation,
+//! bounded-admission backpressure, multiplexed-session integrity, torn-frame
+//! connection death, the `recv_deadline` outcome ordering over a real wire —
+//! and the two-process `serve` / `client-fleet` end-to-end, asserted
+//! trajectory-identical to the in-process channel run.
+//!
+//! The loopback tests build directly on the socket module's public surface
+//! (`SocketHub`, `FleetServer`, the frame codec); the end-to-end test drives
+//! the installed binary through `CARGO_BIN_EXE_deltamask`, so the whole CLI
+//! path — config parsing, handshake fingerprint, plan broadcast, EOR
+//! barrier, shutdown — is under test, not just the library.
+
+use deltamask::compress::Encoded;
+use deltamask::coordinator::transport::socket::{
+    encode_eor, encode_hello, encode_message, encode_plan, encode_shutdown, parse_frame,
+    parse_header, Hello, Listener, Stream, HEADER_LEN, MAGIC, VERSION,
+};
+use deltamask::coordinator::{
+    ConfigFingerprint, FleetServer, Payload, RecvOutcome, RoundEngine, SocketAddrSpec,
+    SocketConfig, SocketHub, Transport, TransportKind, TransportSender, WireMessage,
+};
+use deltamask::util::json::Json;
+use deltamask::util::rng::Xoshiro256pp;
+use std::io::Write as _;
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+/// Deterministic per-client payload bytes, so receivers can verify that a
+/// frame's content belongs to the client its session field claims.
+fn pattern(client: usize, n: usize) -> Vec<u8> {
+    (0..n)
+        .map(|i| (i.wrapping_mul(31) ^ client.wrapping_mul(7)) as u8)
+        .collect()
+}
+
+fn update(round: usize, client: usize, slot: usize, n: usize) -> WireMessage {
+    WireMessage {
+        round,
+        client_id: client,
+        slot,
+        payload: Payload::Update(Encoded {
+            bytes: pattern(client, n),
+        }),
+        enc_secs: 0.25,
+        loss: 2.0,
+    }
+}
+
+fn fingerprint() -> ConfigFingerprint {
+    ConfigFingerprint {
+        seed: 5,
+        n_clients: 4,
+        rounds: 2,
+        d: 64,
+    }
+}
+
+// ---------------------------------------------------------------------
+// Frame codec totality
+// ---------------------------------------------------------------------
+
+/// Hand-rolled header bytes (magic | version | kind | reserved | session |
+/// len), for probing the parser with inputs the encoders would never emit.
+fn raw_header(kind: u8, session: u32, len: u32) -> [u8; HEADER_LEN] {
+    let mut h = [0u8; HEADER_LEN];
+    h[..4].copy_from_slice(&MAGIC);
+    h[4] = VERSION;
+    h[5] = kind;
+    // h[6..8] reserved, zero
+    h[8..12].copy_from_slice(&session.to_le_bytes());
+    h[12..16].copy_from_slice(&len.to_le_bytes());
+    h
+}
+
+/// Every well-formed frame the encoders can produce, one of each kind.
+fn corpus() -> Vec<Vec<u8>> {
+    let d = 48;
+    let theta: Vec<f32> = (0..d).map(|i| 0.1 + 0.8 * (i as f32) / d as f32).collect();
+    let s: Vec<f32> = theta.iter().map(|&p| (p / (1.0 - p)).ln()).collect();
+    let plan = RoundEngine::new(7, 6, 1.0, 0.8, 0.25, 3).plan(0, &theta, &s);
+    vec![
+        encode_message(&update(2, 11, 3, 96)),
+        encode_message(&update(0, 0, 0, 0)),
+        encode_message(&WireMessage {
+            payload: Payload::Failed("client oom".into()),
+            ..update(1, 5, 2, 0)
+        }),
+        encode_hello(&Hello {
+            conn_index: 1,
+            conns_total: 3,
+            fingerprint: fingerprint(),
+        }),
+        encode_plan(&plan),
+        encode_eor(9),
+        encode_shutdown(),
+    ]
+}
+
+fn split(frame: &[u8]) -> ([u8; HEADER_LEN], &[u8]) {
+    let header: [u8; HEADER_LEN] = frame[..HEADER_LEN].try_into().unwrap();
+    (header, &frame[HEADER_LEN..])
+}
+
+/// The decoder is total: random bit flips in headers and payloads, truncated
+/// and extended payloads, and outright random bytes all come back as
+/// `Ok`/`Err` — never a panic, never an out-of-bounds read. Untouched frames
+/// keep round-tripping throughout.
+#[test]
+fn frame_decoding_is_total_under_mutation() {
+    const MAX: usize = 1 << 20;
+    let mut rng = Xoshiro256pp::new(0x50C4E7);
+    let frames = corpus();
+
+    for frame in &frames {
+        let (header, payload) = split(frame);
+        let h = parse_header(&header, MAX).expect("encoder output must parse");
+        parse_frame(h, payload).expect("encoder output must decode");
+
+        for _ in 0..500 {
+            // Header mutation: up to 3 flipped bits. If the header still
+            // parses, the (unmodified) payload is decoded against it — a
+            // changed length or kind must surface as an error, not a panic.
+            let mut mh = header;
+            for _ in 0..1 + rng.below(3) {
+                let bit = rng.below((HEADER_LEN * 8) as u64) as usize;
+                mh[bit / 8] ^= 1 << (bit % 8);
+            }
+            if let Ok(h) = parse_header(&mh, MAX) {
+                let _ = parse_frame(h, payload);
+            }
+
+            // Payload mutation: flipped bits under an intact header.
+            if !payload.is_empty() {
+                let mut mp = payload.to_vec();
+                for _ in 0..1 + rng.below(4) {
+                    let bit = rng.below((mp.len() * 8) as u64) as usize;
+                    mp[bit / 8] ^= 1 << (bit % 8);
+                }
+                let _ = parse_frame(h, &mp);
+            }
+        }
+
+        // Truncations and extensions: the length cross-check rejects every
+        // payload that does not match the header exactly.
+        for cut in [0, 1, payload.len().saturating_sub(1)] {
+            if cut < payload.len() {
+                assert!(parse_frame(h, &payload[..cut]).is_err(), "truncated to {cut}");
+            }
+        }
+        let mut extended = payload.to_vec();
+        extended.push(0xAA);
+        assert!(parse_frame(h, &extended).is_err(), "extended payload");
+    }
+
+    // Fully random headers.
+    for _ in 0..2_000 {
+        let mut h = [0u8; HEADER_LEN];
+        for b in h.iter_mut() {
+            *b = rng.below(256) as u8;
+        }
+        let _ = parse_header(&h, MAX);
+    }
+
+    // Valid headers of every kind over random payload bytes of the declared
+    // length — this drives the body decoders (including the Plan vector
+    // counts) through arbitrary garbage.
+    for _ in 0..2_000 {
+        let kind = 1 + rng.below(6) as u8;
+        let len = rng.below(512) as usize;
+        let session = rng.next_u32();
+        let h = parse_header(&raw_header(kind, session, len as u32), MAX)
+            .expect("well-formed header");
+        let mut body = vec![0u8; len];
+        for b in body.iter_mut() {
+            *b = rng.below(256) as u8;
+        }
+        let _ = parse_frame(h, &body);
+    }
+
+    // A header announcing more than the cap is rejected before any
+    // allocation happens.
+    assert!(parse_header(&raw_header(1, 0, (MAX + 1) as u32), MAX).is_err());
+}
+
+// ---------------------------------------------------------------------
+// Backpressure
+// ---------------------------------------------------------------------
+
+/// A slow consumer bounds the coordinator's queue memory without losing or
+/// reordering anything: the reader parks once the byte budget is hit (the
+/// stall counter proves it), the high-water mark never exceeds the budget,
+/// and every frame still arrives exactly once, in order.
+#[test]
+fn backpressure_bounds_queue_memory_and_loses_nothing() {
+    let cfg = SocketConfig {
+        max_frame: 1 << 20,
+        inbound_budget: 4096,
+        conn_budget: 4096,
+    };
+    let hub = SocketHub::bind_loopback(TransportKind::Tcp, cfg, 1).unwrap();
+    let (mut transport, sender) = hub.round_link(1).unwrap();
+    let total = 300usize;
+    let payload = 256usize; // frame cost 308 bytes — ~13 fit in the budget
+
+    let tx = std::thread::spawn(move || {
+        for slot in 0..total {
+            sender.send(update(0, 0, slot, payload)).unwrap();
+        }
+        // Dropping the only sender closes the write side: the round ends.
+    });
+
+    let mut got = Vec::with_capacity(total);
+    while let Some(m) = transport.recv() {
+        if got.len() < 150 {
+            // Slow consumer for the first half: the sender outruns us and
+            // must hit the admission gate.
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        got.push(m.slot);
+    }
+    tx.join().unwrap();
+
+    assert_eq!(got, (0..total).collect::<Vec<_>>(), "lossless and in order");
+    assert!(
+        transport.peak_inbound_bytes() <= 4096,
+        "queue grew past the budget: {} bytes",
+        transport.peak_inbound_bytes()
+    );
+    let st = transport.stats();
+    assert_eq!(st.sent_messages, total as u64);
+    assert_eq!(st.received_messages, total as u64);
+    assert!(
+        st.backpressure_stalls > 0,
+        "the slow consumer never backpressured the reader"
+    );
+    assert_eq!(transport.frame_corruptions(), 0);
+}
+
+// ---------------------------------------------------------------------
+// Session multiplexing
+// ---------------------------------------------------------------------
+
+/// Many logical clients over few connections, written from concurrent
+/// threads: every message arrives exactly once with its own client's
+/// payload bytes — frames from different sessions sharing a connection
+/// never bleed into each other.
+#[test]
+fn multiplexed_sessions_interleave_without_crosstalk() {
+    let clients = 32usize;
+    let writers = 4usize;
+    let hub = SocketHub::bind_loopback(TransportKind::Uds, SocketConfig::default(), writers).unwrap();
+    let (mut transport, sender) = hub.round_link(clients).unwrap();
+
+    let threads: Vec<_> = (0..writers)
+        .map(|w| {
+            let s = sender.clone_sender();
+            std::thread::spawn(move || {
+                for c in (w..clients).step_by(writers) {
+                    s.send(update(1, c, c, 64 + c)).unwrap();
+                }
+            })
+        })
+        .collect();
+    drop(sender);
+    for t in threads {
+        t.join().unwrap();
+    }
+
+    let mut seen = vec![false; clients];
+    let mut wire_bytes = 0u64;
+    while let Some(m) = transport.recv() {
+        assert_eq!(m.round, 1);
+        assert_eq!(m.slot, m.client_id);
+        assert!(!seen[m.client_id], "client {} delivered twice", m.client_id);
+        seen[m.client_id] = true;
+        match &m.payload {
+            Payload::Update(enc) => assert_eq!(
+                enc.bytes,
+                pattern(m.client_id, 64 + m.client_id),
+                "crosstalk: client {} carries foreign bytes",
+                m.client_id
+            ),
+            Payload::Failed(e) => panic!("unexpected failure payload: {e}"),
+        }
+        wire_bytes += (HEADER_LEN + 36 + 64 + m.client_id) as u64;
+    }
+    assert!(seen.iter().all(|&s| s), "a session went missing");
+
+    let st = transport.stats();
+    assert_eq!(st.sent_messages, clients as u64);
+    assert_eq!(st.received_messages, clients as u64);
+    assert_eq!(st.wire_frames, clients as u64);
+    assert_eq!(st.wire_bytes, wire_bytes);
+    assert_eq!(transport.frame_corruptions(), 0);
+}
+
+// ---------------------------------------------------------------------
+// Handshake and connection death
+// ---------------------------------------------------------------------
+
+/// `serve` and `client-fleet` launched with different experiment configs is
+/// the deadliest two-process operator error: the Hello fingerprint check
+/// fails the handshake before a single round runs.
+#[test]
+fn fleet_handshake_rejects_a_config_mismatch() {
+    let listener = Listener::bind(&SocketAddrSpec::Tcp("127.0.0.1:0".into())).unwrap();
+    let spec = listener.local_spec().unwrap();
+    let client = std::thread::spawn(move || {
+        let mut s = Stream::connect(&spec).unwrap();
+        let wrong = Hello {
+            conn_index: 0,
+            conns_total: 1,
+            fingerprint: ConfigFingerprint {
+                seed: 999, // everything else agrees; the seed does not
+                ..fingerprint()
+            },
+        };
+        s.write_all(&encode_hello(&wrong)).unwrap();
+        s.flush().unwrap();
+        s // keep the connection alive until the server has judged it
+    });
+    let err = FleetServer::accept_fleet(&listener, SocketConfig::default(), fingerprint())
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("fingerprint"), "unexpected error: {err}");
+    drop(client.join().unwrap());
+}
+
+/// The `recv_deadline` outcome ordering (Msg > Closed > TimedOut), pinned
+/// over a real wire — plus torn-frame semantics: a connection dying
+/// mid-frame is counted as a corruption and drops out of the round's
+/// closure condition, so the drain sees `Closed`, never a hang.
+#[test]
+fn torn_frames_kill_the_connection_and_close_the_round() {
+    let listener = Listener::bind(&SocketAddrSpec::Tcp("127.0.0.1:0".into())).unwrap();
+    let spec = listener.local_spec().unwrap();
+    let fp = fingerprint();
+    let fleet_side = std::thread::spawn(move || {
+        let mut a = Stream::connect(&spec).unwrap();
+        let mut b = Stream::connect(&spec).unwrap();
+        for (i, s) in [&mut a, &mut b].into_iter().enumerate() {
+            s.write_all(&encode_hello(&Hello {
+                conn_index: i as u32,
+                conns_total: 2,
+                fingerprint: fp,
+            }))
+            .unwrap();
+            s.flush().unwrap();
+        }
+        (a, b)
+    });
+    let mut fleet = FleetServer::accept_fleet(&listener, SocketConfig::default(), fp).unwrap();
+    let (mut a, mut b) = fleet_side.join().unwrap();
+    let mut transport = fleet.take_transport();
+
+    // Msg beats an already-expired deadline: once the frame lands, a
+    // deadline in the past still yields the message, not TimedOut.
+    a.write_all(&encode_message(&update(0, 0, 0, 40))).unwrap();
+    a.flush().unwrap();
+    let msg = loop {
+        match transport.recv_deadline(Instant::now()) {
+            RecvOutcome::Msg(m) => break m,
+            RecvOutcome::TimedOut => std::thread::sleep(Duration::from_millis(1)),
+            RecvOutcome::Closed => panic!("live connections must not read as closed"),
+        }
+    };
+    assert_eq!(msg.slot, 0);
+
+    // Live-but-idle wire: a short deadline is a timeout, not a closure.
+    match transport.recv_deadline(Instant::now() + Duration::from_millis(20)) {
+        RecvOutcome::TimedOut => {}
+        other => panic!("expected TimedOut on an idle live wire, got {other:?}"),
+    }
+
+    // Connection 0 dies seven bytes into a header; connection 1 finishes
+    // the round politely.
+    let torn = encode_message(&update(0, 1, 1, 40));
+    a.write_all(&torn[..7]).unwrap();
+    a.flush().unwrap();
+    drop(a);
+    b.write_all(&encode_eor(0)).unwrap();
+    b.flush().unwrap();
+
+    // One dead connection + one EOR mark = the round is closed, well before
+    // any deadline. Closed must win over TimedOut.
+    let deadline = Instant::now() + Duration::from_secs(30);
+    match transport.recv_deadline(deadline) {
+        RecvOutcome::Closed => {}
+        other => panic!("expected Closed after death + EOR, got {other:?}"),
+    }
+    assert!(
+        Instant::now() < deadline,
+        "closure must not sleep out the deadline"
+    );
+    assert_eq!(transport.frame_corruptions(), 1, "the torn frame is counted");
+    assert_eq!(transport.stats().received_messages, 1);
+    drop(b);
+}
+
+// ---------------------------------------------------------------------
+// Two-process end-to-end
+// ---------------------------------------------------------------------
+
+/// The experiment flags shared by all three processes. Small enough for a
+/// debug-profile CI run, identical to the churn suite's mini config.
+const EXPERIMENT_FLAGS: &[&str] = &[
+    "--method", "deltamask", "--dataset", "cifar10", "--arch", "test",
+    "--backend", "native", "--head-init", "he", "--clients", "5",
+    "--rounds", "3", "--samples", "24", "--test-samples", "100",
+    "--alpha", "10", "--seed", "42", "--eval-every", "3", "--epochs", "1",
+];
+
+/// A `deltamask` subcommand invocation with the ambient `DELTAMASK_*` knob
+/// environment scrubbed, so the test pins its own transport regardless of
+/// what the CI matrix exports.
+fn deltamask_cmd(sub: &str) -> Command {
+    let mut cmd = Command::new(env!("CARGO_BIN_EXE_deltamask"));
+    for (k, _) in std::env::vars() {
+        if k.starts_with("DELTAMASK_") {
+            cmd.env_remove(k);
+        }
+    }
+    cmd.arg(sub).args(EXPERIMENT_FLAGS).stdout(Stdio::null());
+    cmd
+}
+
+fn wait_or_kill(child: &mut Child, label: &str) -> std::process::ExitStatus {
+    let deadline = Instant::now() + Duration::from_secs(240);
+    loop {
+        if let Some(status) = child.try_wait().unwrap() {
+            return status;
+        }
+        if Instant::now() > deadline {
+            let _ = child.kill();
+            panic!("{label} did not finish within 240s");
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    }
+}
+
+fn load_json(path: &std::path::Path) -> Json {
+    let text = std::fs::read_to_string(path)
+        .unwrap_or_else(|e| panic!("reading {}: {e}", path.display()));
+    Json::parse(&text).unwrap_or_else(|e| panic!("parsing {}: {e}", path.display()))
+}
+
+fn field<'j>(j: &'j Json, key: &str) -> &'j Json {
+    j.get(key).unwrap_or_else(|| panic!("missing key {key}"))
+}
+
+/// Coordinator and fleet as separate OS processes over a Unix-domain
+/// socket, via the real CLI: the run must complete cleanly and its JSON
+/// result must match an in-process channel run of the identical config on
+/// every transport-invariant fact — losses, bitrates, accuracy, fault
+/// counters, completion verdicts and send-time wire counts. The socket
+/// frame counters additionally prove the traffic really crossed the wire.
+#[test]
+fn two_process_uds_run_matches_the_in_process_channel_run() {
+    let tmp = std::env::temp_dir();
+    let pid = std::process::id();
+    let sock = tmp.join(format!("dm-e2e-{pid}.sock"));
+    let ref_out = tmp.join(format!("dm-e2e-{pid}-channel.json"));
+    let two_out = tmp.join(format!("dm-e2e-{pid}-uds.json"));
+    let _ = std::fs::remove_file(&sock);
+
+    // Reference: one process, in-process channel transport.
+    let status = deltamask_cmd("train")
+        .args(["--transport", "channel", "--out"])
+        .arg(&ref_out)
+        .status()
+        .unwrap();
+    assert!(status.success(), "channel reference run failed");
+
+    // Two processes: `serve` owns the coordinator, `client-fleet` trains.
+    let mut serve = deltamask_cmd("serve")
+        .args(["--transport", "uds", "--listen"])
+        .arg(&sock)
+        .arg("--out")
+        .arg(&two_out)
+        .spawn()
+        .unwrap();
+    let mut fleet = deltamask_cmd("client-fleet")
+        .args(["--transport", "uds", "--connections", "3", "--connect"])
+        .arg(&sock)
+        .spawn()
+        .unwrap();
+    let serve_status = wait_or_kill(&mut serve, "serve");
+    let fleet_status = wait_or_kill(&mut fleet, "client-fleet");
+    assert!(serve_status.success(), "serve exited with {serve_status}");
+    assert!(fleet_status.success(), "client-fleet exited with {fleet_status}");
+
+    let a = load_json(&ref_out);
+    let b = load_json(&two_out);
+    for key in ["final_accuracy", "peak_accuracy", "avg_bpp", "total_uplink_mib", "d"] {
+        assert_eq!(field(&a, key), field(&b, key), "top-level {key} diverged");
+    }
+    let ra = field(&a, "rounds").as_arr().unwrap();
+    let rb = field(&b, "rounds").as_arr().unwrap();
+    assert_eq!(ra.len(), rb.len(), "round count");
+    assert_eq!(ra.len(), 3);
+    for (x, y) in ra.iter().zip(rb) {
+        let r = field(x, "round").as_usize().unwrap();
+        for key in ["round", "loss", "bpp", "acc", "quorum_met", "degraded", "faults"] {
+            assert_eq!(field(x, key), field(y, key), "round {r}: {key} diverged");
+        }
+        for key in ["sent_messages", "sent_payload_bytes"] {
+            assert_eq!(
+                field(field(x, "wire"), key),
+                field(field(y, "wire"), key),
+                "round {r}: wire.{key} diverged"
+            );
+        }
+        // The channel run never framed anything; the socket run framed at
+        // least one frame per message (EOR marks add more).
+        let sent = field(field(x, "wire"), "sent_messages").as_f64().unwrap();
+        let chan_frames = field(field(x, "wire"), "wire_frames").as_f64().unwrap();
+        let sock_frames = field(field(y, "wire"), "wire_frames").as_f64().unwrap();
+        assert_eq!(chan_frames, 0.0, "round {r}: channel run framed traffic");
+        assert!(
+            sock_frames >= sent,
+            "round {r}: {sock_frames} frames < {sent} messages over the socket"
+        );
+    }
+
+    let _ = std::fs::remove_file(&ref_out);
+    let _ = std::fs::remove_file(&two_out);
+    let _ = std::fs::remove_file(&sock);
+}
+
+// ---------------------------------------------------------------------
+// Scale
+// ---------------------------------------------------------------------
+
+/// Ten thousand logical clients multiplexed over eight connections, written
+/// from eight concurrent threads against the default budgets: exactly-once
+/// delivery, zero corruption, send-time counters intact.
+#[test]
+fn ten_thousand_sessions_multiplex_over_a_loopback_socket() {
+    let k = 10_000usize;
+    let writers = 8usize;
+    let payload = 24usize;
+    let hub = SocketHub::bind_loopback(TransportKind::Uds, SocketConfig::default(), writers).unwrap();
+    let (mut transport, sender) = hub.round_link(k).unwrap();
+
+    let threads: Vec<_> = (0..writers)
+        .map(|w| {
+            let s = sender.clone_sender();
+            std::thread::spawn(move || {
+                for c in (w..k).step_by(writers) {
+                    s.send(update(0, c, c, payload)).unwrap();
+                }
+            })
+        })
+        .collect();
+    drop(sender);
+
+    // Drain concurrently with the writers — at this volume the queue and
+    // the OS socket buffers are both smaller than the traffic.
+    let mut seen = vec![false; k];
+    let mut n = 0usize;
+    while let Some(m) = transport.recv() {
+        assert!(!seen[m.slot], "slot {} delivered twice", m.slot);
+        seen[m.slot] = true;
+        n += 1;
+    }
+    for t in threads {
+        t.join().unwrap();
+    }
+    assert_eq!(n, k, "every session's frame arrived exactly once");
+
+    let st = transport.stats();
+    assert_eq!(st.sent_messages, k as u64);
+    assert_eq!(st.received_messages, k as u64);
+    assert_eq!(st.sent_payload_bytes, (k * payload) as u64);
+    assert_eq!(transport.frame_corruptions(), 0);
+}
+
+/// The acceptance-scale witness: a full multi-round experiment with 10^4
+/// multiplexed clients over the UDS loopback, trajectory-identical to the
+/// in-process channel run. Ignored by default — minutes of debug-profile
+/// training — run with `cargo test --test socket_transport -- --ignored`.
+#[test]
+#[ignore = "10^4-client experiment: minutes in a debug profile"]
+fn ten_thousand_client_experiment_is_transport_invariant() {
+    use deltamask::coordinator::{OnDecodeError, PipelineMode};
+    use deltamask::fl::{run_experiment, BackendKind, ExperimentConfig, HeadInit};
+    let base = ExperimentConfig {
+        dataset: "cifar10".into(),
+        arch: "test".into(),
+        method: "deltamask".into(),
+        n_clients: 10_000,
+        rounds: 2,
+        rho: 1.0,
+        local_epochs: 1,
+        samples_per_client: 8,
+        test_samples: 50,
+        dirichlet_alpha: 10.0,
+        kappa0: 0.8,
+        kappa_floor: 0.25,
+        seed: 42,
+        eval_every: 2,
+        backend: BackendKind::Native,
+        head_init: HeadInit::He,
+        lp_rounds: 1,
+        theta0: 0.85,
+        arch_override: None,
+        pipeline: PipelineMode::Streaming,
+        decode_workers: 2,
+        agg_shards: 2,
+        persistent_pipeline: true,
+        quorum: 1.0,
+        round_deadline_ms: 0,
+        on_decode_error: OnDecodeError::Abort,
+        chaos: String::new(),
+        transport: TransportKind::Channel,
+    };
+    let channel = run_experiment(&base).unwrap();
+    let mut cfg = base;
+    cfg.transport = TransportKind::Uds;
+    let socket = run_experiment(&cfg).unwrap();
+    assert_eq!(channel.rounds.len(), socket.rounds.len());
+    for (x, y) in channel.rounds.iter().zip(&socket.rounds) {
+        let r = x.round;
+        assert_eq!(x.train_loss, y.train_loss, "round {r}: loss");
+        assert_eq!(x.mean_bpp, y.mean_bpp, "round {r}: bpp");
+        assert_eq!(x.accuracy, y.accuracy, "round {r}: accuracy");
+        assert_eq!(x.faults, y.faults, "round {r}: fault counters");
+        assert_eq!(x.wire.sent_messages, y.wire.sent_messages, "round {r}");
+        assert_eq!(
+            x.wire.sent_payload_bytes, y.wire.sent_payload_bytes,
+            "round {r}"
+        );
+    }
+    assert_eq!(channel.final_accuracy(), socket.final_accuracy());
+}
