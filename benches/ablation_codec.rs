@@ -9,6 +9,9 @@
 //! * 4-wise vs 3-wise binary fuse arity,
 //! * the `deltamask-pco` numeric-latent index stream (codec 9) vs the
 //!   filter + PNG record,
+//! * the sibling-paper mask codecs: `maskrn` (codec 10, noise-dictionary
+//!   gated flips) and `sparse-rsn` (codec 11, absolute λ-penalized
+//!   supermask) on the same fixtures,
 //! * top-κ truncation (κ=0.8) vs full Δ.
 //!
 //!     cargo bench --bench ablation_codec
@@ -84,6 +87,18 @@ fn main() -> anyhow::Result<()> {
                 true,
                 0.8,
             ),
+            (
+                "maskrn noise gate (codec 10)",
+                compress::by_name("maskrn").expect("registry has maskrn"),
+                true,
+                0.8,
+            ),
+            (
+                "sparse-rsn supermask (codec 11)",
+                compress::by_name("sparse-rsn").expect("registry has sparse-rsn"),
+                true,
+                0.8,
+            ),
             ("κ = 1.0 (no top-κ)", Box::new(DeltaMaskCodec::default()), true, 1.0),
         ];
         let mut baseline_bpp = 0.0f64;
@@ -121,7 +136,9 @@ fn main() -> anyhow::Result<()> {
          sparsity); no-PNG costs a few %; fast-DEFLATE matches PNG within ~1%;\n\
          3-wise costs ~5-15% space vs 4-wise at this |Δ| scale; the pco index\n\
          stream undercuts the filter record by 10-35% (more at higher drift);\n\
-         κ=1 adds ~25% bits."
+         maskrn halves the pco stream again (the noise gate drops ~50% of Δ′);\n\
+         sparse-rsn is drift-insensitive (absolute supermask: cost tracks\n\
+         min(|A|, d−|A|), not Δ); κ=1 adds ~25% bits."
     );
     Ok(())
 }

@@ -11,7 +11,8 @@
 //! Cases: filter membership kernels, the DeltaMask wire path (scratch
 //! encode + pooled decode), the `deltamask-pco` numeric-latent wire path on
 //! the same fixture (with the ≥ 20% bytes-on-wire gate vs the PNG+DEFLATE
-//! record asserted in-run), the sharded `drain_round` (serial vs 4 decode
+//! record asserted in-run), the sibling mask codecs `maskrn` / `sparse-rsn`
+//! (codecs 10–11) on the same fixture, the sharded `drain_round` (serial vs 4 decode
 //! workers, vs 4 decode workers × 4 dimension shards — the `_s4` case —
 //! and vs the round-resident `DrainPipeline` reusing one crew/view across
 //! iterations — the `_s4_resident` case), matmuls, and tracked
@@ -21,8 +22,8 @@
 use deltamask::bench::{summarize, time_fn, Table};
 use deltamask::codec::{deflate, png};
 use deltamask::compress::{
-    DecodeCtx, DeltaMaskCodec, DeltaMaskPcoCodec, EncodeCtx, EncodeScratch, ScratchPool, Update,
-    UpdateCodec,
+    DecodeCtx, DeltaMaskCodec, DeltaMaskPcoCodec, EncodeCtx, EncodeScratch, MaskRnCodec,
+    ScratchPool, SparseRsnCodec, Update, UpdateCodec,
 };
 use deltamask::filters::{BinaryFuse, BloomFilter, MembershipFilter, XorFilter};
 use deltamask::native::linalg;
@@ -249,6 +250,58 @@ fn main() {
             batched_secs: pco_dec_pool_secs,
             parity: pco_want == pco_got,
         });
+
+        // -- maskrn (codec 10) + sparse-rsn (codec 11): the sibling-paper
+        // mask codecs on the same fixture. Same column scheme as codec 9:
+        // scalar = fresh-alloc encode / decode, batched = scratch-reusing
+        // encode / pooled decode, parity bitwise on bytes and masks. These
+        // cases (and the ablation rows) are what the CI bench-smoke
+        // validator pins, so dropping a sibling from the bench fails CI.
+        let mrn = MaskRnCodec::default();
+        let rsn = SparseRsnCodec::default();
+        for (tag, codec) in [("maskrn", &mrn as &dyn UpdateCodec), ("sparse_rsn", &rsn)] {
+            let enc_plain_secs =
+                summarize(&time_fn(warmup, iters, || codec.encode(&ctx).unwrap())).min;
+            let mut sib_scratch = EncodeScratch::default();
+            let enc_scratch_secs = summarize(&time_fn(warmup, iters, || {
+                codec.encode_with(&ctx, &mut sib_scratch).unwrap()
+            }))
+            .min;
+            let sib_plain = codec.encode(&ctx).unwrap();
+            let sib_reused = codec.encode_with(&ctx, &mut sib_scratch).unwrap();
+            pairs.push(Pair {
+                name: format!("{tag}_encode_d{d}"),
+                scalar_secs: enc_plain_secs,
+                batched_secs: enc_scratch_secs,
+                parity: sib_plain.bytes == sib_reused.bytes,
+            });
+
+            let dec_plain_secs = summarize(&time_fn(warmup, iters, || {
+                codec.decode(&sib_plain.bytes, &dctx).unwrap()
+            }))
+            .min;
+            let dec_pool_secs = summarize(&time_fn(warmup, iters, || {
+                let u = codec.decode_pooled(&sib_plain.bytes, &dctx, &pool).unwrap();
+                if let Update::Mask(m) = u {
+                    pool.put(m);
+                }
+            }))
+            .min;
+            let Update::Mask(sib_want) = codec.decode(&sib_plain.bytes, &dctx).unwrap() else {
+                panic!()
+            };
+            let Update::Mask(sib_got) =
+                codec.decode_pooled(&sib_plain.bytes, &dctx, &pool).unwrap()
+            else {
+                panic!()
+            };
+            pairs.push(Pair {
+                name: format!("{tag}_decode_d{d}"),
+                scalar_secs: dec_plain_secs,
+                batched_secs: dec_pool_secs,
+                parity: sib_want == sib_got,
+            });
+        }
     }
 
     // -- Parallel sharded server decode: drain_round w=1 vs w=4 ------------

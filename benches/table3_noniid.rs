@@ -6,9 +6,11 @@
 //! Shape claims: the Bayesian aggregation keeps the stochastic-mask methods
 //! (FedPM, DeltaMask, DeepReduce) ahead of FedMask under partial
 //! participation; DeltaMask stays within a couple points of FedPM at a
-//! fraction of the bitrate.
+//! fraction of the bitrate. The sibling codecs (maskrn, sparse-rsn) ride
+//! below the paper roster: both learn under Dir(0.1), maskrn at roughly
+//! half DeltaMask's bitrate, sparse-rsn at a flat polarity-bounded cost.
 
-use deltamask::bench::{bench_datasets, paper_methods, BenchScale, Table};
+use deltamask::bench::{bench_datasets, paper_methods, sibling_methods, BenchScale, Table};
 use deltamask::fl::run_experiment;
 use deltamask::util::cli::Args;
 
@@ -26,7 +28,7 @@ fn main() -> anyhow::Result<()> {
             &format!("Table 3 summary (rho={rho})"),
             &["method", "avg acc", "avg bpp"],
         );
-        for method in paper_methods() {
+        for method in paper_methods().iter().chain(sibling_methods()) {
             let mut accs = Vec::new();
             let mut bpps = Vec::new();
             for dataset in &datasets {

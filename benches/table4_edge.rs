@@ -8,9 +8,16 @@
 //! testbed we report measured CPU ns/entry (energy ∝ time on fixed
 //! hardware). The device-independent claims checked: BFuse faster than XOR
 //! at every width; time grows only mildly with bits-per-entry.
+//!
+//! A second table reports the same per-entry cost view one layer up — the
+//! full mask-codec encode/decode path (client encode cost is what an edge
+//! device actually pays per round) for the filter record, the codec-9 pco
+//! stream and the sibling codecs 10–11.
 
 use deltamask::bench::{summarize, time_fn, Table};
+use deltamask::compress::{self, DecodeCtx, EncodeCtx};
 use deltamask::filters::{BinaryFuse, MembershipFilter, XorFilter};
+use deltamask::model::sample_mask_seeded;
 use deltamask::util::cli::Args;
 use deltamask::util::rng::Xoshiro256pp;
 
@@ -62,4 +69,59 @@ fn main() {
     profile!("BFuse32", BinaryFuse<u32, 4>);
     table.print();
     table.save("table4_edge");
+
+    // -- Codec-level edge cost: encode/decode ns per model parameter -------
+    // The client-side number an edge deployment budgets against, for the
+    // filter record and each index-stream codec (9, 10, 11) on one fixture.
+    let d = if args.flag("full") { 1_000_000 } else { 200_000 };
+    let theta_g: Vec<f32> = (0..d).map(|_| rng.next_f32()).collect();
+    let theta_k: Vec<f32> = theta_g
+        .iter()
+        .map(|&p| (p + 0.1 * (rng.next_f32() - 0.5)).clamp(0.01, 0.99))
+        .collect();
+    let mut mask_g = Vec::new();
+    sample_mask_seeded(&theta_g, 21, &mut mask_g);
+    let mut mask_k = Vec::new();
+    sample_mask_seeded(&theta_k, 22, &mut mask_k);
+    let ctx = EncodeCtx {
+        d,
+        theta_k: &theta_k,
+        theta_g: &theta_g,
+        mask_k: &mask_k,
+        mask_g: &mask_g,
+        s_k: &[],
+        s_g: &[],
+        kappa: 0.8,
+        seed: 17,
+    };
+    let dctx = DecodeCtx {
+        d,
+        mask_g: &mask_g,
+        s_g: &[],
+        seed: 17,
+    };
+    let mut codec_table = Table::new(
+        "Table 4b: mask-codec edge cost",
+        &["codec", "bpp", "encode ns/param", "decode ns/param"],
+    );
+    for name in ["deltamask", "deltamask-pco", "maskrn", "sparse-rsn"] {
+        let codec = compress::by_name(name).expect("registered codec");
+        let enc = codec.encode(&ctx).expect("encode");
+        let e = summarize(&time_fn(1, reps, || codec.encode(&ctx).unwrap()));
+        let q = summarize(&time_fn(1, reps, || codec.decode(&enc.bytes, &dctx).unwrap()));
+        eprintln!(
+            "  {name}: bpp {:.4}, encode {:.1} ns/p, decode {:.1} ns/p",
+            enc.bpp(d),
+            e.mean / d as f64 * 1e9,
+            q.mean / d as f64 * 1e9
+        );
+        codec_table.row(vec![
+            name.to_string(),
+            format!("{:.4}", enc.bpp(d)),
+            format!("{:.1}", e.mean / d as f64 * 1e9),
+            format!("{:.1}", q.mean / d as f64 * 1e9),
+        ]);
+    }
+    codec_table.print();
+    codec_table.save("table4_edge_codecs");
 }

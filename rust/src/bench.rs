@@ -208,6 +208,13 @@ pub fn paper_methods() -> &'static [&'static str] {
     &["linear_probing", "fine_tuning", "fedmask", "eden", "deepreduce", "fedpm", "deltamask"]
 }
 
+/// The sibling-paper mask codecs (codecs 10–11): appended below the paper
+/// roster in the scenario tables to stress the non-IID / edge matrices
+/// with mask methods the source paper did not evaluate.
+pub fn sibling_methods() -> &'static [&'static str] {
+    &["maskrn", "sparse-rsn"]
+}
+
 /// Dataset roster: the quick default covers 4 contrasting datasets, --all or
 /// --full runs the paper's 8.
 pub fn bench_datasets(args: &crate::util::cli::Args) -> Vec<&'static str> {

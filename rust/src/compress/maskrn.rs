@@ -1,0 +1,449 @@
+//! **MaskRN** (codec 10) — federated masking over a frozen common-random-noise
+//! dictionary, after *Masked Random Noise* (arxiv 2408.03220).
+//!
+//! MRN's client never ships weights: the server broadcasts a seed, every
+//! party expands it into a frozen random-noise dictionary added to the
+//! global model, and the client uplink is a learned Bernoulli mask selecting
+//! which noise entries to keep. Mapped onto this repo's shared-seed CRN
+//! machinery, the per-(round, client) seed already known to both ends
+//! derives a **noise gate** per coordinate (a seeded hash bit at the codec's
+//! fixed dictionary density): coordinate `i` carries a noise entry this
+//! round iff the gate opens. The client runs DeltaMask's own Δ′ selection
+//! (same KL ranking, same κ truncation — the selection kernel is shared,
+//! not reimplemented) and then ships only the selected flips whose
+//! coordinate is **in the dictionary**; flips outside it are, by
+//! construction, not expressible as a noise-entry choice and are dropped on
+//! the client, never on the wire.
+//!
+//! The index set reuses the codec-9 pco wire stage verbatim (sorted u32
+//! indexes, delta-coded quantile-bin stream):
+//!
+//! ```text
+//! tag(1)=8  version(1)=1  payload_len(4)  payload = pco stream of gated Δ′
+//! ```
+//!
+//! Decode totality: header fields are validated, the pco decoder is total
+//! and `d`-bounded, indexes must be strictly increasing and `< d`, and —
+//! the MRN-specific clause — **every index must pass the receiver's own
+//! seed-derived noise gate**. A record claiming a flip outside the round's
+//! dictionary cannot have come from an honest encoder with the same seed,
+//! so it is rejected as corrupt (`Err`, never a panic or a silent
+//! mask-noise write). The gate is a pure per-index hash, so range decoding
+//! needs no dictionary materialization: a parsed record is its own
+//! [`MaskRangeDecoder`], exactly like codec 9.
+
+use super::deltamask::DeltaMaskCodec;
+use super::{
+    wire, DecodeCtx, EncodeCtx, EncodeScratch, Encoded, Family, Ranking, ScratchPool, Update,
+    UpdateCodec,
+};
+use crate::codec::pco;
+use crate::hash::mix_split;
+use anyhow::{ensure, Result};
+
+/// Record tag: next free tag after the v1 filter-tag space (0..=6) and the
+/// codec-9 pco record (7).
+pub const RECORD_TAG: u8 = 8;
+/// Record format version.
+pub const RECORD_VERSION: u8 = 1;
+
+/// Salt folded into the shared per-(round, client) seed before deriving the
+/// noise gate, so the dictionary stream is independent of every other
+/// codec-internal use of the seed (mask sampling, rotations, dithers).
+const NOISE_SALT: u64 = 0x6d61_736b_5f72_6e01; // "mask_rn" ‖ 0x01
+
+/// Fraction of coordinates carrying a noise entry each round. Codec-fixed
+/// (changing it is a wire-format change: both ends gate with it).
+pub const NOISE_DENSITY: f64 = 0.5;
+
+/// Does coordinate `i` carry a noise-dictionary entry under `seed`?
+/// Pure per-index hash — O(1) random access, no materialized dictionary —
+/// which is what makes range decoding and sharded drains free.
+#[inline]
+pub fn in_noise_dictionary(i: u32, seed: u64) -> bool {
+    let threshold = (NOISE_DENSITY * 4_294_967_296.0) as u64; // density · 2^32
+    (mix_split(i as u64, seed ^ NOISE_SALT) >> 32) < threshold
+}
+
+#[derive(Clone, Debug)]
+pub struct MaskRnCodec {
+    pub ranking: Ranking,
+}
+
+impl Default for MaskRnCodec {
+    fn default() -> Self {
+        Self {
+            ranking: Ranking::Kl,
+        }
+    }
+}
+
+impl MaskRnCodec {
+    /// Parse + validate a record into the sorted gated-flip index set.
+    /// Shared by every decode path so malformed-record rejection is uniform;
+    /// the noise gate is checked here, making the dictionary load-bearing at
+    /// decode (not just an encoder-side filter).
+    fn parse_indexes(&self, bytes: &[u8], ctx: &DecodeCtx) -> Result<Vec<u32>> {
+        ensure!(bytes.len() >= 6, "maskrn record too short");
+        ensure!(
+            bytes[0] == RECORD_TAG,
+            "not a maskrn record (tag {})",
+            bytes[0]
+        );
+        ensure!(
+            bytes[1] == RECORD_VERSION,
+            "unknown maskrn record version {}",
+            bytes[1]
+        );
+        let mut r = wire::Reader::new(&bytes[2..]);
+        let payload_len = r.u32()? as usize;
+        let rest = &bytes[2 + r.pos..];
+        ensure!(rest.len() == payload_len, "payload length mismatch");
+        let idx = pco::decompress_u32s(rest, ctx.d).map_err(|e| anyhow::anyhow!("pco: {e}"))?;
+        let mut prev = None;
+        for &i in &idx {
+            ensure!((i as usize) < ctx.d, "index {i} out of range (d={})", ctx.d);
+            if let Some(p) = prev {
+                ensure!(i > p, "indexes not strictly increasing");
+            }
+            prev = Some(i);
+            ensure!(
+                in_noise_dictionary(i, ctx.seed),
+                "index {i} outside the round's noise dictionary"
+            );
+        }
+        Ok(idx)
+    }
+}
+
+/// A parsed record is its own range decoder (the gate was already verified
+/// at parse): two binary searches per range over the sorted index set.
+struct GatedIndexFlips {
+    idx: Vec<u32>,
+}
+
+impl super::MaskRangeDecoder for GatedIndexFlips {
+    fn decode_range(&self, range: std::ops::Range<usize>, mask: &mut [f32]) {
+        debug_assert_eq!(mask.len(), range.len());
+        let lo = self.idx.partition_point(|&i| (i as usize) < range.start);
+        let hi = self.idx.partition_point(|&i| (i as usize) < range.end);
+        for &i in &self.idx[lo..hi] {
+            let j = i as usize - range.start;
+            mask[j] = 1.0 - mask[j];
+        }
+    }
+}
+
+impl UpdateCodec for MaskRnCodec {
+    fn name(&self) -> &'static str {
+        "maskrn"
+    }
+
+    fn family(&self) -> Family {
+        Family::Mask
+    }
+
+    fn encode(&self, ctx: &EncodeCtx) -> Result<Encoded> {
+        self.encode_with(ctx, &mut EncodeScratch::default())
+    }
+
+    /// Encode reusing the caller's scratch: Δ′ selection is DeltaMask's
+    /// fused kernel, the gate filter is a streaming pass over the selected
+    /// key set, and the quickselect index buffer is recycled as the u32
+    /// sort buffer — steady-state encodes allocate only the output bytes.
+    fn encode_with(&self, ctx: &EncodeCtx, scratch: &mut EncodeScratch) -> Result<Encoded> {
+        let selector = DeltaMaskCodec {
+            ranking: self.ranking,
+            ..Default::default()
+        };
+        selector.select_updates_into(ctx, scratch);
+        scratch.rank.clear();
+        scratch.rank.extend(
+            scratch
+                .keys
+                .iter()
+                .map(|&k| k as u32)
+                .filter(|&i| in_noise_dictionary(i, ctx.seed)),
+        );
+        scratch.rank.sort_unstable();
+        let payload = pco::compress_u32s(&scratch.rank);
+
+        let mut bytes = Vec::with_capacity(payload.len() + 6);
+        bytes.push(RECORD_TAG);
+        bytes.push(RECORD_VERSION);
+        wire::put_u32(&mut bytes, payload.len() as u32);
+        bytes.extend_from_slice(&payload);
+        Ok(Encoded { bytes })
+    }
+
+    fn decode(&self, bytes: &[u8], ctx: &DecodeCtx) -> Result<Update> {
+        let idx = self.parse_indexes(bytes, ctx)?;
+        let mut mask = ctx.mask_g.to_vec();
+        for &i in &idx {
+            mask[i as usize] = 1.0 - mask[i as usize];
+        }
+        Ok(Update::Mask(mask))
+    }
+
+    fn decode_pooled(&self, bytes: &[u8], ctx: &DecodeCtx, pool: &ScratchPool) -> Result<Update> {
+        // Parse before leasing, so malformed records never touch the pool.
+        let idx = self.parse_indexes(bytes, ctx)?;
+        let mut mask = pool.take_copy(ctx.mask_g);
+        for &i in &idx {
+            mask[i as usize] = 1.0 - mask[i as usize];
+        }
+        Ok(Update::Mask(mask))
+    }
+
+    fn range_decoder(
+        &self,
+        bytes: &[u8],
+        ctx: &DecodeCtx,
+    ) -> Result<Option<Box<dyn super::MaskRangeDecoder>>> {
+        let idx = self.parse_indexes(bytes, ctx)?;
+        Ok(Some(Box::new(GatedIndexFlips { idx })))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::sample_mask_seeded;
+    use crate::util::rng::Xoshiro256pp;
+
+    fn make_ctx<'a>(
+        d: usize,
+        theta_k: &'a [f32],
+        theta_g: &'a [f32],
+        mask_k: &'a [f32],
+        mask_g: &'a [f32],
+        kappa: f64,
+        seed: u64,
+    ) -> EncodeCtx<'a> {
+        EncodeCtx {
+            d,
+            theta_k,
+            theta_g,
+            mask_k,
+            mask_g,
+            s_k: &[],
+            s_g: &[],
+            kappa,
+            seed,
+        }
+    }
+
+    fn setup(d: usize, drift: f32, seed: u64) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+        let mut rng = Xoshiro256pp::new(seed);
+        let theta_g: Vec<f32> = (0..d).map(|_| rng.next_f32()).collect();
+        let theta_k: Vec<f32> = theta_g
+            .iter()
+            .map(|&p| (p + drift * (rng.next_f32() - 0.5)).clamp(0.01, 0.99))
+            .collect();
+        let mut mask_g = Vec::new();
+        sample_mask_seeded(&theta_g, 7, &mut mask_g);
+        let mut mask_k = Vec::new();
+        sample_mask_seeded(&theta_k, 8, &mut mask_k);
+        (theta_k, theta_g, mask_k, mask_g)
+    }
+
+    #[test]
+    fn dictionary_density_is_near_nominal_and_seed_dependent() {
+        let d = 100_000u32;
+        let hits = (0..d).filter(|&i| in_noise_dictionary(i, 11)).count();
+        let frac = hits as f64 / d as f64;
+        assert!(
+            (frac - NOISE_DENSITY).abs() < 0.01,
+            "density {frac} vs nominal {NOISE_DENSITY}"
+        );
+        // A different round/client seed opens a different dictionary.
+        let differs = (0..d)
+            .filter(|&i| in_noise_dictionary(i, 11) != in_noise_dictionary(i, 12))
+            .count();
+        assert!(differs > (d as usize) / 4, "gates barely differ: {differs}");
+    }
+
+    #[test]
+    fn decode_flips_exactly_the_gated_selected_set() {
+        let d = 50_000;
+        let (tk, tg, mk, mg) = setup(d, 0.2, 42);
+        let codec = MaskRnCodec::default();
+        let ctx = make_ctx(d, &tk, &tg, &mk, &mg, 0.6, 99);
+        let selected = DeltaMaskCodec::default().select_updates(&ctx);
+        let enc = codec.encode(&ctx).unwrap();
+        let dec_ctx = DecodeCtx {
+            d,
+            mask_g: &mg,
+            s_g: &[],
+            seed: 99,
+        };
+        let Update::Mask(m) = codec.decode(&enc.bytes, &dec_ctx).unwrap() else {
+            panic!()
+        };
+        let mut expect = mg.clone();
+        let mut gated = 0usize;
+        for &k in &selected {
+            let i = k as u32;
+            if in_noise_dictionary(i, 99) {
+                expect[i as usize] = 1.0 - expect[i as usize];
+                gated += 1;
+            }
+        }
+        assert_eq!(m, expect, "decode must flip exactly the gated Δ′ set");
+        // At density 0.5 roughly half the selection must survive the gate —
+        // if nothing (or everything) did, the gate is not wired in.
+        assert!(gated > selected.len() / 4 && gated < selected.len() * 3 / 4);
+    }
+
+    #[test]
+    fn scratch_pooled_and_range_paths_are_identical() {
+        let d = 30_000;
+        let (tk, tg, mk, mg) = setup(d, 0.1, 43);
+        let codec = MaskRnCodec::default();
+        let ctx = make_ctx(d, &tk, &tg, &mk, &mg, 0.8, 7);
+        let plain = codec.encode(&ctx).unwrap();
+        let mut scratch = EncodeScratch::default();
+        let scratched = codec.encode_with(&ctx, &mut scratch).unwrap();
+        assert_eq!(plain.bytes, scratched.bytes);
+        let again = codec.encode_with(&ctx, &mut scratch).unwrap();
+        assert_eq!(plain.bytes, again.bytes);
+
+        let dec_ctx = DecodeCtx {
+            d,
+            mask_g: &mg,
+            s_g: &[],
+            seed: 7,
+        };
+        let Update::Mask(want) = codec.decode(&plain.bytes, &dec_ctx).unwrap() else {
+            panic!()
+        };
+        let pool = ScratchPool::new();
+        let Update::Mask(got) = codec.decode_pooled(&plain.bytes, &dec_ctx, &pool).unwrap()
+        else {
+            panic!()
+        };
+        assert_eq!(got, want);
+        pool.put(got);
+        let Update::Mask(got2) = codec.decode_pooled(&plain.bytes, &dec_ctx, &pool).unwrap()
+        else {
+            panic!()
+        };
+        assert_eq!(got2, want);
+        assert_eq!(pool.spares(), 0, "pooled decode must draw from the pool");
+
+        // Range tiling reproduces the full decode bitwise.
+        let rd = codec
+            .range_decoder(&plain.bytes, &dec_ctx)
+            .unwrap()
+            .expect("maskrn records support range decoding");
+        let mut tiled = mg.clone();
+        let cuts = [0usize, 1, 2, 2, d / 3, d / 2 + 7, d];
+        for w in cuts.windows(2) {
+            let (lo, hi) = (w[0], w[1]);
+            rd.decode_range(lo..hi, &mut tiled[lo..hi]);
+        }
+        assert_eq!(tiled, want);
+    }
+
+    #[test]
+    fn wrong_seed_rejects_out_of_dictionary_flips() {
+        // An honest record decoded under a different per-(round, client)
+        // seed claims flips outside *that* seed's dictionary — at density
+        // 0.5 the survival probability per index is 1/2, so any non-trivial
+        // record must be rejected.
+        let d = 20_000;
+        let (tk, tg, mk, mg) = setup(d, 0.2, 45);
+        let codec = MaskRnCodec::default();
+        let ctx = make_ctx(d, &tk, &tg, &mk, &mg, 1.0, 99);
+        let enc = codec.encode(&ctx).unwrap();
+        assert!(enc.bytes.len() > 8, "fixture must carry a non-empty index set");
+        let wrong_seed = DecodeCtx {
+            d,
+            mask_g: &mg,
+            s_g: &[],
+            seed: 100,
+        };
+        assert!(codec.decode(&enc.bytes, &wrong_seed).is_err());
+        assert!(codec.range_decoder(&enc.bytes, &wrong_seed).is_err());
+    }
+
+    #[test]
+    fn gated_record_is_smaller_than_the_ungated_pco_record() {
+        // The dictionary drops ~half the selected flips, so the maskrn
+        // record must undercut codec 9's full index stream on the same ctx.
+        let d = 100_000;
+        let (tk, tg, mk, mg) = setup(d, 0.3, 46);
+        let ctx = make_ctx(d, &tk, &tg, &mk, &mg, 0.8, 99);
+        let full = super::super::DeltaMaskPcoCodec::default()
+            .encode(&ctx)
+            .unwrap()
+            .bytes
+            .len();
+        let gated = MaskRnCodec::default().encode(&ctx).unwrap().bytes.len();
+        assert!(
+            gated < full,
+            "gated={gated} must be smaller than ungated pco={full}"
+        );
+    }
+
+    #[test]
+    fn empty_delta_roundtrip() {
+        let d = 1000;
+        let theta = vec![0.5f32; d];
+        let mut mask = Vec::new();
+        sample_mask_seeded(&theta, 1, &mut mask);
+        let codec = MaskRnCodec::default();
+        let ctx = make_ctx(d, &theta, &theta, &mask, &mask, 0.8, 5);
+        let enc = codec.encode(&ctx).unwrap();
+        let dec_ctx = DecodeCtx {
+            d,
+            mask_g: &mask,
+            s_g: &[],
+            seed: 5,
+        };
+        let Update::Mask(m) = codec.decode(&enc.bytes, &dec_ctx).unwrap() else {
+            panic!()
+        };
+        assert_eq!(m, mask);
+    }
+
+    #[test]
+    fn malformed_records_error_instead_of_panicking() {
+        let d = 10_000;
+        let (tk, tg, mk, mg) = setup(d, 0.1, 44);
+        let codec = MaskRnCodec::default();
+        let ctx = make_ctx(d, &tk, &tg, &mk, &mg, 1.0, 99);
+        let enc = codec.encode(&ctx).unwrap();
+        let dec_ctx = DecodeCtx {
+            d,
+            mask_g: &mg,
+            s_g: &[],
+            seed: 99,
+        };
+        // Wrong record tag (a v1 filter record, then codec 9) and version.
+        let mut bad = enc.bytes.clone();
+        bad[0] = 0;
+        assert!(codec.decode(&bad, &dec_ctx).is_err());
+        let mut bad = enc.bytes.clone();
+        bad[0] = super::super::deltamask_pco::RECORD_TAG;
+        assert!(codec.decode(&bad, &dec_ctx).is_err());
+        let mut bad = enc.bytes.clone();
+        bad[1] = RECORD_VERSION + 1;
+        assert!(codec.decode(&bad, &dec_ctx).is_err());
+        // Truncations.
+        for cut in [0, 3, 6, enc.bytes.len() - 1] {
+            assert!(codec.decode(&enc.bytes[..cut], &dec_ctx).is_err(), "cut={cut}");
+        }
+        // A v1 decoder must reject tag-8 records rather than misread them.
+        assert!(DeltaMaskCodec::default().decode(&enc.bytes, &dec_ctx).is_err());
+        // And d bounds the index range.
+        let small_mg = vec![0.0f32; 4];
+        let small_ctx = DecodeCtx {
+            d: 4,
+            mask_g: &small_mg,
+            s_g: &[],
+            seed: 99,
+        };
+        assert!(codec.decode(&enc.bytes, &small_ctx).is_err());
+    }
+}

@@ -12,6 +12,14 @@
 //!   EDEN, DRIVE, QSGD, FedCode (classic gradient compression applied to
 //!   the mask-score vector, per App. C.1's baseline configuration).
 //!
+//! The mask family also hosts the two sibling-paper codecs: `maskrn`
+//! (codec 10 — Masked Random Noise: Δ′ flips gated by a seed-derived
+//! frozen noise dictionary) and `sparse-rsn` (codec 11 — Regularized
+//! Sparse Random Networks: an absolute λ-penalized 1-bit supermask with
+//! polarity-optimized wire cost). Both reuse the codec-9 pco index-stream
+//! wire stage and compose with every drain shape through the same
+//! `encode_with`/`decode_pooled`/`range_decoder` surface.
+//!
 //! Every codec serializes *all* side information (seeds, scales, layout
 //! params) into its byte payload so the measured `wire_bits = 8·|bytes|`
 //! is an honest uplink count — the bpp figures in the benches come straight
@@ -25,10 +33,14 @@ pub mod eden;
 pub mod fedcode;
 pub mod fedmask;
 pub mod fedpm;
+pub mod maskrn;
 pub mod qsgd;
+pub mod sparse_rsn;
 
 pub use deltamask::{DeltaMaskCodec, FilterKind, PayloadBackend, Ranking};
 pub use deltamask_pco::DeltaMaskPcoCodec;
+pub use maskrn::MaskRnCodec;
+pub use sparse_rsn::SparseRsnCodec;
 
 use crate::util::rng::Xoshiro256pp;
 
@@ -402,6 +414,8 @@ pub fn by_name(name: &str) -> Option<Box<dyn UpdateCodec>> {
         "deltamask-xor32" => Box::new(DeltaMaskCodec::with_filter(FilterKind::Xor32)),
         "deltamask-random" => Box::new(DeltaMaskCodec::with_ranking(Ranking::Random)),
         "deltamask-pco" => Box::new(DeltaMaskPcoCodec::default()),
+        "maskrn" => Box::new(MaskRnCodec::default()),
+        "sparse-rsn" => Box::new(SparseRsnCodec::default()),
         "fedpm" => Box::new(fedpm::FedPmCodec),
         "fedmask" => Box::new(fedmask::FedMaskCodec::default()),
         "deepreduce" => Box::new(deepreduce::DeepReduceCodec::default()),
@@ -418,6 +432,8 @@ pub fn all_names() -> &'static [&'static str] {
     &[
         "deltamask",
         "deltamask-pco",
+        "maskrn",
+        "sparse-rsn",
         "fedpm",
         "fedmask",
         "deepreduce",

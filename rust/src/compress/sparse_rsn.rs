@@ -1,0 +1,468 @@
+//! **Sparse-RSN** (codec 11) — 1-bit sparse supermasks over fixed random
+//! weights, after *Regularized Sparse Random Networks* (arxiv 2309.10834).
+//!
+//! RSN never trains weights: the network is frozen at its (seed-derived)
+//! random initialization and each client learns a binary **supermask**
+//! selecting which random weights participate; a sparsity regularizer keeps
+//! the supermask small and the server aggregates client supermasks by
+//! mean/majority vote. Mapped onto this repo: the frozen random weights are
+//! the shared-seed model that every party already derives, the client's
+//! supermask is its sampled mask `m^{k,t}` pruned by an **L1-style score
+//! penalty** — coordinate `i` stays active only when `m^{k,t}_i = 1` *and*
+//! the client posterior clears the penalty, `θ^{k,t}_i ≥ λ` (an entry whose
+//! posterior cannot pay the regularizer is dropped even if the Bernoulli
+//! draw came up 1) — and the mean/majority aggregation is exactly the Beta
+//! pseudo-count server path (`Family::Mask`): the posterior mean over
+//! absolute client supermasks *is* their vote average.
+//!
+//! Unlike the Δ-flip codecs, the record is **absolute**: it reconstructs
+//! the client's pruned supermask outright rather than flipping `m^{g,t-1}`.
+//! The active set is shipped as a codec-9-style pco index stream with a
+//! polarity twist — whichever of the active set or its complement is
+//! smaller goes on the wire, so a polarized late-training supermask costs
+//! `min(|A|, d−|A|)` gaps, never more than d/2:
+//!
+//! ```text
+//! tag(1)=9  version(1)=1  polarity(1)  payload_len(4)  payload = pco stream
+//! ```
+//!
+//! `polarity = 0`: payload lists the **active** coordinates (base 0.0,
+//! listed → 1.0). `polarity = 1`: payload lists the **inactive** ones
+//! (base 1.0, listed → 0.0).
+//!
+//! Decode totality: header fields and polarity are validated, the pco
+//! decoder is total and `d`-bounded, and indexes must be strictly
+//! increasing and `< d` — corrupt records yield `Err`, never a panic. Range
+//! decoding is supported (the record is a per-index property: base value
+//! plus membership), with the one contract nuance that the reconstruction
+//! **overwrites** the `m^{g,t-1}` baseline the tile was initialized from —
+//! tiling still reproduces the full decode bitwise.
+
+use super::{
+    wire, DecodeCtx, EncodeCtx, EncodeScratch, Encoded, Family, ScratchPool, Update, UpdateCodec,
+};
+use crate::codec::pco;
+use anyhow::{ensure, Result};
+
+/// Record tag: next free tag after the v1 filter-tag space (0..=6), the
+/// codec-9 pco record (7) and the MaskRN record (8).
+pub const RECORD_TAG: u8 = 9;
+/// Record format version.
+pub const RECORD_VERSION: u8 = 1;
+
+/// Default L1-style penalty: an active entry must hold posterior mass
+/// `θ^{k,t} ≥ λ` to stay in the supermask. At 0.5 the regularizer prunes
+/// exactly the coordinates the client's training has turned against
+/// (posterior below a coin flip) while leaving warm entries untouched.
+pub const DEFAULT_LAMBDA: f32 = 0.5;
+
+#[derive(Clone, Debug)]
+pub struct SparseRsnCodec {
+    /// Sparsity penalty λ (see [`DEFAULT_LAMBDA`]). Encoder-side only — the
+    /// wire carries the pruned result, so decode needs no λ.
+    pub lambda: f32,
+}
+
+impl Default for SparseRsnCodec {
+    fn default() -> Self {
+        Self {
+            lambda: DEFAULT_LAMBDA,
+        }
+    }
+}
+
+/// Parsed record: the supermask as (base value, exception index set).
+struct ParsedSupermask {
+    base: f32,
+    idx: Vec<u32>,
+}
+
+impl SparseRsnCodec {
+    /// Parse + validate a record. Shared by every decode path so
+    /// malformed-record rejection is uniform.
+    fn parse(&self, bytes: &[u8], ctx: &DecodeCtx) -> Result<ParsedSupermask> {
+        ensure!(bytes.len() >= 7, "sparse-rsn record too short");
+        ensure!(
+            bytes[0] == RECORD_TAG,
+            "not a sparse-rsn record (tag {})",
+            bytes[0]
+        );
+        ensure!(
+            bytes[1] == RECORD_VERSION,
+            "unknown sparse-rsn record version {}",
+            bytes[1]
+        );
+        let polarity = bytes[2];
+        ensure!(polarity <= 1, "bad polarity byte {polarity}");
+        let mut r = wire::Reader::new(&bytes[3..]);
+        let payload_len = r.u32()? as usize;
+        let rest = &bytes[3 + r.pos..];
+        ensure!(rest.len() == payload_len, "payload length mismatch");
+        let idx = pco::decompress_u32s(rest, ctx.d).map_err(|e| anyhow::anyhow!("pco: {e}"))?;
+        let mut prev = None;
+        for &i in &idx {
+            ensure!((i as usize) < ctx.d, "index {i} out of range (d={})", ctx.d);
+            if let Some(p) = prev {
+                ensure!(i > p, "indexes not strictly increasing");
+            }
+            prev = Some(i);
+        }
+        Ok(ParsedSupermask {
+            base: polarity as f32,
+            idx,
+        })
+    }
+
+    /// Reconstruct the supermask into `out` (any prior contents are
+    /// overwritten — the record is absolute).
+    fn fill(&self, parsed: &ParsedSupermask, out: &mut [f32]) {
+        out.fill(parsed.base);
+        let flip = 1.0 - parsed.base;
+        for &i in &parsed.idx {
+            out[i as usize] = flip;
+        }
+    }
+}
+
+/// Range decoder: base-fill plus two binary searches per range. Overwrites
+/// the baseline the tile was initialized from (absolute reconstruction).
+struct SupermaskRange {
+    base: f32,
+    idx: Vec<u32>,
+}
+
+impl super::MaskRangeDecoder for SupermaskRange {
+    fn decode_range(&self, range: std::ops::Range<usize>, mask: &mut [f32]) {
+        debug_assert_eq!(mask.len(), range.len());
+        mask.fill(self.base);
+        let flip = 1.0 - self.base;
+        let lo = self.idx.partition_point(|&i| (i as usize) < range.start);
+        let hi = self.idx.partition_point(|&i| (i as usize) < range.end);
+        for &i in &self.idx[lo..hi] {
+            mask[i as usize - range.start] = flip;
+        }
+    }
+}
+
+impl UpdateCodec for SparseRsnCodec {
+    fn name(&self) -> &'static str {
+        "sparse-rsn"
+    }
+
+    fn family(&self) -> Family {
+        Family::Mask
+    }
+
+    fn encode(&self, ctx: &EncodeCtx) -> Result<Encoded> {
+        self.encode_with(ctx, &mut EncodeScratch::default())
+    }
+
+    /// Encode reusing the caller's scratch: one pass over (m^{k,t}, θ^{k,t})
+    /// splits coordinates into active/inactive (both ascending by
+    /// construction) in the recycled `delta`/`rank` buffers, then the
+    /// smaller side becomes the pco payload — steady-state encodes allocate
+    /// only the output bytes.
+    fn encode_with(&self, ctx: &EncodeCtx, scratch: &mut EncodeScratch) -> Result<Encoded> {
+        ensure!(
+            ctx.mask_k.len() == ctx.d && ctx.theta_k.len() == ctx.d,
+            "mask/theta length mismatch"
+        );
+        scratch.delta.clear(); // active coordinates
+        scratch.rank.clear(); // inactive coordinates
+        for i in 0..ctx.d {
+            if ctx.mask_k[i] > 0.5 && ctx.theta_k[i] >= self.lambda {
+                scratch.delta.push(i as u32);
+            } else {
+                scratch.rank.push(i as u32);
+            }
+        }
+        let (polarity, side): (u8, &[u32]) = if scratch.delta.len() <= scratch.rank.len() {
+            (0, &scratch.delta)
+        } else {
+            (1, &scratch.rank)
+        };
+        let payload = pco::compress_u32s(side);
+
+        let mut bytes = Vec::with_capacity(payload.len() + 7);
+        bytes.push(RECORD_TAG);
+        bytes.push(RECORD_VERSION);
+        bytes.push(polarity);
+        wire::put_u32(&mut bytes, payload.len() as u32);
+        bytes.extend_from_slice(&payload);
+        Ok(Encoded { bytes })
+    }
+
+    fn decode(&self, bytes: &[u8], ctx: &DecodeCtx) -> Result<Update> {
+        let parsed = self.parse(bytes, ctx)?;
+        let mut mask = vec![0.0f32; ctx.d];
+        self.fill(&parsed, &mut mask);
+        Ok(Update::Mask(mask))
+    }
+
+    fn decode_pooled(&self, bytes: &[u8], ctx: &DecodeCtx, pool: &ScratchPool) -> Result<Update> {
+        // Parse before leasing, so malformed records never touch the pool.
+        let parsed = self.parse(bytes, ctx)?;
+        let mut mask = pool.take_copy(ctx.mask_g);
+        self.fill(&parsed, &mut mask);
+        Ok(Update::Mask(mask))
+    }
+
+    fn range_decoder(
+        &self,
+        bytes: &[u8],
+        ctx: &DecodeCtx,
+    ) -> Result<Option<Box<dyn super::MaskRangeDecoder>>> {
+        let parsed = self.parse(bytes, ctx)?;
+        Ok(Some(Box::new(SupermaskRange {
+            base: parsed.base,
+            idx: parsed.idx,
+        })))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::sample_mask_seeded;
+    use crate::util::rng::Xoshiro256pp;
+
+    fn make_ctx<'a>(
+        d: usize,
+        theta_k: &'a [f32],
+        theta_g: &'a [f32],
+        mask_k: &'a [f32],
+        mask_g: &'a [f32],
+        kappa: f64,
+    ) -> EncodeCtx<'a> {
+        EncodeCtx {
+            d,
+            theta_k,
+            theta_g,
+            mask_k,
+            mask_g,
+            s_k: &[],
+            s_g: &[],
+            kappa,
+            seed: 99,
+        }
+    }
+
+    fn setup(d: usize, drift: f32, seed: u64) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+        let mut rng = Xoshiro256pp::new(seed);
+        let theta_g: Vec<f32> = (0..d).map(|_| rng.next_f32()).collect();
+        let theta_k: Vec<f32> = theta_g
+            .iter()
+            .map(|&p| (p + drift * (rng.next_f32() - 0.5)).clamp(0.01, 0.99))
+            .collect();
+        let mut mask_g = Vec::new();
+        sample_mask_seeded(&theta_g, 7, &mut mask_g);
+        let mut mask_k = Vec::new();
+        sample_mask_seeded(&theta_k, 8, &mut mask_k);
+        (theta_k, theta_g, mask_k, mask_g)
+    }
+
+    /// The supermask the encoder must transmit: m^{k,t} pruned by λ.
+    fn expected_supermask(theta_k: &[f32], mask_k: &[f32], lambda: f32) -> Vec<f32> {
+        theta_k
+            .iter()
+            .zip(mask_k)
+            .map(|(&t, &m)| if m > 0.5 && t >= lambda { 1.0 } else { 0.0 })
+            .collect()
+    }
+
+    #[test]
+    fn decode_reconstructs_the_penalized_supermask_exactly() {
+        let d = 50_000;
+        let (tk, tg, mk, mg) = setup(d, 0.2, 42);
+        let codec = SparseRsnCodec::default();
+        let ctx = make_ctx(d, &tk, &tg, &mk, &mg, 0.6);
+        let enc = codec.encode(&ctx).unwrap();
+        let dec_ctx = DecodeCtx {
+            d,
+            mask_g: &mg,
+            s_g: &[],
+            seed: 99,
+        };
+        let Update::Mask(m) = codec.decode(&enc.bytes, &dec_ctx).unwrap() else {
+            panic!()
+        };
+        let expect = expected_supermask(&tk, &mk, codec.lambda);
+        assert_eq!(m, expect, "decode must equal the λ-pruned client supermask");
+        // The penalty must actually prune: some sampled-1 entries with weak
+        // posteriors are dropped.
+        let pruned = mk
+            .iter()
+            .zip(&expect)
+            .filter(|&(&m, &e)| m > 0.5 && e < 0.5)
+            .count();
+        assert!(pruned > 0, "λ={} never pruned anything", codec.lambda);
+    }
+
+    #[test]
+    fn polarity_ships_the_smaller_side() {
+        let d = 10_000;
+        // Nearly-all-active supermask → polarity 1 (inactive list on wire).
+        let theta = vec![0.9f32; d];
+        let mut mask_k = vec![1.0f32; d];
+        for i in (0..d).step_by(997) {
+            mask_k[i] = 0.0;
+        }
+        let mask_g = vec![0.0f32; d];
+        let codec = SparseRsnCodec::default();
+        let ctx = make_ctx(d, &theta, &theta, &mask_k, &mask_g, 1.0);
+        let enc = codec.encode(&ctx).unwrap();
+        assert_eq!(enc.bytes[2], 1, "dense supermask must ship its complement");
+        // It still decodes to the exact supermask…
+        let dec_ctx = DecodeCtx {
+            d,
+            mask_g: &mask_g,
+            s_g: &[],
+            seed: 99,
+        };
+        let Update::Mask(m) = codec.decode(&enc.bytes, &dec_ctx).unwrap() else {
+            panic!()
+        };
+        assert_eq!(m, expected_supermask(&theta, &mask_k, codec.lambda));
+        // …and costs far less than the active list would: the record stays
+        // well under 1 bpp even though |A| ≈ d.
+        assert!(
+            (enc.bytes.len() as f64) * 8.0 / (d as f64) < 1.0,
+            "dense supermask record is {} bytes",
+            enc.bytes.len()
+        );
+
+        // Nearly-all-inactive → polarity 0 (active list on wire).
+        let mask_k: Vec<f32> = (0..d).map(|i| if i % 997 == 0 { 1.0 } else { 0.0 }).collect();
+        let ctx = make_ctx(d, &theta, &theta, &mask_k, &mask_g, 1.0);
+        let enc = codec.encode(&ctx).unwrap();
+        assert_eq!(enc.bytes[2], 0, "sparse supermask must ship its active set");
+    }
+
+    #[test]
+    fn scratch_pooled_and_range_paths_are_identical() {
+        let d = 30_000;
+        let (tk, tg, mk, mg) = setup(d, 0.1, 43);
+        let codec = SparseRsnCodec::default();
+        let ctx = make_ctx(d, &tk, &tg, &mk, &mg, 0.8);
+        let plain = codec.encode(&ctx).unwrap();
+        let mut scratch = EncodeScratch::default();
+        let scratched = codec.encode_with(&ctx, &mut scratch).unwrap();
+        assert_eq!(plain.bytes, scratched.bytes);
+        let again = codec.encode_with(&ctx, &mut scratch).unwrap();
+        assert_eq!(plain.bytes, again.bytes);
+
+        let dec_ctx = DecodeCtx {
+            d,
+            mask_g: &mg,
+            s_g: &[],
+            seed: 99,
+        };
+        let Update::Mask(want) = codec.decode(&plain.bytes, &dec_ctx).unwrap() else {
+            panic!()
+        };
+        let pool = ScratchPool::new();
+        let Update::Mask(got) = codec.decode_pooled(&plain.bytes, &dec_ctx, &pool).unwrap()
+        else {
+            panic!()
+        };
+        assert_eq!(got, want);
+        pool.put(got);
+        let Update::Mask(got2) = codec.decode_pooled(&plain.bytes, &dec_ctx, &pool).unwrap()
+        else {
+            panic!()
+        };
+        assert_eq!(got2, want);
+        assert_eq!(pool.spares(), 0, "pooled decode must draw from the pool");
+
+        // Range tiling reproduces the full decode bitwise — including the
+        // absolute overwrite of the m^{g,t-1} baseline each tile starts from.
+        let rd = codec
+            .range_decoder(&plain.bytes, &dec_ctx)
+            .unwrap()
+            .expect("sparse-rsn records support range decoding");
+        let mut tiled = mg.clone();
+        let cuts = [0usize, 1, 2, 2, d / 3, d / 2 + 7, d];
+        for w in cuts.windows(2) {
+            let (lo, hi) = (w[0], w[1]);
+            rd.decode_range(lo..hi, &mut tiled[lo..hi]);
+        }
+        assert_eq!(tiled, want);
+    }
+
+    #[test]
+    fn empty_and_full_supermask_roundtrip() {
+        let d = 1000;
+        let mask_g = vec![0.0f32; d];
+        let codec = SparseRsnCodec::default();
+        let dec_ctx = DecodeCtx {
+            d,
+            mask_g: &mask_g,
+            s_g: &[],
+            seed: 99,
+        };
+        // All entries below λ → empty supermask.
+        let theta = vec![0.1f32; d];
+        let mask_k = vec![1.0f32; d];
+        let ctx = make_ctx(d, &theta, &theta, &mask_k, &mask_g, 1.0);
+        let enc = codec.encode(&ctx).unwrap();
+        let Update::Mask(m) = codec.decode(&enc.bytes, &dec_ctx).unwrap() else {
+            panic!()
+        };
+        assert!(m.iter().all(|&x| x == 0.0));
+        // All entries active → full supermask.
+        let theta = vec![0.9f32; d];
+        let ctx = make_ctx(d, &theta, &theta, &mask_k, &mask_g, 1.0);
+        let enc = codec.encode(&ctx).unwrap();
+        let Update::Mask(m) = codec.decode(&enc.bytes, &dec_ctx).unwrap() else {
+            panic!()
+        };
+        assert!(m.iter().all(|&x| x == 1.0));
+    }
+
+    #[test]
+    fn malformed_records_error_instead_of_panicking() {
+        let d = 10_000;
+        let (tk, tg, mk, mg) = setup(d, 0.1, 44);
+        let codec = SparseRsnCodec::default();
+        let ctx = make_ctx(d, &tk, &tg, &mk, &mg, 1.0);
+        let enc = codec.encode(&ctx).unwrap();
+        let dec_ctx = DecodeCtx {
+            d,
+            mask_g: &mg,
+            s_g: &[],
+            seed: 99,
+        };
+        // Wrong record tag (v1 filter, codec 9, codec 10), version, polarity.
+        for tag in [0u8, super::super::deltamask_pco::RECORD_TAG, super::super::maskrn::RECORD_TAG]
+        {
+            let mut bad = enc.bytes.clone();
+            bad[0] = tag;
+            assert!(codec.decode(&bad, &dec_ctx).is_err(), "tag={tag}");
+        }
+        let mut bad = enc.bytes.clone();
+        bad[1] = RECORD_VERSION + 1;
+        assert!(codec.decode(&bad, &dec_ctx).is_err());
+        let mut bad = enc.bytes.clone();
+        bad[2] = 2;
+        assert!(codec.decode(&bad, &dec_ctx).is_err(), "polarity 2 must be rejected");
+        // Truncations.
+        for cut in [0, 3, 6, enc.bytes.len() - 1] {
+            assert!(codec.decode(&enc.bytes[..cut], &dec_ctx).is_err(), "cut={cut}");
+        }
+        // A v1 decoder must reject tag-9 records rather than misread them.
+        assert!(
+            super::super::DeltaMaskCodec::default()
+                .decode(&enc.bytes, &dec_ctx)
+                .is_err()
+        );
+        // And d bounds the index range.
+        let small_mg = vec![0.0f32; 4];
+        let small_ctx = DecodeCtx {
+            d: 4,
+            mask_g: &small_mg,
+            s_g: &[],
+            seed: 99,
+        };
+        assert!(codec.decode(&enc.bytes, &small_ctx).is_err());
+    }
+}

@@ -20,7 +20,7 @@
 //! Decoding is per-record deterministic (the context is an immutable
 //! round-start snapshot) and conforming aggregators are arrival-order
 //! equivalent (see the [`Aggregator`] contract), so the sharded drain is
-//! **bitwise identical** to the serial path — property-tested across all 9
+//! **bitwise identical** to the serial path — property-tested across all 11
 //! codecs, both pipeline modes and many worker counts in
 //! `rust/tests/decode_workers.rs`. The results channel is bounded, so at
 //! most O(workers · d) decoded floats sit in the decode→absorb hand-off no

@@ -35,7 +35,7 @@
 //! contract: the pipeline runs the same validation, the same
 //! decode kernels (including the range-restricted per-shard sweep) and
 //! drives the same [`Aggregator`] interface — property-tested across all
-//! 9 codecs × both pipeline modes × worker/shard combinations × multi-round
+//! all 11 registered codecs × both pipeline modes × worker/shard combinations × multi-round
 //! trajectories in `rust/tests/agg_shards.rs`.
 //!
 //! ```

@@ -52,7 +52,7 @@
 //! slot, and the [`Aggregator`] contract already requires arrival-order
 //! equivalence). Stitching the slices back is a pure copy. The property
 //! suite in `rust/tests/agg_shards.rs` checks bitwise identity across all
-//! 9 codecs × both pipeline modes × shard counts {1,2,3,8} under
+//! all 11 codecs × both pipeline modes × shard counts {1,2,3,8} under
 //! adversarial arrival orders — and, for the resident path, across
 //! multi-round trajectories through the same view.
 

@@ -65,7 +65,7 @@
 //! hit/miss counters proving the zero-alloc steady state). Every batched
 //! or sharded variant is parity-locked to a retained scalar/serial oracle:
 //! it changes *how* work is scheduled or queried, never what is encoded —
-//! all 9 codecs stay bitwise-identical on the wire and in the aggregate.
+//! all 11 codecs stay bitwise-identical on the wire and in the aggregate.
 //! `benches/hotpaths.rs` asserts this on every run.
 
 pub mod bench;

@@ -123,7 +123,7 @@ fn drain_with(
 }
 
 /// The tentpole property: sharded drain (any shard count, either decode
-/// shape) ≡ the single-lane serial drain, bitwise, across all 9 codecs ×
+/// shape) ≡ the single-lane serial drain, bitwise, across all 11 codecs ×
 /// both pipeline modes × shard counts {1, 2, 3, 8}, with varying client
 /// counts and adversarial arrival orders.
 #[test]
@@ -409,7 +409,7 @@ fn drain_trajectory_serial(name: &str, d: usize, rounds: usize, mode: PipelineMo
 
 /// The round-resident tentpole property: a multi-round trajectory through
 /// persistent workers/lanes/pools — across the ⌈1/ρ⌉ prior reset — is
-/// bitwise identical to the per-round-spawn serial path, for all 9 codecs
+/// bitwise identical to the per-round-spawn serial path, for all 11 codecs
 /// × both pipeline modes × worker/shard combinations (resident decode
 /// crew only, resident lanes only, both).
 #[test]

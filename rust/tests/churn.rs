@@ -194,7 +194,7 @@ fn drain_resident(
 
 /// With chaos off, a relaxed completion policy (quorum 0.5, 60s deadline)
 /// must be bitwise-invisible: same aggregator state as the strict
-/// reference and clean fault counters — for all 9 codecs, both pipeline
+/// reference and clean fault counters — for all 11 codecs, both pipeline
 /// modes, and both drain shapes.
 #[test]
 fn relaxed_policy_is_dormant_on_clean_rounds() {
@@ -826,15 +826,17 @@ fn transient_send_failures_are_retried_to_a_clean_round() {
     assert!(err.contains("uplink closed after 0/5"), "{err}");
 }
 
-/// The CI knob-matrix `churn` entry drives this smoke through the env
-/// surface (`DELTAMASK_CHAOS` / `DELTAMASK_QUORUM` plus the scaling
-/// knobs): whatever scenario the env describes, two runs of it must agree
-/// exactly — same per-round fault counters and accuracy on success, or
-/// the very same error if the scenario cannot meet its quorum. With no
-/// env set this degenerates to a clean determinism check.
+/// The CI knob-matrix `churn` entries drive this smoke through the env
+/// surface (`DELTAMASK_METHOD` / `DELTAMASK_CHAOS` / `DELTAMASK_QUORUM`
+/// plus the scaling knobs — the uds-churn-maskrn entry points it at a
+/// sibling codec over the framed socket): whatever scenario the env
+/// describes, two runs of it must agree exactly — same per-round fault
+/// counters and accuracy on success, or the very same error if the
+/// scenario cannot meet its quorum. With no env set this degenerates to a
+/// clean determinism check.
 #[test]
 fn ci_env_knob_scenario_is_deterministic() {
-    let mut cfg = mini_cfg("deltamask");
+    let mut cfg = mini_cfg(&deltamask::fl::method_from_env());
     cfg.quorum = deltamask::fl::quorum_from_env();
     cfg.chaos = deltamask::fl::chaos_from_env();
     cfg.decode_workers = deltamask::fl::decode_workers_from_env();

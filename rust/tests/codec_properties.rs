@@ -3,7 +3,7 @@
 //! filters, update codecs) with seed sweeps — the "fuzz-lite" suite.
 
 use deltamask::codec::{arith, deflate, png};
-use deltamask::compress::{self, DecodeCtx, EncodeCtx, Update};
+use deltamask::compress::{self, DecodeCtx, EncodeCtx, Update, UpdateCodec};
 use deltamask::filters::{BinaryFuse, MembershipFilter};
 use deltamask::model::sample_mask_seeded;
 use deltamask::util::rng::Xoshiro256pp;
@@ -189,8 +189,8 @@ fn corrupted_records_error_not_panic() {
 
 #[test]
 fn decode_is_total_for_every_codec() {
-    // Property: `decode` is a *total* function over byte strings — for all 9
-    // codecs it returns `Ok` (a well-formed d-length update) or `Err`, and
+    // Property: `decode` is a *total* function over byte strings — for every
+    // registered codec it returns `Ok` (a well-formed d-length update) or `Err`, and
     // never panics or over-reads, on (a) every truncation prefix of a valid
     // record, (b) single-bit corruptions throughout the record, and (c)
     // entirely random byte strings. A panic anywhere aborts this test, so
@@ -415,6 +415,88 @@ fn wire_tags_pin_codec_9_and_payload_backends() {
             _ => panic!(),
         }
     }
+}
+
+#[test]
+fn registry_count_is_pinned() {
+    // The single place the codec count lives. Every suite iterates
+    // `all_names()`, so a new codec enters the whole property matrix by
+    // registry growth alone — only this assertion changes when one lands.
+    assert_eq!(compress::all_names().len(), 11);
+}
+
+#[test]
+fn sibling_wire_tags_are_pinned_and_disjoint() {
+    // Wire identity for the sibling-paper codecs: maskrn announces tag 8
+    // and sparse-rsn tag 9 — both outside the v1 filter-tag space (0..=6)
+    // and distinct from the codec-9 pco tag (7) — so every earlier decoder
+    // rejects the new records with an error instead of misreading them,
+    // and vice versa. These bytes are the compatibility contract; changing
+    // them orphans recorded wire traffic.
+    use deltamask::compress::{
+        deltamask_pco, maskrn, sparse_rsn, DeltaMaskCodec, DeltaMaskPcoCodec, UpdateCodec,
+    };
+
+    assert_eq!(maskrn::RECORD_TAG, 8);
+    assert_eq!(maskrn::RECORD_VERSION, 1);
+    assert_eq!(sparse_rsn::RECORD_TAG, 9);
+    assert_eq!(sparse_rsn::RECORD_VERSION, 1);
+    let v1_filter_tags = 0u8..=6;
+    let taken = [deltamask_pco::RECORD_TAG, maskrn::RECORD_TAG, sparse_rsn::RECORD_TAG];
+    for tag in taken {
+        assert!(!v1_filter_tags.contains(&tag), "tag {tag} collides with v1");
+    }
+    assert_eq!(taken.iter().collect::<std::collections::HashSet<_>>().len(), 3);
+
+    let d = 4_000usize;
+    let mut rng = Xoshiro256pp::new(0x51b);
+    let theta: Vec<f32> = (0..d).map(|_| rng.next_f32()).collect();
+    let mut mask_g = Vec::new();
+    sample_mask_seeded(&theta, 3, &mut mask_g);
+    let mut mask_k = mask_g.clone();
+    for i in 0..80 {
+        mask_k[(i * 31) % d] = 1.0 - mask_k[(i * 31) % d];
+    }
+    let ctx = EncodeCtx {
+        d,
+        theta_k: &theta,
+        theta_g: &theta,
+        mask_k: &mask_k,
+        mask_g: &mask_g,
+        s_k: &[],
+        s_g: &[],
+        kappa: 0.8,
+        seed: 11,
+    };
+    let dctx = DecodeCtx {
+        d,
+        mask_g: &mask_g,
+        s_g: &[],
+        seed: 11,
+    };
+
+    let mrn_rec = compress::by_name("maskrn").unwrap().encode(&ctx).unwrap().bytes;
+    assert_eq!(mrn_rec[0], 8, "codec-10 record tag");
+    assert_eq!(mrn_rec[1], 1, "maskrn record version");
+    let rsn_rec = compress::by_name("sparse-rsn").unwrap().encode(&ctx).unwrap().bytes;
+    assert_eq!(rsn_rec[0], 9, "codec-11 record tag");
+    assert_eq!(rsn_rec[1], 1, "sparse-rsn record version");
+    assert!(rsn_rec[2] <= 1, "polarity byte");
+
+    // Cross-rejection: every decoder bails on the other codecs' records.
+    let v1 = DeltaMaskCodec::default();
+    let pco = DeltaMaskPcoCodec::default();
+    let mrn = compress::by_name("maskrn").unwrap();
+    let rsn = compress::by_name("sparse-rsn").unwrap();
+    for rec in [&mrn_rec, &rsn_rec] {
+        assert!(v1.decode(rec, &dctx).is_err(), "v1 must reject sibling records");
+        assert!(pco.decode(rec, &dctx).is_err(), "codec 9 must reject sibling records");
+    }
+    assert!(mrn.decode(&rsn_rec, &dctx).is_err());
+    assert!(rsn.decode(&mrn_rec, &dctx).is_err());
+    let pco_rec = pco.encode(&ctx).unwrap().bytes;
+    assert!(mrn.decode(&pco_rec, &dctx).is_err());
+    assert!(rsn.decode(&pco_rec, &dctx).is_err());
 }
 
 #[test]

@@ -75,7 +75,7 @@ fn drain_into(
 }
 
 /// The tentpole property: sharded drain ≡ serial drain, bitwise, across
-/// all 9 codecs (both update families) × both pipeline modes × worker
+/// all 11 codecs (both update families) × both pipeline modes × worker
 /// counts 1/2/3/8, with varying client counts and adversarial arrival
 /// orders.
 #[test]

