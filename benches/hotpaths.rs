@@ -14,8 +14,10 @@
 //! record asserted in-run), the sibling mask codecs `maskrn` / `sparse-rsn`
 //! (codecs 10–11) on the same fixture, the sharded `drain_round` (serial vs 4 decode
 //! workers, vs 4 decode workers × 4 dimension shards — the `_s4` case —
-//! and vs the round-resident `DrainPipeline` reusing one crew/view across
-//! iterations — the `_s4_resident` case), matmuls, and tracked
+//! vs the round-resident `DrainPipeline` reusing one crew/view across
+//! iterations — the `_s4_resident` case — and vs a placed view with one
+//! shard absorbed by a `serve_shard_worker` over a UDS socket — the
+//! `_s4_remote` case), matmuls, and tracked
 //! PNG/DEFLATE throughputs. The JSON schema and the full bench workflow
 //! are documented in `benches/README.md`.
 
@@ -461,6 +463,69 @@ fn main() {
                 batched_secs: resident_secs,
                 parity,
             });
+        }
+
+        // Multi-host shard fabric on the same round: one of the four
+        // dimension shards is absorbed by a `serve_shard_worker` session
+        // behind a UDS socket (an in-process stand-in for a remote host),
+        // the rest stay on local thread lanes. The pipeline and placed
+        // view are round-resident, so the timed iterations measure the
+        // per-round wire hop (splits + finish + slice return), not
+        // connect or thread-spawn cost. The `_s4_resident` −
+        // `_s4_remote` gap is the DMW1 fabric tax for one remote lane.
+        // Parity is bitwise on the stitched theta_g vs the serial drain.
+        {
+            use deltamask::coordinator::{
+                serve_shard_worker, ConfigFingerprint, DrainPipeline, Listener, ShardPlacement,
+                SocketAddrSpec, SocketConfig,
+            };
+            use std::sync::Arc;
+
+            let fp = ConfigFingerprint {
+                seed: 0xD3C0,
+                n_clients: k as u64,
+                rounds: 1,
+                d: d as u64,
+            };
+            let scfg = SocketConfig::default();
+            let sock = std::env::temp_dir()
+                .join(format!("deltamask-bench-remote-{}.sock", std::process::id()));
+            let _ = std::fs::remove_file(&sock);
+            let listener = Listener::bind(&SocketAddrSpec::Uds(sock.clone()))
+                .expect("bind bench shard worker");
+            // Lingering worker thread, detached on purpose: it ignores the
+            // shutdown sent when the view retires, parks in `accept`, and
+            // dies with the process.
+            std::thread::spawn(move || serve_shard_worker::<MaskServer>(&listener, scfg, fp, true));
+
+            let placement =
+                ShardPlacement::parse(&format!("local,uds:{},local,local", sock.display()))
+                    .expect("bench placement");
+            let codec_arc: Arc<dyn UpdateCodec> =
+                Arc::from(deltamask::compress::by_name("deltamask").unwrap());
+            let plan_arc = Arc::new(plan.clone());
+            let pipeline =
+                DrainPipeline::new(DrainConfig::sharded(PipelineMode::Streaming, workers, shards));
+            let mut remote_server = MaskServer::with_theta0(d, 1.0, 0.85);
+            let mut remote_view = remote_server
+                .shard_view_placed(shards, &placement, fp, scfg)
+                .expect("bench remote shard view");
+            let remote_secs = summarize(&time_fn(warmup, iters, || {
+                let mut channel = fill_channel();
+                pipeline
+                    .drain_round(&mut channel, &plan_arc, &codec_arc, &mut remote_view)
+                    .expect("remote drain_round");
+            }))
+            .min;
+            remote_server.adopt_shards(remote_view);
+            let parity = drain(1) == remote_server.theta_g;
+            pairs.push(Pair {
+                name: format!("drain_round_deltamask_d{d}_k{k}_w{workers}_s{shards}_remote"),
+                scalar_secs: serial_secs,
+                batched_secs: remote_secs,
+                parity,
+            });
+            let _ = std::fs::remove_file(&sock);
         }
     }
 

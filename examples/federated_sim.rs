@@ -6,15 +6,16 @@
 //!         [--rounds 30] [--clients 8] [--noniid] [--backend xla]
 
 use deltamask::bench::Table;
-use deltamask::coordinator::PipelineMode;
-use deltamask::fl::{run_experiment, BackendKind, ExperimentConfig, HeadInit};
+use deltamask::fl::{knobs, run_experiment, BackendKind, ExperimentConfig, HeadInit};
 use deltamask::util::cli::Args;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
     let dataset = args.get_or("dataset", "cifar10").to_string();
     let noniid = args.flag("noniid");
-    let base = ExperimentConfig {
+    // Env-resolved tuning/transport defaults (the fl::knobs table), the
+    // scenario's experiment shape on top, then any CLI knob spellings.
+    let mut base = ExperimentConfig {
         dataset: dataset.clone(),
         arch: "test".into(),
         method: String::new(),
@@ -38,17 +39,9 @@ fn main() -> anyhow::Result<()> {
         lp_rounds: 1,
         theta0: 0.85,
         arch_override: None,
-        pipeline: PipelineMode::from_args(&args),
-        decode_workers: args.usize("decode-workers", deltamask::fl::decode_workers_from_env()),
-        agg_shards: args.usize("agg-shards", deltamask::fl::agg_shards_from_env()),
-        persistent_pipeline: args.flag("persistent-pipeline")
-            || deltamask::fl::persistent_pipeline_from_env(),
-        quorum: deltamask::fl::quorum_from_env(),
-        round_deadline_ms: deltamask::fl::round_deadline_ms_from_env(),
-        on_decode_error: deltamask::fl::on_decode_error_from_env(),
-        chaos: deltamask::fl::chaos_from_env(),
-        transport: deltamask::fl::transport_from_env(),
+        ..ExperimentConfig::default()
     };
+    knobs::apply_cli(&mut base, &args);
 
     let split = if noniid { "non-IID Dir(0.1)" } else { "IID Dir(10)" };
     println!("dataset={dataset} split={split} N={} R={}", base.n_clients, base.rounds);

@@ -13,7 +13,7 @@
 //!   5. prints accuracy and measured bits-per-parameter per round.
 
 use deltamask::coordinator::PipelineMode;
-use deltamask::fl::{run_experiment, BackendKind, ExperimentConfig, HeadInit};
+use deltamask::fl::{run_experiment, BackendKind, ExperimentConfig, HeadInit, ServerTuning};
 
 fn main() -> anyhow::Result<()> {
     let cfg = ExperimentConfig {
@@ -36,15 +36,18 @@ fn main() -> anyhow::Result<()> {
         lp_rounds: 1,
         theta0: 0.85,
         arch_override: None,
-        pipeline: PipelineMode::Streaming, // decode→absorb per arrival
-        decode_workers: 2,                 // shard the server decode sweep
-        agg_shards: 2,                     // shard aggregation by dimension
-        persistent_pipeline: true,         // spawn workers/lanes once, park between rounds
-        quorum: 1.0,                       // strict: every planned client must report
-        round_deadline_ms: 0,              // no drain deadline
-        on_decode_error: Default::default(), // abort on undecodable records
-        chaos: String::new(),              // clean transport
-        transport: Default::default(),     // in-process channel uplink
+        tuning: ServerTuning {
+            pipeline: PipelineMode::Streaming, // decode→absorb per arrival
+            decode_workers: 2,                 // shard the server decode sweep
+            agg_shards: 2,                     // shard aggregation by dimension
+            shard_place: String::new(),        // absorb lanes in-process (no remote workers)
+            persistent_pipeline: true,         // spawn workers/lanes once, park between rounds
+            quorum: 1.0,                       // strict: every planned client must report
+            round_deadline_ms: 0,              // no drain deadline
+            on_decode_error: Default::default(), // abort on undecodable records
+        },
+        chaos: String::new(),          // clean transport
+        transport: Default::default(), // in-process channel uplink
     };
 
     println!(

@@ -132,6 +132,32 @@ pub trait Aggregator {
     fn finish_round_partial(&mut self) {
         self.finish_round();
     }
+
+    /// A sticky absorb-lane fault, if any — a remote shard lane whose
+    /// socket died or whose worker broke protocol
+    /// (see `ShardedAggregator` and `RemoteShardLane` in
+    /// [`super::shard`]). Lane faults are deliberately out-of-band: the
+    /// lane keeps draining its job queue so routing never blocks, and the
+    /// drain checks this before *and after* settling so a faulted round
+    /// aborts instead of publishing half-absorbed global state. Default:
+    /// `None` (single-lane and all-local sinks cannot fault).
+    fn lane_fault(&self) -> Option<String> {
+        None
+    }
+}
+
+/// Abort and bail if the aggregator reports a lane fault. Called by every
+/// drain shape right before settling (so a round that lost a shard lane
+/// mid-absorb never finishes) and right after finishing (so a fault during
+/// the finish exchange itself — the slice-return leg — surfaces on this
+/// round, not the next). `abort_round` after a completed finish is a
+/// no-op, so the post-finish call is safe on both outcomes.
+pub(super) fn bail_on_lane_fault<A: Aggregator + ?Sized>(agg: &mut A) -> Result<()> {
+    if let Some(fault) = agg.lane_fault() {
+        agg.abort_round();
+        bail!("shard lane fault: {fault}");
+    }
+    Ok(())
 }
 
 /// What to do when a record fails to decode mid-round.
@@ -766,12 +792,14 @@ fn drain_serial(
             }
         }
     }
+    bail_on_lane_fault(agg)?;
     let partial = gate.settle(absorbed, &mut report)?;
     if partial {
         agg.finish_round_partial();
     } else {
         agg.finish_round();
     }
+    bail_on_lane_fault(agg)?;
     report.dec_by_worker[0] = report.dec_secs;
     Ok(report)
 }
@@ -1034,12 +1062,14 @@ fn drain_decode_workers(
         out
     });
     drained?;
+    bail_on_lane_fault(agg)?;
     let partial = gate.settle(absorbed, &mut report)?;
     if partial {
         agg.finish_round_partial();
     } else {
         agg.finish_round();
     }
+    bail_on_lane_fault(agg)?;
     Ok(report)
 }
 
@@ -1173,13 +1203,17 @@ fn drain_shard_routed(
     };
 
     drop(router);
-    match drained.and_then(|absorbed| gate.settle(absorbed, &mut report)) {
+    let settled = drained
+        .and_then(|absorbed| bail_on_lane_fault(agg).map(|()| absorbed))
+        .and_then(|absorbed| gate.settle(absorbed, &mut report));
+    match settled {
         Ok(partial) => {
             if partial {
                 agg.finish_round_partial();
             } else {
                 agg.finish_round();
             }
+            bail_on_lane_fault(agg)?;
             Ok(report)
         }
         Err(e) => {

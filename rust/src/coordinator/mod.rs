@@ -38,7 +38,13 @@
 //!   directly, so even a single huge record's absorb sweep parallelizes.
 //!   Bitwise identical to the single-lane path at any shard count, wired
 //!   to the CLI as `--agg-shards N`. The operator's guide to how the
-//!   three knobs compose is `docs/SCALING.md`.
+//!   three knobs compose is `docs/SCALING.md`. Lanes sit behind the
+//!   [`ShardLane`] trait: a [`ThreadLane`] runs in-process, a
+//!   [`RemoteShardLane`] ships its shard's splits over the DMW1 wire to a
+//!   `deltamask shard-worker` process ([`ShardPlacement`] /
+//!   `--shard-place` choose per shard) — same router, same drains, same
+//!   bitwise trajectories, with socket faults surfaced through
+//!   [`Aggregator::lane_fault`] as clean round aborts.
 //! * [`pipeline`] — the round-resident [`DrainPipeline`]: decode workers
 //!   spawned **once per experiment** and parked on an epoch barrier
 //!   between rounds, reusing one decode-buffer [`ScratchPool`] across the
@@ -94,7 +100,10 @@ pub use aggregate::{
     drain_round, Aggregator, DrainConfig, DrainPolicy, DrainReport, FaultCounters, OnDecodeError,
 };
 pub use pipeline::DrainPipeline;
-pub use shard::{shard_bounds, ShardRouter, ShardedAggregator};
+pub use shard::{
+    shard_bounds, LaneSite, RemoteShardLane, ShardLane, ShardPlacement, ShardRouter,
+    ShardedAggregator, ThreadLane, WireSlice,
+};
 // Re-exported so coordinator users thread the decode buffer pool without
 // reaching into `compress` (the pool type lives beside the codecs because
 // `decode_pooled` is a codec method).
@@ -102,8 +111,8 @@ pub use crate::compress::{PoolStats, ScratchPool};
 pub use pool::ClientPool;
 pub use round::{RoundEngine, RoundPlan};
 pub use transport::socket::{
-    ConfigFingerprint, ControlMsg, FleetLink, FleetServer, Listener, PlanWire, SocketAddrSpec,
-    SocketConfig, SocketHub, SocketTransport, TransportKind,
+    serve_shard_worker, ConfigFingerprint, ControlMsg, FleetLink, FleetServer, Listener, PlanWire,
+    ShardLink, SocketAddrSpec, SocketConfig, SocketHub, SocketTransport, TransportKind,
 };
 pub use transport::{
     send_with_retry, ChannelTransport, ChaosTransport, FaultPlan, FaultVerdict, Payload,

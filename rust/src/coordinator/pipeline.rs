@@ -407,13 +407,17 @@ impl DrainPipeline {
         // stays published on the barrier until the next epoch replaces it).
         work.release_router();
 
-        match out.and_then(|()| gate.settle(absorbed, &mut report)) {
+        let settled = out
+            .and_then(|()| super::aggregate::bail_on_lane_fault(agg))
+            .and_then(|()| gate.settle(absorbed, &mut report));
+        match settled {
             Ok(partial) => {
                 if partial {
                     agg.finish_round_partial();
                 } else {
                     agg.finish_round();
                 }
+                super::aggregate::bail_on_lane_fault(agg)?;
                 report.pool = self.pool.stats().delta_since(pool_before);
                 Ok(report)
             }

@@ -15,19 +15,25 @@
 //!
 //! ## Shape
 //!
-//! A [`ShardedAggregator`] owns `S` **resident lane threads**, spawned
-//! once at construction and parked between rounds on a per-lane control
-//! channel — round t+1 reuses the threads (and each lane's sub-update
-//! [`ScratchPool`]) that round t warmed up, so a view that outlives its
-//! rounds reaches a cross-round zero-allocation, zero-spawn steady state
-//! (the round-resident drain pipeline keeps one view per experiment).
+//! A [`ShardedAggregator`] owns `S` **absorb lanes** behind the
+//! [`ShardLane`] trait. A [`ThreadLane`] is the in-process implementation:
+//! a resident thread spawned once at construction and parked between
+//! rounds on a per-lane control channel — round t+1 reuses the thread (and
+//! the lane's sub-update [`ScratchPool`]) that round t warmed up, so a
+//! view that outlives its rounds reaches a cross-round zero-allocation,
+//! zero-spawn steady state (the round-resident drain pipeline keeps one
+//! view per experiment). A [`RemoteShardLane`] keeps the same resident
+//! shape but the absorb arithmetic runs in a `deltamask shard-worker`
+//! process on the other end of a DMW1 socket (see the *Multi-host lanes*
+//! section below).
+//!
 //! Between rounds each lane parks its `(range, sink, pool)` triple on the
-//! coordinating thread; `begin_round` ships every sink to its lane thread
+//! coordinating thread; `begin_round` ships every sink to its lane
 //! together with a fresh bounded job queue and hands out a clonable
 //! [`ShardRouter`]. Routing a decoded record copies each shard's
 //! sub-range into a buffer leased from that shard's pool (or range-decodes
 //! straight into it, see [`ShardRouter::route_decoded_ranges`]) and
-//! enqueues it on the lane's queue; the lane thread absorbs sub-updates in
+//! enqueues it on the lane's queue; the lane absorbs sub-updates in
 //! arrival order and recycles spent buffers into its own pool.
 //! `finish_round` sends each lane a `Finish` marker, collects the sinks
 //! back and parks the lanes again — at which point
@@ -42,6 +48,26 @@
 //! and parks — ready for the superseding `begin_round`. Dropping the
 //! whole view mid-round still joins every lane thread.
 //!
+//! ## Multi-host lanes
+//!
+//! [`ShardedAggregator::with_placement`] places each lane `local` or on a
+//! remote `deltamask shard-worker` (`uds:<path>` / `tcp:<host:port>`, see
+//! [`ShardPlacement`]). A remote lane's coordinator side is a resident
+//! I/O thread holding a [`ShardLink`](super::transport::socket::ShardLink):
+//! it ships each routed sub-update as a `ShardSplit` frame (range-decoding
+//! [`LaneMsg::DecodeAbsorb`] jobs first — the parsed filter cannot cross
+//! the process boundary, the decoded sub-mask can), and the worker absorbs
+//! into a [`WireSlice`]-serializable slice sink seeded over the shard
+//! hello. Every finish **and every abort** pulls the worker's post-absorb
+//! slice state back into the coordinator's parked mirror, so the parked
+//! state of a remote lane is byte-for-byte what a [`ThreadLane`] would
+//! have parked — the stitch (`adopt_shards`/`sync_from_shards`) cannot
+//! tell the difference. Socket errors never panic the lane: they trip a
+//! per-lane fault flag (surfaced through `Aggregator::lane_fault`, checked
+//! by every drain before settling), the I/O thread keeps draining jobs so
+//! routed buffers keep recycling, and the next `begin_round` retries the
+//! connection, re-seeding the worker from the parked mirror.
+//!
 //! ## Why sharding preserves bitwise identity
 //!
 //! Every conforming [`Aggregator`] update rule is **per-coordinate**
@@ -50,24 +76,39 @@
 //! `s` performs exactly the arithmetic the single-lane path performs on
 //! coordinates `range_s`, in an equivalent order (each lane sees every
 //! slot, and the [`Aggregator`] contract already requires arrival-order
-//! equivalence). Stitching the slices back is a pure copy. The property
-//! suite in `rust/tests/agg_shards.rs` checks bitwise identity across all
-//! all 11 codecs × both pipeline modes × shard counts {1,2,3,8} under
-//! adversarial arrival orders — and, for the resident path, across
-//! multi-round trajectories through the same view.
+//! equivalence). A remote lane changes *where* that arithmetic runs, not
+//! what it is: the worker absorbs the identical sub-updates in the
+//! identical order on the identical slice state. Stitching the slices
+//! back is a pure copy. The property suite in `rust/tests/agg_shards.rs`
+//! checks bitwise identity across all 11 codecs × both pipeline modes ×
+//! shard counts {1,2,3,8} under adversarial arrival orders — and, for the
+//! resident path, across multi-round trajectories through the same view.
 
 use super::aggregate::Aggregator;
+use super::transport::socket::{ConfigFingerprint, ShardLink, SocketAddrSpec, SocketConfig};
 use crate::compress::{MaskRangeDecoder, PoolStats, ScratchPool, Update};
 use crate::util::timer::Stopwatch;
+use anyhow::{bail, Result};
 use std::ops::Range;
+use std::path::PathBuf;
 use std::sync::mpsc::{self, Receiver, Sender, SyncSender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
+use std::time::Duration;
 
 /// Sub-updates a lane's bounded queue holds before routing backpressures.
 /// Memory in the decode→absorb hand-off stays O(cap · d) across all lanes
 /// combined (each lane buffers `cap` sub-ranges of length ~d/S).
 const LANE_QUEUE_CAP: usize = 4;
+
+/// How long a [`RemoteShardLane`] keeps retrying its first connection (the
+/// worker may still be racing its bind when the coordinator starts).
+const CONNECT_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Per-round reconnect budget after a lane fault: long enough to ride out
+/// a worker restart race, short enough that a genuinely dead worker fails
+/// the round promptly instead of stalling the drain.
+const RECONNECT_TIMEOUT: Duration = Duration::from_secs(1);
 
 /// Partition `0..d` into `shards` contiguous, near-equal ranges (the
 /// first `d % shards` ranges are one element longer). The shard count is
@@ -94,15 +135,33 @@ pub fn shard_bounds(d: usize, shards: usize) -> Vec<Range<usize>> {
     bounds
 }
 
-/// What a lane thread hands back when its round ends (normally after
-/// `Finish`, or unfinished when the round was aborted).
+/// A slice sink that can cross a process boundary: the shard hello seeds a
+/// `deltamask shard-worker` with the encoded state, and every slice-return
+/// frame carries it back. The encoding must be **bit-exact and total**:
+/// `decode_slice(encode_slice(s)) == s` for every reachable state, and
+/// `decode_slice` must reject (never panic on) arbitrary bytes — it sits
+/// on the wire-input path of both processes.
+pub trait WireSlice: Sized {
+    /// Serialize the full slice state (little-endian, self-delimiting).
+    fn encode_slice(&self) -> Vec<u8>;
+    /// Rebuild a slice from its encoding; total on arbitrary input.
+    fn decode_slice(bytes: &[u8]) -> Result<Self>;
+    /// The dimensionality of this slice (must equal its lane's range
+    /// length; checked on both ends of the wire).
+    fn slice_dim(&self) -> usize;
+}
+
+/// What a lane hands back when its round ends (normally after `Finish`,
+/// or unfinished when the round was aborted or the lane faulted).
 struct LaneReturn<A> {
     sink: A,
     absorb_secs: f64,
     finished: bool,
 }
 
-enum LaneMsg {
+/// One unit of lane work. Routed through the bounded per-round job queue
+/// a [`ShardLane::begin_round`] hands out.
+pub enum LaneMsg {
     /// A pre-split sub-update: absorb as-is.
     Absorb { slot: usize, update: Update },
     /// A range-decodable record: the lane runs this shard's slice of the
@@ -132,10 +191,56 @@ struct LaneRound<A> {
     jobs: Receiver<LaneMsg>,
 }
 
-/// One quiescent shard: its d-range, its slice sink (parked here between
-/// rounds, on the lane thread while a round is in flight), its dedicated
-/// sub-update buffer pool, and the handles to its resident lane thread.
-struct ShardLane<A> {
+// ---------------------------------------------------------------------------
+// The lane interface and the shared resident-thread plumbing.
+// ---------------------------------------------------------------------------
+
+/// One absorb lane of a [`ShardedAggregator`]: a contiguous dimension
+/// range, a slice sink (parked here between rounds, on the lane while a
+/// round is in flight), a dedicated sub-update buffer pool, and a resident
+/// execution context — an in-process thread ([`ThreadLane`]) or a socket
+/// I/O thread fronting a `deltamask shard-worker` process
+/// ([`RemoteShardLane`]). [`ShardRouter`], the drain pipelines and the
+/// stitch compose against this trait and cannot tell the implementations
+/// apart.
+pub trait ShardLane<A>: Send {
+    /// The contiguous dimension range this lane owns.
+    fn range(&self) -> Range<usize>;
+    /// The lane's sub-update buffer pool (routing leases from it; the
+    /// lane recycles spent buffers back into it).
+    fn pool(&self) -> &Arc<ScratchPool>;
+    /// Activate the lane for one round; returns the round's bounded job
+    /// queue sender. The parked sink moves onto the lane until the round
+    /// is collected.
+    fn begin_round(&mut self, expected: usize) -> SyncSender<LaneMsg>;
+    /// Wait for the in-flight round to end and park the sink; returns
+    /// whether the lane saw `Finish`. Propagates a lane panic.
+    fn collect_round(&mut self) -> bool;
+    /// [`collect_round`](Self::collect_round) for teardown paths: never
+    /// panics, best-effort parking.
+    fn collect_round_quiet(&mut self);
+    /// Absorb compute seconds spent in the last collected round.
+    fn absorb_secs(&self) -> f64;
+    /// The lane's sticky fault, if any (remote lanes: first socket or
+    /// protocol error since the last successful reconnect). A faulted
+    /// lane cannot finish a round; drains check this before settling.
+    fn fault(&self) -> Option<String>;
+    /// Borrow the parked sink (`None` while a round is in flight).
+    fn sink(&self) -> Option<&A>;
+    /// Take the parked sink out (panics if a round is in flight).
+    fn take_sink(&mut self) -> A;
+    /// Quiesce and join the lane's resident thread; propagates a panic.
+    /// Must not be called with a round in flight.
+    fn shutdown(&mut self);
+    /// [`shutdown`](Self::shutdown) for teardown paths: never panics.
+    fn shutdown_quiet(&mut self);
+}
+
+/// The resident-thread plumbing both lane implementations share: parked
+/// state, the control/return channel pair and the join handle. What runs
+/// *on* the thread differs (absorb loop vs. socket I/O loop); how rounds
+/// are shipped to it and collected from it does not.
+struct LaneCore<A> {
     range: Range<usize>,
     sink: Option<A>,
     pool: Arc<ScratchPool>,
@@ -149,164 +254,93 @@ struct ShardLane<A> {
     handle: Option<JoinHandle<()>>,
 }
 
-/// The shareable per-round routing table: shard ranges, pools and lane
-/// queue senders. Cloned into decode workers so they hand each decoded
-/// record straight to the absorb lanes without serializing on the
-/// draining thread.
-#[derive(Clone)]
-pub struct ShardRouter {
-    lanes: Arc<[RouterLane]>,
-}
+impl<A> LaneCore<A> {
+    fn begin_round(&mut self, expected: usize) -> SyncSender<LaneMsg> {
+        let (tx, rx) = mpsc::sync_channel::<LaneMsg>(LANE_QUEUE_CAP);
+        let sink = self.sink.take().expect("lane sink present between rounds");
+        let round = LaneRound {
+            expected,
+            sink,
+            jobs: rx,
+        };
+        if self.ctrl.as_ref().expect("lanes alive").send(round).is_err() {
+            // The resident thread is gone — it can only have panicked.
+            self.propagate_death();
+        }
+        tx
+    }
 
-struct RouterLane {
-    range: Range<usize>,
-    pool: Arc<ScratchPool>,
-    tx: SyncSender<LaneMsg>,
-}
-
-impl ShardRouter {
-    /// Split `update` at the shard boundaries and enqueue each sub-range
-    /// on its shard's absorb lane (leasing the sub-buffer from that
-    /// shard's pool). Blocks when a lane's bounded queue is full — that
-    /// backpressure is what keeps decode from racing ahead of absorb.
-    ///
-    /// The caller keeps ownership of the full reconstruction buffer and
-    /// should recycle it (`Update::into_vec` → the drain's `ScratchPool`)
-    /// once this returns.
-    pub fn route(&self, slot: usize, update: &Update) {
-        for lane in self.lanes.iter() {
-            let sub = match update {
-                Update::Mask(v) => Update::Mask(lane.pool.take_copy(&v[lane.range.clone()])),
-                Update::ScoreDelta(v) => {
-                    Update::ScoreDelta(lane.pool.take_copy(&v[lane.range.clone()]))
-                }
-            };
-            // A send can only fail if the lane exited early, which means
-            // its sink panicked (a coordinator bug); the panic surfaces
-            // when the lanes are joined, so it is not swallowed here.
-            let _ = lane.tx.send(LaneMsg::Absorb { slot, update: sub });
+    fn collect_round(&mut self) -> bool {
+        match self.ret.recv() {
+            Ok(ret) => {
+                self.sink = Some(ret.sink);
+                self.absorb_secs = ret.absorb_secs;
+                ret.finished
+            }
+            Err(_) => self.propagate_death(),
         }
     }
 
-    /// Range-restricted fan-out: hand each lane a buffer holding its
-    /// slice of the m^{g,t-1} baseline (leased from that lane's pool)
-    /// plus a shared handle to the record's parsed filter; **each lane
-    /// thread then runs its own shard's slice of the Eq. 5 membership
-    /// sweep** before absorbing it. The full `d`-length buffer is never
-    /// materialized and no single thread sweeps the whole record — one
-    /// huge record's decode, not just its absorb, runs on S threads.
-    /// Bitwise identical to decoding fully and calling
-    /// [`ShardRouter::route`] (the [`MaskRangeDecoder`] contract: range
-    /// membership — false positives included — is a per-index property).
-    pub fn route_decoded_ranges(
-        &self,
-        slot: usize,
-        mask_g: &[f32],
-        decoder: Arc<dyn MaskRangeDecoder>,
-    ) {
-        for lane in self.lanes.iter() {
-            let base = lane.pool.take_copy(&mask_g[lane.range.clone()]);
-            let _ = lane.tx.send(LaneMsg::DecodeAbsorb {
-                slot,
-                range: lane.range.clone(),
-                base,
-                decoder: Arc::clone(&decoder),
-            });
+    fn collect_round_quiet(&mut self) {
+        if let Ok(ret) = self.ret.recv() {
+            self.sink = Some(ret.sink);
+            self.absorb_secs = ret.absorb_secs;
         }
     }
 
-    /// Number of shard lanes this router fans out to.
-    pub fn shard_count(&self) -> usize {
-        self.lanes.len()
+    fn take_sink(&mut self) -> A {
+        self.sink.take().expect("lane sink present after abort/finish")
     }
-}
 
-/// The routing table for one in-flight round (the resident lane threads
-/// themselves live in the [`ShardLane`]s for the aggregator's lifetime).
-struct RunningRound {
-    router: ShardRouter,
-}
-
-/// Dimension-sharded streaming aggregation sink: `S` contiguous shards of
-/// the parameter space, each with its own slice sink, participation
-/// counters and [`ScratchPool`], absorbed on `S` resident lane threads
-/// (spawned once, parked between rounds).
-///
-/// Construct it from `(range, slice sink)` pairs tiling `0..d` — for the
-/// Bayesian mask server, `fl::server::MaskServer::shard_view` builds the
-/// slices and `adopt_shards` stitches them back after the round. Drive it
-/// either as a plain [`Aggregator`] (inline `absorb` splits each record
-/// and fans it out) or through [`drain_round`](super::drain_round) /
-/// [`DrainPipeline`](super::DrainPipeline) with
-/// [`DrainConfig::shards`](super::DrainConfig) > 1, where the decode
-/// workers route records to the lanes directly via [`ShardRouter`].
-///
-/// ```
-/// use deltamask::compress::Update;
-/// use deltamask::coordinator::Aggregator;
-/// use deltamask::fl::server::MaskServer;
-///
-/// // Two identical servers; one aggregates the round monolithically,
-/// // the other through a 3-shard view — bitwise-identical results.
-/// let mut mono = MaskServer::with_theta0(8, 1.0, 0.5);
-/// let mut split = mono.clone();
-/// let updates = vec![
-///     Update::Mask(vec![1.0, 0.0, 1.0, 1.0, 0.0, 1.0, 0.0, 0.0]),
-///     Update::Mask(vec![0.0, 0.0, 1.0, 0.0, 1.0, 1.0, 1.0, 0.0]),
-/// ];
-/// mono.aggregate(&updates);
-///
-/// let mut view = split.shard_view(3);
-/// view.begin_round(2);
-/// for (slot, u) in updates.iter().enumerate() {
-///     view.absorb(slot, u.clone());
-/// }
-/// view.finish_round();
-/// assert_eq!(view.absorb_secs_by_shard().len(), 3);
-/// split.adopt_shards(view);
-///
-/// assert_eq!(mono.theta_g, split.theta_g); // bitwise
-/// assert_eq!(mono.s_g, split.s_g);
-/// ```
-pub struct ShardedAggregator<A> {
-    lanes: Vec<ShardLane<A>>,
-    running: Option<RunningRound>,
-    /// Full decoded buffers spent by the inline `absorb` path (their
-    /// shard sub-ranges already copied out), awaiting reclamation by the
-    /// drain loop via [`Aggregator::reclaim_buffer`].
-    spent: Vec<Vec<f32>>,
-}
-
-impl<A: Aggregator + Send + 'static> ShardedAggregator<A> {
-    /// Build a sharded sink from `(range, slice sink)` pairs. The ranges
-    /// must tile `0..d` contiguously in order (see [`shard_bounds`]).
-    /// Spawns one resident lane thread per shard; the threads park until
-    /// the first `begin_round` and are reused by every subsequent round.
-    pub fn new(shards: Vec<(Range<usize>, A)>) -> Self {
-        assert!(!shards.is_empty(), "at least one shard required");
-        let mut expect = 0;
-        for (range, _) in &shards {
-            assert_eq!(
-                range.start, expect,
-                "shard ranges must tile 0..d contiguously"
-            );
-            assert!(range.end >= range.start, "inverted shard range");
-            expect = range.end;
-        }
-        Self {
-            lanes: shards
-                .into_iter()
-                .map(|(range, sink)| Self::spawn_lane(range, sink))
-                .collect(),
-            running: None,
-            spent: Vec::new(),
+    fn shutdown(&mut self) {
+        self.ctrl = None;
+        if let Some(handle) = self.handle.take() {
+            if let Err(panic) = handle.join() {
+                std::panic::resume_unwind(panic);
+            }
         }
     }
 
+    fn shutdown_quiet(&mut self) {
+        self.ctrl = None;
+        if let Some(handle) = self.handle.take() {
+            let _ = handle.join();
+        }
+    }
+
+    /// The lane's channel disconnected outside shutdown: the resident
+    /// thread died, which only a panic can cause — join it and re-raise.
+    fn propagate_death(&mut self) -> ! {
+        match self.handle.take() {
+            Some(handle) => match handle.join() {
+                Err(panic) => std::panic::resume_unwind(panic),
+                Ok(()) => unreachable!("lane exited without panicking while in use"),
+            },
+            None => panic!("shard lane thread missing"),
+        }
+    }
+}
+
+impl<A> Drop for LaneCore<A> {
+    /// Partial-construction safety net (e.g. `with_placement` failing on a
+    /// later lane's connect): quiesce without re-raising — the in-use
+    /// paths propagate panics themselves, after which this is a no-op.
+    fn drop(&mut self) {
+        self.shutdown_quiet();
+    }
+}
+
+/// The in-process [`ShardLane`]: a resident absorb thread running the
+/// slice sink directly. Spawned once, parked between rounds.
+pub struct ThreadLane<A> {
+    core: LaneCore<A>,
+}
+
+impl<A: Aggregator + Send + 'static> ThreadLane<A> {
     /// Spawn one resident lane thread: it loops over round packages from
     /// the control channel, absorbing each round's sub-updates and handing
     /// the sink back, until the control channel is dropped (shutdown).
-    fn spawn_lane(range: Range<usize>, sink: A) -> ShardLane<A> {
+    pub fn spawn(range: Range<usize>, sink: A) -> Self {
         let pool = Arc::new(ScratchPool::new());
         let (ctrl_tx, ctrl_rx) = mpsc::channel::<LaneRound<A>>();
         let (ret_tx, ret_rx) = mpsc::channel::<LaneReturn<A>>();
@@ -375,35 +409,721 @@ impl<A: Aggregator + Send + 'static> ShardedAggregator<A> {
                 }
             }
         });
-        ShardLane {
-            range,
-            sink: Some(sink),
-            pool,
-            absorb_secs: 0.0,
-            ctrl: Some(ctrl_tx),
-            ret: ret_rx,
-            handle: Some(handle),
+        Self {
+            core: LaneCore {
+                range,
+                sink: Some(sink),
+                pool,
+                absorb_secs: 0.0,
+                ctrl: Some(ctrl_tx),
+                ret: ret_rx,
+                handle: Some(handle),
+            },
+        }
+    }
+}
+
+impl<A: Send> ShardLane<A> for ThreadLane<A> {
+    fn range(&self) -> Range<usize> {
+        self.core.range.clone()
+    }
+
+    fn pool(&self) -> &Arc<ScratchPool> {
+        &self.core.pool
+    }
+
+    fn begin_round(&mut self, expected: usize) -> SyncSender<LaneMsg> {
+        self.core.begin_round(expected)
+    }
+
+    fn collect_round(&mut self) -> bool {
+        self.core.collect_round()
+    }
+
+    fn collect_round_quiet(&mut self) {
+        self.core.collect_round_quiet()
+    }
+
+    fn absorb_secs(&self) -> f64 {
+        self.core.absorb_secs
+    }
+
+    fn fault(&self) -> Option<String> {
+        None
+    }
+
+    fn sink(&self) -> Option<&A> {
+        self.core.sink.as_ref()
+    }
+
+    fn take_sink(&mut self) -> A {
+        self.core.take_sink()
+    }
+
+    fn shutdown(&mut self) {
+        self.core.shutdown()
+    }
+
+    fn shutdown_quiet(&mut self) {
+        self.core.shutdown_quiet()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Remote lanes: the absorb arithmetic runs in a shard-worker process.
+// ---------------------------------------------------------------------------
+
+/// A [`ShardLane`] whose slice sink lives in a `deltamask shard-worker`
+/// process reached over the DMW1 wire (TCP or UDS). The coordinator side
+/// is a resident I/O thread with the exact round lifecycle of a
+/// [`ThreadLane`] — same control/return channels, same bounded job queue,
+/// so [`ShardRouter`] and the drains are oblivious — that relays jobs as
+/// `ShardSplit` frames and pulls the worker's slice state back into a
+/// parked **mirror** on every finish *and* every abort. Socket errors trip
+/// the lane's sticky fault flag instead of panicking; the next
+/// `begin_round` reconnects and re-seeds the worker from the mirror.
+pub struct RemoteShardLane<A> {
+    core: LaneCore<A>,
+    fault: Arc<Mutex<Option<String>>>,
+}
+
+impl<A: WireSlice + Send + 'static> RemoteShardLane<A> {
+    /// Connect to the worker at `spec` (retrying up to 30 s — the worker
+    /// may still be binding), seed it with `sink`'s encoded state over the
+    /// shard hello, and spawn the resident I/O thread. Fails fast if the
+    /// worker rejects the hello (config-fingerprint or bounds mismatch).
+    pub fn connect(
+        shard: u32,
+        range: Range<usize>,
+        sink: A,
+        spec: SocketAddrSpec,
+        fingerprint: ConfigFingerprint,
+        cfg: SocketConfig,
+    ) -> Result<Self> {
+        let link = ShardLink::connect(
+            &spec,
+            cfg,
+            shard,
+            fingerprint,
+            range.clone(),
+            &sink.encode_slice(),
+            CONNECT_TIMEOUT,
+        )?;
+        let pool = Arc::new(ScratchPool::new());
+        let fault = Arc::new(Mutex::new(None));
+        let (ctrl_tx, ctrl_rx) = mpsc::channel::<LaneRound<A>>();
+        let (ret_tx, ret_rx) = mpsc::channel::<LaneReturn<A>>();
+        let io = RemoteIo {
+            ctrl: ctrl_rx,
+            ret: ret_tx,
+            link: Some(link),
+            spec,
+            cfg,
+            shard,
+            fingerprint,
+            range: range.clone(),
+            pool: Arc::clone(&pool),
+            fault: Arc::clone(&fault),
+            seq: 0,
+        };
+        let handle = std::thread::spawn(move || io.run());
+        Ok(Self {
+            core: LaneCore {
+                range,
+                sink: Some(sink),
+                pool,
+                absorb_secs: 0.0,
+                ctrl: Some(ctrl_tx),
+                ret: ret_rx,
+                handle: Some(handle),
+            },
+            fault,
+        })
+    }
+}
+
+impl<A: Send> ShardLane<A> for RemoteShardLane<A> {
+    fn range(&self) -> Range<usize> {
+        self.core.range.clone()
+    }
+
+    fn pool(&self) -> &Arc<ScratchPool> {
+        &self.core.pool
+    }
+
+    fn begin_round(&mut self, expected: usize) -> SyncSender<LaneMsg> {
+        self.core.begin_round(expected)
+    }
+
+    fn collect_round(&mut self) -> bool {
+        self.core.collect_round()
+    }
+
+    fn collect_round_quiet(&mut self) {
+        self.core.collect_round_quiet()
+    }
+
+    fn absorb_secs(&self) -> f64 {
+        self.core.absorb_secs
+    }
+
+    fn fault(&self) -> Option<String> {
+        self.fault.lock().unwrap().clone()
+    }
+
+    fn sink(&self) -> Option<&A> {
+        self.core.sink.as_ref()
+    }
+
+    fn take_sink(&mut self) -> A {
+        self.core.take_sink()
+    }
+
+    fn shutdown(&mut self) {
+        self.core.shutdown()
+    }
+
+    fn shutdown_quiet(&mut self) {
+        self.core.shutdown_quiet()
+    }
+}
+
+/// The remote lane's resident I/O loop. Owns the [`ShardLink`] (or `None`
+/// after a fault) and the coordinator-side mirror for the round's
+/// duration. Never panics on socket trouble: errors set the sticky fault
+/// flag, the link is dropped, and the loop keeps draining jobs so routed
+/// buffers keep flowing back into the lane pool (routing must never block
+/// on a dead lane).
+struct RemoteIo<A> {
+    ctrl: Receiver<LaneRound<A>>,
+    ret: Sender<LaneReturn<A>>,
+    link: Option<ShardLink>,
+    spec: SocketAddrSpec,
+    cfg: SocketConfig,
+    shard: u32,
+    fingerprint: ConfigFingerprint,
+    range: Range<usize>,
+    pool: Arc<ScratchPool>,
+    fault: Arc<Mutex<Option<String>>>,
+    /// Strictly monotone round sequence; the worker rejects replays.
+    seq: u64,
+}
+
+impl<A: WireSlice + Send> RemoteIo<A> {
+    /// First error wins — it is the root cause; follow-on errors from the
+    /// already-dead socket would only bury it.
+    fn set_fault(&self, err: anyhow::Error) {
+        let mut slot = self.fault.lock().unwrap();
+        if slot.is_none() {
+            *slot = Some(format!("{err:#}"));
         }
     }
 
+    /// Decode a slice-return from the worker, rejecting a wrong-sized
+    /// slice before it can replace the mirror.
+    fn adopt(&self, state: &[u8]) -> Result<A> {
+        let sink = A::decode_slice(state)?;
+        if sink.slice_dim() != self.range.len() {
+            bail!(
+                "shard worker returned a {}-dim slice for range {:?}",
+                sink.slice_dim(),
+                self.range
+            );
+        }
+        Ok(sink)
+    }
+
+    /// Ship one sub-update if the link is alive; a send error trips the
+    /// fault and drops the link. `family`: 0 = mask, 1 = score-delta.
+    fn ship(&mut self, slot: usize, family: u8, data: &[f32]) {
+        if let Some(mut link) = self.link.take() {
+            match link.split(slot, family, data) {
+                Ok(()) => self.link = Some(link),
+                Err(e) => self.set_fault(e),
+            }
+        }
+    }
+
+    fn run(mut self) {
+        while let Ok(LaneRound {
+            expected,
+            mut sink,
+            jobs,
+        }) = self.ctrl.recv()
+        {
+            // Reconnect-on-begin: a faulted lane gets one bounded attempt
+            // to re-seed a worker from the parked mirror before the round
+            // opens — this is what makes the pipeline reusable on the
+            // round after a worker death.
+            if self.link.is_none() {
+                match ShardLink::connect(
+                    &self.spec,
+                    self.cfg,
+                    self.shard,
+                    self.fingerprint,
+                    self.range.clone(),
+                    &sink.encode_slice(),
+                    RECONNECT_TIMEOUT,
+                ) {
+                    Ok(link) => {
+                        self.link = Some(link);
+                        *self.fault.lock().unwrap() = None;
+                    }
+                    Err(e) => self.set_fault(e),
+                }
+            }
+            if let Some(mut link) = self.link.take() {
+                self.seq += 1;
+                match link.begin(self.seq, expected) {
+                    Ok(()) => self.link = Some(link),
+                    Err(e) => self.set_fault(e),
+                }
+            }
+            let mut absorb_secs = 0.0;
+            let mut finished = false;
+            while let Ok(msg) = jobs.recv() {
+                match msg {
+                    LaneMsg::Absorb { slot, update } => {
+                        match &update {
+                            Update::Mask(v) => self.ship(slot, 0, v),
+                            Update::ScoreDelta(v) => self.ship(slot, 1, v),
+                        }
+                        self.pool.put(update.into_vec());
+                    }
+                    LaneMsg::DecodeAbsorb {
+                        slot,
+                        range,
+                        mut base,
+                        decoder,
+                    } => {
+                        // The parsed filter cannot cross the process
+                        // boundary; this shard's slice of the Eq. 5 sweep
+                        // runs here and the decoded sub-mask ships as a
+                        // plain mask-family split — same arithmetic, same
+                        // order, so trajectories stay bitwise identical.
+                        if self.link.is_some() {
+                            decoder.decode_range(range, &mut base);
+                            self.ship(slot, 0, &base);
+                        }
+                        self.pool.put(base);
+                    }
+                    LaneMsg::Finish { partial } => {
+                        if let Some(mut link) = self.link.take() {
+                            let adopted = link
+                                .finish(partial)
+                                .and_then(|(secs, state)| Ok((secs, self.adopt(&state)?)));
+                            match adopted {
+                                Ok((secs, fresh)) => {
+                                    // The worker's post-finish slice is
+                                    // exactly what a local lane would have
+                                    // parked; it becomes the new mirror.
+                                    sink = fresh;
+                                    absorb_secs = secs;
+                                    finished = true;
+                                    self.link = Some(link);
+                                }
+                                Err(e) => self.set_fault(e),
+                            }
+                        }
+                        break;
+                    }
+                }
+            }
+            if !finished {
+                // Aborted round (every job sender dropped without Finish),
+                // or the finish exchange failed. If the link is still up,
+                // pull the worker's *unfinished* post-absorb state back so
+                // the mirror parks exactly what a local lane would park.
+                if let Some(mut link) = self.link.take() {
+                    let adopted = link
+                        .abort()
+                        .and_then(|(secs, state)| Ok((secs, self.adopt(&state)?)));
+                    match adopted {
+                        Ok((secs, fresh)) => {
+                            sink = fresh;
+                            absorb_secs = secs;
+                            self.link = Some(link);
+                        }
+                        Err(e) => self.set_fault(e),
+                    }
+                }
+            }
+            if self
+                .ret
+                .send(LaneReturn {
+                    sink,
+                    absorb_secs,
+                    finished,
+                })
+                .is_err()
+            {
+                return; // aggregator gone mid-teardown
+            }
+        }
+        // Clean shutdown: tell a non-lingering worker the experiment is
+        // over (best-effort — the worker also exits on EOF).
+        if let Some(mut link) = self.link.take() {
+            link.send_shutdown();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Placement: which host each lane runs on.
+// ---------------------------------------------------------------------------
+
+/// Where one absorb lane runs.
+#[derive(Clone, Debug)]
+pub enum LaneSite {
+    /// An in-process [`ThreadLane`].
+    Local,
+    /// A [`RemoteShardLane`] talking to the `deltamask shard-worker`
+    /// listening at this address.
+    Remote(SocketAddrSpec),
+}
+
+impl std::fmt::Display for LaneSite {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::Local => write!(f, "local"),
+            Self::Remote(spec) => write!(f, "{spec}"),
+        }
+    }
+}
+
+/// Per-shard lane placement, parsed from the `--shard-place` /
+/// `DELTAMASK_SHARD_PLACE` knob: a comma-separated list of `local`,
+/// `uds:<path>` or `tcp:<host:port>` sites, one per shard in order. Empty
+/// (the default) means every lane is local; a non-empty list must name
+/// exactly one site per shard.
+#[derive(Clone, Debug, Default)]
+pub struct ShardPlacement {
+    sites: Vec<LaneSite>,
+}
+
+impl ShardPlacement {
+    /// Parse `"local,uds:/run/dm-shard1.sock,tcp:10.0.0.2:7000"`-style
+    /// specs. Whitespace around entries is ignored; an empty spec parses
+    /// to the all-local default.
+    pub fn parse(spec: &str) -> Result<Self> {
+        if spec.trim().is_empty() {
+            return Ok(Self::default());
+        }
+        let mut sites = Vec::new();
+        for entry in spec.split(',') {
+            let entry = entry.trim();
+            sites.push(if entry == "local" {
+                LaneSite::Local
+            } else if let Some(path) = entry.strip_prefix("uds:") {
+                if path.is_empty() {
+                    bail!("shard placement `uds:` needs a socket path");
+                }
+                LaneSite::Remote(SocketAddrSpec::Uds(PathBuf::from(path)))
+            } else if let Some(addr) = entry.strip_prefix("tcp:") {
+                if addr.is_empty() {
+                    bail!("shard placement `tcp:` needs a host:port");
+                }
+                LaneSite::Remote(SocketAddrSpec::Tcp(addr.to_string()))
+            } else {
+                bail!(
+                    "unknown shard placement site `{entry}` \
+                     (expected `local`, `uds:<path>` or `tcp:<host:port>`)"
+                )
+            });
+        }
+        Ok(Self { sites })
+    }
+
+    /// No sites listed — every lane is local.
+    pub fn is_empty(&self) -> bool {
+        self.sites.is_empty()
+    }
+
+    /// Number of sites listed (0 for the all-local default).
+    pub fn len(&self) -> usize {
+        self.sites.len()
+    }
+
+    /// Whether no lane is remote (an empty list is all-local too).
+    pub fn is_all_local(&self) -> bool {
+        self.sites.iter().all(|s| matches!(s, LaneSite::Local))
+    }
+
+    /// The site for shard `i`; out-of-range shards default to local.
+    pub fn site(&self, shard: usize) -> LaneSite {
+        self.sites.get(shard).cloned().unwrap_or(LaneSite::Local)
+    }
+
+    /// This placement resolved to a view's actual lane count: missing
+    /// sites pad with `local`, extra sites are dropped. An ambient spec
+    /// (the `DELTAMASK_SHARD_PLACE` env knob) is written once per fleet
+    /// while shard counts vary per run and clamp to `d`, so the runner
+    /// resolves the spec here before
+    /// [`ShardedAggregator::with_placement`]'s exact-length check. An
+    /// empty placement stays empty (all-local).
+    pub fn resolved(&self, lanes: usize) -> Self {
+        if self.sites.is_empty() {
+            return Self::default();
+        }
+        Self {
+            sites: (0..lanes).map(|i| self.site(i)).collect(),
+        }
+    }
+
+    /// The listed sites, in shard order.
+    pub fn sites(&self) -> &[LaneSite] {
+        &self.sites
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The per-round router (unchanged above the lane trait).
+// ---------------------------------------------------------------------------
+
+/// The shareable per-round routing table: shard ranges, pools and lane
+/// queue senders. Cloned into decode workers so they hand each decoded
+/// record straight to the absorb lanes without serializing on the
+/// draining thread.
+#[derive(Clone)]
+pub struct ShardRouter {
+    lanes: Arc<[RouterLane]>,
+}
+
+struct RouterLane {
+    range: Range<usize>,
+    pool: Arc<ScratchPool>,
+    tx: SyncSender<LaneMsg>,
+}
+
+impl ShardRouter {
+    /// Split `update` at the shard boundaries and enqueue each sub-range
+    /// on its shard's absorb lane (leasing the sub-buffer from that
+    /// shard's pool). Blocks when a lane's bounded queue is full — that
+    /// backpressure is what keeps decode from racing ahead of absorb.
+    ///
+    /// The caller keeps ownership of the full reconstruction buffer and
+    /// should recycle it (`Update::into_vec` → the drain's `ScratchPool`)
+    /// once this returns.
+    pub fn route(&self, slot: usize, update: &Update) {
+        for lane in self.lanes.iter() {
+            let sub = match update {
+                Update::Mask(v) => Update::Mask(lane.pool.take_copy(&v[lane.range.clone()])),
+                Update::ScoreDelta(v) => {
+                    Update::ScoreDelta(lane.pool.take_copy(&v[lane.range.clone()]))
+                }
+            };
+            // A send can only fail if the lane exited early, which means
+            // its sink panicked (a coordinator bug); the panic surfaces
+            // when the lanes are joined, so it is not swallowed here.
+            let _ = lane.tx.send(LaneMsg::Absorb { slot, update: sub });
+        }
+    }
+
+    /// Range-restricted fan-out: hand each lane a buffer holding its
+    /// slice of the m^{g,t-1} baseline (leased from that lane's pool)
+    /// plus a shared handle to the record's parsed filter; **each lane
+    /// thread then runs its own shard's slice of the Eq. 5 membership
+    /// sweep** before absorbing it. The full `d`-length buffer is never
+    /// materialized and no single thread sweeps the whole record — one
+    /// huge record's decode, not just its absorb, runs on S threads.
+    /// Bitwise identical to decoding fully and calling
+    /// [`ShardRouter::route`] (the [`MaskRangeDecoder`] contract: range
+    /// membership — false positives included — is a per-index property).
+    /// (A remote lane runs its slice of the sweep on its coordinator-side
+    /// I/O thread and ships the decoded sub-mask — the parsed filter
+    /// cannot cross the process boundary.)
+    pub fn route_decoded_ranges(
+        &self,
+        slot: usize,
+        mask_g: &[f32],
+        decoder: Arc<dyn MaskRangeDecoder>,
+    ) {
+        for lane in self.lanes.iter() {
+            let base = lane.pool.take_copy(&mask_g[lane.range.clone()]);
+            let _ = lane.tx.send(LaneMsg::DecodeAbsorb {
+                slot,
+                range: lane.range.clone(),
+                base,
+                decoder: Arc::clone(&decoder),
+            });
+        }
+    }
+
+    /// Number of shard lanes this router fans out to.
+    pub fn shard_count(&self) -> usize {
+        self.lanes.len()
+    }
+}
+
+/// The routing table for one in-flight round (the resident lanes
+/// themselves live in the aggregator for its lifetime).
+struct RunningRound {
+    router: ShardRouter,
+}
+
+// ---------------------------------------------------------------------------
+// The sharded aggregator, composed over boxed lanes.
+// ---------------------------------------------------------------------------
+
+/// Dimension-sharded streaming aggregation sink: `S` contiguous shards of
+/// the parameter space, each with its own slice sink, participation
+/// counters and [`ScratchPool`], absorbed on `S` resident absorb lanes
+/// (spawned once, parked between rounds) — in-process threads, remote
+/// `shard-worker` processes, or any mix (see
+/// [`with_placement`](Self::with_placement)).
+///
+/// Construct it from `(range, slice sink)` pairs tiling `0..d` — for the
+/// Bayesian mask server, `fl::server::MaskServer::shard_view` builds the
+/// slices and `adopt_shards` stitches them back after the round. Drive it
+/// either as a plain [`Aggregator`] (inline `absorb` splits each record
+/// and fans it out) or through [`drain_round`](super::drain_round) /
+/// [`DrainPipeline`](super::DrainPipeline) with
+/// [`DrainConfig::shards`](super::DrainConfig) > 1, where the decode
+/// workers route records to the lanes directly via [`ShardRouter`].
+///
+/// ```
+/// use deltamask::compress::Update;
+/// use deltamask::coordinator::Aggregator;
+/// use deltamask::fl::server::MaskServer;
+///
+/// // Two identical servers; one aggregates the round monolithically,
+/// // the other through a 3-shard view — bitwise-identical results.
+/// let mut mono = MaskServer::with_theta0(8, 1.0, 0.5);
+/// let mut split = mono.clone();
+/// let updates = vec![
+///     Update::Mask(vec![1.0, 0.0, 1.0, 1.0, 0.0, 1.0, 0.0, 0.0]),
+///     Update::Mask(vec![0.0, 0.0, 1.0, 0.0, 1.0, 1.0, 1.0, 0.0]),
+/// ];
+/// mono.aggregate(&updates);
+///
+/// let mut view = split.shard_view(3);
+/// view.begin_round(2);
+/// for (slot, u) in updates.iter().enumerate() {
+///     view.absorb(slot, u.clone());
+/// }
+/// view.finish_round();
+/// assert_eq!(view.absorb_secs_by_shard().len(), 3);
+/// split.adopt_shards(view);
+///
+/// assert_eq!(mono.theta_g, split.theta_g); // bitwise
+/// assert_eq!(mono.s_g, split.s_g);
+/// ```
+pub struct ShardedAggregator<A> {
+    lanes: Vec<Box<dyn ShardLane<A>>>,
+    running: Option<RunningRound>,
+    /// A lane fault observed on a round that could not finish: the view's
+    /// slices are no longer coherent with a completed round, so every
+    /// subsequent drain through it fails loudly (via
+    /// [`Aggregator::lane_fault`]) instead of silently shipping a
+    /// half-settled round.
+    poisoned: Option<String>,
+    /// Full decoded buffers spent by the inline `absorb` path (their
+    /// shard sub-ranges already copied out), awaiting reclamation by the
+    /// drain loop via [`Aggregator::reclaim_buffer`].
+    spent: Vec<Vec<f32>>,
+}
+
+/// Panic (coordinator bug) unless the ranges tile `0..d` contiguously.
+fn check_tiling<A>(shards: &[(Range<usize>, A)]) {
+    assert!(!shards.is_empty(), "at least one shard required");
+    let mut expect = 0;
+    for (range, _) in shards {
+        assert_eq!(
+            range.start, expect,
+            "shard ranges must tile 0..d contiguously"
+        );
+        assert!(range.end >= range.start, "inverted shard range");
+        expect = range.end;
+    }
+}
+
+impl<A: Aggregator + Send + 'static> ShardedAggregator<A> {
+    /// Build a sharded sink from `(range, slice sink)` pairs, every lane
+    /// in-process. The ranges must tile `0..d` contiguously in order (see
+    /// [`shard_bounds`]). Spawns one resident lane thread per shard; the
+    /// threads park until the first `begin_round` and are reused by every
+    /// subsequent round.
+    pub fn new(shards: Vec<(Range<usize>, A)>) -> Self {
+        check_tiling(&shards);
+        Self {
+            lanes: shards
+                .into_iter()
+                .map(|(range, sink)| {
+                    Box::new(ThreadLane::spawn(range, sink)) as Box<dyn ShardLane<A>>
+                })
+                .collect(),
+            running: None,
+            poisoned: None,
+            spent: Vec::new(),
+        }
+    }
+}
+
+impl<A: Aggregator + WireSlice + Send + 'static> ShardedAggregator<A> {
+    /// [`new`](Self::new) with per-shard lane placement: `local` shards
+    /// get a [`ThreadLane`], remote shards a [`RemoteShardLane`] connected
+    /// (and seeded with the slice state) before this returns, so a missing
+    /// or mismatched worker fails construction instead of the first round.
+    /// An empty placement places every lane locally; a non-empty one must
+    /// list exactly one site per shard, and no two remote lanes may share
+    /// a worker (each worker serves one lane).
+    pub fn with_placement(
+        shards: Vec<(Range<usize>, A)>,
+        placement: &ShardPlacement,
+        fingerprint: ConfigFingerprint,
+        cfg: SocketConfig,
+    ) -> Result<Self> {
+        check_tiling(&shards);
+        if !placement.is_empty() && placement.len() != shards.len() {
+            bail!(
+                "shard placement lists {} sites for {} shards",
+                placement.len(),
+                shards.len()
+            );
+        }
+        let mut seen = Vec::new();
+        for site in placement.sites() {
+            if let LaneSite::Remote(spec) = site {
+                let key = spec.to_string();
+                if seen.contains(&key) {
+                    bail!("duplicate remote shard site {key} (each remote lane needs its own shard-worker)");
+                }
+                seen.push(key);
+            }
+        }
+        let mut lanes: Vec<Box<dyn ShardLane<A>>> = Vec::with_capacity(shards.len());
+        for (shard, (range, sink)) in shards.into_iter().enumerate() {
+            let lane: Box<dyn ShardLane<A>> = match placement.site(shard) {
+                LaneSite::Local => Box::new(ThreadLane::spawn(range, sink)),
+                LaneSite::Remote(spec) => Box::new(RemoteShardLane::connect(
+                    shard as u32,
+                    range,
+                    sink,
+                    spec,
+                    fingerprint,
+                    cfg,
+                )?),
+            };
+            lanes.push(lane);
+        }
+        Ok(Self {
+            lanes,
+            running: None,
+            poisoned: None,
+            spent: Vec::new(),
+        })
+    }
+}
+
+impl<A> ShardedAggregator<A> {
     /// Activate the resident lanes for one round and build the router.
     fn start_round(&mut self, expected: usize) {
         let mut router_lanes = Vec::with_capacity(self.lanes.len());
         for lane in &mut self.lanes {
-            let (tx, rx) = mpsc::sync_channel::<LaneMsg>(LANE_QUEUE_CAP);
-            let sink = lane.sink.take().expect("lane sink present between rounds");
-            let round = LaneRound {
-                expected,
-                sink,
-                jobs: rx,
-            };
-            if lane.ctrl.as_ref().expect("lanes alive").send(round).is_err() {
-                // The resident thread is gone — it can only have panicked.
-                Self::propagate_lane_death(lane);
-            }
+            let tx = lane.begin_round(expected);
             router_lanes.push(RouterLane {
-                range: lane.range.clone(),
-                pool: Arc::clone(&lane.pool),
+                range: lane.range(),
+                pool: Arc::clone(lane.pool()),
                 tx,
             });
         }
@@ -429,11 +1149,19 @@ impl<A: Aggregator + Send + 'static> ShardedAggregator<A> {
         }
         drop(router);
         let finished = self.collect_round();
-        assert!(finished, "a shard lane exited before Finish");
+        if !finished {
+            // A remote lane that faulted mid-round hands its mirror back
+            // unfinished; the view's slices no longer reflect a completed
+            // round, so poison it — every later drain fails loudly via
+            // `lane_fault` instead of stitching half a round. A lane
+            // exiting unfinished *without* a fault is still a bug.
+            match self.lanes.iter().find_map(|l| l.fault()) {
+                Some(fault) => self.poisoned = Some(fault),
+                None => panic!("a shard lane exited before Finish"),
+            }
+        }
     }
-}
 
-impl<A> ShardedAggregator<A> {
     /// Number of shards (== absorb lanes).
     pub fn shard_count(&self) -> usize {
         self.lanes.len()
@@ -441,19 +1169,21 @@ impl<A> ShardedAggregator<A> {
 
     /// Total dimensionality the shards tile.
     pub fn d(&self) -> usize {
-        self.lanes.last().map(|l| l.range.end).unwrap_or(0)
+        self.lanes.last().map(|l| l.range().end).unwrap_or(0)
     }
 
     /// The shard ranges, in order.
     pub fn bounds(&self) -> Vec<Range<usize>> {
-        self.lanes.iter().map(|l| l.range.clone()).collect()
+        self.lanes.iter().map(|l| l.range()).collect()
     }
 
     /// Absorb compute seconds each lane spent in the last finished round,
-    /// indexed by shard. A lopsided split flags dimension imbalance
-    /// (e.g. one shard owning all the dense payload coordinates).
+    /// indexed by shard (for a remote lane: the worker's own measurement,
+    /// carried home on the slice-return frame). A lopsided split flags
+    /// dimension imbalance (e.g. one shard owning all the dense payload
+    /// coordinates).
     pub fn absorb_secs_by_shard(&self) -> Vec<f64> {
-        self.lanes.iter().map(|l| l.absorb_secs).collect()
+        self.lanes.iter().map(|l| l.absorb_secs()).collect()
     }
 
     /// Aggregate lease counters across every lane's sub-update pool. For a
@@ -462,20 +1192,22 @@ impl<A> ShardedAggregator<A> {
     pub fn lane_pool_stats(&self) -> PoolStats {
         self.lanes
             .iter()
-            .fold(PoolStats::default(), |acc, l| acc.merged(l.pool.stats()))
+            .fold(PoolStats::default(), |acc, l| acc.merged(l.pool().stats()))
     }
 
     /// Borrow the parked `(range, slice sink)` pairs — `None` while a
-    /// round is in flight (the sinks are on their lane threads). The
-    /// resident drain path uses this to refresh the global broadcast
-    /// state between rounds without consuming the view.
+    /// round is in flight (the sinks are on their lanes). The resident
+    /// drain path uses this to refresh the global broadcast state between
+    /// rounds without consuming the view. (A remote lane's parked sink is
+    /// its coordinator-side mirror, refreshed from the worker at every
+    /// finish/abort — identical to what a local lane parks.)
     pub fn shard_slices(&self) -> Option<Vec<(Range<usize>, &A)>> {
         if self.running.is_some() {
             return None;
         }
         self.lanes
             .iter()
-            .map(|l| l.sink.as_ref().map(|s| (l.range.clone(), s)))
+            .map(|l| l.sink().map(|s| (l.range(), s)))
             .collect()
     }
 
@@ -496,18 +1228,15 @@ impl<A> ShardedAggregator<A> {
 
     /// Decompose into `(range, slice sink)` pairs for stitching back into
     /// the global state. Aborts any round still in flight and shuts the
-    /// resident lane threads down first.
+    /// lanes down first (remote lanes signal their worker to exit).
     pub fn into_shards(mut self) -> Vec<(Range<usize>, A)> {
         self.abort_round();
-        self.shutdown_lanes();
+        for lane in &mut self.lanes {
+            lane.shutdown();
+        }
         std::mem::take(&mut self.lanes)
             .into_iter()
-            .map(|lane| {
-                (
-                    lane.range,
-                    lane.sink.expect("lane sink present after abort/finish"),
-                )
-            })
+            .map(|mut lane| (lane.range(), lane.take_sink()))
             .collect()
     }
 
@@ -516,47 +1245,13 @@ impl<A> ShardedAggregator<A> {
     fn collect_round(&mut self) -> bool {
         let mut all_finished = true;
         for lane in &mut self.lanes {
-            match lane.ret.recv() {
-                Ok(ret) => {
-                    lane.sink = Some(ret.sink);
-                    lane.absorb_secs = ret.absorb_secs;
-                    all_finished &= ret.finished;
-                }
-                Err(_) => Self::propagate_lane_death(lane),
-            }
+            all_finished &= lane.collect_round();
         }
         all_finished
     }
-
-    /// Drop the control channels and join the resident threads; propagates
-    /// a lane panic. Must not be called with a round in flight.
-    fn shutdown_lanes(&mut self) {
-        for lane in &mut self.lanes {
-            lane.ctrl = None;
-        }
-        for lane in &mut self.lanes {
-            if let Some(handle) = lane.handle.take() {
-                if let Err(panic) = handle.join() {
-                    std::panic::resume_unwind(panic);
-                }
-            }
-        }
-    }
-
-    /// A lane's channel disconnected outside shutdown: the resident thread
-    /// died, which only a sink panic can cause — join it and re-raise.
-    fn propagate_lane_death(lane: &mut ShardLane<A>) -> ! {
-        match lane.handle.take() {
-            Some(handle) => match handle.join() {
-                Err(panic) => std::panic::resume_unwind(panic),
-                Ok(()) => unreachable!("lane exited without panicking while in use"),
-            },
-            None => panic!("shard lane thread missing"),
-        }
-    }
 }
 
-impl<A: Aggregator + Send + 'static> Aggregator for ShardedAggregator<A> {
+impl<A> Aggregator for ShardedAggregator<A> {
     fn begin_round(&mut self, expected: usize) {
         // A round left in flight by an aborted drain is superseded, the
         // same tolerance the single-lane sinks give repeated begins.
@@ -600,6 +1295,12 @@ impl<A: Aggregator + Send + 'static> Aggregator for ShardedAggregator<A> {
     fn abort_round(&mut self) {
         ShardedAggregator::abort_round(self);
     }
+
+    fn lane_fault(&self) -> Option<String> {
+        self.poisoned
+            .clone()
+            .or_else(|| self.lanes.iter().find_map(|l| l.fault()))
+    }
 }
 
 impl<A> Drop for ShardedAggregator<A> {
@@ -611,22 +1312,18 @@ impl<A> Drop for ShardedAggregator<A> {
         if let Some(RunningRound { router }) = self.running.take() {
             drop(router);
             for lane in &mut self.lanes {
-                let _ = lane.ret.recv();
+                lane.collect_round_quiet();
             }
         }
         for lane in &mut self.lanes {
-            lane.ctrl = None;
-        }
-        for lane in &mut self.lanes {
-            if let Some(handle) = lane.handle.take() {
-                let _ = handle.join();
-            }
+            lane.shutdown_quiet();
         }
     }
 }
 
 #[cfg(test)]
 mod tests {
+    use super::super::transport::socket::{serve_shard_worker, Listener};
     use super::*;
 
     /// Per-lane spy sink recording what it absorbed. It releases every
@@ -866,5 +1563,229 @@ mod tests {
         agg.begin_round(2);
         agg.absorb(0, Update::Mask(vec![1.0; 4]));
         drop(agg); // must not hang or leak a blocked lane thread
+    }
+
+    /// Minimal wire-serializable slice sink: a slot-weighted coordinate
+    /// sum plus round counters. It deliberately carries **no** transient
+    /// mid-round state, so whole-struct equality is meaningful across the
+    /// finish *and* abort parking paths — exactly the property the remote
+    /// mirror adoption must preserve.
+    #[derive(Clone, Debug, Default, PartialEq)]
+    struct SumSink {
+        acc: Vec<f32>,
+        rounds: u64,
+        partials: u64,
+    }
+
+    impl SumSink {
+        fn new(d: usize) -> Self {
+            Self {
+                acc: vec![0.0; d],
+                rounds: 0,
+                partials: 0,
+            }
+        }
+    }
+
+    impl Aggregator for SumSink {
+        fn begin_round(&mut self, _expected: usize) {}
+
+        fn absorb(&mut self, slot: usize, update: Update) {
+            let (sign, v) = match &update {
+                Update::Mask(v) => (1.0f32, v),
+                Update::ScoreDelta(v) => (-1.0f32, v),
+            };
+            assert_eq!(v.len(), self.acc.len());
+            let w = sign * (slot as f32 + 1.0);
+            for (a, x) in self.acc.iter_mut().zip(v) {
+                *a += w * x;
+            }
+        }
+
+        fn finish_round(&mut self) {
+            self.rounds += 1;
+        }
+
+        fn finish_round_partial(&mut self) {
+            self.rounds += 1;
+            self.partials += 1;
+        }
+    }
+
+    impl WireSlice for SumSink {
+        fn encode_slice(&self) -> Vec<u8> {
+            let mut out = Vec::with_capacity(24 + 4 * self.acc.len());
+            out.extend_from_slice(&(self.acc.len() as u64).to_le_bytes());
+            out.extend_from_slice(&self.rounds.to_le_bytes());
+            out.extend_from_slice(&self.partials.to_le_bytes());
+            for x in &self.acc {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+            out
+        }
+
+        fn decode_slice(bytes: &[u8]) -> Result<Self> {
+            if bytes.len() < 24 {
+                bail!("sum-sink slice truncated: {} bytes", bytes.len());
+            }
+            let d = u64::from_le_bytes(bytes[0..8].try_into().unwrap()) as usize;
+            if d.checked_mul(4).and_then(|n| n.checked_add(24)) != Some(bytes.len()) {
+                bail!("sum-sink slice length {} does not match d={d}", bytes.len());
+            }
+            Ok(Self {
+                acc: bytes[24..]
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                    .collect(),
+                rounds: u64::from_le_bytes(bytes[8..16].try_into().unwrap()),
+                partials: u64::from_le_bytes(bytes[16..24].try_into().unwrap()),
+            })
+        }
+
+        fn slice_dim(&self) -> usize {
+            self.acc.len()
+        }
+    }
+
+    fn sum_shards(d: usize, shards: usize) -> Vec<(Range<usize>, SumSink)> {
+        shard_bounds(d, shards)
+            .into_iter()
+            .map(|r| {
+                let sink = SumSink::new(r.len());
+                (r, sink)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn sum_sink_slice_codec_round_trips_and_rejects_garbage() {
+        let mut s = SumSink::new(5);
+        s.absorb(2, Update::Mask(vec![0.5, 1.0, 0.0, 1.0, 0.25]));
+        s.finish_round();
+        let bytes = s.encode_slice();
+        assert_eq!(SumSink::decode_slice(&bytes).unwrap(), s);
+        assert!(SumSink::decode_slice(&[]).is_err());
+        assert!(SumSink::decode_slice(&bytes[..bytes.len() - 1]).is_err());
+        let mut long = bytes.clone();
+        long.push(0);
+        assert!(SumSink::decode_slice(&long).is_err());
+        let mut huge_d = bytes;
+        huge_d[0..8].copy_from_slice(&u64::MAX.to_le_bytes());
+        assert!(SumSink::decode_slice(&huge_d).is_err());
+    }
+
+    #[test]
+    fn placement_specs_parse_and_validate() {
+        assert!(ShardPlacement::parse("").unwrap().is_empty());
+        assert!(ShardPlacement::parse("   ").unwrap().is_all_local());
+        let p = ShardPlacement::parse(" local, uds:/tmp/w1.sock ,tcp:10.0.0.2:7000").unwrap();
+        assert_eq!(p.len(), 3);
+        assert!(!p.is_all_local());
+        assert_eq!(p.site(0).to_string(), "local");
+        assert_eq!(p.site(1).to_string(), "uds:///tmp/w1.sock");
+        assert_eq!(p.site(2).to_string(), "tcp://10.0.0.2:7000");
+        assert_eq!(p.site(9).to_string(), "local", "out of range => local");
+        for bad in ["bogus", "uds:", "tcp:", "local,remote", "local,,local"] {
+            assert!(ShardPlacement::parse(bad).is_err(), "{bad}");
+        }
+
+        let fp = ConfigFingerprint {
+            seed: 1,
+            n_clients: 2,
+            rounds: 3,
+            d: 8,
+        };
+        let cfg = SocketConfig::default();
+        // Site count must match the shard count when non-empty.
+        let three = ShardPlacement::parse("local,local,local").unwrap();
+        assert!(ShardedAggregator::with_placement(sum_shards(8, 2), &three, fp, cfg).is_err());
+        // Two remote lanes may not share one worker.
+        let dup = ShardPlacement::parse("uds:/tmp/same.sock,uds:/tmp/same.sock").unwrap();
+        assert!(ShardedAggregator::with_placement(sum_shards(8, 2), &dup, fp, cfg).is_err());
+        // All-local placements (explicit or empty) never touch a socket.
+        let all_local = ShardPlacement::parse("local,local").unwrap();
+        let agg =
+            ShardedAggregator::with_placement(sum_shards(8, 2), &all_local, fp, cfg).unwrap();
+        assert_eq!(agg.shard_count(), 2);
+        let agg =
+            ShardedAggregator::with_placement(sum_shards(8, 3), &ShardPlacement::default(), fp, cfg)
+                .unwrap();
+        assert_eq!(agg.shard_count(), 3);
+    }
+
+    #[test]
+    fn placement_resolution_pads_and_truncates_to_the_lane_count() {
+        // The ambient-spec contract `fl::shard_view_for` relies on: one
+        // DELTAMASK_SHARD_PLACE composes with every shard count.
+        let p = ShardPlacement::parse("local,uds:/tmp/a.sock,uds:/tmp/b.sock").unwrap();
+        let padded = p.resolved(5);
+        assert_eq!(padded.len(), 5);
+        assert_eq!(padded.site(1).to_string(), "uds:///tmp/a.sock");
+        assert_eq!(padded.site(3).to_string(), "local");
+        assert_eq!(padded.site(4).to_string(), "local");
+        let truncated = p.resolved(2);
+        assert_eq!(truncated.len(), 2);
+        assert_eq!(truncated.site(1).to_string(), "uds:///tmp/a.sock");
+        assert!(truncated.resolved(1).is_all_local(), "remote site dropped");
+        // Empty stays empty — the all-local fast path is preserved.
+        assert!(ShardPlacement::default().resolved(4).is_empty());
+        assert!(ShardPlacement::parse("").unwrap().resolved(3).is_all_local());
+    }
+
+    #[test]
+    fn remote_lanes_match_local_lanes_bitwise_including_aborts() {
+        let d = 9;
+        let fp = ConfigFingerprint {
+            seed: 3,
+            n_clients: 4,
+            rounds: 9,
+            d: d as u64,
+        };
+        let cfg = SocketConfig::default();
+        let path = std::env::temp_dir().join(format!("dm-lane-eqv-{}.sock", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        let spec = SocketAddrSpec::Uds(path.clone());
+        let listener = Listener::bind(&spec).unwrap();
+        let worker =
+            std::thread::spawn(move || serve_shard_worker::<SumSink>(&listener, cfg, fp, false));
+
+        let mut local = ShardedAggregator::new(sum_shards(d, 2));
+        let placement =
+            ShardPlacement::parse(&format!("local,uds:{}", path.display())).unwrap();
+        let mut placed =
+            ShardedAggregator::with_placement(sum_shards(d, 2), &placement, fp, cfg).unwrap();
+
+        let updates: Vec<Update> = (0..3)
+            .map(|k| Update::Mask((0..d).map(|i| (i + k) as f32).collect()))
+            .collect();
+        for agg in [&mut local, &mut placed] {
+            // Round 1: a clean finish over three updates.
+            agg.begin_round(3);
+            for (slot, u) in updates.iter().enumerate() {
+                agg.absorb(slot, u.clone());
+                while agg.reclaim_buffer().is_some() {}
+            }
+            agg.finish_round();
+            // Round 2: one absorb, then the drain aborts the round — the
+            // remote mirror must adopt the worker's post-absorb state.
+            agg.begin_round(4);
+            agg.absorb(2, Update::ScoreDelta(vec![0.5; d]));
+            while agg.reclaim_buffer().is_some() {}
+            agg.abort_round();
+            // Round 3: a degraded (partial) finish.
+            agg.begin_round(2);
+            agg.absorb(1, Update::Mask(vec![1.0; d]));
+            while agg.reclaim_buffer().is_some() {}
+            agg.finish_round_partial();
+        }
+        assert!(placed.lane_fault().is_none(), "no fault expected");
+        assert_eq!(local.absorb_secs_by_shard().len(), 2);
+        let local_shards = local.into_shards();
+        let placed_shards = placed.into_shards();
+        assert_eq!(local_shards, placed_shards, "remote lane must be bitwise");
+        // into_shards sent the worker a shutdown; the non-lingering serve
+        // loop returns cleanly.
+        worker.join().unwrap().unwrap();
+        let _ = std::fs::remove_file(&path);
     }
 }

@@ -10,7 +10,9 @@
 //! offset  size  field
 //!      0     4  magic  "DMW1"
 //!      4     1  version (1)
-//!      5     1  kind    (1=Update 2=Failed 3=Hello 4=Plan 5=EndOfRound 6=Shutdown)
+//!      5     1  kind    (1=Update 2=Failed 3=Hello 4=Plan 5=EndOfRound 6=Shutdown
+//!                        7=ShardHello 8=ShardBegin 9=ShardSplit 10=ShardFinish
+//!                        11=ShardAbort 12=ShardSlice)
 //!      6     2  reserved, must be zero
 //!      8     4  session — logical client id for data frames; this is what
 //!               lets M OS connections carry K ≫ M multiplexed clients
@@ -59,13 +61,17 @@
 //!
 //! [`ChannelTransport`]: super::ChannelTransport
 
+use super::super::aggregate::Aggregator;
+use super::super::shard::WireSlice;
 use super::{Counters, Payload, RecvOutcome, Transport, TransportSender, TransportStats, WireMessage};
-use crate::compress::Encoded;
+use crate::compress::{Encoded, Update};
 use crate::coordinator::round::RoundPlan;
+use crate::util::timer::Stopwatch;
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::VecDeque;
 use std::io::{self, Read, Write};
 use std::net::{TcpListener, TcpStream};
+use std::ops::Range;
 use std::os::unix::net::{UnixListener, UnixStream};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -165,6 +171,14 @@ const K_HELLO: u8 = 3;
 const K_PLAN: u8 = 4;
 const K_EOR: u8 = 5;
 const K_SHUTDOWN: u8 = 6;
+// Shard-fabric frames: a coordinator's remote absorb lane talking to a
+// `deltamask shard-worker` process (see `coordinator::shard`).
+const K_SHARD_HELLO: u8 = 7;
+const K_SHARD_BEGIN: u8 = 8;
+const K_SHARD_SPLIT: u8 = 9;
+const K_SHARD_FINISH: u8 = 10;
+const K_SHARD_ABORT: u8 = 11;
+const K_SHARD_SLICE: u8 = 12;
 
 /// A validated frame header.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -187,6 +201,23 @@ pub enum FrameBody {
     EndOfRound(u64),
     /// The experiment is over; the fleet should exit cleanly.
     Shutdown,
+    /// Shard-lane handshake: config fingerprint, shard bounds and the
+    /// encoded slice state seeding the worker (empty in the echo).
+    ShardHello(ShardHello),
+    /// Open one shard round; `seq` is strictly monotone per connection so
+    /// a replayed round is rejected instead of double-counted.
+    ShardBegin { seq: u64, expected: u64 },
+    /// One routed sub-update for the in-flight shard round.
+    ShardSplit(ShardSplit),
+    /// Close the in-flight shard round (`partial` = degraded quorum); the
+    /// worker finishes its slice and answers with a `ShardSlice`.
+    ShardFinish { partial: bool },
+    /// Abandon the in-flight shard round; the worker answers with the
+    /// *unfinished* post-absorb slice (mirroring a parked local lane).
+    ShardAbort,
+    /// Worker → coordinator: the slice state after a finish or abort,
+    /// plus the absorb compute seconds the worker spent this round.
+    ShardSlice { absorb_secs: f64, state: Vec<u8> },
 }
 
 /// Fleet handshake record. The fingerprint catches the deadliest two-process
@@ -206,6 +237,29 @@ pub struct ConfigFingerprint {
     pub n_clients: u64,
     pub rounds: u64,
     pub d: u64,
+}
+
+/// Shard-lane handshake record: the same fingerprint check the fleet
+/// handshake runs, plus the dimension range this lane owns and the slice
+/// state that seeds the worker (the coordinator's parked mirror, so a
+/// reconnect resumes exactly where the lane left off).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ShardHello {
+    pub fingerprint: ConfigFingerprint,
+    pub range_start: u64,
+    pub range_end: u64,
+    /// `WireSlice`-encoded slice state; empty in the worker's echo.
+    pub state: Vec<u8>,
+}
+
+/// One routed sub-update: the record's slot, its update family and this
+/// shard's contiguous sub-range of the decoded coefficients.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ShardSplit {
+    pub slot: u32,
+    /// 0 = mask family, 1 = score-delta family.
+    pub family: u8,
+    pub data: Vec<f32>,
 }
 
 /// Raw `Plan` frame contents. `mask_g` is never transmitted: it is a pure
@@ -332,7 +386,7 @@ pub fn parse_header(buf: &[u8; HEADER_LEN], max_frame: usize) -> Result<FrameHea
         bail!("unsupported frame version {}", buf[4]);
     }
     let kind = buf[5];
-    if !(K_UPDATE..=K_SHUTDOWN).contains(&kind) {
+    if !(K_UPDATE..=K_SHARD_SLICE).contains(&kind) {
         bail!("unknown frame kind {kind}");
     }
     if buf[6] != 0 || buf[7] != 0 {
@@ -442,6 +496,71 @@ pub fn parse_frame(header: FrameHeader, payload: &[u8]) -> Result<FrameBody> {
             c.done()?;
             Ok(FrameBody::Shutdown)
         }
+        K_SHARD_HELLO => {
+            let fingerprint = ConfigFingerprint {
+                seed: c.u64()?,
+                n_clients: c.u64()?,
+                rounds: c.u64()?,
+                d: c.u64()?,
+            };
+            let range_start = c.u64()?;
+            let range_end = c.u64()?;
+            let state = c.rest().to_vec();
+            if range_start >= range_end {
+                bail!("shard hello range {range_start}..{range_end} is empty or inverted");
+            }
+            if range_end > fingerprint.d {
+                bail!(
+                    "shard hello range end {range_end} exceeds dimensionality {}",
+                    fingerprint.d
+                );
+            }
+            Ok(FrameBody::ShardHello(ShardHello {
+                fingerprint,
+                range_start,
+                range_end,
+                state,
+            }))
+        }
+        K_SHARD_BEGIN => {
+            let seq = c.u64()?;
+            let expected = c.u64()?;
+            c.done()?;
+            Ok(FrameBody::ShardBegin { seq, expected })
+        }
+        K_SHARD_SPLIT => {
+            let slot = c.u32()?;
+            let family = c.take(1)?[0];
+            if family > 1 {
+                bail!("shard split family byte {family} is not mask (0) or score-delta (1)");
+            }
+            let raw = c.rest();
+            if raw.len() % 4 != 0 {
+                bail!("shard split data length {} is not a multiple of 4", raw.len());
+            }
+            let data = raw
+                .chunks_exact(4)
+                .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+                .collect();
+            Ok(FrameBody::ShardSplit(ShardSplit { slot, family, data }))
+        }
+        K_SHARD_FINISH => {
+            let flag = c.take(1)?[0];
+            c.done()?;
+            if flag > 1 {
+                bail!("shard finish flag byte {flag} is not 0/1");
+            }
+            Ok(FrameBody::ShardFinish { partial: flag == 1 })
+        }
+        K_SHARD_ABORT => {
+            c.done()?;
+            Ok(FrameBody::ShardAbort)
+        }
+        K_SHARD_SLICE => {
+            let absorb_secs = c.f64()?;
+            let state = c.rest().to_vec();
+            Ok(FrameBody::ShardSlice { absorb_secs, state })
+        }
         _ => unreachable!("parse_header validated the kind"),
     }
 }
@@ -507,6 +626,52 @@ pub fn encode_eor(round: u64) -> Vec<u8> {
 
 pub fn encode_shutdown() -> Vec<u8> {
     frame(K_SHUTDOWN, 0, &[])
+}
+
+/// Encode a shard-lane handshake. `shard` rides in the session field for
+/// debuggability (the worker identifies the lane by its connection).
+pub fn encode_shard_hello(shard: u32, hello: &ShardHello) -> Vec<u8> {
+    let mut p = Vec::with_capacity(48 + hello.state.len());
+    p.extend_from_slice(&hello.fingerprint.seed.to_le_bytes());
+    p.extend_from_slice(&hello.fingerprint.n_clients.to_le_bytes());
+    p.extend_from_slice(&hello.fingerprint.rounds.to_le_bytes());
+    p.extend_from_slice(&hello.fingerprint.d.to_le_bytes());
+    p.extend_from_slice(&hello.range_start.to_le_bytes());
+    p.extend_from_slice(&hello.range_end.to_le_bytes());
+    p.extend_from_slice(&hello.state);
+    frame(K_SHARD_HELLO, shard, &p)
+}
+
+pub fn encode_shard_begin(shard: u32, seq: u64, expected: u64) -> Vec<u8> {
+    let mut p = Vec::with_capacity(16);
+    p.extend_from_slice(&seq.to_le_bytes());
+    p.extend_from_slice(&expected.to_le_bytes());
+    frame(K_SHARD_BEGIN, shard, &p)
+}
+
+pub fn encode_shard_split(shard: u32, slot: u32, family: u8, data: &[f32]) -> Vec<u8> {
+    let mut p = Vec::with_capacity(5 + 4 * data.len());
+    p.extend_from_slice(&slot.to_le_bytes());
+    p.push(family);
+    for v in data {
+        p.extend_from_slice(&v.to_le_bytes());
+    }
+    frame(K_SHARD_SPLIT, shard, &p)
+}
+
+pub fn encode_shard_finish(shard: u32, partial: bool) -> Vec<u8> {
+    frame(K_SHARD_FINISH, shard, &[u8::from(partial)])
+}
+
+pub fn encode_shard_abort(shard: u32) -> Vec<u8> {
+    frame(K_SHARD_ABORT, shard, &[])
+}
+
+pub fn encode_shard_slice(shard: u32, absorb_secs: f64, state: &[u8]) -> Vec<u8> {
+    let mut p = Vec::with_capacity(8 + state.len());
+    p.extend_from_slice(&absorb_secs.to_le_bytes());
+    p.extend_from_slice(state);
+    frame(K_SHARD_SLICE, shard, &p)
 }
 
 // ---------------------------------------------------------------------------
@@ -1291,16 +1456,22 @@ fn read_hello(stream: &mut Stream, cfg: SocketConfig) -> Result<Hello> {
 
 /// Blocking read of one whole frame (handshake / control paths).
 fn read_frame(stream: &mut Stream, cfg: SocketConfig) -> Result<FrameBody> {
+    read_frame_or_eof(stream, cfg)?.ok_or_else(|| anyhow!("connection closed"))
+}
+
+/// Blocking read of one whole frame; `None` on a clean EOF at a frame
+/// boundary (the peer hung up between frames).
+fn read_frame_or_eof(stream: &mut Stream, cfg: SocketConfig) -> Result<Option<FrameBody>> {
     let mut header = [0u8; HEADER_LEN];
     if !read_exact_or_eof(stream, &mut header)? {
-        bail!("connection closed");
+        return Ok(None);
     }
     let h = parse_header(&header, cfg.max_frame)?;
     let mut payload = vec![0u8; h.len];
     if !read_exact_or_eof(stream, &mut payload)? {
         bail!("connection closed mid-frame");
     }
-    parse_frame(h, &payload)
+    parse_frame(h, &payload).map(Some)
 }
 
 /// Downlink control messages a fleet reacts to.
@@ -1394,6 +1565,288 @@ impl FleetLink {
             c.flush()?;
         }
         Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shard fabric: remote absorb lanes (ShardLink) and the worker serve loop.
+// ---------------------------------------------------------------------------
+
+/// Coordinator-side client for one remote shard lane: a persistent framed
+/// connection to a `deltamask shard-worker`, carrying the lane's round
+/// traffic as `K_SHARD_*` frames. All writes are blocking `write_all`s on
+/// a connection the worker reads one frame at a time, so the kernel's
+/// socket window (bounded by [`SocketConfig::max_frame`] per frame) is
+/// the backpressure: a slow shard host stalls the lane's bounded job
+/// queue, which stalls the router, which stalls decode — never unbounded
+/// buffering.
+pub struct ShardLink {
+    stream: Stream,
+    cfg: SocketConfig,
+    shard: u32,
+}
+
+impl ShardLink {
+    /// Connect (retrying until `timeout`, so workers may be racing their
+    /// bind), send the shard hello carrying the config fingerprint, the
+    /// lane's bounds and the slice state seeding the worker, and wait for
+    /// the worker's echo. A worker that rejects the hello closes the
+    /// connection, which surfaces here before any round starts.
+    pub fn connect(
+        spec: &SocketAddrSpec,
+        cfg: SocketConfig,
+        shard: u32,
+        fingerprint: ConfigFingerprint,
+        range: Range<usize>,
+        state: &[u8],
+        timeout: Duration,
+    ) -> Result<Self> {
+        let deadline = Instant::now() + timeout;
+        let stream = loop {
+            match Stream::connect(spec) {
+                Ok(s) => break s,
+                Err(e) => {
+                    if Instant::now() >= deadline {
+                        return Err(e.context(format!("shard lane connect to {spec} timed out")));
+                    }
+                    std::thread::sleep(Duration::from_millis(50));
+                }
+            }
+        };
+        let mut link = Self { stream, cfg, shard };
+        let hello = ShardHello {
+            fingerprint,
+            range_start: range.start as u64,
+            range_end: range.end as u64,
+            state: state.to_vec(),
+        };
+        link.stream.write_all(&encode_shard_hello(shard, &hello))?;
+        link.stream.flush()?;
+        match read_frame(&mut link.stream, link.cfg).with_context(|| {
+            format!("shard worker at {spec} rejected the hello (fingerprint or bounds mismatch?)")
+        })? {
+            FrameBody::ShardHello(echo) => {
+                if echo.fingerprint != fingerprint {
+                    bail!(
+                        "shard worker at {spec} echoed fingerprint {:?}, expected {:?}",
+                        echo.fingerprint,
+                        fingerprint
+                    );
+                }
+                Ok(link)
+            }
+            other => bail!("expected shard hello echo from {spec}, got {other:?}"),
+        }
+    }
+
+    /// Open one shard round. `seq` must be strictly monotone per link.
+    pub fn begin(&mut self, seq: u64, expected: usize) -> Result<()> {
+        self.stream
+            .write_all(&encode_shard_begin(self.shard, seq, expected as u64))?;
+        self.stream.flush()?;
+        Ok(())
+    }
+
+    /// Ship one routed sub-update (family 0 = mask, 1 = score-delta).
+    pub fn split(&mut self, slot: usize, family: u8, data: &[f32]) -> Result<()> {
+        self.stream
+            .write_all(&encode_shard_split(self.shard, slot as u32, family, data))?;
+        self.stream.flush()?;
+        Ok(())
+    }
+
+    /// Finish the round on the worker; returns its absorb seconds and the
+    /// post-finish slice state.
+    pub fn finish(&mut self, partial: bool) -> Result<(f64, Vec<u8>)> {
+        self.stream
+            .write_all(&encode_shard_finish(self.shard, partial))?;
+        self.stream.flush()?;
+        self.read_slice()
+    }
+
+    /// Abandon the round on the worker; returns its absorb seconds and the
+    /// *unfinished* post-absorb slice state (a parked local lane's exact
+    /// equivalent, which is what keeps aborted rounds bitwise-coherent).
+    pub fn abort(&mut self) -> Result<(f64, Vec<u8>)> {
+        self.stream.write_all(&encode_shard_abort(self.shard))?;
+        self.stream.flush()?;
+        self.read_slice()
+    }
+
+    /// Best-effort experiment-over signal (non-lingering workers exit).
+    pub fn send_shutdown(&mut self) {
+        let _ = self
+            .stream
+            .write_all(&encode_shutdown())
+            .and_then(|()| self.stream.flush());
+    }
+
+    fn read_slice(&mut self) -> Result<(f64, Vec<u8>)> {
+        match read_frame(&mut self.stream, self.cfg)? {
+            FrameBody::ShardSlice { absorb_secs, state } => Ok((absorb_secs, state)),
+            other => bail!("expected shard slice return, got {other:?}"),
+        }
+    }
+}
+
+/// Serve one shard worker: accept shard-lane connections sequentially
+/// (one lane per worker) and drive a slice sink per session from
+/// `K_SHARD_*` frames. Generic over the sink so tests can serve spy
+/// aggregators; production serves `fl::server::MaskServer` via the
+/// `deltamask shard-worker` subcommand.
+///
+/// Every wire value is validated *before* it reaches the sink's
+/// panicking contract methods — a malformed, replayed or incoherent
+/// frame kills the connection (the coordinator's lane sees the dead link
+/// as a fault), never the worker process. A clean EOF re-enters accept,
+/// which is what lets a faulted coordinator lane reconnect and re-seed
+/// the worker from its parked mirror. With `linger` the worker also
+/// ignores shutdown frames and re-accepts forever (CI keeps standing
+/// workers across test suites); without it the first shutdown frame
+/// returns cleanly.
+pub fn serve_shard_worker<A: Aggregator + WireSlice>(
+    listener: &Listener,
+    cfg: SocketConfig,
+    expect: ConfigFingerprint,
+    linger: bool,
+) -> Result<()> {
+    loop {
+        let mut stream = listener.accept()?;
+        match serve_shard_session::<A>(&mut stream, cfg, expect) {
+            Ok(true) if !linger => return Ok(()),
+            Ok(_) => {}
+            Err(e) => eprintln!("deltamask shard-worker: session ended: {e:#}"),
+        }
+    }
+}
+
+/// One accepted shard-lane connection. `Ok(true)` on a shutdown frame,
+/// `Ok(false)` on a clean EOF (lane dropped or reconnecting).
+fn serve_shard_session<A: Aggregator + WireSlice>(
+    stream: &mut Stream,
+    cfg: SocketConfig,
+    expect: ConfigFingerprint,
+) -> Result<bool> {
+    let hello = match read_frame(stream, cfg).context("shard hello read")? {
+        FrameBody::ShardHello(h) => h,
+        FrameBody::Shutdown => return Ok(true),
+        other => bail!("expected shard hello, got {other:?}"),
+    };
+    if hello.fingerprint != expect {
+        bail!(
+            "shard hello fingerprint {:?} does not match this worker's config {:?} — \
+             shard-worker must run identical experiment settings",
+            hello.fingerprint,
+            expect
+        );
+    }
+    // parse_frame guaranteed a non-empty range within the fingerprint's d;
+    // what is left to check is agreement with *this* worker's config and
+    // with the state that came along.
+    let range = hello.range_start as usize..hello.range_end as usize;
+    let mut sink = A::decode_slice(&hello.state).context("shard hello slice state")?;
+    if sink.slice_dim() != range.len() {
+        bail!(
+            "shard hello state dimensionality {} does not match bounds {range:?}",
+            sink.slice_dim()
+        );
+    }
+    let echo = ShardHello {
+        state: Vec::new(),
+        ..hello
+    };
+    stream.write_all(&encode_shard_hello(0, &echo))?;
+    stream.flush()?;
+
+    let mut last_seq = 0u64;
+    loop {
+        // Parked between rounds: wait for the next begin (or shutdown/EOF).
+        let (seq, expected) = match read_frame_or_eof(stream, cfg)? {
+            None => return Ok(false),
+            Some(FrameBody::ShardBegin { seq, expected }) => (seq, expected),
+            Some(FrameBody::Shutdown) => return Ok(true),
+            Some(other) => bail!("expected shard begin, got {other:?}"),
+        };
+        if seq <= last_seq {
+            bail!("replayed shard round seq {seq} (last was {last_seq})");
+        }
+        if expected > expect.n_clients {
+            bail!(
+                "shard round expects {expected} updates from a {}-client experiment",
+                expect.n_clients
+            );
+        }
+        last_seq = seq;
+        let expected = expected as usize;
+        sink.begin_round(expected);
+        let mut absorb_secs = 0.0f64;
+        let mut seen = vec![false; expected];
+        let mut absorbed = 0usize;
+        let mut family: Option<u8> = None;
+        loop {
+            match read_frame_or_eof(stream, cfg)? {
+                // EOF mid-round: the lane died or aborted hard; the
+                // mid-round state dies with the connection (the
+                // coordinator still holds the authoritative mirror).
+                None => return Ok(false),
+                Some(FrameBody::ShardSplit(split)) => {
+                    let slot = split.slot as usize;
+                    if slot >= expected {
+                        bail!("shard split slot {slot} out of range 0..{expected}");
+                    }
+                    if seen[slot] {
+                        bail!("duplicate shard split for slot {slot}");
+                    }
+                    if split.data.len() != range.len() {
+                        bail!(
+                            "shard split length {} does not match bounds {range:?}",
+                            split.data.len()
+                        );
+                    }
+                    if family.is_some_and(|f| f != split.family) {
+                        bail!("mixed update families within one shard round");
+                    }
+                    family = Some(split.family);
+                    seen[slot] = true;
+                    absorbed += 1;
+                    let update = if split.family == 0 {
+                        Update::Mask(split.data)
+                    } else {
+                        Update::ScoreDelta(split.data)
+                    };
+                    let t = Stopwatch::new();
+                    sink.absorb(slot, update);
+                    while sink.reclaim_buffer().is_some() {}
+                    absorb_secs += t.elapsed_secs();
+                }
+                Some(FrameBody::ShardFinish { partial }) => {
+                    if !partial && absorbed != expected {
+                        bail!("strict shard finish with {absorbed}/{expected} splits absorbed");
+                    }
+                    let t = Stopwatch::new();
+                    if partial {
+                        sink.finish_round_partial();
+                    } else {
+                        sink.finish_round();
+                    }
+                    absorb_secs += t.elapsed_secs();
+                    stream.write_all(&encode_shard_slice(0, absorb_secs, &sink.encode_slice()))?;
+                    stream.flush()?;
+                    break;
+                }
+                Some(FrameBody::ShardAbort) => {
+                    // Hand back the mid-round (unfinished) state so the
+                    // coordinator's mirror matches what a parked local
+                    // lane sink would hold after the same abort. The next
+                    // begin supersedes this round, exactly like a lane.
+                    stream.write_all(&encode_shard_slice(0, absorb_secs, &sink.encode_slice()))?;
+                    stream.flush()?;
+                    break;
+                }
+                Some(FrameBody::Shutdown) => return Ok(true),
+                Some(other) => bail!("unexpected mid-round shard frame {other:?}"),
+            }
+        }
     }
 }
 
@@ -1548,6 +2001,80 @@ mod tests {
             assert_eq!(st.received_messages, 8);
             assert_eq!(st.wire_frames, 8);
             assert_eq!(st.wire_bytes, 8 * (HEADER_LEN + 36 + 64) as u64);
+        }
+    }
+
+    #[test]
+    fn shard_frames_round_trip_and_reject_structural_garbage() {
+        let fp = ConfigFingerprint {
+            seed: 7,
+            n_clients: 12,
+            rounds: 4,
+            d: 100,
+        };
+        let hello = ShardHello {
+            fingerprint: fp,
+            range_start: 25,
+            range_end: 75,
+            state: vec![1, 2, 3, 4],
+        };
+        match decode_all(&encode_shard_hello(1, &hello), 1 << 20).unwrap() {
+            FrameBody::ShardHello(h) => assert_eq!(h, hello),
+            other => panic!("wrong body {other:?}"),
+        }
+        // Inverted or out-of-dimension bounds are rejected at parse.
+        let inverted = ShardHello {
+            range_start: 75,
+            range_end: 25,
+            ..hello.clone()
+        };
+        assert!(decode_all(&encode_shard_hello(1, &inverted), 1 << 20).is_err());
+        let oversized = ShardHello {
+            range_end: 101,
+            ..hello.clone()
+        };
+        assert!(decode_all(&encode_shard_hello(1, &oversized), 1 << 20).is_err());
+
+        match decode_all(&encode_shard_begin(2, 9, 8), 1 << 20).unwrap() {
+            FrameBody::ShardBegin { seq, expected } => {
+                assert_eq!((seq, expected), (9, 8));
+            }
+            other => panic!("wrong body {other:?}"),
+        }
+
+        let data = vec![0.0f32, 1.0, 0.5, -2.25];
+        match decode_all(&encode_shard_split(0, 3, 1, &data), 1 << 20).unwrap() {
+            FrameBody::ShardSplit(s) => {
+                assert_eq!(s.slot, 3);
+                assert_eq!(s.family, 1);
+                assert_eq!(s.data, data);
+            }
+            other => panic!("wrong body {other:?}"),
+        }
+        // Unknown family bytes and torn f32 runs are parse errors.
+        assert!(decode_all(&encode_shard_split(0, 3, 2, &data), 1 << 20).is_err());
+        let mut torn = encode_shard_split(0, 3, 0, &data);
+        torn.truncate(torn.len() - 2);
+        let torn_len = torn.len() - HEADER_LEN;
+        torn[12..16].copy_from_slice(&(torn_len as u32).to_le_bytes());
+        assert!(decode_all(&torn, 1 << 20).is_err());
+
+        for partial in [false, true] {
+            match decode_all(&encode_shard_finish(0, partial), 1 << 20).unwrap() {
+                FrameBody::ShardFinish { partial: p } => assert_eq!(p, partial),
+                other => panic!("wrong body {other:?}"),
+            }
+        }
+        assert!(matches!(
+            decode_all(&encode_shard_abort(0), 1 << 20).unwrap(),
+            FrameBody::ShardAbort
+        ));
+        match decode_all(&encode_shard_slice(0, 0.125, &[9, 9]), 1 << 20).unwrap() {
+            FrameBody::ShardSlice { absorb_secs, state } => {
+                assert_eq!(absorb_secs, 0.125);
+                assert_eq!(state, vec![9, 9]);
+            }
+            other => panic!("wrong body {other:?}"),
         }
     }
 

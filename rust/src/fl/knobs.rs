@@ -1,0 +1,596 @@
+//! The declarative operator-knob table: ONE entry per knob, pairing the
+//! CLI flag spelling, the `DELTAMASK_*` environment spelling and the
+//! [`ExperimentConfig`] field it writes.
+//!
+//! Before this table the same twelve-odd knobs were plumbed three times —
+//! an `args.*` call in `main.rs`'s `parse_cfg`, a `*_from_env` reader in
+//! `fl/mod.rs`, and the field default — and the three spellings could
+//! (and once did) drift. Now:
+//!
+//! * [`apply_env`] resolves every environment spelling onto a config
+//!   (called by `ExperimentConfig::default()`);
+//! * [`apply_cli`] resolves every flag spelling on top (called by the CLI
+//!   layer) — a flag that is absent leaves the env/default value alone;
+//! * the legacy `fl::*_from_env` helpers delegate to [`env_only`], so
+//!   parsing rules and panic messages exist in exactly one place.
+//!
+//! Resolution order is therefore: hard default → env → CLI, knob by knob.
+//! Malformed values fail loudly (panic with the knob's spelling in the
+//! message) — a typo'd knob silently falling back to its default would
+//! let a CI matrix entry pass while exercising nothing.
+//!
+//! The parity tests at the bottom pin every pre-existing flag and env
+//! spelling to the exact field and value semantics the triplicated code
+//! had, so a table edit cannot silently retire an operator surface.
+
+use super::ExperimentConfig;
+use crate::coordinator::{FaultPlan, OnDecodeError, PipelineMode, ShardPlacement, TransportKind};
+use crate::util::cli::Args;
+
+/// One operator knob: its two outward spellings and the two resolvers
+/// that write it into the config.
+pub struct Knob {
+    /// CLI spelling, without the leading `--`.
+    pub flag: &'static str,
+    /// Environment spelling; `None` for CLI-only knobs.
+    pub env: Option<&'static str>,
+    /// One-line operator help (shared by docs and usage text).
+    pub help: &'static str,
+    /// Apply a set environment value (may be empty — the CI matrix sets
+    /// every key for every entry, `""` meaning "not exercised here").
+    apply_env: fn(&mut ExperimentConfig, var: &str, value: &str),
+    /// Apply the CLI spelling; must leave the config untouched when the
+    /// flag is absent.
+    apply_cli: fn(&mut ExperimentConfig, &Args),
+}
+
+/// The knob table. Order is the banner/usage order.
+pub const KNOBS: &[Knob] = &[
+    Knob {
+        flag: "method",
+        env: Some("DELTAMASK_METHOD"),
+        help: "update codec (deltamask, fedpm, deltamask-pco, ...) or a weight-space baseline",
+        apply_env: |cfg, _var, v| {
+            if !v.is_empty() {
+                cfg.method = v.to_string();
+            }
+        },
+        apply_cli: |cfg, args| {
+            if let Some(v) = args.get("method") {
+                cfg.method = v.to_string();
+            }
+        },
+    },
+    Knob {
+        flag: "pipeline",
+        env: Some("DELTAMASK_PIPELINE"),
+        help: "server decode->aggregate scheduling: streaming (default) or batch",
+        apply_env: |cfg, var, v| {
+            if !v.is_empty() {
+                cfg.tuning.pipeline = PipelineMode::parse(v)
+                    .unwrap_or_else(|| panic!("{var} must be batch/streaming, got '{v}'"));
+            }
+        },
+        apply_cli: |cfg, args| {
+            let v = args.choice(
+                "pipeline",
+                &["batch", "streaming"],
+                cfg.tuning.pipeline.as_str(),
+            );
+            cfg.tuning.pipeline =
+                PipelineMode::parse(v).expect("choice() already validated the value");
+        },
+    },
+    Knob {
+        flag: "decode-workers",
+        env: Some("DELTAMASK_DECODE_WORKERS"),
+        help: "server decode threads: 1 = serial, N = scoped workers, 0 = one per core",
+        apply_env: |cfg, var, v| {
+            cfg.tuning.decode_workers = parse_count(var, v);
+        },
+        apply_cli: |cfg, args| {
+            cfg.tuning.decode_workers = args.usize("decode-workers", cfg.tuning.decode_workers);
+        },
+    },
+    Knob {
+        flag: "agg-shards",
+        env: Some("DELTAMASK_AGG_SHARDS"),
+        help: "dimension shards for the absorb stage: 1 = single lane, 0 = one per core",
+        apply_env: |cfg, var, v| {
+            cfg.tuning.agg_shards = parse_count(var, v);
+        },
+        apply_cli: |cfg, args| {
+            cfg.tuning.agg_shards = args.usize("agg-shards", cfg.tuning.agg_shards);
+        },
+    },
+    Knob {
+        flag: "shard-place",
+        env: Some("DELTAMASK_SHARD_PLACE"),
+        help: "per-shard lane sites: comma list of local / uds:<path> / tcp:<host:port>",
+        apply_env: |cfg, var, v| {
+            if !v.is_empty() {
+                if let Err(e) = ShardPlacement::parse(v) {
+                    panic!("{var} is not a valid shard placement: {e}");
+                }
+                cfg.tuning.shard_place = v.to_string();
+            }
+        },
+        apply_cli: |cfg, args| {
+            if let Some(v) = args.get("shard-place") {
+                if let Err(e) = ShardPlacement::parse(v) {
+                    panic!("--shard-place spec invalid: {e}");
+                }
+                cfg.tuning.shard_place = v.to_string();
+            }
+        },
+    },
+    Knob {
+        flag: "persistent-pipeline",
+        env: Some("DELTAMASK_PERSISTENT_PIPELINE"),
+        help: "spawn decode workers / absorb lanes once per experiment, park between rounds",
+        apply_env: |cfg, var, v| {
+            cfg.tuning.persistent_pipeline = match v {
+                "1" | "true" => true,
+                "0" | "false" => false,
+                _ => panic!("{var} must be 0/1/true/false, got '{v}'"),
+            };
+        },
+        apply_cli: |cfg, args| {
+            // A flag, not an option: presence turns it on, absence leaves
+            // the env/default verdict alone (flags cannot negate).
+            cfg.tuning.persistent_pipeline =
+                args.flag("persistent-pipeline") || cfg.tuning.persistent_pipeline;
+        },
+    },
+    Knob {
+        flag: "quorum",
+        env: Some("DELTAMASK_QUORUM"),
+        help: "fraction of the planned cohort that must report, in (0, 1]; 1.0 = strict",
+        apply_env: |cfg, var, v| {
+            if v.is_empty() {
+                return;
+            }
+            let q: f64 = v
+                .parse()
+                .unwrap_or_else(|_| panic!("{var} must be a number, got '{v}'"));
+            assert!(q > 0.0 && q <= 1.0, "{var} must be in (0, 1], got '{v}'");
+            cfg.tuning.quorum = q;
+        },
+        apply_cli: |cfg, args| {
+            cfg.tuning.quorum = args.f64("quorum", cfg.tuning.quorum);
+            assert!(
+                cfg.tuning.quorum > 0.0 && cfg.tuning.quorum <= 1.0,
+                "--quorum must be in (0, 1], got {}",
+                cfg.tuning.quorum
+            );
+        },
+    },
+    Knob {
+        flag: "round-deadline-ms",
+        env: Some("DELTAMASK_ROUND_DEADLINE_MS"),
+        help: "per-round drain deadline in ms; 0 = wait forever",
+        apply_env: |cfg, var, v| {
+            if v.is_empty() {
+                return;
+            }
+            cfg.tuning.round_deadline_ms = v
+                .parse()
+                .unwrap_or_else(|_| panic!("{var} must be a non-negative integer, got '{v}'"));
+        },
+        apply_cli: |cfg, args| {
+            cfg.tuning.round_deadline_ms =
+                args.u64("round-deadline-ms", cfg.tuning.round_deadline_ms);
+        },
+    },
+    Knob {
+        flag: "on-decode-error",
+        env: Some("DELTAMASK_ON_DECODE_ERROR"),
+        help: "undecodable-record handling: abort (default) or skip against quorum",
+        apply_env: |cfg, var, v| {
+            if v.is_empty() {
+                return;
+            }
+            cfg.tuning.on_decode_error = OnDecodeError::parse(v)
+                .unwrap_or_else(|_| panic!("{var} must be abort/skip, got '{v}'"));
+        },
+        apply_cli: |cfg, args| {
+            let v = args.choice(
+                "on-decode-error",
+                &["abort", "skip"],
+                cfg.tuning.on_decode_error.as_str(),
+            );
+            cfg.tuning.on_decode_error =
+                OnDecodeError::parse(v).expect("choice() already validated the value");
+        },
+    },
+    Knob {
+        flag: "chaos",
+        env: Some("DELTAMASK_CHAOS"),
+        help: "deterministic fault-injection spec, e.g. seed=7,drop=0.1,straggle=0.2",
+        apply_env: |cfg, var, v| {
+            if v.is_empty() {
+                return;
+            }
+            FaultPlan::parse(v)
+                .unwrap_or_else(|e| panic!("{var} is not a valid fault spec: {e}"));
+            cfg.chaos = v.to_string();
+        },
+        apply_cli: |cfg, args| {
+            if let Some(v) = args.get("chaos") {
+                cfg.chaos = v.to_string();
+            }
+            // Validate the final spelling (CLI or env) at startup — a
+            // typo'd spec must fail loudly, not silently run a different
+            // scenario than asked.
+            if !cfg.chaos.is_empty() {
+                if let Err(e) = FaultPlan::parse(&cfg.chaos) {
+                    panic!("--chaos spec invalid: {e}");
+                }
+            }
+        },
+    },
+    Knob {
+        flag: "transport",
+        env: Some("DELTAMASK_TRANSPORT"),
+        help: "uplink: channel (in-process), tcp or uds (framed sockets)",
+        apply_env: |cfg, var, v| {
+            if v.is_empty() {
+                return;
+            }
+            cfg.transport = TransportKind::parse(v)
+                .unwrap_or_else(|| panic!("{var} must be channel/tcp/uds, got '{v}'"));
+        },
+        apply_cli: |cfg, args| {
+            let v = args.choice(
+                "transport",
+                &["channel", "tcp", "uds"],
+                cfg.transport.as_str(),
+            );
+            cfg.transport =
+                TransportKind::parse(v).expect("choice() already validated the value");
+        },
+    },
+];
+
+/// Apply every set environment spelling to `cfg`, in table order.
+pub fn apply_env(cfg: &mut ExperimentConfig) {
+    apply_env_with(cfg, |var| std::env::var(var).ok());
+}
+
+/// [`apply_env`] against an arbitrary variable source — the parity tests
+/// drive the table through this without mutating process environment
+/// (env mutation is unsound under the parallel test harness).
+pub fn apply_env_with(cfg: &mut ExperimentConfig, lookup: impl Fn(&str) -> Option<String>) {
+    for k in KNOBS {
+        if let Some(var) = k.env {
+            if let Some(v) = lookup(var) {
+                (k.apply_env)(cfg, var, &v);
+            }
+        }
+    }
+}
+
+/// Apply every present CLI spelling to `cfg`, in table order. Absent
+/// flags leave the env/default values alone.
+pub fn apply_cli(cfg: &mut ExperimentConfig, args: &Args) {
+    for k in KNOBS {
+        (k.apply_cli)(cfg, args);
+    }
+}
+
+/// A base config with exactly ONE env spelling resolved — the legacy
+/// `fl::*_from_env` helpers read their field off this, so each keeps its
+/// historical "just this variable" semantics while the parsing lives in
+/// the table.
+pub(crate) fn env_only(var: &str) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::base();
+    if let Some(k) = KNOBS.iter().find(|k| k.env == Some(var)) {
+        if let Ok(v) = std::env::var(var) {
+            (k.apply_env)(&mut cfg, var, &v);
+        }
+    } else {
+        unreachable!("no knob reads {var}");
+    }
+    cfg
+}
+
+/// Shared parse-or-panic policy for the integer count knobs: a set but
+/// malformed value must fail loudly, even when empty (these two gate CI's
+/// sharded re-runs and predate the matrix's empty-means-unset convention).
+fn parse_count(var: &str, v: &str) -> usize {
+    v.parse()
+        .unwrap_or_else(|_| panic!("{var} must be a non-negative integer, got '{v}'"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeMap;
+
+    fn cli(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    fn with_env(pairs: &[(&str, &str)]) -> ExperimentConfig {
+        let map: BTreeMap<String, String> = pairs
+            .iter()
+            .map(|(k, v)| (k.to_string(), v.to_string()))
+            .collect();
+        let mut cfg = ExperimentConfig::base();
+        apply_env_with(&mut cfg, |var| map.get(var).cloned());
+        cfg
+    }
+
+    /// Every spelling the pre-table code exposed must still exist, under
+    /// the same name, resolving to the same field.
+    #[test]
+    fn table_pins_every_legacy_spelling() {
+        let flags: Vec<&str> = KNOBS.iter().map(|k| k.flag).collect();
+        for legacy in [
+            "method",
+            "pipeline",
+            "decode-workers",
+            "agg-shards",
+            "persistent-pipeline",
+            "quorum",
+            "round-deadline-ms",
+            "on-decode-error",
+            "chaos",
+            "transport",
+        ] {
+            assert!(flags.contains(&legacy), "flag --{legacy} retired");
+        }
+        let envs: Vec<&str> = KNOBS.iter().filter_map(|k| k.env).collect();
+        for legacy in [
+            "DELTAMASK_METHOD",
+            "DELTAMASK_DECODE_WORKERS",
+            "DELTAMASK_AGG_SHARDS",
+            "DELTAMASK_PERSISTENT_PIPELINE",
+            "DELTAMASK_QUORUM",
+            "DELTAMASK_ROUND_DEADLINE_MS",
+            "DELTAMASK_ON_DECODE_ERROR",
+            "DELTAMASK_CHAOS",
+            "DELTAMASK_TRANSPORT",
+        ] {
+            assert!(envs.contains(&legacy), "env {legacy} retired");
+        }
+        // The fabric addition rides the same table.
+        assert!(flags.contains(&"shard-place"));
+        assert!(envs.contains(&"DELTAMASK_SHARD_PLACE"));
+        // No duplicate spellings.
+        let mut f = flags.clone();
+        f.sort_unstable();
+        f.dedup();
+        assert_eq!(f.len(), KNOBS.len(), "duplicate flag spelling");
+        for k in KNOBS {
+            assert!(!k.help.is_empty(), "--{} has no help line", k.flag);
+        }
+    }
+
+    /// Env parity: each `DELTAMASK_*` value resolves to the exact field
+    /// value the pre-table `*_from_env` readers produced.
+    #[test]
+    fn env_spellings_parse_to_the_legacy_values() {
+        let cfg = with_env(&[
+            ("DELTAMASK_METHOD", "deltamask-pco"),
+            ("DELTAMASK_DECODE_WORKERS", "4"),
+            ("DELTAMASK_AGG_SHARDS", "3"),
+            ("DELTAMASK_PERSISTENT_PIPELINE", "1"),
+            ("DELTAMASK_QUORUM", "0.6"),
+            ("DELTAMASK_ROUND_DEADLINE_MS", "5000"),
+            ("DELTAMASK_ON_DECODE_ERROR", "skip"),
+            ("DELTAMASK_CHAOS", "seed=7,drop=0.1"),
+            ("DELTAMASK_TRANSPORT", "uds"),
+            ("DELTAMASK_SHARD_PLACE", "local,uds:/tmp/w1.sock"),
+        ]);
+        assert_eq!(cfg.method, "deltamask-pco");
+        assert_eq!(cfg.tuning.decode_workers, 4);
+        assert_eq!(cfg.tuning.agg_shards, 3);
+        assert!(cfg.tuning.persistent_pipeline);
+        assert_eq!(cfg.tuning.quorum, 0.6);
+        assert_eq!(cfg.tuning.round_deadline_ms, 5000);
+        assert_eq!(cfg.tuning.on_decode_error, OnDecodeError::Skip);
+        assert_eq!(cfg.chaos, "seed=7,drop=0.1");
+        assert_eq!(cfg.transport, TransportKind::Uds);
+        assert_eq!(cfg.tuning.shard_place, "local,uds:/tmp/w1.sock");
+    }
+
+    /// The CI matrix convention: every key present, `""` meaning "not
+    /// exercised here" — empty values leave the defaults untouched for
+    /// every knob that predates the convention's adoption.
+    #[test]
+    fn empty_env_values_mean_unset() {
+        let cfg = with_env(&[
+            ("DELTAMASK_METHOD", ""),
+            ("DELTAMASK_PIPELINE", ""),
+            ("DELTAMASK_QUORUM", ""),
+            ("DELTAMASK_ROUND_DEADLINE_MS", ""),
+            ("DELTAMASK_ON_DECODE_ERROR", ""),
+            ("DELTAMASK_CHAOS", ""),
+            ("DELTAMASK_TRANSPORT", ""),
+            ("DELTAMASK_SHARD_PLACE", ""),
+        ]);
+        assert_eq!(cfg.method, "deltamask");
+        assert_eq!(cfg.tuning.pipeline, PipelineMode::Streaming);
+        assert_eq!(cfg.tuning.quorum, 1.0);
+        assert_eq!(cfg.tuning.round_deadline_ms, 0);
+        assert_eq!(cfg.tuning.on_decode_error, OnDecodeError::Abort);
+        assert_eq!(cfg.chaos, "");
+        assert_eq!(cfg.transport, TransportKind::Channel);
+        assert_eq!(cfg.tuning.shard_place, "");
+    }
+
+    /// Set-but-malformed env values fail loudly with the historical
+    /// messages (spelling + offending value), never silently default.
+    #[test]
+    fn malformed_env_values_panic_with_the_legacy_messages() {
+        let cases: &[(&str, &str, &str)] = &[
+            (
+                "DELTAMASK_DECODE_WORKERS",
+                "two",
+                "DELTAMASK_DECODE_WORKERS must be a non-negative integer, got 'two'",
+            ),
+            (
+                "DELTAMASK_AGG_SHARDS",
+                "",
+                "DELTAMASK_AGG_SHARDS must be a non-negative integer, got ''",
+            ),
+            (
+                "DELTAMASK_PERSISTENT_PIPELINE",
+                "yes",
+                "DELTAMASK_PERSISTENT_PIPELINE must be 0/1/true/false, got 'yes'",
+            ),
+            (
+                "DELTAMASK_QUORUM",
+                "1.5",
+                "DELTAMASK_QUORUM must be in (0, 1], got '1.5'",
+            ),
+            (
+                "DELTAMASK_QUORUM",
+                "lots",
+                "DELTAMASK_QUORUM must be a number, got 'lots'",
+            ),
+            (
+                "DELTAMASK_ROUND_DEADLINE_MS",
+                "-3",
+                "DELTAMASK_ROUND_DEADLINE_MS must be a non-negative integer, got '-3'",
+            ),
+            (
+                "DELTAMASK_ON_DECODE_ERROR",
+                "retry",
+                "DELTAMASK_ON_DECODE_ERROR must be abort/skip, got 'retry'",
+            ),
+            (
+                "DELTAMASK_TRANSPORT",
+                "carrier-pigeon",
+                "DELTAMASK_TRANSPORT must be channel/tcp/uds, got 'carrier-pigeon'",
+            ),
+            (
+                "DELTAMASK_PIPELINE",
+                "turbo",
+                "DELTAMASK_PIPELINE must be batch/streaming, got 'turbo'",
+            ),
+        ];
+        for (var, val, want) in cases {
+            let got = std::panic::catch_unwind(|| with_env(&[(var, val)]))
+                .expect_err("malformed value must panic");
+            let msg = got
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| got.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_default();
+            assert!(msg.contains(want), "{var}='{val}': got panic '{msg}'");
+        }
+        // Structured specs validate eagerly too.
+        assert!(std::panic::catch_unwind(|| with_env(&[("DELTAMASK_CHAOS", "drop=lots")]))
+            .is_err());
+        assert!(std::panic::catch_unwind(|| {
+            with_env(&[("DELTAMASK_SHARD_PLACE", "bogus")])
+        })
+        .is_err());
+    }
+
+    /// CLI parity: each flag spelling resolves to the exact field value
+    /// `parse_cfg`'s hand-rolled `args.*` calls produced, and absent
+    /// flags leave env-resolved values alone.
+    #[test]
+    fn cli_spellings_parse_to_the_legacy_values() {
+        let mut cfg = ExperimentConfig::base();
+        apply_cli(
+            &mut cfg,
+            &cli(
+                "--method fedpm --pipeline batch --decode-workers 8 --agg-shards 4 \
+                 --persistent-pipeline --quorum 0.8 --round-deadline-ms 250 \
+                 --on-decode-error skip --chaos seed=3,dup=0.2 --transport tcp \
+                 --shard-place local,local",
+            ),
+        );
+        assert_eq!(cfg.method, "fedpm");
+        assert_eq!(cfg.tuning.pipeline, PipelineMode::Batch);
+        assert_eq!(cfg.tuning.decode_workers, 8);
+        assert_eq!(cfg.tuning.agg_shards, 4);
+        assert!(cfg.tuning.persistent_pipeline);
+        assert_eq!(cfg.tuning.quorum, 0.8);
+        assert_eq!(cfg.tuning.round_deadline_ms, 250);
+        assert_eq!(cfg.tuning.on_decode_error, OnDecodeError::Skip);
+        assert_eq!(cfg.chaos, "seed=3,dup=0.2");
+        assert_eq!(cfg.transport, TransportKind::Tcp);
+        assert_eq!(cfg.tuning.shard_place, "local,local");
+
+        // Absent flags: everything stays at the env/default layer.
+        let mut cfg = with_env(&[("DELTAMASK_QUORUM", "0.7"), ("DELTAMASK_TRANSPORT", "uds")]);
+        apply_cli(&mut cfg, &cli(""));
+        assert_eq!(cfg.tuning.quorum, 0.7);
+        assert_eq!(cfg.transport, TransportKind::Uds);
+        assert_eq!(cfg.tuning.decode_workers, 1);
+        assert_eq!(cfg.tuning.pipeline, PipelineMode::Streaming);
+        assert!(!cfg.tuning.persistent_pipeline);
+
+        // CLI wins over env, knob by knob (the legacy resolution order).
+        let mut cfg = with_env(&[
+            ("DELTAMASK_DECODE_WORKERS", "2"),
+            ("DELTAMASK_AGG_SHARDS", "2"),
+        ]);
+        apply_cli(&mut cfg, &cli("--decode-workers 6"));
+        assert_eq!(cfg.tuning.decode_workers, 6);
+        assert_eq!(cfg.tuning.agg_shards, 2);
+    }
+
+    #[test]
+    fn malformed_cli_values_panic_with_the_legacy_messages() {
+        let cases: &[(&str, &str)] = &[
+            ("--decode-workers two", "--decode-workers must be an integer"),
+            ("--quorum 0", "--quorum must be in (0, 1]"),
+            ("--pipeline turbo", "--pipeline must be one of"),
+            ("--on-decode-error retry", "--on-decode-error must be one of"),
+            ("--transport pigeon", "--transport must be one of"),
+            ("--chaos drop=lots", "--chaos spec invalid"),
+            ("--shard-place bogus", "--shard-place spec invalid"),
+        ];
+        for (argv, want) in cases {
+            let args = cli(argv);
+            let got = std::panic::catch_unwind(|| {
+                let mut cfg = ExperimentConfig::base();
+                apply_cli(&mut cfg, &args);
+            })
+            .expect_err("malformed value must panic");
+            let msg = got
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| got.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_default();
+            assert!(msg.contains(want), "{argv}: got panic '{msg}'");
+        }
+    }
+
+    /// The `ServerTuning` group assembles the coordinator types the
+    /// runner used to build by hand.
+    #[test]
+    fn server_tuning_assembles_drain_config_and_policy() {
+        let mut cfg = ExperimentConfig::base();
+        apply_cli(
+            &mut cfg,
+            &cli("--pipeline batch --decode-workers 3 --agg-shards 2 --quorum 0.5 --round-deadline-ms 100 --on-decode-error skip"),
+        );
+        let dc = cfg.tuning.to_drain_config();
+        assert_eq!(dc.mode, PipelineMode::Batch);
+        assert_eq!(dc.workers, 3);
+        assert_eq!(dc.shards, 2);
+        assert_eq!(dc.policy.quorum, 0.5);
+        assert_eq!(dc.policy.deadline_ms, 100);
+        assert_eq!(dc.policy.on_decode_error, OnDecodeError::Skip);
+        let p = cfg.tuning.to_drain_policy();
+        assert_eq!(p.quorum, 0.5);
+        assert_eq!(p.deadline_ms, 100);
+
+        cfg.tuning.shard_place = "local,uds:/tmp/w.sock".into();
+        let placement = cfg.tuning.shard_placement().unwrap();
+        assert_eq!(placement.len(), 2);
+        assert!(!placement.is_all_local());
+        assert!(ExperimentConfig::base()
+            .tuning
+            .shard_placement()
+            .unwrap()
+            .is_all_local());
+    }
+}

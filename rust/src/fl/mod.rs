@@ -15,9 +15,18 @@
 //! * [`runner::Runner`] (this layer) owns model/data/session state, wires
 //!   the pieces together per [`ExperimentConfig`], and runs the
 //!   weight-space baselines.
+//!
+//! Operator knobs live in ONE declarative table ([`knobs`]): each entry
+//! pairs a CLI flag with its `DELTAMASK_*` environment spelling and the
+//! `ExperimentConfig` field it writes, so the flag/env/field triplication
+//! the CLI, tests and CI matrix share cannot drift. The server-side
+//! subset (pipeline/workers/shards/placement/quorum/deadline/decode-error)
+//! is grouped into the nested [`ServerTuning`] struct, which assembles the
+//! coordinator's `DrainConfig`/`DrainPolicy`/`ShardPlacement` directly.
 
 pub mod client;
 pub mod data;
+pub mod knobs;
 pub mod metrics;
 pub mod remote;
 pub mod runner;
@@ -49,6 +58,112 @@ pub enum BackendKind {
     Native,
 }
 
+/// The server-side scaling and completion knobs, grouped: how a round's
+/// drain schedules decode/absorb work and when it declares the round done.
+/// Every knob here is scheduling/fault policy only — **bitwise identical
+/// trajectories at any setting** (the drains guarantee it; the quorum
+/// knobs change outcomes only when faults actually remove records).
+/// Assembled from the CLI/env by the [`knobs`] table; turned into the
+/// coordinator's types via [`ServerTuning::to_drain_config`] /
+/// [`ServerTuning::to_drain_policy`] / [`ServerTuning::shard_placement`].
+#[derive(Clone, Debug)]
+pub struct ServerTuning {
+    /// Server-side decode→aggregate scheduling: streaming (per-arrival,
+    /// O(d) server memory — the default) or batch (the old full-round
+    /// barrier, kept for A/B comparisons); see `coordinator::PipelineMode`.
+    pub pipeline: crate::coordinator::PipelineMode,
+    /// Server decode worker threads (`--decode-workers N`): 1 decodes
+    /// inline on the draining thread (the serial reference path), N > 1
+    /// shards the Eq. 5 decode sweep across N scoped workers, 0 uses one
+    /// worker per available core; see `coordinator::DrainConfig`.
+    pub decode_workers: usize,
+    /// Server aggregation shards (`--agg-shards N`): 1 keeps the single
+    /// absorb lane (the reference path), N > 1 partitions the parameter
+    /// space into N contiguous dimension shards — each with its own
+    /// pseudo-count slice, participation counters and scratch pool —
+    /// absorbed on N parallel lanes (`coordinator::ShardedAggregator`),
+    /// 0 uses one shard per available core. The knob surface is
+    /// documented in `docs/SCALING.md`.
+    pub agg_shards: usize,
+    /// Per-shard lane placement (`--shard-place SPEC`, env
+    /// `DELTAMASK_SHARD_PLACE`): a comma-separated site per shard —
+    /// `local` (in-process thread lane), `uds:<path>` or
+    /// `tcp:<host:port>` (a `deltamask shard-worker` process reached
+    /// over the DMW1 wire). Empty (the default) runs every shard local.
+    /// Parsed by `coordinator::ShardPlacement`; remote lanes are
+    /// trajectory-identical to local ones.
+    pub shard_place: String,
+    /// Round-resident drain pipeline (`--persistent-pipeline`, env
+    /// `DELTAMASK_PERSISTENT_PIPELINE=1`): spawn the decode workers and
+    /// the dimension-shard absorb lanes **once per experiment** and park
+    /// them between rounds (`coordinator::DrainPipeline`).
+    pub persistent_pipeline: bool,
+    /// Round-completion quorum (`--quorum Q`, env `DELTAMASK_QUORUM`) as a
+    /// fraction of the planned cohort in (0, 1]. The drain never exits
+    /// early on quorum — it waits for the full cohort, the uplink closing
+    /// or the deadline — but once the round ends, `ceil(Q·K)` absorbed
+    /// updates suffice to finish **degraded** over the survivors instead
+    /// of aborting. 1.0 (the default) is the strict all-K behaviour.
+    pub quorum: f64,
+    /// Per-round drain deadline in milliseconds (`--round-deadline-ms`,
+    /// env `DELTAMASK_ROUND_DEADLINE_MS`); 0 (the default) waits forever.
+    /// On expiry the round finishes if quorum is met, errors otherwise —
+    /// see `coordinator::DrainPolicy`.
+    pub round_deadline_ms: u64,
+    /// What an undecodable record does to the round
+    /// (`--on-decode-error {abort,skip}`, env `DELTAMASK_ON_DECODE_ERROR`):
+    /// `abort` (the default) fails the round on the first decode error;
+    /// `skip` counts the record as corrupt and lets it fall against quorum.
+    pub on_decode_error: crate::coordinator::OnDecodeError,
+}
+
+impl Default for ServerTuning {
+    fn default() -> Self {
+        Self {
+            pipeline: crate::coordinator::PipelineMode::default(),
+            decode_workers: 1,
+            agg_shards: 1,
+            shard_place: String::new(),
+            persistent_pipeline: false,
+            quorum: 1.0,
+            round_deadline_ms: 0,
+            on_decode_error: crate::coordinator::OnDecodeError::default(),
+        }
+    }
+}
+
+impl ServerTuning {
+    /// The round-completion policy the drain runs under, assembled from
+    /// the three fault-tolerance knobs.
+    pub fn to_drain_policy(&self) -> crate::coordinator::DrainPolicy {
+        crate::coordinator::DrainPolicy {
+            quorum: self.quorum,
+            deadline_ms: self.round_deadline_ms,
+            on_decode_error: self.on_decode_error,
+        }
+    }
+
+    /// The full drain configuration (mode × decode workers × aggregation
+    /// shards, with the completion policy attached) — the single value the
+    /// runner hands to `coordinator::drain_round` / `DrainPipeline`.
+    pub fn to_drain_config(&self) -> crate::coordinator::DrainConfig {
+        crate::coordinator::DrainConfig::sharded(
+            self.pipeline,
+            self.decode_workers,
+            self.agg_shards,
+        )
+        .with_policy(self.to_drain_policy())
+    }
+
+    /// The parsed per-shard lane placement. An empty spec is the
+    /// all-local default; a malformed one is a config error (the knob
+    /// table validates eagerly, so this only fails for specs assembled
+    /// programmatically).
+    pub fn shard_placement(&self) -> Result<crate::coordinator::ShardPlacement> {
+        crate::coordinator::ShardPlacement::parse(&self.shard_place)
+    }
+}
+
 /// Full experiment configuration (defaults follow the paper App. C.1).
 #[derive(Clone, Debug)]
 pub struct ExperimentConfig {
@@ -78,51 +193,8 @@ pub struct ExperimentConfig {
     /// Override the architecture geometry (the benches shrink F to keep the
     /// CPU sweeps tractable; bpp math is scale-relative).
     pub arch_override: Option<ArchConfig>,
-    /// Server-side decode→aggregate scheduling: streaming (per-arrival,
-    /// O(d) server memory — the default) or batch (the old full-round
-    /// barrier, kept for A/B comparisons). Both produce bitwise-identical
-    /// trajectories; see `coordinator::PipelineMode`.
-    pub pipeline: crate::coordinator::PipelineMode,
-    /// Server decode worker threads (`--decode-workers N`): 1 decodes
-    /// inline on the draining thread (the serial reference path), N > 1
-    /// shards the Eq. 5 decode sweep across N scoped workers, 0 uses one
-    /// worker per available core. Bitwise identical at any setting; see
-    /// `coordinator::DrainConfig`.
-    pub decode_workers: usize,
-    /// Server aggregation shards (`--agg-shards N`): 1 keeps the single
-    /// absorb lane (the reference path), N > 1 partitions the parameter
-    /// space into N contiguous dimension shards — each with its own
-    /// pseudo-count slice, participation counters and scratch pool —
-    /// absorbed on N parallel lanes (`coordinator::ShardedAggregator`),
-    /// 0 uses one shard per available core. Bitwise identical at any
-    /// setting; the knob surface is documented in `docs/SCALING.md`.
-    pub agg_shards: usize,
-    /// Round-resident drain pipeline (`--persistent-pipeline`, env
-    /// `DELTAMASK_PERSISTENT_PIPELINE=1`): spawn the decode workers and
-    /// the dimension-shard absorb lanes **once per experiment** and park
-    /// them between rounds, reusing their scratch pools and
-    /// aggregation-state slices across the whole trajectory — thread-spawn
-    /// and decode-buffer allocation become O(1) per experiment instead of
-    /// O(rounds). Scheduling only: bitwise identical to the per-round
-    /// path at every knob setting (`coordinator::DrainPipeline`).
-    pub persistent_pipeline: bool,
-    /// Round-completion quorum (`--quorum Q`, env `DELTAMASK_QUORUM`) as a
-    /// fraction of the planned cohort in (0, 1]. The drain never exits
-    /// early on quorum — it waits for the full cohort, the uplink closing
-    /// or the deadline — but once the round ends, `ceil(Q·K)` absorbed
-    /// updates suffice to finish **degraded** over the survivors instead
-    /// of aborting. 1.0 (the default) is the strict all-K behaviour.
-    pub quorum: f64,
-    /// Per-round drain deadline in milliseconds (`--round-deadline-ms`,
-    /// env `DELTAMASK_ROUND_DEADLINE_MS`); 0 (the default) waits forever.
-    /// On expiry the round finishes if quorum is met, errors otherwise —
-    /// see `coordinator::DrainPolicy`.
-    pub round_deadline_ms: u64,
-    /// What an undecodable record does to the round
-    /// (`--on-decode-error {abort,skip}`, env `DELTAMASK_ON_DECODE_ERROR`):
-    /// `abort` (the default) fails the round on the first decode error;
-    /// `skip` counts the record as corrupt and lets it fall against quorum.
-    pub on_decode_error: crate::coordinator::OnDecodeError,
+    /// The server-side scaling/completion knob group — see [`ServerTuning`].
+    pub tuning: ServerTuning,
     /// Deterministic chaos-injection spec (`--chaos SPEC`, env
     /// `DELTAMASK_CHAOS`), e.g. `"seed=7,drop=0.1,straggle=0.2"` — parsed
     /// by `coordinator::FaultPlan::parse`. Empty (the default) runs the
@@ -147,21 +219,29 @@ pub struct ExperimentConfig {
 ///
 /// Panics if the variable is set but not a non-negative integer — a
 /// malformed value silently falling back to the serial path would let the
-/// CI sharded re-run pass while exercising nothing.
+/// CI sharded re-run pass while exercising nothing. (Parsing and panic
+/// message live in the [`knobs`] table; this is a convenience reader for
+/// tests and examples that assemble configs field-by-field.)
 pub fn decode_workers_from_env() -> usize {
-    knob_from_env("DELTAMASK_DECODE_WORKERS")
+    knobs::env_only("DELTAMASK_DECODE_WORKERS").tuning.decode_workers
 }
 
 /// Default aggregation-shard count: `$DELTAMASK_AGG_SHARDS` when set
 /// (CI's tier-1 job re-runs the `fl_integration` suite with `=4` so the
 /// dimension-sharded absorb path is exercised end-to-end), else 1 (one
-/// absorb lane).
-///
-/// Panics if the variable is set but not a non-negative integer — a
-/// malformed value silently falling back to the single-lane path would
-/// let the CI sharded re-run pass while exercising nothing.
+/// absorb lane). Same parse-or-panic policy as
+/// [`decode_workers_from_env`], via the [`knobs`] table.
 pub fn agg_shards_from_env() -> usize {
-    knob_from_env("DELTAMASK_AGG_SHARDS")
+    knobs::env_only("DELTAMASK_AGG_SHARDS").tuning.agg_shards
+}
+
+/// Default shard-lane placement: `$DELTAMASK_SHARD_PLACE` when set (CI's
+/// knob-matrix `remote-shards` entry points the suites at standing
+/// `deltamask shard-worker` processes over UDS), else empty (every lane
+/// in-process). A set-but-malformed spec panics via the [`knobs`] table —
+/// the same fail-loudly policy as the other CI-gating knobs.
+pub fn shard_place_from_env() -> String {
+    knobs::env_only("DELTAMASK_SHARD_PLACE").tuning.shard_place
 }
 
 /// Default update-codec method: `$DELTAMASK_METHOD` when set and
@@ -174,21 +254,7 @@ pub fn agg_shards_from_env() -> usize {
 /// resolve — the same can't-silently-exercise-nothing policy as the
 /// integer knobs.
 pub fn method_from_env() -> String {
-    match std::env::var("DELTAMASK_METHOD") {
-        Ok(v) if !v.is_empty() => v,
-        _ => "deltamask".into(),
-    }
-}
-
-/// Shared parse-or-panic policy for the two CI-gating env knobs: a set
-/// but malformed value must fail loudly, an unset one means 1 (serial).
-fn knob_from_env(var: &str) -> usize {
-    match std::env::var(var) {
-        Ok(v) => v
-            .parse()
-            .unwrap_or_else(|_| panic!("{var} must be a non-negative integer, got '{v}'")),
-        Err(_) => 1,
-    }
+    knobs::env_only("DELTAMASK_METHOD").method
 }
 
 /// Default for the round-resident drain pipeline:
@@ -196,105 +262,72 @@ fn knob_from_env(var: &str) -> usize {
 /// the `fl_integration` suite with `=1` combined with the sharding knobs,
 /// so the resident path is exercised end-to-end), else off.
 ///
-/// Panics if the variable is set but not one of `0/1/true/false` — the
-/// same fail-loudly policy as the other CI-gating knobs.
+/// Panics (via the [`knobs`] table) if the variable is set but not one of
+/// `0/1/true/false` — the same fail-loudly policy as the other CI-gating
+/// knobs.
 pub fn persistent_pipeline_from_env() -> bool {
-    match std::env::var("DELTAMASK_PERSISTENT_PIPELINE") {
-        Ok(v) => match v.as_str() {
-            "1" | "true" => true,
-            "0" | "false" => false,
-            _ => panic!("DELTAMASK_PERSISTENT_PIPELINE must be 0/1/true/false, got '{v}'"),
-        },
-        Err(_) => false,
-    }
+    knobs::env_only("DELTAMASK_PERSISTENT_PIPELINE").tuning.persistent_pipeline
 }
 
 /// Default round-completion quorum: `$DELTAMASK_QUORUM` when set (CI's
 /// knob-matrix `churn` entry runs the suite with `<1.0` plus a seeded
 /// `DELTAMASK_CHAOS` spec so degraded completion is exercised end-to-end),
-/// else 1.0 (strict all-K).
-///
-/// Panics if the variable is set but not a number in (0, 1] — a malformed
-/// value silently falling back to strict would let the CI churn entry pass
-/// while exercising nothing.
+/// else 1.0 (strict all-K). Empty means unset (the CI matrix sets every
+/// knob key for every entry, with "" for the knobs an entry doesn't
+/// exercise); a set-but-malformed or out-of-(0, 1] value panics via the
+/// [`knobs`] table.
 pub fn quorum_from_env() -> f64 {
-    match std::env::var("DELTAMASK_QUORUM") {
-        // Empty means unset (the CI matrix sets every knob key for every
-        // entry, with "" for the knobs an entry doesn't exercise).
-        Ok(v) if v.is_empty() => 1.0,
-        Ok(v) => {
-            let q: f64 = v
-                .parse()
-                .unwrap_or_else(|_| panic!("DELTAMASK_QUORUM must be a number, got '{v}'"));
-            assert!(
-                q > 0.0 && q <= 1.0,
-                "DELTAMASK_QUORUM must be in (0, 1], got '{v}'"
-            );
-            q
-        }
-        Err(_) => 1.0,
-    }
+    knobs::env_only("DELTAMASK_QUORUM").tuning.quorum
 }
 
 /// Default per-round drain deadline: `$DELTAMASK_ROUND_DEADLINE_MS` when
-/// set, else 0 (wait forever). Panics on a set-but-malformed value — the
-/// same fail-loudly policy as the other CI-gating knobs.
+/// set, else 0 (wait forever). Panics on a set-but-malformed value via
+/// the [`knobs`] table.
 pub fn round_deadline_ms_from_env() -> u64 {
-    match std::env::var("DELTAMASK_ROUND_DEADLINE_MS") {
-        Ok(v) if v.is_empty() => 0,
-        Ok(v) => v.parse().unwrap_or_else(|_| {
-            panic!("DELTAMASK_ROUND_DEADLINE_MS must be a non-negative integer, got '{v}'")
-        }),
-        Err(_) => 0,
-    }
+    knobs::env_only("DELTAMASK_ROUND_DEADLINE_MS").tuning.round_deadline_ms
 }
 
 /// Default decode-error policy: `$DELTAMASK_ON_DECODE_ERROR` when set
-/// (`abort` or `skip`), else abort. Panics on anything else.
+/// (`abort` or `skip`), else abort. Panics on anything else via the
+/// [`knobs`] table.
 pub fn on_decode_error_from_env() -> crate::coordinator::OnDecodeError {
-    match std::env::var("DELTAMASK_ON_DECODE_ERROR") {
-        Ok(v) if v.is_empty() => crate::coordinator::OnDecodeError::default(),
-        Ok(v) => crate::coordinator::OnDecodeError::parse(&v)
-            .unwrap_or_else(|_| panic!("DELTAMASK_ON_DECODE_ERROR must be abort/skip, got '{v}'")),
-        Err(_) => crate::coordinator::OnDecodeError::default(),
-    }
+    knobs::env_only("DELTAMASK_ON_DECODE_ERROR").tuning.on_decode_error
 }
 
 /// Default uplink transport: `$DELTAMASK_TRANSPORT` when set (CI's
 /// knob-matrix `uds-transport` entry runs the `fl_integration` and
 /// `churn` suites with `=uds` so every update crosses a real socket),
 /// else the in-process channel. Empty means unset; anything that is not
-/// `channel`/`tcp`/`uds` panics — the same fail-loudly policy as the
-/// other CI-gating knobs.
+/// `channel`/`tcp`/`uds` panics via the [`knobs`] table.
 pub fn transport_from_env() -> crate::coordinator::TransportKind {
-    match std::env::var("DELTAMASK_TRANSPORT") {
-        Ok(v) if v.is_empty() => crate::coordinator::TransportKind::default(),
-        Ok(v) => crate::coordinator::TransportKind::parse(&v).unwrap_or_else(|| {
-            panic!("DELTAMASK_TRANSPORT must be channel/tcp/uds, got '{v}'")
-        }),
-        Err(_) => crate::coordinator::TransportKind::default(),
-    }
+    knobs::env_only("DELTAMASK_TRANSPORT").transport
 }
 
 /// Default chaos spec: `$DELTAMASK_CHAOS` when set (CI's knob-matrix
 /// `churn` entry injects a seeded fault plan under the full scaling
 /// stack), else empty (clean transport). Validated eagerly via
-/// `FaultPlan::parse` so a typo'd spec fails at startup, not as a
-/// mysteriously-clean run.
+/// `FaultPlan::parse` in the [`knobs`] table so a typo'd spec fails at
+/// startup, not as a mysteriously-clean run.
 pub fn chaos_from_env() -> String {
-    match std::env::var("DELTAMASK_CHAOS") {
-        Ok(v) if v.is_empty() => String::new(),
-        Ok(v) => {
-            crate::coordinator::FaultPlan::parse(&v)
-                .unwrap_or_else(|e| panic!("DELTAMASK_CHAOS is not a valid fault spec: {e}"));
-            v
-        }
-        Err(_) => String::new(),
-    }
+    knobs::env_only("DELTAMASK_CHAOS").chaos
 }
 
 impl Default for ExperimentConfig {
+    /// Paper defaults with every `DELTAMASK_*` env knob applied (the CI
+    /// matrix steers the test suites through the env spellings). The
+    /// knob resolution order is: hard default → env → CLI (the CLI layer
+    /// applies `knobs::apply_cli` on top of this).
     fn default() -> Self {
+        let mut cfg = Self::base();
+        knobs::apply_env(&mut cfg);
+        cfg
+    }
+}
+
+impl ExperimentConfig {
+    /// The paper's App. C.1 defaults with **no** environment applied —
+    /// the fixed point the knob table resolves env/CLI spellings against.
+    pub(crate) fn base() -> Self {
         Self {
             dataset: "cifar100".into(),
             arch: "vitb32".into(),
@@ -315,15 +348,9 @@ impl Default for ExperimentConfig {
             lp_rounds: 1,
             theta0: 0.85,
             arch_override: None,
-            pipeline: crate::coordinator::PipelineMode::default(),
-            decode_workers: decode_workers_from_env(),
-            agg_shards: agg_shards_from_env(),
-            persistent_pipeline: persistent_pipeline_from_env(),
-            quorum: quorum_from_env(),
-            round_deadline_ms: round_deadline_ms_from_env(),
-            on_decode_error: on_decode_error_from_env(),
-            chaos: chaos_from_env(),
-            transport: transport_from_env(),
+            tuning: ServerTuning::default(),
+            chaos: String::new(),
+            transport: crate::coordinator::TransportKind::default(),
         }
     }
 }
@@ -359,13 +386,16 @@ impl ExperimentConfig {
         self
     }
 
-    /// The round-completion policy the drain runs under, assembled from
-    /// the three fault-tolerance knobs.
-    pub fn drain_policy(&self) -> crate::coordinator::DrainPolicy {
-        crate::coordinator::DrainPolicy {
-            quorum: self.quorum,
-            deadline_ms: self.round_deadline_ms,
-            on_decode_error: self.on_decode_error,
+    /// The config facts two cooperating processes (serve / client-fleet /
+    /// shard-worker) must agree on for lockstep trajectories, checked in
+    /// every socket handshake. Everything else diverges loudly later via
+    /// the plan/update/split frames themselves.
+    pub fn fingerprint(&self) -> crate::coordinator::ConfigFingerprint {
+        crate::coordinator::ConfigFingerprint {
+            seed: self.seed,
+            n_clients: self.n_clients as u64,
+            rounds: self.rounds as u64,
+            d: self.arch_config().d() as u64,
         }
     }
 

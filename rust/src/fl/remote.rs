@@ -1,6 +1,8 @@
-//! Two-process experiment entry points: `deltamask serve` hosts the
+//! Multi-process experiment entry points: `deltamask serve` hosts the
 //! coordinator half of an experiment on a TCP or Unix-domain socket,
-//! `deltamask client-fleet` connects the training half to it.
+//! `deltamask client-fleet` connects the training half to it, and
+//! `deltamask shard-worker` hosts remote absorb lanes that a coordinator's
+//! `--shard-place` routes dimension shards to.
 //!
 //! Both processes are launched with the **same** `ExperimentConfig`
 //! (dataset, seed, rounds, knobs): data generation, parameter init and
@@ -18,9 +20,10 @@
 use super::{ExperimentConfig, ExperimentResult, Runner};
 use crate::compress::UpdateCodec;
 use crate::coordinator::{
-    ConfigFingerprint, FleetLink, FleetServer, Listener, SocketAddrSpec, SocketConfig,
-    TransportKind,
+    serve_shard_worker, ConfigFingerprint, FleetLink, FleetServer, Listener, SocketAddrSpec,
+    SocketConfig, TransportKind,
 };
+use crate::fl::server::MaskServer;
 use anyhow::{anyhow, bail, Result};
 use std::sync::Arc;
 use std::time::Duration;
@@ -29,16 +32,11 @@ use std::time::Duration;
 /// the serve process still binding its listener.
 const CONNECT_TIMEOUT: Duration = Duration::from_secs(30);
 
-/// The config facts both processes must agree on for lockstep
-/// trajectories (checked at handshake; everything else diverges loudly
-/// later via the plan/update frames themselves).
+/// The config facts every process must agree on for lockstep trajectories
+/// (checked at the fleet and shard-hello handshakes; everything else
+/// diverges loudly later via the plan/update frames themselves).
 fn fingerprint(cfg: &ExperimentConfig) -> ConfigFingerprint {
-    ConfigFingerprint {
-        seed: cfg.seed,
-        n_clients: cfg.n_clients as u64,
-        rounds: cfg.rounds as u64,
-        d: cfg.arch_config().d() as u64,
-    }
+    cfg.fingerprint()
 }
 
 /// Resolve the experiment's update codec. The weight-space baselines
@@ -85,6 +83,28 @@ pub fn serve_experiment(cfg: &ExperimentConfig, listen: &str) -> Result<Experime
         let mut runner = Runner::new(cfg, backend)?;
         runner.serve_codec(codec, &mut fleet)
     });
+    // A UDS listener leaves its socket file behind; reclaim it so reruns
+    // bind cleanly even after an error.
+    if let SocketAddrSpec::Uds(path) = &spec {
+        let _ = std::fs::remove_file(path);
+    }
+    result
+}
+
+/// Host remote absorb lanes: bind `listen` and serve shard-worker
+/// sessions against [`MaskServer`] slices. Each session begins with a
+/// shard-hello carrying the coordinator's config fingerprint (rejected on
+/// mismatch) plus the shard's dimension bounds and serialized aggregation
+/// slice; the worker then drains record splits into it round by round and
+/// returns the refreshed slice at every finish/abort. With `linger` the
+/// worker accepts further sessions after a coordinator shuts down instead
+/// of exiting — how the CI matrix shares one worker pair across suites.
+pub fn run_shard_worker(cfg: &ExperimentConfig, listen: &str, linger: bool) -> Result<()> {
+    let spec = addr_spec(cfg, listen)?;
+    let scfg = SocketConfig::from_env();
+    let listener = Listener::bind(&spec)?;
+    eprintln!("[shard-worker] listening on {}", listener.local_spec()?);
+    let result = serve_shard_worker::<MaskServer>(&listener, scfg, fingerprint(cfg), linger);
     // A UDS listener leaves its socket file behind; reclaim it so reruns
     // bind cleanly even after an error.
     if let SocketAddrSpec::Uds(path) = &spec {

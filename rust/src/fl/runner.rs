@@ -14,10 +14,11 @@ use super::server::MaskServer;
 use super::ExperimentConfig;
 use crate::compress::UpdateCodec;
 use crate::coordinator::{
-    drain_round, send_with_retry, ChannelTransport, ChaosTransport, ClientPool, ControlMsg,
-    DrainConfig, DrainPipeline, DrainReport, FaultCounters, FaultPlan, FleetLink, FleetServer,
-    Payload, PoolStats, RoundEngine, RoundPlan, ScratchPool, ShardedAggregator, SocketConfig,
-    SocketHub, Transport, TransportKind, TransportSender, TransportStats, WireMessage,
+    drain_round, send_with_retry, shard_bounds, ChannelTransport, ChaosTransport, ClientPool,
+    ControlMsg, DrainConfig, DrainPipeline, DrainReport, FaultCounters, FaultPlan, FleetLink,
+    FleetServer, Payload, PoolStats, RoundEngine, RoundPlan, ScratchPool, ShardedAggregator,
+    SocketConfig, SocketHub, Transport, TransportKind, TransportSender, TransportStats,
+    WireMessage,
 };
 use crate::model::backend::{Backend, FtState, LpState, ModelParams};
 use crate::model::{accuracy, init_params, sample_mask_seeded};
@@ -245,9 +246,10 @@ impl<'a> Runner<'a> {
     /// Run the full federated experiment with the given codec. Each round
     /// is planned by the [`RoundEngine`]; decoding and aggregation flow
     /// through the transport into the streaming server (or the batch
-    /// barrier when `cfg.pipeline` asks for the A/B reference path).
+    /// barrier when `cfg.tuning.pipeline` asks for the A/B reference
+    /// path).
     ///
-    /// With `cfg.persistent_pipeline` the decode workers, the
+    /// With `cfg.tuning.persistent_pipeline` the decode workers, the
     /// dimension-shard absorb lanes and every buffer pool are **round
     /// resident**: spawned once here, parked between rounds, reused for
     /// the whole trajectory (`coordinator::DrainPipeline` + one resident
@@ -259,9 +261,7 @@ impl<'a> Runner<'a> {
         let head_bits = self.init_head()?;
         let mut rounds = Vec::with_capacity(self.cfg.rounds);
 
-        let drain_cfg =
-            DrainConfig::sharded(self.cfg.pipeline, self.cfg.decode_workers, self.cfg.agg_shards)
-                .with_policy(self.cfg.drain_policy());
+        let drain_cfg = self.cfg.tuning.to_drain_config();
         // Parsed once; `None` (the default) keeps the clean transport with
         // zero wrapping, so chaos-off runs are byte-for-byte the old path.
         let fault_plan = self.cfg.fault_plan()?;
@@ -279,14 +279,17 @@ impl<'a> Runner<'a> {
         };
         let pipeline = self
             .cfg
+            .tuning
             .persistent_pipeline
             .then(|| DrainPipeline::new(drain_cfg));
         // The resident dimension-sharded view: lanes, lane pools and
         // pseudo-count slices live here across rounds; θ_g/s_g sync back
         // to `self.server` after every round for planning and evaluation.
+        // Lanes run in-process or on remote shard workers per
+        // `cfg.tuning.shard_place`.
         let mut resident_view: Option<ShardedAggregator<MaskServer>> = match &pipeline {
             Some(pipe) if pipe.config().shards > 1 => {
-                Some(self.server.shard_view(pipe.config().shards))
+                Some(shard_view_for(&self.server, self.cfg, pipe.config().shards)?)
             }
             _ => None,
         };
@@ -411,6 +414,7 @@ impl<'a> Runner<'a> {
                 &mut *transport,
                 plan,
                 codec,
+                cfg,
                 drain_cfg,
                 pipeline,
                 resident_view,
@@ -475,7 +479,7 @@ impl<'a> Runner<'a> {
             pool_misses: tally.pool_misses,
             train_loss: tally.loss / kf,
             accuracy: acc,
-            pipeline: self.cfg.pipeline.as_str(),
+            pipeline: self.cfg.tuning.pipeline.as_str(),
             faults: tally.faults,
             quorum_met: tally.quorum_met,
             degraded: tally.degraded,
@@ -501,17 +505,16 @@ impl<'a> Runner<'a> {
         let head_bits = self.init_head()?;
         let mut rounds = Vec::with_capacity(self.cfg.rounds);
 
-        let drain_cfg =
-            DrainConfig::sharded(self.cfg.pipeline, self.cfg.decode_workers, self.cfg.agg_shards)
-                .with_policy(self.cfg.drain_policy());
+        let drain_cfg = self.cfg.tuning.to_drain_config();
         let fault_plan = self.cfg.fault_plan()?;
         let pipeline = self
             .cfg
+            .tuning
             .persistent_pipeline
             .then(|| DrainPipeline::new(drain_cfg));
         let mut resident_view: Option<ShardedAggregator<MaskServer>> = match &pipeline {
             Some(pipe) if pipe.config().shards > 1 => {
-                Some(self.server.shard_view(pipe.config().shards))
+                Some(shard_view_for(&self.server, self.cfg, pipe.config().shards)?)
             }
             _ => None,
         };
@@ -539,6 +542,7 @@ impl<'a> Runner<'a> {
                 &mut *transport,
                 &plan,
                 &codec,
+                self.cfg,
                 drain_cfg,
                 pipeline.as_ref(),
                 &mut resident_view,
@@ -794,7 +798,7 @@ impl<'a> Runner<'a> {
                 pool_misses: 0,
                 train_loss: loss / participants.len() as f64,
                 accuracy: acc,
-                pipeline: self.cfg.pipeline.as_str(),
+                pipeline: self.cfg.tuning.pipeline.as_str(),
                 faults: FaultCounters::default(),
                 quorum_met: true,
                 degraded: false,
@@ -897,7 +901,7 @@ impl<'a> Runner<'a> {
                 pool_misses: 0,
                 train_loss: loss / participants.len() as f64,
                 accuracy: acc,
-                pipeline: self.cfg.pipeline.as_str(),
+                pipeline: self.cfg.tuning.pipeline.as_str(),
                 faults: FaultCounters::default(),
                 quorum_met: true,
                 degraded: false,
@@ -917,6 +921,28 @@ struct DrainOutcome {
     lane_pool: PoolStats,
 }
 
+/// Build the dimension-sharded server view per the configured shard
+/// placement: the default all-local placement keeps the zero-handshake
+/// thread-lane path; otherwise each shard's lane runs on the
+/// `cfg.tuning.shard_place` site it was pinned to, remote ones shipping
+/// their slices to `deltamask shard-worker` processes over the DMW1 wire.
+/// The spec is resolved to the view's actual lane count first (missing
+/// sites pad with `local`, extras are dropped), so one ambient
+/// `DELTAMASK_SHARD_PLACE` composes with every `--agg-shards` setting.
+fn shard_view_for(
+    server: &MaskServer,
+    cfg: &ExperimentConfig,
+    shards: usize,
+) -> Result<ShardedAggregator<MaskServer>> {
+    let lanes = shard_bounds(server.theta_g.len(), shards).len();
+    let placement = cfg.tuning.shard_placement()?.resolved(lanes);
+    if placement.is_all_local() {
+        Ok(server.shard_view(shards))
+    } else {
+        server.shard_view_placed(shards, &placement, cfg.fingerprint(), SocketConfig::from_env())
+    }
+}
+
 /// The four-way drain dispatch shared by the in-process round loop and the
 /// two-process serve loop. With `agg_shards > 1` the round drains into a
 /// dimension-sharded view of the server — the resident one (synced back,
@@ -928,6 +954,7 @@ fn drain_dispatch(
     transport: &mut dyn Transport,
     plan: &Arc<RoundPlan>,
     codec: &Arc<dyn UpdateCodec>,
+    cfg: &ExperimentConfig,
     drain_cfg: DrainConfig,
     pipeline: Option<&DrainPipeline>,
     resident_view: &mut Option<ShardedAggregator<MaskServer>>,
@@ -954,7 +981,7 @@ fn drain_dispatch(
                 (report, 1, Vec::new(), PoolStats::default())
             }
             (None, _) if drain_cfg.resolved_shards() > 1 => {
-                let mut view = server.shard_view(drain_cfg.resolved_shards());
+                let mut view = shard_view_for(server, cfg, drain_cfg.resolved_shards())?;
                 let report = drain_round(
                     &mut *transport,
                     plan,

@@ -21,8 +21,11 @@
 //! streaming triplet and is what the `PipelineMode::Batch` A/B path uses.
 
 use crate::compress::{Family, Update};
-use crate::coordinator::{shard_bounds, ShardedAggregator};
+use crate::coordinator::{
+    shard_bounds, ConfigFingerprint, ShardPlacement, ShardedAggregator, SocketConfig, WireSlice,
+};
 use crate::model::theta_from_scores;
+use anyhow::{bail, Result};
 use std::collections::BTreeMap;
 use std::ops::Range;
 
@@ -315,6 +318,33 @@ impl MaskServer {
         )
     }
 
+    /// [`MaskServer::shard_view`] with per-shard lane placement: shards
+    /// whose [`ShardPlacement`] site is `local` run on in-process
+    /// [`ThreadLane`](crate::coordinator::ThreadLane)s exactly as
+    /// `shard_view` builds them; `uds:`/`tcp:` sites ship their slice
+    /// server to a `deltamask shard-worker` process over the DMW1 wire
+    /// and absorb remotely. Trajectories are bitwise identical either way
+    /// (the slice arithmetic is byte-exact across the [`WireSlice`]
+    /// codec). Fails if a remote site is unreachable or the worker's
+    /// config fingerprint disagrees.
+    pub fn shard_view_placed(
+        &self,
+        shards: usize,
+        placement: &ShardPlacement,
+        fingerprint: ConfigFingerprint,
+        cfg: SocketConfig,
+    ) -> Result<ShardedAggregator<MaskServer>> {
+        ShardedAggregator::with_placement(
+            shard_bounds(self.theta_g.len(), shards)
+                .into_iter()
+                .map(|range| (range.clone(), self.shard_slice(range)))
+                .collect(),
+            placement,
+            fingerprint,
+            cfg,
+        )
+    }
+
     /// Refresh the broadcast state (θ_g, s_g) and the round counter from a
     /// **resident** shard view without consuming it — the round-resident
     /// drain pipeline keeps one view (lanes, pools, pseudo-count slices)
@@ -400,6 +430,77 @@ impl crate::coordinator::Aggregator for MaskServer {
 
     fn reclaim_buffer(&mut self) -> Option<Vec<f32>> {
         self.take_spent()
+    }
+}
+
+/// Byte-exact slice-server codec for remote shard lanes: `[d:u64]`
+/// `[round:u64]` `[rho:f64]` `[lambda0:f32]` then the four per-coordinate
+/// f32 arrays (θ_g, s_g, α, β), all little-endian. f32/f64 bits round-trip
+/// verbatim, so shipping a slice to a `shard-worker` and back changes no
+/// arithmetic. In-flight round state never crosses the wire: encode is only
+/// legal between rounds (enforced by the shard protocol's Finish/Abort
+/// barriers), and decode rebuilds with `stream: None` and an empty spent
+/// stash.
+impl WireSlice for MaskServer {
+    fn encode_slice(&self) -> Vec<u8> {
+        let d = self.theta_g.len();
+        let mut out = Vec::with_capacity(8 + 8 + 8 + 4 + 16 * d);
+        out.extend_from_slice(&(d as u64).to_le_bytes());
+        out.extend_from_slice(&(self.round as u64).to_le_bytes());
+        out.extend_from_slice(&self.rho.to_le_bytes());
+        out.extend_from_slice(&self.lambda0.to_le_bytes());
+        for arr in [&self.theta_g, &self.s_g, &self.alpha, &self.beta] {
+            for v in arr.iter() {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        out
+    }
+
+    fn decode_slice(bytes: &[u8]) -> Result<Self> {
+        if bytes.len() < 28 {
+            bail!("shard slice truncated: {} bytes", bytes.len());
+        }
+        let d = u64::from_le_bytes(bytes[0..8].try_into().unwrap());
+        let expect = (d as usize)
+            .checked_mul(16)
+            .and_then(|n| n.checked_add(28));
+        if expect != Some(bytes.len()) {
+            bail!(
+                "shard slice length mismatch: {} bytes for d={d}",
+                bytes.len()
+            );
+        }
+        let d = d as usize;
+        let round = u64::from_le_bytes(bytes[8..16].try_into().unwrap()) as usize;
+        let rho = f64::from_le_bytes(bytes[16..24].try_into().unwrap());
+        let lambda0 = f32::from_le_bytes(bytes[24..28].try_into().unwrap());
+        if !(rho.is_finite() && rho > 0.0) {
+            bail!("shard slice rho {rho} out of range");
+        }
+        let f32s = |arr: usize| -> Vec<f32> {
+            let base = 28 + arr * 4 * d;
+            (0..d)
+                .map(|i| {
+                    f32::from_le_bytes(bytes[base + 4 * i..base + 4 * i + 4].try_into().unwrap())
+                })
+                .collect()
+        };
+        Ok(MaskServer {
+            theta_g: f32s(0),
+            s_g: f32s(1),
+            alpha: f32s(2),
+            beta: f32s(3),
+            lambda0,
+            rho,
+            round,
+            stream: None,
+            spent: Vec::new(),
+        })
+    }
+
+    fn slice_dim(&self) -> usize {
+        self.theta_g.len()
     }
 }
 
@@ -675,6 +776,92 @@ mod tests {
             assert_eq!(mono.s_g, split.s_g, "round {round}");
             assert_eq!(mono.round, split.round, "round {round}");
         }
+    }
+
+    #[test]
+    fn wire_slice_codec_round_trips_mask_server_bitwise() {
+        let d = 37;
+        let mut rng = Xoshiro256pp::new(7);
+        let mut srv = MaskServer::with_theta0(d, 0.25, 0.85);
+        let bit = |rng: &mut Xoshiro256pp| if rng.next_f32() < 0.5 { 1.0 } else { 0.0 };
+        srv.aggregate(&[
+            Update::Mask((0..d).map(|_| bit(&mut rng)).collect()),
+            Update::Mask((0..d).map(|_| bit(&mut rng)).collect()),
+        ]);
+        let bytes = srv.encode_slice();
+        assert_eq!(bytes.len(), 28 + 16 * d);
+        let back = MaskServer::decode_slice(&bytes).unwrap();
+        assert_eq!(back.slice_dim(), d);
+        assert_eq!(back.theta_g, srv.theta_g);
+        assert_eq!(back.s_g, srv.s_g);
+        assert_eq!(back.alpha, srv.alpha);
+        assert_eq!(back.beta, srv.beta);
+        assert_eq!(back.round, srv.round);
+        assert_eq!(back.rho, srv.rho);
+        // Re-encode is byte-identical; the codec is a bijection on states.
+        assert_eq!(back.encode_slice(), bytes);
+        // Decoded servers aggregate bitwise-identically to the original.
+        let next = vec![Update::Mask(vec![1.0; d]), Update::Mask(vec![0.0; d])];
+        let mut a = srv.clone();
+        let mut b = back;
+        a.aggregate(&next);
+        b.aggregate(&next);
+        assert_eq!(a.theta_g, b.theta_g);
+        assert_eq!(a.s_g, b.s_g);
+
+        // Garbage is rejected, never panics.
+        assert!(MaskServer::decode_slice(&[]).is_err());
+        assert!(MaskServer::decode_slice(&bytes[..bytes.len() - 1]).is_err());
+        let mut extra = bytes.clone();
+        extra.push(0);
+        assert!(MaskServer::decode_slice(&extra).is_err());
+        let mut huge = bytes.clone();
+        huge[0..8].copy_from_slice(&u64::MAX.to_le_bytes());
+        assert!(MaskServer::decode_slice(&huge).is_err());
+        let mut bad_rho = bytes;
+        bad_rho[16..24].copy_from_slice(&0.0f64.to_le_bytes());
+        assert!(MaskServer::decode_slice(&bad_rho).is_err());
+    }
+
+    #[test]
+    fn shard_view_placed_all_local_matches_shard_view_bitwise() {
+        use crate::coordinator::Aggregator as _;
+        let d = 65;
+        let mut rng = Xoshiro256pp::new(44);
+        let base = MaskServer::with_theta0(d, 0.5, 0.85);
+        let updates: Vec<Update> = (0..3)
+            .map(|_| {
+                Update::Mask(
+                    (0..d)
+                        .map(|_| if rng.next_f32() < 0.5 { 1.0 } else { 0.0 })
+                        .collect(),
+                )
+            })
+            .collect();
+        let fp = ConfigFingerprint {
+            seed: 1,
+            n_clients: 3,
+            rounds: 1,
+            d: d as u64,
+        };
+        let mut plain = base.clone();
+        let mut placed_srv = base;
+        let mut view = plain.shard_view(2);
+        let mut placed = placed_srv
+            .shard_view_placed(2, &ShardPlacement::default(), fp, SocketConfig::default())
+            .unwrap();
+        for v in [&mut view, &mut placed] {
+            v.begin_round(updates.len());
+            for (slot, u) in updates.iter().enumerate() {
+                v.absorb(slot, u.clone());
+            }
+            v.finish_round();
+        }
+        plain.adopt_shards(view);
+        placed_srv.adopt_shards(placed);
+        assert_eq!(plain.theta_g, placed_srv.theta_g);
+        assert_eq!(plain.s_g, placed_srv.s_g);
+        assert_eq!(plain.round, placed_srv.round);
     }
 
     #[test]

@@ -4,6 +4,7 @@
 //!   train         run one federated experiment (method × dataset × settings)
 //!   serve         host the coordinator half of an experiment on a socket
 //!   client-fleet  connect the training half to a running `serve`
+//!   shard-worker  host remote absorb lanes for a coordinator's --shard-place
 //!   sweep         run a method sweep over datasets and print a paper-style table
 //!   filters       micro-benchmark the probabilistic filters (Table 4 regime)
 //!   info          print manifest / artifact status
@@ -25,87 +26,62 @@
 //!   deltamask serve --transport uds --listen /tmp/dm.sock --rounds 30
 //!   deltamask client-fleet --transport uds --connect /tmp/dm.sock --rounds 30
 //!       (two OS processes, same config both sides; also tcp + host:port)
+//!   deltamask shard-worker --transport uds --listen /tmp/dm-s1.sock
+//!   deltamask train --agg-shards 2 --shard-place local,uds:/tmp/dm-s1.sock
+//!       (multi-host shard fabric: absorb lane 1 runs in the worker process,
+//!        bitwise identical to the all-local --agg-shards 2 run)
 //!   deltamask sweep --datasets cifar10,svhn --methods deltamask,fedpm
 //!   deltamask filters --entries 100000
+//!
+//! Every tuning knob above is one row of the declarative knob table in
+//! `fl::knobs` — the single source of truth pairing each `--flag` with its
+//! `DELTAMASK_*` environment spelling.
 //!
 //! The layer map and round lifecycle behind these commands are documented
 //! in docs/ARCHITECTURE.md; how the server scaling knobs compose is
 //! docs/SCALING.md.
 
 use deltamask::bench::Table;
-use deltamask::coordinator::{FaultPlan, OnDecodeError, PipelineMode, TransportKind};
 use deltamask::fl::metrics::ExperimentResult;
-use deltamask::fl::{
-    agg_shards_from_env, chaos_from_env, decode_workers_from_env, on_decode_error_from_env,
-    persistent_pipeline_from_env, quorum_from_env, remote, round_deadline_ms_from_env,
-    run_experiment, transport_from_env, BackendKind, ExperimentConfig, HeadInit,
-};
+use deltamask::fl::{knobs, remote, run_experiment, BackendKind, ExperimentConfig, HeadInit};
 use deltamask::util::cli::Args;
 
+// Field-by-field assignment is the point here: the env layer must resolve
+// before the CLI layer, so a struct literal cannot express the config.
+#[allow(clippy::field_reassign_with_default)]
 fn parse_cfg(args: &Args) -> ExperimentConfig {
-    let mut cfg = ExperimentConfig {
-        dataset: args.get_or("dataset", "cifar100").to_string(),
-        arch: args.get_or("arch", "vitb32").to_string(),
-        method: args.get_or("method", "deltamask").to_string(),
-        n_clients: args.usize("clients", 10),
-        rounds: args.usize("rounds", 30),
-        rho: args.f64("rho", 1.0),
-        local_epochs: args.usize("epochs", 1),
-        samples_per_client: args.usize("samples", 64),
-        test_samples: args.usize("test-samples", 512),
-        dirichlet_alpha: args.f64("alpha", 10.0),
-        kappa0: args.f64("kappa", 0.8),
-        kappa_floor: args.f64("kappa-floor", 0.25),
-        seed: args.u64("seed", 42),
-        eval_every: args.usize("eval-every", 5),
-        backend: if args.get_or("backend", "native") == "xla" {
-            BackendKind::Xla
-        } else {
-            BackendKind::Native
-        },
-        head_init: match args.get_or("head-init", "lp") {
-            "he" => HeadInit::He,
-            "fit" => HeadInit::Fit,
-            _ => HeadInit::Lp,
-        },
-        lp_rounds: args.usize("lp-rounds", 1),
-        theta0: args.f64("theta0", 0.85) as f32,
-        arch_override: None,
-        pipeline: PipelineMode::from_args(args),
-        decode_workers: args.usize("decode-workers", decode_workers_from_env()),
-        agg_shards: args.usize("agg-shards", agg_shards_from_env()),
-        persistent_pipeline: args.flag("persistent-pipeline") || persistent_pipeline_from_env(),
-        quorum: args.f64("quorum", quorum_from_env()),
-        round_deadline_ms: args.u64("round-deadline-ms", round_deadline_ms_from_env()),
-        on_decode_error: OnDecodeError::parse(args.choice(
-            "on-decode-error",
-            &["abort", "skip"],
-            on_decode_error_from_env().as_str(),
-        ))
-        .expect("choice() already validated the value"),
-        chaos: args
-            .get("chaos")
-            .map(|s| s.to_string())
-            .unwrap_or_else(chaos_from_env),
-        transport: TransportKind::parse(args.choice(
-            "transport",
-            &["channel", "tcp", "uds"],
-            transport_from_env().as_str(),
-        ))
-        .expect("choice() already validated the value"),
+    // Layer 1+2: hard paper defaults with every DELTAMASK_* env spelling
+    // already resolved (ExperimentConfig::default() walks the knob table).
+    let mut cfg = ExperimentConfig::default();
+    // Experiment-shape options — CLI-only, no env spellings.
+    cfg.dataset = args.get_or("dataset", "cifar100").to_string();
+    cfg.arch = args.get_or("arch", "vitb32").to_string();
+    cfg.n_clients = args.usize("clients", 10);
+    cfg.rounds = args.usize("rounds", 30);
+    cfg.rho = args.f64("rho", 1.0);
+    cfg.local_epochs = args.usize("epochs", 1);
+    cfg.samples_per_client = args.usize("samples", 64);
+    cfg.test_samples = args.usize("test-samples", 512);
+    cfg.dirichlet_alpha = args.f64("alpha", 10.0);
+    cfg.kappa0 = args.f64("kappa", 0.8);
+    cfg.kappa_floor = args.f64("kappa-floor", 0.25);
+    cfg.seed = args.u64("seed", 42);
+    cfg.eval_every = args.usize("eval-every", 5);
+    cfg.backend = if args.get_or("backend", "native") == "xla" {
+        BackendKind::Xla
+    } else {
+        BackendKind::Native
     };
-    assert!(
-        cfg.quorum > 0.0 && cfg.quorum <= 1.0,
-        "--quorum must be in (0, 1], got {}",
-        cfg.quorum
-    );
-    // Validate the chaos spec at startup — a typo'd spec must fail loudly,
-    // not silently run a different scenario than asked.
-    if !cfg.chaos.is_empty() {
-        if let Err(e) = FaultPlan::parse(&cfg.chaos) {
-            panic!("--chaos spec invalid: {e}");
-        }
-    }
+    cfg.head_init = match args.get_or("head-init", "lp") {
+        "he" => HeadInit::He,
+        "fit" => HeadInit::Fit,
+        _ => HeadInit::Lp,
+    };
+    cfg.lp_rounds = args.usize("lp-rounds", 1);
+    cfg.theta0 = args.f64("theta0", 0.85) as f32;
+    // Layer 3: every operator knob's CLI spelling, from the same table
+    // that resolved the env layer — parsing and validation live there.
+    knobs::apply_cli(&mut cfg, args);
     if let Some(w) = args.get("width") {
         let w: usize = w.parse().expect("--width must be an integer");
         cfg = cfg.miniaturize(w, args.usize("batch", 8));
@@ -115,7 +91,7 @@ fn parse_cfg(args: &Args) -> ExperimentConfig {
 
 fn print_banner(verb: &str, cfg: &ExperimentConfig) {
     eprintln!(
-        "{verb}: method={} dataset={} arch={} d={} N={} R={} rho={} alpha={} backend={:?} pipeline={} decode_workers={} agg_shards={} persistent_pipeline={} quorum={} round_deadline_ms={} on_decode_error={} chaos={} transport={}",
+        "{verb}: method={} dataset={} arch={} d={} N={} R={} rho={} alpha={} backend={:?} pipeline={} decode_workers={} agg_shards={} shard_place={} persistent_pipeline={} quorum={} round_deadline_ms={} on_decode_error={} chaos={} transport={}",
         cfg.method,
         cfg.dataset,
         cfg.arch,
@@ -125,13 +101,14 @@ fn print_banner(verb: &str, cfg: &ExperimentConfig) {
         cfg.rho,
         cfg.dirichlet_alpha,
         cfg.backend,
-        cfg.pipeline.as_str(),
-        cfg.decode_workers,
-        cfg.agg_shards,
-        cfg.persistent_pipeline,
-        cfg.quorum,
-        cfg.round_deadline_ms,
-        cfg.on_decode_error.as_str(),
+        cfg.tuning.pipeline.as_str(),
+        cfg.tuning.decode_workers,
+        cfg.tuning.agg_shards,
+        if cfg.tuning.shard_place.is_empty() { "local" } else { &cfg.tuning.shard_place },
+        cfg.tuning.persistent_pipeline,
+        cfg.tuning.quorum,
+        cfg.tuning.round_deadline_ms,
+        cfg.tuning.on_decode_error.as_str(),
         if cfg.chaos.is_empty() { "off" } else { &cfg.chaos },
         cfg.transport.as_str()
     );
@@ -197,6 +174,22 @@ fn cmd_client_fleet(args: &Args) -> anyhow::Result<()> {
     remote::run_client_fleet(&cfg, connect, conns)?;
     eprintln!("fleet: coordinator shut the experiment down cleanly");
     Ok(())
+}
+
+/// Host one or more remote absorb lanes: a coordinator whose
+/// `--shard-place` names this worker's socket ships its shard slice here
+/// at round start and drains record splits into it over the DMW1 wire.
+/// Both processes must agree on the experiment options; the shard-hello
+/// fingerprint rejects mismatches. `--linger` keeps the worker alive for
+/// further coordinator sessions (the CI matrix reuses one pair of workers
+/// across whole test suites).
+fn cmd_shard_worker(args: &Args) -> anyhow::Result<()> {
+    let cfg = parse_cfg(args);
+    let listen = args
+        .get("listen")
+        .ok_or_else(|| anyhow::anyhow!("shard-worker needs --listen <addr|path>"))?;
+    print_banner("shard-worker", &cfg);
+    remote::run_shard_worker(&cfg, listen, args.flag("linger"))
 }
 
 fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
@@ -301,12 +294,13 @@ fn main() -> anyhow::Result<()> {
         Some("train") => cmd_train(&args),
         Some("serve") => cmd_serve(&args),
         Some("client-fleet") => cmd_client_fleet(&args),
+        Some("shard-worker") => cmd_shard_worker(&args),
         Some("sweep") => cmd_sweep(&args),
         Some("filters") => cmd_filters(&args),
         Some("info") => cmd_info(),
         _ => {
             eprintln!(
-                "usage: deltamask <train|serve|client-fleet|sweep|filters|info> [--options]\n\
+                "usage: deltamask <train|serve|client-fleet|shard-worker|sweep|filters|info> [--options]\n\
                  see `rust/src/main.rs` header for examples"
             );
             Ok(())

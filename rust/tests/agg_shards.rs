@@ -7,16 +7,76 @@
 //! arrival orders. A malformed record under sharded absorb must abort
 //! the round cleanly: decode workers joined, every shard lane joined,
 //! the view reusable.
+//!
+//! Lane placement: every shard view here is built through [`shard_view`],
+//! which honours the ambient `DELTAMASK_SHARD_PLACE` spec — the CI
+//! `remote-shards` knob-matrix entry points this whole suite at standing
+//! `deltamask shard-worker --linger` processes over UDS (mixed
+//! local/remote lanes), re-proving every bitwise property across the
+//! process boundary. Unset means all-local in-process lanes.
 
 use deltamask::compress::{self, Encoded, ScratchPool, UpdateCodec};
 use deltamask::coordinator::{
-    drain_round, shard_bounds, ChannelTransport, DrainConfig, DrainPipeline, Payload,
-    PipelineMode, RoundEngine, RoundPlan, ShardedAggregator, WireMessage,
+    drain_round, serve_shard_worker, shard_bounds, Aggregator, ChannelTransport,
+    ConfigFingerprint, DrainConfig, DrainPipeline, Listener, Payload, PipelineMode, RoundEngine,
+    RoundPlan, ShardPlacement, ShardedAggregator, SocketAddrSpec, SocketConfig, WireMessage,
 };
 use deltamask::fl::server::MaskServer;
 use deltamask::model::sample_mask_seeded;
 use deltamask::util::rng::Xoshiro256pp;
 use std::sync::Arc;
+
+/// The fingerprint the CI `remote-shards` standing workers are launched
+/// with (`shard-worker --arch test --clients 8 --rounds 4 --seed 42`):
+/// arch `test` ⇒ d = 5·32² = 5120, which bounds every slice range this
+/// suite ships, and 8 clients covers every per-round expected count used
+/// here. The in-thread worker test below reuses it so one constant pins
+/// both harnesses.
+fn ci_fingerprint() -> ConfigFingerprint {
+    ConfigFingerprint {
+        seed: 42,
+        n_clients: 8,
+        rounds: 4,
+        d: 5120,
+    }
+}
+
+/// The ambient `DELTAMASK_SHARD_PLACE` sites padded with `local` (or
+/// truncated) to the view's **resolved** lane count, so the fixed
+/// two-worker CI spec composes with every shard count and every `d` this
+/// suite sweeps (shard counts clamp to `d`). `None` when unset/empty.
+fn placed_spec(d: usize, shards: usize) -> Option<String> {
+    let spec = deltamask::fl::shard_place_from_env();
+    let sites: Vec<&str> = spec
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .collect();
+    if sites.is_empty() {
+        return None;
+    }
+    let lanes = shard_bounds(d, shards).len();
+    let padded: Vec<&str> = (0..lanes)
+        .map(|i| sites.get(i).copied().unwrap_or("local"))
+        .collect();
+    Some(padded.join(","))
+}
+
+/// Build a shard view of `server` honouring the ambient placement (see
+/// the module doc): all-local in-process lanes by default, mixed
+/// local/remote lanes against standing shard workers under the CI
+/// `remote-shards` entry.
+fn shard_view(server: &MaskServer, d: usize, shards: usize) -> ShardedAggregator<MaskServer> {
+    match placed_spec(d, shards) {
+        None => server.shard_view(shards),
+        Some(spec) => {
+            let placement = ShardPlacement::parse(&spec).expect("DELTAMASK_SHARD_PLACE");
+            server
+                .shard_view_placed(shards, &placement, ci_fingerprint(), SocketConfig::from_env())
+                .expect("remote shard view")
+        }
+    }
+}
 
 fn logit(p: f32) -> f32 {
     let p = p.clamp(1e-6, 1.0 - 1e-6);
@@ -106,7 +166,7 @@ fn drain_with(
         .unwrap_or_else(|e| panic!("{}: {e}", tag()));
         (server, Vec::new())
     } else {
-        let mut view = server.shard_view(shards);
+        let mut view = shard_view(&server, plan.d(), shards);
         drain_round(
             &mut channel,
             plan,
@@ -256,7 +316,7 @@ fn multi_round_sharded_trajectory_matches_monolithic() {
             .unwrap();
 
             let mut channel = send_all(&plan_s, &encs, &order);
-            let mut view = split.shard_view(3);
+            let mut view = shard_view(&split, d, 3);
             drain_round(
                 &mut channel,
                 &plan_s,
@@ -293,7 +353,7 @@ fn malformed_record_under_sharded_absorb_aborts_cleanly() {
         for workers in [1usize, 3] {
             let mut channel = send_all(&plan, &encs, &order);
             let server = MaskServer::with_theta0(plan.d(), 1.0, 0.85);
-            let mut view = server.shard_view(4);
+            let mut view = shard_view(&server, plan.d(), 4);
             let err = drain_round(
                 &mut channel,
                 &plan,
@@ -330,6 +390,74 @@ fn malformed_record_under_sharded_absorb_aborts_cleanly() {
     assert_eq!(reference.s_g, recovered.s_g);
 }
 
+/// Mixed local/remote placement through the REAL drain paths: an
+/// in-thread `serve_shard_worker::<MaskServer>` owns shard 1's slice
+/// while shard 0 stays in-process, and the drained round must be bitwise
+/// identical to the all-local sharded drain for both pipeline modes and
+/// both decode-stage shapes — the [`ShardLane`] trait boundary is
+/// invisible to the router, the drains and the stitch, even across an
+/// uneven (prime-`d`) shard boundary.
+#[test]
+fn mixed_placement_drain_is_bitwise_identical_to_all_local() {
+    let fp = ci_fingerprint();
+    let scfg = SocketConfig::default();
+    let path = std::env::temp_dir().join(format!("dm-agg-mixed-{}.sock", std::process::id()));
+    let _ = std::fs::remove_file(&path);
+    let spec = SocketAddrSpec::Uds(path.clone());
+    let listener = Listener::bind(&spec).unwrap();
+    // A lingering worker serves one session per drained view below (each
+    // `adopt_shards` retires its view, which sends a shutdown the linger
+    // mode ignores). The thread parks in `accept` forever; it is detached
+    // on purpose, exactly like the CI standing workers it mirrors.
+    std::thread::spawn(move || serve_shard_worker::<MaskServer>(&listener, scfg, fp, true));
+
+    let d = 1031; // prime: the two-shard boundary lands unevenly
+    let (plan, encs) = round_fixture("deltamask", d, 4, 33);
+    let order: Vec<usize> = (0..plan.expected()).rev().collect();
+    let codec = compress::by_name("deltamask").unwrap();
+    let placement = ShardPlacement::parse(&format!("local,uds:{}", path.display())).unwrap();
+    for mode in [PipelineMode::Batch, PipelineMode::Streaming] {
+        for workers in [1usize, 3] {
+            let tag = format!("{mode:?} workers={workers}");
+            let mut channel = send_all(&plan, &encs, &order);
+            let mut reference = MaskServer::with_theta0(d, 1.0, 0.85);
+            let mut view = reference.shard_view(2);
+            drain_round(
+                &mut channel,
+                &plan,
+                codec.as_ref(),
+                &mut view,
+                DrainConfig::sharded(mode, workers, 2),
+                &ScratchPool::new(),
+            )
+            .unwrap_or_else(|e| panic!("{tag} (local): {e}"));
+            reference.adopt_shards(view);
+
+            let mut channel = send_all(&plan, &encs, &order);
+            let mut placed = MaskServer::with_theta0(d, 1.0, 0.85);
+            let mut view = placed
+                .shard_view_placed(2, &placement, fp, scfg)
+                .unwrap_or_else(|e| panic!("{tag}: shard worker unreachable: {e}"));
+            drain_round(
+                &mut channel,
+                &plan,
+                codec.as_ref(),
+                &mut view,
+                DrainConfig::sharded(mode, workers, 2),
+                &ScratchPool::new(),
+            )
+            .unwrap_or_else(|e| panic!("{tag} (placed): {e}"));
+            assert!(view.lane_fault().is_none(), "{tag}: unexpected lane fault");
+            placed.adopt_shards(view);
+
+            assert_eq!(reference.theta_g, placed.theta_g, "{tag}: theta_g diverged");
+            assert_eq!(reference.s_g, placed.s_g, "{tag}: s_g diverged");
+            assert_eq!(reference.round, placed.round, "{tag}: round counter");
+        }
+    }
+    let _ = std::fs::remove_file(&path);
+}
+
 // ---------------------------------------------------------------------
 // Round-resident pipeline (persistent workers / lanes / pools)
 // ---------------------------------------------------------------------
@@ -351,7 +479,7 @@ fn drain_trajectory_resident(
     let pipeline = DrainPipeline::new(DrainConfig::sharded(mode, workers, shards));
     let mut server = MaskServer::with_theta0(d, 0.5, 0.85); // ρ=0.5 ⇒ prior reset rounds 0, 2
     let mut view: Option<ShardedAggregator<MaskServer>> =
-        (shards > 1).then(|| server.shard_view(shards));
+        (shards > 1).then(|| shard_view(&server, d, shards));
     let mut engine = RoundEngine::new(11, 4, 1.0, 0.8, 0.25, rounds);
     for round in 0..rounds {
         let plan = Arc::new(engine.plan(round, &server.theta_g, &server.s_g));
@@ -443,7 +571,7 @@ fn persistent_pipeline_survives_malformed_round_and_stays_reusable() {
     for mode in [PipelineMode::Batch, PipelineMode::Streaming] {
         let pipeline = DrainPipeline::new(DrainConfig::sharded(mode, 3, 4));
         let mut server = MaskServer::with_theta0(d, 1.0, 0.85);
-        let mut view = server.shard_view(4);
+        let mut view = shard_view(&server, d, 4);
         let mut oracle = MaskServer::with_theta0(d, 1.0, 0.85);
         let oracle_pool = ScratchPool::new();
         let serial_codec = compress::by_name(name).unwrap();
@@ -513,7 +641,7 @@ fn resident_steady_state_rounds_allocate_zero_decode_buffers() {
             DrainPipeline::new(DrainConfig::sharded(PipelineMode::Streaming, workers, shards));
         let mut server = MaskServer::with_theta0(d, 1.0, 0.85);
         let mut view: Option<ShardedAggregator<MaskServer>> =
-            (shards > 1).then(|| server.shard_view(shards));
+            (shards > 1).then(|| shard_view(&server, d, shards));
         let mut engine = RoundEngine::new(5, 1, 1.0, 0.8, 0.25, rounds);
         let mut misses_after: Vec<u64> = Vec::new();
         for round in 0..rounds {

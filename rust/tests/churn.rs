@@ -25,7 +25,7 @@ use deltamask::coordinator::{
     RoundEngine, RoundPlan, Transport, TransportKind, WireMessage,
 };
 use deltamask::fl::server::MaskServer;
-use deltamask::fl::{run_experiment, BackendKind, ExperimentConfig, HeadInit};
+use deltamask::fl::{run_experiment, BackendKind, ExperimentConfig, HeadInit, ServerTuning};
 use deltamask::model::sample_mask_seeded;
 use deltamask::util::rng::Xoshiro256pp;
 use std::sync::Arc;
@@ -700,13 +700,21 @@ fn mini_cfg(method: &str) -> ExperimentConfig {
         lp_rounds: 1,
         theta0: 0.85,
         arch_override: None,
-        pipeline: PipelineMode::Streaming,
-        decode_workers: 1,
-        agg_shards: 1,
-        persistent_pipeline: false,
-        quorum: 1.0,
-        round_deadline_ms: 0,
-        on_decode_error: OnDecodeError::Abort,
+        tuning: ServerTuning {
+            pipeline: PipelineMode::Streaming,
+            decode_workers: 1,
+            agg_shards: 1,
+            // The CI remote-shards knob-matrix entry sets
+            // DELTAMASK_SHARD_PLACE to a mixed local/remote spec, so every
+            // runner-driven sharded experiment in this suite drains through
+            // standing `deltamask shard-worker` processes over UDS (the
+            // runner resolves the spec to each run's lane count).
+            shard_place: deltamask::fl::shard_place_from_env(),
+            persistent_pipeline: false,
+            quorum: 1.0,
+            round_deadline_ms: 0,
+            on_decode_error: OnDecodeError::Abort,
+        },
         chaos: String::new(),
         // The CI uds-transport knob-matrix entry sets
         // DELTAMASK_TRANSPORT=uds, re-running this whole suite — chaos,
@@ -740,17 +748,17 @@ fn experiment_under_chaos_is_reproducible_across_drain_shapes() {
         },
     );
     let mut base = mini_cfg("deltamask");
-    base.quorum = 0.6;
+    base.tuning.quorum = 0.6;
     base.chaos = format!("seed={},drop=0.25,die=0.2", fault.seed);
 
     let serial = run_experiment(&base).unwrap();
     let replay = run_experiment(&base).unwrap();
     let mut sharded_cfg = base.clone();
-    sharded_cfg.decode_workers = 2;
-    sharded_cfg.agg_shards = 2;
+    sharded_cfg.tuning.decode_workers = 2;
+    sharded_cfg.tuning.agg_shards = 2;
     let sharded = run_experiment(&sharded_cfg).unwrap();
     let mut resident_cfg = sharded_cfg.clone();
-    resident_cfg.persistent_pipeline = true;
+    resident_cfg.tuning.persistent_pipeline = true;
     let resident = run_experiment(&resident_cfg).unwrap();
 
     assert_eq!(serial.rounds.len(), rounds);
@@ -837,11 +845,11 @@ fn transient_send_failures_are_retried_to_a_clean_round() {
 #[test]
 fn ci_env_knob_scenario_is_deterministic() {
     let mut cfg = mini_cfg(&deltamask::fl::method_from_env());
-    cfg.quorum = deltamask::fl::quorum_from_env();
+    cfg.tuning.quorum = deltamask::fl::quorum_from_env();
     cfg.chaos = deltamask::fl::chaos_from_env();
-    cfg.decode_workers = deltamask::fl::decode_workers_from_env();
-    cfg.agg_shards = deltamask::fl::agg_shards_from_env();
-    cfg.persistent_pipeline = deltamask::fl::persistent_pipeline_from_env();
+    cfg.tuning.decode_workers = deltamask::fl::decode_workers_from_env();
+    cfg.tuning.agg_shards = deltamask::fl::agg_shards_from_env();
+    cfg.tuning.persistent_pipeline = deltamask::fl::persistent_pipeline_from_env();
     let a = run_experiment(&cfg);
     let b = run_experiment(&cfg);
     match (a, b) {
@@ -869,8 +877,8 @@ fn ci_env_knob_scenario_is_deterministic() {
 fn relaxed_policy_without_chaos_is_bitwise_dormant_end_to_end() {
     let strict = run_experiment(&mini_cfg("deltamask")).unwrap();
     let mut cfg = mini_cfg("deltamask");
-    cfg.quorum = 0.6;
-    cfg.round_deadline_ms = 60_000;
+    cfg.tuning.quorum = 0.6;
+    cfg.tuning.round_deadline_ms = 60_000;
     let relaxed = run_experiment(&cfg).unwrap();
     assert_eq!(strict.rounds.len(), relaxed.rounds.len());
     for (s, r) in strict.rounds.iter().zip(&relaxed.rounds) {
@@ -999,7 +1007,7 @@ fn chaos_over_the_socket_reproduces_the_channel_fault_trajectory() {
         },
     );
     let mut base = mini_cfg("deltamask");
-    base.quorum = 0.6;
+    base.tuning.quorum = 0.6;
     base.chaos = format!("seed={},drop=0.25,die=0.2,flaky=0.5", fault.seed);
 
     base.transport = TransportKind::Channel;

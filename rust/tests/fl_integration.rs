@@ -5,7 +5,7 @@
 use deltamask::compress::{self, Update};
 use deltamask::coordinator::PipelineMode;
 use deltamask::fl::server::MaskServer;
-use deltamask::fl::{run_experiment, BackendKind, ExperimentConfig, HeadInit};
+use deltamask::fl::{run_experiment, BackendKind, ExperimentConfig, HeadInit, ServerTuning};
 use deltamask::model::sample_mask_seeded;
 use deltamask::util::rng::Xoshiro256pp;
 
@@ -35,22 +35,28 @@ fn base_cfg() -> ExperimentConfig {
         lp_rounds: 1,
         theta0: 0.85,
         arch_override: None,
-        pipeline: PipelineMode::Streaming,
-        // CI's knob-matrix job re-runs this suite with
-        // DELTAMASK_DECODE_WORKERS / DELTAMASK_AGG_SHARDS /
-        // DELTAMASK_PERSISTENT_PIPELINE combinations, so every end-to-end
-        // test also exercises the sharded decode path, the
-        // dimension-sharded aggregation path and the round-resident
-        // pipeline.
-        decode_workers: deltamask::fl::decode_workers_from_env(),
-        agg_shards: deltamask::fl::agg_shards_from_env(),
-        persistent_pipeline: deltamask::fl::persistent_pipeline_from_env(),
-        // The churn knob-matrix entry additionally sets DELTAMASK_CHAOS +
-        // DELTAMASK_QUORUM, so the whole suite runs under seeded faults
-        // with degraded completion allowed.
-        quorum: deltamask::fl::quorum_from_env(),
-        round_deadline_ms: deltamask::fl::round_deadline_ms_from_env(),
-        on_decode_error: deltamask::fl::on_decode_error_from_env(),
+        tuning: ServerTuning {
+            pipeline: PipelineMode::Streaming,
+            // CI's knob-matrix job re-runs this suite with
+            // DELTAMASK_DECODE_WORKERS / DELTAMASK_AGG_SHARDS /
+            // DELTAMASK_PERSISTENT_PIPELINE combinations, so every
+            // end-to-end test also exercises the sharded decode path, the
+            // dimension-sharded aggregation path and the round-resident
+            // pipeline.
+            decode_workers: deltamask::fl::decode_workers_from_env(),
+            agg_shards: deltamask::fl::agg_shards_from_env(),
+            // The remote-shards knob-matrix entry sets
+            // DELTAMASK_SHARD_PLACE to a mixed local/remote spec, draining
+            // every sharded run through standing shard-worker processes.
+            shard_place: deltamask::fl::shard_place_from_env(),
+            persistent_pipeline: deltamask::fl::persistent_pipeline_from_env(),
+            // The churn knob-matrix entry additionally sets DELTAMASK_CHAOS
+            // + DELTAMASK_QUORUM, so the whole suite runs under seeded
+            // faults with degraded completion allowed.
+            quorum: deltamask::fl::quorum_from_env(),
+            round_deadline_ms: deltamask::fl::round_deadline_ms_from_env(),
+            on_decode_error: deltamask::fl::on_decode_error_from_env(),
+        },
         chaos: deltamask::fl::chaos_from_env(),
         // The uds-transport knob-matrix entry sets DELTAMASK_TRANSPORT=uds,
         // rerouting every update in this suite through the length-prefixed
@@ -244,9 +250,9 @@ fn streaming_and_batch_pipelines_produce_identical_trajectories() {
         cfg.method = method.into();
         cfg.rounds = 6;
         cfg.eval_every = 2;
-        cfg.pipeline = PipelineMode::Batch;
+        cfg.tuning.pipeline = PipelineMode::Batch;
         let batch = run_experiment(&cfg).unwrap();
-        cfg.pipeline = PipelineMode::Streaming;
+        cfg.tuning.pipeline = PipelineMode::Streaming;
         let streaming = run_experiment(&cfg).unwrap();
 
         assert_eq!(batch.rounds.len(), streaming.rounds.len(), "{method}");
@@ -280,11 +286,11 @@ fn persistent_pipeline_trajectories_match_per_round_spawn() {
         cfg.method = method.into();
         cfg.rounds = 6;
         cfg.eval_every = 2;
-        cfg.decode_workers = 3;
-        cfg.agg_shards = 2;
-        cfg.persistent_pipeline = false;
+        cfg.tuning.decode_workers = 3;
+        cfg.tuning.agg_shards = 2;
+        cfg.tuning.persistent_pipeline = false;
         let spawned = run_experiment(&cfg).unwrap();
-        cfg.persistent_pipeline = true;
+        cfg.tuning.persistent_pipeline = true;
         let resident = run_experiment(&cfg).unwrap();
 
         assert_eq!(spawned.rounds.len(), resident.rounds.len(), "{method}");
@@ -359,14 +365,14 @@ fn sibling_codecs_run_e2e_with_deterministic_trajectories() {
         cfg.method = method.into();
         cfg.rounds = 6;
         cfg.eval_every = 2;
-        cfg.decode_workers = 1;
-        cfg.agg_shards = 1;
-        cfg.persistent_pipeline = false;
+        cfg.tuning.decode_workers = 1;
+        cfg.tuning.agg_shards = 1;
+        cfg.tuning.persistent_pipeline = false;
         let serial = run_experiment(&cfg).unwrap();
-        cfg.decode_workers = 3;
-        cfg.agg_shards = 2;
+        cfg.tuning.decode_workers = 3;
+        cfg.tuning.agg_shards = 2;
         let sharded = run_experiment(&cfg).unwrap();
-        cfg.persistent_pipeline = true;
+        cfg.tuning.persistent_pipeline = true;
         let resident = run_experiment(&cfg).unwrap();
 
         for (label, other) in [("sharded", &sharded), ("resident", &resident)] {

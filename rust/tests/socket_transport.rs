@@ -1,8 +1,10 @@
-//! Framed socket transport suite: frame-codec totality under mutation,
-//! bounded-admission backpressure, multiplexed-session integrity, torn-frame
-//! connection death, the `recv_deadline` outcome ordering over a real wire —
-//! and the two-process `serve` / `client-fleet` end-to-end, asserted
-//! trajectory-identical to the in-process channel run.
+//! Framed socket transport suite: frame-codec totality under mutation
+//! (fleet *and* shard-fabric frame kinds), bounded-admission backpressure,
+//! multiplexed-session integrity, torn-frame connection death, the
+//! `recv_deadline` outcome ordering over a real wire, the shard-worker
+//! hello rejection and mid-round death/recovery paths — and the
+//! two-process `serve` / `client-fleet` and `train` / `shard-worker`
+//! end-to-ends, asserted trajectory-identical to the in-process runs.
 //!
 //! The loopback tests build directly on the socket module's public surface
 //! (`SocketHub`, `FleetServer`, the frame codec); the end-to-end test drives
@@ -10,15 +12,19 @@
 //! path — config parsing, handshake fingerprint, plan broadcast, EOR
 //! barrier, shutdown — is under test, not just the library.
 
-use deltamask::compress::Encoded;
+use deltamask::compress::{Encoded, Update};
 use deltamask::coordinator::transport::socket::{
-    encode_eor, encode_hello, encode_message, encode_plan, encode_shutdown, parse_frame,
-    parse_header, Hello, Listener, Stream, HEADER_LEN, MAGIC, VERSION,
+    encode_eor, encode_hello, encode_message, encode_plan, encode_shard_abort,
+    encode_shard_begin, encode_shard_finish, encode_shard_hello, encode_shard_slice,
+    encode_shard_split, encode_shutdown, parse_frame, parse_header, Hello, Listener, ShardHello,
+    Stream, HEADER_LEN, MAGIC, VERSION,
 };
 use deltamask::coordinator::{
-    ConfigFingerprint, FleetServer, Payload, RecvOutcome, RoundEngine, SocketAddrSpec,
-    SocketConfig, SocketHub, Transport, TransportKind, TransportSender, WireMessage,
+    serve_shard_worker, Aggregator, ConfigFingerprint, FleetServer, Payload, RecvOutcome,
+    RoundEngine, ShardLink, ShardPlacement, ShardedAggregator, SocketAddrSpec, SocketConfig,
+    SocketHub, Transport, TransportKind, TransportSender, WireMessage, WireSlice,
 };
+use deltamask::fl::server::MaskServer;
 use deltamask::util::json::Json;
 use deltamask::util::rng::Xoshiro256pp;
 use std::io::Write as _;
@@ -93,7 +99,31 @@ fn corpus() -> Vec<Vec<u8>> {
         encode_plan(&plan),
         encode_eor(9),
         encode_shutdown(),
+        // The shard-fabric kinds (7–12): lane hello with a fingerprint,
+        // bounds and an opaque slice-state seed, the round control frames,
+        // a routed split and the worker's slice return.
+        encode_shard_hello(
+            0,
+            &ShardHello {
+                fingerprint: fingerprint(),
+                range_start: 8,
+                range_end: 24,
+                state: (0..16u8).collect(),
+            },
+        ),
+        encode_shard_begin(1, 4, 3),
+        encode_shard_split(1, 2, 0, &[1.0, 0.0, 1.0, 0.5]),
+        encode_shard_finish(1, true),
+        encode_shard_abort(2),
+        encode_shard_slice(2, 0.125, &[9, 8, 7]),
     ]
+}
+
+/// Shard hello (kind 7) and slice return (kind 12) end in an opaque
+/// state blob that absorbs any tail — only a *structural* truncation is
+/// detectable for them, so the exact-length assertions below skip both.
+fn state_tailed(frame: &[u8]) -> bool {
+    frame[5] == 7 || frame[5] == 12
 }
 
 fn split(frame: &[u8]) -> ([u8; HEADER_LEN], &[u8]) {
@@ -141,15 +171,20 @@ fn frame_decoding_is_total_under_mutation() {
         }
 
         // Truncations and extensions: the length cross-check rejects every
-        // payload that does not match the header exactly.
+        // payload that does not match the header exactly — except inside
+        // the opaque state tail, where only structural cuts can surface.
         for cut in [0, 1, payload.len().saturating_sub(1)] {
-            if cut < payload.len() {
+            if cut < payload.len() && !(state_tailed(frame) && cut + 1 == payload.len()) {
                 assert!(parse_frame(h, &payload[..cut]).is_err(), "truncated to {cut}");
             }
         }
         let mut extended = payload.to_vec();
         extended.push(0xAA);
-        assert!(parse_frame(h, &extended).is_err(), "extended payload");
+        if state_tailed(frame) {
+            assert!(parse_frame(h, &extended).is_ok(), "a state tail absorbs bytes");
+        } else {
+            assert!(parse_frame(h, &extended).is_err(), "extended payload");
+        }
     }
 
     // Fully random headers.
@@ -161,11 +196,12 @@ fn frame_decoding_is_total_under_mutation() {
         let _ = parse_header(&h, MAX);
     }
 
-    // Valid headers of every kind over random payload bytes of the declared
-    // length — this drives the body decoders (including the Plan vector
-    // counts) through arbitrary garbage.
+    // Valid headers of every kind — the fleet kinds 1–6 and the shard
+    // fabric's 7–12 — over random payload bytes of the declared length:
+    // this drives the body decoders (including the Plan vector counts and
+    // the shard-hello bounds checks) through arbitrary garbage.
     for _ in 0..2_000 {
-        let kind = 1 + rng.below(6) as u8;
+        let kind = 1 + rng.below(12) as u8;
         let len = rng.below(512) as usize;
         let session = rng.next_u32();
         let h = parse_header(&raw_header(kind, session, len as u32), MAX)
@@ -398,6 +434,166 @@ fn torn_frames_kill_the_connection_and_close_the_round() {
 }
 
 // ---------------------------------------------------------------------
+// Shard-worker hello, lane death and recovery
+// ---------------------------------------------------------------------
+
+/// The shard hello is judged before any round state exists: a wrong
+/// config fingerprint, bounds that disagree with the slice state, or an
+/// undecodable state seed each close the connection — surfaced on the
+/// lane side as a connect error — while the worker survives to re-accept,
+/// so a correct hello on the very next connection still succeeds.
+#[test]
+fn shard_worker_rejects_fingerprint_and_bounds_mismatches() {
+    let d = 24usize;
+    let fp = fingerprint(); // d = 64 covers the 0..24 slice below
+    let scfg = SocketConfig::default();
+    let path = std::env::temp_dir().join(format!("dm-shard-hello-{}.sock", std::process::id()));
+    let _ = std::fs::remove_file(&path);
+    let spec = SocketAddrSpec::Uds(path.clone());
+    let listener = Listener::bind(&spec).unwrap();
+    let worker =
+        std::thread::spawn(move || serve_shard_worker::<MaskServer>(&listener, scfg, fp, false));
+
+    let state = MaskServer::with_theta0(d, 1.0, 0.85).encode_slice();
+    let timeout = Duration::from_secs(10);
+
+    // Wrong fingerprint: rejected at the hello, before any round frame.
+    let wrong = ConfigFingerprint { seed: 999, ..fp };
+    let err = ShardLink::connect(&spec, scfg, 0, wrong, 0..d, &state, timeout).unwrap_err();
+    assert!(format!("{err:#}").contains("rejected the hello"), "{err:#}");
+
+    // Bounds that disagree with the slice state's dimensionality.
+    let err = ShardLink::connect(&spec, scfg, 0, fp, 0..d - 1, &state, timeout).unwrap_err();
+    assert!(format!("{err:#}").contains("rejected the hello"), "{err:#}");
+
+    // An undecodable state seed: rejected without killing the worker.
+    let err = ShardLink::connect(&spec, scfg, 0, fp, 0..d, &[7u8; 11], timeout).unwrap_err();
+    assert!(format!("{err:#}").contains("rejected the hello"), "{err:#}");
+
+    // The worker re-accepted after every rejection: a correct hello now
+    // completes, and a shutdown retires the non-lingering serve loop.
+    let mut link = ShardLink::connect(&spec, scfg, 0, fp, 0..d, &state, timeout).unwrap();
+    link.send_shutdown();
+    drop(link);
+    worker.join().unwrap().unwrap();
+    let _ = std::fs::remove_file(&path);
+}
+
+/// Kill a real `shard-worker` process mid-round: the lane trips its
+/// sticky fault instead of panicking, the drain-visible shortfall abort
+/// leaves no trace on the aggregate state, and after the worker restarts
+/// the SAME view reconnects on the next begin — re-seeding the fresh
+/// worker from the parked mirror — and lands bitwise-identical to an
+/// all-local twin that was driven through the same call sequence.
+#[test]
+fn remote_lane_death_is_a_clean_shortfall_and_the_view_recovers() {
+    use deltamask::fl::ExperimentConfig;
+    // The worker derives its expected fingerprint from EXPERIMENT_FLAGS;
+    // this config replicates the shape facts those flags pin.
+    let shape = ExperimentConfig {
+        dataset: "cifar10".into(),
+        arch: "test".into(),
+        n_clients: 5,
+        rounds: 3,
+        seed: 42,
+        ..ExperimentConfig::default()
+    };
+    let fp = shape.fingerprint();
+    let d = shape.arch_config().d();
+
+    let sock = std::env::temp_dir().join(format!("dm-lane-death-{}.sock", std::process::id()));
+    let _ = std::fs::remove_file(&sock);
+    let spawn_worker = || {
+        deltamask_cmd("shard-worker")
+            .args(["--transport", "uds", "--listen"])
+            .arg(&sock)
+            .spawn()
+            .unwrap()
+    };
+    let mut worker = spawn_worker();
+
+    let server = MaskServer::with_theta0(d, 1.0, 0.85);
+    let placement = ShardPlacement::parse(&format!("local,uds:{}", sock.display())).unwrap();
+    let mut view = server
+        .shard_view_placed(2, &placement, fp, SocketConfig::default())
+        .unwrap();
+    let mut oracle = server.shard_view(2);
+
+    let masks = |round: u64, k: usize| -> Vec<Vec<f32>> {
+        let mut rng = Xoshiro256pp::new(0xD1E ^ round);
+        (0..k)
+            .map(|_| {
+                (0..d)
+                    .map(|_| if rng.next_f32() < 0.5 { 1.0 } else { 0.0 })
+                    .collect()
+            })
+            .collect()
+    };
+    let absorb_all = |agg: &mut ShardedAggregator<MaskServer>, round: u64, k: usize| {
+        agg.begin_round(k);
+        for (slot, m) in masks(round, k).into_iter().enumerate() {
+            agg.absorb(slot, Update::Mask(m));
+            while agg.reclaim_buffer().is_some() {}
+        }
+    };
+
+    // Round 1, both lanes alive: a clean finish over the wire.
+    for agg in [&mut view, &mut oracle] {
+        absorb_all(agg, 1, 3);
+        agg.finish_round();
+    }
+    assert!(view.lane_fault().is_none(), "clean round must not fault");
+
+    // Round 2: the worker dies mid-round. The absorbs keep flowing (a
+    // dead lane must never block routing); the I/O thread trips the
+    // sticky fault asynchronously, which is what the drain observes via
+    // `lane_fault` before settling — mimic its shortfall abort here.
+    worker.kill().unwrap();
+    worker.wait().unwrap();
+    absorb_all(&mut view, 2, 5);
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while view.lane_fault().is_none() {
+        assert!(Instant::now() < deadline, "lane fault never surfaced");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    view.abort_round();
+    // The oracle runs the identical sequence; its abort is unconditional.
+    absorb_all(&mut oracle, 2, 5);
+    oracle.abort_round();
+
+    // Restart the worker (the killed process left its socket file behind)
+    // and wait for the fresh bind before opening the next round.
+    let _ = std::fs::remove_file(&sock);
+    let mut worker = spawn_worker();
+    let deadline = Instant::now() + Duration::from_secs(60);
+    while !sock.exists() {
+        assert!(Instant::now() < deadline, "restarted worker never bound");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+
+    // Round 3: reconnect-on-begin re-seeds the fresh worker from the
+    // parked mirror, clears the fault, and the round completes.
+    for agg in [&mut view, &mut oracle] {
+        absorb_all(agg, 3, 4);
+        agg.finish_round();
+    }
+    assert!(view.lane_fault().is_none(), "reconnect must clear the fault");
+
+    // Bitwise: the faulted round left no trace, the finished rounds did.
+    let view_shards = view.into_shards();
+    let oracle_shards = oracle.into_shards();
+    assert_eq!(view_shards.len(), oracle_shards.len());
+    for ((ra, a), (rb, b)) in view_shards.iter().zip(&oracle_shards) {
+        assert_eq!(ra, rb, "shard bounds diverged");
+        assert_eq!(a.encode_slice(), b.encode_slice(), "slice {ra:?} diverged");
+    }
+    // `into_shards` sent the worker a shutdown; it exits cleanly.
+    let status = wait_or_kill(&mut worker, "restarted shard-worker");
+    assert!(status.success(), "restarted shard-worker exited with {status}");
+    let _ = std::fs::remove_file(&sock);
+}
+
+// ---------------------------------------------------------------------
 // Two-process end-to-end
 // ---------------------------------------------------------------------
 
@@ -527,6 +723,82 @@ fn two_process_uds_run_matches_the_in_process_channel_run() {
     let _ = std::fs::remove_file(&sock);
 }
 
+/// The shard-fabric acceptance: `train` with one absorb lane living in a
+/// real `shard-worker` OS process over UDS must be bitwise-identical,
+/// round by round, to the in-process `--agg-shards` run of the same seed
+/// — losses, bitrates, accuracy, fault counters — both on a clean client
+/// uplink and under a seeded `ChaosTransport` on that uplink (the chaos
+/// wraps the client wire; the shard wire must not perturb anything).
+#[test]
+fn remote_shard_train_matches_in_process_sharded_train_bitwise() {
+    let tmp = std::env::temp_dir();
+    let pid = std::process::id();
+    for (tag, chaos) in [
+        ("clean", None),
+        ("chaos", Some("seed=1702,drop=0.1,flaky=0.5")),
+    ] {
+        let sock = tmp.join(format!("dm-shard-e2e-{pid}-{tag}.sock"));
+        let local_out = tmp.join(format!("dm-shard-e2e-{pid}-{tag}-local.json"));
+        let remote_out = tmp.join(format!("dm-shard-e2e-{pid}-{tag}-remote.json"));
+        let _ = std::fs::remove_file(&sock);
+
+        // `--persistent-pipeline` keeps one resident view (one worker
+        // session) for the whole run, so the non-lingering worker exits
+        // cleanly on the end-of-experiment shutdown. Dropped updates under
+        // chaos need the degraded-quorum gate to still settle rounds.
+        let mut shared = vec!["--agg-shards", "2", "--decode-workers", "2", "--persistent-pipeline"];
+        if let Some(spec) = chaos {
+            shared.extend(["--chaos", spec, "--quorum", "0.6"]);
+        }
+
+        // Reference: both absorb lanes in-process.
+        let status = deltamask_cmd("train")
+            .args(&shared)
+            .arg("--out")
+            .arg(&local_out)
+            .status()
+            .unwrap();
+        assert!(status.success(), "{tag}: local sharded run failed");
+
+        // Same run, shard 1's lane in a worker process.
+        let mut worker = deltamask_cmd("shard-worker")
+            .args(["--transport", "uds", "--listen"])
+            .arg(&sock)
+            .spawn()
+            .unwrap();
+        let status = deltamask_cmd("train")
+            .args(&shared)
+            .arg("--shard-place")
+            .arg(format!("local,uds:{}", sock.display()))
+            .arg("--out")
+            .arg(&remote_out)
+            .status()
+            .unwrap();
+        assert!(status.success(), "{tag}: remote sharded run failed");
+        let worker_status = wait_or_kill(&mut worker, "shard-worker");
+        assert!(worker_status.success(), "{tag}: shard-worker exited with {worker_status}");
+
+        let a = load_json(&local_out);
+        let b = load_json(&remote_out);
+        for key in ["final_accuracy", "peak_accuracy", "avg_bpp", "total_uplink_mib", "d"] {
+            assert_eq!(field(&a, key), field(&b, key), "{tag}: top-level {key} diverged");
+        }
+        let ra = field(&a, "rounds").as_arr().unwrap();
+        let rb = field(&b, "rounds").as_arr().unwrap();
+        assert_eq!(ra.len(), rb.len(), "{tag}: round count");
+        assert_eq!(ra.len(), 3);
+        for (x, y) in ra.iter().zip(rb) {
+            let r = field(x, "round").as_usize().unwrap();
+            for key in ["round", "loss", "bpp", "acc", "quorum_met", "degraded", "faults"] {
+                assert_eq!(field(x, key), field(y, key), "{tag} round {r}: {key} diverged");
+            }
+        }
+        let _ = std::fs::remove_file(&local_out);
+        let _ = std::fs::remove_file(&remote_out);
+        let _ = std::fs::remove_file(&sock);
+    }
+}
+
 // ---------------------------------------------------------------------
 // Scale
 // ---------------------------------------------------------------------
@@ -583,7 +855,7 @@ fn ten_thousand_sessions_multiplex_over_a_loopback_socket() {
 #[ignore = "10^4-client experiment: minutes in a debug profile"]
 fn ten_thousand_client_experiment_is_transport_invariant() {
     use deltamask::coordinator::{OnDecodeError, PipelineMode};
-    use deltamask::fl::{run_experiment, BackendKind, ExperimentConfig, HeadInit};
+    use deltamask::fl::{run_experiment, BackendKind, ExperimentConfig, HeadInit, ServerTuning};
     let base = ExperimentConfig {
         dataset: "cifar10".into(),
         arch: "test".into(),
@@ -604,13 +876,16 @@ fn ten_thousand_client_experiment_is_transport_invariant() {
         lp_rounds: 1,
         theta0: 0.85,
         arch_override: None,
-        pipeline: PipelineMode::Streaming,
-        decode_workers: 2,
-        agg_shards: 2,
-        persistent_pipeline: true,
-        quorum: 1.0,
-        round_deadline_ms: 0,
-        on_decode_error: OnDecodeError::Abort,
+        tuning: ServerTuning {
+            pipeline: PipelineMode::Streaming,
+            decode_workers: 2,
+            agg_shards: 2,
+            shard_place: String::new(),
+            persistent_pipeline: true,
+            quorum: 1.0,
+            round_deadline_ms: 0,
+            on_decode_error: OnDecodeError::Abort,
+        },
         chaos: String::new(),
         transport: TransportKind::Channel,
     };
